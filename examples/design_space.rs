@@ -1,0 +1,69 @@
+//! Design-space exploration (§IV-B/C/D condensed): for one workload,
+//! sweep dataflow x array size, scratchpad size, and aspect ratio, and
+//! print the winner of each axis — the co-design loop the paper argues
+//! an architect should run before freezing an accelerator.
+//!
+//! Run: `cargo run --release --example design_space [workload]`
+
+use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::sim::Simulator;
+use scale_sim::sweep;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "alphagozero".into());
+    let topo = workloads::builtin(&name)
+        .unwrap_or_else(|| panic!("unknown workload {name:?} (try: scale-sim workloads)"));
+    let base = config::paper_default();
+
+    // --- axis 1: dataflow x square array (Fig 5 slice) --------------------
+    println!("== dataflow x array size ({name}) ==");
+    println!("{:>8} {:>12} {:>12} {:>12}   winner", "array", "os", "ws", "is");
+    for &n in &[128u64, 64, 32, 16, 8] {
+        let mut cyc = Vec::new();
+        for df in Dataflow::ALL {
+            let cfg = ArchConfig { array_h: n, array_w: n, dataflow: df, ..base.clone() };
+            cyc.push(Simulator::new(cfg).run_topology(&topo).total_cycles());
+        }
+        let best = Dataflow::ALL[cyc.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0];
+        println!("{:>8} {:>12} {:>12} {:>12}   {best}", format!("{n}x{n}"), cyc[0], cyc[1], cyc[2]);
+    }
+
+    // --- axis 2: scratchpad size (Fig 7 slice) -----------------------------
+    println!("\n== scratchpad size vs DRAM bandwidth ==");
+    println!("{:>8} {:>14} {:>12}", "sram_kb", "dram_bytes", "avg_rd_bw");
+    let mut last_bw = f64::MAX;
+    let mut knee = None;
+    for &kb in &[32u64, 64, 128, 256, 512, 1024, 2048] {
+        let cfg = ArchConfig { ifmap_sram_kb: kb, filter_sram_kb: kb, ..base.clone() };
+        let r = Simulator::new(cfg).run_topology(&topo);
+        let bw = r.avg_dram_read_bw();
+        println!("{:>8} {:>14} {:>12.4}", kb, r.total_dram().total(), bw);
+        if knee.is_none() && last_bw / bw < 1.05 {
+            knee = Some(kb / 2);
+        }
+        last_bw = bw;
+    }
+    if let Some(kb) = knee {
+        println!("knee of the curve: ~{kb} KB (diminishing returns beyond, §IV-C)");
+    }
+
+    // --- axis 3: aspect ratio at fixed 16384 PEs (Fig 8 slice) ------------
+    println!("\n== aspect ratio (16384 PEs) ==");
+    println!("{:>10} {:>12} {:>12} {:>12}", "shape", "os", "ws", "is");
+    let mut best: Option<(u64, u64, Dataflow, u64)> = None;
+    for (r, c) in sweep::fig8_shapes() {
+        let mut row = Vec::new();
+        for df in Dataflow::ALL {
+            let cfg = ArchConfig { array_h: r, array_w: c, dataflow: df, ..base.clone() };
+            let cycles = Simulator::new(cfg).run_topology(&topo).total_cycles();
+            if best.is_none() || cycles < best.unwrap().3 {
+                best = Some((r, c, df, cycles));
+            }
+            row.push(cycles);
+        }
+        println!("{:>10} {:>12} {:>12} {:>12}", format!("{r}x{c}"), row[0], row[1], row[2]);
+    }
+    let (r, c, df, cycles) = best.unwrap();
+    println!("\nbest point: {r}x{c} under {df} ({cycles} cycles)");
+}

@@ -1,0 +1,54 @@
+//! Quickstart: simulate ResNet-50 on the paper's default architecture
+//! (128x128 OS, 1 MB operand scratchpad) and print the summary metrics
+//! SCALE-Sim reports (§I: latency, utilization, SRAM/DRAM accesses,
+//! bandwidth).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use scale_sim::config::{self, workloads};
+use scale_sim::sim::Simulator;
+
+fn main() {
+    let cfg = config::paper_default();
+    let topo = workloads::builtin("resnet50").expect("built-in workload");
+    let sim = Simulator::new(cfg.clone());
+
+    println!(
+        "SCALE-Sim quickstart: {} on {}x{} {} array, {}+{} KB scratchpad",
+        topo.name, cfg.array_h, cfg.array_w, cfg.dataflow, cfg.ifmap_sram_kb, cfg.filter_sram_kb
+    );
+    println!(
+        "{:<16} {:>12} {:>8} {:>10} {:>12} {:>10}",
+        "layer", "cycles", "util%", "remaps", "dram_bytes", "energy_mJ"
+    );
+
+    let report = sim.run_topology(&topo);
+    for l in report.layers.iter().take(8) {
+        println!(
+            "{:<16} {:>12} {:>8.2} {:>10} {:>12} {:>10.4}",
+            l.name(),
+            l.timing.cycles,
+            l.timing.utilization * 100.0,
+            l.timing.remaps(),
+            l.dram.total(),
+            l.energy.total_mj()
+        );
+    }
+    println!("... ({} layers total)", report.layers.len());
+    println!();
+    println!("total cycles:        {}", report.total_cycles());
+    println!("total MACs:          {}", report.total_macs());
+    println!(
+        "overall utilization: {:.2}%",
+        report.overall_utilization(cfg.total_pes()) * 100.0
+    );
+    println!("avg DRAM read bw:    {:.4} bytes/cycle", report.avg_dram_read_bw());
+    let e = report.total_energy();
+    println!(
+        "energy:              {:.3} mJ (compute {:.3} / sram {:.3} / dram {:.3})",
+        e.total_mj(),
+        e.compute_mj,
+        e.sram_mj,
+        e.dram_mj
+    );
+}

@@ -1,0 +1,64 @@
+//! Scaling-up vs scaling-out (§IV-E, Figs 9/10): sweep the PE budget
+//! 64 -> 16384 for one workload under all three dataflows and report the
+//! runtime ratio and the weight-DRAM-bandwidth ratio, plus the banked
+//! DRAM substrate's view of the resulting traffic (the §III-D system
+//! hand-off the paper delegates to DRAMSim2).
+//!
+//! Run: `cargo run --release --example scaling [workload]`
+
+use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::dram::{burst_stream, Dram, DramConfig};
+use scale_sim::memory;
+use scale_sim::scaleout::{self, PE_SWEEP};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "alphagozero".into());
+    let topo = workloads::builtin(&name)
+        .unwrap_or_else(|| panic!("unknown workload {name:?}"));
+    let base = config::paper_default();
+
+    println!("== scale-up vs scale-out ({name}) ==");
+    println!(
+        "{:>4} {:>7} {:>14} {:>14} {:>10} {:>12}",
+        "df", "PEs", "up_cycles", "out_cycles", "up/out", "wbw up/out"
+    );
+    for df in Dataflow::ALL {
+        let cfg = ArchConfig { dataflow: df, ..base.clone() };
+        for &pe in &PE_SWEEP {
+            let c = scaleout::compare_topology(&cfg, &topo.layers, pe);
+            println!(
+                "{:>4} {:>7} {:>14} {:>14} {:>10.3} {:>12.3}",
+                df.name(),
+                pe,
+                c.up_cycles,
+                c.out_cycles,
+                c.runtime_ratio(),
+                c.weight_bw_ratio()
+            );
+        }
+    }
+
+    // --- feed the scale-up DRAM traffic into the banked DRAM substrate ----
+    println!("\n== DRAM substrate replay (128x128, os, layer 0) ==");
+    let cfg = base.clone();
+    let layer = &topo.layers[0];
+    let (traffic, bw) = memory::simulate(cfg.dataflow, layer, &cfg);
+    let cycles = cfg.dataflow.timing(layer, cfg.array_h, cfg.array_w).cycles;
+    let dcfg = DramConfig::default();
+    let reqs = burst_stream(&dcfg, 0, traffic.read_bytes(), (0, cycles), false);
+    let stats = Dram::new(dcfg).replay(reqs);
+    println!("layer {:<14} stall-free need {:.3} B/cyc (peak {:.3})", layer.name, bw.avg_read_bw, bw.peak_read_bw);
+    println!(
+        "substrate: {:.3} B/cyc achieved, {:.1}% row hits, avg latency {:.1} cyc, max {} cyc",
+        stats.achieved_bw(),
+        stats.hit_rate() * 100.0,
+        stats.avg_latency(),
+        stats.max_latency
+    );
+    if stats.achieved_bw() >= bw.avg_read_bw {
+        println!("verdict: interface sustains the stall-free requirement");
+    } else {
+        println!("verdict: interface WOULD STALL the array (provision more banks/prefetch)");
+    }
+}

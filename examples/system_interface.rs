@@ -1,0 +1,77 @@
+//! System-interface study (§III-D): what happens when the accelerator
+//! meets a *real* memory system instead of the stall-free abstraction.
+//!
+//! 1. Sweep a finite DRAM read bandwidth and report the stall-model
+//!    runtime per layer — where does the 128x128 array starve?
+//! 2. Provision: the minimum bandwidth for <5% slowdown per workload.
+//! 3. Hand the generated DRAM trace to the banked row-buffer substrate
+//!    (the in-repo DRAMSim2 stand-in) and compare achieved bandwidth
+//!    against the requirement.
+//!
+//! Run: `cargo run --release --example system_interface [workload]`
+
+use scale_sim::config::{self, workloads};
+use scale_sim::dram::{replay_layer, DramConfig};
+use scale_sim::memory::stall::{provision_bandwidth, stalled_runtime};
+use scale_sim::sim::Simulator;
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "resnet50".into());
+    let topo = workloads::builtin(&name)
+        .unwrap_or_else(|| panic!("unknown workload {name:?}"));
+    let cfg = config::paper_default();
+    let df = cfg.dataflow;
+
+    // --- 1: bandwidth sweep -------------------------------------------------
+    let caps = [256.0, 128.0, 64.0, 32.0, 16.0, 8.0];
+    println!("== stall-model slowdown vs DRAM read bandwidth ({name}, {df}) ==");
+    print!("{:<16}", "layer");
+    for c in caps {
+        print!(" {c:>7.0}B/c");
+    }
+    println!();
+    for layer in topo.layers.iter().take(10) {
+        print!("{:<16}", layer.name);
+        for c in caps {
+            let r = stalled_runtime(df, layer, &cfg, c);
+            print!(" {:>9.2}", r.slowdown());
+        }
+        println!();
+    }
+    if topo.layers.len() > 10 {
+        println!("... ({} layers)", topo.layers.len());
+    }
+
+    // --- 2: provisioning ------------------------------------------------------
+    println!("\n== provisioned bandwidth for <5% slowdown ==");
+    let mut worst: (f64, &str) = (0.0, "");
+    for layer in &topo.layers {
+        let bw = provision_bandwidth(df, layer, &cfg, 0.05);
+        if bw > worst.0 {
+            worst = (bw, &layer.name);
+        }
+    }
+    println!("workload {name}: provision {:.1} bytes/cycle (bound by layer {})", worst.0, worst.1);
+
+    // --- 3: banked DRAM replay -------------------------------------------------
+    println!("\n== banked-DRAM substrate replay (per layer) ==");
+    println!(
+        "{:<16} {:>10} {:>10} {:>9} {:>12} {:>10}",
+        "layer", "need_B/c", "achv_B/c", "hit%", "avg_lat", "verdict"
+    );
+    let sim = Simulator::new(cfg.clone());
+    for layer in topo.layers.iter().take(10) {
+        let rep = sim.run_layer(layer);
+        let stats = replay_layer(df, layer, &cfg, DramConfig::default());
+        let ok = stats.achieved_bw() >= rep.bandwidth.avg_read_bw;
+        println!(
+            "{:<16} {:>10.2} {:>10.2} {:>9.1} {:>12.1} {:>10}",
+            layer.name,
+            rep.bandwidth.avg_read_bw,
+            stats.achieved_bw(),
+            stats.hit_rate() * 100.0,
+            stats.avg_latency(),
+            if ok { "ok" } else { "STALLS" }
+        );
+    }
+}

@@ -1,0 +1,62 @@
+"""Convolution lowering onto the systolic GEMM kernel (im2col).
+
+A systolic array computes conv as GEMM: the ifmap is unrolled into the
+(Npx x K) im2col matrix (K = R*S*C, one row per convolution window) and
+the filters into (K x M). This is exactly the operand view SCALE-Sim's
+dataflows stream from the SRAM edges — OS pins the (Npx x M) output, WS
+pins the (K x M) filter operand, IS pins the (Npx x K) im2col operand.
+
+The im2col here is a gather expressed with lax.dynamic slices so it fuses
+into the surrounding HLO; numerics are checked against ref.im2col_ref.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import systolic
+
+
+def im2col(ifmap: jax.Array, r: int, s: int, stride: int = 1) -> jax.Array:
+    """(N,H,W,C) -> (N*Eh*Ew, R*S*C) convolution-window matrix."""
+    n, h, w, c = ifmap.shape
+    eh = (h - r) // stride + 1
+    ew = (w - s) // stride + 1
+    cols = []
+    for dr in range(r):
+        for ds in range(s):
+            patch = ifmap[:, dr : dr + (eh - 1) * stride + 1 : stride,
+                          ds : ds + (ew - 1) * stride + 1 : stride, :]
+            cols.append(patch.reshape(n * eh * ew, c))
+    return jnp.concatenate(cols, axis=1)
+
+
+def conv2d_systolic(
+    ifmap: jax.Array,
+    filters: jax.Array,
+    stride: int = 1,
+    *,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Conv via im2col + output-stationary systolic GEMM.
+
+    ifmap (N,H,W,C), filters (R,S,C,M) -> (N,Eh,Ew,M), valid padding.
+    """
+    n, h, w, c = ifmap.shape
+    r, s, c2, m = filters.shape
+    assert c == c2, f"channel mismatch {c} != {c2}"
+    eh = (h - r) // stride + 1
+    ew = (w - s) // stride + 1
+
+    lhs = im2col(ifmap, r, s, stride)             # (N*Eh*Ew, K)
+    rhs = filters.reshape(r * s * c, m)            # (K, M)  [HWIO row-major]
+    # im2col orders K as (dr, ds, c) — same as HWIO reshape. Good.
+    out = systolic.systolic_matmul_padded(
+        lhs, rhs, tile_m=tile_m, tile_n=tile_n, tile_k=tile_k,
+        interpret=interpret,
+    )
+    return out.reshape(n, eh, ew, m)

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here is deliberately naive jax.numpy / lax — no pallas, no
+tiling — so that pytest comparisons (`test_kernel.py`, `test_model.py`)
+are against an independent implementation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M,K) @ (K,N) with f32 accumulation — the kernel's contract."""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(
+        jnp.result_type(x.dtype, w.dtype)
+    )
+
+
+def conv2d_ref(
+    ifmap: jax.Array, filters: jax.Array, stride: int = 1
+) -> jax.Array:
+    """Valid-padding 2-D convolution, NHWC x HWIO -> NHWC.
+
+    ifmap:   (N, H, W, C)
+    filters: (R, S, C, M)
+    """
+    return lax.conv_general_dilated(
+        ifmap.astype(jnp.float32),
+        filters.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(ifmap.dtype)
+
+
+def im2col_ref(ifmap: jax.Array, r: int, s: int, stride: int = 1) -> jax.Array:
+    """Reference im2col: (N,H,W,C) -> (N*Eh*Ew, R*S*C).
+
+    Row i is the flattened convolution window that produces output pixel i
+    — the paper's "convolution window" (§III-B, Input Stationary).
+    """
+    n, h, w, c = ifmap.shape
+    eh = (h - r) // stride + 1
+    ew = (w - s) // stride + 1
+    cols = []
+    for dr in range(r):
+        for ds in range(s):
+            patch = ifmap[:, dr : dr + (eh - 1) * stride + 1 : stride,
+                          ds : ds + (ew - 1) * stride + 1 : stride, :]
+            cols.append(patch.reshape(n * eh * ew, c))
+    return jnp.concatenate(cols, axis=1)

@@ -1,0 +1,121 @@
+"""Layer-1 Pallas kernel: the systolic-array functional datapath.
+
+SCALE-Sim *times* an output-stationary (OS) systolic array; this kernel
+*computes* the same schedule. The (array_rows x array_cols) PE grid of the
+simulator maps onto a (TILE_M x TILE_N) output-stationary tile held in
+VMEM; the contraction dimension K is streamed tile-by-tile from HBM into
+VMEM by the BlockSpec index maps — exactly the role SCALE-Sim's left/top
+SRAM edges play. The pallas grid is (Fm, Fn, Fk):
+
+    Fm = ceil(M / tile_m)   <-> SCALE-Sim OS "horizontal folds" (output px)
+    Fn = ceil(N / tile_n)   <-> SCALE-Sim OS "vertical folds"   (filters)
+    Fk = ceil(K / tile_k)   <-> streaming passes over the conv window
+
+`fold_counts()` exposes that correspondence; it is asserted against the
+Rust analytical model's fold counts by the test suites on both sides.
+
+Because the output BlockSpec's index map ignores the Fk grid axis, the
+same output block stays resident ("stationary") across all Fk steps and
+is accumulated in place — the literal output-stationary dataflow.
+
+Hardware adaptation (DESIGN.md §1): the paper's substrate is a systolic
+ASIC, so "pinned output pixel in a PE register" becomes "pinned output
+tile in VMEM", and "operands streamed from SRAM edges" becomes "K-tiles
+streamed HBM->VMEM by BlockSpec". On a real TPU the inner `jnp.dot` hits
+the MXU; here we lower with interpret=True so the identical HLO runs on
+the CPU PJRT client that the Rust runtime embeds.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def fold_counts(m: int, n: int, k: int, tile_m: int, tile_n: int, tile_k: int):
+    """(Fm, Fn, Fk) — must equal the Rust OS-dataflow fold counts for the
+    GEMM view of a layer (Npx x K) @ (K x M) on a tile_m x tile_n array."""
+    return (-(-m // tile_m), -(-n // tile_n), -(-k // tile_k))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, n_k: int, acc_dtype):
+    """One grid step: accumulate x_tile @ w_tile into the stationary tile.
+
+    o_ref's block is pinned across the innermost (K) grid axis: zeroed on
+    the first K-step, accumulated on every step.
+    """
+    k_step = pl.program_id(2)
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    prod = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=acc_dtype)
+    o_ref[...] += prod.astype(o_ref.dtype)
+
+
+def systolic_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    tile_m: int = 128,
+    tile_n: int = 128,
+    tile_k: int = 128,
+    out_dtype=None,
+    interpret: bool = True,
+) -> jax.Array:
+    """Output-stationary tiled GEMM: (M,K) @ (K,N) -> (M,N).
+
+    Shapes must be multiples of the tile sizes (callers pad with
+    `pad_to_tiles`; SCALE-Sim's residual folds similarly run at full array
+    width with idle PEs — zero padding is the numerical equivalent).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    assert m % tile_m == 0 and n % tile_n == 0 and k % tile_k == 0, (
+        f"shapes ({m},{k})@({k},{n}) not multiples of tiles "
+        f"({tile_m},{tile_n},{tile_k}); pad first (see pad_to_tiles)"
+    )
+    out_dtype = out_dtype or jnp.result_type(x.dtype, w.dtype)
+    acc_dtype = (
+        jnp.float32 if jnp.issubdtype(out_dtype, jnp.floating) else jnp.int32
+    )
+    fm, fn, fk = fold_counts(m, n, k, tile_m, tile_n, tile_k)
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=fk, acc_dtype=acc_dtype),
+        grid=(fm, fn, fk),
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((tile_k, tile_n), lambda i, j, kk: (kk, j)),
+        ],
+        # index map ignores kk -> output block is *stationary* across K.
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def pad_to_tiles(a: jax.Array, tile_r: int, tile_c: int) -> jax.Array:
+    """Zero-pad a 2-D operand up to tile multiples (residual-fold padding)."""
+    r, c = a.shape
+    pr = (-r) % tile_r
+    pc = (-c) % tile_c
+    if pr == 0 and pc == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pc)))
+
+
+def systolic_matmul_padded(x: jax.Array, w: jax.Array, **kw) -> jax.Array:
+    """GEMM for arbitrary shapes: pad to tiles, run, slice back."""
+    tm = kw.get("tile_m", 128)
+    tn = kw.get("tile_n", 128)
+    tk = kw.get("tile_k", 128)
+    m, _ = x.shape
+    _, n = w.shape
+    out = systolic_matmul(pad_to_tiles(x, tm, tk), pad_to_tiles(w, tk, tn), **kw)
+    return out[:m, :n]

@@ -1,0 +1,72 @@
+"""Layer-2: the JAX compute graph lowered to AOT artifacts.
+
+The Rust coordinator (L3) times layers with the cycle model; this module
+defines the *functional* computations the timing model claims to schedule:
+
+  * `gemm(size)`        — a square output-stationary systolic GEMM, tiled
+                          at the simulated array size. AOT'd at 8/32/128
+                          so Fig-4-style validation and the e2e example can
+                          execute real numerics through PJRT.
+  * `conv3x3`, `conv1x1` — representative conv layers (ResNet-50 body /
+                          pointwise shapes) via im2col + the L1 kernel.
+
+Everything calls the Layer-1 Pallas kernel (`kernels.systolic`), so the
+AOT artifacts contain the kernel's HLO — Python is never needed at
+runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv as kconv
+from .kernels import systolic
+
+
+def gemm(x: jax.Array, w: jax.Array, *, tile: int = 128) -> tuple[jax.Array]:
+    """Square systolic GEMM with array-sized tiles; 1-tuple for AOT."""
+    return (
+        systolic.systolic_matmul(
+            x, w, tile_m=tile, tile_n=tile, tile_k=tile, interpret=True
+        ),
+    )
+
+
+def conv2d(ifmap: jax.Array, filters: jax.Array, stride: int = 1,
+           *, tile: int = 128) -> tuple[jax.Array]:
+    """Conv layer via the systolic kernel; 1-tuple for AOT."""
+    return (
+        kconv.conv2d_systolic(
+            ifmap, filters, stride,
+            tile_m=tile, tile_n=tile, tile_k=tile, interpret=True,
+        ),
+    )
+
+
+# ---- AOT entry points ------------------------------------------------------
+# name -> (fn, example arg shapes/dtypes). aot.py lowers each to
+# artifacts/<name>.hlo.txt; rust/src/runtime/ loads them by the same name.
+
+def _f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+ENTRIES = {
+    # Array-sized square GEMMs: the systolic array's native op (Fig 4).
+    "systolic_gemm_8": (functools.partial(gemm, tile=8), (_f32(8, 8), _f32(8, 8))),
+    "systolic_gemm_32": (functools.partial(gemm, tile=32), (_f32(32, 32), _f32(32, 32))),
+    "systolic_gemm_128": (functools.partial(gemm, tile=128), (_f32(128, 128), _f32(128, 128))),
+    # ResNet-50-body-shaped conv (small spatial extent to keep the
+    # interpret-mode artifact fast on CPU) and a pointwise conv.
+    "conv_3x3": (
+        functools.partial(conv2d, stride=1, tile=32),
+        (_f32(1, 16, 16, 32), _f32(3, 3, 32, 32)),
+    ),
+    "conv_1x1": (
+        functools.partial(conv2d, stride=1, tile=32),
+        (_f32(1, 16, 16, 64), _f32(1, 1, 64, 32)),
+    ),
+}

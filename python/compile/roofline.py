@@ -1,0 +1,144 @@
+"""L1 kernel profiling: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives CPU-numpy timings only — not a TPU proxy — so the
+Pallas kernel is profiled *structurally* (DESIGN.md §7): from the
+BlockSpec tiling we derive
+
+  * the VMEM working set (two double-buffered input tiles + the
+    stationary accumulator tile) against the ~16 MiB/core budget;
+  * the MXU occupancy of each `jnp.dot` (the 128x128 systolic MXU pads
+    every operand dim to a multiple of 128);
+  * the arithmetic intensity and the roofline verdict on a TPUv3-class
+    part (bf16 ~123 TFLOP/s, HBM ~900 GB/s).
+
+`python -m compile.roofline` prints the table for the shipped tile
+configurations; EXPERIMENTS.md §Perf records the output.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024
+MXU_DIM = 128
+TPU_V3_FLOPS = 123e12  # bf16 peak, per chip
+TPU_V3_HBM_BPS = 900e9
+RIDGE = TPU_V3_FLOPS / TPU_V3_HBM_BPS  # FLOP per HBM byte
+
+
+def _pad(d: int) -> int:
+    return math.ceil(d / MXU_DIM) * MXU_DIM
+
+
+@dataclass(frozen=True)
+class KernelEstimate:
+    """Structural profile of one systolic_matmul tiling."""
+
+    m: int
+    n: int
+    k: int
+    tile_m: int
+    tile_n: int
+    tile_k: int
+    dtype_bytes: int
+
+    @property
+    def grid(self) -> tuple[int, int, int]:
+        return (
+            math.ceil(self.m / self.tile_m),
+            math.ceil(self.n / self.tile_n),
+            math.ceil(self.k / self.tile_k),
+        )
+
+    @property
+    def vmem_bytes(self) -> int:
+        """Working set: double-buffered input tiles + stationary output.
+
+        The output tile accumulates in f32 regardless of input dtype.
+        """
+        x = self.tile_m * self.tile_k * self.dtype_bytes
+        w = self.tile_k * self.tile_n * self.dtype_bytes
+        acc = self.tile_m * self.tile_n * 4
+        return 2 * (x + w) + acc
+
+    @property
+    def vmem_ok(self) -> bool:
+        return self.vmem_bytes <= VMEM_BYTES
+
+    @property
+    def mxu_utilization(self) -> float:
+        """Fraction of MXU lanes doing useful work per dot: every dim is
+        padded to 128 by the hardware."""
+        num = self.tile_m * self.tile_n * self.tile_k
+        den = _pad(self.tile_m) * _pad(self.tile_n) * _pad(self.tile_k)
+        return num / den
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.m * self.n * self.k
+
+    @property
+    def hbm_bytes(self) -> int:
+        """HBM traffic under the OS schedule: X and W stream once per
+        stationary fold pass, output written once."""
+        gm, gn, gk = self.grid
+        x = self.m * self.k * self.dtype_bytes * gn  # X re-read per N fold
+        w = self.k * self.n * self.dtype_bytes * gm  # W re-read per M fold
+        o = self.m * self.n * self.dtype_bytes
+        return x + w + o
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / self.hbm_bytes
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.arithmetic_intensity >= RIDGE
+
+    @property
+    def est_efficiency(self) -> float:
+        """Roofline efficiency estimate: MXU occupancy when compute
+        bound, scaled by intensity/ridge when memory bound."""
+        eff = self.mxu_utilization
+        if not self.compute_bound:
+            eff *= self.arithmetic_intensity / RIDGE
+        return eff
+
+    def row(self) -> str:
+        gm, gn, gk = self.grid
+        return (
+            f"{self.m}x{self.n}x{self.k} @ {self.tile_m}/{self.tile_n}/{self.tile_k}"
+            f" grid=({gm},{gn},{gk}) vmem={self.vmem_bytes / 1024:.0f}KiB"
+            f" mxu={self.mxu_utilization * 100:.0f}%"
+            f" ai={self.arithmetic_intensity:.1f}"
+            f" {'compute' if self.compute_bound else 'memory'}-bound"
+            f" eff~{self.est_efficiency * 100:.0f}%"
+        )
+
+
+def shipped_configs() -> list[KernelEstimate]:
+    """The tilings shipped as AOT artifacts + representative layers."""
+    return [
+        KernelEstimate(128, 128, 128, 128, 128, 128, 2),
+        KernelEstimate(1024, 1024, 1024, 128, 128, 128, 2),
+        KernelEstimate(4096, 4096, 4096, 128, 128, 128, 2),
+        # §Perf L1 optimization: 512x512 stationary tile crosses the ridge
+        KernelEstimate(4096, 4096, 4096, 512, 512, 128, 2),
+        # ResNet-50 conv2 as GEMM (Npx x K x M)
+        KernelEstimate(3136, 64, 576, 128, 128, 128, 2),
+        # small-array artifacts (validation tiles)
+        KernelEstimate(32, 32, 32, 32, 32, 32, 4),
+        KernelEstimate(8, 8, 8, 8, 8, 8, 4),
+    ]
+
+
+def main() -> None:
+    print(f"MXU {MXU_DIM}x{MXU_DIM}, VMEM {VMEM_BYTES >> 20} MiB, ridge {RIDGE:.0f} FLOP/B")
+    for e in shipped_configs():
+        assert e.vmem_ok, f"tiling spills VMEM: {e}"
+        print(e.row())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""L1 kernel vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes/dtypes/tilings of the output-stationary systolic
+GEMM and asserts allclose against ref.matmul_ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, systolic
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(a, dtype=dtype)
+
+
+# ---- exact-tile shapes -----------------------------------------------------
+
+@pytest.mark.parametrize("tile", [8, 16, 32])
+@pytest.mark.parametrize("fm,fn,fk", [(1, 1, 1), (2, 1, 3), (3, 2, 1), (2, 2, 2)])
+def test_matmul_exact_tiles(tile, fm, fn, fk):
+    m, n, k = fm * tile, fn * tile, fk * tile
+    x = _rand((m, k), jnp.float32, seed=m * 7 + k)
+    w = _rand((k, n), jnp.float32, seed=n * 13 + k)
+    got = systolic.systolic_matmul(x, w, tile_m=tile, tile_n=tile, tile_k=tile)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---- hypothesis sweep: arbitrary shapes via padding, mixed tiles -----------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.integers(1, 70),
+    n=st.integers(1, 70),
+    k=st.integers(1, 70),
+    tm=st.sampled_from([8, 16, 32]),
+    tn=st.sampled_from([8, 16, 32]),
+    tk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_padded_hypothesis(m, n, k, tm, tn, tk, seed):
+    x = _rand((m, k), jnp.float32, seed)
+    w = _rand((k, n), jnp.float32, seed + 1)
+    got = systolic.systolic_matmul_padded(
+        x, w, tile_m=tm, tile_n=tn, tile_k=tk
+    )
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---- dtypes ----------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(dtype):
+    x = _rand((32, 32), dtype, 3)
+    w = _rand((32, 32), dtype, 4)
+    got = systolic.systolic_matmul(x, w, tile_m=16, tile_n=16, tile_k=16)
+    want = ref.matmul_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        got.astype(jnp.float32), want.astype(jnp.float32), rtol=tol, atol=tol
+    )
+
+
+def test_matmul_int8_accumulates_in_i32():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-4, 4, (16, 16)), jnp.int8)
+    w = jnp.asarray(rng.integers(-4, 4, (16, 16)), jnp.int8)
+    got = systolic.systolic_matmul(
+        x, w, tile_m=8, tile_n=8, tile_k=8, out_dtype=jnp.int32
+    )
+    want = np.asarray(x, np.int32) @ np.asarray(w, np.int32)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+# ---- fold-count correspondence (mirrors rust dataflow::os) -----------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    m=st.integers(1, 4096),
+    n=st.integers(1, 4096),
+    k=st.integers(1, 4096),
+    t=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_fold_counts_match_analytical(m, n, k, t):
+    fm, fn, fk = systolic.fold_counts(m, n, k, t, t, t)
+    assert fm == -(-m // t) and fn == -(-n // t) and fk == -(-k // t)
+    # fold invariants the rust property tests also assert:
+    assert (fm - 1) * t < m <= fm * t
+    assert (fn - 1) * t < n <= fn * t
+    assert (fk - 1) * t < k <= fk * t
+
+
+# ---- padding helper --------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(r=st.integers(1, 50), c=st.integers(1, 50),
+       tr=st.sampled_from([8, 16]), tc=st.sampled_from([8, 16]))
+def test_pad_to_tiles(r, c, tr, tc):
+    a = jnp.ones((r, c))
+    p = systolic.pad_to_tiles(a, tr, tc)
+    assert p.shape[0] % tr == 0 and p.shape[1] % tc == 0
+    assert p.shape[0] - r < tr and p.shape[1] - c < tc
+    np.testing.assert_array_equal(np.asarray(p[:r, :c]), np.asarray(a))
+    assert float(jnp.sum(p)) == pytest.approx(r * c)

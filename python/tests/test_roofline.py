@@ -1,0 +1,61 @@
+"""Structural L1 profile: VMEM budget, MXU occupancy, fold counts."""
+
+from hypothesis import given, settings, strategies as st
+
+from compile import roofline
+from compile.kernels import systolic
+
+
+def test_shipped_configs_fit_vmem():
+    for e in roofline.shipped_configs():
+        assert e.vmem_ok, e.row()
+
+
+def test_mxu_full_at_128_tiles():
+    e = roofline.KernelEstimate(1024, 1024, 1024, 128, 128, 128, 2)
+    assert e.mxu_utilization == 1.0
+    assert e.vmem_bytes == 2 * (2 * 128 * 128 * 2) + 128 * 128 * 4
+
+
+def test_small_tiles_waste_mxu():
+    e = roofline.KernelEstimate(8, 8, 8, 8, 8, 8, 4)
+    assert e.mxu_utilization == (8 / 128) ** 3
+
+
+def test_large_stationary_tiles_reach_compute_bound():
+    # 128-tile OS streaming re-reads operands once per fold pass and is
+    # memory bound even on 4096^3; growing the stationary tile to
+    # 512x512 (still ~1.5 MiB of VMEM) pushes intensity past the ridge —
+    # the optimization recorded in EXPERIMENTS.md §Perf L1.
+    small = roofline.KernelEstimate(4096, 4096, 4096, 128, 128, 128, 2)
+    big = roofline.KernelEstimate(4096, 4096, 4096, 512, 512, 128, 2)
+    assert not small.compute_bound
+    assert big.compute_bound and big.vmem_ok
+    assert big.est_efficiency == big.mxu_utilization == 1.0
+
+
+def test_tiny_gemm_is_memory_bound():
+    e = roofline.KernelEstimate(128, 128, 128, 128, 128, 128, 2)
+    assert not e.compute_bound
+    assert e.est_efficiency < e.mxu_utilization
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    m=st.integers(1, 4096), n=st.integers(1, 4096), k=st.integers(1, 4096),
+    t=st.sampled_from([8, 32, 128]),
+)
+def test_grid_matches_kernel_fold_counts(m, n, k, t):
+    e = roofline.KernelEstimate(m, n, k, t, t, t, 2)
+    assert e.grid == systolic.fold_counts(m, n, k, t, t, t)
+
+
+@settings(max_examples=30, deadline=None)
+@given(t=st.sampled_from([8, 16, 32, 64, 128, 256]))
+def test_utilization_and_vmem_monotone_in_tile(t):
+    e = roofline.KernelEstimate(4096, 4096, 4096, t, t, t, 2)
+    assert 0.0 < e.mxu_utilization <= 1.0
+    if t <= 128:
+        bigger = roofline.KernelEstimate(4096, 4096, 4096, 2 * t, 2 * t, 2 * t, 2)
+        assert bigger.mxu_utilization >= e.mxu_utilization
+        assert bigger.vmem_bytes > e.vmem_bytes

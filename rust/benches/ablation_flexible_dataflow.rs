@@ -1,0 +1,62 @@
+//! Ablation: flexible (per-layer best) dataflow vs fixed dataflows —
+//! the quantitative answer to §IV-B question 3 ("Are we missing out a
+//! lot by employing fixed dataflows? Or is there a dataflow which works
+//! in all cases?") and the FlexFlow-motivated design question.
+//!
+//! Paper's conclusion to reproduce: "fixating to a given dataflow might
+//! not lead to significant losses" — flexible speedup over the best
+//! fixed dataflow should be modest, while the penalty for freezing the
+//! *wrong* dataflow can be large.
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::sim::flex::flexible_study;
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+fn main() {
+    let mut w = CsvWriter::new(&[
+        "workload", "array", "os_cycles", "ws_cycles", "is_cycles", "flexible_cycles",
+        "speedup_vs_best", "speedup_vs_worst",
+    ]);
+    for &n in &[128u64, 32, 8] {
+        println!("== flexible vs fixed dataflow, {n}x{n} array ==");
+        println!(
+            "{:<14} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9}  wins(os/ws/is)",
+            "workload", "os", "ws", "is", "flexible", "vs_best", "vs_worst"
+        );
+        for (_, name) in workloads::TAGS {
+            let cfg = ArchConfig { array_h: n, array_w: n, ..config::paper_default() };
+            let topo = workloads::builtin(name).unwrap();
+            let r = flexible_study(&cfg, &topo);
+            let [os, ws, is] = r.fixed_cycles;
+            println!(
+                "{:<14} {:>14} {:>14} {:>14} {:>14} {:>9.3} {:>9.3}  {:?}",
+                name, os, ws, is, r.flexible_cycles,
+                r.speedup_over_best_fixed(),
+                r.speedup_over_worst_fixed(),
+                r.wins()
+            );
+            w.row(&[
+                name.to_string(),
+                n.to_string(),
+                os.to_string(),
+                ws.to_string(),
+                is.to_string(),
+                r.flexible_cycles.to_string(),
+                format!("{:.4}", r.speedup_over_best_fixed()),
+                format!("{:.4}", r.speedup_over_worst_fixed()),
+            ]);
+        }
+        println!();
+    }
+    w.write_to(Path::new("results/ablation_flexible_dataflow.csv")).unwrap();
+
+    let cfg = config::paper_default();
+    let topo = workloads::builtin("resnet50").unwrap();
+    bench_auto("ablation/flexible_study(resnet50)", std::time::Duration::from_secs(2), || {
+        flexible_study(&cfg, &topo).flexible_cycles
+    });
+    println!("ablation_flexible_dataflow OK -> results/ablation_flexible_dataflow.csv");
+}

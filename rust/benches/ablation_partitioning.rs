@@ -1,0 +1,66 @@
+//! Ablation: scale-out partitioning strategies (§IV-E's "alternate
+//! partitioning strategies exist, and in fact the best strategy may
+//! differ from layer to layer depending on the number of filters vs
+//! channels").
+//!
+//! Compares output-channel vs pixel vs auto (per-layer best)
+//! partitioning for the scale-out side at 16384 PEs (256 nodes) and
+//! reports the runtime and the weight-duplication cost.
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads};
+use scale_sim::scaleout::{scale_out_point, Partition, NODE_PES};
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+fn main() {
+    let base = config::paper_default();
+    let nodes = 16384 / NODE_PES;
+    let mut w = CsvWriter::new(&[
+        "workload", "channels_cycles", "pixels_cycles", "auto_cycles", "channels_wbytes",
+        "pixels_wbytes",
+    ]);
+    println!("== scale-out partitioning at 16384 PEs ({nodes} nodes of 8x8, os) ==");
+    println!(
+        "{:<14} {:>14} {:>14} {:>14} {:>9} {:>16} {:>16}",
+        "workload", "channels", "pixels", "auto", "auto_gain", "w_bytes(chan)", "w_bytes(px)"
+    );
+    for (_, name) in workloads::TAGS {
+        let topo = workloads::builtin(name).unwrap();
+        let mut totals = [0u64; 3];
+        let mut wbytes = [0u64; 2];
+        for layer in &topo.layers {
+            for (i, p) in Partition::ALL.iter().enumerate() {
+                let (c, wb) = scale_out_point(&base, layer, nodes, *p);
+                totals[i] += c;
+                if i < 2 {
+                    wbytes[i] += wb;
+                }
+            }
+        }
+        let gain = totals[0].min(totals[1]) as f64 / totals[2] as f64;
+        println!(
+            "{:<14} {:>14} {:>14} {:>14} {:>9.3} {:>16} {:>16}",
+            name, totals[0], totals[1], totals[2], gain, wbytes[0], wbytes[1]
+        );
+        w.row(&[
+            name.to_string(),
+            totals[0].to_string(),
+            totals[1].to_string(),
+            totals[2].to_string(),
+            wbytes[0].to_string(),
+            wbytes[1].to_string(),
+        ]);
+    }
+    w.write_to(Path::new("results/ablation_partitioning.csv")).unwrap();
+
+    let topo = workloads::builtin("resnet50").unwrap();
+    bench_auto("ablation/partitioning(resnet50)", std::time::Duration::from_secs(2), || {
+        topo.layers
+            .iter()
+            .map(|l| scale_out_point(&base, l, nodes, Partition::Auto).0)
+            .sum::<u64>()
+    });
+    println!("ablation_partitioning OK -> results/ablation_partitioning.csv");
+}

@@ -1,0 +1,39 @@
+//! Fig 4: validation — SCALE-Sim cycle counts vs the RTL model for
+//! Mat-Mat multiplications sized to the array (OS dataflow).
+//!
+//! Prints the paper's series (size -> cycles for both platforms; they
+//! must tally exactly), writes `results/fig04.csv`, and times both the
+//! analytical model and the RTL substrate.
+
+use std::path::Path;
+
+use scale_sim::dataflow::Dataflow;
+use scale_sim::util::bench::{bench, black_box};
+use scale_sim::util::csv::CsvWriter;
+use scale_sim::{rtl, LayerShape};
+
+fn main() {
+    println!("=== Fig 4: RTL vs SCALE-Sim cycles, array-sized MatMul (OS) ===");
+    println!("{:>6} {:>12} {:>12} {:>7}", "size", "rtl_cycles", "sim_cycles", "match");
+    let mut w = CsvWriter::new(&["size", "rtl_cycles", "sim_cycles"]);
+    for n in [4usize, 8, 16, 32, 64, 128] {
+        let (a, b) = rtl::random_matrices(n, n, n, n as u64);
+        let r = rtl::run_matmul(&a, &b, n, n, n);
+        let layer = LayerShape::gemm("mm", n as u64, n as u64, n as u64);
+        let model = Dataflow::Os.timing(&layer, n as u64, n as u64).cycles;
+        println!("{:>6} {:>12} {:>12} {:>7}", n, r.cycles, model, r.cycles == model);
+        assert_eq!(r.cycles, model, "validation must be cycle-exact");
+        w.row(&[n.to_string(), r.cycles.to_string(), model.to_string()]);
+    }
+    w.write_to(Path::new("results/fig04.csv")).unwrap();
+
+    // timing: RTL cost vs analytical cost (the paper's speed argument
+    // for an analytical simulator over RTL simulation)
+    let (a, b) = rtl::random_matrices(32, 32, 32, 7);
+    bench("fig04/rtl_32x32_matmul", 2, 10, || black_box(rtl::run_matmul(&a, &b, 32, 32, 32).cycles));
+    let layer = LayerShape::gemm("mm", 32, 32, 32);
+    bench("fig04/analytical_32x32", 10, 100, || {
+        black_box(Dataflow::Os.timing(&layer, 32, 32).cycles)
+    });
+    println!("fig04 OK -> results/fig04.csv");
+}

@@ -1,0 +1,62 @@
+//! Fig 5: runtime in cycles for all MLPerf workloads under OS/WS/IS on
+//! square arrays 128x128 .. 8x8 (five panels a-e).
+//!
+//! Prints each panel as a table (rows = workloads, cols = dataflows),
+//! writes `results/fig05.csv`, and times the full sweep.
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads};
+use scale_sim::sweep::{self, dataflow_sweep};
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+const ARRAYS: [u64; 5] = [128, 64, 32, 16, 8];
+
+fn main() {
+    let base = config::paper_default();
+    let topos = workloads::mlperf_suite();
+    let threads = sweep::default_threads();
+
+    let pts = dataflow_sweep(&base, &topos, &ARRAYS, threads);
+    let mut w = CsvWriter::new(&["workload", "dataflow", "array", "cycles", "utilization"]);
+    for p in &pts {
+        w.row(&[
+            p.workload.clone(),
+            p.dataflow.name().to_string(),
+            p.array.to_string(),
+            p.cycles.to_string(),
+            format!("{:.4}", p.utilization),
+        ]);
+    }
+    w.write_to(Path::new("results/fig05.csv")).unwrap();
+
+    for (panel, n) in ARRAYS.iter().enumerate() {
+        println!(
+            "=== Fig 5({}) runtime [cycles], {}x{} array ===",
+            (b'a' + panel as u8) as char,
+            n,
+            n
+        );
+        println!("{:<6} {:>14} {:>14} {:>14}  best", "tag", "os", "ws", "is");
+        for (tag, name) in workloads::TAGS {
+            let row: Vec<u64> = ["os", "ws", "is"]
+                .iter()
+                .map(|df| {
+                    pts.iter()
+                        .find(|p| p.workload == name && p.dataflow.name() == *df && p.array == *n)
+                        .unwrap()
+                        .cycles
+                })
+                .collect();
+            let best = ["os", "ws", "is"][row.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0];
+            println!("{:<6} {:>14} {:>14} {:>14}  {}", tag, row[0], row[1], row[2], best);
+        }
+        println!();
+    }
+
+    bench_auto("fig05/full_sweep(7wl x 3df x 5arrays)", std::time::Duration::from_secs(3), || {
+        dataflow_sweep(&base, &topos, &ARRAYS, threads).len()
+    });
+    println!("fig05 OK -> results/fig05.csv");
+}

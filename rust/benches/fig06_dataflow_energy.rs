@@ -1,0 +1,75 @@
+//! Fig 6: energy (mJ) split into compute and memory transfers, for all
+//! workloads x dataflows x square arrays 128x128 .. 8x8.
+//!
+//! Absolute joules depend on our documented per-access constants
+//! (DESIGN.md §3, the paper publishes none); the comparison *shape*
+//! (which dataflow is cheapest, compute-vs-memory split) is the target.
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads};
+use scale_sim::sweep::{self, dataflow_sweep};
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+const ARRAYS: [u64; 5] = [128, 64, 32, 16, 8];
+
+fn main() {
+    let base = config::paper_default();
+    let topos = workloads::mlperf_suite();
+    let threads = sweep::default_threads();
+
+    let pts = dataflow_sweep(&base, &topos, &ARRAYS, threads);
+    let mut w =
+        CsvWriter::new(&["workload", "dataflow", "array", "compute_mj", "memory_mj", "total_mj"]);
+    for p in &pts {
+        w.row(&[
+            p.workload.clone(),
+            p.dataflow.name().to_string(),
+            p.array.to_string(),
+            format!("{:.6}", p.energy_compute_mj),
+            format!("{:.6}", p.energy_memory_mj),
+            format!("{:.6}", p.energy_compute_mj + p.energy_memory_mj),
+        ]);
+    }
+    w.write_to(Path::new("results/fig06.csv")).unwrap();
+
+    for (panel, n) in ARRAYS.iter().enumerate() {
+        println!(
+            "=== Fig 6({}) energy [mJ] (compute+memory), {}x{} array ===",
+            (b'a' + panel as u8) as char,
+            n,
+            n
+        );
+        println!("{:<6} {:>16} {:>16} {:>16}  best", "tag", "os", "ws", "is");
+        for (tag, name) in workloads::TAGS {
+            let row: Vec<f64> = ["os", "ws", "is"]
+                .iter()
+                .map(|df| {
+                    let p = pts
+                        .iter()
+                        .find(|p| p.workload == name && p.dataflow.name() == *df && p.array == *n)
+                        .unwrap();
+                    p.energy_compute_mj + p.energy_memory_mj
+                })
+                .collect();
+            let best_i = row
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            println!(
+                "{:<6} {:>16.4} {:>16.4} {:>16.4}  {}",
+                tag, row[0], row[1], row[2],
+                ["os", "ws", "is"][best_i]
+            );
+        }
+        println!();
+    }
+
+    bench_auto("fig06/energy_sweep", std::time::Duration::from_secs(3), || {
+        dataflow_sweep(&base, &topos, &[32], threads).len()
+    });
+    println!("fig06 OK -> results/fig06.csv");
+}

@@ -1,0 +1,66 @@
+//! Fig 7: required DRAM bandwidth vs scratchpad size for stall-free
+//! operation — (a) all workloads, (b) AlphaGoZero, (c) NCF,
+//! (d) SentimentCNN — sweeping 32KB..2048KB per operand buffer.
+//!
+//! The paper's findings to reproduce: diminishing returns near 1MB for
+//! the common case (a); W1's knee at ~256KB (b); W4's knee at very small
+//! sizes (c); W6 still improving past 1024KB (d).
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads};
+use scale_sim::sweep::{self, memory_sweep};
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+const SIZES: [u64; 7] = [32, 64, 128, 256, 512, 1024, 2048];
+
+fn main() {
+    let base = config::paper_default();
+    let topos = workloads::mlperf_suite();
+    let threads = sweep::default_threads();
+
+    let pts = memory_sweep(&base, &topos, &SIZES, threads);
+    let mut w = CsvWriter::new(&["workload", "sram_kb", "avg_read_bw", "dram_bytes"]);
+    for p in &pts {
+        w.row(&[
+            p.workload.clone(),
+            p.sram_kb.to_string(),
+            format!("{:.5}", p.avg_read_bw),
+            p.dram_bytes.to_string(),
+        ]);
+    }
+    w.write_to(Path::new("results/fig07.csv")).unwrap();
+
+    println!("=== Fig 7: stall-free DRAM read bandwidth [bytes/cycle] vs scratchpad size ===");
+    print!("{:<14}", "workload");
+    for s in SIZES {
+        print!(" {s:>9}K");
+    }
+    println!("  knee");
+    for (_, name) in workloads::TAGS {
+        let series: Vec<f64> = SIZES
+            .iter()
+            .map(|s| {
+                pts.iter().find(|p| p.workload == name && p.sram_kb == *s).unwrap().avg_read_bw
+            })
+            .collect();
+        // knee = first size where the next doubling gains < 5%
+        let knee = SIZES
+            .iter()
+            .zip(series.windows(2))
+            .find(|(_, w)| w[0] / w[1].max(1e-12) < 1.05)
+            .map(|(s, _)| format!("{s}K"))
+            .unwrap_or_else(|| ">2048K".into());
+        print!("{name:<14}");
+        for v in &series {
+            print!(" {v:>10.4}");
+        }
+        println!("  {knee}");
+    }
+
+    bench_auto("fig07/memory_sweep(7wl x 7sizes)", std::time::Duration::from_secs(3), || {
+        memory_sweep(&base, &topos, &SIZES, threads).len()
+    });
+    println!("fig07 OK -> results/fig07.csv");
+}

@@ -1,0 +1,72 @@
+//! Fig 8: runtime vs array aspect ratio at fixed 16384 PEs, shapes
+//! 8x2048 .. 2048x8, panels (a) OS, (b) WS, (c) IS.
+//!
+//! Findings to reproduce: dataflow x shape interact dramatically; square
+//! aspect ratios perform well for the common case; specific workloads
+//! (W4, W7) prefer different corners under different dataflows.
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::sweep::{self, fig8_shapes, shape_sweep};
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+fn main() {
+    let base = config::paper_default();
+    let topos = workloads::mlperf_suite();
+    let threads = sweep::default_threads();
+    let shapes = fig8_shapes();
+
+    let pts = shape_sweep(&base, &topos, &shapes, threads);
+    let mut w = CsvWriter::new(&["workload", "dataflow", "rows", "cols", "cycles"]);
+    for p in &pts {
+        w.row(&[
+            p.workload.clone(),
+            p.dataflow.name().to_string(),
+            p.rows.to_string(),
+            p.cols.to_string(),
+            p.cycles.to_string(),
+        ]);
+    }
+    w.write_to(Path::new("results/fig08.csv")).unwrap();
+
+    for (panel, df) in Dataflow::ALL.iter().enumerate() {
+        println!(
+            "=== Fig 8({}) runtime [cycles] vs shape, {} dataflow, 16384 PEs ===",
+            (b'a' + panel as u8) as char,
+            df
+        );
+        print!("{:<14}", "workload");
+        for (r, c) in &shapes {
+            print!(" {:>12}", format!("{r}x{c}"));
+        }
+        println!("  best");
+        for (_, name) in workloads::TAGS {
+            let series: Vec<u64> = shapes
+                .iter()
+                .map(|(r, c)| {
+                    pts.iter()
+                        .find(|p| {
+                            p.workload == name && p.dataflow == *df && p.rows == *r && p.cols == *c
+                        })
+                        .unwrap()
+                        .cycles
+                })
+                .collect();
+            let best = series.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0;
+            print!("{name:<14}");
+            for v in &series {
+                print!(" {v:>12}");
+            }
+            println!("  {}x{}", shapes[best].0, shapes[best].1);
+        }
+        println!();
+    }
+
+    bench_auto("fig08/shape_sweep(7wl x 3df x 9shapes)", std::time::Duration::from_secs(3), || {
+        shape_sweep(&base, &topos, &shapes, threads).len()
+    });
+    println!("fig08 OK -> results/fig08.csv");
+}

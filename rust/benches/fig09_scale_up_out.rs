@@ -1,0 +1,80 @@
+//! Fig 9: ratio of runtime on a scaled-up array vs a scaled-out (8x8
+//! nodes) implementation with equal total PEs, per dataflow, PE budgets
+//! 64 .. 16384 (x4 per step).
+//!
+//! Findings to reproduce: scale-up wins the common case
+//! (ratio < 1), but specific workloads flip the decision — "scaling
+//! decision to be tied to workloads" (§IV-E).
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::scaleout::{compare_topology, PE_SWEEP};
+use scale_sim::sweep::{self, parallel_map};
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+fn main() {
+    let base = config::paper_default();
+    let topos = workloads::mlperf_suite();
+    let threads = sweep::default_threads();
+
+    let mut jobs = Vec::new();
+    for t in &topos {
+        for df in Dataflow::ALL {
+            for pe in PE_SWEEP {
+                jobs.push((t, df, pe));
+            }
+        }
+    }
+    let rows = parallel_map(&jobs, threads, |&(t, df, pe)| {
+        let cfg = ArchConfig { dataflow: df, ..base.clone() };
+        let c = compare_topology(&cfg, &t.layers, pe);
+        (t.name.clone(), df, pe, c)
+    });
+
+    let mut w = CsvWriter::new(&["workload", "dataflow", "pes", "up_cycles", "out_cycles", "ratio"]);
+    for (name, df, pe, c) in &rows {
+        w.row(&[
+            name.clone(),
+            df.name().to_string(),
+            pe.to_string(),
+            c.up_cycles.to_string(),
+            c.out_cycles.to_string(),
+            format!("{:.4}", c.runtime_ratio()),
+        ]);
+    }
+    w.write_to(Path::new("results/fig09.csv")).unwrap();
+
+    for (panel, df) in Dataflow::ALL.iter().enumerate() {
+        println!(
+            "=== Fig 9({}) runtime(up)/runtime(out), {} dataflow (ratio>1 => scale-out wins) ===",
+            (b'a' + panel as u8) as char,
+            df
+        );
+        print!("{:<14}", "workload");
+        for pe in PE_SWEEP {
+            print!(" {pe:>9}");
+        }
+        println!();
+        for (_, name) in workloads::TAGS {
+            print!("{name:<14}");
+            for pe in PE_SWEEP {
+                let c = &rows
+                    .iter()
+                    .find(|(n, d, p, _)| n == name && d == df && *p == pe)
+                    .unwrap()
+                    .3;
+                print!(" {:>9.3}", c.runtime_ratio());
+            }
+            println!();
+        }
+        println!();
+    }
+
+    bench_auto("fig09/scale_sweep", std::time::Duration::from_secs(3), || {
+        compare_topology(&base, &topos[0].layers, 16384).up_cycles
+    });
+    println!("fig09 OK -> results/fig09.csv");
+}

@@ -1,0 +1,64 @@
+//! Fig 10: ratio of DRAM bandwidth requirement for *weight* matrices,
+//! scale-up vs scale-out, per layer, for AlphaGoZero (W1, panels a-c)
+//! and DeepSpeech2 (W2, panels d-f) under OS / WS / IS.
+//!
+//! Findings to reproduce: most W1 layers favor scale-up at small PE
+//! counts with the trend shifting as PEs grow; IS reverses the trend;
+//! IS on W2 strongly favors scale-up.
+
+use std::path::Path;
+
+use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::scaleout::compare_layer;
+use scale_sim::util::bench::bench_auto;
+use scale_sim::util::csv::CsvWriter;
+
+const PES: [u64; 4] = [256, 1024, 4096, 16384];
+
+fn main() {
+    let base = config::paper_default();
+    let mut w = CsvWriter::new(&["workload", "dataflow", "layer", "pes", "weight_bw_ratio"]);
+
+    for (panel_base, wl) in [("a-c", "alphagozero"), ("d-f", "deepspeech2")] {
+        let topo = workloads::builtin(wl).unwrap();
+        for df in Dataflow::ALL {
+            println!(
+                "=== Fig 10({panel_base}/{df}) weight-DRAM-bw ratio up/out, {wl} (ratio<1 => scale-up cheaper) ==="
+            );
+            print!("{:<16}", "layer");
+            for pe in PES {
+                print!(" {pe:>9}");
+            }
+            println!();
+            let cfg = ArchConfig { dataflow: df, ..base.clone() };
+            for layer in &topo.layers {
+                print!("{:<16}", layer.name);
+                for pe in PES {
+                    let c = compare_layer(&cfg, layer, pe);
+                    let r = c.weight_bw_ratio();
+                    print!(" {r:>9.3}");
+                    w.row(&[
+                        wl.to_string(),
+                        df.name().to_string(),
+                        layer.name.clone(),
+                        pe.to_string(),
+                        format!("{r:.4}"),
+                    ]);
+                }
+                println!();
+            }
+            println!();
+        }
+    }
+    w.write_to(Path::new("results/fig10.csv")).unwrap();
+
+    let topo = workloads::builtin("alphagozero").unwrap();
+    bench_auto("fig10/per_layer_compare(W1)", std::time::Duration::from_secs(2), || {
+        topo.layers
+            .iter()
+            .map(|l| compare_layer(&base, l, 16384).weight_bw_ratio())
+            .sum::<f64>()
+    });
+    println!("fig10 OK -> results/fig10.csv");
+}

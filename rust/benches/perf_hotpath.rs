@@ -1,0 +1,64 @@
+//! §Perf harness: micro-benchmarks of the simulator's hot paths, used to
+//! drive the optimization pass recorded in EXPERIMENTS.md §Perf.
+//!
+//! * analytical timing (closed form)        — should be O(1)/layer
+//! * fold schedule iteration                — O(#folds)
+//! * memory/double-buffer simulation        — O(#folds + rows touched)
+//! * full-trace generation + summarize      — O(#SRAM events), the
+//!   dominant cost when dumping traces (§III-E step 1)
+//! * full MLPerf suite simulation           — the end-to-end L3 metric
+//! * RTL cycle-level simulation             — the substrate we beat
+
+use std::time::Duration;
+
+use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::sim::Simulator;
+use scale_sim::sweep;
+use scale_sim::trace;
+use scale_sim::util::bench::{bench, bench_auto, black_box};
+use scale_sim::{rtl, LayerShape};
+
+fn main() {
+    let cfg = config::paper_default();
+    let layer = LayerShape::conv("conv3x3_256", 30, 30, 3, 3, 256, 256, 1);
+
+    bench("perf/analytical_timing(conv)", 100, 1000, || {
+        black_box(Dataflow::Os.timing(&layer, 128, 128).cycles)
+    });
+
+    let small = ArchConfig { array_h: 8, array_w: 8, ..cfg.clone() };
+    bench_auto("perf/fold_schedule(8x8,conv)", Duration::from_secs(1), || {
+        trace::fold_schedule(Dataflow::Os, &layer, 8, 8).map(|f| f.cycles).sum::<u64>()
+    });
+
+    bench_auto("perf/memory_simulate(8x8,conv)", Duration::from_secs(1), || {
+        scale_sim::memory::simulate(Dataflow::Os, &layer, &small).0.total()
+    });
+
+    for df in Dataflow::ALL {
+        bench_auto(
+            &format!("perf/trace_summarize({df},16x16,conv)"),
+            Duration::from_secs(2),
+            || {
+                let c = ArchConfig { array_h: 16, array_w: 16, ..cfg.clone() };
+                trace::summarize(df, &layer, &c).cycles()
+            },
+        );
+    }
+
+    let topos = workloads::mlperf_suite();
+    let threads = sweep::default_threads();
+    bench("perf/mlperf_suite(128x128,os)", 1, 5, || {
+        let sim = Simulator::new(cfg.clone());
+        topos.iter().map(|t| sim.run_topology(t).total_cycles()).sum::<u64>()
+    });
+    bench("perf/mlperf_suite_parallel_sweep", 1, 5, || {
+        sweep::dataflow_sweep(&cfg, &topos, &[128, 8], threads).len()
+    });
+
+    let (a, b) = rtl::random_matrices(64, 64, 64, 1);
+    bench("perf/rtl_64x64", 1, 5, || black_box(rtl::run_matmul(&a, &b, 64, 64, 64).cycles));
+
+    println!("perf_hotpath OK");
+}

@@ -1,0 +1,220 @@
+//! Workload geometry: one DNN layer as SCALE-Sim sees it (Table II).
+//!
+//! A layer is a convolution; matrix-matrix (MM), matrix-vector (MV) and
+//! vector-vector (VV) products are encoded as conv special cases exactly
+//! as §III-A describes (fully-connected / RNN layers become MV). The
+//! canonical GEMM encoding used throughout (and mirrored by the Python
+//! side's im2col view) is:
+//!
+//! ```text
+//! (M,K) @ (K,N)  ==  conv( ifmap = M x 1 x K, filter = 1 x 1 x K, N filters )
+//! ```
+//!
+//! so `Npx = M`, `window = K`, `num_filters = N`.
+
+use crate::{Error, Result};
+
+/// One DNN layer's hyper-parameters (Table II row).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LayerShape {
+    /// User-defined tag ("Layer Name").
+    pub name: String,
+    /// IFMAP height / width (pixels).
+    pub ifmap_h: u64,
+    pub ifmap_w: u64,
+    /// Filter height / width (pixels).
+    pub filt_h: u64,
+    pub filt_w: u64,
+    /// Input channels.
+    pub channels: u64,
+    /// Number of filters == OFMAP channels.
+    pub num_filters: u64,
+    /// Convolution stride (same in both dims, as in the original tool).
+    pub stride: u64,
+}
+
+impl LayerShape {
+    /// Plain convolution layer.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        name: &str,
+        ifmap_h: u64,
+        ifmap_w: u64,
+        filt_h: u64,
+        filt_w: u64,
+        channels: u64,
+        num_filters: u64,
+        stride: u64,
+    ) -> Self {
+        LayerShape {
+            name: name.to_string(),
+            ifmap_h,
+            ifmap_w,
+            filt_h,
+            filt_w,
+            channels,
+            num_filters,
+            stride,
+        }
+    }
+
+    /// GEMM `(m,k) @ (k,n)` encoded as a conv layer (§III-A).
+    pub fn gemm(name: &str, m: u64, k: u64, n: u64) -> Self {
+        LayerShape::conv(name, m, 1, 1, 1, k, n, 1)
+    }
+
+    /// Fully-connected layer: batch x in_features -> out_features (MV/MM).
+    pub fn fc(name: &str, batch: u64, in_features: u64, out_features: u64) -> Self {
+        LayerShape::gemm(name, batch, in_features, out_features)
+    }
+
+    /// Validate invariants; call after parsing user input.
+    pub fn validate(&self) -> Result<()> {
+        let bad = |reason: &str| Error::InvalidLayer {
+            name: self.name.clone(),
+            reason: reason.to_string(),
+        };
+        if self.ifmap_h == 0
+            || self.ifmap_w == 0
+            || self.filt_h == 0
+            || self.filt_w == 0
+            || self.channels == 0
+            || self.num_filters == 0
+        {
+            return Err(bad("all dimensions must be positive"));
+        }
+        if self.stride == 0 {
+            return Err(bad("stride must be positive"));
+        }
+        if self.filt_h > self.ifmap_h || self.filt_w > self.ifmap_w {
+            return Err(bad("filter larger than ifmap (valid padding assumed)"));
+        }
+        Ok(())
+    }
+
+    /// OFMAP height: `(H - R)/stride + 1` (valid padding).
+    pub fn ofmap_h(&self) -> u64 {
+        (self.ifmap_h - self.filt_h) / self.stride + 1
+    }
+
+    /// OFMAP width.
+    pub fn ofmap_w(&self) -> u64 {
+        (self.ifmap_w - self.filt_w) / self.stride + 1
+    }
+
+    /// Output pixels per OFMAP channel (`Npx = Eh * Ew`).
+    pub fn npx(&self) -> u64 {
+        self.ofmap_h() * self.ofmap_w()
+    }
+
+    /// Convolution-window size `K = R*S*C` — MACs per output pixel, and
+    /// the contraction dimension of the GEMM view.
+    pub fn window(&self) -> u64 {
+        self.filt_h * self.filt_w * self.channels
+    }
+
+    /// Total MAC operations in the layer.
+    pub fn macs(&self) -> u64 {
+        self.npx() * self.window() * self.num_filters
+    }
+
+    /// Unique IFMAP elements (= words; 1 byte/word by default config).
+    pub fn ifmap_elems(&self) -> u64 {
+        self.ifmap_h * self.ifmap_w * self.channels
+    }
+
+    /// Unique filter elements across all filters.
+    pub fn filter_elems(&self) -> u64 {
+        self.window() * self.num_filters
+    }
+
+    /// Unique OFMAP elements.
+    pub fn ofmap_elems(&self) -> u64 {
+        self.npx() * self.num_filters
+    }
+
+    /// GEMM view `(M, K, N) = (Npx, window, num_filters)` — the operand
+    /// matrix dimensions every dataflow schedules.
+    pub fn gemm_view(&self) -> (u64, u64, u64) {
+        (self.npx(), self.window(), self.num_filters)
+    }
+
+    /// True if this layer is a pure GEMM encoding (1x1 filter, W=1).
+    pub fn is_gemm(&self) -> bool {
+        self.filt_h == 1 && self.filt_w == 1 && self.ifmap_w == 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn resnet_conv1() -> LayerShape {
+        LayerShape::conv("conv1", 224, 224, 7, 7, 3, 64, 2)
+    }
+
+    #[test]
+    fn ofmap_dims_valid_padding() {
+        let l = resnet_conv1();
+        assert_eq!(l.ofmap_h(), 109); // (224-7)/2+1
+        assert_eq!(l.ofmap_w(), 109);
+        assert_eq!(l.npx(), 109 * 109);
+    }
+
+    #[test]
+    fn window_and_macs() {
+        let l = resnet_conv1();
+        assert_eq!(l.window(), 7 * 7 * 3);
+        assert_eq!(l.macs(), 109 * 109 * 147 * 64);
+    }
+
+    #[test]
+    fn gemm_encoding_round_trips() {
+        let g = LayerShape::gemm("g", 32, 147, 64);
+        assert!(g.is_gemm());
+        assert_eq!(g.gemm_view(), (32, 147, 64));
+        assert_eq!(g.macs(), 32 * 147 * 64);
+        assert_eq!(g.npx(), 32);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn fc_is_mv_when_batch_one() {
+        let f = LayerShape::fc("fc", 1, 2048, 1000);
+        assert_eq!(f.gemm_view(), (1, 2048, 1000));
+    }
+
+    #[test]
+    fn operand_footprints() {
+        let l = LayerShape::conv("c", 8, 8, 3, 3, 4, 16, 1);
+        assert_eq!(l.ifmap_elems(), 8 * 8 * 4);
+        assert_eq!(l.filter_elems(), 3 * 3 * 4 * 16);
+        assert_eq!(l.ofmap_elems(), 36 * 16);
+    }
+
+    #[test]
+    fn validate_rejects_zero_dims() {
+        let mut l = resnet_conv1();
+        l.channels = 0;
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_filter_bigger_than_ifmap() {
+        let l = LayerShape::conv("c", 4, 4, 5, 5, 1, 1, 1);
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_stride() {
+        let mut l = resnet_conv1();
+        l.stride = 0;
+        assert!(l.validate().is_err());
+    }
+
+    #[test]
+    fn stride_equal_filter_nonoverlapping() {
+        let l = LayerShape::conv("pool-ish", 8, 8, 2, 2, 1, 1, 2);
+        assert_eq!(l.npx(), 16);
+    }
+}

@@ -1,0 +1,258 @@
+//! `.cfg` parser — Table I of the paper, INI-style:
+//!
+//! ```text
+//! [general]
+//! run_name = my_run
+//!
+//! [architecture_presets]
+//! ArrayHeight:    32
+//! ArrayWidth:     32
+//! IfmapSramSz:    512
+//! FilterSramSz:   512
+//! OfmapSramSz:    256
+//! IfmapOffset:    0
+//! FilterOffset:   10000000
+//! OfmapOffset:    20000000
+//! Dataflow:       os
+//! Topology:       topologies/resnet50.csv
+//! ```
+//!
+//! Both `key: value` and `key = value` are accepted; keys are
+//! case-insensitive; unknown keys are an error (typo protection).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::dataflow::Dataflow;
+use crate::{Error, Result};
+
+/// Architecture + run parameters (Table I).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchConfig {
+    pub run_name: String,
+    /// Rows of the MAC systolic array.
+    pub array_h: u64,
+    /// Columns of the MAC systolic array.
+    pub array_w: u64,
+    /// Working-set SRAM sizes in KB (each is one half of a double buffer).
+    pub ifmap_sram_kb: u64,
+    pub filter_sram_kb: u64,
+    pub ofmap_sram_kb: u64,
+    /// Address-space offsets for generated traces.
+    pub ifmap_offset: u64,
+    pub filter_offset: u64,
+    pub ofmap_offset: u64,
+    /// Mapping strategy: os / ws / is.
+    pub dataflow: Dataflow,
+    /// Bytes per operand word (paper: 1 for int8 inference).
+    pub word_bytes: u64,
+    /// Path to the topology csv (optional; CLI may supply it).
+    pub topology_path: Option<PathBuf>,
+}
+
+impl Default for ArchConfig {
+    fn default() -> Self {
+        super::paper_default()
+    }
+}
+
+impl ArchConfig {
+    pub fn total_pes(&self) -> u64 {
+        self.array_h * self.array_w
+    }
+
+    pub fn ifmap_sram_bytes(&self) -> u64 {
+        self.ifmap_sram_kb * 1024
+    }
+
+    pub fn filter_sram_bytes(&self) -> u64 {
+        self.filter_sram_kb * 1024
+    }
+
+    pub fn ofmap_sram_bytes(&self) -> u64 {
+        self.ofmap_sram_kb * 1024
+    }
+
+    /// Validate invariants; call after parsing user input.
+    pub fn validate(&self) -> Result<()> {
+        if self.array_h == 0 || self.array_w == 0 {
+            return Err(Error::Config("array dimensions must be positive".into()));
+        }
+        if self.word_bytes == 0 {
+            return Err(Error::Config("word_bytes must be positive".into()));
+        }
+        if self.ifmap_sram_kb == 0 || self.filter_sram_kb == 0 || self.ofmap_sram_kb == 0 {
+            return Err(Error::Config("SRAM sizes must be positive".into()));
+        }
+        // offsets must keep the three address spaces disjoint in traces;
+        // we only require they differ.
+        if self.ifmap_offset == self.filter_offset
+            || self.filter_offset == self.ofmap_offset
+            || self.ifmap_offset == self.ofmap_offset
+        {
+            return Err(Error::Config("address offsets must be distinct".into()));
+        }
+        Ok(())
+    }
+
+    /// Parse the cfg text format.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv: HashMap<String, String> = HashMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if line.starts_with('[') && line.ends_with(']') {
+                continue; // section headers are decorative
+            }
+            let (k, v) = line
+                .split_once('=')
+                .or_else(|| line.split_once(':'))
+                .ok_or_else(|| {
+                    Error::Config(format!("line {}: expected key=value: {line:?}", lineno + 1))
+                })?;
+            kv.insert(k.trim().to_lowercase(), v.trim().to_string());
+        }
+        Self::from_map(kv)
+    }
+
+    fn from_map(mut kv: HashMap<String, String>) -> Result<Self> {
+        let mut cfg = ArchConfig::default();
+        let mut take = |k: &str| kv.remove(k);
+
+        fn num(k: &str, v: &str) -> Result<u64> {
+            v.parse::<u64>()
+                .map_err(|_| Error::Config(format!("{k}: not a number: {v:?}")))
+        }
+
+        if let Some(v) = take("run_name") {
+            cfg.run_name = v;
+        }
+        if let Some(v) = take("arrayheight") {
+            cfg.array_h = num("ArrayHeight", &v)?;
+        }
+        if let Some(v) = take("arraywidth") {
+            cfg.array_w = num("ArrayWidth", &v)?;
+        }
+        if let Some(v) = take("ifmapsramsz") {
+            cfg.ifmap_sram_kb = num("IfmapSramSz", &v)?;
+        }
+        if let Some(v) = take("filtersramsz") {
+            cfg.filter_sram_kb = num("FilterSramSz", &v)?;
+        }
+        if let Some(v) = take("ofmapsramsz") {
+            cfg.ofmap_sram_kb = num("OfmapSramSz", &v)?;
+        }
+        if let Some(v) = take("ifmapoffset") {
+            cfg.ifmap_offset = num("IfmapOffset", &v)?;
+        }
+        if let Some(v) = take("filteroffset") {
+            cfg.filter_offset = num("FilterOffset", &v)?;
+        }
+        if let Some(v) = take("ofmapoffset") {
+            cfg.ofmap_offset = num("OfmapOffset", &v)?;
+        }
+        if let Some(v) = take("wordbytes") {
+            cfg.word_bytes = num("WordBytes", &v)?;
+        }
+        if let Some(v) = take("dataflow") {
+            cfg.dataflow = Dataflow::parse(&v)?;
+        }
+        if let Some(v) = take("topology") {
+            cfg.topology_path = Some(PathBuf::from(v));
+        }
+        if let Some(k) = kv.keys().next() {
+            return Err(Error::Config(format!("unknown key {k:?} (Table I lists the legal keys)")));
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Read and parse a cfg file.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let mut cfg = Self::parse(&text)?;
+        // topology path is relative to the cfg file's directory
+        if let (Some(tp), Some(dir)) = (&cfg.topology_path, path.parent()) {
+            if tp.is_relative() {
+                cfg.topology_path = Some(dir.join(tp));
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "
+[general]
+run_name = sweep1
+
+[architecture_presets]
+ArrayHeight: 32
+ArrayWidth : 64
+IfmapSramSz = 256
+FilterSramSz: 256
+OfmapSramSz:  128
+IfmapOffset:  0
+FilterOffset: 10000000
+OfmapOffset:  20000000
+Dataflow:     ws
+Topology:     topologies/test.csv
+";
+
+    #[test]
+    fn parses_sample() {
+        let c = ArchConfig::parse(SAMPLE).unwrap();
+        assert_eq!(c.run_name, "sweep1");
+        assert_eq!((c.array_h, c.array_w), (32, 64));
+        assert_eq!(c.ifmap_sram_kb, 256);
+        assert_eq!(c.dataflow, Dataflow::Ws);
+        assert_eq!(
+            c.topology_path.unwrap().to_str().unwrap(),
+            "topologies/test.csv"
+        );
+    }
+
+    #[test]
+    fn defaults_fill_missing_keys() {
+        let c = ArchConfig::parse("ArrayHeight: 8\nArrayWidth: 8\n").unwrap();
+        assert_eq!(c.ifmap_sram_kb, 512); // paper default
+        assert_eq!(c.dataflow, Dataflow::Os);
+    }
+
+    #[test]
+    fn unknown_key_is_error() {
+        let err = ArchConfig::parse("ArayHeight: 8\n").unwrap_err();
+        assert!(err.to_string().contains("unknown key"));
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        assert!(ArchConfig::parse("ArrayHeight: eight\n").is_err());
+    }
+
+    #[test]
+    fn bad_dataflow_is_error() {
+        assert!(ArchConfig::parse("Dataflow: rs\n").is_err());
+    }
+
+    #[test]
+    fn zero_array_rejected() {
+        assert!(ArchConfig::parse("ArrayHeight: 0\n").is_err());
+    }
+
+    #[test]
+    fn equal_offsets_rejected() {
+        assert!(ArchConfig::parse("IfmapOffset: 5\nFilterOffset: 5\n").is_err());
+    }
+
+    #[test]
+    fn comments_and_sections_ignored() {
+        let c = ArchConfig::parse("# c\n; c2\n[sec]\nArrayHeight: 16\n").unwrap();
+        assert_eq!(c.array_h, 16);
+    }
+}

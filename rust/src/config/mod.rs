@@ -1,0 +1,46 @@
+//! Front end: the `.cfg` architecture file (Table I) and the topology
+//! `.csv` workload file (Table II), format-compatible with the original
+//! SCALE-Sim where practical.
+
+mod cfg;
+mod topology;
+pub mod workloads;
+
+pub use cfg::ArchConfig;
+pub use topology::Topology;
+
+use crate::dataflow::Dataflow;
+
+/// Built-in default matching the paper's methodology (§IV-A): TPUv3-sized
+/// 128x128 array, 1 byte/word, 1024 KB operand scratchpad split 512/512
+/// between IFMAP and filters.
+pub fn paper_default() -> ArchConfig {
+    ArchConfig {
+        run_name: "paper_default".into(),
+        array_h: 128,
+        array_w: 128,
+        ifmap_sram_kb: 512,
+        filter_sram_kb: 512,
+        ofmap_sram_kb: 256,
+        ifmap_offset: 0,
+        filter_offset: 10_000_000,
+        ofmap_offset: 20_000_000,
+        dataflow: Dataflow::Os,
+        word_bytes: 1,
+        topology_path: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_matches_methodology() {
+        let c = paper_default();
+        assert_eq!((c.array_h, c.array_w), (128, 128));
+        assert_eq!(c.ifmap_sram_kb + c.filter_sram_kb, 1024);
+        assert_eq!(c.word_bytes, 1);
+        assert_eq!(c.dataflow, Dataflow::Os);
+    }
+}

@@ -1,0 +1,171 @@
+//! Topology `.csv` parser — Table II of the paper.
+//!
+//! Format (header optional, detected by non-numeric second cell):
+//!
+//! ```text
+//! Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width,
+//! Channels, Num Filter, Strides,
+//! Conv1, 224, 224, 7, 7, 3, 64, 2,
+//! ```
+//!
+//! Trailing commas and `#` comments are tolerated (the original tool's
+//! files carry trailing commas). Layers run in file order; parallel
+//! branches of modern cells are serialized in listed order (§III-F).
+
+use std::path::Path;
+
+use crate::arch::LayerShape;
+use crate::util::csv;
+use crate::{Error, Result};
+
+/// A named workload: ordered list of layers.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub name: String,
+    pub layers: Vec<LayerShape>,
+}
+
+impl Topology {
+    pub fn new(name: &str, layers: Vec<LayerShape>) -> Self {
+        Topology { name: name.to_string(), layers }
+    }
+
+    /// Parse topology csv text.
+    pub fn parse(name: &str, text: &str) -> Result<Self> {
+        let rows = csv::parse(text);
+        let mut layers = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            if i == 0 && looks_like_header(row) {
+                continue;
+            }
+            layers.push(parse_row(row, i)?);
+        }
+        if layers.is_empty() {
+            return Err(Error::Topology(format!("{name}: no layers found")));
+        }
+        let t = Topology::new(name, layers);
+        for l in &t.layers {
+            l.validate()?;
+        }
+        Ok(t)
+    }
+
+    /// Read and parse a topology file; name = file stem.
+    pub fn from_file(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        let name = path
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("topology");
+        Self::parse(name, &text)
+    }
+
+    /// Total MACs over all layers.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs()).sum()
+    }
+
+    /// Serialize back to Table-II csv (round-trip tested).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides,\n",
+        );
+        for l in &self.layers {
+            out.push_str(&format!(
+                "{}, {}, {}, {}, {}, {}, {}, {},\n",
+                l.name, l.ifmap_h, l.ifmap_w, l.filt_h, l.filt_w, l.channels,
+                l.num_filters, l.stride
+            ));
+        }
+        out
+    }
+}
+
+fn looks_like_header(row: &[String]) -> bool {
+    row.len() >= 2 && row[1].parse::<u64>().is_err()
+}
+
+fn parse_row(row: &[String], lineno: usize) -> Result<LayerShape> {
+    if row.len() != 8 {
+        return Err(Error::Topology(format!(
+            "row {}: expected 8 cells (Table II), got {}: {row:?}",
+            lineno + 1,
+            row.len()
+        )));
+    }
+    let num = |i: usize| -> Result<u64> {
+        row[i].parse::<u64>().map_err(|_| {
+            Error::Topology(format!("row {}: cell {i} not a number: {:?}", lineno + 1, row[i]))
+        })
+    };
+    Ok(LayerShape {
+        name: row[0].clone(),
+        ifmap_h: num(1)?,
+        ifmap_w: num(2)?,
+        filt_h: num(3)?,
+        filt_w: num(4)?,
+        channels: num(5)?,
+        num_filters: num(6)?,
+        stride: num(7)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides,
+Conv1, 224, 224, 7, 7, 3, 64, 2,
+FC, 1, 1, 1, 1, 2048, 1000, 1,
+";
+
+    #[test]
+    fn parses_with_header() {
+        let t = Topology::parse("sample", SAMPLE).unwrap();
+        assert_eq!(t.layers.len(), 2);
+        assert_eq!(t.layers[0].name, "Conv1");
+        assert_eq!(t.layers[0].num_filters, 64);
+        assert_eq!(t.layers[1].channels, 2048);
+    }
+
+    #[test]
+    fn parses_without_header() {
+        let t = Topology::parse("nh", "C1, 8, 8, 3, 3, 4, 16, 1,\n").unwrap();
+        assert_eq!(t.layers.len(), 1);
+    }
+
+    #[test]
+    fn round_trips_through_to_csv() {
+        let t = Topology::parse("sample", SAMPLE).unwrap();
+        let t2 = Topology::parse("sample", &t.to_csv()).unwrap();
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn wrong_cell_count_is_error() {
+        assert!(Topology::parse("bad", "C1, 8, 8, 3, 3, 4, 16,\n").is_err());
+    }
+
+    #[test]
+    fn non_numeric_cell_is_error() {
+        assert!(Topology::parse("bad", "C1, 8, x, 3, 3, 4, 16, 1,\n").is_err());
+    }
+
+    #[test]
+    fn empty_file_is_error() {
+        assert!(Topology::parse("empty", "# only comments\n").is_err());
+    }
+
+    #[test]
+    fn invalid_layer_geometry_is_error() {
+        // filter 5x5 on 4x4 ifmap
+        assert!(Topology::parse("bad", "C1, 4, 4, 5, 5, 1, 1, 1,\n").is_err());
+    }
+
+    #[test]
+    fn total_macs_sums_layers() {
+        let t = Topology::parse("nh", "C1, 4, 4, 1, 1, 2, 3, 1,\nC2, 4, 4, 1, 1, 3, 2, 1,\n").unwrap();
+        assert_eq!(t.total_macs(), 16 * 2 * 3 + 16 * 3 * 2);
+    }
+}

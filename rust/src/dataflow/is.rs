@@ -1,0 +1,114 @@
+//! Input Stationary dataflow (§III-B, Fig 2c).
+//!
+//! The mirror of WS: each array column pins one *convolution window* (the
+//! set of IFMAP pixels producing one OFMAP pixel, §III-B), rows map to
+//! window elements. A fold first streams the window block from the top
+//! edge (`r` cycles), then streams all `num_filters` weight vectors from
+//! the left edge; partial sums reduce down each column.
+//!
+//! Per-fold cost mirrors WS with the moving operand count `Npx -> Nf`:
+//! `2r + c + Nf - 1`, over `⌈K/rows⌉ x ⌈Npx/cols⌉` folds.
+//!
+//! "The cost and runtime compared to WS varies by workload" (§III-B): IS
+//! wins exactly when the weight matrix outnumbers the output pixels —
+//! asserted in `ws.rs` tests from the paper's §IV-B claim.
+
+use crate::arch::LayerShape;
+use crate::util::ceil_div;
+
+use super::{for_fold_shapes, mapping_efficiency, Timing};
+
+/// Per-fold cycle cost (`r`,`c` PEs used, `nf` filters streamed).
+#[inline]
+pub fn fold_cycles(r: u64, c: u64, nf: u64) -> u64 {
+    2 * r + c + nf - 1
+}
+
+/// Analytical timing for one layer under IS on a `rows x cols` array.
+pub fn timing(layer: &LayerShape, rows: u64, cols: u64) -> Timing {
+    let (npx, k, nf) = layer.gemm_view();
+    let row_folds = ceil_div(k, rows); // window-element folds
+    let col_folds = ceil_div(npx, cols); // convolution-window folds
+
+    let mut cycles = 0u64;
+    for_fold_shapes(k, rows, npx, cols, |n, r, c| {
+        cycles += n * fold_cycles(r, c, nf);
+    });
+
+    // Fill loads each im2col element once: K elements per window, Npx
+    // windows (adjacent-window overlap is an SRAM-level reuse, so the
+    // *SRAM* is still read per element pinned).
+    let sram_reads_ifmap = k * npx;
+    // Each fold streams Nf filter rows of r_u elements; Σ r_u = K*col_folds.
+    let sram_reads_filter = nf * k * col_folds;
+    // One (partial) output per filter per window per window-fold.
+    let sram_writes_ofmap = npx * nf * row_folds;
+    let sram_reads_ofmap = npx * nf * (row_folds - 1);
+
+    let total_pes = rows * cols;
+    Timing {
+        cycles,
+        row_folds,
+        col_folds,
+        utilization: layer.macs() as f64 / (total_pes * cycles) as f64,
+        mapping_efficiency: mapping_efficiency(k, rows, npx, cols),
+        sram_reads_ifmap,
+        sram_reads_filter,
+        sram_writes_ofmap,
+        sram_reads_ofmap,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::dataflow::{ws, Dataflow};
+
+    #[test]
+    fn single_fold_matmul_matches_hand_count() {
+        let l = LayerShape::gemm("mm", 8, 8, 8);
+        let t = timing(&l, 8, 8);
+        assert_eq!((t.row_folds, t.col_folds), (1, 1));
+        assert_eq!(t.cycles, 31); // 2*8 + 8 + 8 - 1
+        assert_eq!(t.sram_reads_ifmap, 64);
+        assert_eq!(t.sram_reads_filter, 64);
+    }
+
+    #[test]
+    fn is_and_ws_are_duals_on_square_gemm() {
+        // symmetric GEMM (M == N) => identical runtime
+        let l = LayerShape::gemm("mm", 24, 40, 24);
+        assert_eq!(timing(&l, 8, 8).cycles, ws::timing(&l, 8, 8).cycles);
+    }
+
+    #[test]
+    fn ifmap_loaded_once_per_im2col_element() {
+        let l = LayerShape::conv("c", 10, 10, 3, 3, 4, 7, 1);
+        let t = timing(&l, 8, 8);
+        assert_eq!(t.sram_reads_ifmap, l.window() * l.npx());
+    }
+
+    #[test]
+    fn partial_sum_traffic_on_window_folds() {
+        let l = LayerShape::gemm("mm", 8, 20, 8); // K=20 on 8 rows => 3 folds
+        let t = timing(&l, 8, 8);
+        assert_eq!(t.row_folds, 3);
+        assert_eq!(t.sram_reads_ofmap, 2 * 64);
+    }
+
+    #[test]
+    fn dispatch_through_enum_matches() {
+        let l = LayerShape::conv("c", 12, 12, 3, 3, 8, 8, 1);
+        let direct = timing(&l, 16, 16);
+        let via = Dataflow::Is.timing(&l, 16, 16);
+        assert_eq!(direct, via);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let l = LayerShape::fc("fc", 1, 4096, 4096);
+        let t = timing(&l, 128, 128);
+        assert!(t.utilization > 0.0 && t.utilization <= 1.0);
+    }
+}

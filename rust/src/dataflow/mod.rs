@@ -1,0 +1,235 @@
+//! Dataflow models (§III-B): *Output Stationary*, *Weight Stationary*,
+//! *Input Stationary*, using Eyeriss's nomenclature as the paper does.
+//!
+//! Each dataflow schedules the layer's GEMM view
+//! `(M, K, N) = (Npx, window, num_filters)` onto a `rows x cols` array in
+//! *folds* (time-multiplexed mappings of the stationary operand), and
+//! yields a [`Timing`]: stall-free runtime in cycles, fold counts, PE
+//! utilization and exact SRAM access counts. The closed forms here are
+//! validated three ways:
+//!
+//! 1. against the cycle-accurate address traces in [`crate::trace`]
+//!    (`cycles` == last trace event + 1; access counts match exactly),
+//! 2. against the RTL-level PE-grid simulator in [`crate::rtl`] (Fig 4),
+//! 3. by property tests over random layer shapes.
+//!
+//! Per-fold durations (`r`,`c` = rows/cols actually mapped in the fold):
+//!
+//! | dataflow | folds | per-fold cycles |
+//! |----------|-------|-----------------|
+//! | OS | `⌈Npx/rows⌉ x ⌈N/cols⌉` | `2r + c + K - 2` |
+//! | WS | `⌈K/rows⌉ x ⌈N/cols⌉` | `2r + c + Npx - 1` |
+//! | IS | `⌈K/rows⌉ x ⌈Npx/cols⌉` | `2r + c + N - 1` |
+//!
+//! (OS: `r-1` skew fill + `K` stream + `c-1` column skew + `r` drain;
+//! WS/IS: `r` pin + skewed stream of the moving operand + column
+//! reduction + drain.) Folds execute back-to-back — the paper's model
+//! assumes outputs drain without stalling compute (§III-B) but does *not*
+//! overlap one fold's drain with the next fold's fill, matching the
+//! original tool's serialized fold schedule.
+
+pub mod is;
+pub mod os;
+pub mod ws;
+
+use crate::arch::LayerShape;
+use crate::{Error, Result};
+
+/// Mapping strategy (Table I `Dataflow`: legal values `os`, `ws`, `is`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    Os,
+    Ws,
+    Is,
+}
+
+impl Dataflow {
+    pub const ALL: [Dataflow; 3] = [Dataflow::Os, Dataflow::Ws, Dataflow::Is];
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s.trim().to_lowercase().as_str() {
+            "os" | "output_stationary" => Ok(Dataflow::Os),
+            "ws" | "weight_stationary" => Ok(Dataflow::Ws),
+            "is" | "input_stationary" => Ok(Dataflow::Is),
+            other => Err(Error::Config(format!(
+                "unknown dataflow {other:?} (legal: os, ws, is)"
+            ))),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Dataflow::Os => "os",
+            Dataflow::Ws => "ws",
+            Dataflow::Is => "is",
+        }
+    }
+
+    /// Stall-free timing + SRAM access counts for one layer.
+    pub fn timing(&self, layer: &LayerShape, rows: u64, cols: u64) -> Timing {
+        match self {
+            Dataflow::Os => os::timing(layer, rows, cols),
+            Dataflow::Ws => ws::timing(layer, rows, cols),
+            Dataflow::Is => is::timing(layer, rows, cols),
+        }
+    }
+}
+
+impl std::fmt::Display for Dataflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Result of scheduling one layer under one dataflow on one array shape.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Timing {
+    /// Stall-free runtime in cycles (== last trace event cycle + 1).
+    pub cycles: u64,
+    /// Folds along the array-rows dimension (OS: output px; WS/IS: window).
+    pub row_folds: u64,
+    /// Folds along the array-cols dimension (OS/WS: filters; IS: output px).
+    pub col_folds: u64,
+    /// Overall array utilization: `macs / (rows*cols*cycles)` in [0,1].
+    pub utilization: f64,
+    /// Average fraction of PEs mapped with useful work across folds.
+    pub mapping_efficiency: f64,
+    /// Exact SRAM access counts (words).
+    pub sram_reads_ifmap: u64,
+    pub sram_reads_filter: u64,
+    pub sram_writes_ofmap: u64,
+    /// Partial-sum re-reads when the window dimension folds (WS/IS only).
+    pub sram_reads_ofmap: u64,
+}
+
+impl Timing {
+    /// Total stationary-operand remaps — the paper's §IV-B cost driver.
+    pub fn remaps(&self) -> u64 {
+        self.row_folds * self.col_folds
+    }
+
+    /// Total SRAM traffic in words.
+    pub fn sram_total(&self) -> u64 {
+        self.sram_reads_ifmap
+            + self.sram_reads_filter
+            + self.sram_writes_ofmap
+            + self.sram_reads_ofmap
+    }
+}
+
+/// Iterate the (full + residual) fold grid analytically.
+///
+/// The fold grid over `(total_r / rows, total_c / cols)` has at most four
+/// distinct fold shapes: (rows,cols), (rows,resid_c), (resid_r,cols),
+/// (resid_r,resid_c). `f(count, r_used, c_used)` is invoked once per
+/// distinct shape with its multiplicity — O(1) instead of O(folds).
+pub(crate) fn for_fold_shapes(
+    total_r: u64,
+    rows: u64,
+    total_c: u64,
+    cols: u64,
+    mut f: impl FnMut(u64, u64, u64),
+) {
+    let full_r = total_r / rows;
+    let resid_r = total_r % rows;
+    let full_c = total_c / cols;
+    let resid_c = total_c % cols;
+    if full_r > 0 && full_c > 0 {
+        f(full_r * full_c, rows, cols);
+    }
+    if resid_r > 0 && full_c > 0 {
+        f(full_c, resid_r, cols);
+    }
+    if full_r > 0 && resid_c > 0 {
+        f(full_r, rows, resid_c);
+    }
+    if resid_r > 0 && resid_c > 0 {
+        f(1, resid_r, resid_c);
+    }
+}
+
+/// Shared mapping-efficiency computation over the fold grid.
+pub(crate) fn mapping_efficiency(total_r: u64, rows: u64, total_c: u64, cols: u64) -> f64 {
+    let mut mapped = 0u64;
+    let mut nfolds = 0u64;
+    for_fold_shapes(total_r, rows, total_c, cols, |n, r, c| {
+        mapped += n * r * c;
+        nfolds += n;
+    });
+    mapped as f64 / (rows * cols * nfolds) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_long_and_short_names() {
+        assert_eq!(Dataflow::parse("OS").unwrap(), Dataflow::Os);
+        assert_eq!(Dataflow::parse("weight_stationary").unwrap(), Dataflow::Ws);
+        assert_eq!(Dataflow::parse(" is ").unwrap(), Dataflow::Is);
+        assert!(Dataflow::parse("rs").is_err()); // row stationary unsupported (§III-B)
+    }
+
+    #[test]
+    fn fold_shapes_partition_the_grid() {
+        // sum of count*r*c must equal total_r*total_c for any split
+        for &(tr, r, tc, c) in &[
+            (10u64, 4u64, 7u64, 3u64),
+            (8, 8, 8, 8),
+            (1, 128, 1, 128),
+            (129, 64, 300, 7),
+        ] {
+            let mut area = 0;
+            for_fold_shapes(tr, r, tc, c, |n, ru, cu| area += n * ru * cu);
+            assert_eq!(area, tr * tc, "({tr},{r},{tc},{c})");
+        }
+    }
+
+    #[test]
+    fn fold_shapes_count_matches_ceil() {
+        let mut folds = 0;
+        for_fold_shapes(10, 4, 7, 3, |n, _, _| folds += n);
+        assert_eq!(folds, 3 * 3); // ceil(10/4)*ceil(7/3)
+    }
+
+    #[test]
+    fn mapping_efficiency_is_one_when_exact() {
+        assert_eq!(mapping_efficiency(16, 8, 24, 8), 1.0);
+    }
+
+    #[test]
+    fn mapping_efficiency_below_one_with_residue() {
+        let e = mapping_efficiency(9, 8, 8, 8);
+        assert!(e < 1.0 && e > 0.0);
+    }
+
+    #[test]
+    fn os_wins_when_folds_favor_it_like_fig5() {
+        // Fig 5's glance: OS outperforms the other two. OS fold count is
+        // ∝ Npx·Nf while WS/IS is ∝ K·(Nf|Npx); with K > Npx (deep conv,
+        // AlphaGoZero-like) OS strictly wins on every square array.
+        let l = crate::arch::LayerShape::conv("c", 19, 19, 3, 3, 256, 256, 1);
+        assert!(l.window() > l.npx());
+        for &n in &[8u64, 16, 32, 64, 128] {
+            let os = Dataflow::Os.timing(&l, n, n).cycles;
+            let ws = Dataflow::Ws.timing(&l, n, n).cycles;
+            let is = Dataflow::Is.timing(&l, n, n).cycles;
+            assert!(os <= ws && os <= is, "{n}x{n}: os={os} ws={ws} is={is}");
+        }
+    }
+
+    #[test]
+    fn dataflow_gap_is_modest_like_fig5() {
+        // §IV-B answer 3: "fixating to a given dataflow might not lead to
+        // significant losses" — on a busy conv layer all three dataflows
+        // land within ~2x of each other.
+        let l = crate::arch::LayerShape::conv("c", 28, 28, 3, 3, 64, 64, 1);
+        let t: Vec<u64> = Dataflow::ALL
+            .iter()
+            .map(|d| d.timing(&l, 32, 32).cycles)
+            .collect();
+        let (min, max) = (*t.iter().min().unwrap(), *t.iter().max().unwrap());
+        assert!(max < 3 * min, "spread too wide: {t:?}");
+    }
+}

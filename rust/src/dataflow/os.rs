@@ -1,0 +1,126 @@
+//! Output Stationary dataflow (§III-B, Fig 2a).
+//!
+//! Each PE is pinned to one OFMAP pixel: array rows map to output pixels
+//! (adjacent pixels of one channel down a column), array columns map to
+//! filters (output channels). IFMAP operands stream from the left edge,
+//! filter operands from the top edge, both skewed; each PE accumulates
+//! its pixel over `K = window` cycles, then accumulators drain down the
+//! columns (one value per column port per cycle).
+//!
+//! Per-fold timeline for a fold using `r x c` PEs (base cycle `b`):
+//!
+//! ```text
+//! read:  row i streams its K ifmap words on cycles  b+i .. b+i+K-1
+//!        col j streams its K filter words on cycles b+j .. b+j+K-1
+//! mac:   PE(i,j) performs its k-th MAC at            b+i+j+k
+//! drain: PE(i,j)'s pixel exits the column at         b+j+K-1+(r-1)+(r-i)
+//! ```
+//!
+//! so the fold occupies `2r + c + K - 2` cycles and folds run
+//! back-to-back: `T = Σ_folds (2r_u + c_u + K - 2)`.
+
+use crate::arch::LayerShape;
+use crate::util::ceil_div;
+
+use super::{for_fold_shapes, mapping_efficiency, Timing};
+
+/// Per-fold cycle cost (`r`,`c` PEs used, window `k`).
+#[inline]
+pub fn fold_cycles(r: u64, c: u64, k: u64) -> u64 {
+    2 * r + c + k - 2
+}
+
+/// Analytical timing for one layer under OS on a `rows x cols` array.
+pub fn timing(layer: &LayerShape, rows: u64, cols: u64) -> Timing {
+    let (npx, k, nf) = layer.gemm_view();
+    let row_folds = ceil_div(npx, rows);
+    let col_folds = ceil_div(nf, cols);
+
+    let mut cycles = 0u64;
+    for_fold_shapes(npx, rows, nf, cols, |n, r, c| {
+        cycles += n * fold_cycles(r, c, k);
+    });
+
+    // Every fold streams K ifmap words per used row and K filter words per
+    // used column; Σ r_u over the whole grid is Npx * col_folds, and
+    // Σ c_u is Nf * row_folds.
+    let sram_reads_ifmap = k * npx * col_folds;
+    let sram_reads_filter = k * nf * row_folds;
+    // every output pixel is produced exactly once, fully reduced in-PE
+    let sram_writes_ofmap = npx * nf;
+
+    let total_pes = rows * cols;
+    Timing {
+        cycles,
+        row_folds,
+        col_folds,
+        utilization: layer.macs() as f64 / (total_pes * cycles) as f64,
+        mapping_efficiency: mapping_efficiency(npx, rows, nf, cols),
+        sram_reads_ifmap,
+        sram_reads_filter,
+        sram_writes_ofmap,
+        sram_reads_ofmap: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+
+    #[test]
+    fn single_fold_matmul_matches_hand_count() {
+        // 8x8 array, GEMM 8x8x8: one fold, K=8 => 2*8 + 8 + 8 - 2 = 30.
+        let l = LayerShape::gemm("mm", 8, 8, 8);
+        let t = timing(&l, 8, 8);
+        assert_eq!((t.row_folds, t.col_folds), (1, 1));
+        assert_eq!(t.cycles, 30);
+        assert_eq!(t.sram_reads_ifmap, 8 * 8);
+        assert_eq!(t.sram_reads_filter, 8 * 8);
+        assert_eq!(t.sram_writes_ofmap, 64);
+        assert_eq!(t.sram_reads_ofmap, 0);
+    }
+
+    #[test]
+    fn folds_multiply_cycles() {
+        let l = LayerShape::gemm("mm", 16, 8, 16); // 2x2 folds on 8x8
+        let t = timing(&l, 8, 8);
+        assert_eq!((t.row_folds, t.col_folds), (2, 2));
+        assert_eq!(t.cycles, 4 * 30);
+    }
+
+    #[test]
+    fn residual_folds_cost_less() {
+        let l = LayerShape::gemm("mm", 9, 8, 8); // residual row fold of 1
+        let t = timing(&l, 8, 8);
+        // full fold 30 + residual fold 2*1+8+8-2 = 16
+        assert_eq!(t.cycles, 30 + 16);
+    }
+
+    #[test]
+    fn ofmap_writes_are_exact() {
+        let l = LayerShape::conv("c", 12, 12, 3, 3, 4, 10, 1);
+        let t = timing(&l, 8, 8);
+        assert_eq!(t.sram_writes_ofmap, l.npx() * 10);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let l = LayerShape::conv("c", 56, 56, 3, 3, 64, 64, 1);
+        for &(r, c) in &[(8, 8), (32, 32), (128, 128), (8, 2048)] {
+            let t = timing(&l, r, c);
+            assert!(t.utilization > 0.0 && t.utilization <= 1.0, "{r}x{c}: {}", t.utilization);
+        }
+    }
+
+    #[test]
+    fn ifmap_reads_scale_with_column_folds() {
+        // doubling filters past the array width re-streams the ifmap
+        let l1 = LayerShape::gemm("a", 8, 8, 8);
+        let l2 = LayerShape::gemm("b", 8, 8, 16);
+        assert_eq!(
+            timing(&l2, 8, 8).sram_reads_ifmap,
+            2 * timing(&l1, 8, 8).sram_reads_ifmap
+        );
+    }
+}

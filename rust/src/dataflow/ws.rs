@@ -1,0 +1,131 @@
+//! Weight Stationary dataflow (§III-B, Fig 2b).
+//!
+//! Each PE pins one weight element: array rows map to convolution-window
+//! elements (`K = R*S*C`), array columns map to filters. A fold first
+//! streams the `r x c` weight block down from the top edge (`r` cycles),
+//! then streams all `Npx` convolution windows from the left edge, skewed;
+//! partial sums reduce down each column and exit at the bottom.
+//!
+//! Per-fold timeline (base `b`, `r x c` PEs used):
+//!
+//! ```text
+//! fill:   c filter words per cycle on               b .. b+r-1
+//! stream: window t enters row i at                  b+r+t+i
+//! exit:   window t's partial sum leaves column j at b+2r+t+j
+//! ```
+//!
+//! so a fold occupies `2r + c + Npx - 1` cycles and
+//! `T = Σ_folds (2r_u + c_u + Npx - 1)`.
+//!
+//! When `K > rows` the window dimension folds (`⌈K/rows⌉`), and each
+//! OFMAP pixel is written once per window-fold: later folds re-read the
+//! partial sum from the OFMAP SRAM and accumulate (the §III-C reason the
+//! output partition "stores the partial sums" for WS/IS).
+
+use crate::arch::LayerShape;
+use crate::util::ceil_div;
+
+use super::{for_fold_shapes, mapping_efficiency, Timing};
+
+/// Per-fold cycle cost (`r`,`c` PEs used, `npx` windows streamed).
+#[inline]
+pub fn fold_cycles(r: u64, c: u64, npx: u64) -> u64 {
+    2 * r + c + npx - 1
+}
+
+/// Analytical timing for one layer under WS on a `rows x cols` array.
+pub fn timing(layer: &LayerShape, rows: u64, cols: u64) -> Timing {
+    let (npx, k, nf) = layer.gemm_view();
+    let row_folds = ceil_div(k, rows); // window folds
+    let col_folds = ceil_div(nf, cols); // filter folds
+
+    let mut cycles = 0u64;
+    for_fold_shapes(k, rows, nf, cols, |n, r, c| {
+        cycles += n * fold_cycles(r, c, npx);
+    });
+
+    // Fill reads each weight exactly once over the whole schedule.
+    let sram_reads_filter = k * nf;
+    // Each fold streams Npx windows of r_u elements; Σ r_u = K * col_folds.
+    let sram_reads_ifmap = npx * k * col_folds;
+    // One (partial) output per window per column per fold.
+    let sram_writes_ofmap = npx * nf * row_folds;
+    // Re-read partial sums for accumulation on all but the first window fold.
+    let sram_reads_ofmap = npx * nf * (row_folds - 1);
+
+    let total_pes = rows * cols;
+    Timing {
+        cycles,
+        row_folds,
+        col_folds,
+        utilization: layer.macs() as f64 / (total_pes * cycles) as f64,
+        mapping_efficiency: mapping_efficiency(k, rows, nf, cols),
+        sram_reads_ifmap,
+        sram_reads_filter,
+        sram_writes_ofmap,
+        sram_reads_ofmap,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+
+    #[test]
+    fn single_fold_matmul_matches_hand_count() {
+        // 8x8 array, GEMM 8x8x8: K=8 fits rows, 8 filters fit cols.
+        // fold = 2*8 + 8 + 8 - 1 = 31.
+        let l = LayerShape::gemm("mm", 8, 8, 8);
+        let t = timing(&l, 8, 8);
+        assert_eq!((t.row_folds, t.col_folds), (1, 1));
+        assert_eq!(t.cycles, 31);
+        assert_eq!(t.sram_reads_filter, 64); // each weight once
+        assert_eq!(t.sram_reads_ifmap, 64);
+        assert_eq!(t.sram_writes_ofmap, 64);
+        assert_eq!(t.sram_reads_ofmap, 0);
+    }
+
+    #[test]
+    fn window_fold_causes_partial_sum_traffic() {
+        // K = 16 on 8 rows: two window folds.
+        let l = LayerShape::gemm("mm", 8, 16, 8);
+        let t = timing(&l, 8, 8);
+        assert_eq!(t.row_folds, 2);
+        assert_eq!(t.sram_writes_ofmap, 2 * 64);
+        assert_eq!(t.sram_reads_ofmap, 64);
+    }
+
+    #[test]
+    fn weights_read_exactly_once() {
+        let l = LayerShape::conv("c", 14, 14, 3, 3, 32, 48, 1);
+        let t = timing(&l, 16, 16);
+        assert_eq!(t.sram_reads_filter, l.filter_elems());
+    }
+
+    #[test]
+    fn streaming_cost_dominated_by_npx() {
+        // Npx >> everything: cycles ≈ folds * Npx
+        let l = LayerShape::conv("c", 112, 112, 1, 1, 8, 8, 1);
+        let t = timing(&l, 8, 8);
+        assert_eq!((t.row_folds, t.col_folds), (1, 1));
+        assert_eq!(t.cycles, fold_cycles(8, 8, l.npx()));
+    }
+
+    #[test]
+    fn ws_beats_is_when_pixels_exceed_weights() {
+        // paper §IV-B: "if output pixels > weights, WS outperforms IS"
+        let l = LayerShape::conv("c", 64, 64, 3, 3, 8, 8, 1); // Npx=3844 >> K*Nf=576
+        let ws = timing(&l, 16, 16).cycles;
+        let is = super::super::is::timing(&l, 16, 16).cycles;
+        assert!(ws < is, "ws={ws} is={is}");
+    }
+
+    #[test]
+    fn is_beats_ws_when_weights_exceed_pixels() {
+        let l = LayerShape::fc("fc", 4, 2048, 1024); // Npx=4 << weights
+        let ws = timing(&l, 16, 16).cycles;
+        let is = super::super::is::timing(&l, 16, 16).cycles;
+        assert!(is < ws, "ws={ws} is={is}");
+    }
+}

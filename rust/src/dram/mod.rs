@@ -1,0 +1,377 @@
+//! Banked DRAM timing substrate — the DRAMSim2 stand-in (§III-D).
+//!
+//! The paper validates system integration by generating accurate DRAM
+//! read/write bandwidth traces "which can then be fed into a DRAM
+//! simulator e.g. DRAMSim2". That simulator is external to the original
+//! tool; we build the equivalent in-repo so the hand-off can actually be
+//! exercised: a row-buffer-per-bank timing model that consumes the
+//! `(cycle, addr, is_write)` request stream derived from the memory
+//! model's fold-level fetch schedule and reports achieved bandwidth,
+//! row-hit rate, and average/worst latency.
+//!
+//! Timing parameters default to DDR4-2400-ish values expressed in
+//! accelerator clock cycles (1 GHz core clock).
+
+use std::collections::VecDeque;
+
+/// DRAM timing/geometry parameters (cycles / bytes).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DramConfig {
+    pub banks: usize,
+    /// Row-buffer size per bank.
+    pub row_bytes: u64,
+    /// Activate (row open) latency.
+    pub t_rcd: u64,
+    /// Column access latency.
+    pub t_cas: u64,
+    /// Precharge (row close) latency.
+    pub t_rp: u64,
+    /// Bytes transferred per burst request.
+    pub burst_bytes: u64,
+    /// Burst transfer occupancy in cycles.
+    pub t_burst: u64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        DramConfig {
+            banks: 16,
+            row_bytes: 2048,
+            t_rcd: 18,
+            t_cas: 18,
+            t_rp: 18,
+            burst_bytes: 64,
+            t_burst: 4,
+        }
+    }
+}
+
+/// One memory request (burst granularity).
+#[derive(Clone, Copy, Debug)]
+pub struct Request {
+    pub cycle: u64,
+    pub addr: u64,
+    pub is_write: bool,
+}
+
+/// Aggregate results of replaying a request stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DramStats {
+    pub requests: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub total_latency: u64,
+    pub max_latency: u64,
+    /// Cycle the last request completed.
+    pub finish_cycle: u64,
+    pub bytes: u64,
+}
+
+impl DramStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / self.requests as f64
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.total_latency as f64 / self.requests as f64
+    }
+
+    /// Achieved bandwidth over the whole replay window (bytes/cycle).
+    pub fn achieved_bw(&self) -> f64 {
+        if self.finish_cycle == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / self.finish_cycle as f64
+    }
+}
+
+struct Bank {
+    open_row: Option<u64>,
+    ready_at: u64,
+}
+
+/// Row-buffer DRAM model. Requests must be fed in nondecreasing cycle
+/// order; each bank serves FIFO.
+pub struct Dram {
+    cfg: DramConfig,
+    banks: Vec<Bank>,
+    stats: DramStats,
+}
+
+impl Dram {
+    pub fn new(cfg: DramConfig) -> Self {
+        let banks = (0..cfg.banks).map(|_| Bank { open_row: None, ready_at: 0 }).collect();
+        Dram { cfg, banks, stats: DramStats::default() }
+    }
+
+    fn bank_and_row(&self, addr: u64) -> (usize, u64) {
+        let row_global = addr / self.cfg.row_bytes;
+        ((row_global % self.cfg.banks as u64) as usize, row_global / self.cfg.banks as u64)
+    }
+
+    /// Issue one burst request; returns its completion cycle.
+    pub fn issue(&mut self, req: Request) -> u64 {
+        let (b, row) = self.bank_and_row(req.addr);
+        let bank = &mut self.banks[b];
+        let start = req.cycle.max(bank.ready_at);
+        let access = match bank.open_row {
+            Some(open) if open == row => {
+                self.stats.row_hits += 1;
+                self.cfg.t_cas
+            }
+            Some(_) => {
+                self.stats.row_misses += 1;
+                self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cas
+            }
+            None => {
+                self.stats.row_misses += 1;
+                self.cfg.t_rcd + self.cfg.t_cas
+            }
+        };
+        bank.open_row = Some(row);
+        let done = start + access + self.cfg.t_burst;
+        bank.ready_at = done;
+        let latency = done - req.cycle;
+        self.stats.requests += 1;
+        self.stats.total_latency += latency;
+        self.stats.max_latency = self.stats.max_latency.max(latency);
+        self.stats.finish_cycle = self.stats.finish_cycle.max(done);
+        self.stats.bytes += self.cfg.burst_bytes;
+        done
+    }
+
+    /// Replay a whole stream; returns the stats.
+    pub fn replay(mut self, reqs: impl IntoIterator<Item = Request>) -> DramStats {
+        for r in reqs {
+            self.issue(r);
+        }
+        self.stats
+    }
+
+    pub fn stats(&self) -> DramStats {
+        self.stats
+    }
+}
+
+/// Chop a contiguous byte range into burst requests spread uniformly over
+/// a cycle window — how the memory model's per-fold fetches become a
+/// request stream.
+pub fn burst_stream(
+    cfg: &DramConfig,
+    base_addr: u64,
+    bytes: u64,
+    window: (u64, u64),
+    is_write: bool,
+) -> Vec<Request> {
+    if bytes == 0 {
+        return Vec::new();
+    }
+    let n = bytes.div_ceil(cfg.burst_bytes);
+    let (start, end) = window;
+    let span = end.saturating_sub(start).max(1);
+    (0..n)
+        .map(|i| Request {
+            cycle: start + i * span / n,
+            addr: base_addr + i * cfg.burst_bytes,
+            is_write,
+        })
+        .collect()
+}
+
+/// Build the cycle-stamped DRAM read-request stream for one layer
+/// (§III-E step 3: "SCALE-SIM then generates DRAM traffic trace") from
+/// the memory model's double-buffered fold fetches: fold *i*'s bytes are
+/// spread over fold *i-1*'s compute window.
+pub fn layer_request_stream(
+    df: crate::dataflow::Dataflow,
+    layer: &crate::arch::LayerShape,
+    cfg: &crate::config::ArchConfig,
+    dcfg: &DramConfig,
+) -> Vec<Request> {
+    let mut fetches = Vec::new();
+    crate::memory::simulate_with(df, layer, cfg, |f| fetches.push(f));
+    let mut reqs = Vec::new();
+    let mut window_start = 0u64;
+    let mut addr = 0u64; // streaming addresses; banks interleave by row
+    for (i, f) in fetches.iter().enumerate() {
+        let window = if i == 0 {
+            // compulsory fill: spread over a nominal fill window
+            (0, f.cycles.max(1))
+        } else {
+            (window_start, window_start + fetches[i - 1].cycles)
+        };
+        reqs.extend(burst_stream(dcfg, addr, f.bytes, window, false));
+        addr += f.bytes;
+        if i > 0 {
+            window_start += fetches[i - 1].cycles;
+        }
+    }
+    reqs
+}
+
+/// Replay one layer's DRAM read traffic through the banked substrate —
+/// the full §III-D hand-off (SCALE-Sim trace -> DRAM simulator).
+pub fn replay_layer(
+    df: crate::dataflow::Dataflow,
+    layer: &crate::arch::LayerShape,
+    cfg: &crate::config::ArchConfig,
+    dcfg: DramConfig,
+) -> DramStats {
+    let reqs = layer_request_stream(df, layer, cfg, &dcfg);
+    Dram::new(dcfg).replay(reqs)
+}
+
+/// FIFO helper retained for request-queue experiments (backpressure
+/// ablation in the system-interface example).
+pub struct RequestQueue {
+    q: VecDeque<Request>,
+    pub capacity: usize,
+}
+
+impl RequestQueue {
+    pub fn new(capacity: usize) -> Self {
+        RequestQueue { q: VecDeque::new(), capacity }
+    }
+
+    /// Returns false (rejected) when full — the producer must stall.
+    pub fn push(&mut self, r: Request) -> bool {
+        if self.q.len() >= self.capacity {
+            return false;
+        }
+        self.q.push_back(r);
+        true
+    }
+
+    pub fn pop(&mut self) -> Option<Request> {
+        self.q.pop_front()
+    }
+
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> DramConfig {
+        DramConfig::default()
+    }
+
+    #[test]
+    fn sequential_same_row_hits() {
+        let mut d = Dram::new(cfg());
+        // two bursts in the same row, same bank
+        d.issue(Request { cycle: 0, addr: 0, is_write: false });
+        d.issue(Request { cycle: 0, addr: 64, is_write: false });
+        let s = d.stats();
+        assert_eq!(s.row_hits, 1);
+        assert_eq!(s.row_misses, 1); // cold first access
+    }
+
+    #[test]
+    fn row_conflict_pays_precharge() {
+        let c = cfg();
+        let mut d = Dram::new(c);
+        let done1 = d.issue(Request { cycle: 0, addr: 0, is_write: false });
+        // same bank, different row: banks stride rows, so jump
+        // banks*row_bytes to land on the same bank, next row
+        let conflict_addr = c.row_bytes * c.banks as u64;
+        let done2 = d.issue(Request { cycle: 0, addr: conflict_addr, is_write: false });
+        assert!(done2 > done1);
+        assert_eq!(d.stats().row_misses, 2);
+        // second waits for bank then pays rp+rcd+cas+burst
+        assert_eq!(done2, done1 + c.t_rp + c.t_rcd + c.t_cas + c.t_burst);
+    }
+
+    #[test]
+    fn banks_serve_in_parallel() {
+        let c = cfg();
+        let mut d = Dram::new(c);
+        // different banks: identical completion time
+        let d1 = d.issue(Request { cycle: 0, addr: 0, is_write: false });
+        let d2 = d.issue(Request { cycle: 0, addr: c.row_bytes, is_write: false });
+        assert_eq!(d1, d2);
+    }
+
+    #[test]
+    fn burst_stream_covers_bytes() {
+        let c = cfg();
+        let reqs = burst_stream(&c, 1000, 1000, (0, 100), false);
+        assert_eq!(reqs.len(), 16); // ceil(1000/64)
+        assert!(reqs.windows(2).all(|w| w[0].cycle <= w[1].cycle));
+        assert!(reqs.iter().all(|r| (0..100).contains(&r.cycle)));
+    }
+
+    #[test]
+    fn achieved_bw_bounded_by_request_rate() {
+        let c = cfg();
+        let reqs = burst_stream(&c, 0, 64 * 1024, (0, 10_000), false);
+        let stats = Dram::new(c).replay(reqs);
+        assert!(stats.achieved_bw() > 0.0);
+        assert!(stats.hit_rate() > 0.5, "sequential stream should mostly hit");
+    }
+
+    #[test]
+    fn queue_backpressure() {
+        let mut q = RequestQueue::new(2);
+        let r = Request { cycle: 0, addr: 0, is_write: false };
+        assert!(q.push(r));
+        assert!(q.push(r));
+        assert!(!q.push(r)); // full
+        q.pop().unwrap();
+        assert!(q.push(r));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn layer_request_stream_covers_traffic() {
+        use crate::arch::LayerShape;
+        use crate::config;
+        use crate::dataflow::Dataflow;
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 16, 1);
+        let cfgm = config::ArchConfig { array_h: 8, array_w: 8, ..config::paper_default() };
+        let dcfg = cfg();
+        let reqs = layer_request_stream(Dataflow::Os, &l, &cfgm, &dcfg);
+        let (traffic, _) = crate::memory::simulate(Dataflow::Os, &l, &cfgm);
+        let bytes: u64 = reqs.len() as u64 * dcfg.burst_bytes;
+        // bursts round up per fold: covered, within one burst per fold
+        assert!(bytes >= traffic.read_bytes(), "{bytes} < {}", traffic.read_bytes());
+        // requests are cycle-ordered within each fold window and bounded
+        // by the layer runtime
+        let runtime = Dataflow::Os.timing(&l, 8, 8).cycles;
+        assert!(reqs.iter().all(|r| r.cycle <= runtime));
+    }
+
+    #[test]
+    fn replay_layer_produces_stats() {
+        use crate::arch::LayerShape;
+        use crate::config;
+        use crate::dataflow::Dataflow;
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 16, 1);
+        let cfgm = config::ArchConfig { array_h: 8, array_w: 8, ..config::paper_default() };
+        let stats = replay_layer(Dataflow::Os, &l, &cfgm, cfg());
+        assert!(stats.requests > 0);
+        assert!(stats.achieved_bw() > 0.0);
+        assert!(stats.hit_rate() > 0.3, "streaming should mostly row-hit");
+    }
+
+    #[test]
+    fn empty_stream_stats() {
+        let s = Dram::new(cfg()).replay(Vec::new());
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.achieved_bw(), 0.0);
+        assert_eq!(s.avg_latency(), 0.0);
+    }
+}

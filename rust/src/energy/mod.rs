@@ -1,0 +1,201 @@
+//! Energy model (Fig 6): access-cost accounting over the simulator's
+//! exact MAC / SRAM / DRAM counts.
+//!
+//! The paper reports energy in mJ but gives no technology constants; we
+//! use Eyeriss/TPU-era per-access costs (documented in DESIGN.md §3,
+//! overridable by the caller) so that *ratios and trends* — which is all
+//! Fig 6 compares — are meaningful:
+//!
+//! * 8-bit MAC:            0.2 pJ/op
+//! * SRAM read/write:      6.0 / 7.0 pJ per byte (≈1 MB scratchpad)
+//! * DRAM (LPDDR4-class):  160 pJ per byte
+//!
+//! As §IV-B cautions, "the cost of logic within the accelerator is
+//! assumed to be the same for the three dataflows".
+
+use crate::dataflow::Timing;
+use crate::memory::DramTraffic;
+
+/// Per-access energy costs in picojoules.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyModel {
+    pub mac_pj: f64,
+    pub sram_read_pj_per_byte: f64,
+    pub sram_write_pj_per_byte: f64,
+    pub dram_pj_per_byte: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self::NODE_28NM
+    }
+}
+
+impl EnergyModel {
+    /// ~28 nm mobile-class estimates (the default).
+    pub const NODE_28NM: EnergyModel = EnergyModel {
+        mac_pj: 0.2,
+        sram_read_pj_per_byte: 6.0,
+        sram_write_pj_per_byte: 7.0,
+        dram_pj_per_byte: 160.0,
+    };
+
+    /// ~45 nm Eyeriss-era estimates (Horowitz ISSCC'14 scaling).
+    pub const NODE_45NM: EnergyModel = EnergyModel {
+        mac_pj: 0.45,
+        sram_read_pj_per_byte: 10.0,
+        sram_write_pj_per_byte: 11.5,
+        dram_pj_per_byte: 200.0,
+    };
+
+    /// ~7 nm datacenter-class estimates.
+    pub const NODE_7NM: EnergyModel = EnergyModel {
+        mac_pj: 0.05,
+        sram_read_pj_per_byte: 2.5,
+        sram_write_pj_per_byte: 3.0,
+        dram_pj_per_byte: 120.0,
+    };
+
+    /// Look up a preset by name ("28nm", "45nm", "7nm").
+    pub fn preset(name: &str) -> Option<EnergyModel> {
+        match name.trim().to_lowercase().as_str() {
+            "28nm" => Some(Self::NODE_28NM),
+            "45nm" => Some(Self::NODE_45NM),
+            "7nm" => Some(Self::NODE_7NM),
+            _ => None,
+        }
+    }
+}
+
+/// Energy split the way Fig 6 stacks it: compute vs memory transfers.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct EnergyBreakdown {
+    pub compute_mj: f64,
+    pub sram_mj: f64,
+    pub dram_mj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_mj(&self) -> f64 {
+        self.compute_mj + self.sram_mj + self.dram_mj
+    }
+
+    /// Fig 6's "memory transfers" bar (SRAM + DRAM).
+    pub fn memory_mj(&self) -> f64 {
+        self.sram_mj + self.dram_mj
+    }
+}
+
+const PJ_TO_MJ: f64 = 1e-9;
+
+impl EnergyModel {
+    /// Price one layer run: MAC count from the layer, SRAM accesses from
+    /// the dataflow timing, DRAM bytes from the memory model.
+    pub fn layer_energy(
+        &self,
+        macs: u64,
+        timing: &Timing,
+        dram: &DramTraffic,
+        word_bytes: u64,
+    ) -> EnergyBreakdown {
+        let w = word_bytes as f64;
+        let sram_read_bytes =
+            (timing.sram_reads_ifmap + timing.sram_reads_filter + timing.sram_reads_ofmap) as f64 * w;
+        let sram_write_bytes = timing.sram_writes_ofmap as f64 * w;
+        EnergyBreakdown {
+            compute_mj: macs as f64 * self.mac_pj * PJ_TO_MJ,
+            sram_mj: (sram_read_bytes * self.sram_read_pj_per_byte
+                + sram_write_bytes * self.sram_write_pj_per_byte)
+                * PJ_TO_MJ,
+            dram_mj: dram.total() as f64 * self.dram_pj_per_byte * PJ_TO_MJ,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::config;
+    use crate::dataflow::Dataflow;
+    use crate::memory;
+
+    fn breakdown(df: Dataflow) -> EnergyBreakdown {
+        let l = LayerShape::conv("c", 28, 28, 3, 3, 16, 32, 1);
+        let cfg = config::paper_default();
+        let t = df.timing(&l, cfg.array_h, cfg.array_w);
+        let (dram, _) = memory::simulate(df, &l, &cfg);
+        EnergyModel::default().layer_energy(l.macs(), &t, &dram, cfg.word_bytes)
+    }
+
+    #[test]
+    fn all_components_positive() {
+        for df in Dataflow::ALL {
+            let e = breakdown(df);
+            assert!(e.compute_mj > 0.0 && e.sram_mj > 0.0 && e.dram_mj > 0.0, "{df}");
+            assert!((e.total_mj() - (e.compute_mj + e.memory_mj())).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn compute_energy_is_dataflow_invariant() {
+        // same MACs price the same regardless of mapping (§IV-B caveat)
+        let a = breakdown(Dataflow::Os).compute_mj;
+        let b = breakdown(Dataflow::Ws).compute_mj;
+        let c = breakdown(Dataflow::Is).compute_mj;
+        assert!((a - b).abs() < 1e-15 && (b - c).abs() < 1e-15);
+    }
+
+    #[test]
+    fn hand_computed_small_case() {
+        let m = EnergyModel::default();
+        let t = Timing {
+            cycles: 100,
+            row_folds: 1,
+            col_folds: 1,
+            utilization: 1.0,
+            mapping_efficiency: 1.0,
+            sram_reads_ifmap: 1000,
+            sram_reads_filter: 500,
+            sram_writes_ofmap: 100,
+            sram_reads_ofmap: 0,
+        };
+        let d = DramTraffic { ifmap_bytes: 64, filter_bytes: 36, ofmap_bytes: 0 };
+        let e = m.layer_energy(10_000, &t, &d, 1);
+        assert!((e.compute_mj - 10_000.0 * 0.2 * 1e-9).abs() < 1e-18);
+        assert!((e.sram_mj - (1500.0 * 6.0 + 100.0 * 7.0) * 1e-9).abs() < 1e-18);
+        assert!((e.dram_mj - 100.0 * 160.0 * 1e-9).abs() < 1e-18);
+    }
+
+    #[test]
+    fn presets_resolve_and_order_sanely() {
+        assert_eq!(EnergyModel::preset("28nm").unwrap(), EnergyModel::NODE_28NM);
+        assert_eq!(EnergyModel::preset(" 45NM ").unwrap(), EnergyModel::NODE_45NM);
+        assert!(EnergyModel::preset("3nm").is_none());
+        // newer nodes must be cheaper per op across the board
+        let (n45, n28, n7) = (EnergyModel::NODE_45NM, EnergyModel::NODE_28NM, EnergyModel::NODE_7NM);
+        assert!(n45.mac_pj > n28.mac_pj && n28.mac_pj > n7.mac_pj);
+        assert!(n45.sram_read_pj_per_byte > n28.sram_read_pj_per_byte);
+        assert!(n28.dram_pj_per_byte > n7.dram_pj_per_byte);
+    }
+
+    #[test]
+    fn word_bytes_scales_sram_energy() {
+        let m = EnergyModel::default();
+        let t = Timing {
+            cycles: 10,
+            row_folds: 1,
+            col_folds: 1,
+            utilization: 1.0,
+            mapping_efficiency: 1.0,
+            sram_reads_ifmap: 10,
+            sram_reads_filter: 0,
+            sram_writes_ofmap: 0,
+            sram_reads_ofmap: 0,
+        };
+        let d = DramTraffic::default();
+        let e1 = m.layer_energy(0, &t, &d, 1).sram_mj;
+        let e2 = m.layer_energy(0, &t, &d, 2).sram_mj;
+        assert!((e2 - 2.0 * e1).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,69 @@
+//! # SCALE-Sim (Rust reproduction)
+//!
+//! A cycle-accurate, configurable systolic-array DNN accelerator simulator
+//! reproducing *SCALE-Sim: Systolic CNN Accelerator Simulator* (Samajdar
+//! et al., 2018), built as the Layer-3 coordinator of a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`).
+//!
+//! The simulator follows the paper's inside-out methodology (§III-E):
+//! dataflows emit cycle-stamped SRAM read/write address traces for a
+//! never-stalling array; traces are parsed into runtime, utilization and
+//! SRAM traffic; the double-buffered scratchpad model derives DRAM traffic
+//! and the stall-free bandwidth requirement; the energy model prices the
+//! access counts.
+//!
+//! Module map (paper section in parens):
+//!
+//! * [`arch`]     — layer geometry / workload shapes (Table II)
+//! * [`config`]   — `.cfg` + topology `.csv` front end (Table I, II)
+//! * [`dataflow`] — OS / WS / IS analytical cycle models (§III-B)
+//! * [`trace`]    — cycle-accurate SRAM address trace generators (§III-E)
+//! * [`memory`]   — double-buffered scratchpads, DRAM traffic + bandwidth (§III-C)
+//! * [`dram`]     — banked DRAM timing substrate (DRAMSim2 stand-in, §III-D)
+//! * [`energy`]   — access-cost energy model (Fig 6)
+//! * [`rtl`]      — cycle-level PE-grid simulator used for validation (Fig 4)
+//! * [`scaleout`] — scale-up vs scale-out study engine (§IV-E)
+//! * [`sim`]      — per-layer simulation -> [`sim::LayerReport`]
+//! * [`sweep`]    — multi-threaded design-space sweeps (§IV)
+//! * [`report`]   — csv / markdown output writers (§III-F)
+//! * [`runtime`]  — PJRT client executing the AOT Pallas/JAX artifacts
+//! * [`coordinator`] — run orchestration: jobs, workers, output dirs
+//! * [`util`]     — rng, mini property-test harness, bench timing, csv
+
+pub mod arch;
+pub mod config;
+pub mod coordinator;
+pub mod dataflow;
+pub mod dram;
+pub mod energy;
+pub mod memory;
+pub mod report;
+pub mod rtl;
+pub mod runtime;
+pub mod scaleout;
+pub mod sim;
+pub mod sweep;
+pub mod trace;
+pub mod util;
+
+pub use arch::LayerShape;
+pub use config::{ArchConfig, Topology};
+pub use dataflow::Dataflow;
+pub use sim::{LayerReport, Simulator, WorkloadReport};
+
+/// Library-level error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("config parse error: {0}")]
+    Config(String),
+    #[error("topology parse error: {0}")]
+    Topology(String),
+    #[error("invalid layer {name}: {reason}")]
+    InvalidLayer { name: String, reason: String },
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

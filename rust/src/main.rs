@@ -1,0 +1,297 @@
+//! `scale-sim` CLI — the leader entrypoint (Fig 1): config + topology in,
+//! traces + summary reports out, plus sweep / validate / artifact
+//! subcommands. Argument parsing is hand-rolled (clap is unavailable in
+//! the offline build).
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use scale_sim::config::{workloads, ArchConfig, Topology};
+use scale_sim::coordinator::{run, RunSpec};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::runtime::{default_artifact_dir, Runtime};
+use scale_sim::util::fmt_bytes;
+use scale_sim::{rtl, sweep, LayerShape};
+
+const USAGE: &str = "\
+scale-sim — systolic CNN accelerator simulator (SCALE-Sim reproduction)
+
+USAGE:
+  scale-sim run [-c cfg] [-t topology] [-o outdir] [--dataflow os|ws|is]
+                [--array RxC] [--dump-traces] [--functional TILE]
+                [--threads N]
+      Simulate a topology (built-in name like `resnet50`/`W5`, or a csv
+      path). Writes compute/sram/dram/energy reports when -o is given.
+
+  scale-sim sweep <dataflow|memory|shape> [-t topology]...
+      Reproduce the paper's design-space sweeps on the MLPerf suite
+      (Figs 5-8 series printed as tables).
+
+  scale-sim validate [--max N]
+      Fig 4: run the cycle-level RTL array against the analytical model
+      on array-sized matmuls and report both cycle counts.
+
+  scale-sim analyze [-t topology] [--array RxC] [--dataflow os|ws|is]
+      Deep-dive one workload: per-layer SRAM bank requirement (§IV-B),
+      best dataflow per layer (flexible-dataflow study), and the DRAM
+      bandwidth to provision for <5%% slowdown (§III-D stall model).
+
+  scale-sim workloads
+      List the built-in MLPerf workloads (Table III).
+
+  scale-sim artifacts
+      Show PJRT platform and the AOT artifacts available for the
+      functional path.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &[String]) -> anyhow::Result<()> {
+    match args.first().map(String::as_str) {
+        Some("run") => cmd_run(&args[1..]),
+        Some("sweep") => cmd_sweep(&args[1..]),
+        Some("analyze") => cmd_analyze(&args[1..]),
+        Some("validate") => cmd_validate(&args[1..]),
+        Some("workloads") => cmd_workloads(),
+        Some("artifacts") => cmd_artifacts(),
+        Some("-h") | Some("--help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Tiny flag parser: returns value for `--name V` / `-n V`.
+struct Args<'a>(&'a [String]);
+
+impl<'a> Args<'a> {
+    fn value(&self, long: &str, short: Option<&str>) -> Option<&'a str> {
+        let mut it = self.0.iter();
+        while let Some(a) = it.next() {
+            if a == long || short.is_some_and(|s| a == s) {
+                return it.next().map(String::as_str);
+            }
+        }
+        None
+    }
+
+    fn flag(&self, long: &str) -> bool {
+        self.0.iter().any(|a| a == long)
+    }
+}
+
+fn load_topology(spec: &str) -> anyhow::Result<Topology> {
+    if let Some(t) = workloads::builtin(spec) {
+        return Ok(t);
+    }
+    Ok(Topology::from_file(&PathBuf::from(spec))?)
+}
+
+fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args(rest);
+    let mut cfg = match a.value("--config", Some("-c")) {
+        Some(p) => ArchConfig::from_file(&PathBuf::from(p))?,
+        None => ArchConfig::default(),
+    };
+    if let Some(df) = a.value("--dataflow", None) {
+        cfg.dataflow = Dataflow::parse(df)?;
+    }
+    if let Some(arr) = a.value("--array", None) {
+        let (r, c) = arr
+            .split_once('x')
+            .ok_or_else(|| anyhow::anyhow!("--array expects RxC, e.g. 32x32"))?;
+        cfg.array_h = r.parse()?;
+        cfg.array_w = c.parse()?;
+    }
+    let topo = match a.value("--topology", Some("-t")) {
+        Some(t) => load_topology(t)?,
+        None => match &cfg.topology_path {
+            Some(p) => Topology::from_file(p)?,
+            None => anyhow::bail!("no topology: pass -t or set Topology in the cfg"),
+        },
+    };
+
+    let mut spec = RunSpec::new(cfg, topo);
+    spec.out_dir = a.value("--out", Some("-o")).map(PathBuf::from);
+    spec.dump_traces = a.flag("--dump-traces");
+    if let Some(t) = a.value("--functional", None) {
+        spec.functional_tile = Some(t.parse()?);
+    }
+    if let Some(t) = a.value("--threads", None) {
+        spec.threads = t.parse()?;
+    }
+
+    let out = run(&spec)?;
+    let r = &out.report;
+    println!("workload {:>14}  dataflow {}  array {}x{}", r.workload, spec.cfg.dataflow, spec.cfg.array_h, spec.cfg.array_w);
+    println!(
+        "{:<18} {:>12} {:>8} {:>14} {:>12} {:>10}",
+        "layer", "cycles", "util%", "dram_bytes", "avg_rd_bw", "energy_mJ"
+    );
+    for l in &r.layers {
+        println!(
+            "{:<18} {:>12} {:>8.2} {:>14} {:>12.4} {:>10.4}",
+            l.name(),
+            l.timing.cycles,
+            l.timing.utilization * 100.0,
+            l.dram.total(),
+            l.bandwidth.avg_read_bw,
+            l.energy.total_mj(),
+        );
+    }
+    println!(
+        "TOTAL: {} cycles, {:.2}% util, {} DRAM, {:.4} mJ",
+        r.total_cycles(),
+        r.overall_utilization(spec.cfg.total_pes()) * 100.0,
+        fmt_bytes(r.total_dram().total()),
+        r.total_energy().total_mj()
+    );
+    for (layer, err) in &out.functional {
+        println!("functional[{layer}]: max rel err {err:.2e} (PJRT artifact vs reference)");
+    }
+    if !out.files_written.is_empty() {
+        println!("wrote {} files under {:?}", out.files_written.len(), spec.out_dir.unwrap());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args(rest);
+    let kind = rest.first().map(String::as_str).unwrap_or("dataflow");
+    let base = ArchConfig::default();
+    let topos: Vec<Topology> = match a.value("--topology", Some("-t")) {
+        Some(t) => vec![load_topology(t)?],
+        None => workloads::mlperf_suite(),
+    };
+    let threads = sweep::default_threads();
+    match kind {
+        "dataflow" => {
+            let pts = sweep::dataflow_sweep(&base, &topos, &[128, 64, 32, 16, 8], threads);
+            println!("{:<14} {:>4} {:>6} {:>14} {:>8} {:>12} {:>12}", "workload", "df", "array", "cycles", "util%", "E_comp_mJ", "E_mem_mJ");
+            for p in pts {
+                println!(
+                    "{:<14} {:>4} {:>6} {:>14} {:>8.2} {:>12.4} {:>12.4}",
+                    p.workload, p.dataflow.name(), p.array, p.cycles, p.utilization * 100.0,
+                    p.energy_compute_mj, p.energy_memory_mj
+                );
+            }
+        }
+        "memory" => {
+            let sizes = [32, 64, 128, 256, 512, 1024, 2048];
+            let pts = sweep::memory_sweep(&base, &topos, &sizes, threads);
+            println!("{:<14} {:>8} {:>14} {:>12}", "workload", "sram_kb", "dram_bytes", "avg_rd_bw");
+            for p in pts {
+                println!("{:<14} {:>8} {:>14} {:>12.4}", p.workload, p.sram_kb, p.dram_bytes, p.avg_read_bw);
+            }
+        }
+        "shape" => {
+            let pts = sweep::shape_sweep(&base, &topos, &sweep::fig8_shapes(), threads);
+            println!("{:<14} {:>4} {:>10} {:>14}", "workload", "df", "shape", "cycles");
+            for p in pts {
+                println!("{:<14} {:>4} {:>10} {:>14}", p.workload, p.dataflow.name(), format!("{}x{}", p.rows, p.cols), p.cycles);
+            }
+        }
+        other => anyhow::bail!("unknown sweep {other:?} (dataflow|memory|shape)"),
+    }
+    Ok(())
+}
+
+fn cmd_analyze(rest: &[String]) -> anyhow::Result<()> {
+    use scale_sim::memory::stall::provision_bandwidth;
+    use scale_sim::sim::flex::flexible_study;
+    use scale_sim::trace::bank_analysis;
+
+    let a = Args(rest);
+    let mut cfg = ArchConfig::default();
+    if let Some(df) = a.value("--dataflow", None) {
+        cfg.dataflow = Dataflow::parse(df)?;
+    }
+    if let Some(arr) = a.value("--array", None) {
+        let (r, c) = arr.split_once('x').ok_or_else(|| anyhow::anyhow!("--array RxC"))?;
+        cfg.array_h = r.parse()?;
+        cfg.array_w = c.parse()?;
+    }
+    let topo = load_topology(a.value("--topology", Some("-t")).unwrap_or("resnet50"))?;
+
+    println!(
+        "analyze {} on {}x{} (banks/provision under {}; dataflow column is the per-layer winner)",
+        topo.name, cfg.array_h, cfg.array_w, cfg.dataflow
+    );
+    let flex = flexible_study(&cfg, &topo);
+    println!(
+        "{:<18} {:>6} {:>13} {:>13} {:>12} {:>10}",
+        "layer", "best", "best_cycles", "operand_banks", "ofmap_banks", "prov_B/cyc"
+    );
+    for (layer, fl) in topo.layers.iter().zip(&flex.layers) {
+        let banks = bank_analysis(cfg.dataflow, layer, &cfg);
+        let prov = provision_bandwidth(cfg.dataflow, layer, &cfg, 0.05);
+        println!(
+            "{:<18} {:>6} {:>13} {:>13} {:>12} {:>10.1}",
+            layer.name,
+            fl.best.name(),
+            fl.cycles[fl.best as usize],
+            banks.operand_banks,
+            banks.ofmap_banks,
+            prov
+        );
+    }
+    println!(
+        "flexible-dataflow speedup: {:.3}x over best fixed, {:.3}x over worst fixed (wins os/ws/is: {:?})",
+        flex.speedup_over_best_fixed(),
+        flex.speedup_over_worst_fixed(),
+        flex.wins()
+    );
+    Ok(())
+}
+
+fn cmd_validate(rest: &[String]) -> anyhow::Result<()> {
+    let a = Args(rest);
+    let max: usize = a.value("--max", None).unwrap_or("32").parse()?;
+    println!("{:>6} {:>12} {:>12} {:>6}", "size", "rtl_cycles", "model_cycles", "match");
+    let mut n = 4usize;
+    while n <= max {
+        let (x, y) = rtl::random_matrices(n, n, n, n as u64);
+        let r = rtl::run_matmul(&x, &y, n, n, n);
+        let layer = LayerShape::gemm("mm", n as u64, n as u64, n as u64);
+        let model = Dataflow::Os.timing(&layer, n as u64, n as u64).cycles;
+        println!("{:>6} {:>12} {:>12} {:>6}", n, r.cycles, model, r.cycles == model);
+        anyhow::ensure!(r.cycles == model, "validation mismatch at {n}");
+        n *= 2;
+    }
+    println!("validation OK (cycle-exact, Fig 4)");
+    Ok(())
+}
+
+fn cmd_workloads() -> anyhow::Result<()> {
+    println!("{:<4} {:<14} {:>7} {:>16}", "tag", "name", "layers", "MACs");
+    for (tag, name) in workloads::TAGS {
+        let t = workloads::builtin(name).unwrap();
+        println!("{:<4} {:<14} {:>7} {:>16}", tag, name, t.layers.len(), t.total_macs());
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    let rt = Runtime::new(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    println!("artifact dir:  {dir:?}");
+    let names = rt.available();
+    if names.is_empty() {
+        println!("no artifacts found — run `make artifacts`");
+    }
+    for n in names {
+        println!("  {n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,386 @@
+//! Scratchpad + DRAM traffic model (§III-C, §III-E steps 3–4).
+//!
+//! The three SRAM partitions (IFMAP / filter / OFMAP) are double-buffered
+//! working sets: while a fold streams from the working set, the idle set
+//! prefetches the next fold's operands from DRAM. We simulate that at
+//! *fold granularity*: every fold demands operand **segments** (the
+//! operand region its mapping touches); a FIFO-resident model per
+//! partition decides which demands hit SRAM and which must be fetched
+//! from DRAM. Fetches for fold *i* are scheduled during fold *i-1*
+//! (double buffering), which yields both total DRAM traffic and the
+//! stall-free bandwidth requirement:
+//!
+//! * `avg_read_bw`  = fetched bytes / runtime — Fig 7's y-axis,
+//! * `peak_read_bw` = max over folds of (fetch for next fold / current
+//!   fold's cycles) — the burst the interface must sustain.
+//!
+//! Segment definitions per dataflow (granularity == reuse granularity):
+//!
+//! | df | IFMAP segment | filter segment |
+//! |----|---------------|----------------|
+//! | OS | row-fold window region (full-width rows of ifmap) | col-fold filter block (`c_u * K`) |
+//! | WS | window-element slice of the whole ifmap (`~ r_u/K`) | fold weight block (`r_u * c_u`, used once) |
+//! | IS | window-element slice of the col-fold's px region | element slice of all filters (`Nf * r_u`) |
+//!
+//! Segments that exceed their partition are streamed through (fetched on
+//! every touch, never resident) — the §II-B "spilling" regime. OFMAP
+//! traffic: final outputs stream out once; when the window dimension
+//! folds and the partial-sum set exceeds the OFMAP partition, partials
+//! spill and return (§III-C's second purpose of the output partition).
+
+pub mod stall;
+
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+use crate::arch::LayerShape;
+use crate::config::ArchConfig;
+use crate::dataflow::Dataflow;
+use crate::trace::fold_schedule;
+use crate::util::ceil_div;
+
+/// DRAM traffic in bytes per operand.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct DramTraffic {
+    pub ifmap_bytes: u64,
+    pub filter_bytes: u64,
+    /// OFMAP bytes crossing the interface (final writes + partial-sum
+    /// spill writes and re-reads).
+    pub ofmap_bytes: u64,
+}
+
+impl DramTraffic {
+    pub fn total(&self) -> u64 {
+        self.ifmap_bytes + self.filter_bytes + self.ofmap_bytes
+    }
+
+    pub fn read_bytes(&self) -> u64 {
+        self.ifmap_bytes + self.filter_bytes
+    }
+}
+
+/// Stall-free DRAM interface requirement (bytes/cycle).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BandwidthReport {
+    pub avg_read_bw: f64,
+    pub avg_write_bw: f64,
+    pub peak_read_bw: f64,
+}
+
+/// FIFO-resident segment cache modeling one double-buffered partition.
+struct SegCache {
+    cap: u64,
+    used: u64,
+    fifo: VecDeque<u64>,
+    resident: HashMap<u64, u64>, // seg id -> bytes
+}
+
+impl SegCache {
+    fn new(cap: u64) -> Self {
+        SegCache { cap, used: 0, fifo: VecDeque::new(), resident: HashMap::new() }
+    }
+
+    /// Demand `seg` of `bytes`; returns bytes fetched from DRAM.
+    fn touch(&mut self, seg: u64, bytes: u64) -> u64 {
+        if bytes == 0 {
+            return 0;
+        }
+        if self.resident.contains_key(&seg) {
+            return 0; // hit
+        }
+        if bytes > self.cap {
+            // larger than the partition: stream through, never resident
+            return bytes;
+        }
+        while self.used + bytes > self.cap {
+            let victim = self.fifo.pop_front().expect("used>0 implies fifo nonempty");
+            self.used -= self.resident.remove(&victim).unwrap();
+        }
+        self.resident.insert(seg, bytes);
+        self.fifo.push_back(seg);
+        self.used += bytes;
+        bytes
+    }
+}
+
+/// Dense FIFO residency for *row-id* segments (OS ifmap path): ids are
+/// small integers (ifmap rows), so a stamp vector replaces the hash map
+/// of [`SegCache`] — §Perf iteration 3.
+struct RowCache {
+    cap: u64,
+    used: u64,
+    row_bytes: u64,
+    resident: Vec<bool>,
+    fifo: VecDeque<u32>,
+}
+
+impl RowCache {
+    fn new(cap: u64, row_bytes: u64, rows: u64) -> Self {
+        RowCache {
+            cap,
+            used: 0,
+            row_bytes,
+            resident: vec![false; rows as usize],
+            fifo: VecDeque::new(),
+        }
+    }
+
+    /// Demand row `y`; returns bytes fetched from DRAM.
+    #[inline]
+    fn touch(&mut self, y: u64) -> u64 {
+        if self.resident[y as usize] {
+            return 0;
+        }
+        if self.row_bytes > self.cap {
+            return self.row_bytes; // stream through
+        }
+        while self.used + self.row_bytes > self.cap {
+            let victim = self.fifo.pop_front().expect("used>0 implies fifo nonempty");
+            self.resident[victim as usize] = false;
+            self.used -= self.row_bytes;
+        }
+        self.resident[y as usize] = true;
+        self.fifo.push_back(y as u32);
+        self.used += self.row_bytes;
+        self.row_bytes
+    }
+}
+
+/// IFMAP row span `[y0, y1)` backing output pixels `[p0, p1)` (full-width
+/// rows — the prefetcher fetches whole ifmap rows, as the original tool
+/// does).
+fn ifmap_row_span(layer: &LayerShape, p0: u64, p1: u64) -> (u64, u64) {
+    debug_assert!(p0 < p1);
+    let ew = layer.ofmap_w();
+    let oy0 = p0 / ew;
+    let oy1 = (p1 - 1) / ew;
+    let y0 = oy0 * layer.stride;
+    let y1 = (oy1 * layer.stride + layer.filt_h).min(layer.ifmap_h);
+    (y0, y1)
+}
+
+/// IFMAP bytes backing output pixels `[p0, p1)`.
+fn ifmap_region_bytes(layer: &LayerShape, p0: u64, p1: u64, word: u64) -> u64 {
+    let (y0, y1) = ifmap_row_span(layer, p0, p1);
+    (y1 - y0) * layer.ifmap_w * layer.channels * word
+}
+
+/// Per-fold prefetch demand: compute cycles and DRAM bytes that must
+/// arrive before the fold starts (double-buffered during the previous
+/// fold's compute window).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldFetch {
+    pub cycles: u64,
+    pub bytes: u64,
+}
+
+/// Simulate the double-buffered memory system for one layer; returns the
+/// DRAM traffic and the bandwidth requirement.
+pub fn simulate(df: Dataflow, layer: &LayerShape, cfg: &ArchConfig) -> (DramTraffic, BandwidthReport) {
+    simulate_with(df, layer, cfg, |_| {})
+}
+
+/// [`simulate`] with a per-fold observer (used by the stall model and
+/// the DRAM-trace generator).
+pub fn simulate_with(
+    df: Dataflow,
+    layer: &LayerShape,
+    cfg: &ArchConfig,
+    mut observe: impl FnMut(FoldFetch),
+) -> (DramTraffic, BandwidthReport) {
+    let word = cfg.word_bytes;
+    let (npx, k, nf) = layer.gemm_view();
+    let mut ifmap = SegCache::new(cfg.ifmap_sram_bytes());
+    let mut ifmap_rows = RowCache::new(
+        cfg.ifmap_sram_bytes(),
+        layer.ifmap_w * layer.channels * word,
+        layer.ifmap_h,
+    );
+    let mut filter = SegCache::new(cfg.filter_sram_bytes());
+
+    let mut traffic = DramTraffic::default();
+    let mut peak = 0f64;
+    let mut prev_cycles: Option<u64> = None;
+    let mut total_cycles = 0u64;
+
+    for fold in fold_schedule(df, layer, cfg.array_h, cfg.array_w) {
+        let fetched = match df {
+            Dataflow::Os => {
+                // ifmap segments: one per *ifmap row* touched by the
+                // fold's window region — row granularity captures the
+                // halo reuse between adjacent pixel folds exactly
+                let mut fi = 0;
+                let (y0, y1) = ifmap_row_span(layer, fold.row_range.0, fold.row_range.1);
+                for y in y0..y1 {
+                    fi += ifmap_rows.touch(y);
+                }
+                // filter segment: the col-fold's filter block
+                let fseg = fold.col_range.0 / cfg.array_w;
+                let fb = fold.c_used * k * word;
+                let ff = filter.touch(fseg, fb);
+                traffic.ifmap_bytes += fi;
+                traffic.filter_bytes += ff;
+                fi + ff
+            }
+            Dataflow::Ws => {
+                // ifmap segment: element slice r_used/K of the whole ifmap
+                let iseg = fold.row_range.0 / cfg.array_h;
+                let ib = ceil_div(layer.ifmap_elems() * fold.r_used, k) * word;
+                let fi = ifmap.touch(iseg, ib);
+                // weights stream in exactly once; never reused after fill
+                let ff = fold.r_used * fold.c_used * word;
+                traffic.ifmap_bytes += fi;
+                traffic.filter_bytes += ff;
+                fi + ff
+            }
+            Dataflow::Is => {
+                // ifmap segment: element slice of this col-fold's px region
+                let region = ifmap_region_bytes(layer, fold.col_range.0, fold.col_range.1, word);
+                let iseg = fold.col_range.0 / cfg.array_w * 1_000_003
+                    + fold.row_range.0 / cfg.array_h;
+                let ib = ceil_div(region * fold.r_used, k);
+                let fi = ifmap.touch(iseg, ib);
+                // filter segment: element slice of all filters
+                let fseg = fold.row_range.0 / cfg.array_h;
+                let fb = nf * fold.r_used * word;
+                let ff = filter.touch(fseg, fb);
+                traffic.ifmap_bytes += fi;
+                traffic.filter_bytes += ff;
+                fi + ff
+            }
+        };
+        // double buffering: this fold's fetch happened during the
+        // previous fold's compute window
+        if let Some(pc) = prev_cycles {
+            peak = peak.max(fetched as f64 / pc as f64);
+        }
+        prev_cycles = Some(fold.cycles);
+        total_cycles += fold.cycles;
+        observe(FoldFetch { cycles: fold.cycles, bytes: fetched });
+    }
+
+    // OFMAP: final outputs stream out once; spilled partials round-trip.
+    let window_folds = match df {
+        Dataflow::Os => 1,
+        Dataflow::Ws | Dataflow::Is => ceil_div(k, cfg.array_h),
+    };
+    let ofmap_total = layer.ofmap_elems() * word;
+    traffic.ofmap_bytes = if window_folds == 1 {
+        ofmap_total
+    } else {
+        // partial-sum working set per outer fold
+        let partial_set = match df {
+            Dataflow::Ws => npx * cfg.array_w.min(nf) * word,
+            Dataflow::Is => cfg.array_w.min(npx) * nf * word,
+            Dataflow::Os => unreachable!(),
+        };
+        if partial_set <= cfg.ofmap_sram_bytes() {
+            ofmap_total
+        } else {
+            // every window fold writes partials out and all but the
+            // first reads them back
+            ofmap_total * (2 * window_folds - 1)
+        }
+    };
+
+    let bw = BandwidthReport {
+        avg_read_bw: traffic.read_bytes() as f64 / total_cycles as f64,
+        avg_write_bw: traffic.ofmap_bytes as f64 / total_cycles as f64,
+        peak_read_bw: peak.max(traffic.read_bytes() as f64 / total_cycles as f64),
+    };
+    (traffic, bw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn cfg(rows: u64, cols: u64, sram_kb: u64) -> ArchConfig {
+        ArchConfig {
+            array_h: rows,
+            array_w: cols,
+            ifmap_sram_kb: sram_kb,
+            filter_sram_kb: sram_kb,
+            ofmap_sram_kb: sram_kb,
+            ..config::paper_default()
+        }
+    }
+
+    fn layer() -> LayerShape {
+        LayerShape::conv("c", 28, 28, 3, 3, 16, 32, 1)
+    }
+
+    #[test]
+    fn big_sram_fetches_each_operand_exactly_once() {
+        let l = layer();
+        let (t, _) = simulate(Dataflow::Os, &l, &cfg(16, 16, 2048));
+        // whole ifmap fits: every ifmap row fetched exactly once (halo
+        // reuse captured by the row-granular resident set)
+        assert_eq!(t.filter_bytes, l.filter_elems());
+        assert_eq!(t.ifmap_bytes, l.ifmap_elems());
+        assert_eq!(t.ofmap_bytes, l.ofmap_elems());
+    }
+
+    #[test]
+    fn tiny_sram_refetches() {
+        let l = layer();
+        let big = simulate(Dataflow::Os, &l, &cfg(16, 16, 2048)).0;
+        let tiny = simulate(Dataflow::Os, &l, &cfg(16, 16, 1)).0;
+        assert!(tiny.total() > big.total(), "tiny={} big={}", tiny.total(), big.total());
+    }
+
+    #[test]
+    fn traffic_monotonically_nonincreasing_in_sram_size() {
+        // Fig 7's premise: more SRAM never increases DRAM traffic.
+        let l = layer();
+        for df in Dataflow::ALL {
+            let mut last = u64::MAX;
+            for kb in [1u64, 4, 16, 64, 256, 1024] {
+                let t = simulate(df, &l, &cfg(16, 16, kb)).0.total();
+                assert!(t <= last, "{df} kb={kb}: {t} > {last}");
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn ws_weights_cross_dram_exactly_once() {
+        let l = layer();
+        let (t, _) = simulate(Dataflow::Ws, &l, &cfg(16, 16, 64));
+        assert_eq!(t.filter_bytes, l.filter_elems());
+    }
+
+    #[test]
+    fn bandwidth_consistent_with_traffic() {
+        let l = layer();
+        let c = cfg(16, 16, 64);
+        let (t, bw) = simulate(Dataflow::Os, &l, &c);
+        let cycles = Dataflow::Os.timing(&l, 16, 16).cycles;
+        let expect = t.read_bytes() as f64 / cycles as f64;
+        assert!((bw.avg_read_bw - expect).abs() < 1e-9);
+        assert!(bw.peak_read_bw >= bw.avg_read_bw);
+    }
+
+    #[test]
+    fn ws_partial_spill_when_ofmap_sram_tiny() {
+        // K folds + tiny OFMAP partition => spill traffic
+        let l = LayerShape::conv("c", 30, 30, 3, 3, 64, 8, 1); // K=576 > 16 rows
+        let mut c = cfg(16, 16, 64);
+        c.ofmap_sram_kb = 1; // 1KB < Npx*cols bytes
+        let spill = simulate(Dataflow::Ws, &l, &c).0.ofmap_bytes;
+        c.ofmap_sram_kb = 1024;
+        let clean = simulate(Dataflow::Ws, &l, &c).0.ofmap_bytes;
+        assert_eq!(clean, l.ofmap_elems());
+        assert!(spill > clean);
+    }
+
+    #[test]
+    fn region_bytes_covers_filter_rows() {
+        let l = LayerShape::conv("c", 10, 10, 3, 3, 2, 1, 1);
+        // single pixel: 3 ifmap rows of 10px x 2ch
+        assert_eq!(ifmap_region_bytes(&l, 0, 1, 1), 3 * 10 * 2);
+        // full layer: all 10 rows
+        assert_eq!(ifmap_region_bytes(&l, 0, l.npx(), 1), 10 * 10 * 2);
+    }
+}

@@ -1,0 +1,166 @@
+//! Bandwidth-constrained execution model — the §III-D question the
+//! baseline tool leaves to the reader ("an accelerator design might have
+//! multiple processing elements to exploit parallelism, but in reality
+//! system memory is unable to supply enough operands to keep all the
+//! units busy").
+//!
+//! SCALE-Sim's core model is stall-free by construction (§III-E); this
+//! extension replays the double-buffered fold/fetch schedule against a
+//! finite DRAM read bandwidth and computes the *actual* runtime:
+//!
+//! * fold *i+1*'s operands prefetch during fold *i*'s compute window;
+//! * with read bandwidth `B` bytes/cycle the fetch occupies
+//!   `ceil(bytes/B)` cycles; any excess beyond the window stalls the
+//!   array;
+//! * fold 0's (compulsory) fetch is an up-front fill.
+
+use crate::arch::LayerShape;
+use crate::config::ArchConfig;
+use crate::dataflow::Dataflow;
+
+use super::{simulate_with, FoldFetch};
+
+/// Runtime under a finite DRAM read bandwidth.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StallReport {
+    /// Stall-free (infinite-bandwidth) runtime.
+    pub ideal_cycles: u64,
+    /// Cycles the array sits idle waiting for operands.
+    pub stall_cycles: u64,
+    /// The modeled bandwidth (bytes/cycle).
+    pub bandwidth: f64,
+}
+
+impl StallReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.ideal_cycles + self.stall_cycles
+    }
+
+    /// Slowdown factor vs the stall-free model (>= 1).
+    pub fn slowdown(&self) -> f64 {
+        self.total_cycles() as f64 / self.ideal_cycles as f64
+    }
+}
+
+/// Replay one layer's fold/fetch schedule against read bandwidth
+/// `bytes_per_cycle`. Panics if the bandwidth is not positive.
+pub fn stalled_runtime(
+    df: Dataflow,
+    layer: &LayerShape,
+    cfg: &ArchConfig,
+    bytes_per_cycle: f64,
+) -> StallReport {
+    assert!(bytes_per_cycle > 0.0, "bandwidth must be positive");
+    let mut fetches: Vec<FoldFetch> = Vec::new();
+    simulate_with(df, layer, cfg, |f| fetches.push(f));
+
+    let mut ideal = 0u64;
+    let mut stall = 0u64;
+    for (i, f) in fetches.iter().enumerate() {
+        ideal += f.cycles;
+        let fetch_cycles = (f.bytes as f64 / bytes_per_cycle).ceil() as u64;
+        if i == 0 {
+            // compulsory up-front fill before the array starts
+            stall += fetch_cycles;
+        } else {
+            // overlapped with the previous fold's compute window
+            let window = fetches[i - 1].cycles;
+            stall += fetch_cycles.saturating_sub(window);
+        }
+    }
+    StallReport { ideal_cycles: ideal, stall_cycles: stall, bandwidth: bytes_per_cycle }
+}
+
+/// The minimum bandwidth at which the layer runs within `tolerance` of
+/// stall-free (binary search over the stall model) — a provisioning
+/// answer the paper's Fig 7 only gives in average terms.
+pub fn provision_bandwidth(
+    df: Dataflow,
+    layer: &LayerShape,
+    cfg: &ArchConfig,
+    tolerance: f64,
+) -> f64 {
+    assert!(tolerance >= 0.0);
+    let target = 1.0 + tolerance;
+    let (mut lo, mut hi) = (1e-3f64, 4096.0f64);
+    for _ in 0..48 {
+        let mid = 0.5 * (lo + hi);
+        if stalled_runtime(df, layer, cfg, mid).slowdown() <= target {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+    }
+    hi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn layer() -> LayerShape {
+        LayerShape::conv("c", 28, 28, 3, 3, 16, 32, 1)
+    }
+
+    fn cfg() -> ArchConfig {
+        ArchConfig { array_h: 16, array_w: 16, ..config::paper_default() }
+    }
+
+    #[test]
+    fn infinite_bandwidth_is_nearly_stall_free() {
+        let r = stalled_runtime(Dataflow::Os, &layer(), &cfg(), 1e12);
+        assert_eq!(r.ideal_cycles, Dataflow::Os.timing(&layer(), 16, 16).cycles);
+        // only the compulsory fill remains (1 cycle at this bandwidth)
+        assert!(r.stall_cycles <= 1, "{}", r.stall_cycles);
+    }
+
+    #[test]
+    fn stalls_grow_monotonically_as_bandwidth_shrinks() {
+        let (l, c) = (layer(), cfg());
+        let mut last = 0;
+        for bw in [64.0, 16.0, 4.0, 1.0, 0.25] {
+            let r = stalled_runtime(Dataflow::Os, &l, &c, bw);
+            assert!(r.stall_cycles >= last, "bw={bw}");
+            last = r.stall_cycles;
+        }
+        assert!(last > 0, "sub-byte/cycle must stall this layer");
+    }
+
+    #[test]
+    fn slowdown_at_least_one() {
+        for df in Dataflow::ALL {
+            let r = stalled_runtime(df, &layer(), &cfg(), 2.0);
+            assert!(r.slowdown() >= 1.0, "{df}");
+            assert_eq!(r.total_cycles(), r.ideal_cycles + r.stall_cycles);
+        }
+    }
+
+    #[test]
+    fn provisioned_bandwidth_meets_tolerance() {
+        let (l, c) = (layer(), cfg());
+        for df in Dataflow::ALL {
+            let bw = provision_bandwidth(df, &l, &c, 0.05);
+            let r = stalled_runtime(df, &l, &c, bw);
+            assert!(r.slowdown() <= 1.051, "{df}: {}", r.slowdown());
+            // and meaningfully tight: half the bandwidth must violate it
+            let r2 = stalled_runtime(df, &l, &c, bw / 4.0);
+            assert!(r2.slowdown() > 1.05, "{df}: provisioning not tight");
+        }
+    }
+
+    #[test]
+    fn provisioned_bw_tracks_avg_requirement() {
+        // the provisioning answer must be at least the average demand
+        let (l, c) = (layer(), cfg());
+        let (_, bwreq) = super::super::simulate(Dataflow::Os, &l, &c);
+        let prov = provision_bandwidth(Dataflow::Os, &l, &c, 0.05);
+        assert!(prov >= bwreq.avg_read_bw * 0.5, "prov={prov} avg={}", bwreq.avg_read_bw);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be positive")]
+    fn zero_bandwidth_panics() {
+        stalled_runtime(Dataflow::Os, &layer(), &cfg(), 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Output writers (§III-F): the "metrics files, which summarize the
+//! parsed information from the traces — cycle counts, utilization,
+//! bandwidth requirements, total data transfers" — as csv, plus a
+//! markdown run summary.
+
+use std::path::Path;
+
+use crate::sim::WorkloadReport;
+use crate::util::csv::CsvWriter;
+use crate::Result;
+
+/// Per-layer compute report (cycles / utilization / folds).
+pub fn compute_report(r: &WorkloadReport) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "layer",
+        "cycles",
+        "utilization_pct",
+        "mapping_efficiency_pct",
+        "row_folds",
+        "col_folds",
+        "macs",
+    ]);
+    for l in &r.layers {
+        w.row(&[
+            l.name().to_string(),
+            l.timing.cycles.to_string(),
+            format!("{:.3}", l.timing.utilization * 100.0),
+            format!("{:.3}", l.timing.mapping_efficiency * 100.0),
+            l.timing.row_folds.to_string(),
+            l.timing.col_folds.to_string(),
+            l.layer.macs().to_string(),
+        ]);
+    }
+    w
+}
+
+/// Per-layer SRAM traffic report (word accesses).
+pub fn sram_report(r: &WorkloadReport) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "layer",
+        "ifmap_reads",
+        "filter_reads",
+        "ofmap_writes",
+        "ofmap_partial_reads",
+        "total",
+    ]);
+    for l in &r.layers {
+        w.row(&[
+            l.name().to_string(),
+            l.timing.sram_reads_ifmap.to_string(),
+            l.timing.sram_reads_filter.to_string(),
+            l.timing.sram_writes_ofmap.to_string(),
+            l.timing.sram_reads_ofmap.to_string(),
+            l.timing.sram_total().to_string(),
+        ]);
+    }
+    w
+}
+
+/// Per-layer DRAM traffic + stall-free bandwidth report.
+pub fn dram_report(r: &WorkloadReport) -> CsvWriter {
+    let mut w = CsvWriter::new(&[
+        "layer",
+        "dram_ifmap_bytes",
+        "dram_filter_bytes",
+        "dram_ofmap_bytes",
+        "avg_read_bw",
+        "peak_read_bw",
+        "avg_write_bw",
+    ]);
+    for l in &r.layers {
+        w.row(&[
+            l.name().to_string(),
+            l.dram.ifmap_bytes.to_string(),
+            l.dram.filter_bytes.to_string(),
+            l.dram.ofmap_bytes.to_string(),
+            format!("{:.4}", l.bandwidth.avg_read_bw),
+            format!("{:.4}", l.bandwidth.peak_read_bw),
+            format!("{:.4}", l.bandwidth.avg_write_bw),
+        ]);
+    }
+    w
+}
+
+/// Per-layer energy report (mJ, Fig 6 split).
+pub fn energy_report(r: &WorkloadReport) -> CsvWriter {
+    let mut w = CsvWriter::new(&["layer", "compute_mj", "sram_mj", "dram_mj", "total_mj"]);
+    for l in &r.layers {
+        w.row(&[
+            l.name().to_string(),
+            format!("{:.6}", l.energy.compute_mj),
+            format!("{:.6}", l.energy.sram_mj),
+            format!("{:.6}", l.energy.dram_mj),
+            format!("{:.6}", l.energy.total_mj()),
+        ]);
+    }
+    w
+}
+
+/// Human-readable run summary (markdown).
+pub fn summary_markdown(r: &WorkloadReport, total_pes: u64) -> String {
+    let e = r.total_energy();
+    let d = r.total_dram();
+    format!(
+        "# SCALE-Sim run: {name}\n\n\
+         | metric | value |\n|---|---|\n\
+         | layers | {layers} |\n\
+         | total MACs | {macs} |\n\
+         | total cycles | {cycles} |\n\
+         | overall utilization | {util:.2}% |\n\
+         | DRAM ifmap/filter/ofmap bytes | {di} / {df} / {do_} |\n\
+         | avg DRAM read bandwidth | {bw:.4} bytes/cycle |\n\
+         | energy (compute/sram/dram) mJ | {ec:.4} / {es:.4} / {ed:.4} |\n\
+         | total energy | {et:.4} mJ |\n",
+        name = r.workload,
+        layers = r.layers.len(),
+        macs = r.total_macs(),
+        cycles = r.total_cycles(),
+        util = r.overall_utilization(total_pes) * 100.0,
+        di = d.ifmap_bytes,
+        df = d.filter_bytes,
+        do_ = d.ofmap_bytes,
+        bw = r.avg_dram_read_bw(),
+        ec = e.compute_mj,
+        es = e.sram_mj,
+        ed = e.dram_mj,
+        et = e.total_mj(),
+    )
+}
+
+/// Write the full report set into `dir` (created if missing).
+pub fn write_all(dir: &Path, r: &WorkloadReport, total_pes: u64) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    compute_report(r).write_to(&dir.join("compute_report.csv"))?;
+    sram_report(r).write_to(&dir.join("sram_report.csv"))?;
+    dram_report(r).write_to(&dir.join("dram_report.csv"))?;
+    energy_report(r).write_to(&dir.join("energy_report.csv"))?;
+    std::fs::write(dir.join("summary.md"), summary_markdown(r, total_pes))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::config::{self, Topology};
+    use crate::sim::Simulator;
+    use crate::util::csv;
+
+    fn report() -> WorkloadReport {
+        let sim = Simulator::new(config::paper_default());
+        sim.run_topology(&Topology::new(
+            "t",
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::fc("fc", 1, 64, 10),
+            ],
+        ))
+    }
+
+    #[test]
+    fn compute_report_has_layer_rows() {
+        let rows = csv::parse(compute_report(&report()).as_str());
+        assert_eq!(rows.len(), 3); // header + 2 layers
+        assert_eq!(rows[1][0], "c1");
+        assert!(rows[1][1].parse::<u64>().unwrap() > 0);
+    }
+
+    #[test]
+    fn all_reports_parse_as_csv() {
+        let r = report();
+        for w in [compute_report(&r), sram_report(&r), dram_report(&r), energy_report(&r)] {
+            let rows = csv::parse(w.as_str());
+            assert!(rows.len() >= 3);
+            let width = rows[0].len();
+            assert!(rows.iter().all(|row| row.len() == width));
+        }
+    }
+
+    #[test]
+    fn summary_mentions_workload_and_cycles() {
+        let r = report();
+        let md = summary_markdown(&r, 128 * 128);
+        assert!(md.contains("SCALE-Sim run: t"));
+        assert!(md.contains(&r.total_cycles().to_string()));
+    }
+
+    #[test]
+    fn write_all_creates_files() {
+        let dir = std::env::temp_dir().join(format!("scale_sim_report_{}", std::process::id()));
+        write_all(&dir, &report(), 128 * 128).unwrap();
+        for f in [
+            "compute_report.csv",
+            "sram_report.csv",
+            "dram_report.csv",
+            "energy_report.csv",
+            "summary.md",
+        ] {
+            assert!(dir.join(f).exists(), "{f}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,217 @@
+//! Cycle-level "RTL" systolic-array simulator — the validation reference
+//! of Fig 4 ("we validate SCALE-SIM against an in-house RTL model for a
+//! systolic array implementing OS dataflow", §III-E).
+//!
+//! Unlike the analytical/trace model, nothing here knows the closed-form
+//! cycle counts: every register is simulated explicitly, one cycle at a
+//! time —
+//!
+//! * operand registers shift right (ifmap/A) and down (filter/B) one hop
+//!   per cycle, store-and-forward (§III-A);
+//! * each PE multiplies the two operands it latched this cycle and
+//!   accumulates in place (output stationary);
+//! * finished accumulators drain down the column, one value per column
+//!   port per cycle.
+//!
+//! `run_matmul` returns both the cycle count *and* the numeric product,
+//! so validation is two-sided: timing against [`crate::dataflow::os`]
+//! and numerics against a software matmul (and, in the e2e example,
+//! against the PJRT-executed Pallas artifact).
+
+mod pinned;
+
+pub use pinned::run_pinned_stream;
+
+use crate::util::rng::Rng;
+
+/// One processing element: MAC unit + operand registers.
+#[derive(Clone, Debug, Default)]
+struct Pe {
+    acc: f32,
+    macs_done: u32,
+}
+
+/// Result of one RTL run.
+#[derive(Clone, Debug)]
+pub struct RtlResult {
+    /// Total cycles until the last output left the array.
+    pub cycles: u64,
+    /// The computed `A @ B`, row-major `r x c`.
+    pub product: Vec<f32>,
+}
+
+/// Cycle-level OS-dataflow matmul: `A (r x k) @ B (k x c)` on an
+/// `r x c` PE grid (one output element per PE — a single OS fold).
+///
+/// Panics if the shapes are inconsistent or empty.
+pub fn run_matmul(a: &[f32], b: &[f32], r: usize, k: usize, c: usize) -> RtlResult {
+    assert!(r > 0 && k > 0 && c > 0, "empty matmul");
+    assert_eq!(a.len(), r * k, "A shape");
+    assert_eq!(b.len(), k * c, "B shape");
+
+    let mut pes = vec![Pe::default(); r * c];
+    // operand register planes: value latched at each PE this cycle
+    let mut a_plane: Vec<Option<f32>> = vec![None; r * c];
+    let mut b_plane: Vec<Option<f32>> = vec![None; r * c];
+
+    let mut product = vec![0f32; r * c];
+    let mut emitted = 0usize;
+    // Drain chain: once a column's *bottom* PE retires (it is always the
+    // last of its column to finish: row r-1 has the largest skew), the
+    // whole column shifts down in lockstep, one value out of the bottom
+    // port per cycle, bottom row first. `drain_start[j]` is the first
+    // emission cycle of column j; None while the column still computes.
+    let mut drain_start: Vec<Option<u64>> = vec![None; c];
+
+    let mut cycle: u64 = 0;
+    let safety = (2 * r + c + k + 8) as u64 * 4; // generous upper bound
+
+    while emitted < r * c {
+        assert!(cycle < safety, "RTL did not converge: emitted {emitted}/{}", r * c);
+
+        // --- drain step: active columns emit one value, bottom-first ----
+        for j in 0..c {
+            if let Some(start) = drain_start[j] {
+                if cycle >= start {
+                    let m = (cycle - start) as usize; // values already out
+                    if m < r {
+                        let src_row = r - 1 - m;
+                        // the shift chain reaches this PE only after it
+                        // has retired — invariant of the OS skew
+                        debug_assert_eq!(pes[src_row * c + j].macs_done as usize, k);
+                        product[src_row * c + j] = pes[src_row * c + j].acc;
+                        emitted += 1;
+                    }
+                }
+            }
+        }
+
+        // --- operand propagation: shift planes in place, feed edges -----
+        // (right/down shifts walk high-to-low index, so no scratch plane
+        // or per-cycle allocation is needed — §Perf iteration 2)
+        for i in 0..r {
+            for j in (1..c).rev() {
+                a_plane[i * c + j] = a_plane[i * c + j - 1];
+            }
+            let t = cycle as i64 - i as i64;
+            a_plane[i * c] = (t >= 0 && (t as usize) < k).then(|| a[i * k + t as usize]);
+        }
+        for i in (1..r).rev() {
+            for j in 0..c {
+                b_plane[i * c + j] = b_plane[(i - 1) * c + j];
+            }
+        }
+        for j in 0..c {
+            let t = cycle as i64 - j as i64;
+            b_plane[j] = (t >= 0 && (t as usize) < k).then(|| b[(t as usize) * c + j]);
+        }
+
+        // --- MAC step ----------------------------------------------------
+        for i in 0..r {
+            for j in 0..c {
+                if let (Some(av), Some(bv)) = (a_plane[i * c + j], b_plane[i * c + j]) {
+                    let pe = &mut pes[i * c + j];
+                    pe.acc += av * bv;
+                    pe.macs_done += 1;
+                    if pe.macs_done as usize == k && i == r - 1 {
+                        // bottom PE retired: the column's shift chain
+                        // starts emitting next cycle
+                        drain_start[j] = Some(cycle + 1);
+                    }
+                }
+            }
+        }
+
+        cycle += 1;
+    }
+    RtlResult { cycles: cycle, product }
+}
+
+/// Random-stimulus helper used by tests, benches and the Fig-4 harness.
+pub fn random_matrices(r: usize, k: usize, c: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let a = (0..r * k).map(|_| rng.normal_f32()).collect();
+    let b = (0..k * c).map(|_| rng.normal_f32()).collect();
+    (a, b)
+}
+
+/// Software reference matmul for numeric validation.
+pub fn matmul_ref(a: &[f32], b: &[f32], r: usize, k: usize, c: usize) -> Vec<f32> {
+    let mut out = vec![0f32; r * c];
+    for i in 0..r {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            for j in 0..c {
+                out[i * c + j] += av * b[kk * c + j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::dataflow::Dataflow;
+    use crate::util::prop::forall;
+
+    fn check(r: usize, k: usize, c: usize, seed: u64) {
+        let (a, b) = random_matrices(r, k, c, seed);
+        let rtl = run_matmul(&a, &b, r, k, c);
+        // numerics: exact same op order differences are within f32 eps
+        let sw = matmul_ref(&a, &b, r, k, c);
+        for (i, (x, y)) in rtl.product.iter().zip(&sw).enumerate() {
+            assert!((x - y).abs() <= 1e-3 * (1.0 + y.abs()), "elem {i}: {x} vs {y}");
+        }
+        // timing: must equal the analytical OS model exactly (Fig 4)
+        let layer = LayerShape::gemm("mm", r as u64, k as u64, c as u64);
+        let t = Dataflow::Os.timing(&layer, r as u64, c as u64);
+        assert_eq!(rtl.cycles, t.cycles, "{r}x{k}x{c}");
+    }
+
+    #[test]
+    fn square_sizes_match_analytical_and_numerics() {
+        for &n in &[1usize, 2, 4, 8, 16, 32] {
+            check(n, n, n, n as u64);
+        }
+    }
+
+    #[test]
+    fn rectangular_shapes() {
+        check(4, 16, 2, 1);
+        check(2, 3, 8, 2);
+        check(16, 1, 16, 3); // K = 1 edge case
+        check(1, 7, 1, 4); // single PE
+    }
+
+    #[test]
+    fn property_rtl_equals_analytical() {
+        forall(
+            0xC0FFEE,
+            25,
+            |rng| (rng.range(1, 12), rng.range(1, 24), rng.range(1, 12)),
+            |&(r, k, c)| {
+                let (a, b) = random_matrices(r as usize, k as usize, c as usize, r * 31 + c);
+                let rtl = run_matmul(&a, &b, r as usize, k as usize, c as usize);
+                let layer = LayerShape::gemm("mm", r, k, c);
+                rtl.cycles == Dataflow::Os.timing(&layer, r, c).cycles
+            },
+        );
+    }
+
+    #[test]
+    fn drain_is_one_output_per_column_per_cycle() {
+        // 1-column array: outputs must take r extra cycles to drain
+        let (a, b) = random_matrices(4, 4, 1, 9);
+        let rtl = run_matmul(&a, &b, 4, 4, 1);
+        // T = 2*4 + 1 + 4 - 2 = 11
+        assert_eq!(rtl.cycles, 11);
+    }
+
+    #[test]
+    #[should_panic(expected = "A shape")]
+    fn shape_mismatch_panics() {
+        run_matmul(&[1.0; 3], &[1.0; 4], 2, 2, 2);
+    }
+}

@@ -1,0 +1,232 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) from Rust — the Layer-3 side of the
+//! three-layer architecture. Python never runs here; `make artifacts`
+//! produced HLO text once, and this module compiles it on the embedded
+//! PJRT CPU client and executes it on the request path.
+//!
+//! The interchange format is HLO *text* (not serialized protos): jax
+//! >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects,
+//! while the text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+//!
+//! The flagship entry point is [`Runtime::tiled_gemm`]: execute an
+//! arbitrary GEMM by scheduling the AOT'd array-sized systolic kernel
+//! tile-by-tile in **the same fold order the simulator timed** — the
+//! functional counterpart of [`crate::trace::fold_schedule`], used by the
+//! e2e example and the `--functional` CLI mode to prove the mapping the
+//! simulator models computes the right numbers.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use crate::{Error, Result};
+
+fn rt_err<E: std::fmt::Display>(ctx: &str) -> impl FnOnce(E) -> Error + '_ {
+    move |e| Error::Runtime(format!("{ctx}: {e}"))
+}
+
+/// A loaded, compiled artifact.
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT CPU client + compiled artifact cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, LoadedExe>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(rt_err("PjRtClient::cpu"))?;
+        Ok(Runtime { client, exes: HashMap::new(), dir: artifact_dir.to_path_buf() })
+    }
+
+    /// Platform string of the underlying PJRT client (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `<name>.hlo.txt` from the artifact dir (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Runtime(format!(
+                "artifact {path:?} missing — run `make artifacts` first"
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(rt_err("parse HLO text"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(rt_err("compile"))?;
+        self.exes.insert(name.to_string(), LoadedExe { exe });
+        Ok(())
+    }
+
+    /// Names of artifacts present on disk (sorted).
+    pub fn available(&self) -> Vec<String> {
+        let mut names: Vec<String> = std::fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .filter_map(|e| {
+                        e.file_name()
+                            .to_str()
+                            .and_then(|n| n.strip_suffix(".hlo.txt").map(str::to_string))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        names.sort();
+        names
+    }
+
+    /// Execute a loaded artifact on f32 inputs; returns the flattened
+    /// first element of the (1-tuple) result.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<f32>> {
+        let le = self
+            .exes
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("artifact {name} not loaded")))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(rt_err("reshape input"))?;
+            lits.push(lit);
+        }
+        let result = le.exe.execute::<xla::Literal>(&lits).map_err(rt_err("execute"))?[0][0]
+            .to_literal_sync()
+            .map_err(rt_err("to_literal"))?;
+        // aot.py lowers with return_tuple=True => 1-tuple
+        let out = result.to_tuple1().map_err(rt_err("untuple"))?;
+        out.to_vec::<f32>().map_err(rt_err("to_vec"))
+    }
+
+    /// Execute the array-sized systolic GEMM artifact once:
+    /// `(t x t) @ (t x t)` for tile size `t` in {8, 32, 128}.
+    /// Loads (and caches) the artifact on first use.
+    pub fn gemm_tile(&mut self, tile: usize, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        let name = format!("systolic_gemm_{tile}");
+        self.load(&name)?;
+        let t = tile as i64;
+        self.execute_f32(&name, &[(a, &[t, t]), (b, &[t, t])])
+    }
+
+    /// Arbitrary `(m,k) @ (k,n)` GEMM executed tile-by-tile through the
+    /// AOT'd systolic kernel, following the simulator's OS fold schedule
+    /// (row folds outer, col folds inner, K streamed per fold).
+    pub fn tiled_gemm(
+        &mut self,
+        tile: usize,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(a.len(), m * k);
+        assert_eq!(b.len(), k * n);
+        let name = format!("systolic_gemm_{tile}");
+        self.load(&name)?;
+
+        let fm = m.div_ceil(tile);
+        let fn_ = n.div_ceil(tile);
+        let fk = k.div_ceil(tile);
+        let mut out = vec![0f32; m * n];
+        let mut atile = vec![0f32; tile * tile];
+        let mut btile = vec![0f32; tile * tile];
+
+        // OS fold schedule: output tile (i,j) stationary, K streamed.
+        for i in 0..fm {
+            for j in 0..fn_ {
+                let mut acc = vec![0f32; tile * tile];
+                for kk in 0..fk {
+                    // gather (zero-padded) operand tiles
+                    atile.iter_mut().for_each(|x| *x = 0.0);
+                    btile.iter_mut().for_each(|x| *x = 0.0);
+                    for r in 0..tile.min(m - i * tile) {
+                        for c in 0..tile.min(k - kk * tile) {
+                            atile[r * tile + c] = a[(i * tile + r) * k + kk * tile + c];
+                        }
+                    }
+                    for r in 0..tile.min(k - kk * tile) {
+                        for c in 0..tile.min(n - j * tile) {
+                            btile[r * tile + c] = b[(kk * tile + r) * n + j * tile + c];
+                        }
+                    }
+                    let prod = self.gemm_tile(tile, &atile, &btile)?;
+                    for (x, p) in acc.iter_mut().zip(&prod) {
+                        *x += p;
+                    }
+                }
+                for r in 0..tile.min(m - i * tile) {
+                    for c in 0..tile.min(n - j * tile) {
+                        out[(i * tile + r) * n + j * tile + c] = acc[r * tile + c];
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Execute an AOT conv artifact (NHWC x HWIO), returning NHWC out.
+    #[allow(clippy::too_many_arguments)]
+    pub fn conv(
+        &mut self,
+        name: &str,
+        ifmap: &[f32],
+        ifmap_shape: &[i64],
+        filt: &[f32],
+        filt_shape: &[i64],
+    ) -> Result<Vec<f32>> {
+        self.load(name)?;
+        self.execute_f32(name, &[(ifmap, ifmap_shape), (filt, filt_shape)])
+    }
+}
+
+/// Default artifact directory: `$SCALE_SIM_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("SCALE_SIM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Unit tests here stay artifact-independent (integration tests in
+    // rust/tests/runtime_integration.rs exercise real artifacts, and
+    // skip with a notice when `make artifacts` has not run).
+
+    #[test]
+    fn missing_artifact_is_a_clean_error() {
+        let dir = std::env::temp_dir().join("scale_sim_no_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rt = Runtime::new(&dir).expect("CPU client");
+        let err = rt.load("systolic_gemm_8").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn available_lists_hlo_files_only() {
+        let dir = std::env::temp_dir().join(format!("scale_sim_avail_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), "x").unwrap();
+        std::fs::write(dir.join("b.json"), "x").unwrap();
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.available(), vec!["a".to_string()]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn platform_is_cpu() {
+        let rt = Runtime::new(Path::new(".")).unwrap();
+        assert_eq!(rt.platform().to_lowercase(), "cpu");
+    }
+}

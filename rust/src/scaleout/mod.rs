@@ -1,0 +1,377 @@
+//! Scaling-up vs scaling-out (§IV-E, Figs 9 & 10).
+//!
+//! *Scale-up* grows one array (the TPU approach): a PE budget `P` becomes
+//! one `√P x √P` array. *Scale-out* replicates 8x8 arrays (the
+//! tensor-core approach): `P/64` nodes, with the workload partitioned
+//! along output channels — "the different filters are assigned to
+//! different nodes, thus different nodes generating different output
+//! channels". Each node keeps its own scratchpad configuration; as in
+//! the paper, the inter-node interconnect is not arbitrated — its
+//! required bandwidth is *reported* (from SRAM/DRAM interface numbers),
+//! not modeled as a constraint.
+
+use crate::arch::LayerShape;
+use crate::config::ArchConfig;
+use crate::memory;
+use crate::util::{ceil_div, isqrt};
+
+/// Scale-out node geometry used in the paper's study.
+pub const NODE_DIM: u64 = 8;
+pub const NODE_PES: u64 = NODE_DIM * NODE_DIM;
+
+/// Workload partitioning strategy across scale-out nodes.
+///
+/// The paper's study uses output-channel partitioning but notes that
+/// "alternate partitioning strategies exist, and in fact the best
+/// strategy may differ from layer to layer depending on the number of
+/// filters vs channels" (§IV-E) — implemented here as an extension and
+/// ablated in `rust/benches/` / `examples/`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Partition {
+    /// Split filters across nodes (the paper's choice): each node
+    /// produces different output channels.
+    #[default]
+    OutputChannels,
+    /// Split output pixels (ifmap rows) across nodes: each node produces
+    /// all channels for a horizontal stripe of the OFMAP.
+    Pixels,
+    /// Per layer, pick whichever of the two is faster (the paper's
+    /// "best strategy may differ from layer to layer").
+    Auto,
+}
+
+impl Partition {
+    pub const ALL: [Partition; 3] =
+        [Partition::OutputChannels, Partition::Pixels, Partition::Auto];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partition::OutputChannels => "channels",
+            Partition::Pixels => "pixels",
+            Partition::Auto => "auto",
+        }
+    }
+}
+
+/// Scale-up configuration: one square array of `pe_budget` PEs.
+///
+/// Panics if `pe_budget` is not a perfect square (the paper's sweep uses
+/// 64 * 4^i, always square).
+pub fn scale_up_cfg(base: &ArchConfig, pe_budget: u64) -> ArchConfig {
+    let dim = isqrt(pe_budget);
+    assert_eq!(dim * dim, pe_budget, "PE budget {pe_budget} is not square");
+    ArchConfig { array_h: dim, array_w: dim, ..base.clone() }
+}
+
+/// One node's share of a layer under output-channel partitioning across
+/// `nodes` nodes: the (maximal) per-node filter count, and how many nodes
+/// actually receive filters.
+pub fn partition_filters(layer: &LayerShape, nodes: u64) -> (u64, u64) {
+    let per_node = ceil_div(layer.num_filters, nodes);
+    let used = ceil_div(layer.num_filters, per_node);
+    (per_node, used)
+}
+
+/// The per-node sub-layer (same geometry, fewer output channels).
+pub fn node_layer(layer: &LayerShape, per_node_filters: u64) -> LayerShape {
+    LayerShape { num_filters: per_node_filters, ..layer.clone() }
+}
+
+/// Pixel partitioning: each node computes a horizontal stripe of the
+/// OFMAP (all channels). Returns the per-node sub-layer and the number
+/// of nodes that receive work.
+pub fn node_layer_pixels(layer: &LayerShape, nodes: u64) -> (LayerShape, u64) {
+    let eh = layer.ofmap_h();
+    let rows_per_node = ceil_div(eh, nodes);
+    let used = ceil_div(eh, rows_per_node);
+    // a stripe of `rows_per_node` output rows needs this many ifmap rows
+    let ifmap_h = (rows_per_node - 1) * layer.stride + layer.filt_h;
+    (LayerShape { ifmap_h, ..layer.clone() }, used)
+}
+
+/// Result of one scale-up vs scale-out comparison point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleComparison {
+    pub pe_budget: u64,
+    pub nodes: u64,
+    /// Runtime on the single big array.
+    pub up_cycles: u64,
+    /// Runtime of the slowest node (nodes run in parallel).
+    pub out_cycles: u64,
+    /// DRAM bandwidth demanded for *weights*, bytes/cycle (Fig 10).
+    pub up_weight_bw: f64,
+    pub out_weight_bw: f64,
+}
+
+impl ScaleComparison {
+    /// Fig 9's y-axis: runtime(scale-up) / runtime(scale-out);
+    /// < 1 means scale-up wins.
+    pub fn runtime_ratio(&self) -> f64 {
+        self.up_cycles as f64 / self.out_cycles as f64
+    }
+
+    /// Fig 10's y-axis: weight-bandwidth(up) / weight-bandwidth(out).
+    pub fn weight_bw_ratio(&self) -> f64 {
+        self.up_weight_bw / self.out_weight_bw
+    }
+}
+
+/// One scale-out design point: slowest-node runtime + aggregate weight
+/// DRAM bytes, under a given partition strategy.
+pub fn scale_out_point(
+    base: &ArchConfig,
+    layer: &LayerShape,
+    nodes: u64,
+    partition: Partition,
+) -> (u64, u64) {
+    let df = base.dataflow;
+    let node_cfg = ArchConfig { array_h: NODE_DIM, array_w: NODE_DIM, ..base.clone() };
+    match partition {
+        Partition::OutputChannels => {
+            let (per_node, used_nodes) = partition_filters(layer, nodes);
+            let nl = node_layer(layer, per_node);
+            // all busy nodes run the same-shaped sub-layer; the slowest
+            // (= any full node) bounds runtime
+            let cycles = df.timing(&nl, NODE_DIM, NODE_DIM).cycles;
+            let (node_dram, _) = memory::simulate(df, &nl, &node_cfg);
+            // no duplication: each node fetches distinct filters
+            (cycles, node_dram.filter_bytes * used_nodes)
+        }
+        Partition::Pixels => {
+            let (nl, used_nodes) = node_layer_pixels(layer, nodes);
+            let cycles = df.timing(&nl, NODE_DIM, NODE_DIM).cycles;
+            let (node_dram, _) = memory::simulate(df, &nl, &node_cfg);
+            // every node needs the FULL filter set — weight duplication
+            // is the price of pixel partitioning
+            (cycles, node_dram.filter_bytes * used_nodes)
+        }
+        Partition::Auto => {
+            let a = scale_out_point(base, layer, nodes, Partition::OutputChannels);
+            let b = scale_out_point(base, layer, nodes, Partition::Pixels);
+            if b.0 < a.0 { b } else { a }
+        }
+    }
+}
+
+/// Compare scale-up vs scale-out for one layer at one PE budget under a
+/// given scale-out partition strategy.
+///
+/// `base` fixes dataflow, scratchpad sizes and word size for both sides;
+/// scale-out nodes are 8x8 copies of `base`.
+pub fn compare_layer_with(
+    base: &ArchConfig,
+    layer: &LayerShape,
+    pe_budget: u64,
+    partition: Partition,
+) -> ScaleComparison {
+    assert!(pe_budget >= NODE_PES, "budget below one node");
+    let df = base.dataflow;
+
+    // --- scale-up ---------------------------------------------------------
+    let up = scale_up_cfg(base, pe_budget);
+    let up_cycles = df.timing(layer, up.array_h, up.array_w).cycles;
+    let (up_dram, _) = memory::simulate(df, layer, &up);
+    let up_weight_bw = up_dram.filter_bytes as f64 / up_cycles as f64;
+
+    // --- scale-out --------------------------------------------------------
+    let nodes = pe_budget / NODE_PES;
+    let (out_cycles, out_weight_bytes) = scale_out_point(base, layer, nodes, partition);
+    let out_weight_bw = out_weight_bytes as f64 / out_cycles as f64;
+
+    ScaleComparison {
+        pe_budget,
+        nodes,
+        up_cycles,
+        out_cycles,
+        up_weight_bw,
+        out_weight_bw,
+    }
+}
+
+/// The paper's comparison: output-channel partitioning (§IV-E).
+pub fn compare_layer(base: &ArchConfig, layer: &LayerShape, pe_budget: u64) -> ScaleComparison {
+    compare_layer_with(base, layer, pe_budget, Partition::OutputChannels)
+}
+
+/// Whole-topology comparison: layer runtimes sum (layers serialize),
+/// weight bandwidths aggregate per layer then average runtime-weighted.
+pub fn compare_topology(
+    base: &ArchConfig,
+    layers: &[LayerShape],
+    pe_budget: u64,
+) -> ScaleComparison {
+    let mut up_cycles = 0;
+    let mut out_cycles = 0;
+    let mut up_weight_bytes = 0f64;
+    let mut out_weight_bytes = 0f64;
+    let mut nodes = 0;
+    for layer in layers {
+        let c = compare_layer(base, layer, pe_budget);
+        up_cycles += c.up_cycles;
+        out_cycles += c.out_cycles;
+        up_weight_bytes += c.up_weight_bw * c.up_cycles as f64;
+        out_weight_bytes += c.out_weight_bw * c.out_cycles as f64;
+        nodes = c.nodes;
+    }
+    ScaleComparison {
+        pe_budget,
+        nodes,
+        up_cycles,
+        out_cycles,
+        up_weight_bw: up_weight_bytes / up_cycles as f64,
+        out_weight_bw: out_weight_bytes / out_cycles as f64,
+    }
+}
+
+/// The paper's sweep: 64 PEs to 16384 PEs, x4 per step.
+pub const PE_SWEEP: [u64; 5] = [64, 256, 1024, 4096, 16384];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::dataflow::Dataflow;
+
+    fn base(df: Dataflow) -> ArchConfig {
+        ArchConfig { dataflow: df, ..config::paper_default() }
+    }
+
+    #[test]
+    fn partition_covers_all_filters() {
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 100, 1);
+        for nodes in [1u64, 2, 3, 7, 16, 200] {
+            let (per, used) = partition_filters(&l, nodes);
+            assert!(per * used >= 100);
+            assert!(per * (used - 1) < 100);
+            assert!(used <= nodes);
+        }
+    }
+
+    #[test]
+    fn more_filters_than_nodes_uses_all_nodes() {
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 256, 1);
+        let (per, used) = partition_filters(&l, 16);
+        assert_eq!((per, used), (16, 16));
+    }
+
+    #[test]
+    fn fewer_filters_than_nodes_leaves_nodes_idle() {
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 4, 1);
+        let (per, used) = partition_filters(&l, 16);
+        assert_eq!((per, used), (1, 4));
+    }
+
+    #[test]
+    fn scale_up_cfg_is_square() {
+        let c = scale_up_cfg(&base(Dataflow::Os), 1024);
+        assert_eq!((c.array_h, c.array_w), (32, 32));
+    }
+
+    #[test]
+    #[should_panic(expected = "not square")]
+    fn non_square_budget_panics() {
+        scale_up_cfg(&base(Dataflow::Os), 100 * 64 + 1);
+    }
+
+    #[test]
+    fn both_sides_finish_and_ratio_positive() {
+        let l = LayerShape::conv("c", 32, 32, 3, 3, 32, 64, 1);
+        for df in Dataflow::ALL {
+            for &pe in &PE_SWEEP {
+                let c = compare_layer(&base(df), &l, pe);
+                assert!(c.up_cycles > 0 && c.out_cycles > 0);
+                assert!(c.runtime_ratio() > 0.0);
+                assert!(c.weight_bw_ratio() > 0.0, "{df} {pe}");
+            }
+        }
+    }
+
+    #[test]
+    fn poor_row_fit_favors_scale_out() {
+        // The paper's §IV-E mechanism ("scaling decision is tied to
+        // workloads"): when Npx barely spills the big array's rows
+        // (129 px on 128 rows => half-empty residual fold) but filters
+        // are plentiful, 8x8 nodes stay nearly fully mapped and
+        // scale-out wins.
+        let l = LayerShape::gemm("spill", 129, 64, 2048);
+        let c = compare_layer(&base(Dataflow::Os), &l, 16384);
+        assert!(
+            c.runtime_ratio() > 1.0,
+            "expected scale-out win: up={} out={}",
+            c.up_cycles,
+            c.out_cycles
+        );
+    }
+
+    #[test]
+    fn deep_windows_favor_scale_up() {
+        // ...and the converse: K-dominated layers with few filters per
+        // node leave scale-out columns idle.
+        let l = LayerShape::conv("w1", 19, 19, 3, 3, 256, 256, 1);
+        let c = compare_layer(&base(Dataflow::Os), &l, 16384);
+        assert!(c.runtime_ratio() < 1.0, "up={} out={}", c.up_cycles, c.out_cycles);
+    }
+
+    #[test]
+    fn pixel_partition_covers_all_output_rows() {
+        let l = LayerShape::conv("c", 30, 30, 3, 3, 8, 16, 1);
+        for nodes in [1u64, 2, 4, 7, 28, 100] {
+            let (nl, used) = node_layer_pixels(&l, nodes);
+            let rows_per_node = nl.ofmap_h();
+            assert!(rows_per_node * used >= l.ofmap_h(), "nodes={nodes}");
+            assert!(rows_per_node * (used - 1) < l.ofmap_h());
+            // stripe geometry preserves width/channels/filters
+            assert_eq!((nl.ifmap_w, nl.channels, nl.num_filters), (30, 8, 16));
+        }
+    }
+
+    #[test]
+    fn pixel_partition_duplicates_weights() {
+        // with pixel partitioning every node fetches the full filter
+        // set: aggregate weight traffic must exceed channel partitioning
+        let l = LayerShape::conv("c", 64, 64, 3, 3, 32, 64, 1);
+        let b = base(Dataflow::Os);
+        let (_, w_chan) = scale_out_point(&b, &l, 16, Partition::OutputChannels);
+        let (_, w_px) = scale_out_point(&b, &l, 16, Partition::Pixels);
+        assert!(w_px > w_chan, "px={w_px} chan={w_chan}");
+    }
+
+    #[test]
+    fn auto_partition_never_slower_than_either() {
+        let b = base(Dataflow::Os);
+        for l in [
+            LayerShape::conv("convish", 64, 64, 3, 3, 32, 8, 1), // few filters
+            LayerShape::conv("deep", 19, 19, 3, 3, 256, 256, 1), // many filters
+            LayerShape::fc("fc", 4, 512, 512),
+        ] {
+            let (c_auto, _) = scale_out_point(&b, &l, 64, Partition::Auto);
+            let (c_ch, _) = scale_out_point(&b, &l, 64, Partition::OutputChannels);
+            let (c_px, _) = scale_out_point(&b, &l, 64, Partition::Pixels);
+            assert_eq!(c_auto, c_ch.min(c_px), "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn few_filters_prefer_pixel_partition() {
+        // §IV-E: "the best strategy may differ from layer to layer
+        // depending on the number of filters vs channels" — with 8
+        // filters over 64 nodes, channel partitioning idles 56 nodes
+        let l = LayerShape::conv("fewfilt", 64, 64, 3, 3, 32, 8, 1);
+        let b = base(Dataflow::Os);
+        let (c_ch, _) = scale_out_point(&b, &l, 64, Partition::OutputChannels);
+        let (c_px, _) = scale_out_point(&b, &l, 64, Partition::Pixels);
+        assert!(c_px < c_ch, "px={c_px} ch={c_ch}");
+    }
+
+    #[test]
+    fn topology_comparison_accumulates() {
+        let layers = vec![
+            LayerShape::conv("a", 16, 16, 3, 3, 8, 32, 1),
+            LayerShape::conv("b", 14, 14, 3, 3, 32, 64, 1),
+        ];
+        let b = base(Dataflow::Os);
+        let t = compare_topology(&b, &layers, 1024);
+        let s: u64 = layers.iter().map(|l| compare_layer(&b, l, 1024).up_cycles).sum();
+        assert_eq!(t.up_cycles, s);
+    }
+}

@@ -1,0 +1,149 @@
+//! Flexible-dataflow study (§IV-B question 3: "Are we missing out a lot
+//! by employing fixed dataflows?").
+//!
+//! FlexFlow argues fixed dataflows waste energy/performance; the paper
+//! uses SCALE-Sim to test that for systolic arrays and concludes the
+//! loss is usually modest. This module quantifies it: simulate every
+//! layer under all three dataflows, report the per-layer winner and the
+//! topology-level saving of a (hypothetical, reconfiguration-free)
+//! flexible accelerator over each fixed choice.
+
+use crate::config::{ArchConfig, Topology};
+use crate::dataflow::Dataflow;
+
+use super::{LayerReport, Simulator};
+
+/// Per-layer best-dataflow pick.
+#[derive(Clone, Debug)]
+pub struct FlexLayer {
+    pub name: String,
+    pub best: Dataflow,
+    /// cycles under [os, ws, is].
+    pub cycles: [u64; 3],
+}
+
+/// Whole-topology flexible-vs-fixed comparison.
+#[derive(Clone, Debug)]
+pub struct FlexReport {
+    pub workload: String,
+    pub layers: Vec<FlexLayer>,
+    /// Total cycles under each fixed dataflow [os, ws, is].
+    pub fixed_cycles: [u64; 3],
+    /// Total cycles picking the best dataflow per layer.
+    pub flexible_cycles: u64,
+}
+
+impl FlexReport {
+    /// Speedup of per-layer flexibility over the best *fixed* dataflow —
+    /// the paper's §IV-B answer ("might not lead to significant losses")
+    /// predicts this stays small.
+    pub fn speedup_over_best_fixed(&self) -> f64 {
+        let best_fixed = *self.fixed_cycles.iter().min().unwrap();
+        best_fixed as f64 / self.flexible_cycles as f64
+    }
+
+    /// Speedup over the *worst* fixed dataflow — the risk of freezing
+    /// the wrong one.
+    pub fn speedup_over_worst_fixed(&self) -> f64 {
+        let worst = *self.fixed_cycles.iter().max().unwrap();
+        worst as f64 / self.flexible_cycles as f64
+    }
+
+    /// How many layers each dataflow wins: [os, ws, is].
+    pub fn wins(&self) -> [usize; 3] {
+        let mut w = [0usize; 3];
+        for l in &self.layers {
+            w[l.best as usize] += 1;
+        }
+        w
+    }
+}
+
+/// Run the flexible-dataflow study for one topology on one array config
+/// (the config's own `dataflow` field is ignored — all three run).
+pub fn flexible_study(cfg: &ArchConfig, topo: &Topology) -> FlexReport {
+    let sims: Vec<Simulator> = Dataflow::ALL
+        .iter()
+        .map(|&df| Simulator::new(ArchConfig { dataflow: df, ..cfg.clone() }))
+        .collect();
+    let mut layers = Vec::with_capacity(topo.layers.len());
+    let mut fixed = [0u64; 3];
+    let mut flexible = 0u64;
+    for layer in &topo.layers {
+        let reports: Vec<LayerReport> = sims.iter().map(|s| s.run_layer(layer)).collect();
+        let cycles = [
+            reports[0].timing.cycles,
+            reports[1].timing.cycles,
+            reports[2].timing.cycles,
+        ];
+        for (f, c) in fixed.iter_mut().zip(cycles) {
+            *f += c;
+        }
+        let best_i = (0..3).min_by_key(|&i| cycles[i]).unwrap();
+        flexible += cycles[best_i];
+        layers.push(FlexLayer {
+            name: layer.name.clone(),
+            best: Dataflow::ALL[best_i],
+            cycles,
+        });
+    }
+    FlexReport { workload: topo.name.clone(), layers, fixed_cycles: fixed, flexible_cycles: flexible }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::config;
+
+    fn topo() -> Topology {
+        Topology::new(
+            "mix",
+            vec![
+                // WS-friendly: huge Npx, small weights
+                LayerShape::conv("px_heavy", 64, 64, 1, 1, 8, 8, 1),
+                // IS-friendly: tiny Npx, huge weights
+                LayerShape::fc("w_heavy", 2, 1024, 1024),
+                // OS-friendly: deep window
+                LayerShape::conv("k_heavy", 12, 12, 3, 3, 128, 64, 1),
+            ],
+        )
+    }
+
+    #[test]
+    fn flexible_never_slower_than_any_fixed() {
+        let r = flexible_study(&config::paper_default(), &topo());
+        for f in r.fixed_cycles {
+            assert!(r.flexible_cycles <= f);
+        }
+        assert!(r.speedup_over_best_fixed() >= 1.0);
+        assert!(r.speedup_over_worst_fixed() >= r.speedup_over_best_fixed());
+    }
+
+    #[test]
+    fn per_layer_winners_are_minima() {
+        let r = flexible_study(&config::paper_default(), &topo());
+        for l in &r.layers {
+            let min = *l.cycles.iter().min().unwrap();
+            assert_eq!(l.cycles[l.best as usize], min, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn mixed_topology_has_multiple_winners() {
+        // the constructed topology exercises at least two dataflows
+        let cfg = ArchConfig { array_h: 16, array_w: 16, ..config::paper_default() };
+        let r = flexible_study(&cfg, &topo());
+        let distinct = r.wins().iter().filter(|&&w| w > 0).count();
+        assert!(distinct >= 2, "wins={:?}", r.wins());
+    }
+
+    #[test]
+    fn fixed_totals_sum_layer_cycles() {
+        let r = flexible_study(&config::paper_default(), &topo());
+        for i in 0..3 {
+            let s: u64 = r.layers.iter().map(|l| l.cycles[i]).sum();
+            assert_eq!(s, r.fixed_cycles[i]);
+        }
+    }
+}

@@ -1,0 +1,190 @@
+//! Per-layer / per-workload simulation orchestration — ties the dataflow
+//! timing, memory system and energy model into the reports SCALE-Sim's
+//! output files carry (Fig 1: "cycle accurate traffic traces and
+//! simulation summary").
+
+pub mod flex;
+
+use crate::arch::LayerShape;
+use crate::config::{ArchConfig, Topology};
+use crate::dataflow::Timing;
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::memory::{self, BandwidthReport, DramTraffic};
+
+/// Everything SCALE-Sim reports for one layer (§I: "latency, array
+/// utilization, SRAM accesses, DRAM accesses, DRAM bandwidth").
+#[derive(Clone, Debug, PartialEq)]
+pub struct LayerReport {
+    pub layer: LayerShape,
+    pub timing: Timing,
+    pub dram: DramTraffic,
+    pub bandwidth: BandwidthReport,
+    pub energy: EnergyBreakdown,
+}
+
+impl LayerReport {
+    pub fn name(&self) -> &str {
+        &self.layer.name
+    }
+}
+
+/// Aggregated report for a whole topology.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadReport {
+    pub workload: String,
+    pub layers: Vec<LayerReport>,
+}
+
+impl WorkloadReport {
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.timing.cycles).sum()
+    }
+
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.layer.macs()).sum()
+    }
+
+    /// Runtime-weighted overall array utilization.
+    pub fn overall_utilization(&self, total_pes: u64) -> f64 {
+        self.total_macs() as f64 / (total_pes * self.total_cycles()) as f64
+    }
+
+    pub fn total_dram(&self) -> DramTraffic {
+        let mut t = DramTraffic::default();
+        for l in &self.layers {
+            t.ifmap_bytes += l.dram.ifmap_bytes;
+            t.filter_bytes += l.dram.filter_bytes;
+            t.ofmap_bytes += l.dram.ofmap_bytes;
+        }
+        t
+    }
+
+    pub fn total_energy(&self) -> EnergyBreakdown {
+        let mut e = EnergyBreakdown::default();
+        for l in &self.layers {
+            e.compute_mj += l.energy.compute_mj;
+            e.sram_mj += l.energy.sram_mj;
+            e.dram_mj += l.energy.dram_mj;
+        }
+        e
+    }
+
+    /// Workload-level average DRAM read bandwidth (bytes/cycle) — the
+    /// quantity Fig 7 sweeps against scratchpad size.
+    pub fn avg_dram_read_bw(&self) -> f64 {
+        self.total_dram().read_bytes() as f64 / self.total_cycles() as f64
+    }
+
+    /// Peak per-layer stall-free read bandwidth across the workload.
+    pub fn peak_dram_read_bw(&self) -> f64 {
+        self.layers
+            .iter()
+            .map(|l| l.bandwidth.peak_read_bw)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// The simulator facade: one architecture configuration, reused across
+/// layers / topologies. Cheap to clone (configs are plain data).
+#[derive(Clone, Debug)]
+pub struct Simulator {
+    pub cfg: ArchConfig,
+    pub energy_model: EnergyModel,
+}
+
+impl Simulator {
+    pub fn new(cfg: ArchConfig) -> Self {
+        Simulator { cfg, energy_model: EnergyModel::default() }
+    }
+
+    /// Simulate one layer under the configured dataflow.
+    pub fn run_layer(&self, layer: &LayerShape) -> LayerReport {
+        let df = self.cfg.dataflow;
+        let timing = df.timing(layer, self.cfg.array_h, self.cfg.array_w);
+        let (dram, bandwidth) = memory::simulate(df, layer, &self.cfg);
+        let energy =
+            self.energy_model
+                .layer_energy(layer.macs(), &timing, &dram, self.cfg.word_bytes);
+        LayerReport { layer: layer.clone(), timing, dram, bandwidth, energy }
+    }
+
+    /// Simulate every layer of a topology in file order (§III-F:
+    /// parallel branches serialize in listed order).
+    pub fn run_topology(&self, topo: &Topology) -> WorkloadReport {
+        WorkloadReport {
+            workload: topo.name.clone(),
+            layers: topo.layers.iter().map(|l| self.run_layer(l)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::dataflow::Dataflow;
+
+    fn sim(df: Dataflow) -> Simulator {
+        let mut cfg = config::paper_default();
+        cfg.dataflow = df;
+        cfg.array_h = 16;
+        cfg.array_w = 16;
+        Simulator::new(cfg)
+    }
+
+    fn topo() -> Topology {
+        Topology::new(
+            "t",
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::conv("c2", 14, 14, 3, 3, 8, 16, 1),
+                LayerShape::fc("fc", 1, 256, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn workload_totals_sum_layers() {
+        let s = sim(Dataflow::Os);
+        let r = s.run_topology(&topo());
+        assert_eq!(r.layers.len(), 3);
+        let cyc: u64 = r.layers.iter().map(|l| l.timing.cycles).sum();
+        assert_eq!(r.total_cycles(), cyc);
+        assert_eq!(r.total_macs(), topo().total_macs());
+    }
+
+    #[test]
+    fn utilization_in_unit_interval() {
+        for df in Dataflow::ALL {
+            let s = sim(df);
+            let r = s.run_topology(&topo());
+            let u = r.overall_utilization(s.cfg.total_pes());
+            assert!(u > 0.0 && u <= 1.0, "{df}: {u}");
+        }
+    }
+
+    #[test]
+    fn energy_totals_consistent() {
+        let s = sim(Dataflow::Ws);
+        let r = s.run_topology(&topo());
+        let sum: f64 = r.layers.iter().map(|l| l.energy.total_mj()).sum();
+        assert!((r.total_energy().total_mj() - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn layer_report_matches_direct_calls() {
+        let s = sim(Dataflow::Is);
+        let l = LayerShape::conv("c", 12, 12, 3, 3, 4, 4, 1);
+        let rep = s.run_layer(&l);
+        assert_eq!(rep.timing, Dataflow::Is.timing(&l, 16, 16));
+        assert_eq!(rep.dram, memory::simulate(Dataflow::Is, &l, &s.cfg).0);
+    }
+
+    #[test]
+    fn avg_bw_definition() {
+        let s = sim(Dataflow::Os);
+        let r = s.run_topology(&topo());
+        let expect = r.total_dram().read_bytes() as f64 / r.total_cycles() as f64;
+        assert!((r.avg_dram_read_bw() - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,245 @@
+//! Design-space sweep engine (§IV methodology): run many (config, layer)
+//! simulation points across std threads and collect typed rows for the
+//! figure harnesses.
+//!
+//! tokio/rayon are unavailable offline; [`parallel_map`] is a small
+//! work-stealing-by-atomic-index scheduler over `std::thread::scope`,
+//! which is all a CPU-bound embarrassingly-parallel sweep needs.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::config::{ArchConfig, Topology};
+use crate::dataflow::Dataflow;
+use crate::sim::Simulator;
+
+/// Map `f` over `items` on `threads` OS threads, preserving order.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter().map(|t| f(t)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let collected = std::sync::Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let next = &next;
+            let f = &f;
+            let collected = &collected;
+            s.spawn(move || {
+                let mut local = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(&items[i])));
+                }
+                collected.lock().unwrap().extend(local);
+            });
+        }
+    });
+    let mut pairs = collected.into_inner().unwrap();
+    pairs.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(pairs.len(), n);
+    pairs.into_iter().map(|(_, r)| r).collect()
+}
+
+/// Default worker count: physical parallelism minus one, at least 1.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().saturating_sub(1).max(1)).unwrap_or(1)
+}
+
+/// One point of the Fig 5/6 sweep: workload x dataflow x square array.
+#[derive(Clone, Debug)]
+pub struct DataflowPoint {
+    pub workload: String,
+    pub dataflow: Dataflow,
+    pub array: u64,
+    pub cycles: u64,
+    pub utilization: f64,
+    pub energy_compute_mj: f64,
+    pub energy_memory_mj: f64,
+}
+
+/// Fig 5 + Fig 6 sweep: every workload under every dataflow on square
+/// arrays of the given dimensions.
+pub fn dataflow_sweep(
+    base: &ArchConfig,
+    topos: &[Topology],
+    arrays: &[u64],
+    threads: usize,
+) -> Vec<DataflowPoint> {
+    let mut jobs = Vec::new();
+    for t in topos {
+        for &df in &Dataflow::ALL {
+            for &n in arrays {
+                jobs.push((t, df, n));
+            }
+        }
+    }
+    parallel_map(&jobs, threads, |&(topo, df, n)| {
+        let cfg = ArchConfig { array_h: n, array_w: n, dataflow: df, ..base.clone() };
+        let sim = Simulator::new(cfg);
+        let r = sim.run_topology(topo);
+        let e = r.total_energy();
+        DataflowPoint {
+            workload: topo.name.clone(),
+            dataflow: df,
+            array: n,
+            cycles: r.total_cycles(),
+            utilization: r.overall_utilization(n * n),
+            energy_compute_mj: e.compute_mj,
+            energy_memory_mj: e.memory_mj(),
+        }
+    })
+}
+
+/// One point of the Fig 7 sweep: workload x scratchpad size.
+#[derive(Clone, Debug)]
+pub struct MemoryPoint {
+    pub workload: String,
+    pub sram_kb: u64,
+    pub avg_read_bw: f64,
+    pub dram_bytes: u64,
+}
+
+/// Fig 7 sweep: DRAM bandwidth requirement vs per-operand scratchpad
+/// size (the paper sweeps 32KB..2048KB for each of filter+IFMAP).
+pub fn memory_sweep(
+    base: &ArchConfig,
+    topos: &[Topology],
+    sram_kbs: &[u64],
+    threads: usize,
+) -> Vec<MemoryPoint> {
+    let mut jobs = Vec::new();
+    for t in topos {
+        for &kb in sram_kbs {
+            jobs.push((t, kb));
+        }
+    }
+    parallel_map(&jobs, threads, |&(topo, kb)| {
+        let cfg = ArchConfig { ifmap_sram_kb: kb, filter_sram_kb: kb, ..base.clone() };
+        let sim = Simulator::new(cfg);
+        let r = sim.run_topology(topo);
+        MemoryPoint {
+            workload: topo.name.clone(),
+            sram_kb: kb,
+            avg_read_bw: r.avg_dram_read_bw(),
+            dram_bytes: r.total_dram().total(),
+        }
+    })
+}
+
+/// One point of the Fig 8 sweep: workload x dataflow x aspect ratio.
+#[derive(Clone, Debug)]
+pub struct ShapePoint {
+    pub workload: String,
+    pub dataflow: Dataflow,
+    pub rows: u64,
+    pub cols: u64,
+    pub cycles: u64,
+}
+
+/// Fig 8 sweep: fixed PE count, shapes from tall to wide.
+pub fn shape_sweep(
+    base: &ArchConfig,
+    topos: &[Topology],
+    shapes: &[(u64, u64)],
+    threads: usize,
+) -> Vec<ShapePoint> {
+    let mut jobs = Vec::new();
+    for t in topos {
+        for &df in &Dataflow::ALL {
+            for &(r, c) in shapes {
+                jobs.push((t, df, r, c));
+            }
+        }
+    }
+    parallel_map(&jobs, threads, |&(topo, df, r, c)| {
+        let cfg = ArchConfig { array_h: r, array_w: c, dataflow: df, ..base.clone() };
+        let sim = Simulator::new(cfg);
+        ShapePoint {
+            workload: topo.name.clone(),
+            dataflow: df,
+            rows: r,
+            cols: c,
+            cycles: sim.run_topology(topo).total_cycles(),
+        }
+    })
+}
+
+/// The paper's Fig 8 shape ladder: 8x2048 .. 2048x8 (16384 PEs).
+pub fn fig8_shapes() -> Vec<(u64, u64)> {
+    let mut v = Vec::new();
+    let mut r = 8u64;
+    while r <= 2048 {
+        v.push((r, 16384 / r));
+        r *= 2;
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::config;
+
+    fn topo() -> Topology {
+        Topology::new("t", vec![LayerShape::conv("c", 16, 16, 3, 3, 4, 8, 1)])
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        assert!(parallel_map::<u64, u64, _>(&[], 4, |&x| x).is_empty());
+        assert_eq!(parallel_map(&[7u64], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let base = config::paper_default();
+        let topos = vec![topo()];
+        let serial = dataflow_sweep(&base, &topos, &[8, 16], 1);
+        let par = dataflow_sweep(&base, &topos, &[8, 16], 4);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.cycles, b.cycles);
+            assert_eq!(a.dataflow, b.dataflow);
+        }
+    }
+
+    #[test]
+    fn fig8_shapes_conserve_pes() {
+        let shapes = fig8_shapes();
+        assert_eq!(shapes.first(), Some(&(8, 2048)));
+        assert_eq!(shapes.last(), Some(&(2048, 8)));
+        assert!(shapes.iter().all(|&(r, c)| r * c == 16384));
+        assert_eq!(shapes.len(), 9);
+    }
+
+    #[test]
+    fn memory_sweep_bw_nonincreasing() {
+        let base = config::paper_default();
+        let topos = vec![topo()];
+        let pts = memory_sweep(&base, &topos, &[1, 8, 64, 512], 2);
+        for w in pts.windows(2) {
+            assert!(w[1].dram_bytes <= w[0].dram_bytes);
+        }
+    }
+}

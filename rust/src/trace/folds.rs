@@ -1,0 +1,211 @@
+//! Fold schedules: the sequence of stationary-operand mappings a dataflow
+//! performs for one layer (§III-B "the resources are time multiplexed").
+//!
+//! A [`Fold`] records *when* it runs (start cycle, duration), *how much*
+//! of the array it uses, and *which operand ranges* it touches. The
+//! iteration order contract is documented in [`crate::trace`]:
+//! the accumulation/reuse dimension is innermost.
+
+use crate::arch::LayerShape;
+use crate::dataflow::{is, os, ws, Dataflow};
+use crate::util::ceil_div;
+
+/// One stationary-operand mapping of the array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fold {
+    /// Sequence number (0-based, schedule order).
+    pub index: u64,
+    /// First cycle of this fold.
+    pub start: u64,
+    /// Duration in cycles.
+    pub cycles: u64,
+    /// Rows of the array actually mapped.
+    pub r_used: u64,
+    /// Columns of the array actually mapped.
+    pub c_used: u64,
+    /// Half-open range along the row dimension
+    /// (OS: output pixels; WS/IS: window elements).
+    pub row_range: (u64, u64),
+    /// Half-open range along the column dimension
+    /// (OS/WS: filters; IS: output pixels).
+    pub col_range: (u64, u64),
+}
+
+/// Iterator over the fold schedule; O(1) memory, exact start cycles.
+pub struct FoldIter {
+    df: Dataflow,
+    // totals along row/col fold dimensions
+    total_r: u64,
+    total_c: u64,
+    rows: u64,
+    cols: u64,
+    // the streamed-operand count fixing per-fold duration (OS: K,
+    // WS: Npx, IS: Nf)
+    stream: u64,
+    // outer/inner fold grid: outer==row dim for OS, col dim for WS/IS
+    outer_count: u64,
+    inner_count: u64,
+    outer: u64,
+    inner: u64,
+    index: u64,
+    cycle: u64,
+}
+
+/// Build the fold schedule for `layer` under `df` on a `rows x cols` array.
+pub fn fold_schedule(df: Dataflow, layer: &LayerShape, rows: u64, cols: u64) -> FoldIter {
+    let (npx, k, nf) = layer.gemm_view();
+    let (total_r, total_c, stream) = match df {
+        Dataflow::Os => (npx, nf, k),
+        Dataflow::Ws => (k, nf, npx),
+        Dataflow::Is => (k, npx, nf),
+    };
+    let row_folds = ceil_div(total_r, rows);
+    let col_folds = ceil_div(total_c, cols);
+    // OS: row-outer (pixels advance slowly, filters cycle);
+    // WS/IS: col-outer (stationary cols advance slowly, window folds
+    // accumulate innermost).
+    let (outer_count, inner_count) = match df {
+        Dataflow::Os => (row_folds, col_folds),
+        Dataflow::Ws | Dataflow::Is => (col_folds, row_folds),
+    };
+    FoldIter {
+        df,
+        total_r,
+        total_c,
+        rows,
+        cols,
+        stream,
+        outer_count,
+        inner_count,
+        outer: 0,
+        inner: 0,
+        index: 0,
+        cycle: 0,
+    }
+}
+
+impl FoldIter {
+    fn range(total: u64, tile: u64, idx: u64) -> (u64, u64) {
+        let lo = idx * tile;
+        (lo, (lo + tile).min(total))
+    }
+}
+
+impl Iterator for FoldIter {
+    type Item = Fold;
+
+    fn next(&mut self) -> Option<Fold> {
+        if self.outer >= self.outer_count {
+            return None;
+        }
+        let (row_idx, col_idx) = match self.df {
+            Dataflow::Os => (self.outer, self.inner),
+            Dataflow::Ws | Dataflow::Is => (self.inner, self.outer),
+        };
+        let row_range = Self::range(self.total_r, self.rows, row_idx);
+        let col_range = Self::range(self.total_c, self.cols, col_idx);
+        let r_used = row_range.1 - row_range.0;
+        let c_used = col_range.1 - col_range.0;
+        let cycles = match self.df {
+            Dataflow::Os => os::fold_cycles(r_used, c_used, self.stream),
+            Dataflow::Ws => ws::fold_cycles(r_used, c_used, self.stream),
+            Dataflow::Is => is::fold_cycles(r_used, c_used, self.stream),
+        };
+        let fold = Fold {
+            index: self.index,
+            start: self.cycle,
+            cycles,
+            r_used,
+            c_used,
+            row_range,
+            col_range,
+        };
+        self.index += 1;
+        self.cycle += cycles;
+        self.inner += 1;
+        if self.inner == self.inner_count {
+            self.inner = 0;
+            self.outer += 1;
+        }
+        Some(fold)
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let total = (self.outer_count * self.inner_count - self.index) as usize;
+        (total, Some(total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layer() -> LayerShape {
+        LayerShape::conv("c", 10, 10, 3, 3, 4, 10, 1)
+    }
+
+    #[test]
+    fn schedule_covers_all_folds_and_cycles() {
+        let l = layer();
+        for df in Dataflow::ALL {
+            let t = df.timing(&l, 8, 8);
+            let folds: Vec<Fold> = fold_schedule(df, &l, 8, 8).collect();
+            assert_eq!(folds.len() as u64, t.row_folds * t.col_folds, "{df}");
+            let total: u64 = folds.iter().map(|f| f.cycles).sum();
+            assert_eq!(total, t.cycles, "{df}");
+            // starts are contiguous and ordered
+            let mut expect = 0;
+            for f in &folds {
+                assert_eq!(f.start, expect, "{df} fold {}", f.index);
+                expect += f.cycles;
+            }
+        }
+    }
+
+    #[test]
+    fn ranges_tile_the_operand_dims() {
+        let l = layer();
+        for df in Dataflow::ALL {
+            let (npx, k, nf) = l.gemm_view();
+            let (tr, tc) = match df {
+                Dataflow::Os => (npx, nf),
+                Dataflow::Ws => (k, nf),
+                Dataflow::Is => (k, npx),
+            };
+            let mut covered = 0u64;
+            for f in fold_schedule(df, &l, 8, 8) {
+                assert!(f.row_range.1 <= tr && f.col_range.1 <= tc);
+                assert_eq!(f.r_used, f.row_range.1 - f.row_range.0);
+                assert_eq!(f.c_used, f.col_range.1 - f.col_range.0);
+                covered += f.r_used * f.c_used;
+            }
+            assert_eq!(covered, tr * tc, "{df}");
+        }
+    }
+
+    #[test]
+    fn os_is_row_outer() {
+        // first col_folds folds share the same row_range under OS
+        let l = LayerShape::gemm("mm", 20, 8, 20); // 3x3 folds on 8x8
+        let folds: Vec<Fold> = fold_schedule(Dataflow::Os, &l, 8, 8).collect();
+        assert_eq!(folds[0].row_range, folds[1].row_range);
+        assert_ne!(folds[0].col_range, folds[1].col_range);
+    }
+
+    #[test]
+    fn ws_is_col_outer() {
+        let l = LayerShape::gemm("mm", 20, 20, 20); // K folds inner
+        let folds: Vec<Fold> = fold_schedule(Dataflow::Ws, &l, 8, 8).collect();
+        assert_eq!(folds[0].col_range, folds[1].col_range);
+        assert_ne!(folds[0].row_range, folds[1].row_range);
+    }
+
+    #[test]
+    fn size_hint_is_exact() {
+        let l = layer();
+        let it = fold_schedule(Dataflow::Os, &l, 8, 8);
+        let (lo, hi) = it.size_hint();
+        assert_eq!(Some(lo), hi);
+        assert_eq!(lo, it.count());
+    }
+}

@@ -1,0 +1,288 @@
+//! Cycle-accurate SRAM address-trace generation (§III-E steps 1–2).
+//!
+//! SCALE-Sim's inside-out model: assume the PE array never stalls, and
+//! emit the cycle-stamped SRAM read addresses that the top and left edges
+//! must receive for that to hold, plus the OFMAP write trace. Runtime is
+//! the cycle of the last trace event + 1; parsing the traffic yields the
+//! utilization and SRAM access counts.
+//!
+//! Two granularities are exposed:
+//!
+//! * [`fold_schedule`] — the O(#folds) schedule of stationary-operand
+//!   mappings (start cycle, duration, operand ranges). The memory model
+//!   ([`crate::memory`]) and the scale-out engine consume this.
+//! * [`generate`] — the full per-cycle, per-port address trace (one event
+//!   per SRAM word moved), streamed into a caller-supplied sink so that
+//!   no trace is ever materialized unless the user dumps csv. Unit tests
+//!   assert event counts and the final cycle agree *exactly* with the
+//!   closed-form [`crate::dataflow::Timing`].
+//!
+//! Fold iteration order (documented contract, relied on by `memory`):
+//! OS walks output-pixel folds outer / filter folds inner; WS walks
+//! filter folds outer / window folds inner; IS walks window-pixel folds
+//! outer(cols) / window-element folds inner — i.e. the accumulation
+//! dimension is always innermost so partial sums retire as early as
+//! possible (§III-C's OFMAP partition holds one fold-group of partials).
+
+mod addr;
+pub mod banks;
+mod folds;
+pub mod writer;
+
+pub use addr::AddressMap;
+pub use banks::{bank_analysis, BankReport};
+pub use folds::{fold_schedule, Fold, FoldIter};
+pub use writer::{port_trace, PortTrace};
+
+use crate::arch::LayerShape;
+use crate::config::ArchConfig;
+use crate::dataflow::Dataflow;
+
+/// One SRAM port event class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Access {
+    /// Left-edge (OS/WS) or top-edge (IS) ifmap word read.
+    IfmapRead,
+    /// Top-edge (OS/WS fill) or left-edge (IS stream) filter word read.
+    FilterRead,
+    /// OFMAP (possibly partial) word write.
+    OfmapWrite,
+    /// Partial-sum re-read for accumulation across window folds (WS/IS).
+    OfmapRead,
+}
+
+/// Generate the full cycle-accurate trace for one layer.
+///
+/// Events are emitted fold-by-fold; within a fold, port-major. The sink
+/// receives `(cycle, access, address)`. Addresses follow [`AddressMap`]
+/// (operand offsets from the config, row-major layouts).
+pub fn generate(
+    df: Dataflow,
+    layer: &LayerShape,
+    cfg: &ArchConfig,
+    mut sink: impl FnMut(u64, Access, u64),
+) {
+    let amap = AddressMap::new(layer, cfg);
+    let (npx, k, nf) = layer.gemm_view();
+    for fold in fold_schedule(df, layer, cfg.array_h, cfg.array_w) {
+        let b = fold.start;
+        let (r, c) = (fold.r_used, fold.c_used);
+        match df {
+            Dataflow::Os => {
+                // rows <-> output px [row_range), cols <-> filters [col_range)
+                let (p0, _) = fold.row_range;
+                let (f0, _) = fold.col_range;
+                for i in 0..r {
+                    let base = b + i;
+                    amap.walk_window(p0 + i, 0, k, |kk, addr| {
+                        sink(base + kk, Access::IfmapRead, addr);
+                    });
+                }
+                for j in 0..c {
+                    let base = b + j;
+                    let a0 = amap.filter(f0 + j, 0);
+                    for kk in 0..k {
+                        sink(base + kk, Access::FilterRead, a0 + kk);
+                    }
+                }
+                for i in 0..r {
+                    for j in 0..c {
+                        let cyc = b + j + (k - 1) + (r - 1) + (r - i);
+                        sink(cyc, Access::OfmapWrite, amap.ofmap(p0 + i, f0 + j));
+                    }
+                }
+            }
+            Dataflow::Ws => {
+                // rows <-> window elems [row_range), cols <-> filters
+                let (e0, _) = fold.row_range;
+                let (f0, _) = fold.col_range;
+                // fill: bottom row's weight first
+                for t in 0..r {
+                    let e = e0 + (r - 1 - t);
+                    for j in 0..c {
+                        sink(b + t, Access::FilterRead, amap.filter(f0 + j, e));
+                    }
+                }
+                // stream all Npx windows, skewed by row (element-range
+                // walk per window avoids per-event div/mod)
+                for p in 0..npx {
+                    let base = b + r + p;
+                    amap.walk_window(p, e0, e0 + r, |i, addr| {
+                        sink(base + i, Access::IfmapRead, addr);
+                    });
+                }
+                // outputs exit per (window, column)
+                for p in 0..npx {
+                    for j in 0..c {
+                        let cyc = b + 2 * r + p + j;
+                        let a = amap.ofmap(p, f0 + j);
+                        if e0 > 0 {
+                            sink(cyc, Access::OfmapRead, a);
+                        }
+                        sink(cyc, Access::OfmapWrite, a);
+                    }
+                }
+            }
+            Dataflow::Is => {
+                // rows <-> window elems, cols <-> windows (output px)
+                let (e0, _) = fold.row_range;
+                let (p0, _) = fold.col_range;
+                for j in 0..c {
+                    // per-window element walk, reversed to bottom-first
+                    // fill cycles (cycle = b + (r-1-i))
+                    amap.walk_window(p0 + j, e0, e0 + r, |i, addr| {
+                        sink(b + (r - 1 - i), Access::IfmapRead, addr);
+                    });
+                }
+                for f in 0..nf {
+                    let base = b + r + f;
+                    let a0 = amap.filter(f, e0);
+                    for i in 0..r {
+                        sink(base + i, Access::FilterRead, a0 + i);
+                    }
+                }
+                for f in 0..nf {
+                    for j in 0..c {
+                        let cyc = b + 2 * r + f + j;
+                        let a = amap.ofmap(p0 + j, f);
+                        if e0 > 0 {
+                            sink(cyc, Access::OfmapRead, a);
+                        }
+                        sink(cyc, Access::OfmapWrite, a);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Trace summary produced by a single streaming pass (§III-E step 2:
+/// "parse the generated traffic traces").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub last_cycle: u64,
+    pub ifmap_reads: u64,
+    pub filter_reads: u64,
+    pub ofmap_writes: u64,
+    pub ofmap_reads: u64,
+}
+
+impl TraceSummary {
+    /// Runtime in cycles (last event + 1).
+    pub fn cycles(&self) -> u64 {
+        self.last_cycle + 1
+    }
+}
+
+/// Run [`generate`] with a counting sink.
+pub fn summarize(df: Dataflow, layer: &LayerShape, cfg: &ArchConfig) -> TraceSummary {
+    let mut s = TraceSummary::default();
+    generate(df, layer, cfg, |cycle, access, _addr| {
+        s.last_cycle = s.last_cycle.max(cycle);
+        match access {
+            Access::IfmapRead => s.ifmap_reads += 1,
+            Access::FilterRead => s.filter_reads += 1,
+            Access::OfmapWrite => s.ofmap_writes += 1,
+            Access::OfmapRead => s.ofmap_reads += 1,
+        }
+    });
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn small_cfg(rows: u64, cols: u64) -> ArchConfig {
+        ArchConfig { array_h: rows, array_w: cols, ..config::paper_default() }
+    }
+
+    fn layers() -> Vec<LayerShape> {
+        vec![
+            LayerShape::gemm("mm8", 8, 8, 8),
+            LayerShape::gemm("mm_resid", 9, 10, 11),
+            LayerShape::conv("conv", 8, 8, 3, 3, 4, 6, 1),
+            LayerShape::conv("strided", 9, 9, 3, 3, 2, 5, 2),
+            LayerShape::fc("fc", 1, 40, 12),
+        ]
+    }
+
+    #[test]
+    fn trace_agrees_with_analytical_for_all_dataflows() {
+        for layer in layers() {
+            for df in Dataflow::ALL {
+                for &(r, c) in &[(8u64, 8u64), (4, 8), (8, 4), (16, 3)] {
+                    let cfg = small_cfg(r, c);
+                    let t = df.timing(&layer, r, c);
+                    let s = summarize(df, &layer, &cfg);
+                    assert_eq!(s.cycles(), t.cycles, "{df} {} {r}x{c} cycles", layer.name);
+                    assert_eq!(s.ifmap_reads, t.sram_reads_ifmap, "{df} {} ifmap", layer.name);
+                    assert_eq!(s.filter_reads, t.sram_reads_filter, "{df} {} filter", layer.name);
+                    assert_eq!(s.ofmap_writes, t.sram_writes_ofmap, "{df} {} ofwrites", layer.name);
+                    assert_eq!(s.ofmap_reads, t.sram_reads_ofmap, "{df} {} ofreads", layer.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn addresses_stay_in_operand_regions() {
+        let layer = LayerShape::conv("conv", 8, 8, 3, 3, 4, 6, 1);
+        let cfg = small_cfg(8, 8);
+        generate(Dataflow::Os, &layer, &cfg, |_cyc, access, addr| match access {
+            Access::IfmapRead => {
+                assert!(addr >= cfg.ifmap_offset);
+                assert!(addr < cfg.ifmap_offset + layer.ifmap_elems());
+            }
+            Access::FilterRead => {
+                assert!(addr >= cfg.filter_offset);
+                assert!(addr < cfg.filter_offset + layer.filter_elems());
+            }
+            Access::OfmapWrite | Access::OfmapRead => {
+                assert!(addr >= cfg.ofmap_offset);
+                assert!(addr < cfg.ofmap_offset + layer.ofmap_elems());
+            }
+        });
+    }
+
+    #[test]
+    fn ofmap_written_exactly_once_per_element_os() {
+        let layer = LayerShape::conv("conv", 6, 6, 3, 3, 2, 4, 1);
+        let cfg = small_cfg(8, 8);
+        let mut seen = std::collections::HashMap::new();
+        generate(Dataflow::Os, &layer, &cfg, |_c, a, addr| {
+            if a == Access::OfmapWrite {
+                *seen.entry(addr).or_insert(0u32) += 1;
+            }
+        });
+        assert_eq!(seen.len() as u64, layer.ofmap_elems());
+        assert!(seen.values().all(|&n| n == 1));
+    }
+
+    #[test]
+    fn ws_partial_sums_rewrite_same_addresses() {
+        // K folds: every ofmap address written row_folds times under WS
+        let layer = LayerShape::gemm("mm", 4, 20, 4); // K=20 on 8 rows -> 3 folds
+        let cfg = small_cfg(8, 8);
+        let mut writes = std::collections::HashMap::new();
+        generate(Dataflow::Ws, &layer, &cfg, |_c, a, addr| {
+            if a == Access::OfmapWrite {
+                *writes.entry(addr).or_insert(0u32) += 1;
+            }
+        });
+        assert!(writes.values().all(|&n| n == 3), "{writes:?}");
+    }
+
+    #[test]
+    fn events_fit_within_runtime() {
+        for df in Dataflow::ALL {
+            let layer = LayerShape::conv("c", 7, 7, 3, 3, 3, 5, 1);
+            let cfg = small_cfg(4, 4);
+            let cycles = df.timing(&layer, 4, 4).cycles;
+            generate(df, &layer, &cfg, |cyc, _, _| {
+                assert!(cyc < cycles, "{df}: event at {cyc} >= runtime {cycles}");
+            });
+        }
+    }
+}

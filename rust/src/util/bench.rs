@@ -1,0 +1,92 @@
+//! Criterion-style micro-bench timing for the `harness = false` bench
+//! binaries (criterion itself is unavailable offline).
+//!
+//! Provides warmup, repeated measurement, and median/mean/min reporting in
+//! a stable, grep-able one-line format:
+//!
+//! ```text
+//! bench <name> ... median 1.234ms mean 1.240ms min 1.201ms (20 iters)
+//! ```
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn line(&self) -> String {
+        format!(
+            "bench {:<48} median {:>12?} mean {:>12?} min {:>12?} ({} iters)",
+            self.name, self.median, self.mean, self.min, self.iters
+        )
+    }
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Time `f` with `warmup` throwaway runs then `iters` measured runs.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let total: Duration = samples.iter().sum();
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        median: samples[iters / 2],
+        mean: total / iters as u32,
+        min: samples[0],
+        max: samples[iters - 1],
+    };
+    println!("{}", stats.line());
+    stats
+}
+
+/// Auto-calibrating variant: picks an iteration count so the measured
+/// phase lasts roughly `target`.
+pub fn bench_auto<T>(name: &str, target: Duration, mut f: impl FnMut() -> T) -> BenchStats {
+    let t0 = Instant::now();
+    black_box(f());
+    let one = t0.elapsed().max(Duration::from_nanos(100));
+    let iters = (target.as_nanos() / one.as_nanos()).clamp(3, 1000) as usize;
+    bench(name, 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop_sum", 1, 5, || (0..1000u64).sum::<u64>());
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.line().contains("noop_sum"));
+    }
+
+    #[test]
+    fn bench_auto_caps_iters() {
+        let s = bench_auto("noop", Duration::from_millis(5), || 1u64 + 1);
+        assert!(s.iters >= 3 && s.iters <= 1000);
+    }
+}

@@ -1,0 +1,95 @@
+//! Tiny csv reader/writer (the `csv` crate is unavailable offline).
+//!
+//! Handles the subset SCALE-Sim's file formats need: comma separation,
+//! optional header row, whitespace trimming, `#` comment lines, and
+//! trailing commas (the original SCALE-Sim topology files end rows with
+//! one).
+
+use std::io::Write;
+use std::path::Path;
+
+/// Parse csv text into trimmed string cells, skipping blank/comment lines.
+pub fn parse(text: &str) -> Vec<Vec<String>> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(|line| {
+            let mut cells: Vec<String> =
+                line.split(',').map(|c| c.trim().to_string()).collect();
+            // tolerate a single trailing comma (original tool's files)
+            if cells.last().is_some_and(|c| c.is_empty()) {
+                cells.pop();
+            }
+            cells
+        })
+        .collect()
+}
+
+/// Incremental csv writer.
+pub struct CsvWriter {
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn new(header: &[&str]) -> Self {
+        let mut w = CsvWriter { buf: String::new(), cols: header.len() };
+        w.push_raw(header.iter().map(|s| s.to_string()).collect());
+        w
+    }
+
+    fn push_raw(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.cols, "row width mismatch");
+        self.buf.push_str(&cells.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        self.push_raw(cells.to_vec());
+    }
+
+    pub fn row_display(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.push_raw(cells.iter().map(|c| c.to_string()).collect());
+    }
+
+    pub fn as_str(&self) -> &str {
+        &self.buf
+    }
+
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.buf.as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_skips_comments_and_blanks() {
+        let rows = parse("# hi\n\na, b ,c\n1,2,3,\n");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], vec!["a", "b", "c"]);
+        assert_eq!(rows[1], vec!["1", "2", "3"]); // trailing comma dropped
+    }
+
+    #[test]
+    fn writer_round_trips() {
+        let mut w = CsvWriter::new(&["x", "y"]);
+        w.row(&["1".into(), "2".into()]);
+        w.row_display(&[&3u64, &4.5f64]);
+        let rows = parse(w.as_str());
+        assert_eq!(rows[2], vec!["3", "4.5"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn writer_rejects_ragged_rows() {
+        let mut w = CsvWriter::new(&["x", "y"]);
+        w.row(&["1".into()]);
+    }
+}

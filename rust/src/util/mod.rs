@@ -1,0 +1,77 @@
+//! Small self-contained utilities: deterministic RNG, a mini property-test
+//! harness (proptest is unavailable offline), a criterion-style bench
+//! timer, and csv helpers. Everything here is std-only.
+
+pub mod bench;
+pub mod csv;
+pub mod prop;
+pub mod rng;
+
+/// Ceiling division for unsigned integers.
+#[inline]
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+/// Integer square root (floor).
+pub fn isqrt(n: u64) -> u64 {
+    if n < 2 {
+        return n;
+    }
+    let mut x = (n as f64).sqrt() as u64;
+    // fix up float error (checked ops: x*x can overflow near u64::MAX)
+    while x.checked_mul(x).is_none_or(|v| v > n) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).is_some_and(|v| v <= n) {
+        x += 1;
+    }
+    x
+}
+
+/// Format a byte count human-readably (KB/MB binary).
+pub fn fmt_bytes(b: u64) -> String {
+    const KB: f64 = 1024.0;
+    let b = b as f64;
+    if b >= KB * KB * KB {
+        format!("{:.2} GiB", b / (KB * KB * KB))
+    } else if b >= KB * KB {
+        format!("{:.2} MiB", b / (KB * KB))
+    } else if b >= KB {
+        format!("{:.2} KiB", b / KB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+        assert_eq!(ceil_div(u64::MAX, 1), u64::MAX);
+    }
+
+    #[test]
+    fn isqrt_exact_and_floor() {
+        for n in 0..2000u64 {
+            let r = isqrt(n);
+            assert!(r * r <= n && (r + 1) * (r + 1) > n, "n={n} r={r}");
+        }
+        assert_eq!(isqrt(16384), 128);
+        assert_eq!(isqrt(u64::MAX), u32::MAX as u64);
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

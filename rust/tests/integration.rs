@@ -1,0 +1,187 @@
+//! Cross-module integration tests: the paper's qualitative claims must
+//! hold end-to-end through config -> simulator -> reports.
+
+use scale_sim::config::{self, workloads, ArchConfig, Topology};
+use scale_sim::coordinator::{run, RunSpec};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::scaleout;
+use scale_sim::sim::Simulator;
+use scale_sim::sweep;
+use scale_sim::LayerShape;
+
+fn suite_cycles(df: Dataflow, array: u64, topo: &Topology) -> u64 {
+    let cfg = ArchConfig { array_h: array, array_w: array, dataflow: df, ..config::paper_default() };
+    Simulator::new(cfg).run_topology(topo).total_cycles()
+}
+
+#[test]
+fn w2_deepspeech_prefers_ws_over_is() {
+    // §IV-B: "WS and IS are clear winners respectively in these
+    // workloads [W2, W7]... invariant of the size of the array"
+    let topo = workloads::builtin("deepspeech2").unwrap();
+    for n in [128, 64, 32, 16, 8] {
+        let ws = suite_cycles(Dataflow::Ws, n, &topo);
+        let is = suite_cycles(Dataflow::Is, n, &topo);
+        assert!(ws < is, "{n}x{n}: ws={ws} is={is}");
+    }
+}
+
+#[test]
+fn w7_transformer_prefers_is_over_ws() {
+    let topo = workloads::builtin("transformer").unwrap();
+    for n in [128, 64, 32, 16, 8] {
+        let ws = suite_cycles(Dataflow::Ws, n, &topo);
+        let is = suite_cycles(Dataflow::Is, n, &topo);
+        assert!(is < ws, "{n}x{n}: ws={ws} is={is}");
+    }
+}
+
+#[test]
+fn fig7_bandwidth_curves_have_knees() {
+    // Fig 7(c): NCF's operands are tiny — its DRAM requirement stops
+    // improving at very small scratchpads; Fig 7(d): SentimentCNN keeps
+    // improving to larger sizes than NCF.
+    let base = config::paper_default();
+    let bw = |name: &str, kb: u64| {
+        let cfg = ArchConfig { ifmap_sram_kb: kb, filter_sram_kb: kb, ..base.clone() };
+        Simulator::new(cfg)
+            .run_topology(&workloads::builtin(name).unwrap())
+            .avg_dram_read_bw()
+    };
+    // NCF flat beyond 64KB
+    let ncf_small = bw("ncf", 64);
+    let ncf_big = bw("ncf", 2048);
+    assert!(ncf_small / ncf_big < 1.05, "ncf should be flat: {ncf_small} vs {ncf_big}");
+    // SentimentCNN still improving from 256K to 2048K
+    let s_256 = bw("sentimentcnn", 256);
+    let s_2048 = bw("sentimentcnn", 2048);
+    assert!(s_256 / s_2048 > 1.05, "sentimentcnn should keep improving: {s_256} vs {s_2048}");
+}
+
+#[test]
+fn fig9_common_case_scale_up_wins() {
+    // §IV-E: "For the common case scaled-up implementation turns out to
+    // be the best in terms of performance" — assert on the majority of
+    // the MLPerf suite under OS at 16384 PEs.
+    let base = config::paper_default();
+    let mut up_wins = 0;
+    let mut total = 0;
+    for t in workloads::mlperf_suite() {
+        let c = scaleout::compare_topology(&base, &t.layers, 16384);
+        total += 1;
+        if c.runtime_ratio() < 1.0 {
+            up_wins += 1;
+        }
+    }
+    assert!(up_wins * 2 > total, "scale-up should win the common case: {up_wins}/{total}");
+}
+
+#[test]
+fn fig8_square_arrays_do_well_for_common_case() {
+    // §IV-D: "square aspect ratios perform well for the common case" —
+    // for most (workload, dataflow) pairs the 128x128 point is within 2x
+    // of the best shape.
+    let base = config::paper_default();
+    let topos = workloads::mlperf_suite();
+    let shapes = sweep::fig8_shapes();
+    let pts = sweep::shape_sweep(&base, &topos, &shapes, sweep::default_threads());
+    let mut good = 0;
+    let mut total = 0;
+    for t in &topos {
+        for df in Dataflow::ALL {
+            let series: Vec<&sweep::ShapePoint> = pts
+                .iter()
+                .filter(|p| p.workload == t.name && p.dataflow == df)
+                .collect();
+            let best = series.iter().map(|p| p.cycles).min().unwrap();
+            let square = series.iter().find(|p| p.rows == 128).unwrap().cycles;
+            total += 1;
+            if square < 2 * best {
+                good += 1;
+            }
+        }
+    }
+    assert!(good * 4 >= total * 3, "square good for common case: {good}/{total}");
+}
+
+#[test]
+fn os_dominates_most_mlperf_points_like_fig5() {
+    // Fig 5 "at a glance": OS outperforms the other two dataflows for
+    // the bulk of (workload, array) points.
+    let mut os_wins = 0;
+    let mut total = 0;
+    for t in workloads::mlperf_suite() {
+        for n in [128, 64, 32, 16, 8] {
+            let os = suite_cycles(Dataflow::Os, n, &t);
+            let ws = suite_cycles(Dataflow::Ws, n, &t);
+            let is = suite_cycles(Dataflow::Is, n, &t);
+            total += 1;
+            if os <= ws && os <= is {
+                os_wins += 1;
+            }
+        }
+    }
+    // strict majority; our WS model edges OS on very-large-Npx conv
+    // layers (documented deviation, EXPERIMENTS.md §Fig5)
+    assert!(os_wins * 2 > total, "OS should win the majority of points: {os_wins}/{total}");
+}
+
+#[test]
+fn cfg_file_to_reports_round_trip() {
+    let dir = std::env::temp_dir().join(format!("scale_sim_int_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    // write a cfg + topology, load through the front end, run, check files
+    let topo_path = dir.join("tiny.csv");
+    std::fs::write(
+        &topo_path,
+        "Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides,\n\
+         c1, 12, 12, 3, 3, 4, 8, 1,\n",
+    )
+    .unwrap();
+    let cfg_path = dir.join("run.cfg");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            "[general]\nrun_name = int\n[architecture_presets]\nArrayHeight: 16\nArrayWidth: 16\nDataflow: ws\nTopology: {}\n",
+            topo_path.display()
+        ),
+    )
+    .unwrap();
+
+    let cfg = ArchConfig::from_file(&cfg_path).unwrap();
+    assert_eq!(cfg.dataflow, Dataflow::Ws);
+    let topo = Topology::from_file(cfg.topology_path.as_ref().unwrap()).unwrap();
+    let mut spec = RunSpec::new(cfg, topo);
+    spec.out_dir = Some(dir.join("out"));
+    spec.dump_traces = true;
+    let out = run(&spec).unwrap();
+    assert_eq!(out.report.layers.len(), 1);
+    assert!(dir.join("out/summary.md").exists());
+    assert!(dir.join("out/traces/c1_sram_trace.csv").exists());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn gemm_layer_equals_explicit_conv_encoding() {
+    // the §III-A encoding: FC as 1x1 conv must time identically to the
+    // same GEMM passed through LayerShape::gemm
+    let a = LayerShape::gemm("g", 64, 256, 32);
+    let b = LayerShape::conv("c", 64, 1, 1, 1, 256, 32, 1);
+    for df in Dataflow::ALL {
+        assert_eq!(df.timing(&a, 16, 16).cycles, df.timing(&b, 16, 16).cycles);
+    }
+}
+
+#[test]
+fn mlperf_suite_simulates_quickly_and_sanely() {
+    let cfg = config::paper_default();
+    let sim = Simulator::new(cfg.clone());
+    for t in workloads::mlperf_suite() {
+        let r = sim.run_topology(&t);
+        let util = r.overall_utilization(cfg.total_pes());
+        assert!(r.total_cycles() > 0);
+        assert!(util > 0.0 && util <= 1.0, "{}: {util}", t.name);
+        assert!(r.total_dram().total() > 0);
+        assert!(r.total_energy().total_mj() > 0.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Property-based tests over randomized layer shapes and array
+//! geometries — the L3 coordinator invariants (routing of operands into
+//! folds, batching of folds into schedules, memory state).
+
+use scale_sim::config::{self, ArchConfig};
+use scale_sim::dataflow::Dataflow;
+use scale_sim::memory;
+use scale_sim::trace;
+use scale_sim::util::prop::{forall, Shrink};
+use scale_sim::util::rng::Rng;
+use scale_sim::LayerShape;
+
+/// Random-but-valid layer + array geometry for property tests.
+#[derive(Clone, Debug)]
+struct Case {
+    layer: LayerShape,
+    rows: u64,
+    cols: u64,
+}
+
+impl Shrink for Case {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let l = &self.layer;
+        // shrink each dimension toward 1 while keeping validity
+        let mut push = |layer: LayerShape, rows, cols| {
+            if layer.validate().is_ok() {
+                out.push(Case { layer, rows, cols });
+            }
+        };
+        if l.ifmap_h > l.filt_h {
+            push(LayerShape { ifmap_h: l.ifmap_h - 1, ..l.clone() }, self.rows, self.cols);
+        }
+        if l.ifmap_w > l.filt_w {
+            push(LayerShape { ifmap_w: l.ifmap_w - 1, ..l.clone() }, self.rows, self.cols);
+        }
+        if l.channels > 1 {
+            push(LayerShape { channels: l.channels / 2, ..l.clone() }, self.rows, self.cols);
+        }
+        if l.num_filters > 1 {
+            push(LayerShape { num_filters: l.num_filters / 2, ..l.clone() }, self.rows, self.cols);
+        }
+        if self.rows > 1 {
+            push(l.clone(), self.rows / 2, self.cols);
+        }
+        if self.cols > 1 {
+            push(l.clone(), self.rows, self.cols / 2);
+        }
+        out
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let filt_h = rng.range(1, 5);
+    let filt_w = rng.range(1, 5);
+    let layer = LayerShape {
+        name: "prop".into(),
+        ifmap_h: filt_h + rng.range(0, 12),
+        ifmap_w: filt_w + rng.range(0, 12),
+        filt_h,
+        filt_w,
+        channels: rng.range(1, 8),
+        num_filters: rng.range(1, 24),
+        stride: rng.range(1, 3),
+    };
+    Case { layer, rows: rng.range(1, 20), cols: rng.range(1, 20) }
+}
+
+fn cfg_for(case: &Case) -> ArchConfig {
+    ArchConfig { array_h: case.rows, array_w: case.cols, ..config::paper_default() }
+}
+
+#[test]
+fn prop_trace_runtime_equals_analytical_all_dataflows() {
+    for df in Dataflow::ALL {
+        forall(0xA11CE + df as u64, 60, gen_case, |case| {
+            let t = df.timing(&case.layer, case.rows, case.cols);
+            let s = trace::summarize(df, &case.layer, &cfg_for(case));
+            s.cycles() == t.cycles
+                && s.ifmap_reads == t.sram_reads_ifmap
+                && s.filter_reads == t.sram_reads_filter
+                && s.ofmap_writes == t.sram_writes_ofmap
+                && s.ofmap_reads == t.sram_reads_ofmap
+        });
+    }
+}
+
+#[test]
+fn prop_utilization_in_unit_interval() {
+    for df in Dataflow::ALL {
+        forall(0xB0B + df as u64, 150, gen_case, |case| {
+            let t = df.timing(&case.layer, case.rows, case.cols);
+            t.utilization > 0.0
+                && t.utilization <= 1.0 + 1e-12
+                && t.mapping_efficiency > 0.0
+                && t.mapping_efficiency <= 1.0 + 1e-12
+        });
+    }
+}
+
+#[test]
+fn prop_cycles_lower_bounded_by_ideal() {
+    // runtime >= macs / PEs (no array computes faster than one MAC per
+    // PE per cycle)
+    for df in Dataflow::ALL {
+        forall(0xDEAD + df as u64, 150, gen_case, |case| {
+            let t = df.timing(&case.layer, case.rows, case.cols);
+            t.cycles as u128 * (case.rows * case.cols) as u128 >= case.layer.macs() as u128
+        });
+    }
+}
+
+#[test]
+fn prop_bigger_array_never_slower() {
+    // doubling both array dims never increases runtime
+    for df in Dataflow::ALL {
+        forall(0xF00D + df as u64, 80, gen_case, |case| {
+            let t1 = df.timing(&case.layer, case.rows, case.cols).cycles;
+            let t2 = df.timing(&case.layer, case.rows * 2, case.cols * 2).cycles;
+            t2 <= t1
+        });
+    }
+}
+
+#[test]
+fn prop_dram_traffic_monotone_in_sram() {
+    for df in Dataflow::ALL {
+        forall(0xCAFE + df as u64, 40, gen_case, |case| {
+            let mut last = u64::MAX;
+            for kb in [1u64, 8, 64, 512] {
+                let cfg = ArchConfig {
+                    ifmap_sram_kb: kb,
+                    filter_sram_kb: kb,
+                    ofmap_sram_kb: kb,
+                    ..cfg_for(case)
+                };
+                let t = memory::simulate(df, &case.layer, &cfg).0.total();
+                if t > last {
+                    return false;
+                }
+                last = t;
+            }
+            true
+        });
+    }
+}
+
+#[test]
+fn prop_dram_traffic_at_least_compulsory() {
+    // DRAM fetches can never be below each operand's compulsory
+    // footprint. The ifmap's compulsory set is its *touched row span*
+    // (strides > filter dims skip rows, and trailing rows beyond the
+    // last window are never needed).
+    for df in Dataflow::ALL {
+        forall(0x5EED + df as u64, 80, gen_case, |case| {
+            let (t, _) = memory::simulate(df, &case.layer, &cfg_for(case));
+            let l = &case.layer;
+            // distinct ifmap rows touched: windows overlap when
+            // stride < filt_h, and skip rows entirely when stride > filt_h
+            let touched_rows = if l.stride >= l.filt_h {
+                l.ofmap_h() * l.filt_h
+            } else {
+                (l.ofmap_h() - 1) * l.stride + l.filt_h
+            };
+            let ifmap_min = match df {
+                // OS fetches whole rows of the touched span
+                Dataflow::Os => touched_rows * l.ifmap_w * l.channels,
+                // WS streams element-slices summing to the whole ifmap
+                Dataflow::Ws => l.ifmap_elems(),
+                // IS pins per-window regions (proportional slices) —
+                // only positivity is universally guaranteed
+                Dataflow::Is => 1,
+            };
+            t.ifmap_bytes >= ifmap_min
+                && t.filter_bytes >= l.filter_elems()
+                && t.ofmap_bytes >= l.ofmap_elems()
+        });
+    }
+}
+
+#[test]
+fn prop_streamed_operand_reads_cover_macs() {
+    // The *streamed* operand (ifmap for OS/WS, filters for IS) enters
+    // the array edge once per reuse width: its edge-read count times the
+    // array dimension it broadcasts across must cover all MACs. The
+    // *pinned* operand is reused temporally and carries no such bound.
+    for df in Dataflow::ALL {
+        forall(0x1CE + df as u64, 100, gen_case, |case| {
+            let t = df.timing(&case.layer, case.rows, case.cols);
+            let macs = case.layer.macs() as u128;
+            match df {
+                Dataflow::Os => {
+                    // both operands stream under OS
+                    (t.sram_reads_ifmap as u128) * (case.cols as u128) >= macs
+                        && (t.sram_reads_filter as u128) * (case.rows as u128) >= macs
+                }
+                Dataflow::Ws => (t.sram_reads_ifmap as u128) * (case.cols as u128) >= macs,
+                Dataflow::Is => (t.sram_reads_filter as u128) * (case.cols as u128) >= macs,
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_fold_schedule_partitions_work() {
+    for df in Dataflow::ALL {
+        forall(0xFA1D + df as u64, 100, gen_case, |case| {
+            let (npx, k, nf) = case.layer.gemm_view();
+            let (tr, tc) = match df {
+                Dataflow::Os => (npx, nf),
+                Dataflow::Ws => (k, nf),
+                Dataflow::Is => (k, npx),
+            };
+            let mut area = 0u64;
+            let mut cycle = 0u64;
+            for f in trace::fold_schedule(df, &case.layer, case.rows, case.cols) {
+                if f.start != cycle {
+                    return false; // folds must be contiguous
+                }
+                cycle += f.cycles;
+                area += f.r_used * f.c_used;
+            }
+            area == tr * tc
+        });
+    }
+}
