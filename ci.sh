@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# CI entry point: build + test + CLI smoke. Mirrors the tier-1 gate
+# (ROADMAP.md) and exercises the engine end-to-end:
+#   - `scale-sim run -t resnet50`    — full workload through the engine
+#   - `scale-sim validate --max 16`  — Fig-4 cycle-exactness across all
+#                                      three backends (analytical/trace/rtl)
+#   - `scale-sim sweep dataflow -t ncf` — memoizing grid smoke; emits
+#                                      BENCH_sweep.json (wall-clock +
+#                                      cache hit-rate) for the perf log.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== build =="
+cargo build --release
+
+echo "== test =="
+cargo test -q
+
+BIN=target/release/scale-sim
+
+echo "== smoke: run resnet50 =="
+"$BIN" run -t resnet50 > /dev/null
+echo "ok"
+
+echo "== smoke: validate (Fig 4, all backends) =="
+"$BIN" validate --max 16
+
+echo "== smoke: sweep (memoizing grid + BENCH_sweep.json) =="
+"$BIN" sweep dataflow -t ncf > /dev/null
+test -f BENCH_sweep.json
+cat BENCH_sweep.json
+
+echo "CI OK"

@@ -1,30 +1,40 @@
 //! Design-space exploration (§IV-B/C/D condensed): for one workload,
-//! sweep dataflow x array size, scratchpad size, and aspect ratio, and
-//! print the winner of each axis — the co-design loop the paper argues
-//! an architect should run before freezing an accelerator.
+//! sweep dataflow x array size, scratchpad size, and aspect ratio
+//! through ONE memoizing engine, and print the winner of each axis —
+//! the co-design loop the paper argues an architect should run before
+//! freezing an accelerator. The three sweeps share layer simulations
+//! wherever their grids overlap (the engine cache persists across
+//! `sweep()` calls).
 //!
 //! Run: `cargo run --release --example design_space [workload]`
 
-use scale_sim::config::{self, workloads, ArchConfig};
-use scale_sim::dataflow::Dataflow;
-use scale_sim::sim::Simulator;
-use scale_sim::sweep;
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
+use scale_sim::sweep::fig8_shapes;
+use scale_sim::Dataflow;
 
 fn main() {
-    let name = std::env::args().nth(1).unwrap_or_else(|| "alphagozero".into());
-    let topo = workloads::builtin(&name)
-        .unwrap_or_else(|| panic!("unknown workload {name:?} (try: scale-sim workloads)"));
-    let base = config::paper_default();
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "alphagozero".into());
+    let topo = workloads::builtin(&arg)
+        .unwrap_or_else(|| panic!("unknown workload {arg:?} (try: scale-sim workloads)"));
+    // builtin() accepts aliases ("W1"); sweep points carry the resolved name
+    let name = topo.name.clone();
+    let engine = Engine::builder().build().unwrap();
 
     // --- axis 1: dataflow x square array (Fig 5 slice) --------------------
     println!("== dataflow x array size ({name}) ==");
     println!("{:>8} {:>12} {:>12} {:>12}   winner", "array", "os", "ws", "is");
+    let axis1 = engine
+        .sweep()
+        .workload(&topo)
+        .dataflows(&Dataflow::ALL)
+        .square_arrays(&[128, 64, 32, 16, 8])
+        .run();
     for &n in &[128u64, 64, 32, 16, 8] {
-        let mut cyc = Vec::new();
-        for df in Dataflow::ALL {
-            let cfg = ArchConfig { array_h: n, array_w: n, dataflow: df, ..base.clone() };
-            cyc.push(Simulator::new(cfg).run_topology(&topo).total_cycles());
-        }
+        let cyc: Vec<u64> = Dataflow::ALL
+            .iter()
+            .map(|&df| axis1.find(&name, df, n, n).unwrap().report.total_cycles())
+            .collect();
         let best = Dataflow::ALL[cyc.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0];
         println!("{:>8} {:>12} {:>12} {:>12}   {best}", format!("{n}x{n}"), cyc[0], cyc[1], cyc[2]);
     }
@@ -32,15 +42,15 @@ fn main() {
     // --- axis 2: scratchpad size (Fig 7 slice) -----------------------------
     println!("\n== scratchpad size vs DRAM bandwidth ==");
     println!("{:>8} {:>14} {:>12}", "sram_kb", "dram_bytes", "avg_rd_bw");
+    let sizes = [32u64, 64, 128, 256, 512, 1024, 2048];
+    let axis2 = engine.sweep().workload(&topo).sram_sizes_kb(&sizes).run();
     let mut last_bw = f64::MAX;
     let mut knee = None;
-    for &kb in &[32u64, 64, 128, 256, 512, 1024, 2048] {
-        let cfg = ArchConfig { ifmap_sram_kb: kb, filter_sram_kb: kb, ..base.clone() };
-        let r = Simulator::new(cfg).run_topology(&topo);
-        let bw = r.avg_dram_read_bw();
-        println!("{:>8} {:>14} {:>12.4}", kb, r.total_dram().total(), bw);
+    for p in &axis2.points {
+        let bw = p.report.avg_dram_read_bw();
+        println!("{:>8} {:>14} {:>12.4}", p.ifmap_sram_kb, p.report.total_dram().total(), bw);
         if knee.is_none() && last_bw / bw < 1.05 {
-            knee = Some(kb / 2);
+            knee = Some(p.ifmap_sram_kb / 2);
         }
         last_bw = bw;
     }
@@ -51,12 +61,18 @@ fn main() {
     // --- axis 3: aspect ratio at fixed 16384 PEs (Fig 8 slice) ------------
     println!("\n== aspect ratio (16384 PEs) ==");
     println!("{:>10} {:>12} {:>12} {:>12}", "shape", "os", "ws", "is");
+    let shapes = fig8_shapes();
+    let axis3 = engine
+        .sweep()
+        .workload(&topo)
+        .dataflows(&Dataflow::ALL)
+        .array_shapes(&shapes)
+        .run();
     let mut best: Option<(u64, u64, Dataflow, u64)> = None;
-    for (r, c) in sweep::fig8_shapes() {
+    for &(r, c) in &shapes {
         let mut row = Vec::new();
         for df in Dataflow::ALL {
-            let cfg = ArchConfig { array_h: r, array_w: c, dataflow: df, ..base.clone() };
-            let cycles = Simulator::new(cfg).run_topology(&topo).total_cycles();
+            let cycles = axis3.find(&name, df, r, c).unwrap().report.total_cycles();
             if best.is_none() || cycles < best.unwrap().3 {
                 best = Some((r, c, df, cycles));
             }
@@ -66,4 +82,12 @@ fn main() {
     }
     let (r, c, df, cycles) = best.unwrap();
     println!("\nbest point: {r}x{c} under {df} ({cycles} cycles)");
+
+    let stats = engine.cache_stats();
+    println!(
+        "engine memo: {} layer sims for {} lookups across all three axes ({:.0}% hit rate)",
+        stats.layer_sims,
+        stats.lookups(),
+        stats.hit_rate() * 100.0
+    );
 }

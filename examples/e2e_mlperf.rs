@@ -18,10 +18,20 @@
 
 use scale_sim::config::{self, workloads};
 use scale_sim::dataflow::Dataflow;
+use scale_sim::engine::Engine;
 use scale_sim::runtime::{default_artifact_dir, Runtime};
-use scale_sim::sim::Simulator;
 use scale_sim::util::rng::Rng;
 use scale_sim::{rtl, LayerShape};
+
+type ExampleResult<T> = Result<T, Box<dyn std::error::Error>>;
+
+fn ensure(cond: bool, msg: &str) -> ExampleResult<()> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string().into())
+    }
+}
 
 fn max_rel_err(got: &[f32], want: &[f32]) -> f32 {
     got.iter()
@@ -80,11 +90,11 @@ fn im2col(x: &[f32], h: usize, w: usize, c: usize, r: usize, s: usize, stride: u
     out
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> ExampleResult<()> {
     let dir = default_artifact_dir();
-    println!("=== stage 1: PJRT functional validation (artifacts at {dir:?}) ===");
+    println!("=== stage 1: functional validation (artifacts at {dir:?}) ===");
     let mut rt = Runtime::new(&dir)?;
-    println!("PJRT platform: {}", rt.platform());
+    println!("runtime platform: {}", rt.platform());
 
     // -- 1a: conv layer through the tiled systolic GEMM (fold schedule) ----
     let (h, w, c, r, s, m, stride) = (16usize, 16, 8, 3, 3, 16, 1);
@@ -101,7 +111,7 @@ fn main() -> anyhow::Result<()> {
         "conv {h}x{w}x{c} * {r}x{s}->{m} via tiled systolic GEMM (OS folds {}x{}x{}): max rel err {err:.2e}",
         (eh * ew).div_ceil(32), m.div_ceil(32), k.div_ceil(32)
     );
-    anyhow::ensure!(err < 1e-3, "tiled GEMM mismatch");
+    ensure(err < 1e-3, "tiled GEMM mismatch")?;
 
     // -- 1b: the AOT conv artifact end-to-end ------------------------------
     let (ch2, m2) = (32usize, 32usize);
@@ -111,7 +121,7 @@ fn main() -> anyhow::Result<()> {
     let want2 = conv_ref(&x2, 16, 16, ch2, &f2, 3, 3, m2, 1);
     let err2 = max_rel_err(&got2, &want2);
     println!("AOT conv_3x3 artifact: max rel err {err2:.2e}");
-    anyhow::ensure!(err2 < 1e-3, "conv artifact mismatch");
+    ensure(err2 < 1e-3, "conv artifact mismatch")?;
 
     // -- stage 2: RTL cross-check ------------------------------------------
     println!("\n=== stage 2: RTL PE-grid cross-check (Fig 4) ===");
@@ -120,13 +130,13 @@ fn main() -> anyhow::Result<()> {
         let rtl_run = rtl::run_matmul(&a, &b, tile, tile, tile);
         let layer = LayerShape::gemm("mm", tile as u64, tile as u64, tile as u64);
         let model = Dataflow::Os.timing(&layer, tile as u64, tile as u64).cycles;
-        let pjrt = rt.gemm_tile(tile, &a, &b)?;
-        let nerr = max_rel_err(&rtl_run.product, &pjrt);
+        let kernel = rt.gemm_tile(tile, &a, &b)?;
+        let nerr = max_rel_err(&rtl_run.product, &kernel);
         println!(
-            "{tile:>3}x{tile}: rtl {} cycles, model {} cycles (match={}), rtl-vs-pjrt err {nerr:.2e}",
+            "{tile:>3}x{tile}: rtl {} cycles, model {} cycles (match={}), rtl-vs-kernel err {nerr:.2e}",
             rtl_run.cycles, model, rtl_run.cycles == model
         );
-        anyhow::ensure!(rtl_run.cycles == model && nerr < 1e-3);
+        ensure(rtl_run.cycles == model && nerr < 1e-3, "RTL cross-check failed")?;
     }
 
     // -- stage 3: full MLPerf suite ----------------------------------------
@@ -136,10 +146,10 @@ fn main() -> anyhow::Result<()> {
         "{:<4} {:<14} {:>7} {:>14} {:>8} {:>12} {:>10}",
         "tag", "workload", "layers", "cycles", "util%", "avg_rd_bw", "energy_mJ"
     );
-    let sim = Simulator::new(cfg.clone());
+    let engine = Engine::builder().config(cfg.clone()).build()?;
     for (tag, name) in workloads::TAGS {
         let topo = workloads::builtin(name).unwrap();
-        let rep = sim.run_topology(&topo);
+        let rep = engine.run_topology(&topo);
         println!(
             "{:<4} {:<14} {:>7} {:>14} {:>8.2} {:>12.4} {:>10.3}",
             tag,

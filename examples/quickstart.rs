@@ -1,28 +1,34 @@
 //! Quickstart: simulate ResNet-50 on the paper's default architecture
-//! (128x128 OS, 1 MB operand scratchpad) and print the summary metrics
-//! SCALE-Sim reports (§I: latency, utilization, SRAM/DRAM accesses,
-//! bandwidth).
+//! (128x128 OS, 1 MB operand scratchpad) through the `engine` façade and
+//! print the summary metrics SCALE-Sim reports (§I: latency,
+//! utilization, SRAM/DRAM accesses, bandwidth).
 //!
 //! Run: `cargo run --release --example quickstart`
 
-use scale_sim::config::{self, workloads};
-use scale_sim::sim::Simulator;
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
 
 fn main() {
-    let cfg = config::paper_default();
+    let engine = Engine::builder().build().expect("default config is valid");
     let topo = workloads::builtin("resnet50").expect("built-in workload");
-    let sim = Simulator::new(cfg.clone());
+    let cfg = engine.cfg().clone();
 
     println!(
-        "SCALE-Sim quickstart: {} on {}x{} {} array, {}+{} KB scratchpad",
-        topo.name, cfg.array_h, cfg.array_w, cfg.dataflow, cfg.ifmap_sram_kb, cfg.filter_sram_kb
+        "SCALE-Sim quickstart: {} on {}x{} {} array, {}+{} KB scratchpad ({} backend)",
+        topo.name,
+        cfg.array_h,
+        cfg.array_w,
+        cfg.dataflow,
+        cfg.ifmap_sram_kb,
+        cfg.filter_sram_kb,
+        engine.backend_kind()
     );
     println!(
         "{:<16} {:>12} {:>8} {:>10} {:>12} {:>10}",
         "layer", "cycles", "util%", "remaps", "dram_bytes", "energy_mJ"
     );
 
-    let report = sim.run_topology(&topo);
+    let report = engine.run_topology(&topo);
     for l in report.layers.iter().take(8) {
         println!(
             "{:<16} {:>12} {:>8.2} {:>10} {:>12} {:>10.4}",
@@ -50,5 +56,12 @@ fn main() {
         e.compute_mj,
         e.sram_mj,
         e.dram_mj
+    );
+    let stats = engine.cache_stats();
+    println!(
+        "memo cache:          {} layer sims, {} hits ({:.0}% — repeated bottleneck shapes)",
+        stats.layer_sims,
+        stats.cache_hits,
+        stats.hit_rate() * 100.0
     );
 }

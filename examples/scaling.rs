@@ -6,11 +6,12 @@
 //!
 //! Run: `cargo run --release --example scaling [workload]`
 
-use scale_sim::config::{self, workloads, ArchConfig};
+use scale_sim::config::{self, workloads};
 use scale_sim::dataflow::Dataflow;
 use scale_sim::dram::{burst_stream, Dram, DramConfig};
+use scale_sim::engine::Engine;
 use scale_sim::memory;
-use scale_sim::scaleout::{self, PE_SWEEP};
+use scale_sim::scaleout::PE_SWEEP;
 
 fn main() {
     let name = std::env::args().nth(1).unwrap_or_else(|| "alphagozero".into());
@@ -24,9 +25,9 @@ fn main() {
         "df", "PEs", "up_cycles", "out_cycles", "up/out", "wbw up/out"
     );
     for df in Dataflow::ALL {
-        let cfg = ArchConfig { dataflow: df, ..base.clone() };
+        let engine = Engine::builder().config(base.clone()).dataflow(df).build().unwrap();
         for &pe in &PE_SWEEP {
-            let c = scaleout::compare_topology(&cfg, &topo.layers, pe);
+            let c = engine.compare_scaling(&topo.layers, pe);
             println!(
                 "{:>4} {:>7} {:>14} {:>14} {:>10.3} {:>12.3}",
                 df.name(),

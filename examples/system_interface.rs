@@ -12,8 +12,8 @@
 
 use scale_sim::config::{self, workloads};
 use scale_sim::dram::{replay_layer, DramConfig};
+use scale_sim::engine::Engine;
 use scale_sim::memory::stall::{provision_bandwidth, stalled_runtime};
-use scale_sim::sim::Simulator;
 
 fn main() {
     let name = std::env::args().nth(1).unwrap_or_else(|| "resnet50".into());
@@ -59,9 +59,9 @@ fn main() {
         "{:<16} {:>10} {:>10} {:>9} {:>12} {:>10}",
         "layer", "need_B/c", "achv_B/c", "hit%", "avg_lat", "verdict"
     );
-    let sim = Simulator::new(cfg.clone());
+    let engine = Engine::builder().config(cfg.clone()).build().unwrap();
     for layer in topo.layers.iter().take(10) {
-        let rep = sim.run_layer(layer);
+        let rep = engine.run_layer(layer);
         let stats = replay_layer(df, layer, &cfg, DramConfig::default());
         let ok = stats.achieved_bw() >= rep.bandwidth.avg_read_bw;
         println!(

@@ -1,7 +1,8 @@
 //! Ablation: flexible (per-layer best) dataflow vs fixed dataflows —
 //! the quantitative answer to §IV-B question 3 ("Are we missing out a
 //! lot by employing fixed dataflows? Or is there a dataflow which works
-//! in all cases?") and the FlexFlow-motivated design question.
+//! in all cases?") and the FlexFlow-motivated design question, run
+//! through the engine's memoized flexible study.
 //!
 //! Paper's conclusion to reproduce: "fixating to a given dataflow might
 //! not lead to significant losses" — flexible speedup over the best
@@ -10,8 +11,8 @@
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads, ArchConfig};
-use scale_sim::sim::flex::flexible_study;
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
 
@@ -26,10 +27,10 @@ fn main() {
             "{:<14} {:>14} {:>14} {:>14} {:>14} {:>9} {:>9}  wins(os/ws/is)",
             "workload", "os", "ws", "is", "flexible", "vs_best", "vs_worst"
         );
+        let engine = Engine::builder().array(n, n).build().unwrap();
         for (_, name) in workloads::TAGS {
-            let cfg = ArchConfig { array_h: n, array_w: n, ..config::paper_default() };
             let topo = workloads::builtin(name).unwrap();
-            let r = flexible_study(&cfg, &topo);
+            let r = engine.flexible_study(&topo);
             let [os, ws, is] = r.fixed_cycles;
             println!(
                 "{:<14} {:>14} {:>14} {:>14} {:>14} {:>9.3} {:>9.3}  {:?}",
@@ -53,10 +54,10 @@ fn main() {
     }
     w.write_to(Path::new("results/ablation_flexible_dataflow.csv")).unwrap();
 
-    let cfg = config::paper_default();
+    let engine = Engine::builder().build().unwrap();
     let topo = workloads::builtin("resnet50").unwrap();
     bench_auto("ablation/flexible_study(resnet50)", std::time::Duration::from_secs(2), || {
-        flexible_study(&cfg, &topo).flexible_cycles
+        engine.flexible_study(&topo).flexible_cycles
     });
     println!("ablation_flexible_dataflow OK -> results/ablation_flexible_dataflow.csv");
 }

@@ -1,29 +1,50 @@
-//! Fig 4: validation — SCALE-Sim cycle counts vs the RTL model for
-//! Mat-Mat multiplications sized to the array (OS dataflow).
+//! Fig 4: validation — cycle counts from every engine backend (RTL
+//! PE-grid, trace-driven, analytical) for Mat-Mat multiplications sized
+//! to the array (OS dataflow), through the same `Engine` entry point.
 //!
-//! Prints the paper's series (size -> cycles for both platforms; they
-//! must tally exactly), writes `results/fig04.csv`, and times both the
+//! Prints the paper's series (size -> cycles per backend; they must
+//! tally exactly), writes `results/fig04.csv`, and times both the
 //! analytical model and the RTL substrate.
 
 use std::path::Path;
 
 use scale_sim::dataflow::Dataflow;
+use scale_sim::engine::{BackendKind, Engine};
 use scale_sim::util::bench::{bench, black_box};
 use scale_sim::util::csv::CsvWriter;
 use scale_sim::{rtl, LayerShape};
 
 fn main() {
-    println!("=== Fig 4: RTL vs SCALE-Sim cycles, array-sized MatMul (OS) ===");
-    println!("{:>6} {:>12} {:>12} {:>7}", "size", "rtl_cycles", "sim_cycles", "match");
-    let mut w = CsvWriter::new(&["size", "rtl_cycles", "sim_cycles"]);
-    for n in [4usize, 8, 16, 32, 64, 128] {
-        let (a, b) = rtl::random_matrices(n, n, n, n as u64);
-        let r = rtl::run_matmul(&a, &b, n, n, n);
-        let layer = LayerShape::gemm("mm", n as u64, n as u64, n as u64);
-        let model = Dataflow::Os.timing(&layer, n as u64, n as u64).cycles;
-        println!("{:>6} {:>12} {:>12} {:>7}", n, r.cycles, model, r.cycles == model);
-        assert_eq!(r.cycles, model, "validation must be cycle-exact");
-        w.row(&[n.to_string(), r.cycles.to_string(), model.to_string()]);
+    println!("=== Fig 4: engine backends, array-sized MatMul (OS) ===");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>7}",
+        "size", "rtl_cycles", "trace_cycles", "sim_cycles", "match"
+    );
+    let mut w = CsvWriter::new(&["size", "rtl_cycles", "trace_cycles", "sim_cycles"]);
+    for n in [4u64, 8, 16, 32, 64, 128] {
+        let layer = LayerShape::gemm("mm", n, n, n);
+        let cycles: Vec<u64> = BackendKind::ALL
+            .iter()
+            .map(|&kind| {
+                Engine::builder()
+                    .dataflow(Dataflow::Os)
+                    .array(n, n)
+                    .backend(kind)
+                    .build()
+                    .unwrap()
+                    .run_layer(&layer)
+                    .timing
+                    .cycles
+            })
+            .collect();
+        let (model, trace, rtl_c) = (cycles[0], cycles[1], cycles[2]);
+        // cross-check the engine's RTL backend against a direct RTL run
+        let (a, b) = rtl::random_matrices(n as usize, n as usize, n as usize, n);
+        let direct = rtl::run_matmul(&a, &b, n as usize, n as usize, n as usize);
+        let ok = model == trace && trace == rtl_c && rtl_c == direct.cycles;
+        println!("{:>6} {:>12} {:>12} {:>12} {:>7}", n, rtl_c, trace, model, ok);
+        assert!(ok, "validation must be cycle-exact at {n}");
+        w.row(&[n.to_string(), rtl_c.to_string(), trace.to_string(), model.to_string()]);
     }
     w.write_to(Path::new("results/fig04.csv")).unwrap();
 

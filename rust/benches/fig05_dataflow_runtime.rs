@@ -1,32 +1,40 @@
 //! Fig 5: runtime in cycles for all MLPerf workloads under OS/WS/IS on
-//! square arrays 128x128 .. 8x8 (five panels a-e).
+//! square arrays 128x128 .. 8x8 (five panels a-e), through the engine's
+//! memoizing sweep grid.
 //!
 //! Prints each panel as a table (rows = workloads, cols = dataflows),
-//! writes `results/fig05.csv`, and times the full sweep.
+//! writes `results/fig05.csv` + `results/BENCH_fig05_sweep.json`
+//! (wall-clock and cache hit-rate), and times the full sweep cold vs
+//! warm.
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads};
-use scale_sim::sweep::{self, dataflow_sweep};
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
+use scale_sim::Dataflow;
 
 const ARRAYS: [u64; 5] = [128, 64, 32, 16, 8];
 
 fn main() {
-    let base = config::paper_default();
     let topos = workloads::mlperf_suite();
-    let threads = sweep::default_threads();
+    let engine = Engine::builder().build().unwrap();
 
-    let pts = dataflow_sweep(&base, &topos, &ARRAYS, threads);
+    let out = engine
+        .sweep()
+        .workloads(&topos)
+        .dataflows(&Dataflow::ALL)
+        .square_arrays(&ARRAYS)
+        .run();
     let mut w = CsvWriter::new(&["workload", "dataflow", "array", "cycles", "utilization"]);
-    for p in &pts {
+    for p in &out.points {
         w.row(&[
             p.workload.clone(),
             p.dataflow.name().to_string(),
-            p.array.to_string(),
-            p.cycles.to_string(),
-            format!("{:.4}", p.utilization),
+            p.array_h.to_string(),
+            p.report.total_cycles().to_string(),
+            format!("{:.4}", p.report.overall_utilization(p.total_pes())),
         ]);
     }
     w.write_to(Path::new("results/fig05.csv")).unwrap();
@@ -40,23 +48,49 @@ fn main() {
         );
         println!("{:<6} {:>14} {:>14} {:>14}  best", "tag", "os", "ws", "is");
         for (tag, name) in workloads::TAGS {
-            let row: Vec<u64> = ["os", "ws", "is"]
+            let row: Vec<u64> = Dataflow::ALL
                 .iter()
-                .map(|df| {
-                    pts.iter()
-                        .find(|p| p.workload == name && p.dataflow.name() == *df && p.array == *n)
-                        .unwrap()
-                        .cycles
-                })
+                .map(|&df| out.find(name, df, *n, *n).unwrap().report.total_cycles())
                 .collect();
-            let best = ["os", "ws", "is"][row.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0];
+            let best =
+                ["os", "ws", "is"][row.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0];
             println!("{:<6} {:>14} {:>14} {:>14}  {}", tag, row[0], row[1], row[2], best);
         }
         println!();
     }
 
-    bench_auto("fig05/full_sweep(7wl x 3df x 5arrays)", std::time::Duration::from_secs(3), || {
-        dataflow_sweep(&base, &topos, &ARRAYS, threads).len()
+    println!(
+        "sweep: {} points, {} layer sims, {} cache hits ({:.1}% hit rate), {:.1} ms",
+        out.stats.points,
+        out.stats.memo.layer_sims,
+        out.stats.memo.cache_hits,
+        out.stats.hit_rate() * 100.0,
+        out.stats.wall.as_secs_f64() * 1e3
+    );
+    // distinct name from the CLI's repo-root BENCH_sweep.json so the two
+    // perf artifacts never shadow each other
+    out.stats.write_bench_json(Path::new("results/BENCH_fig05_sweep.json")).unwrap();
+
+    // cold engine each iteration vs re-running on the warm shared cache
+    bench_auto("fig05/full_sweep_cold(7wl x 3df x 5arrays)", std::time::Duration::from_secs(3), || {
+        let cold = Engine::builder().build().unwrap();
+        cold.sweep()
+            .workloads(&topos)
+            .dataflows(&Dataflow::ALL)
+            .square_arrays(&ARRAYS)
+            .run()
+            .points
+            .len()
     });
-    println!("fig05 OK -> results/fig05.csv");
+    bench_auto("fig05/full_sweep_warm(memoized)", std::time::Duration::from_secs(1), || {
+        engine
+            .sweep()
+            .workloads(&topos)
+            .dataflows(&Dataflow::ALL)
+            .square_arrays(&ARRAYS)
+            .run()
+            .points
+            .len()
+    });
+    println!("fig05 OK -> results/fig05.csv, results/BENCH_fig05_sweep.json");
 }

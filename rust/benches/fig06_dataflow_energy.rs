@@ -1,5 +1,6 @@
 //! Fig 6: energy (mJ) split into compute and memory transfers, for all
-//! workloads x dataflows x square arrays 128x128 .. 8x8.
+//! workloads x dataflows x square arrays 128x128 .. 8x8, through the
+//! engine's memoizing sweep grid.
 //!
 //! Absolute joules depend on our documented per-access constants
 //! (DESIGN.md §3, the paper publishes none); the comparison *shape*
@@ -7,29 +8,35 @@
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads};
-use scale_sim::sweep::{self, dataflow_sweep};
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
+use scale_sim::Dataflow;
 
 const ARRAYS: [u64; 5] = [128, 64, 32, 16, 8];
 
 fn main() {
-    let base = config::paper_default();
     let topos = workloads::mlperf_suite();
-    let threads = sweep::default_threads();
+    let engine = Engine::builder().build().unwrap();
 
-    let pts = dataflow_sweep(&base, &topos, &ARRAYS, threads);
+    let out = engine
+        .sweep()
+        .workloads(&topos)
+        .dataflows(&Dataflow::ALL)
+        .square_arrays(&ARRAYS)
+        .run();
     let mut w =
         CsvWriter::new(&["workload", "dataflow", "array", "compute_mj", "memory_mj", "total_mj"]);
-    for p in &pts {
+    for p in &out.points {
+        let e = p.report.total_energy();
         w.row(&[
             p.workload.clone(),
             p.dataflow.name().to_string(),
-            p.array.to_string(),
-            format!("{:.6}", p.energy_compute_mj),
-            format!("{:.6}", p.energy_memory_mj),
-            format!("{:.6}", p.energy_compute_mj + p.energy_memory_mj),
+            p.array_h.to_string(),
+            format!("{:.6}", e.compute_mj),
+            format!("{:.6}", e.memory_mj()),
+            format!("{:.6}", e.total_mj()),
         ]);
     }
     w.write_to(Path::new("results/fig06.csv")).unwrap();
@@ -43,15 +50,9 @@ fn main() {
         );
         println!("{:<6} {:>16} {:>16} {:>16}  best", "tag", "os", "ws", "is");
         for (tag, name) in workloads::TAGS {
-            let row: Vec<f64> = ["os", "ws", "is"]
+            let row: Vec<f64> = Dataflow::ALL
                 .iter()
-                .map(|df| {
-                    let p = pts
-                        .iter()
-                        .find(|p| p.workload == name && p.dataflow.name() == *df && p.array == *n)
-                        .unwrap();
-                    p.energy_compute_mj + p.energy_memory_mj
-                })
+                .map(|&df| out.find(name, df, *n, *n).unwrap().report.total_energy().total_mj())
                 .collect();
             let best_i = row
                 .iter()
@@ -68,8 +69,21 @@ fn main() {
         println!();
     }
 
+    println!(
+        "sweep: {} layer sims, {} cache hits ({:.1}% hit rate)",
+        out.stats.memo.layer_sims,
+        out.stats.memo.cache_hits,
+        out.stats.hit_rate() * 100.0
+    );
     bench_auto("fig06/energy_sweep", std::time::Duration::from_secs(3), || {
-        dataflow_sweep(&base, &topos, &[32], threads).len()
+        let cold = Engine::builder().build().unwrap();
+        cold.sweep()
+            .workloads(&topos)
+            .dataflows(&Dataflow::ALL)
+            .square_arrays(&[32])
+            .run()
+            .points
+            .len()
     });
     println!("fig06 OK -> results/fig06.csv");
 }

@@ -1,6 +1,7 @@
 //! Fig 7: required DRAM bandwidth vs scratchpad size for stall-free
 //! operation — (a) all workloads, (b) AlphaGoZero, (c) NCF,
-//! (d) SentimentCNN — sweeping 32KB..2048KB per operand buffer.
+//! (d) SentimentCNN — sweeping 32KB..2048KB per operand buffer through
+//! the engine's memoizing sweep grid.
 //!
 //! The paper's findings to reproduce: diminishing returns near 1MB for
 //! the common case (a); W1's knee at ~256KB (b); W4's knee at very small
@@ -8,26 +9,25 @@
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads};
-use scale_sim::sweep::{self, memory_sweep};
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
 
 const SIZES: [u64; 7] = [32, 64, 128, 256, 512, 1024, 2048];
 
 fn main() {
-    let base = config::paper_default();
     let topos = workloads::mlperf_suite();
-    let threads = sweep::default_threads();
+    let engine = Engine::builder().build().unwrap();
 
-    let pts = memory_sweep(&base, &topos, &SIZES, threads);
+    let out = engine.sweep().workloads(&topos).sram_sizes_kb(&SIZES).run();
     let mut w = CsvWriter::new(&["workload", "sram_kb", "avg_read_bw", "dram_bytes"]);
-    for p in &pts {
+    for p in &out.points {
         w.row(&[
             p.workload.clone(),
-            p.sram_kb.to_string(),
-            format!("{:.5}", p.avg_read_bw),
-            p.dram_bytes.to_string(),
+            p.ifmap_sram_kb.to_string(),
+            format!("{:.5}", p.report.avg_dram_read_bw()),
+            p.report.total_dram().total().to_string(),
         ]);
     }
     w.write_to(Path::new("results/fig07.csv")).unwrap();
@@ -42,7 +42,12 @@ fn main() {
         let series: Vec<f64> = SIZES
             .iter()
             .map(|s| {
-                pts.iter().find(|p| p.workload == name && p.sram_kb == *s).unwrap().avg_read_bw
+                out.points
+                    .iter()
+                    .find(|p| p.workload == name && p.ifmap_sram_kb == *s)
+                    .unwrap()
+                    .report
+                    .avg_dram_read_bw()
             })
             .collect();
         // knee = first size where the next doubling gains < 5%
@@ -59,8 +64,15 @@ fn main() {
         println!("  {knee}");
     }
 
+    println!(
+        "sweep: {} layer sims, {} cache hits ({:.1}% hit rate)",
+        out.stats.memo.layer_sims,
+        out.stats.memo.cache_hits,
+        out.stats.hit_rate() * 100.0
+    );
     bench_auto("fig07/memory_sweep(7wl x 7sizes)", std::time::Duration::from_secs(3), || {
-        memory_sweep(&base, &topos, &SIZES, threads).len()
+        let cold = Engine::builder().build().unwrap();
+        cold.sweep().workloads(&topos).sram_sizes_kb(&SIZES).run().points.len()
     });
     println!("fig07 OK -> results/fig07.csv");
 }

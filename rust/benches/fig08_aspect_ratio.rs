@@ -1,5 +1,6 @@
 //! Fig 8: runtime vs array aspect ratio at fixed 16384 PEs, shapes
-//! 8x2048 .. 2048x8, panels (a) OS, (b) WS, (c) IS.
+//! 8x2048 .. 2048x8, panels (a) OS, (b) WS, (c) IS, through the engine's
+//! memoizing sweep grid.
 //!
 //! Findings to reproduce: dataflow x shape interact dramatically; square
 //! aspect ratios perform well for the common case; specific workloads
@@ -7,27 +8,32 @@
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads};
-use scale_sim::dataflow::Dataflow;
-use scale_sim::sweep::{self, fig8_shapes, shape_sweep};
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
+use scale_sim::sweep::fig8_shapes;
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
+use scale_sim::Dataflow;
 
 fn main() {
-    let base = config::paper_default();
     let topos = workloads::mlperf_suite();
-    let threads = sweep::default_threads();
     let shapes = fig8_shapes();
+    let engine = Engine::builder().build().unwrap();
 
-    let pts = shape_sweep(&base, &topos, &shapes, threads);
+    let out = engine
+        .sweep()
+        .workloads(&topos)
+        .dataflows(&Dataflow::ALL)
+        .array_shapes(&shapes)
+        .run();
     let mut w = CsvWriter::new(&["workload", "dataflow", "rows", "cols", "cycles"]);
-    for p in &pts {
+    for p in &out.points {
         w.row(&[
             p.workload.clone(),
             p.dataflow.name().to_string(),
-            p.rows.to_string(),
-            p.cols.to_string(),
-            p.cycles.to_string(),
+            p.array_h.to_string(),
+            p.array_w.to_string(),
+            p.report.total_cycles().to_string(),
         ]);
     }
     w.write_to(Path::new("results/fig08.csv")).unwrap();
@@ -46,14 +52,7 @@ fn main() {
         for (_, name) in workloads::TAGS {
             let series: Vec<u64> = shapes
                 .iter()
-                .map(|(r, c)| {
-                    pts.iter()
-                        .find(|p| {
-                            p.workload == name && p.dataflow == *df && p.rows == *r && p.cols == *c
-                        })
-                        .unwrap()
-                        .cycles
-                })
+                .map(|&(r, c)| out.find(name, *df, r, c).unwrap().report.total_cycles())
                 .collect();
             let best = series.iter().enumerate().min_by_key(|(_, c)| **c).unwrap().0;
             print!("{name:<14}");
@@ -65,8 +64,21 @@ fn main() {
         println!();
     }
 
+    println!(
+        "sweep: {} layer sims, {} cache hits ({:.1}% hit rate)",
+        out.stats.memo.layer_sims,
+        out.stats.memo.cache_hits,
+        out.stats.hit_rate() * 100.0
+    );
     bench_auto("fig08/shape_sweep(7wl x 3df x 9shapes)", std::time::Duration::from_secs(3), || {
-        shape_sweep(&base, &topos, &shapes, threads).len()
+        let cold = Engine::builder().build().unwrap();
+        cold.sweep()
+            .workloads(&topos)
+            .dataflows(&Dataflow::ALL)
+            .array_shapes(&shapes)
+            .run()
+            .points
+            .len()
     });
     println!("fig08 OK -> results/fig08.csv");
 }

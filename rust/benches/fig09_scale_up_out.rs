@@ -1,6 +1,6 @@
 //! Fig 9: ratio of runtime on a scaled-up array vs a scaled-out (8x8
 //! nodes) implementation with equal total PEs, per dataflow, PE budgets
-//! 64 .. 16384 (x4 per step).
+//! 64 .. 16384 (x4 per step), through the engine façade.
 //!
 //! Findings to reproduce: scale-up wins the common case
 //! (ratio < 1), but specific workloads flip the decision — "scaling
@@ -8,30 +8,32 @@
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads, ArchConfig};
-use scale_sim::dataflow::Dataflow;
-use scale_sim::scaleout::{compare_topology, PE_SWEEP};
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
+use scale_sim::scaleout::PE_SWEEP;
 use scale_sim::sweep::{self, parallel_map};
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
+use scale_sim::Dataflow;
 
 fn main() {
-    let base = config::paper_default();
     let topos = workloads::mlperf_suite();
     let threads = sweep::default_threads();
+    let engines: Vec<(Dataflow, Engine)> = Dataflow::ALL
+        .iter()
+        .map(|&df| (df, Engine::builder().dataflow(df).build().unwrap()))
+        .collect();
 
     let mut jobs = Vec::new();
     for t in &topos {
-        for df in Dataflow::ALL {
+        for (df, engine) in &engines {
             for pe in PE_SWEEP {
-                jobs.push((t, df, pe));
+                jobs.push((t, *df, engine, pe));
             }
         }
     }
-    let rows = parallel_map(&jobs, threads, |&(t, df, pe)| {
-        let cfg = ArchConfig { dataflow: df, ..base.clone() };
-        let c = compare_topology(&cfg, &t.layers, pe);
-        (t.name.clone(), df, pe, c)
+    let rows = parallel_map(&jobs, threads, |&(t, df, engine, pe)| {
+        (t.name.clone(), df, pe, engine.compare_scaling(&t.layers, pe))
     });
 
     let mut w = CsvWriter::new(&["workload", "dataflow", "pes", "up_cycles", "out_cycles", "ratio"]);
@@ -73,8 +75,9 @@ fn main() {
         println!();
     }
 
+    let os_engine = &engines[0].1;
     bench_auto("fig09/scale_sweep", std::time::Duration::from_secs(3), || {
-        compare_topology(&base, &topos[0].layers, 16384).up_cycles
+        os_engine.compare_scaling(&topos[0].layers, 16384).up_cycles
     });
     println!("fig09 OK -> results/fig09.csv");
 }

@@ -1,6 +1,7 @@
 //! Fig 10: ratio of DRAM bandwidth requirement for *weight* matrices,
 //! scale-up vs scale-out, per layer, for AlphaGoZero (W1, panels a-c)
-//! and DeepSpeech2 (W2, panels d-f) under OS / WS / IS.
+//! and DeepSpeech2 (W2, panels d-f) under OS / WS / IS, through the
+//! engine façade.
 //!
 //! Findings to reproduce: most W1 layers favor scale-up at small PE
 //! counts with the trend shifting as PEs grow; IS reverses the trend;
@@ -8,16 +9,15 @@
 
 use std::path::Path;
 
-use scale_sim::config::{self, workloads, ArchConfig};
-use scale_sim::dataflow::Dataflow;
-use scale_sim::scaleout::compare_layer;
+use scale_sim::config::workloads;
+use scale_sim::engine::Engine;
 use scale_sim::util::bench::bench_auto;
 use scale_sim::util::csv::CsvWriter;
+use scale_sim::Dataflow;
 
 const PES: [u64; 4] = [256, 1024, 4096, 16384];
 
 fn main() {
-    let base = config::paper_default();
     let mut w = CsvWriter::new(&["workload", "dataflow", "layer", "pes", "weight_bw_ratio"]);
 
     for (panel_base, wl) in [("a-c", "alphagozero"), ("d-f", "deepspeech2")] {
@@ -31,11 +31,11 @@ fn main() {
                 print!(" {pe:>9}");
             }
             println!();
-            let cfg = ArchConfig { dataflow: df, ..base.clone() };
+            let engine = Engine::builder().dataflow(df).build().unwrap();
             for layer in &topo.layers {
                 print!("{:<16}", layer.name);
                 for pe in PES {
-                    let c = compare_layer(&cfg, layer, pe);
+                    let c = engine.compare_scaling(std::slice::from_ref(layer), pe);
                     let r = c.weight_bw_ratio();
                     print!(" {r:>9.3}");
                     w.row(&[
@@ -54,10 +54,11 @@ fn main() {
     w.write_to(Path::new("results/fig10.csv")).unwrap();
 
     let topo = workloads::builtin("alphagozero").unwrap();
+    let engine = Engine::builder().build().unwrap();
     bench_auto("fig10/per_layer_compare(W1)", std::time::Duration::from_secs(2), || {
         topo.layers
             .iter()
-            .map(|l| compare_layer(&base, l, 16384).weight_bw_ratio())
+            .map(|l| engine.compare_scaling(std::slice::from_ref(l), 16384).weight_bw_ratio())
             .sum::<f64>()
     });
     println!("fig10 OK -> results/fig10.csv");

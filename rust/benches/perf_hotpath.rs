@@ -6,18 +6,17 @@
 //! * memory/double-buffer simulation        — O(#folds + rows touched)
 //! * full-trace generation + summarize      — O(#SRAM events), the
 //!   dominant cost when dumping traces (§III-E step 1)
-//! * full MLPerf suite simulation           — the end-to-end L3 metric
+//! * full MLPerf suite through the engine   — the end-to-end L3 metric,
+//!   cold cache vs memoized
 //! * RTL cycle-level simulation             — the substrate we beat
 
 use std::time::Duration;
 
 use scale_sim::config::{self, workloads, ArchConfig};
-use scale_sim::dataflow::Dataflow;
-use scale_sim::sim::Simulator;
-use scale_sim::sweep;
+use scale_sim::engine::Engine;
 use scale_sim::trace;
 use scale_sim::util::bench::{bench, bench_auto, black_box};
-use scale_sim::{rtl, LayerShape};
+use scale_sim::{rtl, Dataflow, LayerShape};
 
 fn main() {
     let cfg = config::paper_default();
@@ -27,11 +26,11 @@ fn main() {
         black_box(Dataflow::Os.timing(&layer, 128, 128).cycles)
     });
 
-    let small = ArchConfig { array_h: 8, array_w: 8, ..cfg.clone() };
     bench_auto("perf/fold_schedule(8x8,conv)", Duration::from_secs(1), || {
         trace::fold_schedule(Dataflow::Os, &layer, 8, 8).map(|f| f.cycles).sum::<u64>()
     });
 
+    let small = ArchConfig { array_h: 8, array_w: 8, ..cfg.clone() };
     bench_auto("perf/memory_simulate(8x8,conv)", Duration::from_secs(1), || {
         scale_sim::memory::simulate(Dataflow::Os, &layer, &small).0.total()
     });
@@ -48,14 +47,33 @@ fn main() {
     }
 
     let topos = workloads::mlperf_suite();
-    let threads = sweep::default_threads();
-    bench("perf/mlperf_suite(128x128,os)", 1, 5, || {
-        let sim = Simulator::new(cfg.clone());
-        topos.iter().map(|t| sim.run_topology(t).total_cycles()).sum::<u64>()
+    bench("perf/mlperf_suite_cold(128x128,os)", 1, 5, || {
+        let engine = Engine::new(cfg.clone());
+        topos.iter().map(|t| engine.run_topology(t).total_cycles()).sum::<u64>()
     });
-    bench("perf/mlperf_suite_parallel_sweep", 1, 5, || {
-        sweep::dataflow_sweep(&cfg, &topos, &[128, 8], threads).len()
+    let warm = Engine::new(cfg.clone());
+    for t in &topos {
+        warm.run_topology(t); // populate the memo cache
+    }
+    bench("perf/mlperf_suite_warm(memoized)", 1, 5, || {
+        topos.iter().map(|t| warm.run_topology(t).total_cycles()).sum::<u64>()
     });
+    bench("perf/mlperf_dataflow_sweep_cold", 1, 5, || {
+        let engine = Engine::new(cfg.clone());
+        engine
+            .sweep()
+            .workloads(&topos)
+            .dataflows(&Dataflow::ALL)
+            .square_arrays(&[128, 8])
+            .run()
+            .points
+            .len()
+    });
+    println!(
+        "perf/warm_cache: {} entries, {:.1}% lifetime hit rate",
+        warm.cache_entries(),
+        warm.cache_stats().hit_rate() * 100.0
+    );
 
     let (a, b) = rtl::random_matrices(64, 64, 64, 1);
     bench("perf/rtl_64x64", 1, 5, || black_box(rtl::run_matmul(&a, &b, 64, 64, 64).cycles));

@@ -1,23 +1,32 @@
-//! Run coordination — the Fig-1 "tool" wrapper around the library: takes
-//! a config + topology, fans layer simulations out over worker threads,
-//! writes the output file set (summary csvs, optional cycle-accurate
-//! trace csvs), and optionally cross-checks the mapping *functionally*
-//! by executing the layer's GEMM through the AOT Pallas artifact on the
-//! PJRT runtime.
+//! Legacy run coordination — the pre-engine "tool" wrapper around the
+//! library (Fig 1): a [`RunSpec`] bundles config + topology + output
+//! options, and [`run`] executes it.
+//!
+//! This module is now a thin shim over [`crate::engine`]: `run`
+//! translates the spec into an [`crate::engine::EngineBuilder`] and
+//! delegates, so its behavior (parallel layer fan-out, report files,
+//! trace dumps, functional validation) is exactly [`Engine::run`]'s.
+//! External callers should migrate:
+//!
+//! ```text
+//! // before                            // after
+//! let mut spec = RunSpec::new(c, t);   let engine = Engine::builder()
+//! spec.out_dir = Some(dir);                .config(c)
+//! spec.dump_traces = true;                 .out_dir(dir)
+//! let out = run(&spec)?;                   .dump_traces(true)
+//!                                          .build()?;
+//!                                      let out = engine.run(&t)?;
+//! ```
 
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
 
 use crate::config::{ArchConfig, Topology};
-use crate::report;
-use crate::runtime::Runtime;
-use crate::sim::{LayerReport, Simulator, WorkloadReport};
-use crate::sweep::parallel_map;
-use crate::trace::{self, Access};
-use crate::util::csv::CsvWriter;
-use crate::util::rng::Rng;
-use crate::{Error, Result};
+use crate::engine::Engine;
+use crate::Result;
 
-/// A full simulation run request.
+pub use crate::engine::RunOutcome;
+
+/// A full simulation run request (legacy form; see the module docs).
 #[derive(Clone, Debug)]
 pub struct RunSpec {
     pub cfg: ArchConfig,
@@ -28,7 +37,7 @@ pub struct RunSpec {
     /// truncate at `trace_limit` events per layer).
     pub dump_traces: bool,
     pub trace_limit: u64,
-    /// Cross-check layer numerics through the PJRT artifact with this
+    /// Cross-check layer numerics through the AOT artifact with this
     /// tile size (requires `make artifacts`).
     pub functional_tile: Option<usize>,
     pub threads: usize,
@@ -46,130 +55,33 @@ impl RunSpec {
             threads: crate::sweep::default_threads(),
         }
     }
-}
 
-/// Outcome of one coordinated run.
-#[derive(Debug)]
-pub struct RunOutcome {
-    pub report: WorkloadReport,
-    /// (layer, max abs error) per functionally-checked layer.
-    pub functional: Vec<(String, f32)>,
-    pub files_written: Vec<PathBuf>,
+    /// Build the equivalent engine for this spec.
+    pub fn to_engine(&self) -> Result<Engine> {
+        let mut b = Engine::builder()
+            .config(self.cfg.clone())
+            .dump_traces(self.dump_traces)
+            .trace_limit(self.trace_limit)
+            .threads(self.threads);
+        if let Some(dir) = &self.out_dir {
+            b = b.out_dir(dir.clone());
+        }
+        if let Some(tile) = self.functional_tile {
+            b = b.functional_tile(tile);
+        }
+        b.build()
+    }
 }
 
 /// Execute a run: parallel layer simulation, reports, optional traces,
 /// optional functional validation.
+#[deprecated(since = "0.2.0", note = "use engine::Engine::builder()...build()?.run(&topology)")]
 pub fn run(spec: &RunSpec) -> Result<RunOutcome> {
-    spec.cfg.validate()?;
-    let sim = Simulator::new(spec.cfg.clone());
-    let layers: Vec<LayerReport> =
-        parallel_map(&spec.topology.layers, spec.threads, |l| sim.run_layer(l));
-    let report = WorkloadReport { workload: spec.topology.name.clone(), layers };
-
-    let mut files = Vec::new();
-    if let Some(dir) = &spec.out_dir {
-        report::write_all(dir, &report, spec.cfg.total_pes())?;
-        for f in [
-            "compute_report.csv",
-            "sram_report.csv",
-            "dram_report.csv",
-            "energy_report.csv",
-            "summary.md",
-        ] {
-            files.push(dir.join(f));
-        }
-        if spec.dump_traces {
-            files.extend(dump_traces(spec, dir)?);
-        }
-    }
-
-    let functional = match spec.functional_tile {
-        Some(tile) => functional_check(spec, tile)?,
-        None => Vec::new(),
-    };
-
-    Ok(RunOutcome { report, functional, files_written: files })
-}
-
-/// Write per-layer cycle-accurate SRAM traces: both the event-list form
-/// (`cycle,kind,addr`) and the original tool's per-port csv format
-/// (`<layer>_sram_read.csv` / `<layer>_sram_write.csv`, §III-F).
-fn dump_traces(spec: &RunSpec, dir: &Path) -> Result<Vec<PathBuf>> {
-    let tdir = dir.join("traces");
-    std::fs::create_dir_all(&tdir)?;
-    let mut out = Vec::new();
-    for layer in &spec.topology.layers {
-        let mut w = CsvWriter::new(&["cycle", "kind", "address"]);
-        let mut n = 0u64;
-        trace::generate(spec.cfg.dataflow, layer, &spec.cfg, |cycle, access, addr| {
-            if n >= spec.trace_limit {
-                return;
-            }
-            n += 1;
-            let kind = match access {
-                Access::IfmapRead => "ifmap_read",
-                Access::FilterRead => "filter_read",
-                Access::OfmapWrite => "ofmap_write",
-                Access::OfmapRead => "ofmap_read",
-            };
-            w.row(&[cycle.to_string(), kind.to_string(), addr.to_string()]);
-        });
-        let base = sanitize(&layer.name);
-        let path = tdir.join(format!("{base}_sram_trace.csv"));
-        w.write_to(&path)?;
-        out.push(path);
-
-        // original per-port format, bounded by the same event budget
-        let max_cycles =
-            (spec.trace_limit / (spec.cfg.array_h + spec.cfg.array_w).max(1)) as usize;
-        let pt = trace::port_trace(spec.cfg.dataflow, layer, &spec.cfg, max_cycles.max(1));
-        let rd = tdir.join(format!("{base}_sram_read.csv"));
-        std::fs::write(&rd, pt.sram_read_csv())?;
-        out.push(rd);
-        let wr = tdir.join(format!("{base}_sram_write.csv"));
-        std::fs::write(&wr, pt.sram_write_csv())?;
-        out.push(wr);
-    }
-    Ok(out)
-}
-
-fn sanitize(name: &str) -> String {
-    name.chars().map(|c| if c.is_alphanumeric() || c == '_' { c } else { '_' }).collect()
-}
-
-/// Execute each layer's GEMM view through the AOT systolic artifact and
-/// compare against a Rust reference — proving the timed mapping computes
-/// correct numerics. Layers larger than a budget are subsampled to keep
-/// interpret-mode CPU execution tractable.
-fn functional_check(spec: &RunSpec, tile: usize) -> Result<Vec<(String, f32)>> {
-    let mut rt = Runtime::new(&crate::runtime::default_artifact_dir())?;
-    let mut results = Vec::new();
-    let mut rng = Rng::new(0x5CA1E);
-    for layer in &spec.topology.layers {
-        let (m, k, n) = layer.gemm_view();
-        // cap the functional GEMM so the check stays fast; correctness
-        // of the tiling is shape-independent
-        let (m, k, n) = (m.min(96) as usize, k.min(96) as usize, n.min(96) as usize);
-        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
-        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
-        let got = rt.tiled_gemm(tile, &a, &b, m, k, n)?;
-        let want = crate::rtl::matmul_ref(&a, &b, m, k, n);
-        let mut max_err = 0f32;
-        for (g, w) in got.iter().zip(&want) {
-            max_err = max_err.max((g - w).abs() / (1.0 + w.abs()));
-        }
-        if max_err > 1e-3 {
-            return Err(Error::Runtime(format!(
-                "functional check failed on {}: max rel err {max_err}",
-                layer.name
-            )));
-        }
-        results.push((layer.name.clone(), max_err));
-    }
-    Ok(results)
+    spec.to_engine()?.run(&spec.topology)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::arch::LayerShape;
@@ -241,5 +153,14 @@ mod tests {
         s.threads = 8;
         let b = run(&s).unwrap();
         assert_eq!(a.report, b.report);
+    }
+
+    #[test]
+    fn shim_equals_direct_engine_use() {
+        let s = spec();
+        let via_shim = run(&s).unwrap();
+        let engine = s.to_engine().unwrap();
+        let direct = engine.run(&s.topology).unwrap();
+        assert_eq!(via_shim.report, direct.report);
     }
 }

@@ -1,0 +1,334 @@
+//! The memoizing sweep grid — design-space exploration as a cartesian
+//! product of axes (workloads x dataflows x array shapes x scratchpad
+//! sizes), executed on the [`crate::sweep::parallel_map`] pool through
+//! the engine's shared layer cache.
+//!
+//! Axis order is part of the contract: points are produced in
+//! `workload -> dataflow -> array -> sram` nested order, which is
+//! exactly the order the legacy `sweep::{dataflow,memory,shape}_sweep`
+//! functions produced, so their shim wrappers emit identical tables.
+
+use std::time::{Duration, Instant};
+
+use crate::config::{ArchConfig, Topology};
+use crate::dataflow::Dataflow;
+use crate::sim::WorkloadReport;
+use crate::sweep::parallel_map;
+
+use super::cache::MemoStats;
+use super::Engine;
+
+/// One evaluated grid point: the config coordinates plus the full
+/// workload report (callers project whatever metric they chart).
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub workload: String,
+    pub dataflow: Dataflow,
+    pub array_h: u64,
+    pub array_w: u64,
+    pub ifmap_sram_kb: u64,
+    pub filter_sram_kb: u64,
+    pub report: WorkloadReport,
+}
+
+impl SweepPoint {
+    /// The config this point was simulated under (engine base + axis
+    /// coordinates).
+    pub fn config(&self, base: &ArchConfig) -> ArchConfig {
+        ArchConfig {
+            array_h: self.array_h,
+            array_w: self.array_w,
+            dataflow: self.dataflow,
+            ifmap_sram_kb: self.ifmap_sram_kb,
+            filter_sram_kb: self.filter_sram_kb,
+            ..base.clone()
+        }
+    }
+
+    pub fn total_pes(&self) -> u64 {
+        self.array_h * self.array_w
+    }
+}
+
+/// Execution statistics for one grid run.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepStats {
+    /// Grid points evaluated.
+    pub points: usize,
+    /// Wall-clock time of the grid execution.
+    pub wall: Duration,
+    /// Memoization counters for this run only (delta, not engine-lifetime).
+    pub memo: MemoStats,
+}
+
+impl SweepStats {
+    pub fn hit_rate(&self) -> f64 {
+        self.memo.hit_rate()
+    }
+
+    /// Write the canonical `BENCH_sweep.json` record for this run
+    /// (wall-clock + memoization counters) — the single definition of
+    /// the field set, shared by the CLI and the fig benches.
+    pub fn write_bench_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        crate::util::bench::write_json(
+            path,
+            &[
+                ("sweep_wall_ms", self.wall.as_secs_f64() * 1e3),
+                ("points", self.points as f64),
+                ("layer_sims", self.memo.layer_sims as f64),
+                ("cache_hits", self.memo.cache_hits as f64),
+                ("cache_hit_rate", self.hit_rate()),
+            ],
+        )
+    }
+}
+
+/// Result of [`SweepGrid::run`].
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub points: Vec<SweepPoint>,
+    pub stats: SweepStats,
+}
+
+impl SweepOutcome {
+    /// Find one point by its (workload name, dataflow, array shape)
+    /// coordinates. Returns `None` when the coordinates are ambiguous —
+    /// i.e. the grid also swept an SRAM axis, so several points share
+    /// them — rather than silently returning an arbitrary one; use
+    /// [`SweepOutcome::find_sram`] on such grids.
+    pub fn find(&self, workload: &str, df: Dataflow, h: u64, w: u64) -> Option<&SweepPoint> {
+        let mut it = self.points.iter().filter(|p| {
+            p.workload == workload && p.dataflow == df && p.array_h == h && p.array_w == w
+        });
+        let first = it.next()?;
+        if it.next().is_some() {
+            return None; // ambiguous: SRAM axis differentiates the matches
+        }
+        Some(first)
+    }
+
+    /// Find one point on a grid that swept the scratchpad axis.
+    pub fn find_sram(
+        &self,
+        workload: &str,
+        df: Dataflow,
+        h: u64,
+        w: u64,
+        ifmap_sram_kb: u64,
+    ) -> Option<&SweepPoint> {
+        self.points.iter().find(|p| {
+            p.workload == workload
+                && p.dataflow == df
+                && p.array_h == h
+                && p.array_w == w
+                && p.ifmap_sram_kb == ifmap_sram_kb
+        })
+    }
+}
+
+/// Builder for one grid execution; obtained from [`Engine::sweep`].
+/// Every axis defaults to the engine's base configuration (a
+/// single-point "sweep"), so callers only name the axes they explore.
+pub struct SweepGrid<'e> {
+    engine: &'e Engine,
+    workloads: Vec<Topology>,
+    dataflows: Vec<Dataflow>,
+    arrays: Vec<(u64, u64)>,
+    sram_kb: Vec<(u64, u64)>,
+    threads: usize,
+}
+
+impl<'e> SweepGrid<'e> {
+    pub(crate) fn new(engine: &'e Engine) -> Self {
+        let cfg = engine.cfg();
+        SweepGrid {
+            engine,
+            workloads: Vec::new(),
+            dataflows: vec![cfg.dataflow],
+            arrays: vec![(cfg.array_h, cfg.array_w)],
+            sram_kb: vec![(cfg.ifmap_sram_kb, cfg.filter_sram_kb)],
+            threads: engine.threads(),
+        }
+    }
+
+    /// Workload axis (required: an empty grid evaluates no points).
+    pub fn workloads(mut self, topos: &[Topology]) -> Self {
+        self.workloads = topos.to_vec();
+        self
+    }
+
+    /// Single-workload convenience.
+    pub fn workload(mut self, topo: &Topology) -> Self {
+        self.workloads = vec![topo.clone()];
+        self
+    }
+
+    /// Dataflow axis (default: the engine's configured dataflow).
+    pub fn dataflows(mut self, dfs: &[Dataflow]) -> Self {
+        self.dataflows = dfs.to_vec();
+        self
+    }
+
+    /// Square-array axis: `n` -> `n x n` (Fig 5/6 style).
+    pub fn square_arrays(mut self, dims: &[u64]) -> Self {
+        self.arrays = dims.iter().map(|&n| (n, n)).collect();
+        self
+    }
+
+    /// Arbitrary array-shape axis (Fig 8 style aspect-ratio ladders).
+    pub fn array_shapes(mut self, shapes: &[(u64, u64)]) -> Self {
+        self.arrays = shapes.to_vec();
+        self
+    }
+
+    /// Scratchpad axis: each size applies to both the IFMAP and filter
+    /// partitions (Fig 7 style; the paper sweeps them in lockstep).
+    pub fn sram_sizes_kb(mut self, kbs: &[u64]) -> Self {
+        self.sram_kb = kbs.iter().map(|&kb| (kb, kb)).collect();
+        self
+    }
+
+    /// Worker-thread override (default: the engine's thread count).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Number of points this grid will evaluate.
+    pub fn len(&self) -> usize {
+        self.workloads.len() * self.dataflows.len() * self.arrays.len() * self.sram_kb.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Execute every point. Points sharing (config, layer-shape) pairs —
+    /// within one point's topology or across concurrent points — are
+    /// simulated once and served from the engine's memo cache after.
+    pub fn run(self) -> SweepOutcome {
+        let engine = self.engine;
+        let base = engine.cfg();
+        let mut jobs: Vec<(&Topology, Dataflow, (u64, u64), (u64, u64))> = Vec::new();
+        for topo in &self.workloads {
+            for &df in &self.dataflows {
+                for &arr in &self.arrays {
+                    for &sram in &self.sram_kb {
+                        jobs.push((topo, df, arr, sram));
+                    }
+                }
+            }
+        }
+
+        let before = engine.cache_stats();
+        let t0 = Instant::now();
+        let points = parallel_map(&jobs, self.threads, |&(topo, df, (h, w), (ikb, fkb))| {
+            let cfg = ArchConfig {
+                array_h: h,
+                array_w: w,
+                dataflow: df,
+                ifmap_sram_kb: ikb,
+                filter_sram_kb: fkb,
+                ..base.clone()
+            };
+            SweepPoint {
+                workload: topo.name.clone(),
+                dataflow: df,
+                array_h: h,
+                array_w: w,
+                ifmap_sram_kb: ikb,
+                filter_sram_kb: fkb,
+                report: engine.run_topology_with(&cfg, topo),
+            }
+        });
+        let wall = t0.elapsed();
+        let memo = engine.cache_stats().since(&before);
+        SweepOutcome { points, stats: SweepStats { points: jobs.len(), wall, memo } }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::config;
+
+    fn topo(name: &str) -> Topology {
+        Topology::new(
+            name,
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::conv("c2", 16, 16, 3, 3, 4, 8, 1), // repeat of c1's shape
+                LayerShape::fc("fc", 1, 64, 10),
+            ],
+        )
+    }
+
+    fn engine() -> Engine {
+        Engine::new(config::paper_default())
+    }
+
+    #[test]
+    fn grid_is_the_full_cartesian_product_in_order() {
+        let e = engine();
+        let out = e
+            .sweep()
+            .workloads(&[topo("a"), topo("b")])
+            .dataflows(&Dataflow::ALL)
+            .square_arrays(&[16, 8])
+            .run();
+        assert_eq!(out.points.len(), 2 * 3 * 2);
+        assert_eq!(out.stats.points, 12);
+        // nested order: workload outer, then dataflow, then array
+        assert_eq!(out.points[0].workload, "a");
+        assert_eq!(out.points[0].dataflow, Dataflow::Os);
+        assert_eq!((out.points[0].array_h, out.points[1].array_h), (16, 8));
+        assert_eq!(out.points[2].dataflow, Dataflow::Ws);
+        assert_eq!(out.points[6].workload, "b");
+    }
+
+    #[test]
+    fn repeated_layer_shapes_hit_the_cache() {
+        let e = engine();
+        let out = e.sweep().workload(&topo("t")).square_arrays(&[16]).run();
+        // c1/c2 share a shape: 2 distinct sims, 1 hit
+        assert_eq!(out.stats.memo.layer_sims, 2);
+        assert_eq!(out.stats.memo.cache_hits, 1);
+        assert!(out.stats.hit_rate() > 0.3);
+        // reports still name both layers
+        let r = &out.points[0].report;
+        assert_eq!(r.layers[1].name(), "c2");
+        assert_eq!(r.layers[0].timing, r.layers[1].timing);
+    }
+
+    #[test]
+    fn rerunning_the_same_grid_is_fully_cached() {
+        let e = engine();
+        let first = e.sweep().workload(&topo("t")).square_arrays(&[16, 8]).run();
+        let second = e.sweep().workload(&topo("t")).square_arrays(&[16, 8]).run();
+        assert_eq!(second.stats.memo.layer_sims, 0, "second run must be 100% cached");
+        assert!(second.stats.hit_rate() > 0.999);
+        for (a, b) in first.points.iter().zip(&second.points) {
+            assert_eq!(a.report, b.report);
+        }
+    }
+
+    #[test]
+    fn single_point_grid_defaults_to_engine_config() {
+        let e = engine();
+        let out = e.sweep().workload(&topo("t")).run();
+        assert_eq!(out.points.len(), 1);
+        let p = &out.points[0];
+        assert_eq!((p.array_h, p.array_w), (128, 128));
+        assert_eq!(p.dataflow, Dataflow::Os);
+        assert_eq!(p.config(e.cfg()), *e.cfg());
+    }
+
+    #[test]
+    fn find_locates_points() {
+        let e = engine();
+        let out = e.sweep().workload(&topo("t")).square_arrays(&[16, 8]).run();
+        assert!(out.find("t", Dataflow::Os, 8, 8).is_some());
+        assert!(out.find("t", Dataflow::Ws, 8, 8).is_none());
+    }
+}

@@ -1,0 +1,609 @@
+//! The unified simulation engine — **the** public entry point for every
+//! simulation the crate performs (single runs, design-space sweeps, and
+//! validation), introduced to replace the three historical entry points
+//! (`sim::Simulator`, `coordinator::run`, the `sweep::*_sweep`
+//! functions), which remain as thin deprecated shims over this module.
+//!
+//! Three pieces compose:
+//!
+//! * [`EngineBuilder`] — fluent configuration: architecture overrides,
+//!   worker threads, output directory/trace dumping, functional
+//!   cross-checking, energy model, and the fidelity [`Backend`].
+//! * [`Backend`] — pluggable per-layer timing models (analytical closed
+//!   forms, cycle-accurate trace generation, cycle-level RTL), all
+//!   cycle-exact with each other; see [`backend`] for the contract.
+//! * [`SweepGrid`] — cartesian design-space sweeps with engine-lifetime
+//!   **memoization of per-(config, layer-shape) results** (see [`cache`]
+//!   for the key semantics): grid points sharing layers never
+//!   re-simulate, which is a direct wall-clock win on the paper's
+//!   Fig 5-8 suites where repeated ResNet/AlphaGoZero/Transformer block
+//!   shapes dominate (>50% hit rates).
+//!
+//! ```text
+//! let engine = Engine::builder()
+//!     .dataflow(Dataflow::Os)
+//!     .array(128, 128)
+//!     .build()?;
+//! let outcome = engine.sweep()
+//!     .workloads(&workloads::mlperf_suite())
+//!     .dataflows(&Dataflow::ALL)
+//!     .square_arrays(&[128, 64, 32, 16, 8])
+//!     .run();
+//! println!("hit rate {:.0}%", outcome.stats.hit_rate() * 100.0);
+//! ```
+
+pub mod backend;
+pub(crate) mod cache;
+pub mod grid;
+
+pub use backend::{Analytical, Backend, BackendKind, Rtl, TraceDriven};
+pub use cache::MemoStats;
+pub use grid::{SweepGrid, SweepOutcome, SweepPoint, SweepStats};
+
+use std::path::{Path, PathBuf};
+
+use crate::arch::LayerShape;
+use crate::config::{ArchConfig, Topology};
+use crate::energy::EnergyModel;
+use crate::memory;
+use crate::report;
+use crate::sim::flex::{FlexLayer, FlexReport};
+use crate::sim::{LayerReport, WorkloadReport};
+use crate::sweep::parallel_map;
+use crate::trace::{self, Access};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Rng;
+use crate::{Dataflow, Error, Result};
+
+use cache::{CacheKey, LayerCache};
+
+/// Outcome of one coordinated run ([`Engine::run`]): the report plus
+/// whatever side artifacts were requested.
+#[derive(Debug)]
+pub struct RunOutcome {
+    pub report: WorkloadReport,
+    /// (layer, max abs error) per functionally-checked layer.
+    pub functional: Vec<(String, f32)>,
+    pub files_written: Vec<PathBuf>,
+}
+
+/// The simulation engine: one base architecture + energy model + fidelity
+/// backend + memo cache, shared across runs and sweeps.
+pub struct Engine {
+    cfg: ArchConfig,
+    energy_model: EnergyModel,
+    kind: BackendKind,
+    backend: Box<dyn Backend>,
+    threads: usize,
+    out_dir: Option<PathBuf>,
+    dump_traces: bool,
+    trace_limit: u64,
+    functional_tile: Option<usize>,
+    cache: LayerCache,
+}
+
+impl Engine {
+    /// Analytical engine over `cfg` with every option at its default —
+    /// the drop-in equivalent of the old `Simulator::new`.
+    pub fn new(cfg: ArchConfig) -> Engine {
+        EngineBuilder::default().config(cfg).build_unchecked()
+    }
+
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    pub fn cfg(&self) -> &ArchConfig {
+        &self.cfg
+    }
+
+    pub fn backend_kind(&self) -> BackendKind {
+        self.kind
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn energy_model(&self) -> &EnergyModel {
+        &self.energy_model
+    }
+
+    /// Engine-lifetime memoization counters.
+    pub fn cache_stats(&self) -> MemoStats {
+        self.cache.stats()
+    }
+
+    /// Distinct (config, layer-shape) entries currently cached.
+    pub fn cache_entries(&self) -> usize {
+        self.cache.entries()
+    }
+
+    /// Simulate one layer under an arbitrary configuration (the grid's
+    /// inner loop). Memoized; see [`cache`] for the key semantics.
+    pub fn run_layer_with(&self, cfg: &ArchConfig, layer: &LayerShape) -> LayerReport {
+        let key = CacheKey::new(self.kind, cfg, layer);
+        self.cache.get_or_compute(key, &layer.name, || {
+            let timing = self.backend.timing(cfg, layer);
+            let (dram, bandwidth) = memory::simulate(cfg.dataflow, layer, cfg);
+            let energy =
+                self.energy_model
+                    .layer_energy(layer.macs(), &timing, &dram, cfg.word_bytes);
+            LayerReport { layer: layer.clone(), timing, dram, bandwidth, energy }
+        })
+    }
+
+    /// Simulate one layer under the engine's base configuration.
+    pub fn run_layer(&self, layer: &LayerShape) -> LayerReport {
+        self.run_layer_with(&self.cfg, layer)
+    }
+
+    /// Simulate every layer of a topology in file order under an
+    /// arbitrary configuration (§III-F: parallel branches serialize).
+    pub fn run_topology_with(&self, cfg: &ArchConfig, topo: &Topology) -> WorkloadReport {
+        WorkloadReport {
+            workload: topo.name.clone(),
+            layers: topo.layers.iter().map(|l| self.run_layer_with(cfg, l)).collect(),
+        }
+    }
+
+    /// Simulate a topology under the engine's base configuration.
+    pub fn run_topology(&self, topo: &Topology) -> WorkloadReport {
+        self.run_topology_with(&self.cfg, topo)
+    }
+
+    /// Full coordinated run: parallel layer simulation, report files,
+    /// optional cycle-accurate trace dumps, optional functional
+    /// validation through the AOT artifacts — the engine-native form of
+    /// the old `coordinator::run`.
+    pub fn run(&self, topo: &Topology) -> Result<RunOutcome> {
+        self.cfg.validate()?;
+        let layers: Vec<LayerReport> =
+            parallel_map(&topo.layers, self.threads, |l| self.run_layer(l));
+        let report = WorkloadReport { workload: topo.name.clone(), layers };
+
+        let mut files = Vec::new();
+        if let Some(dir) = &self.out_dir {
+            report::write_all(dir, &report, self.cfg.total_pes())?;
+            for f in [
+                "compute_report.csv",
+                "sram_report.csv",
+                "dram_report.csv",
+                "energy_report.csv",
+                "summary.md",
+            ] {
+                files.push(dir.join(f));
+            }
+            if self.dump_traces {
+                files.extend(self.dump_traces_to(topo, dir)?);
+            }
+        }
+
+        let functional = match self.functional_tile {
+            Some(tile) => self.functional_check(topo, tile)?,
+            None => Vec::new(),
+        };
+
+        Ok(RunOutcome { report, functional, files_written: files })
+    }
+
+    /// Start building a memoizing design-space sweep over this engine.
+    pub fn sweep(&self) -> SweepGrid<'_> {
+        SweepGrid::new(self)
+    }
+
+    /// Flexible-dataflow study (§IV-B question 3) through the engine:
+    /// every layer under all three dataflows, memoized.
+    pub fn flexible_study(&self, topo: &Topology) -> FlexReport {
+        let cfgs: Vec<ArchConfig> = Dataflow::ALL
+            .iter()
+            .map(|&df| ArchConfig { dataflow: df, ..self.cfg.clone() })
+            .collect();
+        let mut layers = Vec::with_capacity(topo.layers.len());
+        let mut fixed = [0u64; 3];
+        let mut flexible = 0u64;
+        for layer in &topo.layers {
+            let cycles: Vec<u64> = cfgs
+                .iter()
+                .map(|c| self.run_layer_with(c, layer).timing.cycles)
+                .collect();
+            let cycles = [cycles[0], cycles[1], cycles[2]];
+            for (f, c) in fixed.iter_mut().zip(cycles) {
+                *f += c;
+            }
+            let best_i = (0..3).min_by_key(|&i| cycles[i]).unwrap();
+            flexible += cycles[best_i];
+            layers.push(FlexLayer { name: layer.name.clone(), best: Dataflow::ALL[best_i], cycles });
+        }
+        FlexReport {
+            workload: topo.name.clone(),
+            layers,
+            fixed_cycles: fixed,
+            flexible_cycles: flexible,
+        }
+    }
+
+    /// Scale-up vs scale-out comparison (§IV-E) under the engine's base
+    /// configuration.
+    pub fn compare_scaling(
+        &self,
+        layers: &[LayerShape],
+        pe_budget: u64,
+    ) -> crate::scaleout::ScaleComparison {
+        crate::scaleout::compare_topology(&self.cfg, layers, pe_budget)
+    }
+
+    /// Write per-layer cycle-accurate SRAM traces: both the event-list
+    /// form (`cycle,kind,addr`) and the original tool's per-port csv
+    /// format (`<layer>_sram_read.csv` / `<layer>_sram_write.csv`,
+    /// §III-F).
+    fn dump_traces_to(&self, topo: &Topology, dir: &Path) -> Result<Vec<PathBuf>> {
+        let tdir = dir.join("traces");
+        std::fs::create_dir_all(&tdir)?;
+        let mut out = Vec::new();
+        for layer in &topo.layers {
+            let mut w = CsvWriter::new(&["cycle", "kind", "address"]);
+            let mut n = 0u64;
+            trace::generate(self.cfg.dataflow, layer, &self.cfg, |cycle, access, addr| {
+                if n >= self.trace_limit {
+                    return;
+                }
+                n += 1;
+                let kind = match access {
+                    Access::IfmapRead => "ifmap_read",
+                    Access::FilterRead => "filter_read",
+                    Access::OfmapWrite => "ofmap_write",
+                    Access::OfmapRead => "ofmap_read",
+                };
+                w.row(&[cycle.to_string(), kind.to_string(), addr.to_string()]);
+            });
+            let base = sanitize(&layer.name);
+            let path = tdir.join(format!("{base}_sram_trace.csv"));
+            w.write_to(&path)?;
+            out.push(path);
+
+            // original per-port format, bounded by the same event budget
+            let max_cycles =
+                (self.trace_limit / (self.cfg.array_h + self.cfg.array_w).max(1)) as usize;
+            let pt = trace::port_trace(self.cfg.dataflow, layer, &self.cfg, max_cycles.max(1));
+            let rd = tdir.join(format!("{base}_sram_read.csv"));
+            std::fs::write(&rd, pt.sram_read_csv())?;
+            out.push(rd);
+            let wr = tdir.join(format!("{base}_sram_write.csv"));
+            std::fs::write(&wr, pt.sram_write_csv())?;
+            out.push(wr);
+        }
+        Ok(out)
+    }
+
+    /// Execute each layer's GEMM view through the AOT systolic artifact
+    /// and compare against a Rust reference — proving the timed mapping
+    /// computes correct numerics. Layers larger than a budget are
+    /// subsampled to keep execution tractable.
+    fn functional_check(&self, topo: &Topology, tile: usize) -> Result<Vec<(String, f32)>> {
+        let mut rt = crate::runtime::Runtime::new(&crate::runtime::default_artifact_dir())?;
+        let mut results = Vec::new();
+        let mut rng = Rng::new(0x5CA1E);
+        for layer in &topo.layers {
+            let (m, k, n) = layer.gemm_view();
+            // cap the functional GEMM so the check stays fast;
+            // correctness of the tiling is shape-independent
+            let (m, k, n) = (m.min(96) as usize, k.min(96) as usize, n.min(96) as usize);
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+            let got = rt.tiled_gemm(tile, &a, &b, m, k, n)?;
+            let want = crate::rtl::matmul_ref(&a, &b, m, k, n);
+            let mut max_err = 0f32;
+            for (g, w) in got.iter().zip(&want) {
+                max_err = max_err.max((g - w).abs() / (1.0 + w.abs()));
+            }
+            if max_err > 1e-3 {
+                return Err(Error::Runtime(format!(
+                    "functional check failed on {}: max rel err {max_err}",
+                    layer.name
+                )));
+            }
+            results.push((layer.name.clone(), max_err));
+        }
+        Ok(results)
+    }
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars().map(|c| if c.is_alphanumeric() || c == '_' { c } else { '_' }).collect()
+}
+
+/// Fluent engine construction. Every setter is optional; `build`
+/// validates the final configuration.
+pub struct EngineBuilder {
+    cfg: ArchConfig,
+    energy_model: EnergyModel,
+    kind: BackendKind,
+    custom: Option<Box<dyn Backend>>,
+    threads: usize,
+    out_dir: Option<PathBuf>,
+    dump_traces: bool,
+    trace_limit: u64,
+    functional_tile: Option<usize>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        EngineBuilder {
+            cfg: ArchConfig::default(),
+            energy_model: EnergyModel::default(),
+            kind: BackendKind::Analytical,
+            custom: None,
+            threads: crate::sweep::default_threads(),
+            out_dir: None,
+            dump_traces: false,
+            trace_limit: 2_000_000,
+            functional_tile: None,
+        }
+    }
+}
+
+impl EngineBuilder {
+    /// Replace the whole base configuration.
+    pub fn config(mut self, cfg: ArchConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Load the base configuration from a Table-I `.cfg` file.
+    pub fn config_file(mut self, path: &Path) -> Result<Self> {
+        self.cfg = ArchConfig::from_file(path)?;
+        Ok(self)
+    }
+
+    pub fn dataflow(mut self, df: Dataflow) -> Self {
+        self.cfg.dataflow = df;
+        self
+    }
+
+    pub fn array(mut self, rows: u64, cols: u64) -> Self {
+        self.cfg.array_h = rows;
+        self.cfg.array_w = cols;
+        self
+    }
+
+    /// Per-operand scratchpad sizes in KB (ifmap, filter, ofmap).
+    pub fn sram_kb(mut self, ifmap: u64, filter: u64, ofmap: u64) -> Self {
+        self.cfg.ifmap_sram_kb = ifmap;
+        self.cfg.filter_sram_kb = filter;
+        self.cfg.ofmap_sram_kb = ofmap;
+        self
+    }
+
+    pub fn word_bytes(mut self, b: u64) -> Self {
+        self.cfg.word_bytes = b;
+        self
+    }
+
+    /// Select a built-in fidelity backend (default: analytical).
+    pub fn backend(mut self, kind: BackendKind) -> Self {
+        self.kind = kind;
+        self
+    }
+
+    /// Install an out-of-crate [`Backend`] implementation — the
+    /// extension seam for future fidelity levels. The engine reports
+    /// [`BackendKind::Custom`]; the cache is engine-local, so a custom
+    /// backend never shares entries with another engine's.
+    pub fn custom_backend(mut self, backend: Box<dyn Backend>) -> Self {
+        self.kind = BackendKind::Custom;
+        self.custom = Some(backend);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n.max(1);
+        self
+    }
+
+    /// Directory for report files (and traces); created on demand.
+    pub fn out_dir(mut self, dir: impl Into<PathBuf>) -> Self {
+        self.out_dir = Some(dir.into());
+        self
+    }
+
+    pub fn dump_traces(mut self, yes: bool) -> Self {
+        self.dump_traces = yes;
+        self
+    }
+
+    /// Per-layer event budget for trace dumps.
+    pub fn trace_limit(mut self, events: u64) -> Self {
+        self.trace_limit = events;
+        self
+    }
+
+    /// Cross-check layer numerics through the AOT artifact with this
+    /// tile size.
+    pub fn functional_tile(mut self, tile: usize) -> Self {
+        self.functional_tile = Some(tile);
+        self
+    }
+
+    pub fn energy_model(mut self, m: EnergyModel) -> Self {
+        self.energy_model = m;
+        self
+    }
+
+    /// Validate the configuration and construct the engine.
+    pub fn build(self) -> Result<Engine> {
+        self.cfg.validate()?;
+        if self.kind == BackendKind::Custom && self.custom.is_none() {
+            return Err(Error::Config(
+                "BackendKind::Custom requires custom_backend(..)".into(),
+            ));
+        }
+        Ok(self.build_unchecked())
+    }
+
+    fn build_unchecked(self) -> Engine {
+        let backend = match self.custom {
+            Some(b) => b,
+            None => self.kind.instantiate(),
+        };
+        // the backend object is the source of truth for its identity
+        let kind = backend.kind();
+        Engine {
+            backend,
+            cfg: self.cfg,
+            energy_model: self.energy_model,
+            kind,
+            threads: self.threads,
+            out_dir: self.out_dir,
+            dump_traces: self.dump_traces,
+            trace_limit: self.trace_limit,
+            functional_tile: self.functional_tile,
+            cache: LayerCache::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::sim::Simulator;
+
+    fn topo() -> Topology {
+        Topology::new(
+            "t",
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::conv("c2", 14, 14, 3, 3, 8, 16, 1),
+                LayerShape::fc("fc", 1, 256, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn builder_overrides_and_validates() {
+        let e = Engine::builder()
+            .dataflow(Dataflow::Ws)
+            .array(32, 16)
+            .sram_kb(64, 64, 32)
+            .threads(2)
+            .build()
+            .unwrap();
+        assert_eq!(e.cfg().dataflow, Dataflow::Ws);
+        assert_eq!((e.cfg().array_h, e.cfg().array_w), (32, 16));
+        assert_eq!(e.threads(), 2);
+        assert!(Engine::builder().array(0, 8).build().is_err());
+    }
+
+    #[test]
+    fn engine_layer_reports_are_bit_identical_to_simulator() {
+        let cfg = ArchConfig { array_h: 16, array_w: 16, ..config::paper_default() };
+        let engine = Engine::new(cfg.clone());
+        let sim = Simulator::new(cfg);
+        for layer in &topo().layers {
+            assert_eq!(engine.run_layer(layer), sim.run_layer(layer));
+        }
+        assert_eq!(engine.run_topology(&topo()), sim.run_topology(&topo()));
+    }
+
+    #[test]
+    fn run_without_outputs() {
+        let e = Engine::builder()
+            .config(config::paper_default())
+            .array(16, 16)
+            .build()
+            .unwrap();
+        let out = e.run(&topo()).unwrap();
+        assert_eq!(out.report.layers.len(), 3);
+        assert!(out.files_written.is_empty());
+        assert!(out.functional.is_empty());
+    }
+
+    #[test]
+    fn run_writes_reports() {
+        let dir = std::env::temp_dir().join(format!("scale_sim_engine_{}", std::process::id()));
+        let e = Engine::builder()
+            .array(16, 16)
+            .out_dir(&dir)
+            .dump_traces(true)
+            .build()
+            .unwrap();
+        let out = e.run(&topo()).unwrap();
+        assert!(out.files_written.iter().all(|f| f.exists()));
+        assert!(dir.join("traces/c1_sram_trace.csv").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn repeated_runs_hit_the_cache() {
+        let e = Engine::new(config::paper_default());
+        let t = topo();
+        let a = e.run_topology(&t);
+        let sims_after_first = e.cache_stats().layer_sims;
+        let b = e.run_topology(&t);
+        assert_eq!(a, b);
+        assert_eq!(e.cache_stats().layer_sims, sims_after_first, "no new sims");
+        assert_eq!(e.cache_stats().cache_hits, t.layers.len() as u64);
+        assert_eq!(e.cache_entries(), t.layers.len());
+    }
+
+    #[test]
+    fn flexible_study_matches_legacy() {
+        let cfg = ArchConfig { array_h: 16, array_w: 16, ..config::paper_default() };
+        let e = Engine::new(cfg.clone());
+        let ours = e.flexible_study(&topo());
+        let legacy = crate::sim::flex::flexible_study(&cfg, &topo());
+        assert_eq!(ours.fixed_cycles, legacy.fixed_cycles);
+        assert_eq!(ours.flexible_cycles, legacy.flexible_cycles);
+        for (a, b) in ours.layers.iter().zip(&legacy.layers) {
+            assert_eq!(a.best, b.best);
+            assert_eq!(a.cycles, b.cycles);
+        }
+    }
+
+    #[test]
+    fn custom_backend_plugs_in_through_the_builder() {
+        /// An out-of-module backend: analytical timing with a marker kind.
+        struct Doubleway;
+        impl crate::engine::Backend for Doubleway {
+            fn kind(&self) -> BackendKind {
+                BackendKind::Custom
+            }
+            fn timing(
+                &self,
+                cfg: &ArchConfig,
+                layer: &LayerShape,
+            ) -> crate::dataflow::Timing {
+                cfg.dataflow.timing(layer, cfg.array_h, cfg.array_w)
+            }
+        }
+        let e = Engine::builder()
+            .array(16, 16)
+            .custom_backend(Box::new(Doubleway))
+            .build()
+            .unwrap();
+        assert_eq!(e.backend_kind(), BackendKind::Custom);
+        let reference = Engine::builder().array(16, 16).build().unwrap();
+        for layer in &topo().layers {
+            assert_eq!(e.run_layer(layer), reference.run_layer(layer));
+        }
+        // Custom kind without an implementation is rejected
+        assert!(Engine::builder().backend(BackendKind::Custom).build().is_err());
+    }
+
+    #[test]
+    fn backends_agree_through_the_engine() {
+        for kind in BackendKind::ALL {
+            let e = Engine::builder().array(8, 8).backend(kind).build().unwrap();
+            let a = Engine::builder().array(8, 8).build().unwrap();
+            for layer in &topo().layers {
+                assert_eq!(
+                    e.run_layer(layer),
+                    a.run_layer(layer),
+                    "{kind} deviates on {}",
+                    layer.name
+                );
+            }
+        }
+    }
+}

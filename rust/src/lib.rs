@@ -12,22 +12,52 @@
 //! and the stall-free bandwidth requirement; the energy model prices the
 //! access counts.
 //!
+//! ## Entry point: the `engine` façade
+//!
+//! All simulation — single runs, design-space sweeps, validation — goes
+//! through [`engine::Engine`], built with the fluent
+//! [`engine::EngineBuilder`]:
+//!
+//! ```text
+//! let engine = Engine::builder()
+//!     .dataflow(Dataflow::Ws)
+//!     .array(32, 32)
+//!     .backend(BackendKind::Analytical)   // or TraceDriven / Rtl
+//!     .build()?;
+//! let report = engine.run_topology(&topo);          // one workload
+//! let sweep  = engine.sweep()                       // memoized grid
+//!     .workloads(&topos)
+//!     .dataflows(&Dataflow::ALL)
+//!     .square_arrays(&[128, 64, 32, 16, 8])
+//!     .run();
+//! ```
+//!
+//! The engine dispatches per-layer simulation to a pluggable
+//! [`engine::Backend`] (analytical closed forms, cycle-accurate trace
+//! generation, or the cycle-level RTL grid — all cycle-exact with each
+//! other) and memoizes per-(config, layer-shape) results so sweep grid
+//! points sharing layers never re-simulate. The pre-engine entry points
+//! ([`sim::Simulator`], [`coordinator::run`], the `sweep::*_sweep`
+//! functions) remain as thin deprecated shims.
+//!
 //! Module map (paper section in parens):
 //!
 //! * [`arch`]     — layer geometry / workload shapes (Table II)
 //! * [`config`]   — `.cfg` + topology `.csv` front end (Table I, II)
 //! * [`dataflow`] — OS / WS / IS analytical cycle models (§III-B)
+//! * [`engine`]   — **the public façade**: builder, pluggable fidelity
+//!   backends, memoizing sweep grid (§IV methodology)
 //! * [`trace`]    — cycle-accurate SRAM address trace generators (§III-E)
 //! * [`memory`]   — double-buffered scratchpads, DRAM traffic + bandwidth (§III-C)
 //! * [`dram`]     — banked DRAM timing substrate (DRAMSim2 stand-in, §III-D)
 //! * [`energy`]   — access-cost energy model (Fig 6)
 //! * [`rtl`]      — cycle-level PE-grid simulator used for validation (Fig 4)
 //! * [`scaleout`] — scale-up vs scale-out study engine (§IV-E)
-//! * [`sim`]      — per-layer simulation -> [`sim::LayerReport`]
-//! * [`sweep`]    — multi-threaded design-space sweeps (§IV)
+//! * [`sim`]      — legacy per-layer facade -> [`sim::LayerReport`] (shim)
+//! * [`sweep`]    — thread pool + deprecated sweep shims (§IV)
 //! * [`report`]   — csv / markdown output writers (§III-F)
-//! * [`runtime`]  — PJRT client executing the AOT Pallas/JAX artifacts
-//! * [`coordinator`] — run orchestration: jobs, workers, output dirs
+//! * [`runtime`]  — functional executor for the AOT Pallas/JAX artifacts
+//! * [`coordinator`] — legacy run orchestration (shim over `engine`)
 //! * [`util`]     — rng, mini property-test harness, bench timing, csv
 
 pub mod arch;
@@ -36,6 +66,7 @@ pub mod coordinator;
 pub mod dataflow;
 pub mod dram;
 pub mod energy;
+pub mod engine;
 pub mod memory;
 pub mod report;
 pub mod rtl;
@@ -49,21 +80,63 @@ pub mod util;
 pub use arch::LayerShape;
 pub use config::{ArchConfig, Topology};
 pub use dataflow::Dataflow;
+pub use engine::{Backend, BackendKind, Engine, EngineBuilder};
 pub use sim::{LayerReport, Simulator, WorkloadReport};
 
-/// Library-level error type.
-#[derive(Debug, thiserror::Error)]
+/// Library-level error type (hand-rolled: `thiserror` is unavailable in
+/// the offline build).
+#[derive(Debug)]
 pub enum Error {
-    #[error("config parse error: {0}")]
     Config(String),
-    #[error("topology parse error: {0}")]
     Topology(String),
-    #[error("invalid layer {name}: {reason}")]
     InvalidLayer { name: String, reason: String },
-    #[error("runtime error: {0}")]
     Runtime(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config parse error: {m}"),
+            Error::Topology(m) => write!(f, "topology parse error: {m}"),
+            Error::InvalidLayer { name, reason } => {
+                write!(f, "invalid layer {name}: {reason}")
+            }
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_matches_thiserror_era_format() {
+        assert_eq!(Error::Config("x".into()).to_string(), "config parse error: x");
+        assert_eq!(
+            Error::InvalidLayer { name: "c1".into(), reason: "bad".into() }.to_string(),
+            "invalid layer c1: bad"
+        );
+        let io: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(io.to_string().starts_with("io error:"));
+    }
+}

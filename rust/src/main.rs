@@ -1,35 +1,38 @@
 //! `scale-sim` CLI — the leader entrypoint (Fig 1): config + topology in,
 //! traces + summary reports out, plus sweep / validate / artifact
 //! subcommands. Argument parsing is hand-rolled (clap is unavailable in
-//! the offline build).
+//! the offline build). Every subcommand drives the [`scale_sim::engine`]
+//! façade; error plumbing uses `Box<dyn Error>` (anyhow is unavailable
+//! offline).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use scale_sim::config::{workloads, ArchConfig, Topology};
-use scale_sim::coordinator::{run, RunSpec};
-use scale_sim::dataflow::Dataflow;
+use scale_sim::engine::{BackendKind, Engine};
 use scale_sim::runtime::{default_artifact_dir, Runtime};
 use scale_sim::util::fmt_bytes;
-use scale_sim::{rtl, sweep, LayerShape};
+use scale_sim::{sweep, Dataflow, LayerShape};
 
 const USAGE: &str = "\
 scale-sim — systolic CNN accelerator simulator (SCALE-Sim reproduction)
 
 USAGE:
   scale-sim run [-c cfg] [-t topology] [-o outdir] [--dataflow os|ws|is]
-                [--array RxC] [--dump-traces] [--functional TILE]
-                [--threads N]
+                [--array RxC] [--backend analytical|trace|rtl]
+                [--dump-traces] [--functional TILE] [--threads N]
       Simulate a topology (built-in name like `resnet50`/`W5`, or a csv
       path). Writes compute/sram/dram/energy reports when -o is given.
 
   scale-sim sweep <dataflow|memory|shape> [-t topology]...
       Reproduce the paper's design-space sweeps on the MLPerf suite
-      (Figs 5-8 series printed as tables).
+      (Figs 5-8 series printed as tables) through the memoizing engine
+      grid; writes BENCH_sweep.json (wall-clock + cache hit-rate).
 
   scale-sim validate [--max N]
-      Fig 4: run the cycle-level RTL array against the analytical model
-      on array-sized matmuls and report both cycle counts.
+      Fig 4: run every engine backend (analytical, trace-driven, RTL
+      PE-grid) on array-sized matmuls through the same Engine entry
+      point; cycle counts must tally exactly.
 
   scale-sim analyze [-t topology] [--array RxC] [--dataflow os|ws|is]
       Deep-dive one workload: per-layer SRAM bank requirement (§IV-B),
@@ -40,9 +43,15 @@ USAGE:
       List the built-in MLPerf workloads (Table III).
 
   scale-sim artifacts
-      Show PJRT platform and the AOT artifacts available for the
-      functional path.
+      Show the functional-runtime platform and the AOT artifacts
+      available for the functional path.
 ";
+
+type CliResult<T> = std::result::Result<T, Box<dyn std::error::Error>>;
+
+fn fail<T>(msg: String) -> CliResult<T> {
+    Err(msg.into())
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -55,7 +64,7 @@ fn main() -> ExitCode {
     }
 }
 
-fn dispatch(args: &[String]) -> anyhow::Result<()> {
+fn dispatch(args: &[String]) -> CliResult<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
@@ -67,7 +76,7 @@ fn dispatch(args: &[String]) -> anyhow::Result<()> {
             print!("{USAGE}");
             Ok(())
         }
-        Some(other) => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+        Some(other) => fail(format!("unknown command {other:?}\n{USAGE}")),
     }
 }
 
@@ -90,15 +99,15 @@ impl<'a> Args<'a> {
     }
 }
 
-fn load_topology(spec: &str) -> anyhow::Result<Topology> {
+fn load_topology(spec: &str) -> CliResult<Topology> {
     if let Some(t) = workloads::builtin(spec) {
         return Ok(t);
     }
     Ok(Topology::from_file(&PathBuf::from(spec))?)
 }
 
-fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
-    let a = Args(rest);
+/// Shared `-c/--dataflow/--array` handling for run/analyze.
+fn base_config(a: &Args) -> CliResult<ArchConfig> {
     let mut cfg = match a.value("--config", Some("-c")) {
         Some(p) => ArchConfig::from_file(&PathBuf::from(p))?,
         None => ArchConfig::default(),
@@ -109,31 +118,46 @@ fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
     if let Some(arr) = a.value("--array", None) {
         let (r, c) = arr
             .split_once('x')
-            .ok_or_else(|| anyhow::anyhow!("--array expects RxC, e.g. 32x32"))?;
+            .ok_or("--array expects RxC, e.g. 32x32")?;
         cfg.array_h = r.parse()?;
         cfg.array_w = c.parse()?;
     }
+    Ok(cfg)
+}
+
+fn cmd_run(rest: &[String]) -> CliResult<()> {
+    let a = Args(rest);
+    let cfg = base_config(&a)?;
     let topo = match a.value("--topology", Some("-t")) {
         Some(t) => load_topology(t)?,
         None => match &cfg.topology_path {
             Some(p) => Topology::from_file(p)?,
-            None => anyhow::bail!("no topology: pass -t or set Topology in the cfg"),
+            None => return fail("no topology: pass -t or set Topology in the cfg".into()),
         },
     };
 
-    let mut spec = RunSpec::new(cfg, topo);
-    spec.out_dir = a.value("--out", Some("-o")).map(PathBuf::from);
-    spec.dump_traces = a.flag("--dump-traces");
+    let mut b = Engine::builder().config(cfg).dump_traces(a.flag("--dump-traces"));
+    if let Some(backend) = a.value("--backend", None) {
+        b = b.backend(BackendKind::parse(backend)?);
+    }
+    if let Some(dir) = a.value("--out", Some("-o")) {
+        b = b.out_dir(dir);
+    }
     if let Some(t) = a.value("--functional", None) {
-        spec.functional_tile = Some(t.parse()?);
+        b = b.functional_tile(t.parse()?);
     }
     if let Some(t) = a.value("--threads", None) {
-        spec.threads = t.parse()?;
+        b = b.threads(t.parse()?);
     }
+    let engine = b.build()?;
+    let out = engine.run(&topo)?;
 
-    let out = run(&spec)?;
+    let cfg = engine.cfg();
     let r = &out.report;
-    println!("workload {:>14}  dataflow {}  array {}x{}", r.workload, spec.cfg.dataflow, spec.cfg.array_h, spec.cfg.array_w);
+    println!(
+        "workload {:>14}  dataflow {}  array {}x{}  backend {}",
+        r.workload, cfg.dataflow, cfg.array_h, cfg.array_w, engine.backend_kind()
+    );
     println!(
         "{:<18} {:>12} {:>8} {:>14} {:>12} {:>10}",
         "layer", "cycles", "util%", "dram_bytes", "avg_rd_bw", "energy_mJ"
@@ -152,89 +176,128 @@ fn cmd_run(rest: &[String]) -> anyhow::Result<()> {
     println!(
         "TOTAL: {} cycles, {:.2}% util, {} DRAM, {:.4} mJ",
         r.total_cycles(),
-        r.overall_utilization(spec.cfg.total_pes()) * 100.0,
+        r.overall_utilization(cfg.total_pes()) * 100.0,
         fmt_bytes(r.total_dram().total()),
         r.total_energy().total_mj()
     );
     for (layer, err) in &out.functional {
-        println!("functional[{layer}]: max rel err {err:.2e} (PJRT artifact vs reference)");
+        println!("functional[{layer}]: max rel err {err:.2e} (AOT artifact vs reference)");
     }
     if !out.files_written.is_empty() {
-        println!("wrote {} files under {:?}", out.files_written.len(), spec.out_dir.unwrap());
+        println!("wrote {} files under {:?}", out.files_written.len(), out.files_written[0].parent().unwrap());
     }
     Ok(())
 }
 
-fn cmd_sweep(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_sweep(rest: &[String]) -> CliResult<()> {
     let a = Args(rest);
     let kind = rest.first().map(String::as_str).unwrap_or("dataflow");
-    let base = ArchConfig::default();
     let topos: Vec<Topology> = match a.value("--topology", Some("-t")) {
         Some(t) => vec![load_topology(t)?],
         None => workloads::mlperf_suite(),
     };
-    let threads = sweep::default_threads();
-    match kind {
+    let engine = Engine::builder().config(ArchConfig::default()).build()?;
+
+    let stats = match kind {
         "dataflow" => {
-            let pts = sweep::dataflow_sweep(&base, &topos, &[128, 64, 32, 16, 8], threads);
+            let out = engine
+                .sweep()
+                .workloads(&topos)
+                .dataflows(&Dataflow::ALL)
+                .square_arrays(&[128, 64, 32, 16, 8])
+                .run();
             println!("{:<14} {:>4} {:>6} {:>14} {:>8} {:>12} {:>12}", "workload", "df", "array", "cycles", "util%", "E_comp_mJ", "E_mem_mJ");
-            for p in pts {
+            for p in &out.points {
+                let e = p.report.total_energy();
                 println!(
                     "{:<14} {:>4} {:>6} {:>14} {:>8.2} {:>12.4} {:>12.4}",
-                    p.workload, p.dataflow.name(), p.array, p.cycles, p.utilization * 100.0,
-                    p.energy_compute_mj, p.energy_memory_mj
+                    p.workload,
+                    p.dataflow.name(),
+                    p.array_h,
+                    p.report.total_cycles(),
+                    p.report.overall_utilization(p.total_pes()) * 100.0,
+                    e.compute_mj,
+                    e.memory_mj()
                 );
             }
+            out.stats
         }
         "memory" => {
-            let sizes = [32, 64, 128, 256, 512, 1024, 2048];
-            let pts = sweep::memory_sweep(&base, &topos, &sizes, threads);
+            let out = engine
+                .sweep()
+                .workloads(&topos)
+                .sram_sizes_kb(&[32, 64, 128, 256, 512, 1024, 2048])
+                .run();
             println!("{:<14} {:>8} {:>14} {:>12}", "workload", "sram_kb", "dram_bytes", "avg_rd_bw");
-            for p in pts {
-                println!("{:<14} {:>8} {:>14} {:>12.4}", p.workload, p.sram_kb, p.dram_bytes, p.avg_read_bw);
+            for p in &out.points {
+                println!(
+                    "{:<14} {:>8} {:>14} {:>12.4}",
+                    p.workload,
+                    p.ifmap_sram_kb,
+                    p.report.total_dram().total(),
+                    p.report.avg_dram_read_bw()
+                );
             }
+            out.stats
         }
         "shape" => {
-            let pts = sweep::shape_sweep(&base, &topos, &sweep::fig8_shapes(), threads);
+            let out = engine
+                .sweep()
+                .workloads(&topos)
+                .dataflows(&Dataflow::ALL)
+                .array_shapes(&sweep::fig8_shapes())
+                .run();
             println!("{:<14} {:>4} {:>10} {:>14}", "workload", "df", "shape", "cycles");
-            for p in pts {
-                println!("{:<14} {:>4} {:>10} {:>14}", p.workload, p.dataflow.name(), format!("{}x{}", p.rows, p.cols), p.cycles);
+            for p in &out.points {
+                println!(
+                    "{:<14} {:>4} {:>10} {:>14}",
+                    p.workload,
+                    p.dataflow.name(),
+                    format!("{}x{}", p.array_h, p.array_w),
+                    p.report.total_cycles()
+                );
             }
+            out.stats
         }
-        other => anyhow::bail!("unknown sweep {other:?} (dataflow|memory|shape)"),
-    }
+        other => return fail(format!("unknown sweep {other:?} (dataflow|memory|shape)")),
+    };
+
+    let wall_ms = stats.wall.as_secs_f64() * 1e3;
+    println!(
+        "sweep: {} points in {:.1} ms — {} layer sims, {} cache hits ({:.1}% hit rate)",
+        stats.points,
+        wall_ms,
+        stats.memo.layer_sims,
+        stats.memo.cache_hits,
+        stats.hit_rate() * 100.0
+    );
+    stats.write_bench_json(Path::new("BENCH_sweep.json"))?;
+    println!("wrote BENCH_sweep.json");
     Ok(())
 }
 
-fn cmd_analyze(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_analyze(rest: &[String]) -> CliResult<()> {
     use scale_sim::memory::stall::provision_bandwidth;
-    use scale_sim::sim::flex::flexible_study;
     use scale_sim::trace::bank_analysis;
 
     let a = Args(rest);
-    let mut cfg = ArchConfig::default();
-    if let Some(df) = a.value("--dataflow", None) {
-        cfg.dataflow = Dataflow::parse(df)?;
-    }
-    if let Some(arr) = a.value("--array", None) {
-        let (r, c) = arr.split_once('x').ok_or_else(|| anyhow::anyhow!("--array RxC"))?;
-        cfg.array_h = r.parse()?;
-        cfg.array_w = c.parse()?;
-    }
+    let cfg = base_config(&a)?;
     let topo = load_topology(a.value("--topology", Some("-t")).unwrap_or("resnet50"))?;
+    let engine = Engine::builder().config(cfg).build()?;
+    let cfg = engine.cfg();
 
     println!(
         "analyze {} on {}x{} (banks/provision under {}; dataflow column is the per-layer winner)",
         topo.name, cfg.array_h, cfg.array_w, cfg.dataflow
     );
-    let flex = flexible_study(&cfg, &topo);
+    let flex = engine.flexible_study(&topo);
     println!(
         "{:<18} {:>6} {:>13} {:>13} {:>12} {:>10}",
         "layer", "best", "best_cycles", "operand_banks", "ofmap_banks", "prov_B/cyc"
     );
     for (layer, fl) in topo.layers.iter().zip(&flex.layers) {
-        let banks = bank_analysis(cfg.dataflow, layer, &cfg);
-        let prov = provision_bandwidth(cfg.dataflow, layer, &cfg, 0.05);
+        let banks = bank_analysis(cfg.dataflow, layer, cfg);
+        let prov = provision_bandwidth(cfg.dataflow, layer, cfg, 0.05);
         println!(
             "{:<18} {:>6} {:>13} {:>13} {:>12} {:>10.1}",
             layer.name,
@@ -254,25 +317,38 @@ fn cmd_analyze(rest: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_validate(rest: &[String]) -> anyhow::Result<()> {
+fn cmd_validate(rest: &[String]) -> CliResult<()> {
     let a = Args(rest);
     let max: usize = a.value("--max", None).unwrap_or("32").parse()?;
-    println!("{:>6} {:>12} {:>12} {:>6}", "size", "rtl_cycles", "model_cycles", "match");
-    let mut n = 4usize;
-    while n <= max {
-        let (x, y) = rtl::random_matrices(n, n, n, n as u64);
-        let r = rtl::run_matmul(&x, &y, n, n, n);
-        let layer = LayerShape::gemm("mm", n as u64, n as u64, n as u64);
-        let model = Dataflow::Os.timing(&layer, n as u64, n as u64).cycles;
-        println!("{:>6} {:>12} {:>12} {:>6}", n, r.cycles, model, r.cycles == model);
-        anyhow::ensure!(r.cycles == model, "validation mismatch at {n}");
+    println!(
+        "{:>6} {:>12} {:>12} {:>12} {:>6}",
+        "size", "rtl_cycles", "trace_cycles", "model_cycles", "match"
+    );
+    let mut n = 4u64;
+    while n as usize <= max {
+        let layer = LayerShape::gemm("mm", n, n, n);
+        let mut cycles = Vec::new();
+        for kind in BackendKind::ALL {
+            let engine = Engine::builder()
+                .dataflow(Dataflow::Os)
+                .array(n, n)
+                .backend(kind)
+                .build()?;
+            cycles.push(engine.run_layer(&layer).timing.cycles);
+        }
+        let (model, trace, rtl) = (cycles[0], cycles[1], cycles[2]);
+        let ok = model == trace && trace == rtl;
+        println!("{:>6} {:>12} {:>12} {:>12} {:>6}", n, rtl, trace, model, ok);
+        if !ok {
+            return fail(format!("validation mismatch at {n}: rtl={rtl} trace={trace} model={model}"));
+        }
         n *= 2;
     }
-    println!("validation OK (cycle-exact, Fig 4)");
+    println!("validation OK (cycle-exact across all engine backends, Fig 4)");
     Ok(())
 }
 
-fn cmd_workloads() -> anyhow::Result<()> {
+fn cmd_workloads() -> CliResult<()> {
     println!("{:<4} {:<14} {:>7} {:>16}", "tag", "name", "layers", "MACs");
     for (tag, name) in workloads::TAGS {
         let t = workloads::builtin(name).unwrap();
@@ -281,11 +357,11 @@ fn cmd_workloads() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_artifacts() -> anyhow::Result<()> {
+fn cmd_artifacts() -> CliResult<()> {
     let dir = default_artifact_dir();
     let rt = Runtime::new(&dir)?;
-    println!("PJRT platform: {}", rt.platform());
-    println!("artifact dir:  {dir:?}");
+    println!("runtime platform: {}", rt.platform());
+    println!("artifact dir:     {dir:?}");
     let names = rt.available();
     if names.is_empty() {
         println!("no artifacts found — run `make artifacts`");

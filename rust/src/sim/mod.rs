@@ -44,9 +44,15 @@ impl WorkloadReport {
         self.layers.iter().map(|l| l.layer.macs()).sum()
     }
 
-    /// Runtime-weighted overall array utilization.
+    /// Runtime-weighted overall array utilization. Returns `0.0` (not
+    /// NaN) for degenerate inputs: an empty/zero-cycle topology or a
+    /// zero-PE array.
     pub fn overall_utilization(&self, total_pes: u64) -> f64 {
-        self.total_macs() as f64 / (total_pes * self.total_cycles()) as f64
+        let denom = total_pes * self.total_cycles();
+        if denom == 0 {
+            return 0.0;
+        }
+        self.total_macs() as f64 / denom as f64
     }
 
     pub fn total_dram(&self) -> DramTraffic {
@@ -70,9 +76,14 @@ impl WorkloadReport {
     }
 
     /// Workload-level average DRAM read bandwidth (bytes/cycle) — the
-    /// quantity Fig 7 sweeps against scratchpad size.
+    /// quantity Fig 7 sweeps against scratchpad size. Returns `0.0`
+    /// (not NaN) for an empty/zero-cycle topology.
     pub fn avg_dram_read_bw(&self) -> f64 {
-        self.total_dram().read_bytes() as f64 / self.total_cycles() as f64
+        let cycles = self.total_cycles();
+        if cycles == 0 {
+            return 0.0;
+        }
+        self.total_dram().read_bytes() as f64 / cycles as f64
     }
 
     /// Peak per-layer stall-free read bandwidth across the workload.
@@ -84,8 +95,15 @@ impl WorkloadReport {
     }
 }
 
-/// The simulator facade: one architecture configuration, reused across
-/// layers / topologies. Cheap to clone (configs are plain data).
+/// The **legacy** simulator facade: one architecture configuration,
+/// reused across layers / topologies. Cheap to clone (configs are plain
+/// data).
+///
+/// New code should prefer [`crate::engine::Engine`], which produces
+/// bit-identical [`LayerReport`]s (asserted by the equivalence suite)
+/// while adding pluggable fidelity backends and memoization. `Simulator`
+/// is retained as the direct, cache-free analytical reference the engine
+/// is validated against.
 #[derive(Clone, Debug)]
 pub struct Simulator {
     pub cfg: ArchConfig,
@@ -186,5 +204,25 @@ mod tests {
         let r = s.run_topology(&topo());
         let expect = r.total_dram().read_bytes() as f64 / r.total_cycles() as f64;
         assert!((r.avg_dram_read_bw() - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_topology_reports_zero_not_nan() {
+        // regression: these divided by zero (NaN) before the guard
+        let r = WorkloadReport { workload: "empty".into(), layers: Vec::new() };
+        assert_eq!(r.total_cycles(), 0);
+        assert_eq!(r.overall_utilization(128 * 128), 0.0);
+        assert_eq!(r.avg_dram_read_bw(), 0.0);
+        assert_eq!(r.peak_dram_read_bw(), 0.0);
+        assert!(!r.overall_utilization(0).is_nan());
+    }
+
+    #[test]
+    fn zero_pes_reports_zero_not_nan() {
+        let s = sim(Dataflow::Os);
+        let r = s.run_topology(&topo());
+        let u = r.overall_utilization(0);
+        assert_eq!(u, 0.0);
+        assert!(!u.is_nan());
     }
 }

@@ -1,16 +1,29 @@
-//! Design-space sweep engine (§IV methodology): run many (config, layer)
-//! simulation points across std threads and collect typed rows for the
-//! figure harnesses.
+//! Thread pool + legacy design-space sweep shims (§IV methodology).
 //!
-//! tokio/rayon are unavailable offline; [`parallel_map`] is a small
-//! work-stealing-by-atomic-index scheduler over `std::thread::scope`,
-//! which is all a CPU-bound embarrassingly-parallel sweep needs.
+//! [`parallel_map`] is a small work-stealing-by-atomic-index scheduler
+//! over `std::thread::scope` (tokio/rayon are unavailable offline); it
+//! is the execution substrate for both the legacy functions here and the
+//! engine's [`crate::engine::SweepGrid`].
+//!
+//! The typed sweep functions (`dataflow_sweep` / `memory_sweep` /
+//! `shape_sweep`) are retained as **deprecated shims** over the engine's
+//! memoizing grid: they produce byte-identical point lists to their
+//! historical implementations (asserted by the equivalence suite) while
+//! sharing layer simulations through the engine cache. New code should
+//! build grids directly:
+//!
+//! ```text
+//! Engine::new(base).sweep()
+//!     .workloads(&topos).dataflows(&Dataflow::ALL)
+//!     .square_arrays(&[128, 64, 32, 16, 8])
+//!     .run()
+//! ```
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{ArchConfig, Topology};
 use crate::dataflow::Dataflow;
-use crate::sim::Simulator;
+use crate::engine::Engine;
 
 /// Map `f` over `items` on `threads` OS threads, preserving order.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
@@ -72,35 +85,39 @@ pub struct DataflowPoint {
 
 /// Fig 5 + Fig 6 sweep: every workload under every dataflow on square
 /// arrays of the given dimensions.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Engine::sweep().workloads(..).dataflows(..).square_arrays(..).run()"
+)]
 pub fn dataflow_sweep(
     base: &ArchConfig,
     topos: &[Topology],
     arrays: &[u64],
     threads: usize,
 ) -> Vec<DataflowPoint> {
-    let mut jobs = Vec::new();
-    for t in topos {
-        for &df in &Dataflow::ALL {
-            for &n in arrays {
-                jobs.push((t, df, n));
+    let engine = Engine::new(base.clone());
+    let out = engine
+        .sweep()
+        .workloads(topos)
+        .dataflows(&Dataflow::ALL)
+        .square_arrays(arrays)
+        .threads(threads)
+        .run();
+    out.points
+        .into_iter()
+        .map(|p| {
+            let e = p.report.total_energy();
+            DataflowPoint {
+                workload: p.workload,
+                dataflow: p.dataflow,
+                array: p.array_h,
+                cycles: p.report.total_cycles(),
+                utilization: p.report.overall_utilization(p.array_h * p.array_w),
+                energy_compute_mj: e.compute_mj,
+                energy_memory_mj: e.memory_mj(),
             }
-        }
-    }
-    parallel_map(&jobs, threads, |&(topo, df, n)| {
-        let cfg = ArchConfig { array_h: n, array_w: n, dataflow: df, ..base.clone() };
-        let sim = Simulator::new(cfg);
-        let r = sim.run_topology(topo);
-        let e = r.total_energy();
-        DataflowPoint {
-            workload: topo.name.clone(),
-            dataflow: df,
-            array: n,
-            cycles: r.total_cycles(),
-            utilization: r.overall_utilization(n * n),
-            energy_compute_mj: e.compute_mj,
-            energy_memory_mj: e.memory_mj(),
-        }
-    })
+        })
+        .collect()
 }
 
 /// One point of the Fig 7 sweep: workload x scratchpad size.
@@ -114,29 +131,32 @@ pub struct MemoryPoint {
 
 /// Fig 7 sweep: DRAM bandwidth requirement vs per-operand scratchpad
 /// size (the paper sweeps 32KB..2048KB for each of filter+IFMAP).
+#[deprecated(
+    since = "0.2.0",
+    note = "use Engine::sweep().workloads(..).sram_sizes_kb(..).run()"
+)]
 pub fn memory_sweep(
     base: &ArchConfig,
     topos: &[Topology],
     sram_kbs: &[u64],
     threads: usize,
 ) -> Vec<MemoryPoint> {
-    let mut jobs = Vec::new();
-    for t in topos {
-        for &kb in sram_kbs {
-            jobs.push((t, kb));
-        }
-    }
-    parallel_map(&jobs, threads, |&(topo, kb)| {
-        let cfg = ArchConfig { ifmap_sram_kb: kb, filter_sram_kb: kb, ..base.clone() };
-        let sim = Simulator::new(cfg);
-        let r = sim.run_topology(topo);
-        MemoryPoint {
-            workload: topo.name.clone(),
-            sram_kb: kb,
-            avg_read_bw: r.avg_dram_read_bw(),
-            dram_bytes: r.total_dram().total(),
-        }
-    })
+    let engine = Engine::new(base.clone());
+    let out = engine
+        .sweep()
+        .workloads(topos)
+        .sram_sizes_kb(sram_kbs)
+        .threads(threads)
+        .run();
+    out.points
+        .into_iter()
+        .map(|p| MemoryPoint {
+            workload: p.workload,
+            sram_kb: p.ifmap_sram_kb,
+            avg_read_bw: p.report.avg_dram_read_bw(),
+            dram_bytes: p.report.total_dram().total(),
+        })
+        .collect()
 }
 
 /// One point of the Fig 8 sweep: workload x dataflow x aspect ratio.
@@ -150,31 +170,34 @@ pub struct ShapePoint {
 }
 
 /// Fig 8 sweep: fixed PE count, shapes from tall to wide.
+#[deprecated(
+    since = "0.2.0",
+    note = "use Engine::sweep().workloads(..).dataflows(..).array_shapes(..).run()"
+)]
 pub fn shape_sweep(
     base: &ArchConfig,
     topos: &[Topology],
     shapes: &[(u64, u64)],
     threads: usize,
 ) -> Vec<ShapePoint> {
-    let mut jobs = Vec::new();
-    for t in topos {
-        for &df in &Dataflow::ALL {
-            for &(r, c) in shapes {
-                jobs.push((t, df, r, c));
-            }
-        }
-    }
-    parallel_map(&jobs, threads, |&(topo, df, r, c)| {
-        let cfg = ArchConfig { array_h: r, array_w: c, dataflow: df, ..base.clone() };
-        let sim = Simulator::new(cfg);
-        ShapePoint {
-            workload: topo.name.clone(),
-            dataflow: df,
-            rows: r,
-            cols: c,
-            cycles: sim.run_topology(topo).total_cycles(),
-        }
-    })
+    let engine = Engine::new(base.clone());
+    let out = engine
+        .sweep()
+        .workloads(topos)
+        .dataflows(&Dataflow::ALL)
+        .array_shapes(shapes)
+        .threads(threads)
+        .run();
+    out.points
+        .into_iter()
+        .map(|p| ShapePoint {
+            workload: p.workload,
+            dataflow: p.dataflow,
+            rows: p.array_h,
+            cols: p.array_w,
+            cycles: p.report.total_cycles(),
+        })
+        .collect()
 }
 
 /// The paper's Fig 8 shape ladder: 8x2048 .. 2048x8 (16384 PEs).
@@ -189,6 +212,7 @@ pub fn fig8_shapes() -> Vec<(u64, u64)> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::arch::LayerShape;

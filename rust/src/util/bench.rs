@@ -62,6 +62,27 @@ pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> 
     stats
 }
 
+/// Write a flat JSON object of numeric benchmark fields (stable field
+/// order, machine-greppable) — the `BENCH_*.json` perf-trajectory
+/// artifacts, e.g. sweep wall-clock + memo-cache hit rate:
+///
+/// ```text
+/// {"sweep_wall_ms": 41.72, "points": 105, "layer_sims": 855,
+///  "cache_hits": 1125, "cache_hit_rate": 0.5682}
+/// ```
+pub fn write_json(path: &std::path::Path, fields: &[(&str, f64)]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    // f64 Display prints the shortest round-trip decimal ("105", "12.5",
+    // "0.5682") — valid JSON for every finite value we emit.
+    let body: Vec<String> =
+        fields.iter().map(|(k, v)| format!("\"{k}\": {v}")).collect();
+    std::fs::write(path, format!("{{{}}}\n", body.join(", ")))
+}
+
 /// Auto-calibrating variant: picks an iteration count so the measured
 /// phase lasts roughly `target`.
 pub fn bench_auto<T>(name: &str, target: Duration, mut f: impl FnMut() -> T) -> BenchStats {
@@ -88,5 +109,19 @@ mod tests {
     fn bench_auto_caps_iters() {
         let s = bench_auto("noop", Duration::from_millis(5), || 1u64 + 1);
         assert!(s.iters >= 3 && s.iters <= 1000);
+    }
+
+    #[test]
+    fn write_json_emits_flat_object() {
+        let path = std::env::temp_dir()
+            .join(format!("scale_sim_bench_{}", std::process::id()))
+            .join("BENCH_test.json");
+        write_json(&path, &[("wall_ms", 12.5), ("points", 105.0), ("hit_rate", 0.5682)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('{') && text.trim_end().ends_with('}'), "{text}");
+        assert!(text.contains("\"wall_ms\": 12.5"), "{text}");
+        assert!(text.contains("\"points\": 105"), "{text}"); // integral -> int
+        assert!(text.contains("\"hit_rate\": 0.5682"), "{text}");
+        std::fs::remove_dir_all(path.parent().unwrap()).unwrap();
     }
 }

@@ -1,0 +1,271 @@
+//! Engine/legacy equivalence suite: the `engine` façade must be
+//! **bit-identical** to the pre-engine entry points it replaces —
+//! `Simulator::run_layer` and the three legacy sweep functions — across
+//! all three dataflows, and its fidelity backends must agree with each
+//! other. Property-tested over randomized layer shapes and array
+//! geometries.
+#![allow(deprecated)]
+
+use scale_sim::config::{self, ArchConfig, Topology};
+use scale_sim::engine::{BackendKind, Engine};
+use scale_sim::sim::Simulator;
+use scale_sim::sweep;
+use scale_sim::util::prop::{forall, Shrink};
+use scale_sim::util::rng::Rng;
+use scale_sim::{Dataflow, LayerShape};
+
+/// Random-but-valid layer + array geometry.
+#[derive(Clone, Debug)]
+struct Case {
+    layer: LayerShape,
+    rows: u64,
+    cols: u64,
+}
+
+impl Shrink for Case {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let l = &self.layer;
+        let mut push = |layer: LayerShape, rows, cols| {
+            if layer.validate().is_ok() {
+                out.push(Case { layer, rows, cols });
+            }
+        };
+        if l.ifmap_h > l.filt_h {
+            push(LayerShape { ifmap_h: l.ifmap_h - 1, ..l.clone() }, self.rows, self.cols);
+        }
+        if l.channels > 1 {
+            push(LayerShape { channels: l.channels / 2, ..l.clone() }, self.rows, self.cols);
+        }
+        if l.num_filters > 1 {
+            push(LayerShape { num_filters: l.num_filters / 2, ..l.clone() }, self.rows, self.cols);
+        }
+        if self.rows > 1 {
+            push(l.clone(), self.rows / 2, self.cols);
+        }
+        if self.cols > 1 {
+            push(l.clone(), self.rows, self.cols / 2);
+        }
+        out
+    }
+}
+
+fn gen_case(rng: &mut Rng) -> Case {
+    let filt_h = rng.range(1, 4);
+    let filt_w = rng.range(1, 4);
+    let layer = LayerShape {
+        name: "prop".into(),
+        ifmap_h: filt_h + rng.range(0, 10),
+        ifmap_w: filt_w + rng.range(0, 10),
+        filt_h,
+        filt_w,
+        channels: rng.range(1, 6),
+        num_filters: rng.range(1, 16),
+        stride: rng.range(1, 3),
+    };
+    Case { layer, rows: rng.range(1, 14), cols: rng.range(1, 14) }
+}
+
+fn cfg_for(case: &Case, df: Dataflow) -> ArchConfig {
+    ArchConfig {
+        array_h: case.rows,
+        array_w: case.cols,
+        dataflow: df,
+        ..config::paper_default()
+    }
+}
+
+#[test]
+fn prop_engine_bit_identical_to_simulator_all_dataflows() {
+    for df in Dataflow::ALL {
+        forall(0xE9E + df as u64, 60, gen_case, |case| {
+            let cfg = cfg_for(case, df);
+            let engine = Engine::new(cfg.clone());
+            let sim = Simulator::new(cfg);
+            engine.run_layer(&case.layer) == sim.run_layer(&case.layer)
+        });
+    }
+}
+
+#[test]
+fn prop_trace_backend_bit_identical_to_analytical() {
+    for df in Dataflow::ALL {
+        forall(0x7AACE + df as u64, 30, gen_case, |case| {
+            let cfg = cfg_for(case, df);
+            let trace = Engine::builder()
+                .config(cfg.clone())
+                .backend(BackendKind::TraceDriven)
+                .build()
+                .unwrap();
+            let sim = Simulator::new(cfg);
+            trace.run_layer(&case.layer) == sim.run_layer(&case.layer)
+        });
+    }
+}
+
+#[test]
+fn prop_rtl_backend_bit_identical_to_analytical() {
+    // fewer cases: each check drives the register-level PE grid
+    for df in Dataflow::ALL {
+        forall(0x271 + df as u64, 12, gen_case, |case| {
+            let cfg = cfg_for(case, df);
+            let rtl = Engine::builder()
+                .config(cfg.clone())
+                .backend(BackendKind::Rtl)
+                .build()
+                .unwrap();
+            let sim = Simulator::new(cfg);
+            rtl.run_layer(&case.layer) == sim.run_layer(&case.layer)
+        });
+    }
+}
+
+fn small_suite() -> Vec<Topology> {
+    vec![
+        Topology::new(
+            "a",
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::conv("c2", 16, 16, 3, 3, 4, 8, 1), // repeated shape
+                LayerShape::fc("fc", 1, 128, 10),
+            ],
+        ),
+        Topology::new(
+            "b",
+            vec![
+                LayerShape::conv("d1", 14, 14, 3, 3, 8, 16, 2),
+                LayerShape::gemm("g", 24, 40, 24),
+            ],
+        ),
+    ]
+}
+
+/// The historical dataflow_sweep, re-implemented verbatim against
+/// `Simulator` (frozen here as the reference the shim must reproduce).
+fn reference_dataflow_sweep(
+    base: &ArchConfig,
+    topos: &[Topology],
+    arrays: &[u64],
+) -> Vec<(String, Dataflow, u64, u64, f64)> {
+    let mut out = Vec::new();
+    for t in topos {
+        for &df in &Dataflow::ALL {
+            for &n in arrays {
+                let cfg = ArchConfig { array_h: n, array_w: n, dataflow: df, ..base.clone() };
+                let r = Simulator::new(cfg).run_topology(t);
+                out.push((
+                    t.name.clone(),
+                    df,
+                    n,
+                    r.total_cycles(),
+                    r.overall_utilization(n * n),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn legacy_dataflow_sweep_is_bit_identical_to_pre_engine_reference() {
+    let base = config::paper_default();
+    let topos = small_suite();
+    let arrays = [16u64, 8, 5];
+    let got = sweep::dataflow_sweep(&base, &topos, &arrays, 4);
+    let want = reference_dataflow_sweep(&base, &topos, &arrays);
+    assert_eq!(got.len(), want.len());
+    for (g, (name, df, n, cycles, util)) in got.iter().zip(&want) {
+        assert_eq!(&g.workload, name);
+        assert_eq!(g.dataflow, *df);
+        assert_eq!(g.array, *n);
+        assert_eq!(g.cycles, *cycles, "{name} {df} {n}");
+        assert!(g.utilization == *util, "utilization must be bit-identical");
+    }
+}
+
+#[test]
+fn legacy_memory_sweep_matches_simulator_reference() {
+    let base = config::paper_default();
+    let topos = small_suite();
+    let kbs = [1u64, 8, 64, 512];
+    let got = sweep::memory_sweep(&base, &topos, &kbs, 4);
+    let mut i = 0;
+    for t in &topos {
+        for &kb in &kbs {
+            let cfg = ArchConfig { ifmap_sram_kb: kb, filter_sram_kb: kb, ..base.clone() };
+            let r = Simulator::new(cfg).run_topology(t);
+            assert_eq!(got[i].workload, t.name);
+            assert_eq!(got[i].sram_kb, kb);
+            assert_eq!(got[i].dram_bytes, r.total_dram().total(), "{} {kb}", t.name);
+            assert!(got[i].avg_read_bw == r.avg_dram_read_bw());
+            i += 1;
+        }
+    }
+    assert_eq!(i, got.len());
+}
+
+#[test]
+fn legacy_shape_sweep_matches_simulator_reference() {
+    let base = config::paper_default();
+    let topos = small_suite();
+    let shapes = [(4u64, 16u64), (8, 8), (16, 4)];
+    let got = sweep::shape_sweep(&base, &topos, &shapes, 4);
+    let mut i = 0;
+    for t in &topos {
+        for &df in &Dataflow::ALL {
+            for &(r, c) in &shapes {
+                let cfg = ArchConfig { array_h: r, array_w: c, dataflow: df, ..base.clone() };
+                let want = Simulator::new(cfg).run_topology(t).total_cycles();
+                assert_eq!(
+                    (got[i].workload.as_str(), got[i].dataflow, got[i].rows, got[i].cols),
+                    (t.name.as_str(), df, r, c)
+                );
+                assert_eq!(got[i].cycles, want, "{} {df} {r}x{c}", t.name);
+                i += 1;
+            }
+        }
+    }
+    assert_eq!(i, got.len());
+}
+
+#[test]
+fn engine_grid_reports_cache_hits_and_identical_results_on_rerun() {
+    let engine = Engine::new(config::paper_default());
+    let topos = small_suite();
+    let first = engine
+        .sweep()
+        .workloads(&topos)
+        .dataflows(&Dataflow::ALL)
+        .square_arrays(&[16, 8])
+        .run();
+    assert!(first.stats.memo.cache_hits > 0, "repeated shapes must hit");
+    let second = engine
+        .sweep()
+        .workloads(&topos)
+        .dataflows(&Dataflow::ALL)
+        .square_arrays(&[16, 8])
+        .run();
+    assert_eq!(second.stats.memo.layer_sims, 0);
+    for (a, b) in first.points.iter().zip(&second.points) {
+        assert_eq!(a.report, b.report);
+    }
+}
+
+#[test]
+fn coordinator_shim_equals_engine_run() {
+    use scale_sim::coordinator::{run, RunSpec};
+    let mut cfg = config::paper_default();
+    cfg.array_h = 16;
+    cfg.array_w = 16;
+    for df in Dataflow::ALL {
+        cfg.dataflow = df;
+        let spec = RunSpec::new(cfg.clone(), small_suite().remove(0));
+        let legacy = run(&spec).unwrap();
+        let engine = Engine::builder().config(cfg.clone()).build().unwrap();
+        let direct = engine.run(&spec.topology).unwrap();
+        assert_eq!(legacy.report, direct.report, "{df}");
+        // and both equal the plain Simulator path
+        let sim_rep = Simulator::new(cfg.clone()).run_topology(&spec.topology);
+        assert_eq!(legacy.report, sim_rep, "{df}");
+    }
+}

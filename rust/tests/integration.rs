@@ -1,5 +1,10 @@
 //! Cross-module integration tests: the paper's qualitative claims must
 //! hold end-to-end through config -> simulator -> reports.
+//!
+//! Deliberately exercises the deprecated legacy entry points
+//! (`coordinator::run`, `sweep::*_sweep`) — they are shims over the
+//! engine now, and these tests pin their behavior.
+#![allow(deprecated)]
 
 use scale_sim::config::{self, workloads, ArchConfig, Topology};
 use scale_sim::coordinator::{run, RunSpec};
