@@ -7,6 +7,9 @@
 #   - `scale-sim sweep dataflow -t ncf` — memoizing grid smoke; emits
 #                                      BENCH_sweep.json (wall-clock +
 #                                      cache hit-rate) for the perf log.
+#   - serve smoke: start the TCP job server on an ephemeral port with a
+#     state dir, one client round trip, a /stats check, clean protocol
+#     shutdown (queue drained + store flushed).
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -29,5 +32,48 @@ echo "== smoke: sweep (memoizing grid + BENCH_sweep.json) =="
 "$BIN" sweep dataflow -t ncf > /dev/null
 test -f BENCH_sweep.json
 cat BENCH_sweep.json
+
+echo "== smoke: help lists the serve subcommands =="
+for sub in serve client bench-serve; do
+  "$BIN" --help | grep -q "scale-sim $sub" || { echo "missing $sub in --help"; exit 1; }
+done
+echo "ok"
+
+echo "== smoke: serve round trip (server + client + /stats + shutdown) =="
+SERVE_STATE=$(mktemp -d)
+SERVE_LOG=$(mktemp)
+"$BIN" serve --addr 127.0.0.1:0 --state-dir "$SERVE_STATE" > "$SERVE_LOG" &
+SERVE_PID=$!
+trap 'kill $SERVE_PID 2>/dev/null || true; rm -rf "$SERVE_STATE" "$SERVE_LOG"' EXIT
+for _ in $(seq 1 100); do
+  grep -q "^listening on " "$SERVE_LOG" && break
+  sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$SERVE_LOG")
+test -n "$ADDR" || { echo "server never reported its address"; cat "$SERVE_LOG"; exit 1; }
+
+"$BIN" client run --addr "$ADDR" -t ncf | tail -1 | grep -q '"event":"done"'
+"$BIN" client stats --addr "$ADDR" | grep -q '"queue_depth"'
+"$BIN" client stats --addr "$ADDR" | grep -q '"cache_hits"'
+"$BIN" client shutdown --addr "$ADDR" | grep -q '"event":"shutting_down"'
+wait "$SERVE_PID"
+test -f "$SERVE_STATE/results.jsonl" || { echo "store was not flushed on shutdown"; exit 1; }
+
+# warm restart: the flushed store must pre-warm the next server life
+"$BIN" serve --addr 127.0.0.1:0 --state-dir "$SERVE_STATE" > "$SERVE_LOG" &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  grep -q "^listening on " "$SERVE_LOG" && break
+  sleep 0.1
+done
+ADDR=$(sed -n 's/^listening on //p' "$SERVE_LOG")
+test -n "$ADDR" || { echo "restarted server never reported its address"; cat "$SERVE_LOG"; exit 1; }
+"$BIN" client stats --addr "$ADDR" | grep -q '"warm_entries"'
+"$BIN" client run --addr "$ADDR" -t ncf > /dev/null
+"$BIN" client stats --addr "$ADDR" | grep -q '"warm_hits":[1-9]' \
+  || { echo "warm restart served no warm hits"; exit 1; }
+"$BIN" client shutdown --addr "$ADDR" > /dev/null
+wait "$SERVE_PID"
+echo "ok"
 
 echo "CI OK"

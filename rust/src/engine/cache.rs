@@ -19,13 +19,27 @@
 //! addresses but do not affect any reported metric. The energy model is
 //! engine-fixed (one cache per engine), so it is not part of the key.
 //!
-//! The cache is engine-lifetime and thread-safe; the sweep grid threads
-//! share it, which is where the Fig 5-8 suites win their >50% hit rates
-//! (repeated layer shapes within and across workloads).
+//! ## Concurrency: in-flight deduplication
+//!
+//! The table is thread-safe *and* duplicate-compute free: a miss claims
+//! the key with an [`Slot::InFlight`] marker before computing outside
+//! the lock, so a second thread that misses on the same key **waits on a
+//! condvar and reuses the first thread's result** instead of running the
+//! backend again (counted as a cache hit — the work was shared). This is
+//! load-bearing for the serve subsystem, where many concurrent clients
+//! submit overlapping workloads, and a straight win for wide sweeps that
+//! previously burned duplicate simulations in the insert race. If a
+//! compute panics, its claim is withdrawn and waiters retry, so a
+//! poisoned job cannot wedge the table.
+//!
+//! Entries loaded from a persistent store ([`LayerCache::insert_prewarmed`])
+//! are tagged *warm*; hits on them are tallied separately ([`WarmStats`])
+//! so `scale-sim serve --state-dir` restarts can prove their cache
+//! survived the restart.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::arch::LayerShape;
 use crate::config::ArchConfig;
@@ -35,29 +49,31 @@ use crate::sim::LayerReport;
 use super::backend::BackendKind;
 
 /// Cache key: see the module docs for what is (and is not) included.
+/// Fields are crate-visible so the server's result store can persist and
+/// reload entries.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub(crate) struct CacheKey {
-    backend: BackendKind,
-    array_h: u64,
-    array_w: u64,
-    dataflow: Dataflow,
-    ifmap_sram_kb: u64,
-    filter_sram_kb: u64,
-    ofmap_sram_kb: u64,
-    word_bytes: u64,
-    layer: LayerKey,
+    pub(crate) backend: BackendKind,
+    pub(crate) array_h: u64,
+    pub(crate) array_w: u64,
+    pub(crate) dataflow: Dataflow,
+    pub(crate) ifmap_sram_kb: u64,
+    pub(crate) filter_sram_kb: u64,
+    pub(crate) ofmap_sram_kb: u64,
+    pub(crate) word_bytes: u64,
+    pub(crate) layer: LayerKey,
 }
 
 /// The Table-II shape fields, without the user-facing name.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
-struct LayerKey {
-    ifmap_h: u64,
-    ifmap_w: u64,
-    filt_h: u64,
-    filt_w: u64,
-    channels: u64,
-    num_filters: u64,
-    stride: u64,
+pub(crate) struct LayerKey {
+    pub(crate) ifmap_h: u64,
+    pub(crate) ifmap_w: u64,
+    pub(crate) filt_h: u64,
+    pub(crate) filt_w: u64,
+    pub(crate) channels: u64,
+    pub(crate) num_filters: u64,
+    pub(crate) stride: u64,
 }
 
 impl CacheKey {
@@ -89,7 +105,8 @@ impl CacheKey {
 pub struct MemoStats {
     /// Layer simulations actually executed (cache misses).
     pub layer_sims: u64,
-    /// Lookups served from the cache.
+    /// Lookups served from the cache (including lookups that waited on
+    /// an in-flight computation and reused its result).
     pub cache_hits: u64,
 }
 
@@ -107,68 +124,147 @@ impl MemoStats {
         self.cache_hits as f64 / n as f64
     }
 
-    /// Counter delta since an earlier snapshot.
+    /// Counter delta since an earlier snapshot. Saturates at zero per
+    /// counter when `earlier` is ahead — a snapshot taken before a cache
+    /// reset (e.g. a server restart swapped in a fresh engine) yields
+    /// zeros rather than a panic/wraparound.
     pub fn since(&self, earlier: &MemoStats) -> MemoStats {
         MemoStats {
-            layer_sims: self.layer_sims - earlier.layer_sims,
-            cache_hits: self.cache_hits - earlier.cache_hits,
+            layer_sims: self.layer_sims.saturating_sub(earlier.layer_sims),
+            cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
         }
     }
 }
 
-/// Thread-safe memo table. Entries are `Arc`ed so a hit only clones a
-/// pointer while the lock is held; the (deep) per-caller copy happens
-/// outside the critical section, keeping warm sweeps parallel.
+/// Warm-start accounting: entries pre-loaded from a persistent store and
+/// the hits they have served this process.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WarmStats {
+    /// Entries inserted by [`LayerCache::insert_prewarmed`].
+    pub entries: u64,
+    /// Cache hits served by prewarmed entries.
+    pub hits: u64,
+}
+
+/// One table slot: a finished report, or a claim by the thread currently
+/// computing it.
+enum Slot {
+    InFlight,
+    Ready { report: Arc<LayerReport>, warm: bool },
+}
+
+/// Thread-safe memo table with in-flight deduplication (module docs).
+/// Ready entries are `Arc`ed so a hit only clones a pointer while the
+/// lock is held; the (deep) per-caller copy happens outside the critical
+/// section, keeping warm sweeps parallel.
 pub(crate) struct LayerCache {
-    map: Mutex<HashMap<CacheKey, Arc<LayerReport>>>,
+    map: Mutex<HashMap<CacheKey, Slot>>,
+    ready: Condvar,
     sims: AtomicU64,
     hits: AtomicU64,
+    warm_entries: AtomicU64,
+    warm_hits: AtomicU64,
 }
 
 impl LayerCache {
     pub(crate) fn new() -> Self {
         LayerCache {
             map: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
             sims: AtomicU64::new(0),
             hits: AtomicU64::new(0),
+            warm_entries: AtomicU64::new(0),
+            warm_hits: AtomicU64::new(0),
         }
     }
 
     /// Fetch the report for `key`, computing (outside the lock) on miss.
-    /// The returned report carries `name` regardless of which layer
-    /// first populated the entry.
+    /// Concurrent callers that miss on the same key compute it **once**:
+    /// the first claims the key, the rest block until the result lands
+    /// and are counted as hits. The returned report carries `name`
+    /// regardless of which layer first populated the entry.
     pub(crate) fn get_or_compute(
         &self,
         key: CacheKey,
         name: &str,
         compute: impl FnOnce() -> LayerReport,
     ) -> LayerReport {
-        let cached: Option<Arc<LayerReport>> =
-            self.map.lock().unwrap().get(&key).map(Arc::clone);
-        if let Some(hit) = cached {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-            let mut r = (*hit).clone();
-            if r.layer.name != name {
-                r.layer.name = name.to_string();
-            }
-            return r;
+        enum Found {
+            Ready(Arc<LayerReport>, bool),
+            InFlight,
+            Absent,
         }
-        // Compute outside the lock. Concurrent duplicate computes are
-        // benign (results are deterministic); the loser of the insert
-        // race is counted as a HIT, so layer_sims always equals the
-        // number of distinct cache entries and the reported hit rate is
-        // reproducible regardless of thread count.
+        {
+            let mut map = self.map.lock().unwrap();
+            loop {
+                // resolve the slot to an owned view first, so no borrow
+                // of `map` is live when we hand the guard to the condvar
+                let found = match map.get(&key) {
+                    Some(Slot::Ready { report, warm }) => Found::Ready(Arc::clone(report), *warm),
+                    Some(Slot::InFlight) => Found::InFlight,
+                    None => Found::Absent,
+                };
+                match found {
+                    Found::Ready(hit, warm) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        if warm {
+                            self.warm_hits.fetch_add(1, Ordering::Relaxed);
+                        }
+                        drop(map);
+                        return restamp(&hit, name);
+                    }
+                    Found::InFlight => {
+                        map = self.ready.wait(map).unwrap();
+                    }
+                    Found::Absent => {
+                        map.insert(key.clone(), Slot::InFlight);
+                        break;
+                    }
+                }
+            }
+        }
+
+        // Compute outside the lock, holding the in-flight claim. The
+        // guard withdraws the claim (and wakes waiters to retry) if the
+        // compute panics, so the table cannot wedge.
+        let mut guard = InFlightGuard { cache: self, key: Some(key) };
         let report = compute();
-        match self.map.lock().unwrap().entry(key) {
-            std::collections::hash_map::Entry::Occupied(_) => {
-                self.hits.fetch_add(1, Ordering::Relaxed);
-            }
-            std::collections::hash_map::Entry::Vacant(v) => {
-                v.insert(Arc::new(report.clone()));
-                self.sims.fetch_add(1, Ordering::Relaxed);
-            }
+        // disarm: with the key taken, the guard's Drop is a no-op
+        let key = guard.key.take().expect("claim taken once");
+        {
+            let mut map = self.map.lock().unwrap();
+            map.insert(key, Slot::Ready { report: Arc::new(report.clone()), warm: false });
         }
+        self.sims.fetch_add(1, Ordering::Relaxed);
+        self.ready.notify_all();
         report
+    }
+
+    /// Seed a `Ready` entry from a persistent store (server warm start).
+    /// No-op (returns `false`) when the key is already present; never
+    /// counts as a layer sim.
+    pub(crate) fn insert_prewarmed(&self, key: CacheKey, report: LayerReport) -> bool {
+        let mut map = self.map.lock().unwrap();
+        if map.contains_key(&key) {
+            return false;
+        }
+        map.insert(key, Slot::Ready { report: Arc::new(report), warm: true });
+        self.warm_entries.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Snapshot every ready entry (in-flight computations are skipped) —
+    /// the server's shutdown flush.
+    pub(crate) fn export(&self) -> Vec<(CacheKey, Arc<LayerReport>)> {
+        self.map
+            .lock()
+            .unwrap()
+            .iter()
+            .filter_map(|(k, slot)| match slot {
+                Slot::Ready { report, .. } => Some((k.clone(), Arc::clone(report))),
+                Slot::InFlight => None,
+            })
+            .collect()
     }
 
     pub(crate) fn stats(&self) -> MemoStats {
@@ -178,8 +274,43 @@ impl LayerCache {
         }
     }
 
+    pub(crate) fn warm_stats(&self) -> WarmStats {
+        WarmStats {
+            entries: self.warm_entries.load(Ordering::Relaxed),
+            hits: self.warm_hits.load(Ordering::Relaxed),
+        }
+    }
+
     pub(crate) fn entries(&self) -> usize {
-        self.map.lock().unwrap().len()
+        self.map
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|s| matches!(s, Slot::Ready { .. }))
+            .count()
+    }
+}
+
+fn restamp(report: &LayerReport, name: &str) -> LayerReport {
+    let mut r = report.clone();
+    if r.layer.name != name {
+        r.layer.name = name.to_string();
+    }
+    r
+}
+
+/// Withdraws an in-flight claim if the computing closure panics.
+struct InFlightGuard<'a> {
+    cache: &'a LayerCache,
+    key: Option<CacheKey>,
+}
+
+impl Drop for InFlightGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(key) = self.key.take() {
+            self.cache.map.lock().unwrap().remove(&key);
+            self.cache.ready.notify_all();
+        }
     }
 }
 
@@ -250,5 +381,109 @@ mod tests {
         let d = a.since(&b);
         assert_eq!((d.layer_sims, d.cache_hits), (6, 20));
         assert_eq!(MemoStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn concurrent_misses_compute_once() {
+        use std::sync::atomic::AtomicUsize;
+        use std::sync::Barrier;
+
+        let cache = LayerCache::new();
+        let cfg = config::paper_default();
+        let l = LayerShape::conv("x", 12, 12, 3, 3, 4, 8, 1);
+        let computes = AtomicUsize::new(0);
+        const THREADS: usize = 8;
+        let barrier = Barrier::new(THREADS);
+
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for i in 0..THREADS {
+                let (cache, cfg, l, computes, barrier) = (&cache, &cfg, &l, &computes, &barrier);
+                handles.push(s.spawn(move || {
+                    barrier.wait(); // all threads race the same cold key
+                    let key = CacheKey::new(BackendKind::Analytical, cfg, l);
+                    cache.get_or_compute(key, &format!("t{i}"), || {
+                        computes.fetch_add(1, Ordering::SeqCst);
+                        // widen the window so waiters actually overlap
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        report("x")
+                    })
+                }));
+            }
+            let reports: Vec<LayerReport> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for (i, r) in reports.iter().enumerate() {
+                assert_eq!(r.layer.name, format!("t{i}"));
+                assert_eq!(r.timing, reports[0].timing);
+            }
+        });
+
+        assert_eq!(computes.load(Ordering::SeqCst), 1, "backend must run once");
+        let s = cache.stats();
+        assert_eq!(s.layer_sims, 1);
+        assert_eq!(s.cache_hits, (THREADS - 1) as u64);
+        assert_eq!(cache.entries(), 1);
+    }
+
+    #[test]
+    fn panicking_compute_releases_the_claim() {
+        let cache = LayerCache::new();
+        let cfg = config::paper_default();
+        let l = LayerShape::conv("p", 12, 12, 3, 3, 4, 8, 1);
+        let key = CacheKey::new(BackendKind::Analytical, &cfg, &l);
+
+        let poisoned = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            cache.get_or_compute(key.clone(), "p", || panic!("backend blew up"));
+        }));
+        assert!(poisoned.is_err());
+        assert_eq!(cache.entries(), 0, "failed claim must be withdrawn");
+
+        // the key is computable again afterwards
+        let r = cache.get_or_compute(key, "p", || report("p"));
+        assert_eq!(r.layer.name, "p");
+        assert_eq!(cache.stats().layer_sims, 1);
+    }
+
+    #[test]
+    fn prewarm_inserts_once_and_tags_warm_hits() {
+        let cache = LayerCache::new();
+        let cfg = config::paper_default();
+        let l = LayerShape::conv("w", 12, 12, 3, 3, 4, 8, 1);
+        let key = CacheKey::new(BackendKind::Analytical, &cfg, &l);
+
+        assert!(cache.insert_prewarmed(key.clone(), report("w")));
+        assert!(!cache.insert_prewarmed(key.clone(), report("w")), "duplicate prewarm is a no-op");
+        assert_eq!(cache.warm_stats(), WarmStats { entries: 1, hits: 0 });
+        assert_eq!(cache.stats().layer_sims, 0, "prewarm is not a sim");
+
+        let r = cache.get_or_compute(key, "renamed", || panic!("must hit warm entry"));
+        assert_eq!(r.layer.name, "renamed");
+        assert_eq!(cache.warm_stats(), WarmStats { entries: 1, hits: 1 });
+        assert_eq!(cache.stats().cache_hits, 1);
+    }
+
+    #[test]
+    fn export_round_trips_ready_entries() {
+        let cache = LayerCache::new();
+        let cfg = config::paper_default();
+        let l = LayerShape::conv("e", 12, 12, 3, 3, 4, 8, 1);
+        let key = CacheKey::new(BackendKind::Analytical, &cfg, &l);
+        let r = cache.get_or_compute(key.clone(), "e", || report("e"));
+
+        let dump = cache.export();
+        assert_eq!(dump.len(), 1);
+        assert_eq!(dump[0].0, key);
+        assert_eq!(*dump[0].1, r);
+    }
+
+    #[test]
+    fn since_saturates_across_a_reset() {
+        // a fresh engine's counters restart at zero; a stale snapshot
+        // from before the reset must yield zeros, not underflow
+        let before_reset = MemoStats { layer_sims: 100, cache_hits: 400 };
+        let after_reset = MemoStats { layer_sims: 3, cache_hits: 1 };
+        let d = after_reset.since(&before_reset);
+        assert_eq!((d.layer_sims, d.cache_hits), (0, 0));
+        assert_eq!(d.hit_rate(), 0.0);
     }
 }

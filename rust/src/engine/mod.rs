@@ -37,10 +37,11 @@ pub(crate) mod cache;
 pub mod grid;
 
 pub use backend::{Analytical, Backend, BackendKind, Rtl, TraceDriven};
-pub use cache::MemoStats;
+pub use cache::{MemoStats, WarmStats};
 pub use grid::{SweepGrid, SweepOutcome, SweepPoint, SweepStats};
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::arch::LayerShape;
 use crate::config::{ArchConfig, Topology};
@@ -67,6 +68,43 @@ pub struct RunOutcome {
     pub files_written: Vec<PathBuf>,
 }
 
+/// Opaque, cloneable (`Arc`-based) handle to a memo table. Obtained from
+/// [`Engine::cache_handle`] and installable into another engine via
+/// [`EngineBuilder::shared_cache`], so several engines — or a long-lived
+/// server and the engine it rebuilds after a config reload — share one
+/// table of (config, layer-shape) results. The handle only exposes
+/// read-side statistics; mutation goes through an owning engine.
+///
+/// The handle remembers the owning engine's [`EnergyModel`]: cached
+/// reports embed energy numbers, and the energy model is deliberately
+/// *not* part of the cache key, so `build()` rejects sharing across
+/// engines with different energy models.
+#[derive(Clone)]
+pub struct CacheHandle {
+    cache: Arc<LayerCache>,
+    energy: EnergyModel,
+    /// Owner used a custom backend: all custom backends key as
+    /// [`BackendKind::Custom`], so sharing across them would collide.
+    custom: bool,
+}
+
+impl CacheHandle {
+    /// Lifetime memoization counters of the shared table.
+    pub fn stats(&self) -> MemoStats {
+        self.cache.stats()
+    }
+
+    /// Warm-start accounting (prewarmed entries + hits they served).
+    pub fn warm_stats(&self) -> WarmStats {
+        self.cache.warm_stats()
+    }
+
+    /// Distinct ready entries in the shared table.
+    pub fn entries(&self) -> usize {
+        self.cache.entries()
+    }
+}
+
 /// The simulation engine: one base architecture + energy model + fidelity
 /// backend + memo cache, shared across runs and sweeps.
 pub struct Engine {
@@ -79,7 +117,7 @@ pub struct Engine {
     dump_traces: bool,
     trace_limit: u64,
     functional_tile: Option<usize>,
-    cache: LayerCache,
+    cache: Arc<LayerCache>,
 }
 
 impl Engine {
@@ -91,6 +129,24 @@ impl Engine {
 
     pub fn builder() -> EngineBuilder {
         EngineBuilder::default()
+    }
+
+    /// Wrap the engine for concurrent shared use (`Engine` is `Sync`;
+    /// backends are `Send + Sync` by trait bound). This is what the
+    /// serve subsystem hands its worker pool: every worker simulates
+    /// through the same engine, so every request shares one memo table.
+    pub fn shared(self) -> Arc<Engine> {
+        Arc::new(self)
+    }
+
+    /// Cloneable handle to this engine's memo table — installable into a
+    /// future engine via [`EngineBuilder::shared_cache`].
+    pub fn cache_handle(&self) -> CacheHandle {
+        CacheHandle {
+            cache: Arc::clone(&self.cache),
+            energy: self.energy_model,
+            custom: self.kind == BackendKind::Custom,
+        }
     }
 
     pub fn cfg(&self) -> &ArchConfig {
@@ -117,6 +173,18 @@ impl Engine {
     /// Distinct (config, layer-shape) entries currently cached.
     pub fn cache_entries(&self) -> usize {
         self.cache.entries()
+    }
+
+    /// Warm-start accounting: entries preloaded from a persistent store
+    /// and the hits they have served (see [`crate::server::store`]).
+    pub fn warm_stats(&self) -> WarmStats {
+        self.cache.warm_stats()
+    }
+
+    /// Crate-internal access for the server's result store (prewarm on
+    /// startup, export on shutdown).
+    pub(crate) fn layer_cache(&self) -> &LayerCache {
+        &self.cache
     }
 
     /// Simulate one layer under an arbitrary configuration (the grid's
@@ -325,6 +393,7 @@ pub struct EngineBuilder {
     dump_traces: bool,
     trace_limit: u64,
     functional_tile: Option<usize>,
+    cache: Option<CacheHandle>,
 }
 
 impl Default for EngineBuilder {
@@ -339,6 +408,7 @@ impl Default for EngineBuilder {
             dump_traces: false,
             trace_limit: 2_000_000,
             functional_tile: None,
+            cache: None,
         }
     }
 }
@@ -430,6 +500,17 @@ impl EngineBuilder {
         self
     }
 
+    /// Share another engine's memo table instead of starting cold —
+    /// results already cached there are visible to this engine. Keys
+    /// carry the backend kind and every value-affecting *config* field;
+    /// the energy model is engine-fixed and NOT part of the key, so
+    /// `build()` rejects the handle if this engine's energy model
+    /// differs from the owning engine's.
+    pub fn shared_cache(mut self, handle: CacheHandle) -> Self {
+        self.cache = Some(handle);
+        self
+    }
+
     /// Validate the configuration and construct the engine.
     pub fn build(self) -> Result<Engine> {
         self.cfg.validate()?;
@@ -437,6 +518,23 @@ impl EngineBuilder {
             return Err(Error::Config(
                 "BackendKind::Custom requires custom_backend(..)".into(),
             ));
+        }
+        if let Some(h) = &self.cache {
+            if h.energy != self.energy_model {
+                return Err(Error::Config(
+                    "shared_cache requires the owning engine's energy model: cached \
+                     reports embed energy numbers and the model is not part of the key"
+                        .into(),
+                ));
+            }
+            if h.custom || self.kind == BackendKind::Custom {
+                return Err(Error::Config(
+                    "shared_cache cannot involve a custom backend: every custom backend \
+                     keys as BackendKind::Custom, so distinct implementations would \
+                     collide in the shared table"
+                        .into(),
+                ));
+            }
         }
         Ok(self.build_unchecked())
     }
@@ -458,7 +556,10 @@ impl EngineBuilder {
             dump_traces: self.dump_traces,
             trace_limit: self.trace_limit,
             functional_tile: self.functional_tile,
-            cache: LayerCache::new(),
+            cache: match self.cache {
+                Some(h) => h.cache,
+                None => Arc::new(LayerCache::new()),
+            },
         }
     }
 }
@@ -545,6 +646,64 @@ mod tests {
         assert_eq!(e.cache_stats().layer_sims, sims_after_first, "no new sims");
         assert_eq!(e.cache_stats().cache_hits, t.layers.len() as u64);
         assert_eq!(e.cache_entries(), t.layers.len());
+    }
+
+    #[test]
+    fn shared_cache_handle_spans_engines() {
+        let a = Engine::new(config::paper_default());
+        let t = topo();
+        a.run_topology(&t);
+        let sims = a.cache_stats().layer_sims;
+        let b = Engine::builder()
+            .config(config::paper_default())
+            .shared_cache(a.cache_handle())
+            .build()
+            .unwrap();
+        let r = b.run_topology(&t);
+        assert_eq!(b.cache_stats().layer_sims, sims, "no new sims through the shared table");
+        assert_eq!(r, a.run_topology(&t));
+        assert_eq!(a.cache_handle().entries(), b.cache_entries());
+    }
+
+    #[test]
+    fn shared_cache_rejects_a_different_energy_model() {
+        // cached reports embed energy numbers; the model is not keyed
+        let a = Engine::new(config::paper_default());
+        let err = Engine::builder()
+            .config(config::paper_default())
+            .energy_model(crate::energy::EnergyModel::NODE_7NM)
+            .shared_cache(a.cache_handle())
+            .build();
+        assert!(err.is_err());
+        // same model is fine
+        assert!(Engine::builder()
+            .config(config::paper_default())
+            .shared_cache(a.cache_handle())
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn shared_cache_rejects_custom_backends() {
+        struct Echo;
+        impl crate::engine::Backend for Echo {
+            fn kind(&self) -> BackendKind {
+                BackendKind::Custom
+            }
+            fn timing(&self, cfg: &ArchConfig, layer: &LayerShape) -> crate::dataflow::Timing {
+                cfg.dataflow.timing(layer, cfg.array_h, cfg.array_w)
+            }
+        }
+        // custom consumer of a standard cache: rejected
+        let a = Engine::new(config::paper_default());
+        assert!(Engine::builder()
+            .custom_backend(Box::new(Echo))
+            .shared_cache(a.cache_handle())
+            .build()
+            .is_err());
+        // standard consumer of a custom engine's cache: rejected too
+        let c = Engine::builder().custom_backend(Box::new(Echo)).build().unwrap();
+        assert!(Engine::builder().shared_cache(c.cache_handle()).build().is_err());
     }
 
     #[test]

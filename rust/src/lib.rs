@@ -35,10 +35,21 @@
 //! The engine dispatches per-layer simulation to a pluggable
 //! [`engine::Backend`] (analytical closed forms, cycle-accurate trace
 //! generation, or the cycle-level RTL grid — all cycle-exact with each
-//! other) and memoizes per-(config, layer-shape) results so sweep grid
-//! points sharing layers never re-simulate. The pre-engine entry points
-//! ([`sim::Simulator`], [`coordinator::run`], the `sweep::*_sweep`
-//! functions) remain as thin deprecated shims.
+//! other) and memoizes per-(config, layer-shape) results — with
+//! in-flight deduplication, so concurrent misses on one key compute it
+//! once — so sweep grid points sharing layers never re-simulate. The
+//! pre-engine entry points ([`sim::Simulator`], [`coordinator::run`],
+//! the `sweep::*_sweep` functions) remain as thin deprecated shims.
+//!
+//! ## Simulation as a service: the `server` subsystem
+//!
+//! [`server`] runs the engine as a long-lived TCP service
+//! (`scale-sim serve`): a JSON-lines protocol ([`server::proto`]), a
+//! bounded job queue with blocking backpressure ([`server::queue`]), a
+//! worker pool sharing **one** process-wide memo cache, and a
+//! persistent result store ([`server::store`]) that pre-warms the cache
+//! across restarts. `scale-sim client` submits jobs; `scale-sim
+//! bench-serve` is the closed-loop load generator (`BENCH_serve.json`).
 //!
 //! Module map (paper section in parens):
 //!
@@ -53,6 +64,8 @@
 //! * [`energy`]   — access-cost energy model (Fig 6)
 //! * [`rtl`]      — cycle-level PE-grid simulator used for validation (Fig 4)
 //! * [`scaleout`] — scale-up vs scale-out study engine (§IV-E)
+//! * [`server`]   — `scale-sim serve`: TCP job server, worker pool,
+//!   shared memo cache, persistent result store
 //! * [`sim`]      — legacy per-layer facade -> [`sim::LayerReport`] (shim)
 //! * [`sweep`]    — thread pool + deprecated sweep shims (§IV)
 //! * [`report`]   — csv / markdown output writers (§III-F)
@@ -72,6 +85,7 @@ pub mod report;
 pub mod rtl;
 pub mod runtime;
 pub mod scaleout;
+pub mod server;
 pub mod sim;
 pub mod sweep;
 pub mod trace;

@@ -7,11 +7,15 @@
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
+use std::time::Instant;
 
 use scale_sim::config::{workloads, ArchConfig, Topology};
 use scale_sim::engine::{BackendKind, Engine};
 use scale_sim::runtime::{default_artifact_dir, Runtime};
+use scale_sim::server::{self, proto, ServeOpts};
+use scale_sim::util::bench::{percentile, write_json};
 use scale_sim::util::fmt_bytes;
+use scale_sim::util::json::Json;
 use scale_sim::{sweep, Dataflow, LayerShape};
 
 const USAGE: &str = "\
@@ -45,6 +49,30 @@ USAGE:
   scale-sim artifacts
       Show the functional-runtime platform and the AOT artifacts
       available for the functional path.
+
+  scale-sim serve [--addr H:P] [--workers N] [--queue-cap N]
+                  [--state-dir DIR] [-c cfg] [--dataflow os|ws|is]
+                  [--array RxC] [--backend analytical|trace|rtl]
+      Run the simulation service: a TCP JSON-lines job server with a
+      bounded queue, a worker pool, and ONE shared memo cache, so
+      repeated layers from different clients never re-simulate.
+      --state-dir persists results across restarts (pre-warm on start,
+      flush on shutdown). Prints `listening on ADDR`; stop it with
+      `scale-sim client shutdown`.
+
+  scale-sim client <run|sweep|stats|shutdown> [--addr H:P]
+                   [-t topology] [--dataflow os|ws|is] [--array RxC]
+                   [--kind dataflow|memory|shape]
+      Submit a job to a running server and stream its JSON response
+      lines (protocol: rust/src/server/proto.rs). `-t` takes a
+      built-in name or a csv path (sent inline).
+
+  scale-sim bench-serve [--clients N] [--rounds N] [--workers N]
+                        [--state-dir DIR]
+      Closed-loop load generator: N concurrent clients (default 8)
+      replay the MLPerf suite against an in-process server, then the
+      server restarts from the state dir to prove warm start. Writes
+      BENCH_serve.json (throughput, p50/p99 latency, hit rate).
 ";
 
 type CliResult<T> = std::result::Result<T, Box<dyn std::error::Error>>;
@@ -72,6 +100,9 @@ fn dispatch(args: &[String]) -> CliResult<()> {
         Some("validate") => cmd_validate(&args[1..]),
         Some("workloads") => cmd_workloads(),
         Some("artifacts") => cmd_artifacts(),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("client") => cmd_client(&args[1..]),
+        Some("bench-serve") => cmd_bench_serve(&args[1..]),
         Some("-h") | Some("--help") | None => {
             print!("{USAGE}");
             Ok(())
@@ -368,6 +399,246 @@ fn cmd_artifacts() -> CliResult<()> {
     }
     for n in names {
         println!("  {n}");
+    }
+    Ok(())
+}
+
+const DEFAULT_SERVE_ADDR: &str = "127.0.0.1:7433";
+
+fn cmd_serve(rest: &[String]) -> CliResult<()> {
+    let a = Args(rest);
+    let mut opts = ServeOpts { cfg: base_config(&a)?, ..ServeOpts::default() };
+    opts.addr = a.value("--addr", None).unwrap_or(DEFAULT_SERVE_ADDR).to_string();
+    if let Some(w) = a.value("--workers", None) {
+        opts.workers = w.parse()?;
+    }
+    if let Some(q) = a.value("--queue-cap", None) {
+        opts.queue_cap = q.parse()?;
+    }
+    if let Some(d) = a.value("--state-dir", None) {
+        opts.state_dir = Some(PathBuf::from(d));
+    }
+    if let Some(b) = a.value("--backend", None) {
+        opts.backend = BackendKind::parse(b)?;
+    }
+
+    let workers = opts.workers;
+    let persistent = opts.state_dir.is_some();
+    let handle = server::start(opts)?;
+    let warm = handle.stats().warm.entries;
+    println!(
+        "scale-sim serve: {workers} workers, {} state, {warm} warm entries",
+        if persistent { "persistent" } else { "in-memory" }
+    );
+    println!("listening on {}", handle.addr());
+    handle.join(); // until a client sends {"req":"shutdown"}
+    println!("server stopped (queue drained, store flushed)");
+    Ok(())
+}
+
+fn cmd_client(rest: &[String]) -> CliResult<()> {
+    let action = rest
+        .first()
+        .map(String::as_str)
+        .ok_or("client needs an action: run|sweep|stats|shutdown")?;
+    let a = Args(&rest[1..]);
+    let addr = a.value("--addr", None).unwrap_or(DEFAULT_SERVE_ADDR);
+
+    let req = match action {
+        "stats" => r#"{"req":"stats"}"#.to_string(),
+        "shutdown" => r#"{"req":"shutdown"}"#.to_string(),
+        "run" | "sweep" => {
+            let mut fields = vec![("req", Json::str(action)), ("id", Json::u64(1))];
+            if action == "sweep" {
+                fields.push(("kind", Json::str(a.value("--kind", None).unwrap_or("dataflow"))));
+            }
+            let topo_spec = a.value("--topology", Some("-t"));
+            if let Some(spec) = topo_spec.or((action == "run").then_some("resnet50")) {
+                // resolve locally (built-in name or csv path) and send the
+                // layers inline, so the server needs no file access
+                let topo = load_topology(spec)?;
+                fields.push(("workload", Json::str(&topo.name)));
+                fields.push((
+                    "layers",
+                    Json::Arr(topo.layers.iter().map(proto::layer_shape_to_json).collect()),
+                ));
+            }
+            if let Some(df) = a.value("--dataflow", None) {
+                fields.push(("dataflow", Json::str(df)));
+            }
+            if let Some(arr) = a.value("--array", None) {
+                fields.push(("array", Json::str(arr)));
+            }
+            Json::obj(fields).to_string()
+        }
+        other => return fail(format!("unknown client action {other:?} (run|sweep|stats|shutdown)")),
+    };
+
+    let mut client = server::Client::connect(addr)
+        .map_err(|e| format!("cannot reach server at {addr}: {e}"))?;
+    let events = client.request(&req)?;
+    for e in &events {
+        println!("{e}");
+    }
+    if events.last().is_some_and(|e| e.str_field("event") == Some("error")) {
+        return fail(format!(
+            "server rejected the job: {}",
+            events.last().unwrap().str_field("error").unwrap_or("?")
+        ));
+    }
+    Ok(())
+}
+
+fn cmd_bench_serve(rest: &[String]) -> CliResult<()> {
+    let a = Args(rest);
+    let clients: usize = a.value("--clients", None).unwrap_or("8").parse()?;
+    let rounds: usize = a.value("--rounds", None).unwrap_or("2").parse()?;
+    let workers: usize = match a.value("--workers", None) {
+        Some(w) => w.parse()?,
+        None => sweep::default_threads(),
+    };
+    let user_state_dir = a.value("--state-dir", None).is_some();
+    let state_dir = match a.value("--state-dir", None) {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("scale_sim_bench_serve_{}", std::process::id())),
+    };
+    // phase 1 must be genuinely cold so BENCH_serve.json measures the
+    // cross-client scenario — but never destroy a user-owned snapshot
+    if state_dir.join("results.jsonl").exists() {
+        if user_state_dir {
+            return fail(format!(
+                "{} already holds results.jsonl; bench-serve phase 1 must start cold — \
+                 pass a fresh --state-dir or remove the snapshot first",
+                state_dir.display()
+            ));
+        }
+        let _ = std::fs::remove_file(state_dir.join("results.jsonl"));
+    }
+
+    let opts = || ServeOpts {
+        workers,
+        state_dir: Some(state_dir.clone()),
+        ..ServeOpts::default()
+    };
+    let suite: Vec<&str> = workloads::TAGS.iter().map(|(_, name)| *name).collect();
+    let jobs_expected = clients * rounds * suite.len();
+    println!(
+        "bench-serve phase 1 (cold): {clients} clients x {rounds} rounds x {} workloads on {workers} workers",
+        suite.len()
+    );
+
+    // ---- phase 1: cold start, concurrent closed-loop clients
+    let handle = server::start(opts())?;
+    let addr = handle.addr();
+    let t0 = Instant::now();
+    let mut latencies_ms: Vec<f64> = Vec::with_capacity(jobs_expected);
+    let mut dropped = 0u64;
+    std::thread::scope(|s| {
+        let suite = &suite;
+        let handles: Vec<_> = (0..clients)
+            .map(|ci| {
+                s.spawn(move || -> (Vec<f64>, u64) {
+                    let mut lat = Vec::new();
+                    let mut bad = 0u64;
+                    let mut c = server::Client::connect(addr).expect("bench client connect");
+                    for round in 0..rounds {
+                        for (wi, name) in suite.iter().enumerate() {
+                            let id = (ci * 10_000 + round * 100 + wi) as u64;
+                            let req = Json::obj(vec![
+                                ("req", Json::str("run")),
+                                ("id", Json::u64(id)),
+                                ("workload", Json::str(*name)),
+                            ])
+                            .to_string();
+                            let t = Instant::now();
+                            match c.request(&req) {
+                                Ok(events)
+                                    if events.last().is_some_and(|e| {
+                                        e.str_field("event") == Some("done")
+                                    }) =>
+                                {
+                                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                                }
+                                _ => bad += 1,
+                            }
+                        }
+                    }
+                    (lat, bad)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (lat, bad) = h.join().expect("bench client thread");
+            latencies_ms.extend(lat);
+            dropped += bad;
+        }
+    });
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let cold = handle.stats();
+    handle.shutdown(); // drains + flushes the result store
+
+    // ---- phase 2: restart from the state dir; one suite replay must be warm
+    let handle = server::start(opts())?;
+    let warm_loaded = handle.stats().warm.entries;
+    let mut c = server::Client::connect(handle.addr())?;
+    for (i, name) in suite.iter().enumerate() {
+        let req = Json::obj(vec![
+            ("req", Json::str("run")),
+            ("id", Json::u64(i as u64)),
+            ("workload", Json::str(*name)),
+        ])
+        .to_string();
+        let events = c.request(&req)?;
+        if !events.last().is_some_and(|e| e.str_field("event") == Some("done")) {
+            return fail(format!("warm replay of {name} did not complete"));
+        }
+    }
+    let warm = handle.stats();
+    handle.shutdown();
+
+    let p50 = percentile(&latencies_ms, 50.0);
+    let p99 = percentile(&latencies_ms, 99.0);
+    let throughput = latencies_ms.len() as f64 / (wall_ms / 1e3);
+    println!(
+        "phase 1: {}/{jobs_expected} jobs ok ({dropped} dropped) in {wall_ms:.1} ms — {throughput:.1} jobs/s, p50 {p50:.2} ms, p99 {p99:.2} ms",
+        latencies_ms.len()
+    );
+    println!(
+        "         cache: {} sims, {} hits ({:.1}% cross-client hit rate), {} entries",
+        cold.memo.layer_sims,
+        cold.memo.cache_hits,
+        cold.memo.hit_rate() * 100.0,
+        cold.cache_entries
+    );
+    println!(
+        "phase 2: restart loaded {warm_loaded} warm entries; suite replay hit {} warm entries, {} new sims",
+        warm.warm.hits, warm.memo.layer_sims
+    );
+
+    write_json(
+        Path::new("BENCH_serve.json"),
+        &[
+            ("clients", clients as f64),
+            ("workers", workers as f64),
+            ("jobs", latencies_ms.len() as f64),
+            ("dropped", dropped as f64),
+            ("wall_ms", wall_ms),
+            ("throughput_jobs_per_s", throughput),
+            ("p50_ms", p50),
+            ("p99_ms", p99),
+            ("layer_sims", cold.memo.layer_sims as f64),
+            ("cache_hits", cold.memo.cache_hits as f64),
+            ("cache_hit_rate", cold.memo.hit_rate()),
+            ("warm_entries", warm_loaded as f64),
+            ("warm_hits", warm.warm.hits as f64),
+        ],
+    )?;
+    println!("wrote BENCH_serve.json");
+    if !user_state_dir {
+        let _ = std::fs::remove_dir_all(&state_dir);
+    }
+    if dropped > 0 {
+        return fail(format!("{dropped} jobs dropped"));
     }
     Ok(())
 }

@@ -1,0 +1,595 @@
+//! Simulation-as-a-service: the `scale-sim serve` subsystem (std-only:
+//! `std::net::TcpListener` + threads; no async runtime, no framework).
+//!
+//! The paper's case studies are hundreds of `(config, workload)` points,
+//! and one-shot CLI runs pay the cold-start price every time — cache
+//! warmth dies with the process. This module turns the memoizing
+//! [`Engine`] into a long-running service many clients share:
+//!
+//! ```text
+//!            conn thread per client            worker pool (N threads)
+//! client A ──> parse JSON line ──┐   bounded    ┌─> Engine::run_topology_with
+//! client B ──> parse JSON line ──┼─> JobQueue ──┼─> Engine::sweep().run()
+//! client C ──> parse JSON line ──┘  (blocking   └─> ...
+//!                                    push =                │
+//!                                    backpressure)  one shared Arc<Engine>
+//!                                                   => one process-wide memo
+//!                                                      cache + in-flight dedup
+//! ```
+//!
+//! * **One engine, one cache**: every worker simulates through the same
+//!   [`Engine`], so repeated layer shapes from *different* clients hit
+//!   the memo table ([`crate::engine::cache`]) — and two clients racing
+//!   on the same cold key compute it once (in-flight deduplication).
+//! * **Bounded queue, zero drops**: [`queue::JobQueue`] blocks producers
+//!   when full (TCP flow control carries the backpressure to clients)
+//!   and drains every admitted job on shutdown.
+//! * **Persistent warmth**: with a `--state-dir`, [`store::ResultStore`]
+//!   pre-warms the cache on startup and snapshots it on shutdown, so a
+//!   restarted server answers from disk-warmed entries (`warm_hits` in
+//!   the `stats` event proves it).
+//!
+//! Wire protocol: see [`proto`]. Entry points: [`start`] (returns a
+//! [`ServerHandle`]), [`Client`] (blocking JSON-lines client used by
+//! `scale-sim client`, `scale-sim bench-serve`, and the loopback tests).
+
+pub mod proto;
+pub mod queue;
+pub mod store;
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::config::{ArchConfig, Topology};
+use crate::engine::{BackendKind, Engine};
+use crate::util::json::Json;
+use crate::{Dataflow, Result};
+
+use proto::{Request, ServerStats, SweepKind};
+use queue::JobQueue;
+use store::ResultStore;
+
+/// Server configuration (all fields have serviceable defaults).
+pub struct ServeOpts {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`ServerHandle::addr`] for the resolved one).
+    pub addr: String,
+    /// Worker pool size (default: available parallelism minus one).
+    pub workers: usize,
+    /// Max jobs waiting in the queue before producers block.
+    pub queue_cap: usize,
+    /// Max simultaneous client connections (one thread each); excess
+    /// connects are refused with an error line. Bounds the only
+    /// otherwise-unbounded per-client resource.
+    pub max_conns: usize,
+    /// Result-store directory; `None` disables persistence.
+    pub state_dir: Option<PathBuf>,
+    /// Base architecture; per-request overrides apply on top.
+    pub cfg: ArchConfig,
+    /// Fidelity backend every job runs under.
+    pub backend: BackendKind,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            addr: "127.0.0.1:0".into(),
+            workers: crate::sweep::default_threads(),
+            queue_cap: 64,
+            max_conns: 256,
+            state_dir: None,
+            cfg: ArchConfig::default(),
+            backend: BackendKind::Analytical,
+        }
+    }
+}
+
+/// One admitted job: the parsed work plus the connection to stream
+/// responses to.
+struct Job {
+    id: u64,
+    kind: JobKind,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+enum JobKind {
+    Run { topo: Topology, cfg: ArchConfig },
+    Sweep { kind: SweepKind, topos: Vec<Topology>, cfg: ArchConfig },
+}
+
+/// State shared by the accept loop, connection threads, and workers.
+struct Shared {
+    engine: Arc<Engine>,
+    queue: JobQueue<Job>,
+    workers: usize,
+    stopping: AtomicBool,
+    addr: SocketAddr,
+    conns: AtomicUsize,
+    max_conns: usize,
+}
+
+impl Shared {
+    fn stats(&self) -> ServerStats {
+        let q = self.queue.stats();
+        ServerStats {
+            queue_depth: q.depth,
+            in_flight: q.in_flight,
+            completed: q.completed,
+            failed: q.failed,
+            submitted: q.submitted,
+            workers: self.workers,
+            cache_entries: self.engine.cache_entries(),
+            memo: self.engine.cache_stats(),
+            warm: self.engine.warm_stats(),
+        }
+    }
+
+    /// Idempotent: stop admissions, wake the accept loop, let workers
+    /// drain. Callable from a connection thread (protocol `shutdown`)
+    /// or from [`ServerHandle::shutdown`].
+    fn begin_shutdown(&self) {
+        if self.stopping.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.queue.close();
+        // Unblock the blocking accept with a throwaway connection. A
+        // wildcard bind address (0.0.0.0 / ::) is not connectable —
+        // rewrite it to the matching loopback.
+        let mut target = self.addr;
+        if target.ip().is_unspecified() {
+            target.set_ip(match target.ip() {
+                std::net::IpAddr::V4(_) => std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST),
+                std::net::IpAddr::V6(_) => std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST),
+            });
+        }
+        let _ = TcpStream::connect(target);
+    }
+}
+
+/// Running server. Dropping the handle shuts the server down (drain +
+/// store flush); prefer the explicit [`ServerHandle::shutdown`] /
+/// [`ServerHandle::join`] in real callers.
+pub struct ServerHandle {
+    shared: Arc<Shared>,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The resolved bind address (meaningful with ephemeral ports).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Server-side statistics snapshot (same data as the `stats` event).
+    pub fn stats(&self) -> ServerStats {
+        self.shared.stats()
+    }
+
+    /// Initiate shutdown and block until the queue is drained, workers
+    /// exited, and the result store flushed.
+    pub fn shutdown(mut self) {
+        self.shared.begin_shutdown();
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Block until the server stops (e.g. a client sent `shutdown`).
+    pub fn join(mut self) {
+        if let Some(h) = self.supervisor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        if let Some(h) = self.supervisor.take() {
+            self.shared.begin_shutdown();
+            let _ = h.join();
+        }
+    }
+}
+
+/// Start the service: bind, warm-start from the result store (if any),
+/// spawn the worker pool and accept loop, return immediately.
+pub fn start(opts: ServeOpts) -> Result<ServerHandle> {
+    // workers parallelize across jobs; each job simulates single-threaded
+    let engine = Engine::builder()
+        .config(opts.cfg)
+        .backend(opts.backend)
+        .threads(1)
+        .build()?
+        .shared();
+
+    let store = match &opts.state_dir {
+        Some(dir) => {
+            let s = ResultStore::open(dir)?;
+            s.load_into(&engine)?;
+            Some(s)
+        }
+        None => None,
+    };
+
+    let listener = TcpListener::bind(opts.addr.as_str())?;
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(Shared {
+        engine,
+        queue: JobQueue::bounded(opts.queue_cap),
+        workers: opts.workers.max(1),
+        stopping: AtomicBool::new(false),
+        addr,
+        conns: AtomicUsize::new(0),
+        max_conns: opts.max_conns.max(1),
+    });
+
+    let accept = {
+        let sh = Arc::clone(&shared);
+        std::thread::spawn(move || accept_loop(&sh, listener))
+    };
+    let workers: Vec<JoinHandle<()>> = (0..shared.workers)
+        .map(|_| {
+            let sh = Arc::clone(&shared);
+            std::thread::spawn(move || worker_loop(&sh))
+        })
+        .collect();
+
+    let supervisor = {
+        let sh = Arc::clone(&shared);
+        std::thread::spawn(move || {
+            let _ = accept.join();
+            for w in workers {
+                let _ = w.join();
+            }
+            if let Some(store) = store {
+                let _ = store.flush_from(&sh.engine);
+            }
+        })
+    };
+
+    Ok(ServerHandle { shared, supervisor: Some(supervisor) })
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener) {
+    for stream in listener.incoming() {
+        if shared.stopping.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(mut stream) = stream else { continue };
+        if shared.conns.fetch_add(1, Ordering::SeqCst) >= shared.max_conns {
+            shared.conns.fetch_sub(1, Ordering::SeqCst);
+            let line = proto::error_line(0, "connection limit reached");
+            let _ = stream
+                .write_all(line.as_bytes())
+                .and_then(|()| stream.write_all(b"\n"));
+            continue; // dropping the stream closes it
+        }
+        let sh = Arc::clone(shared);
+        // connection threads are detached; they exit when the client
+        // disconnects or the queue rejects their next submission
+        std::thread::spawn(move || {
+            handle_conn(&sh, stream);
+            sh.conns.fetch_sub(1, Ordering::SeqCst);
+        });
+    }
+}
+
+/// A request line larger than this drops the connection — bounds server
+/// memory against a client that streams bytes without a newline.
+/// (Inline topologies are small: resnet50 is ~8 KiB.)
+const MAX_LINE_BYTES: usize = 4 << 20;
+
+/// Responses time out rather than block a worker forever on a client
+/// that submits jobs and then stops reading (full TCP send buffer).
+const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
+
+fn handle_conn(shared: &Shared, stream: TcpStream) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
+    let writer = Arc::new(Mutex::new(write_half));
+    let mut reader = BufReader::new(stream);
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        // read one line with a hard cap: `take` stops at cap+1, so an
+        // over-long line is detectable without buffering it all
+        let n = match (&mut reader)
+            .take(MAX_LINE_BYTES as u64 + 1)
+            .read_until(b'\n', &mut buf)
+        {
+            Ok(0) => break, // client closed the connection
+            Ok(n) => n,
+            Err(_) => break,
+        };
+        if n > MAX_LINE_BYTES {
+            send_line(&writer, &proto::error_line(0, "request line exceeds 4 MiB"));
+            break; // mid-line: cannot resync, drop the connection
+        }
+        let Ok(text) = std::str::from_utf8(&buf) else {
+            send_line(&writer, &proto::error_line(0, "request is not UTF-8"));
+            continue;
+        };
+        let line = text.trim();
+        if line.is_empty() {
+            continue;
+        }
+        match proto::parse_request(line) {
+            Err(e) => {
+                // best-effort id echo so clients can pair the error
+                let id = Json::parse(line).ok().and_then(|j| j.u64_field("id")).unwrap_or(0);
+                send_line(&writer, &proto::error_line(id, &e));
+            }
+            // stats answers inline from the connection thread — never
+            // queued, so it observes queue depth rather than adding to it
+            Ok(Request::Stats) => {
+                send_line(&writer, &shared.stats().to_json().to_string());
+            }
+            Ok(Request::Shutdown) => {
+                send_line(&writer, &proto::shutting_down_line());
+                shared.begin_shutdown();
+                break;
+            }
+            Ok(Request::Run { id, topo, overrides }) => {
+                let cfg = overrides.apply(shared.engine.cfg());
+                submit(shared, &writer, id, cfg.validate().map(|()| JobKind::Run { topo, cfg }));
+            }
+            Ok(Request::Sweep { id, kind, topos, overrides }) => {
+                let cfg = overrides.apply(shared.engine.cfg());
+                submit(
+                    shared,
+                    &writer,
+                    id,
+                    cfg.validate().map(|()| JobKind::Sweep { kind, topos, cfg }),
+                );
+            }
+        }
+    }
+}
+
+/// Queue a validated job (blocking on a full queue = backpressure), or
+/// report why it cannot run.
+fn submit(
+    shared: &Shared,
+    writer: &Arc<Mutex<TcpStream>>,
+    id: u64,
+    kind: Result<JobKind>,
+) {
+    match kind {
+        Err(e) => send_line(writer, &proto::error_line(id, &e.to_string())),
+        Ok(kind) => {
+            let job = Job { id, kind, writer: Arc::clone(writer) };
+            if !shared.queue.push(job) {
+                send_line(writer, &proto::error_line(id, "server is shutting down"));
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(job) = shared.queue.pop() {
+        let t0 = Instant::now();
+        // a panicking job must not kill the worker or hang the client
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_job(&shared.engine, &job)
+        }));
+        // count the job done BEFORE emitting the terminal event, so a
+        // client that sees `done` and immediately asks for `stats`
+        // observes its job in `completed` (panics land in `failed`)
+        shared.queue.job_done(outcome.is_ok());
+        match outcome {
+            Ok(points) => {
+                send_line(&job.writer, &proto::done_line(job.id, ms_since(t0), points));
+            }
+            Err(_) => {
+                send_line(&job.writer, &proto::error_line(job.id, "internal error: job panicked"));
+            }
+        }
+    }
+}
+
+/// Execute the job, streaming non-terminal events; the worker loop emits
+/// the terminal `done`. Returns the point count for sweep jobs.
+fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
+    match &job.kind {
+        JobKind::Run { topo, cfg } => {
+            let report = engine.run_topology_with(cfg, topo);
+            send_line(&job.writer, &proto::result_line(job.id, &report));
+            None
+        }
+        JobKind::Sweep { kind, topos, cfg } => {
+            let out = match kind {
+                SweepKind::Dataflow => engine
+                    .sweep()
+                    .workloads(topos)
+                    .dataflows(&Dataflow::ALL)
+                    .square_arrays(&[128, 64, 32, 16, 8])
+                    .run(),
+                SweepKind::Memory => engine
+                    .sweep()
+                    .workloads(topos)
+                    .dataflows(&[cfg.dataflow])
+                    .array_shapes(&[(cfg.array_h, cfg.array_w)])
+                    .sram_sizes_kb(&[32, 64, 128, 256, 512, 1024, 2048])
+                    .run(),
+                SweepKind::Shape => engine
+                    .sweep()
+                    .workloads(topos)
+                    .dataflows(&Dataflow::ALL)
+                    .array_shapes(&crate::sweep::fig8_shapes())
+                    .run(),
+            };
+            for p in &out.points {
+                send_line(&job.writer, &proto::point_line(job.id, p));
+            }
+            Some(out.points.len())
+        }
+    }
+}
+
+fn ms_since(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e3
+}
+
+/// Write one response line; errors (client hung up) are swallowed — the
+/// job still completes and populates the shared cache.
+fn send_line(writer: &Mutex<TcpStream>, line: &str) {
+    let mut w = writer.lock().unwrap();
+    let _ = w
+        .write_all(line.as_bytes())
+        .and_then(|()| w.write_all(b"\n"))
+        .and_then(|()| w.flush());
+}
+
+/// Blocking JSON-lines client for the serve protocol — what
+/// `scale-sim client`, `scale-sim bench-serve`, and the loopback tests
+/// speak through.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let writer = stream.try_clone()?;
+        Ok(Client { reader: BufReader::new(stream), writer })
+    }
+
+    /// Send one raw request line.
+    pub fn send(&mut self, line: &str) -> std::io::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()
+    }
+
+    /// Read one response line as JSON.
+    pub fn recv(&mut self) -> std::io::Result<Json> {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "server closed the connection",
+                ));
+            }
+            if !line.trim().is_empty() {
+                break;
+            }
+        }
+        Json::parse(line.trim())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    /// Send one request and collect its full response stream, terminal
+    /// event included.
+    pub fn request(&mut self, line: &str) -> std::io::Result<Vec<Json>> {
+        self.send(line)?;
+        let mut out = Vec::new();
+        loop {
+            let j = self.recv()?;
+            let terminal = proto::is_terminal_event(&j);
+            out.push(j);
+            if terminal {
+                return Ok(out);
+            }
+        }
+    }
+
+    /// Convenience: fetch and parse the server statistics.
+    pub fn stats(&mut self) -> std::io::Result<ServerStats> {
+        let events = self.request(r#"{"req":"stats"}"#)?;
+        ServerStats::from_json(events.last().expect("request returns >= 1 event"))
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+
+    fn inline_run_request(id: u64) -> String {
+        let layers = Json::Arr(vec![
+            proto::layer_shape_to_json(&LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1)),
+            proto::layer_shape_to_json(&LayerShape::fc("fc", 1, 128, 10)),
+        ]);
+        Json::obj(vec![
+            ("req", Json::str("run")),
+            ("id", Json::u64(id)),
+            ("workload", Json::str("inline-t")),
+            ("layers", layers),
+            ("array", Json::str("16x16")),
+        ])
+        .to_string()
+    }
+
+    #[test]
+    fn run_job_round_trips_and_shuts_down_cleanly() {
+        let handle = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+        let addr = handle.addr();
+
+        let mut c = Client::connect(addr).unwrap();
+        let events = c.request(&inline_run_request(42)).unwrap();
+        assert_eq!(events.len(), 2, "result + done");
+        assert_eq!(events[0].str_field("event"), Some("result"));
+        assert_eq!(events[0].u64_field("id"), Some(42));
+        let report =
+            proto::workload_report_from_json(events[0].get("report").unwrap()).unwrap();
+        assert_eq!(report.layers.len(), 2);
+        assert_eq!(events[1].str_field("event"), Some("done"));
+
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.workers, 2);
+        assert_eq!(stats.memo.layer_sims, 2);
+
+        // protocol-initiated shutdown
+        let bye = c.request(r#"{"req":"shutdown"}"#).unwrap();
+        assert_eq!(bye[0].str_field("event"), Some("shutting_down"));
+        handle.join();
+    }
+
+    #[test]
+    fn bad_requests_get_error_events_not_disconnects() {
+        let handle = start(ServeOpts::default()).unwrap();
+        let mut c = Client::connect(handle.addr()).unwrap();
+
+        let e = c.request("definitely not json").unwrap();
+        assert_eq!(e[0].str_field("event"), Some("error"));
+
+        let e = c.request(r#"{"req":"run","id":5,"workload":"no_such_net"}"#).unwrap();
+        assert_eq!(e[0].u64_field("id"), Some(5));
+        assert!(e[0].str_field("error").unwrap().contains("no_such_net"));
+
+        // invalid override caught at admission, not in a worker
+        let e = c.request(r#"{"req":"run","id":6,"workload":"ncf","array":"0x8"}"#).unwrap();
+        assert_eq!(e[0].str_field("event"), Some("error"));
+
+        // the connection is still usable afterwards
+        let ok = c.request(&inline_run_request(7)).unwrap();
+        assert_eq!(ok.last().unwrap().str_field("event"), Some("done"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn sweep_job_streams_points() {
+        let handle = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+        let mut c = Client::connect(handle.addr()).unwrap();
+        let events = c
+            .request(r#"{"req":"sweep","id":9,"kind":"memory","workload":"ncf","array":"32x32"}"#)
+            .unwrap();
+        let done = events.last().unwrap();
+        assert_eq!(done.str_field("event"), Some("done"));
+        assert_eq!(done.u64_field("points"), Some(7), "7 SRAM sizes");
+        assert_eq!(events.len(), 8, "7 point events + done");
+        assert_eq!(events[0].str_field("event"), Some("point"));
+        assert_eq!(events[0].u64_field("array_h"), Some(32), "array override honored");
+        handle.shutdown();
+    }
+}

@@ -1,0 +1,623 @@
+//! Wire protocol for `scale-sim serve` — hand-rolled **JSON lines** over
+//! TCP (serde/tonic are unavailable offline; every message is one JSON
+//! object on one `\n`-terminated line, UTF-8).
+//!
+//! ## Requests (client -> server)
+//!
+//! | shape | meaning |
+//! |---|---|
+//! | `{"req":"run","id":1,"workload":"resnet50"}` | simulate one workload (built-in name or `W1`..`W7` tag) |
+//! | `{"req":"run","id":2,"workload":"mine","layers":[{...layer...},..]}` | simulate an inline topology (layer objects, shape below) |
+//! | `{"req":"sweep","id":3,"kind":"dataflow","workload":"ncf"}` | run a paper sweep (`dataflow`\|`memory`\|`shape`); omit `workload` for the full MLPerf suite |
+//! | `{"req":"stats"}` | server/queue/cache statistics (answered inline, never queued) |
+//! | `{"req":"shutdown"}` | drain the queue, flush the result store, stop |
+//!
+//! `run` accepts optional architecture overrides applied on top of the
+//! server's base config: `"dataflow":"os|ws|is"`, `"array":"RxC"`,
+//! `"sram_kb":[ifmap,filter,ofmap]`, `"word_bytes":N`. `sweep` accepts
+//! `dataflow`/`array` for `"kind":"memory"` only (they pin the
+//! non-swept axes); any override a sweep would have to ignore is
+//! rejected with an error rather than silently dropped. `id` is an
+//! arbitrary client-chosen `u64` echoed on every response line for that
+//! job (default 0).
+//!
+//! A layer object is the Table-II row:
+//! `{"name":"c1","ifmap_h":16,"ifmap_w":16,"filt_h":3,"filt_w":3,
+//!   "channels":4,"num_filters":8,"stride":1}`.
+//!
+//! ## Responses (server -> client)
+//!
+//! Job responses stream; every line carries the job's `id` and an
+//! `event` discriminator, ending with a terminal event:
+//!
+//! | event | payload |
+//! |---|---|
+//! | `result` | `"report"`: the full workload report (shape below) — `run` jobs |
+//! | `point` | one sweep grid point: coordinates + headline metrics — `sweep` jobs |
+//! | `done` | **terminal**; `"ms"` wall-clock, plus `"points"` for sweeps |
+//! | `error` | **terminal**; `"error"` message (bad request, queue closed, …) |
+//! | `stats` | **terminal**; see [`ServerStats`] field list |
+//! | `shutting_down` | **terminal**; acknowledges a shutdown request |
+//!
+//! The workload report is
+//! `{"workload":"...","layers":[{"layer":{...},"timing":{...},
+//! "dram":{...},"bandwidth":{...},"energy":{...}},..]}` with field names
+//! exactly matching the `LayerReport` structs. Numbers are emitted as
+//! shortest-round-trip decimals and parsed back exactly
+//! ([`crate::util::json`]), so a report that crosses the wire (or the
+//! result store) is **bit-identical** on both ends — asserted by the
+//! loopback round-trip suite.
+
+use crate::arch::LayerShape;
+use crate::config::{workloads, ArchConfig, Topology};
+use crate::dataflow::{Dataflow, Timing};
+use crate::energy::EnergyBreakdown;
+use crate::engine::{MemoStats, WarmStats};
+use crate::memory::{BandwidthReport, DramTraffic};
+use crate::sim::{LayerReport, WorkloadReport};
+use crate::util::json::Json;
+
+/// One parsed client request.
+#[derive(Debug)]
+pub enum Request {
+    Run { id: u64, topo: Topology, overrides: Overrides },
+    Sweep { id: u64, kind: SweepKind, topos: Vec<Topology>, overrides: Overrides },
+    Stats,
+    Shutdown,
+}
+
+/// Which paper sweep a `sweep` job runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepKind {
+    Dataflow,
+    Memory,
+    Shape,
+}
+
+impl SweepKind {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "dataflow" => Ok(SweepKind::Dataflow),
+            "memory" => Ok(SweepKind::Memory),
+            "shape" => Ok(SweepKind::Shape),
+            other => Err(format!("unknown sweep kind {other:?} (dataflow|memory|shape)")),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SweepKind::Dataflow => "dataflow",
+            SweepKind::Memory => "memory",
+            SweepKind::Shape => "shape",
+        }
+    }
+}
+
+/// Optional per-request architecture overrides.
+#[derive(Clone, Debug, Default)]
+pub struct Overrides {
+    pub dataflow: Option<Dataflow>,
+    pub array: Option<(u64, u64)>,
+    pub sram_kb: Option<(u64, u64, u64)>,
+    pub word_bytes: Option<u64>,
+}
+
+impl Overrides {
+    /// The request's effective config: server base + overrides.
+    pub fn apply(&self, base: &ArchConfig) -> ArchConfig {
+        let mut cfg = base.clone();
+        if let Some(df) = self.dataflow {
+            cfg.dataflow = df;
+        }
+        if let Some((h, w)) = self.array {
+            cfg.array_h = h;
+            cfg.array_w = w;
+        }
+        if let Some((i, f, o)) = self.sram_kb {
+            cfg.ifmap_sram_kb = i;
+            cfg.filter_sram_kb = f;
+            cfg.ofmap_sram_kb = o;
+        }
+        if let Some(wb) = self.word_bytes {
+            cfg.word_bytes = wb;
+        }
+        cfg
+    }
+}
+
+/// Server-side statistics reported by the `stats` event: bounded-queue
+/// occupancy, worker activity, and the shared memo cache counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServerStats {
+    pub queue_depth: usize,
+    pub in_flight: usize,
+    pub completed: u64,
+    /// Jobs that ended abnormally (worker panicked); disjoint from
+    /// `completed`.
+    pub failed: u64,
+    pub submitted: u64,
+    pub workers: usize,
+    pub cache_entries: usize,
+    pub memo: MemoStats,
+    pub warm: WarmStats,
+}
+
+impl ServerStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("event", Json::str("stats")),
+            ("queue_depth", Json::u64(self.queue_depth as u64)),
+            ("in_flight", Json::u64(self.in_flight as u64)),
+            ("completed", Json::u64(self.completed)),
+            ("failed", Json::u64(self.failed)),
+            ("submitted", Json::u64(self.submitted)),
+            ("workers", Json::u64(self.workers as u64)),
+            ("cache_entries", Json::u64(self.cache_entries as u64)),
+            ("layer_sims", Json::u64(self.memo.layer_sims)),
+            ("cache_hits", Json::u64(self.memo.cache_hits)),
+            ("hit_rate", Json::f64(self.memo.hit_rate())),
+            ("warm_entries", Json::u64(self.warm.entries)),
+            ("warm_hits", Json::u64(self.warm.hits)),
+        ])
+    }
+
+    /// Parse a `stats` event line back (client side).
+    pub fn from_json(j: &Json) -> Result<ServerStats, String> {
+        Ok(ServerStats {
+            queue_depth: need_u64(j, "queue_depth")? as usize,
+            in_flight: need_u64(j, "in_flight")? as usize,
+            completed: need_u64(j, "completed")?,
+            failed: need_u64(j, "failed")?,
+            submitted: need_u64(j, "submitted")?,
+            workers: need_u64(j, "workers")? as usize,
+            cache_entries: need_u64(j, "cache_entries")? as usize,
+            memo: MemoStats {
+                layer_sims: need_u64(j, "layer_sims")?,
+                cache_hits: need_u64(j, "cache_hits")?,
+            },
+            warm: WarmStats {
+                entries: need_u64(j, "warm_entries")?,
+                hits: need_u64(j, "warm_hits")?,
+            },
+        })
+    }
+}
+
+// ---------------------------------------------------------------- requests
+
+/// Parse one request line.
+pub fn parse_request(line: &str) -> Result<Request, String> {
+    let j = Json::parse(line)?;
+    let id = j.u64_field("id").unwrap_or(0);
+    match j.str_field("req") {
+        Some("run") => {
+            let topo = request_topology(&j)?
+                .ok_or("run request needs \"workload\" (built-in name) or \"layers\"")?;
+            Ok(Request::Run { id, topo, overrides: parse_overrides(&j)? })
+        }
+        Some("sweep") => {
+            let kind =
+                SweepKind::parse(j.str_field("kind").ok_or("sweep request needs \"kind\"")?)?;
+            let overrides = parse_overrides(&j)?;
+            // reject overrides the sweep would silently ignore: the grid
+            // takes un-swept axes from the server's base config, and the
+            // swept axes from its own ladder
+            if overrides.word_bytes.is_some() {
+                return Err("sweep jobs do not support a word_bytes override".into());
+            }
+            if overrides.sram_kb.is_some() {
+                return Err(
+                    "sweep jobs do not support an sram_kb override (the memory sweep \
+                     explores that axis)"
+                        .into(),
+                );
+            }
+            if kind != SweepKind::Memory
+                && (overrides.dataflow.is_some() || overrides.array.is_some())
+            {
+                return Err(format!(
+                    "{} sweeps explore the dataflow/array axes themselves; only memory \
+                     sweeps accept dataflow/array overrides",
+                    kind.name()
+                ));
+            }
+            let topos = match request_topology(&j)? {
+                Some(t) => vec![t],
+                None => workloads::mlperf_suite(),
+            };
+            Ok(Request::Sweep { id, kind, topos, overrides })
+        }
+        Some("stats") => Ok(Request::Stats),
+        Some("shutdown") => Ok(Request::Shutdown),
+        Some(other) => Err(format!("unknown req {other:?} (run|sweep|stats|shutdown)")),
+        None => Err("request needs a \"req\" field".into()),
+    }
+}
+
+/// Resolve the request's topology: inline `layers` win, else a built-in
+/// `workload` name, else `None` (sweeps default to the whole suite).
+fn request_topology(j: &Json) -> Result<Option<Topology>, String> {
+    let name = j.str_field("workload");
+    if let Some(layers) = j.get("layers") {
+        let items = layers.as_arr().ok_or("\"layers\" must be an array")?;
+        if items.is_empty() {
+            return Err("\"layers\" must not be empty".into());
+        }
+        let mut shapes = Vec::with_capacity(items.len());
+        for item in items {
+            let l = layer_shape_from_json(item)?;
+            l.validate().map_err(|e| e.to_string())?;
+            shapes.push(l);
+        }
+        return Ok(Some(Topology::new(name.unwrap_or("inline"), shapes)));
+    }
+    match name {
+        Some(n) => workloads::builtin(n)
+            .map(Some)
+            .ok_or_else(|| format!("unknown workload {n:?} (see `scale-sim workloads`)")),
+        None => Ok(None),
+    }
+}
+
+fn parse_overrides(j: &Json) -> Result<Overrides, String> {
+    let mut o = Overrides::default();
+    if let Some(df) = j.str_field("dataflow") {
+        o.dataflow = Some(Dataflow::parse(df).map_err(|e| e.to_string())?);
+    }
+    if let Some(arr) = j.str_field("array") {
+        let (r, c) = arr.split_once('x').ok_or("\"array\" expects \"RxC\"")?;
+        o.array = Some((
+            r.parse().map_err(|_| format!("bad array rows {r:?}"))?,
+            c.parse().map_err(|_| format!("bad array cols {c:?}"))?,
+        ));
+    }
+    if let Some(kb) = j.get("sram_kb") {
+        let a = kb.as_arr().ok_or("\"sram_kb\" expects [ifmap,filter,ofmap]")?;
+        if a.len() != 3 {
+            return Err("\"sram_kb\" expects exactly 3 sizes".into());
+        }
+        let v: Vec<u64> = a
+            .iter()
+            .map(|x| x.as_u64().ok_or("\"sram_kb\" entries must be u64"))
+            .collect::<Result<_, _>>()?;
+        o.sram_kb = Some((v[0], v[1], v[2]));
+    }
+    if let Some(wb) = j.get("word_bytes") {
+        o.word_bytes = Some(wb.as_u64().ok_or("\"word_bytes\" must be u64")?);
+    }
+    Ok(o)
+}
+
+// ---------------------------------------------------------------- responses
+
+pub fn result_line(id: u64, report: &WorkloadReport) -> String {
+    Json::obj(vec![
+        ("id", Json::u64(id)),
+        ("event", Json::str("result")),
+        ("report", workload_report_to_json(report)),
+    ])
+    .to_string()
+}
+
+/// One streamed sweep grid point (coordinates + headline metrics).
+pub fn point_line(id: u64, p: &crate::engine::SweepPoint) -> String {
+    Json::obj(vec![
+        ("id", Json::u64(id)),
+        ("event", Json::str("point")),
+        ("workload", Json::str(&p.workload)),
+        ("dataflow", Json::str(p.dataflow.name())),
+        ("array_h", Json::u64(p.array_h)),
+        ("array_w", Json::u64(p.array_w)),
+        ("ifmap_sram_kb", Json::u64(p.ifmap_sram_kb)),
+        ("cycles", Json::u64(p.report.total_cycles())),
+        ("utilization", Json::f64(p.report.overall_utilization(p.total_pes()))),
+        ("dram_bytes", Json::u64(p.report.total_dram().total())),
+        ("energy_mj", Json::f64(p.report.total_energy().total_mj())),
+    ])
+    .to_string()
+}
+
+pub fn done_line(id: u64, ms: f64, points: Option<usize>) -> String {
+    let mut fields = vec![
+        ("id", Json::u64(id)),
+        ("event", Json::str("done")),
+        ("ms", Json::f64(ms)),
+    ];
+    if let Some(n) = points {
+        fields.push(("points", Json::u64(n as u64)));
+    }
+    Json::obj(fields).to_string()
+}
+
+pub fn error_line(id: u64, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::u64(id)),
+        ("event", Json::str("error")),
+        ("error", Json::str(msg)),
+    ])
+    .to_string()
+}
+
+pub fn shutting_down_line() -> String {
+    Json::obj(vec![("event", Json::str("shutting_down"))]).to_string()
+}
+
+/// True for the events that end a request's response stream.
+pub fn is_terminal_event(j: &Json) -> bool {
+    matches!(
+        j.str_field("event"),
+        Some("done") | Some("error") | Some("stats") | Some("shutting_down")
+    )
+}
+
+// ------------------------------------------------- report (de)serialization
+
+fn need(j: &Json, k: &str) -> Result<Json, String> {
+    j.get(k).cloned().ok_or_else(|| format!("missing field {k:?}"))
+}
+
+fn need_u64(j: &Json, k: &str) -> Result<u64, String> {
+    j.u64_field(k).ok_or_else(|| format!("missing/invalid u64 field {k:?}"))
+}
+
+fn need_f64(j: &Json, k: &str) -> Result<f64, String> {
+    j.f64_field(k).ok_or_else(|| format!("missing/invalid number field {k:?}"))
+}
+
+pub fn layer_shape_to_json(l: &LayerShape) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(&l.name)),
+        ("ifmap_h", Json::u64(l.ifmap_h)),
+        ("ifmap_w", Json::u64(l.ifmap_w)),
+        ("filt_h", Json::u64(l.filt_h)),
+        ("filt_w", Json::u64(l.filt_w)),
+        ("channels", Json::u64(l.channels)),
+        ("num_filters", Json::u64(l.num_filters)),
+        ("stride", Json::u64(l.stride)),
+    ])
+}
+
+pub fn layer_shape_from_json(j: &Json) -> Result<LayerShape, String> {
+    Ok(LayerShape {
+        name: j.str_field("name").unwrap_or("layer").to_string(),
+        ifmap_h: need_u64(j, "ifmap_h")?,
+        ifmap_w: need_u64(j, "ifmap_w")?,
+        filt_h: need_u64(j, "filt_h")?,
+        filt_w: need_u64(j, "filt_w")?,
+        channels: need_u64(j, "channels")?,
+        num_filters: need_u64(j, "num_filters")?,
+        stride: need_u64(j, "stride")?,
+    })
+}
+
+fn timing_to_json(t: &Timing) -> Json {
+    Json::obj(vec![
+        ("cycles", Json::u64(t.cycles)),
+        ("row_folds", Json::u64(t.row_folds)),
+        ("col_folds", Json::u64(t.col_folds)),
+        ("utilization", Json::f64(t.utilization)),
+        ("mapping_efficiency", Json::f64(t.mapping_efficiency)),
+        ("sram_reads_ifmap", Json::u64(t.sram_reads_ifmap)),
+        ("sram_reads_filter", Json::u64(t.sram_reads_filter)),
+        ("sram_writes_ofmap", Json::u64(t.sram_writes_ofmap)),
+        ("sram_reads_ofmap", Json::u64(t.sram_reads_ofmap)),
+    ])
+}
+
+fn timing_from_json(j: &Json) -> Result<Timing, String> {
+    Ok(Timing {
+        cycles: need_u64(j, "cycles")?,
+        row_folds: need_u64(j, "row_folds")?,
+        col_folds: need_u64(j, "col_folds")?,
+        utilization: need_f64(j, "utilization")?,
+        mapping_efficiency: need_f64(j, "mapping_efficiency")?,
+        sram_reads_ifmap: need_u64(j, "sram_reads_ifmap")?,
+        sram_reads_filter: need_u64(j, "sram_reads_filter")?,
+        sram_writes_ofmap: need_u64(j, "sram_writes_ofmap")?,
+        sram_reads_ofmap: need_u64(j, "sram_reads_ofmap")?,
+    })
+}
+
+pub fn layer_report_to_json(r: &LayerReport) -> Json {
+    Json::obj(vec![
+        ("layer", layer_shape_to_json(&r.layer)),
+        ("timing", timing_to_json(&r.timing)),
+        (
+            "dram",
+            Json::obj(vec![
+                ("ifmap_bytes", Json::u64(r.dram.ifmap_bytes)),
+                ("filter_bytes", Json::u64(r.dram.filter_bytes)),
+                ("ofmap_bytes", Json::u64(r.dram.ofmap_bytes)),
+            ]),
+        ),
+        (
+            "bandwidth",
+            Json::obj(vec![
+                ("avg_read_bw", Json::f64(r.bandwidth.avg_read_bw)),
+                ("avg_write_bw", Json::f64(r.bandwidth.avg_write_bw)),
+                ("peak_read_bw", Json::f64(r.bandwidth.peak_read_bw)),
+            ]),
+        ),
+        (
+            "energy",
+            Json::obj(vec![
+                ("compute_mj", Json::f64(r.energy.compute_mj)),
+                ("sram_mj", Json::f64(r.energy.sram_mj)),
+                ("dram_mj", Json::f64(r.energy.dram_mj)),
+            ]),
+        ),
+    ])
+}
+
+pub fn layer_report_from_json(j: &Json) -> Result<LayerReport, String> {
+    let dram = need(j, "dram")?;
+    let bw = need(j, "bandwidth")?;
+    let energy = need(j, "energy")?;
+    Ok(LayerReport {
+        layer: layer_shape_from_json(&need(j, "layer")?)?,
+        timing: timing_from_json(&need(j, "timing")?)?,
+        dram: DramTraffic {
+            ifmap_bytes: need_u64(&dram, "ifmap_bytes")?,
+            filter_bytes: need_u64(&dram, "filter_bytes")?,
+            ofmap_bytes: need_u64(&dram, "ofmap_bytes")?,
+        },
+        bandwidth: BandwidthReport {
+            avg_read_bw: need_f64(&bw, "avg_read_bw")?,
+            avg_write_bw: need_f64(&bw, "avg_write_bw")?,
+            peak_read_bw: need_f64(&bw, "peak_read_bw")?,
+        },
+        energy: EnergyBreakdown {
+            compute_mj: need_f64(&energy, "compute_mj")?,
+            sram_mj: need_f64(&energy, "sram_mj")?,
+            dram_mj: need_f64(&energy, "dram_mj")?,
+        },
+    })
+}
+
+pub fn workload_report_to_json(r: &WorkloadReport) -> Json {
+    Json::obj(vec![
+        ("workload", Json::str(&r.workload)),
+        ("layers", Json::Arr(r.layers.iter().map(layer_report_to_json).collect())),
+    ])
+}
+
+pub fn workload_report_from_json(j: &Json) -> Result<WorkloadReport, String> {
+    let layers = need(j, "layers")?;
+    let layers = layers.as_arr().ok_or("\"layers\" must be an array")?;
+    Ok(WorkloadReport {
+        workload: j.str_field("workload").ok_or("missing \"workload\"")?.to_string(),
+        layers: layers.iter().map(layer_report_from_json).collect::<Result<_, _>>()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::sim::Simulator;
+
+    fn sample_report() -> WorkloadReport {
+        let sim = Simulator::new(ArchConfig { array_h: 16, array_w: 16, ..config::paper_default() });
+        sim.run_topology(&Topology::new(
+            "t",
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::fc("fc", 1, 256, 10),
+            ],
+        ))
+    }
+
+    #[test]
+    fn workload_report_round_trips_bit_identically() {
+        let r = sample_report();
+        let wire = workload_report_to_json(&r).to_string();
+        let back = workload_report_from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, r); // PartialEq over every f64/u64 field
+    }
+
+    #[test]
+    fn run_request_with_builtin_workload() {
+        let r = parse_request(r#"{"req":"run","id":7,"workload":"ncf","dataflow":"ws","array":"32x16"}"#)
+            .unwrap();
+        match r {
+            Request::Run { id, topo, overrides } => {
+                assert_eq!(id, 7);
+                assert!(!topo.layers.is_empty());
+                assert_eq!(overrides.dataflow, Some(Dataflow::Ws));
+                assert_eq!(overrides.array, Some((32, 16)));
+                let cfg = overrides.apply(&ArchConfig::default());
+                assert_eq!((cfg.array_h, cfg.array_w, cfg.dataflow), (32, 16, Dataflow::Ws));
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_request_with_inline_layers() {
+        let line = r#"{"req":"run","workload":"mine","layers":[
+            {"name":"c1","ifmap_h":16,"ifmap_w":16,"filt_h":3,"filt_w":3,"channels":4,"num_filters":8,"stride":1}
+        ]}"#
+        .replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Run { id, topo, .. } => {
+                assert_eq!(id, 0);
+                assert_eq!(topo.name, "mine");
+                assert_eq!(topo.layers.len(), 1);
+                assert_eq!(topo.layers[0].name, "c1");
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_request_defaults_to_suite() {
+        match parse_request(r#"{"req":"sweep","kind":"memory"}"#).unwrap() {
+            Request::Sweep { kind, topos, .. } => {
+                assert_eq!(kind, SweepKind::Memory);
+                assert_eq!(topos.len(), workloads::mlperf_suite().len());
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_requests_are_rejected_with_context() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"req":"warp"}"#).unwrap_err().contains("warp"));
+        assert!(parse_request(r#"{"req":"run"}"#).unwrap_err().contains("workload"));
+        assert!(parse_request(r#"{"req":"run","workload":"nope9"}"#).unwrap_err().contains("nope9"));
+        assert!(parse_request(r#"{"req":"sweep","kind":"banana"}"#).unwrap_err().contains("banana"));
+        // overrides a sweep would ignore are rejected, not dropped
+        assert!(parse_request(r#"{"req":"sweep","kind":"dataflow","array":"8x8"}"#).is_err());
+        assert!(parse_request(r#"{"req":"sweep","kind":"memory","word_bytes":4}"#).is_err());
+        assert!(parse_request(r#"{"req":"sweep","kind":"shape","sram_kb":[1,2,3]}"#).is_err());
+        // memory sweeps may pin the non-swept axes
+        assert!(parse_request(r#"{"req":"sweep","kind":"memory","array":"8x8","dataflow":"ws"}"#).is_ok());
+        assert!(parse_request(r#"{"req":"run","workload":"ncf","sram_kb":[1,2]}"#).is_err());
+        // invalid inline layer (zero dim) is rejected by validation
+        let bad = r#"{"req":"run","layers":[{"name":"z","ifmap_h":0,"ifmap_w":1,"filt_h":1,"filt_w":1,"channels":1,"num_filters":1,"stride":1}]}"#;
+        assert!(parse_request(bad).is_err());
+    }
+
+    #[test]
+    fn response_lines_parse_and_terminate() {
+        let r = sample_report();
+        let result = Json::parse(&result_line(3, &r)).unwrap();
+        assert_eq!(result.u64_field("id"), Some(3));
+        assert!(!is_terminal_event(&result));
+        let report = workload_report_from_json(result.get("report").unwrap()).unwrap();
+        assert_eq!(report, r);
+
+        for line in [
+            done_line(3, 1.5, None),
+            done_line(3, 1.5, Some(12)),
+            error_line(9, "boom"),
+            shutting_down_line(),
+            ServerStats::default().to_json().to_string(),
+        ] {
+            assert!(is_terminal_event(&Json::parse(&line).unwrap()), "{line}");
+        }
+    }
+
+    #[test]
+    fn stats_round_trip() {
+        let s = ServerStats {
+            queue_depth: 3,
+            in_flight: 2,
+            completed: 40,
+            failed: 1,
+            submitted: 45,
+            workers: 8,
+            cache_entries: 17,
+            memo: MemoStats { layer_sims: 10, cache_hits: 30 },
+            warm: WarmStats { entries: 5, hits: 4 },
+        };
+        let j = Json::parse(&s.to_json().to_string()).unwrap();
+        let back = ServerStats::from_json(&j).unwrap();
+        assert_eq!(back.queue_depth, 3);
+        assert_eq!(back.failed, 1);
+        assert_eq!(back.memo, s.memo);
+        assert_eq!(back.warm, s.warm);
+        assert!((j.f64_field("hit_rate").unwrap() - 0.75).abs() < 1e-12);
+    }
+}

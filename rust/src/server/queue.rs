@@ -1,0 +1,227 @@
+//! Bounded MPMC job queue with blocking backpressure — the admission
+//! control between connection threads (producers) and the worker pool
+//! (consumers).
+//!
+//! * [`JobQueue::push`] **blocks while the queue is full**. A connection
+//!   thread that blocks here stops reading its socket, so TCP flow
+//!   control propagates the pressure all the way back to the client —
+//!   jobs are never dropped, they are admitted late.
+//! * [`JobQueue::pop`] blocks while empty. After [`JobQueue::close`] it
+//!   keeps draining whatever was admitted (accepted jobs always run;
+//!   zero dropped jobs on shutdown) and returns `None` only once the
+//!   queue is both closed and empty.
+//! * Occupancy counters ([`JobQueue::stats`]) feed the serve protocol's
+//!   `stats` event: depth, in-flight, completed, submitted.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Queue occupancy snapshot.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Jobs admitted but not yet claimed by a worker.
+    pub depth: usize,
+    /// Jobs claimed by workers and still executing.
+    pub in_flight: usize,
+    /// Jobs fully executed.
+    pub completed: u64,
+    /// Jobs that ended abnormally (executor panicked).
+    pub failed: u64,
+    /// Jobs ever admitted (`depth + in_flight + completed + failed` at
+    /// rest).
+    pub submitted: u64,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+    in_flight: usize,
+    completed: u64,
+    failed: u64,
+    submitted: u64,
+}
+
+/// Bounded blocking queue (module docs). `T` is the job payload.
+pub struct JobQueue<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+impl<T> JobQueue<T> {
+    /// A queue admitting at most `cap >= 1` waiting jobs.
+    pub fn bounded(cap: usize) -> Self {
+        JobQueue {
+            inner: Mutex::new(Inner {
+                q: VecDeque::new(),
+                closed: false,
+                in_flight: 0,
+                completed: 0,
+                failed: 0,
+                submitted: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Admit a job, blocking while the queue is at capacity
+    /// (backpressure). Returns `false` — job handed back untouched is
+    /// not possible, the job is dropped — when the queue has been
+    /// closed; callers should then report the rejection to the client.
+    pub fn push(&self, job: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        while !inner.closed && inner.q.len() >= self.cap {
+            inner = self.not_full.wait(inner).unwrap();
+        }
+        if inner.closed {
+            return false;
+        }
+        inner.q.push_back(job);
+        inner.submitted += 1;
+        drop(inner);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Claim the next job, blocking while the queue is empty. Returns
+    /// `None` once the queue is closed **and** drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if let Some(job) = inner.q.pop_front() {
+                inner.in_flight += 1;
+                drop(inner);
+                self.not_full.notify_one();
+                return Some(job);
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.not_empty.wait(inner).unwrap();
+        }
+    }
+
+    /// Mark one claimed job finished (worker calls after executing);
+    /// `ok = false` records an abnormal end (counted in `failed`, not
+    /// `completed`).
+    pub fn job_done(&self, ok: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        debug_assert!(inner.in_flight > 0, "job_done without a matching pop");
+        inner.in_flight = inner.in_flight.saturating_sub(1);
+        if ok {
+            inner.completed += 1;
+        } else {
+            inner.failed += 1;
+        }
+    }
+
+    /// Stop admitting jobs and wake every blocked producer/consumer.
+    /// Already-admitted jobs continue to drain through [`JobQueue::pop`].
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.inner.lock().unwrap().closed
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        let inner = self.inner.lock().unwrap();
+        QueueStats {
+            depth: inner.q.len(),
+            in_flight: inner.in_flight,
+            completed: inner.completed,
+            failed: inner.failed,
+            submitted: inner.submitted,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_order_and_counters() {
+        let q = JobQueue::bounded(8);
+        assert!(q.push(1) && q.push(2) && q.push(3));
+        assert_eq!(
+            q.stats(),
+            QueueStats { depth: 3, in_flight: 0, completed: 0, failed: 0, submitted: 3 }
+        );
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.stats().in_flight, 1);
+        q.job_done(true);
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        q.job_done(true);
+        q.job_done(false); // abnormal end: failed, not completed
+        assert_eq!(
+            q.stats(),
+            QueueStats { depth: 0, in_flight: 0, completed: 2, failed: 1, submitted: 3 }
+        );
+    }
+
+    #[test]
+    fn full_queue_blocks_until_a_pop_frees_a_slot() {
+        let q = JobQueue::bounded(1);
+        assert!(q.push(10));
+        let unblocked = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                assert!(q.push(11)); // must block: capacity 1, occupied
+                unblocked.store(true, Ordering::SeqCst);
+            });
+            std::thread::sleep(Duration::from_millis(50));
+            assert!(!unblocked.load(Ordering::SeqCst), "push must backpressure");
+            assert_eq!(q.pop(), Some(10));
+            // the blocked producer now completes
+            std::thread::sleep(Duration::from_millis(50));
+            assert!(unblocked.load(Ordering::SeqCst));
+            assert_eq!(q.pop(), Some(11));
+        });
+    }
+
+    #[test]
+    fn close_drains_admitted_jobs_then_stops() {
+        let q = JobQueue::bounded(4);
+        assert!(q.push("a"));
+        assert!(q.push("b"));
+        q.close();
+        assert!(!q.push("c"), "closed queue admits nothing");
+        assert_eq!(q.pop(), Some("a"), "admitted jobs still drain");
+        assert_eq!(q.pop(), Some("b"));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.stats().submitted, 2);
+    }
+
+    #[test]
+    fn close_wakes_blocked_consumers() {
+        let q: JobQueue<u32> = JobQueue::bounded(4);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.pop());
+            std::thread::sleep(Duration::from_millis(30));
+            q.close();
+            assert_eq!(h.join().unwrap(), None);
+        });
+    }
+
+    #[test]
+    fn close_wakes_blocked_producers() {
+        let q = JobQueue::bounded(1);
+        assert!(q.push(1));
+        std::thread::scope(|s| {
+            let h = s.spawn(|| q.push(2));
+            std::thread::sleep(Duration::from_millis(30));
+            q.close();
+            assert!(!h.join().unwrap(), "blocked producer must observe the close");
+        });
+    }
+}

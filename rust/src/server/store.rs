@@ -1,0 +1,255 @@
+//! Persistent result store: the engine's memo cache, flattened to disk
+//! so cache warmth survives server restarts.
+//!
+//! Layout: one JSON line per cached entry under
+//! `<state_dir>/results.jsonl`,
+//!
+//! ```text
+//! {"key":{"backend":"analytical","array_h":128,...,"layer":{...}},"report":{...}}
+//! ```
+//!
+//! where `key` carries exactly the [`CacheKey`] fields (backend kind +
+//! value-affecting config fields + Table-II layer shape, no layer name)
+//! and `report` is the [`crate::server::proto`] layer-report shape.
+//! Numbers round-trip exactly ([`crate::util::json`]), so a reloaded
+//! report is bit-identical to the one originally computed.
+//!
+//! * [`ResultStore::load_into`] pre-warms an engine's cache on startup
+//!   (entries tagged *warm*; hits on them surface as `warm_hits` in the
+//!   serve `stats` event). Lines that fail to parse — truncated flush,
+//!   foreign schema — are skipped, never fatal: the store is a cache,
+//!   losing an entry only costs a re-simulation.
+//! * [`ResultStore::flush_from`] snapshots every ready cache entry and
+//!   atomically replaces the file (write-tmp-then-rename), sorted by
+//!   line text so consecutive flushes of the same cache are
+//!   byte-identical and diffable.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::engine::backend::BackendKind;
+use crate::engine::cache::{CacheKey, LayerKey};
+use crate::engine::Engine;
+use crate::sim::LayerReport;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::proto;
+
+/// Handle to one on-disk store directory.
+pub struct ResultStore {
+    path: PathBuf,
+}
+
+impl ResultStore {
+    /// Open (creating the directory if needed) the store under `dir`.
+    pub fn open(dir: &Path) -> Result<ResultStore> {
+        std::fs::create_dir_all(dir)?;
+        Ok(ResultStore { path: dir.join("results.jsonl") })
+    }
+
+    /// The backing file (exists only after the first flush).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Pre-warm `engine`'s cache with every parseable stored entry.
+    /// Returns the number of entries inserted (duplicates and malformed
+    /// lines are skipped).
+    pub fn load_into(&self, engine: &Engine) -> Result<usize> {
+        let text = match std::fs::read_to_string(&self.path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(0),
+            Err(e) => return Err(e.into()),
+        };
+        let mut loaded = 0;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Ok((key, report)) = parse_entry(line) else {
+                continue; // stale/corrupt line: costs one re-simulation, not a crash
+            };
+            if engine.layer_cache().insert_prewarmed(key, report) {
+                loaded += 1;
+            }
+        }
+        Ok(loaded)
+    }
+
+    /// Write every ready cache entry of `engine` to disk, atomically
+    /// replacing any previous snapshot. Returns the entry count.
+    pub fn flush_from(&self, engine: &Engine) -> Result<usize> {
+        let mut lines: Vec<String> = engine
+            .layer_cache()
+            .export()
+            .into_iter()
+            .map(|(key, report)| entry_line(&key, &report))
+            .collect();
+        lines.sort();
+        let n = lines.len();
+        let mut body = lines.join("\n");
+        if !body.is_empty() {
+            body.push('\n');
+        }
+        let tmp = self.path.with_extension("jsonl.tmp");
+        std::fs::write(&tmp, body)?;
+        std::fs::rename(&tmp, &self.path)?;
+        Ok(n)
+    }
+}
+
+fn entry_line(key: &CacheKey, report: &Arc<LayerReport>) -> String {
+    Json::obj(vec![
+        ("key", key_to_json(key)),
+        ("report", proto::layer_report_to_json(report)),
+    ])
+    .to_string()
+}
+
+fn parse_entry(line: &str) -> std::result::Result<(CacheKey, LayerReport), String> {
+    let j = Json::parse(line)?;
+    let key = key_from_json(j.get("key").ok_or("missing \"key\"")?)?;
+    let report =
+        proto::layer_report_from_json(j.get("report").ok_or("missing \"report\"")?)?;
+    Ok((key, report))
+}
+
+fn key_to_json(k: &CacheKey) -> Json {
+    Json::obj(vec![
+        ("backend", Json::str(k.backend.name())),
+        ("array_h", Json::u64(k.array_h)),
+        ("array_w", Json::u64(k.array_w)),
+        ("dataflow", Json::str(k.dataflow.name())),
+        ("ifmap_sram_kb", Json::u64(k.ifmap_sram_kb)),
+        ("filter_sram_kb", Json::u64(k.filter_sram_kb)),
+        ("ofmap_sram_kb", Json::u64(k.ofmap_sram_kb)),
+        ("word_bytes", Json::u64(k.word_bytes)),
+        (
+            "layer",
+            Json::obj(vec![
+                ("ifmap_h", Json::u64(k.layer.ifmap_h)),
+                ("ifmap_w", Json::u64(k.layer.ifmap_w)),
+                ("filt_h", Json::u64(k.layer.filt_h)),
+                ("filt_w", Json::u64(k.layer.filt_w)),
+                ("channels", Json::u64(k.layer.channels)),
+                ("num_filters", Json::u64(k.layer.num_filters)),
+                ("stride", Json::u64(k.layer.stride)),
+            ]),
+        ),
+    ])
+}
+
+fn key_from_json(j: &Json) -> std::result::Result<CacheKey, String> {
+    let need = |k: &str| j.u64_field(k).ok_or_else(|| format!("bad key field {k:?}"));
+    let layer = j.get("layer").ok_or("missing key.layer")?;
+    let lneed =
+        |k: &str| layer.u64_field(k).ok_or_else(|| format!("bad key.layer field {k:?}"));
+    Ok(CacheKey {
+        backend: BackendKind::parse(j.str_field("backend").ok_or("missing key.backend")?)
+            .map_err(|e| e.to_string())?,
+        array_h: need("array_h")?,
+        array_w: need("array_w")?,
+        dataflow: crate::dataflow::Dataflow::parse(
+            j.str_field("dataflow").ok_or("missing key.dataflow")?,
+        )
+        .map_err(|e| e.to_string())?,
+        ifmap_sram_kb: need("ifmap_sram_kb")?,
+        filter_sram_kb: need("filter_sram_kb")?,
+        ofmap_sram_kb: need("ofmap_sram_kb")?,
+        word_bytes: need("word_bytes")?,
+        layer: LayerKey {
+            ifmap_h: lneed("ifmap_h")?,
+            ifmap_w: lneed("ifmap_w")?,
+            filt_h: lneed("filt_h")?,
+            filt_w: lneed("filt_w")?,
+            channels: lneed("channels")?,
+            num_filters: lneed("num_filters")?,
+            stride: lneed("stride")?,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::LayerShape;
+    use crate::config::{self, Topology};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("scale_sim_store_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn topo() -> Topology {
+        Topology::new(
+            "t",
+            vec![
+                LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+                LayerShape::fc("fc", 1, 128, 10),
+            ],
+        )
+    }
+
+    #[test]
+    fn flush_then_load_is_bit_identical_and_warm() {
+        let dir = tmp_dir("roundtrip");
+        let store = ResultStore::open(&dir).unwrap();
+
+        let hot = Engine::new(config::paper_default());
+        let first = hot.run_topology(&topo());
+        assert_eq!(store.flush_from(&hot).unwrap(), hot.cache_entries());
+
+        // fresh engine, warm-started from disk
+        let cold = Engine::new(config::paper_default());
+        let loaded = store.load_into(&cold).unwrap();
+        assert_eq!(loaded, hot.cache_entries());
+        assert_eq!(cold.warm_stats().entries, loaded as u64);
+
+        let replay = cold.run_topology(&topo());
+        assert_eq!(replay, first, "warm-started reports must be bit-identical");
+        assert_eq!(cold.cache_stats().layer_sims, 0, "no re-simulation after warm start");
+        assert_eq!(cold.warm_stats().hits, topo().layers.len() as u64);
+
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_loads_zero_and_corrupt_lines_are_skipped() {
+        let dir = tmp_dir("corrupt");
+        let store = ResultStore::open(&dir).unwrap();
+        let e = Engine::new(config::paper_default());
+        assert_eq!(store.load_into(&e).unwrap(), 0, "no file yet");
+
+        // one good line sandwiched by garbage
+        e.run_layer(&LayerShape::conv("c", 12, 12, 3, 3, 4, 8, 1));
+        store.flush_from(&e).unwrap();
+        let good = std::fs::read_to_string(store.path()).unwrap();
+        std::fs::write(
+            store.path(),
+            format!("not json\n{good}{{\"key\":{{}},\"report\":{{}}}}\n"),
+        )
+        .unwrap();
+
+        let cold = Engine::new(config::paper_default());
+        assert_eq!(store.load_into(&cold).unwrap(), 1, "only the valid line loads");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flushes_are_deterministic() {
+        let dir = tmp_dir("determ");
+        let store = ResultStore::open(&dir).unwrap();
+        let e = Engine::new(config::paper_default());
+        e.run_topology(&topo());
+        store.flush_from(&e).unwrap();
+        let a = std::fs::read_to_string(store.path()).unwrap();
+        store.flush_from(&e).unwrap();
+        let b = std::fs::read_to_string(store.path()).unwrap();
+        assert_eq!(a, b, "same cache -> byte-identical snapshot");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

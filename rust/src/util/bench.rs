@@ -83,6 +83,25 @@ pub fn write_json(path: &std::path::Path, fields: &[(&str, f64)]) -> std::io::Re
     std::fs::write(path, format!("{{{}}}\n", body.join(", ")))
 }
 
+/// Linearly-interpolated percentile of `samples` (any order); `p` in
+/// [0, 100]. Returns 0.0 on empty input — the serve bench's latency
+/// p50/p99 reporter.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).expect("percentile over NaN"));
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (rank - lo as f64)
+    }
+}
+
 /// Auto-calibrating variant: picks an iteration count so the measured
 /// phase lasts roughly `target`.
 pub fn bench_auto<T>(name: &str, target: Duration, mut f: impl FnMut() -> T) -> BenchStats {
@@ -109,6 +128,17 @@ mod tests {
     fn bench_auto_caps_iters() {
         let s = bench_auto("noop", Duration::from_millis(5), || 1u64 + 1);
         assert!(s.iters >= 3 && s.iters <= 1000);
+    }
+
+    #[test]
+    fn percentile_interpolates_and_clamps() {
+        let s = [40.0, 10.0, 20.0, 30.0]; // sorted: 10 20 30 40
+        assert_eq!(percentile(&s, 0.0), 10.0);
+        assert_eq!(percentile(&s, 100.0), 40.0);
+        assert_eq!(percentile(&s, 50.0), 25.0);
+        assert!((percentile(&s, 99.0) - 39.7).abs() < 1e-9);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[7.5], 99.0), 7.5);
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Small self-contained utilities: deterministic RNG, a mini property-test
 //! harness (proptest is unavailable offline), a criterion-style bench
-//! timer, and csv helpers. Everything here is std-only.
+//! timer, csv helpers, and a minimal JSON document model (serde is
+//! unavailable offline; the serve wire protocol and result store ride on
+//! it). Everything here is std-only.
 
 pub mod bench;
 pub mod csv;
+pub mod json;
 pub mod prop;
 pub mod rng;
 

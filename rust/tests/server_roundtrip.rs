@@ -1,0 +1,173 @@
+//! Loopback integration tests for the serve subsystem: a real TCP
+//! server on an ephemeral port, real clients, plus the `MemoStats`
+//! edge cases the service surfaces through its `stats` event.
+
+use scale_sim::config::workloads;
+use scale_sim::engine::MemoStats;
+use scale_sim::server::{self, proto, Client, ServeOpts};
+use scale_sim::util::json::Json;
+use scale_sim::LayerShape;
+
+fn inline_run_request(id: u64, layers: &[LayerShape]) -> String {
+    Json::obj(vec![
+        ("req", Json::str("run")),
+        ("id", Json::u64(id)),
+        ("workload", Json::str("loopback")),
+        (
+            "layers",
+            Json::Arr(layers.iter().map(proto::layer_shape_to_json).collect()),
+        ),
+        ("array", Json::str("16x16")),
+    ])
+    .to_string()
+}
+
+fn small_layers() -> Vec<LayerShape> {
+    vec![
+        LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+        LayerShape::conv("c2", 14, 14, 3, 3, 8, 16, 1),
+        LayerShape::fc("fc", 1, 256, 10),
+    ]
+}
+
+fn report_of(events: &[Json]) -> scale_sim::WorkloadReport {
+    let result = events
+        .iter()
+        .find(|e| e.str_field("event") == Some("result"))
+        .expect("run job must emit a result event");
+    proto::workload_report_from_json(result.get("report").unwrap()).unwrap()
+}
+
+/// The issue's core scenario: two clients submit the same layers; the
+/// second is served from the shared cache with a bit-identical report.
+#[test]
+fn second_client_hits_the_shared_cache_bit_identically() {
+    let handle = server::start(ServeOpts { workers: 4, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr();
+
+    let mut alice = Client::connect(addr).unwrap();
+    let first = report_of(&alice.request(&inline_run_request(1, &small_layers())).unwrap());
+    let s1 = alice.stats().unwrap();
+    assert_eq!(s1.memo.layer_sims, 3, "cold suite simulates every distinct layer");
+
+    let mut bob = Client::connect(addr).unwrap();
+    let second = report_of(&bob.request(&inline_run_request(2, &small_layers())).unwrap());
+    let s2 = bob.stats().unwrap();
+
+    assert_eq!(second, first, "cross-client replay must be bit-identical");
+    assert_eq!(s2.memo.layer_sims, s1.memo.layer_sims, "no re-simulation for client 2");
+    assert_eq!(s2.memo.cache_hits, s1.memo.cache_hits + 3, "every layer of client 2 hits");
+    assert!(s2.memo.hit_rate() > 0.0);
+    assert_eq!(s2.completed, 2);
+
+    handle.shutdown();
+}
+
+/// Warm restart: results flushed to --state-dir come back as warm
+/// cache entries, visible in `stats` as warm_entries/warm_hits.
+#[test]
+fn state_dir_restart_serves_warm_hits() {
+    let dir = std::env::temp_dir()
+        .join(format!("scale_sim_serve_it_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = || ServeOpts {
+        workers: 2,
+        state_dir: Some(dir.clone()),
+        ..ServeOpts::default()
+    };
+
+    // first life: compute, then flush on shutdown
+    let handle = server::start(opts()).unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let first = report_of(&c.request(&inline_run_request(1, &small_layers())).unwrap());
+    assert_eq!(c.stats().unwrap().warm.entries, 0, "cold start has nothing prewarmed");
+    drop(c);
+    handle.shutdown();
+
+    // second life: pre-warmed from disk; replay must not simulate
+    let handle = server::start(opts()).unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let before = c.stats().unwrap();
+    assert_eq!(before.warm.entries, 3, "restart must reload every flushed entry");
+    assert_eq!(before.cache_entries, 3);
+
+    let replay = report_of(&c.request(&inline_run_request(9, &small_layers())).unwrap());
+    let after = c.stats().unwrap();
+    assert_eq!(replay, first, "disk-warmed reports are bit-identical");
+    assert_eq!(after.memo.layer_sims, 0, "warm restart re-simulates nothing");
+    assert_eq!(after.warm.hits, 3, "stats must attribute the hits to warm start");
+
+    drop(c);
+    handle.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Many concurrent clients racing the same cold workload: the in-flight
+/// deduplication means the distinct layers are simulated exactly once
+/// across the whole fleet, and nothing is dropped.
+#[test]
+fn concurrent_cold_clients_share_one_computation() {
+    let handle = server::start(ServeOpts { workers: 8, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr();
+    const CLIENTS: usize = 8;
+
+    let reports: Vec<scale_sim::WorkloadReport> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    report_of(&c.request(&inline_run_request(i as u64, &small_layers())).unwrap())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for r in &reports[1..] {
+        assert_eq!(*r, reports[0], "all clients must observe identical reports");
+    }
+    let stats = handle.stats();
+    assert_eq!(stats.completed, CLIENTS as u64, "zero dropped jobs");
+    assert_eq!(stats.memo.layer_sims, 3, "in-flight dedup: 3 distinct layers, 3 sims total");
+    assert_eq!(stats.memo.lookups(), (CLIENTS * 3) as u64);
+    handle.shutdown();
+}
+
+/// Built-in workload names resolve server-side too (the bench path).
+#[test]
+fn builtin_workload_runs_by_name() {
+    let handle = server::start(ServeOpts::default()).unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let events = c.request(r#"{"req":"run","id":3,"workload":"ncf"}"#).unwrap();
+    let report = report_of(&events);
+    assert_eq!(report.layers.len(), workloads::builtin("ncf").unwrap().layers.len());
+    assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// MemoStats edge cases (the counters the stats event reports)
+
+#[test]
+fn memostats_hit_rate_with_zero_lookups_is_zero_not_nan() {
+    let idle = MemoStats::default();
+    assert_eq!(idle.lookups(), 0);
+    assert_eq!(idle.hit_rate(), 0.0);
+    assert!(!idle.hit_rate().is_nan());
+}
+
+#[test]
+fn memostats_since_across_a_reset_saturates() {
+    // snapshot taken before a server restart (counters restarted at 0)
+    let stale = MemoStats { layer_sims: 50, cache_hits: 200 };
+    let fresh = MemoStats { layer_sims: 2, cache_hits: 5 };
+    let delta = fresh.since(&stale);
+    assert_eq!((delta.layer_sims, delta.cache_hits), (0, 0));
+    assert_eq!(delta.hit_rate(), 0.0);
+
+    // normal forward delta still exact
+    let later = MemoStats { layer_sims: 60, cache_hits: 240 };
+    let d = later.since(&stale);
+    assert_eq!((d.layer_sims, d.cache_hits), (10, 40));
+    assert!((d.hit_rate() - 0.8).abs() < 1e-12);
+}
