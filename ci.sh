@@ -16,6 +16,13 @@ cd "$(dirname "$0")"
 echo "== build =="
 cargo build --release
 
+echo "== fmt =="
+if cargo fmt --version > /dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "rustfmt unavailable in this toolchain; skipped"
+fi
+
 echo "== test =="
 cargo test -q
 
@@ -25,13 +32,39 @@ echo "== smoke: run resnet50 =="
 "$BIN" run -t resnet50 > /dev/null
 echo "ok"
 
+echo "== smoke: machine-readable run reports (--format json|csv) =="
+"$BIN" run -t ncf --format json | grep -q '"total_cycles"'
+"$BIN" run -t ncf --format csv | head -1 | grep -q '^layer,cycles,'
+echo "ok"
+
 echo "== smoke: validate (Fig 4, all backends) =="
 "$BIN" validate --max 16
+
+echo "== smoke: every topology csv (conv + gemm) through validate --workload =="
+for f in topologies/*.csv topologies/gemm/*.csv; do
+  "$BIN" validate --workload "$f"
+done
+
+echo "== smoke: GEMM workload end-to-end on all three backends =="
+for b in analytical trace rtl; do
+  "$BIN" run -t topologies/gemm/mlp.csv --backend "$b" --array 32x32 > /dev/null
+done
+echo "ok"
 
 echo "== smoke: sweep (memoizing grid + BENCH_sweep.json) =="
 "$BIN" sweep dataflow -t ncf > /dev/null
 test -f BENCH_sweep.json
 cat BENCH_sweep.json
+
+echo "== smoke: conv <-> gemm lowered-tile cache sharing =="
+# ncf (conv-encoded) and ncf_gemm (GEMM csv) lower to identical tiles:
+# sweeping both must serve the second workload entirely from the memo
+# cache, which shows up as a >=50% hit rate in BENCH_sweep.json
+"$BIN" sweep dataflow -t ncf --workload topologies/gemm/ncf_gemm.csv > /dev/null
+HIT=$(grep -o '"cache_hit_rate": *[0-9.e-]*' BENCH_sweep.json | grep -o '[0-9.e-]*$')
+awk -v h="$HIT" 'BEGIN { exit (h >= 0.5) ? 0 : 1 }' \
+  || { echo "conv<->gemm cache sharing broken: hit rate $HIT"; exit 1; }
+echo "ok (hit rate $HIT)"
 
 echo "== smoke: help lists the serve subcommands =="
 for sub in serve client bench-serve; do
@@ -53,6 +86,9 @@ ADDR=$(sed -n 's/^listening on //p' "$SERVE_LOG")
 test -n "$ADDR" || { echo "server never reported its address"; cat "$SERVE_LOG"; exit 1; }
 
 "$BIN" client run --addr "$ADDR" -t ncf | tail -1 | grep -q '"event":"done"'
+# GEMM workloads run through the server too (lowered client-side from the
+# GEMM csv; the ncf_gemm tiles hit the entries ncf just populated)
+"$BIN" client run --addr "$ADDR" -t topologies/gemm/ncf_gemm.csv | tail -1 | grep -q '"event":"done"'
 "$BIN" client stats --addr "$ADDR" | grep -q '"queue_depth"'
 "$BIN" client stats --addr "$ADDR" | grep -q '"cache_hits"'
 "$BIN" client shutdown --addr "$ADDR" | grep -q '"event":"shutting_down"'

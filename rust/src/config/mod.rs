@@ -1,6 +1,8 @@
-//! Front end: the `.cfg` architecture file (Table I) and the topology
-//! `.csv` workload file (Table II), format-compatible with the original
-//! SCALE-Sim where practical.
+//! Front end: the `.cfg` architecture file (Table I) and the lowered
+//! workload form ([`Topology`], Table II), format-compatible with the
+//! original SCALE-Sim where practical. Workload *authoring* moved to the
+//! typed operator IR in [`crate::workload`]; `Topology`'s csv entry
+//! points are deprecated shims routed through it.
 
 mod cfg;
 mod topology;

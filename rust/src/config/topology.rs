@@ -1,24 +1,32 @@
-//! Topology `.csv` parser — Table II of the paper.
+//! `Topology` — the **lowered** workload form (an ordered list of
+//! Table-II [`LayerShape`] tiles) that the engine consumes, plus a
+//! deprecated csv-parsing shim.
 //!
-//! Format (header optional, detected by non-numeric second cell):
+//! Workloads are now authored through the typed operator IR
+//! ([`crate::workload::Workload`]): a graph of `Conv2d`/`Gemm`/`FC`/`Pool`
+//! ops whose [`lower`](crate::workload::Workload::lower) pass produces a
+//! `Topology`. The legacy Table-II csv entry points here
+//! ([`Topology::parse`], [`Topology::from_file`]) remain as shims that
+//! route through that IR (`Op::TableII` nodes, lowered verbatim) and are
+//! **bit-identical** to the pre-IR parser — pinned by the equivalence
+//! suite — with one improvement: rows are strictly arity-checked and
+//! parse errors carry `file:line`.
+//!
+//! Legacy format (header optional; trailing commas and `#` comments
+//! tolerated; layers run in file order, §III-F):
 //!
 //! ```text
 //! Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width,
 //! Channels, Num Filter, Strides,
 //! Conv1, 224, 224, 7, 7, 3, 64, 2,
 //! ```
-//!
-//! Trailing commas and `#` comments are tolerated (the original tool's
-//! files carry trailing commas). Layers run in file order; parallel
-//! branches of modern cells are serialized in listed order (§III-F).
 
 use std::path::Path;
 
 use crate::arch::LayerShape;
-use crate::util::csv;
-use crate::{Error, Result};
+use crate::Result;
 
-/// A named workload: ordered list of layers.
+/// A named workload in lowered form: ordered list of engine tiles.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Topology {
     pub name: String,
@@ -30,34 +38,25 @@ impl Topology {
         Topology { name: name.to_string(), layers }
     }
 
-    /// Parse topology csv text.
+    /// Parse legacy Table-II topology csv text (shim: routes through the
+    /// workload IR and lowers, bit-identical to the pre-IR parser).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use workload::Workload::parse_conv_csv(..)?.lower() — or \
+                Workload::from_file, which also reads GEMM csvs"
+    )]
     pub fn parse(name: &str, text: &str) -> Result<Self> {
-        let rows = csv::parse(text);
-        let mut layers = Vec::new();
-        for (i, row) in rows.iter().enumerate() {
-            if i == 0 && looks_like_header(row) {
-                continue;
-            }
-            layers.push(parse_row(row, i)?);
-        }
-        if layers.is_empty() {
-            return Err(Error::Topology(format!("{name}: no layers found")));
-        }
-        let t = Topology::new(name, layers);
-        for l in &t.layers {
-            l.validate()?;
-        }
-        Ok(t)
+        crate::workload::Workload::parse_conv_csv(name, name, text)?.lower()
     }
 
-    /// Read and parse a topology file; name = file stem.
+    /// Read and parse a legacy topology file; name = file stem (shim,
+    /// see [`Topology::parse`]).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use workload::Workload::from_file(path)?.lower()"
+    )]
     pub fn from_file(path: &Path) -> Result<Self> {
-        let text = std::fs::read_to_string(path)?;
-        let name = path
-            .file_stem()
-            .and_then(|s| s.to_str())
-            .unwrap_or("topology");
-        Self::parse(name, &text)
+        crate::workload::Workload::from_file(path)?.lower()
     }
 
     /// Total MACs over all layers.
@@ -81,36 +80,8 @@ impl Topology {
     }
 }
 
-fn looks_like_header(row: &[String]) -> bool {
-    row.len() >= 2 && row[1].parse::<u64>().is_err()
-}
-
-fn parse_row(row: &[String], lineno: usize) -> Result<LayerShape> {
-    if row.len() != 8 {
-        return Err(Error::Topology(format!(
-            "row {}: expected 8 cells (Table II), got {}: {row:?}",
-            lineno + 1,
-            row.len()
-        )));
-    }
-    let num = |i: usize| -> Result<u64> {
-        row[i].parse::<u64>().map_err(|_| {
-            Error::Topology(format!("row {}: cell {i} not a number: {:?}", lineno + 1, row[i]))
-        })
-    };
-    Ok(LayerShape {
-        name: row[0].clone(),
-        ifmap_h: num(1)?,
-        ifmap_w: num(2)?,
-        filt_h: num(3)?,
-        filt_w: num(4)?,
-        channels: num(5)?,
-        num_filters: num(6)?,
-        stride: num(7)?,
-    })
-}
-
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
 
@@ -143,8 +114,19 @@ FC, 1, 1, 1, 1, 2048, 1000, 1,
     }
 
     #[test]
-    fn wrong_cell_count_is_error() {
-        assert!(Topology::parse("bad", "C1, 8, 8, 3, 3, 4, 16,\n").is_err());
+    fn shim_matches_workload_ir_lowering() {
+        let direct = Topology::parse("sample", SAMPLE).unwrap();
+        let via_ir = crate::workload::Workload::parse_conv_csv("sample", "sample", SAMPLE)
+            .unwrap()
+            .lower()
+            .unwrap();
+        assert_eq!(direct, via_ir);
+    }
+
+    #[test]
+    fn wrong_cell_count_is_error_with_line() {
+        let err = Topology::parse("bad", "C1, 8, 8, 3, 3, 4, 16,\n").unwrap_err();
+        assert!(err.to_string().contains("bad:1"), "{err}");
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //! 1x1-filter convolutions).
 
 use super::Topology;
+use crate::workload::Workload;
 
 /// Workload tags in the paper's Table III order.
 pub const TAGS: [(&str, &str); 7] = [
@@ -40,7 +41,25 @@ const SOURCES: [(&str, &str); 9] = [
     embedded!("mobilenetv1"),
 ];
 
-/// Load one built-in workload by name ("resnet50") or tag ("W5").
+macro_rules! embedded_gemm {
+    ($name:literal) => {
+        ($name, include_str!(concat!("../../../topologies/gemm/", $name, ".csv")))
+    };
+}
+
+/// Built-in GEMM workloads (SCALE-Sim-v2 style `M, N, K` csv) — MLP,
+/// attention-projection and LSTM-cell shapes, plus `ncf_gemm` (the exact
+/// GEMM re-encoding of W4, used to demonstrate conv <-> GEMM memo-cache
+/// sharing).
+const GEMM_SOURCES: [(&str, &str); 4] = [
+    embedded_gemm!("mlp"),
+    embedded_gemm!("attention"),
+    embedded_gemm!("lstm"),
+    embedded_gemm!("ncf_gemm"),
+];
+
+/// Load one built-in conv workload by name ("resnet50") or tag ("W5"),
+/// in lowered form.
 pub fn builtin(name: &str) -> Option<Topology> {
     let lname = name.to_lowercase();
     let resolved = TAGS
@@ -48,15 +67,40 @@ pub fn builtin(name: &str) -> Option<Topology> {
         .find(|(tag, _)| tag.eq_ignore_ascii_case(&lname))
         .map(|(_, n)| *n)
         .unwrap_or(lname.as_str());
-    SOURCES
-        .iter()
-        .find(|(n, _)| *n == resolved)
-        .map(|(n, text)| Topology::parse(n, text).expect("embedded topology must parse"))
+    SOURCES.iter().find(|(n, _)| *n == resolved).map(|(n, text)| {
+        Workload::parse_conv_csv(n, n, text)
+            .and_then(|w| w.lower())
+            .expect("embedded topology must parse")
+    })
+}
+
+/// Load one built-in GEMM workload by name ("mlp", or "gemm/mlp" as the
+/// csv lives under `topologies/gemm/`).
+pub fn builtin_gemm(name: &str) -> Option<Workload> {
+    let lname = name.to_lowercase();
+    let resolved = lname.strip_prefix("gemm/").unwrap_or(&lname);
+    GEMM_SOURCES.iter().find(|(n, _)| *n == resolved).map(|(n, text)| {
+        Workload::parse_gemm_csv(n, n, text).expect("embedded gemm workload must parse")
+    })
+}
+
+/// Resolve any built-in name as a typed [`Workload`]: conv builtins wrap
+/// as raw Table-II ops, GEMM builtins parse as `Gemm` ops.
+pub fn builtin_workload(name: &str) -> Option<Workload> {
+    if let Some(t) = builtin(name) {
+        return Some(Workload::from_topology(&t));
+    }
+    builtin_gemm(name)
 }
 
 /// All seven MLPerf workloads in Table III order.
 pub fn mlperf_suite() -> Vec<Topology> {
     TAGS.iter().map(|(_, n)| builtin(n).unwrap()).collect()
+}
+
+/// All built-in GEMM workloads, as typed IR specs.
+pub fn gemm_suite() -> Vec<Workload> {
+    GEMM_SOURCES.iter().map(|(n, _)| builtin_gemm(n).unwrap()).collect()
 }
 
 #[cfg(test)]
@@ -116,6 +160,35 @@ mod tests {
         // depthwise layers encode as single-filter convs
         let m = builtin("mobilenetv1").unwrap();
         assert!(m.layers.iter().any(|l| l.num_filters == 1 && l.filt_h == 3));
+    }
+
+    #[test]
+    fn gemm_builtins_parse_and_lower() {
+        for (name, _) in GEMM_SOURCES {
+            let w = builtin_gemm(name).unwrap();
+            let t = w.lower().unwrap();
+            assert!(!t.layers.is_empty(), "{name}");
+            assert!(t.layers.iter().all(|l| l.is_gemm()), "{name}: all tiles are GEMMs");
+        }
+        assert!(builtin_gemm("gemm/mlp").is_some(), "gemm/ prefix resolves");
+        assert!(builtin_gemm("nope").is_none());
+    }
+
+    #[test]
+    fn ncf_gemm_re_encodes_ncf_exactly() {
+        // the conv <-> GEMM cache-sharing demo depends on this: every
+        // ncf_gemm tile must equal its conv-encoded ncf twin (names too)
+        let conv = builtin("ncf").unwrap();
+        let gemm = builtin_gemm("ncf_gemm").unwrap().lower().unwrap();
+        assert_eq!(conv.layers, gemm.layers);
+    }
+
+    #[test]
+    fn builtin_workload_resolves_both_families() {
+        let w5 = builtin_workload("W5").unwrap();
+        assert_eq!(w5.lower().unwrap(), builtin("resnet50").unwrap());
+        assert_eq!(builtin_workload("attention").unwrap().name, "attention");
+        assert!(builtin_workload("nope").is_none());
     }
 
     #[test]

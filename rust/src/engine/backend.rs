@@ -23,6 +23,12 @@
 //! Backends must also be `Send + Sync`: the sweep grid calls them from
 //! worker threads.
 //!
+//! Every backend consumes **lowered tiles** ([`LayerShape`], the
+//! Table-II GEMM-tile encoding that [`crate::workload`]'s lowering pass
+//! emits) — the IR's op vocabulary (Conv2d/Gemm/FC/Pool, dilation,
+//! groups) never reaches a backend, which is why one IR drives all
+//! three fidelity levels unchanged.
+//!
 //! DRAM traffic, bandwidth and energy are *not* part of the trait: they
 //! are schedule-level properties shared by all fidelity levels, and the
 //! engine derives them once from the common memory/energy models.

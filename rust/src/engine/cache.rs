@@ -10,10 +10,16 @@
 //! * the architecture fields the timing/memory/energy models read:
 //!   array dimensions, dataflow, the three SRAM partition sizes, and the
 //!   word size,
-//! * the layer's *shape* (Table II fields) — NOT its name. Two layers
-//!   with different names but identical hyper-parameters (e.g. repeated
-//!   ResNet bottleneck blocks) share one cache entry; the report's layer
-//!   name is re-stamped on retrieval so callers see their own layer.
+//! * the layer's **lowered tile shape** (Table II fields) — NOT its
+//!   name. Two layers with different names but identical
+//!   hyper-parameters (e.g. repeated ResNet bottleneck blocks) share one
+//!   cache entry; the report's layer name is re-stamped on retrieval so
+//!   callers see their own layer. Because the workload IR
+//!   ([`crate::workload`]) canonicalizes GEMM-equivalent ops before the
+//!   engine ever sees them — a `Gemm`/`FullyConnected` op, a pointwise
+//!   `Conv2d`, and a legacy gemm-encoded csv row all lower to the same
+//!   `(M, 1, 1, 1, K, N, 1)` tile — a conv and its equivalent GEMM share
+//!   one entry across sweeps and the server's shared cache.
 //!
 //! Address-space offsets are deliberately excluded: they relocate trace
 //! addresses but do not affect any reported metric. The energy model is
@@ -64,7 +70,9 @@ pub(crate) struct CacheKey {
     pub(crate) layer: LayerKey,
 }
 
-/// The Table-II shape fields, without the user-facing name.
+/// The lowered tile's Table-II shape fields, without the user-facing
+/// name (GEMM-equivalent ops are already canonicalized by the workload
+/// IR's lowering pass — see the module docs).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub(crate) struct LayerKey {
     pub(crate) ifmap_h: u64,
@@ -344,6 +352,27 @@ mod tests {
         assert_eq!((s.layer_sims, s.cache_hits), (1, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(cache.entries(), 1);
+    }
+
+    #[test]
+    fn pointwise_conv_and_equivalent_gemm_share_one_key() {
+        use crate::workload::{Conv2d, Op};
+        let conv = Op::Conv2d(Conv2d {
+            ifmap_h: 14,
+            ifmap_w: 14,
+            in_channels: 64,
+            out_channels: 128,
+            ..Conv2d::default()
+        })
+        .lower("pw")
+        .unwrap();
+        let gemm = Op::Gemm { m: 14 * 14, k: 64, n: 128 }.lower("g").unwrap();
+        let cfg = config::paper_default();
+        assert_eq!(
+            CacheKey::new(BackendKind::Analytical, &cfg, &conv[0]),
+            CacheKey::new(BackendKind::Analytical, &cfg, &gemm[0]),
+            "lowering must canonicalize the pointwise conv onto the GEMM tile"
+        );
     }
 
     #[test]

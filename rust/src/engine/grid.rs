@@ -152,6 +152,8 @@ impl<'e> SweepGrid<'e> {
     }
 
     /// Workload axis (required: an empty grid evaluates no points).
+    /// Replaces the axis; combine with [`SweepGrid::workload_specs`] to
+    /// append typed-IR workloads.
     pub fn workloads(mut self, topos: &[Topology]) -> Self {
         self.workloads = topos.to_vec();
         self
@@ -161,6 +163,21 @@ impl<'e> SweepGrid<'e> {
     pub fn workload(mut self, topo: &Topology) -> Self {
         self.workloads = vec![topo.clone()];
         self
+    }
+
+    /// Append typed-IR workloads ([`crate::workload::Workload`]) to the
+    /// workload axis, lowering each onto the engine's tiles. Lowered
+    /// tiles that coincide with tiles of other workloads on the grid —
+    /// e.g. a GEMM workload re-encoding a conv workload's FC layers —
+    /// share memo-cache entries across the whole sweep.
+    pub fn workload_specs(
+        mut self,
+        specs: &[crate::workload::Workload],
+    ) -> crate::Result<Self> {
+        for spec in specs {
+            self.workloads.push(spec.lower()?);
+        }
+        Ok(self)
     }
 
     /// Dataflow axis (default: the engine's configured dataflow).
@@ -322,6 +339,29 @@ mod tests {
         assert_eq!((p.array_h, p.array_w), (128, 128));
         assert_eq!(p.dataflow, Dataflow::Os);
         assert_eq!(p.config(e.cfg()), *e.cfg());
+    }
+
+    #[test]
+    fn workload_specs_lower_onto_the_grid_and_share_the_cache() {
+        use crate::config::workloads;
+        let e = engine();
+        let out = e
+            .sweep()
+            .workloads(&[workloads::builtin("ncf").unwrap()])
+            .workload_specs(&[workloads::builtin_gemm("ncf_gemm").unwrap()])
+            .unwrap()
+            .square_arrays(&[16])
+            .run();
+        assert_eq!(out.points.len(), 2);
+        // ncf_gemm lowers to the exact tiles of conv-encoded ncf: the
+        // second workload must be served entirely from the memo cache
+        // (ncf itself repeats one shape, so only 4 distinct sims exist)
+        assert_eq!(out.stats.memo.layer_sims, 4);
+        assert!(out.stats.memo.cache_hits >= 6, "{:?}", out.stats.memo);
+        assert_eq!(out.points[0].report.layers.len(), out.points[1].report.layers.len());
+        for (a, b) in out.points[0].report.layers.iter().zip(&out.points[1].report.layers) {
+            assert_eq!(a, b, "conv- and GEMM-encoded reports must be bit-identical");
+        }
     }
 
     #[test]

@@ -255,6 +255,12 @@ impl Engine {
         Ok(RunOutcome { report, functional, files_written: files })
     }
 
+    /// Lower a typed workload (operator IR, [`crate::workload`]) and run
+    /// it end-to-end — the front-end form of [`Engine::run`].
+    pub fn run_workload(&self, workload: &crate::workload::Workload) -> Result<RunOutcome> {
+        self.run(&workload.lower()?)
+    }
+
     /// Start building a memoizing design-space sweep over this engine.
     pub fn sweep(&self) -> SweepGrid<'_> {
         SweepGrid::new(self)
@@ -605,6 +611,31 @@ mod tests {
             assert_eq!(engine.run_layer(layer), sim.run_layer(layer));
         }
         assert_eq!(engine.run_topology(&topo()), sim.run_topology(&topo()));
+    }
+
+    #[test]
+    fn run_workload_lowers_and_matches_run() {
+        use crate::workload::{Conv2d, Workload};
+        let wl = Workload::builder("w")
+            .conv2d(
+                "c1",
+                Conv2d {
+                    ifmap_h: 16,
+                    ifmap_w: 16,
+                    in_channels: 4,
+                    out_channels: 8,
+                    kernel_h: 3,
+                    kernel_w: 3,
+                    ..Conv2d::default()
+                },
+            )
+            .gemm("g", 32, 64, 16)
+            .build()
+            .unwrap();
+        let e = Engine::builder().array(16, 16).build().unwrap();
+        let out = e.run_workload(&wl).unwrap();
+        assert_eq!(out.report, e.run(&wl.lower().unwrap()).unwrap().report);
+        assert_eq!(out.report.layers.len(), 2);
     }
 
     #[test]

@@ -41,6 +41,20 @@
 //! pre-engine entry points ([`sim::Simulator`], [`coordinator::run`],
 //! the `sweep::*_sweep` functions) remain as thin deprecated shims.
 //!
+//! ## Workloads: the typed operator IR
+//!
+//! Workloads enter through [`workload::Workload`] — a typed operator
+//! graph (`Conv2d` with stride/dilation/groups, `Gemm`, `FullyConnected`,
+//! `Pool`) built fluently or parsed from csv (legacy Table-II conv
+//! format *or* SCALE-Sim-v2 style `M, N, K` GEMM format, sniffed by
+//! [`workload::Workload::from_file`]). [`workload::Workload::lower`]
+//! maps every op onto the engine's [`LayerShape`] GEMM tiles (im2col
+//! view for convs, direct for GEMM/FC), so one IR drives all three
+//! backends unchanged, and the memo cache keys on the lowered tile —
+//! a pointwise conv and its equivalent GEMM share one entry.
+//! [`config::Topology`] remains as the lowered form (and its csv parse
+//! as a deprecated shim routed through the IR, bit-identical).
+//!
 //! ## Simulation as a service: the `server` subsystem
 //!
 //! [`server`] runs the engine as a long-lived TCP service
@@ -53,8 +67,12 @@
 //!
 //! Module map (paper section in parens):
 //!
-//! * [`arch`]     — layer geometry / workload shapes (Table II)
-//! * [`config`]   — `.cfg` + topology `.csv` front end (Table I, II)
+//! * [`arch`]     — layer geometry / lowered workload tiles (Table II)
+//! * [`workload`] — **typed operator IR**: `Conv2d`/`Gemm`/`FC`/`Pool`
+//!   graphs built fluently or parsed from conv/GEMM csv, lowered onto
+//!   the engine's Table-II GEMM tiles
+//! * [`config`]   — `.cfg` front end (Table I) + the deprecated
+//!   `Topology` csv shim (now routed through [`workload`])
 //! * [`dataflow`] — OS / WS / IS analytical cycle models (§III-B)
 //! * [`engine`]   — **the public façade**: builder, pluggable fidelity
 //!   backends, memoizing sweep grid (§IV methodology)
@@ -90,12 +108,14 @@ pub mod sim;
 pub mod sweep;
 pub mod trace;
 pub mod util;
+pub mod workload;
 
 pub use arch::LayerShape;
 pub use config::{ArchConfig, Topology};
 pub use dataflow::Dataflow;
 pub use engine::{Backend, BackendKind, Engine, EngineBuilder};
 pub use sim::{LayerReport, Simulator, WorkloadReport};
+pub use workload::{Op, Workload};
 
 /// Library-level error type (hand-rolled: `thiserror` is unavailable in
 /// the offline build).
@@ -104,6 +124,7 @@ pub enum Error {
     Config(String),
     Topology(String),
     InvalidLayer { name: String, reason: String },
+    Workload(String),
     Runtime(String),
     Io(std::io::Error),
 }
@@ -116,6 +137,7 @@ impl std::fmt::Display for Error {
             Error::InvalidLayer { name, reason } => {
                 write!(f, "invalid layer {name}: {reason}")
             }
+            Error::Workload(m) => write!(f, "workload error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }

@@ -14,29 +14,39 @@ use scale_sim::engine::{BackendKind, Engine};
 use scale_sim::runtime::{default_artifact_dir, Runtime};
 use scale_sim::server::{self, proto, ServeOpts};
 use scale_sim::util::bench::{percentile, write_json};
+use scale_sim::util::csv::CsvWriter;
 use scale_sim::util::fmt_bytes;
 use scale_sim::util::json::Json;
-use scale_sim::{sweep, Dataflow, LayerShape};
+use scale_sim::{sweep, Dataflow, LayerShape, Workload};
 
 const USAGE: &str = "\
 scale-sim — systolic CNN accelerator simulator (SCALE-Sim reproduction)
 
 USAGE:
-  scale-sim run [-c cfg] [-t topology] [-o outdir] [--dataflow os|ws|is]
-                [--array RxC] [--backend analytical|trace|rtl]
+  scale-sim run [-c cfg] [-t|--workload spec] [-o outdir] [--format table|json|csv]
+                [--dataflow os|ws|is] [--array RxC]
+                [--backend analytical|trace|rtl]
                 [--dump-traces] [--functional TILE] [--threads N]
-      Simulate a topology (built-in name like `resnet50`/`W5`, or a csv
-      path). Writes compute/sram/dram/energy reports when -o is given.
+      Simulate a workload: a built-in name (`resnet50`/`W5`, or a GEMM
+      suite name like `mlp`/`attention`/`lstm`), a Table-II conv csv
+      path, or a SCALE-Sim-v2 style GEMM csv path (`Layer, M, N, K`
+      rows) — the format is sniffed, parsed into the typed operator IR
+      and lowered onto the engine. --format json|csv makes the report
+      machine-readable on stdout; -o writes the report files.
 
-  scale-sim sweep <dataflow|memory|shape> [-t topology]...
-      Reproduce the paper's design-space sweeps on the MLPerf suite
-      (Figs 5-8 series printed as tables) through the memoizing engine
-      grid; writes BENCH_sweep.json (wall-clock + cache hit-rate).
+  scale-sim sweep <dataflow|memory|shape> [-t|--workload spec]...
+      Reproduce the paper's design-space sweeps (Figs 5-8 series printed
+      as tables) through the memoizing engine grid; repeat -t/--workload
+      to sweep several workloads (conv and GEMM specs mix freely and
+      share lowered-tile cache entries); default is the MLPerf suite.
+      Writes BENCH_sweep.json (wall-clock + cache hit-rate).
 
-  scale-sim validate [--max N]
-      Fig 4: run every engine backend (analytical, trace-driven, RTL
-      PE-grid) on array-sized matmuls through the same Engine entry
-      point; cycle counts must tally exactly.
+  scale-sim validate [--max N] [-t|--workload spec]...
+      Without workload specs: Fig 4 — run every engine backend
+      (analytical, trace-driven, RTL PE-grid) on array-sized matmuls
+      through the same Engine entry point; cycle counts must tally
+      exactly. With specs: parse + lower + validate each workload
+      (built-in, conv csv, or GEMM csv) and print its lowering summary.
 
   scale-sim analyze [-t topology] [--array RxC] [--dataflow os|ws|is]
       Deep-dive one workload: per-layer SRAM bank requirement (§IV-B),
@@ -44,7 +54,8 @@ USAGE:
       bandwidth to provision for <5%% slowdown (§III-D stall model).
 
   scale-sim workloads
-      List the built-in MLPerf workloads (Table III).
+      List the built-in workloads: the MLPerf conv suite (Table III)
+      and the GEMM suite (tag G: mlp, attention, lstm, ncf_gemm).
 
   scale-sim artifacts
       Show the functional-runtime platform and the AOT artifacts
@@ -65,7 +76,8 @@ USAGE:
                    [--kind dataflow|memory|shape]
       Submit a job to a running server and stream its JSON response
       lines (protocol: rust/src/server/proto.rs). `-t` takes a
-      built-in name or a csv path (sent inline).
+      built-in name or a conv/GEMM csv path (lowered locally and sent
+      inline); the protocol also accepts typed operator specs ("ops").
 
   scale-sim bench-serve [--clients N] [--rounds N] [--workers N]
                         [--state-dir DIR]
@@ -125,16 +137,40 @@ impl<'a> Args<'a> {
         None
     }
 
+    /// Every value of a repeatable `--name V` / `-n V` flag, in order.
+    /// A trailing bare flag is an error, not a silent no-op (a dropped
+    /// `--workload` would otherwise fall back to a full-suite sweep).
+    fn values(&self, long: &str, short: Option<&str>) -> CliResult<Vec<&'a str>> {
+        let mut out = Vec::new();
+        let mut it = self.0.iter();
+        while let Some(a) = it.next() {
+            if a == long || short.is_some_and(|s| a == s) {
+                match it.next() {
+                    Some(v) => out.push(v.as_str()),
+                    None => return fail(format!("{long} expects a value")),
+                }
+            }
+        }
+        Ok(out)
+    }
+
     fn flag(&self, long: &str) -> bool {
         self.0.iter().any(|a| a == long)
     }
 }
 
-fn load_topology(spec: &str) -> CliResult<Topology> {
-    if let Some(t) = workloads::builtin(spec) {
-        return Ok(t);
+/// Resolve a workload spec — built-in name (conv or GEMM family) or a
+/// csv path (Table-II conv / GEMM format, sniffed) — as the typed IR.
+fn load_workload(spec: &str) -> CliResult<Workload> {
+    if let Some(w) = workloads::builtin_workload(spec) {
+        return Ok(w);
     }
-    Ok(Topology::from_file(&PathBuf::from(spec))?)
+    Ok(Workload::from_file(&PathBuf::from(spec))?)
+}
+
+/// [`load_workload`], lowered onto engine tiles.
+fn load_topology(spec: &str) -> CliResult<Topology> {
+    Ok(load_workload(spec)?.lower()?)
 }
 
 /// Shared `-c/--dataflow/--array` handling for run/analyze.
@@ -158,12 +194,26 @@ fn base_config(a: &Args) -> CliResult<ArchConfig> {
 
 fn cmd_run(rest: &[String]) -> CliResult<()> {
     let a = Args(rest);
+    // reject a bad --format before any simulation work happens
+    let format = a.value("--format", None).unwrap_or("table");
+    if !matches!(format, "table" | "json" | "csv") {
+        return fail(format!("unknown format {format:?} (table|json|csv)"));
+    }
     let cfg = base_config(&a)?;
-    let topo = match a.value("--topology", Some("-t")) {
+    let mut specs = a.values("--topology", Some("-t"))?;
+    specs.extend(a.values("--workload", None)?);
+    if specs.len() > 1 {
+        return fail(format!("run takes exactly one workload, got {specs:?}"));
+    }
+    let topo = match specs.first() {
         Some(t) => load_topology(t)?,
         None => match &cfg.topology_path {
-            Some(p) => Topology::from_file(p)?,
-            None => return fail("no topology: pass -t or set Topology in the cfg".into()),
+            Some(p) => Workload::from_file(p)?.lower()?,
+            None => {
+                return fail(
+                    "no workload: pass -t/--workload or set Topology in the cfg".into(),
+                )
+            }
         },
     };
 
@@ -185,37 +235,109 @@ fn cmd_run(rest: &[String]) -> CliResult<()> {
 
     let cfg = engine.cfg();
     let r = &out.report;
-    println!(
-        "workload {:>14}  dataflow {}  array {}x{}  backend {}",
-        r.workload, cfg.dataflow, cfg.array_h, cfg.array_w, engine.backend_kind()
-    );
-    println!(
-        "{:<18} {:>12} {:>8} {:>14} {:>12} {:>10}",
-        "layer", "cycles", "util%", "dram_bytes", "avg_rd_bw", "energy_mJ"
-    );
-    for l in &r.layers {
-        println!(
-            "{:<18} {:>12} {:>8.2} {:>14} {:>12.4} {:>10.4}",
-            l.name(),
-            l.timing.cycles,
-            l.timing.utilization * 100.0,
-            l.dram.total(),
-            l.bandwidth.avg_read_bw,
-            l.energy.total_mj(),
-        );
-    }
-    println!(
-        "TOTAL: {} cycles, {:.2}% util, {} DRAM, {:.4} mJ",
-        r.total_cycles(),
-        r.overall_utilization(cfg.total_pes()) * 100.0,
-        fmt_bytes(r.total_dram().total()),
-        r.total_energy().total_mj()
-    );
-    for (layer, err) in &out.functional {
-        println!("functional[{layer}]: max rel err {err:.2e} (AOT artifact vs reference)");
-    }
-    if !out.files_written.is_empty() {
-        println!("wrote {} files under {:?}", out.files_written.len(), out.files_written[0].parent().unwrap());
+    match format {
+        // one JSON document on stdout (report shape identical to the
+        // serve protocol's `result` event), machine-readable without
+        // the server
+        "json" => {
+            let mut fields = vec![
+                ("workload", Json::str(&r.workload)),
+                ("dataflow", Json::str(cfg.dataflow.name())),
+                ("array_h", Json::u64(cfg.array_h)),
+                ("array_w", Json::u64(cfg.array_w)),
+                ("backend", Json::str(engine.backend_kind().name())),
+                ("total_cycles", Json::u64(r.total_cycles())),
+                ("overall_utilization", Json::f64(r.overall_utilization(cfg.total_pes()))),
+                ("total_dram_bytes", Json::u64(r.total_dram().total())),
+                ("total_energy_mj", Json::f64(r.total_energy().total_mj())),
+                ("report", proto::workload_report_to_json(r)),
+            ];
+            if !out.functional.is_empty() {
+                fields.push((
+                    "functional",
+                    Json::Arr(
+                        out.functional
+                            .iter()
+                            .map(|(layer, err)| {
+                                Json::obj(vec![
+                                    ("layer", Json::str(layer)),
+                                    ("max_rel_err", Json::f64(f64::from(*err))),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            println!("{}", Json::obj(fields));
+        }
+        "csv" => {
+            let mut w = CsvWriter::new(&[
+                "layer",
+                "cycles",
+                "utilization",
+                "mapping_efficiency",
+                "dram_bytes",
+                "avg_read_bw",
+                "energy_mj",
+            ]);
+            for l in &r.layers {
+                w.row(&[
+                    l.name().to_string(),
+                    l.timing.cycles.to_string(),
+                    format!("{:.6}", l.timing.utilization),
+                    format!("{:.6}", l.timing.mapping_efficiency),
+                    l.dram.total().to_string(),
+                    format!("{:.6}", l.bandwidth.avg_read_bw),
+                    format!("{:.6}", l.energy.total_mj()),
+                ]);
+            }
+            print!("{}", w.as_str());
+            // keep stdout pure csv; functional results go to stderr
+            for (layer, err) in &out.functional {
+                eprintln!("functional[{layer}]: max rel err {err:.2e}");
+            }
+        }
+        "table" => {
+            println!(
+                "workload {:>14}  dataflow {}  array {}x{}  backend {}",
+                r.workload, cfg.dataflow, cfg.array_h, cfg.array_w, engine.backend_kind()
+            );
+            println!(
+                "{:<18} {:>12} {:>8} {:>14} {:>12} {:>10}",
+                "layer", "cycles", "util%", "dram_bytes", "avg_rd_bw", "energy_mJ"
+            );
+            for l in &r.layers {
+                println!(
+                    "{:<18} {:>12} {:>8.2} {:>14} {:>12.4} {:>10.4}",
+                    l.name(),
+                    l.timing.cycles,
+                    l.timing.utilization * 100.0,
+                    l.dram.total(),
+                    l.bandwidth.avg_read_bw,
+                    l.energy.total_mj(),
+                );
+            }
+            println!(
+                "TOTAL: {} cycles, {:.2}% util, {} DRAM, {:.4} mJ",
+                r.total_cycles(),
+                r.overall_utilization(cfg.total_pes()) * 100.0,
+                fmt_bytes(r.total_dram().total()),
+                r.total_energy().total_mj()
+            );
+            for (layer, err) in &out.functional {
+                println!(
+                    "functional[{layer}]: max rel err {err:.2e} (AOT artifact vs reference)"
+                );
+            }
+            if !out.files_written.is_empty() {
+                println!(
+                    "wrote {} files under {:?}",
+                    out.files_written.len(),
+                    out.files_written[0].parent().unwrap()
+                );
+            }
+        }
+        _ => unreachable!("--format validated before the run"),
     }
     Ok(())
 }
@@ -223,9 +345,12 @@ fn cmd_run(rest: &[String]) -> CliResult<()> {
 fn cmd_sweep(rest: &[String]) -> CliResult<()> {
     let a = Args(rest);
     let kind = rest.first().map(String::as_str).unwrap_or("dataflow");
-    let topos: Vec<Topology> = match a.value("--topology", Some("-t")) {
-        Some(t) => vec![load_topology(t)?],
-        None => workloads::mlperf_suite(),
+    let mut specs = a.values("--topology", Some("-t"))?;
+    specs.extend(a.values("--workload", None)?);
+    let topos: Vec<Topology> = if specs.is_empty() {
+        workloads::mlperf_suite()
+    } else {
+        specs.iter().map(|s| load_topology(s)).collect::<CliResult<_>>()?
     };
     let engine = Engine::builder().config(ArchConfig::default()).build()?;
 
@@ -350,6 +475,27 @@ fn cmd_analyze(rest: &[String]) -> CliResult<()> {
 
 fn cmd_validate(rest: &[String]) -> CliResult<()> {
     let a = Args(rest);
+
+    // workload-validation mode: parse + lower + validate each spec
+    // (-t accepted as the same alias run/sweep use)
+    let mut specs = a.values("--topology", Some("-t"))?;
+    specs.extend(a.values("--workload", None)?);
+    if !specs.is_empty() {
+        for spec in specs {
+            let w = load_workload(spec)?;
+            let topo = w.lower()?; // lowering validates every op and tile
+            let gemm_tiles = topo.layers.iter().filter(|l| l.is_gemm()).count();
+            println!(
+                "{spec}: OK — {} ops -> {} tiles ({} GEMM-encoded), {} MACs",
+                w.nodes.len(),
+                topo.layers.len(),
+                gemm_tiles,
+                topo.total_macs()
+            );
+        }
+        return Ok(());
+    }
+
     let max: usize = a.value("--max", None).unwrap_or("32").parse()?;
     println!(
         "{:>6} {:>12} {:>12} {:>12} {:>6}",
@@ -384,6 +530,10 @@ fn cmd_workloads() -> CliResult<()> {
     for (tag, name) in workloads::TAGS {
         let t = workloads::builtin(name).unwrap();
         println!("{:<4} {:<14} {:>7} {:>16}", tag, name, t.layers.len(), t.total_macs());
+    }
+    for w in workloads::gemm_suite() {
+        let t = w.lower()?;
+        println!("{:<4} {:<14} {:>7} {:>16}", "G", w.name, t.layers.len(), t.total_macs());
     }
     Ok(())
 }

@@ -6,9 +6,10 @@
 //!
 //! | shape | meaning |
 //! |---|---|
-//! | `{"req":"run","id":1,"workload":"resnet50"}` | simulate one workload (built-in name or `W1`..`W7` tag) |
-//! | `{"req":"run","id":2,"workload":"mine","layers":[{...layer...},..]}` | simulate an inline topology (layer objects, shape below) |
-//! | `{"req":"sweep","id":3,"kind":"dataflow","workload":"ncf"}` | run a paper sweep (`dataflow`\|`memory`\|`shape`); omit `workload` for the full MLPerf suite |
+//! | `{"req":"run","id":1,"workload":"resnet50"}` | simulate one workload (built-in name — conv or GEMM family — or `W1`..`W7` tag) |
+//! | `{"req":"run","id":2,"workload":"mine","layers":[{...layer...},..]}` | simulate an inline topology (lowered Table-II layer objects, shape below) |
+//! | `{"req":"run","id":3,"workload":"mine","ops":[{...op...},..]}` | simulate an inline **typed workload** (operator IR, lowered server-side; op shape below) |
+//! | `{"req":"sweep","id":4,"kind":"dataflow","workload":"ncf"}` | run a paper sweep (`dataflow`\|`memory`\|`shape`); omit `workload` for the full MLPerf suite; `layers`/`ops` are accepted here too |
 //! | `{"req":"stats"}` | server/queue/cache statistics (answered inline, never queued) |
 //! | `{"req":"shutdown"}` | drain the queue, flush the result store, stop |
 //!
@@ -24,6 +25,18 @@
 //! A layer object is the Table-II row:
 //! `{"name":"c1","ifmap_h":16,"ifmap_w":16,"filt_h":3,"filt_w":3,
 //!   "channels":4,"num_filters":8,"stride":1}`.
+//!
+//! An op object is the typed IR's wire form
+//! ([`crate::workload::OpNode::from_json`]), discriminated by `"type"`:
+//! `{"type":"conv2d","name":"c1","ifmap_h":16,"ifmap_w":16,
+//!   "in_channels":4,"out_channels":8,"kernel_h":3,"stride":1,
+//!   "dilation":1,"groups":1}` (trailing three optional, default 1;
+//! `kernel_w` defaults to `kernel_h`), `{"type":"gemm","m":..,"k":..,
+//! "n":..}`, `{"type":"fc","batch":..,"in_features":..,
+//! "out_features":..}`, `{"type":"pool",...}`, or `{"type":"layer",...}`
+//! (raw Table-II fields). `"ops"` and `"layers"` are mutually exclusive;
+//! ops are lowered onto engine tiles before queueing, so conv- and
+//! GEMM-encoded submissions share the server's memo cache.
 //!
 //! ## Responses (server -> client)
 //!
@@ -234,10 +247,26 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
     }
 }
 
-/// Resolve the request's topology: inline `layers` win, else a built-in
-/// `workload` name, else `None` (sweeps default to the whole suite).
+/// Resolve the request's topology: inline `ops` (typed IR, lowered
+/// here) or inline `layers` win, else a built-in `workload` name (conv
+/// or GEMM family), else `None` (sweeps default to the whole suite).
 fn request_topology(j: &Json) -> Result<Option<Topology>, String> {
     let name = j.str_field("workload");
+    if let Some(ops) = j.get("ops") {
+        if j.get("layers").is_some() {
+            return Err("\"ops\" and \"layers\" are mutually exclusive".into());
+        }
+        let items = ops.as_arr().ok_or("\"ops\" must be an array")?;
+        if items.is_empty() {
+            return Err("\"ops\" must not be empty".into());
+        }
+        let mut nodes = Vec::with_capacity(items.len());
+        for item in items {
+            nodes.push(crate::workload::OpNode::from_json(item)?);
+        }
+        let workload = crate::workload::Workload::new(name.unwrap_or("inline"), nodes);
+        return workload.lower().map(Some).map_err(|e| e.to_string());
+    }
     if let Some(layers) = j.get("layers") {
         let items = layers.as_arr().ok_or("\"layers\" must be an array")?;
         if items.is_empty() {
@@ -252,9 +281,10 @@ fn request_topology(j: &Json) -> Result<Option<Topology>, String> {
         return Ok(Some(Topology::new(name.unwrap_or("inline"), shapes)));
     }
     match name {
-        Some(n) => workloads::builtin(n)
-            .map(Some)
-            .ok_or_else(|| format!("unknown workload {n:?} (see `scale-sim workloads`)")),
+        Some(n) => match workloads::builtin_workload(n) {
+            Some(w) => w.lower().map(Some).map_err(|e| e.to_string()),
+            None => Err(format!("unknown workload {n:?} (see `scale-sim workloads`)")),
+        },
         None => Ok(None),
     }
 }
@@ -544,6 +574,43 @@ mod tests {
                 assert_eq!(topo.name, "mine");
                 assert_eq!(topo.layers.len(), 1);
                 assert_eq!(topo.layers[0].name, "c1");
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+    }
+
+    #[test]
+    fn run_request_with_inline_ops_lowers_server_side() {
+        let line = r#"{"req":"run","id":4,"workload":"typed","ops":[
+            {"type":"gemm","name":"g","m":32,"k":64,"n":16},
+            {"type":"conv2d","name":"pw","ifmap_h":8,"ifmap_w":8,"in_channels":4,"out_channels":8,"kernel_h":1}
+        ]}"#
+        .replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Run { id, topo, .. } => {
+                assert_eq!(id, 4);
+                assert_eq!(topo.name, "typed");
+                assert_eq!(topo.layers.len(), 2);
+                assert_eq!(topo.layers[0], LayerShape::gemm("g", 32, 64, 16));
+                // pointwise conv canonicalizes onto the GEMM tile
+                assert_eq!(topo.layers[1], LayerShape::gemm("pw", 64, 4, 8));
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // ops and layers cannot be mixed
+        let both = r#"{"req":"run","ops":[{"type":"gemm","m":1,"k":1,"n":1}],"layers":[]}"#;
+        assert!(parse_request(both).unwrap_err().contains("mutually exclusive"));
+        // invalid op geometry is rejected at parse time
+        let bad = r#"{"req":"run","ops":[{"type":"gemm","name":"z","m":0,"k":1,"n":1}]}"#;
+        assert!(parse_request(bad).is_err());
+    }
+
+    #[test]
+    fn run_request_with_builtin_gemm_workload() {
+        match parse_request(r#"{"req":"run","id":8,"workload":"attention"}"#).unwrap() {
+            Request::Run { topo, .. } => {
+                assert_eq!(topo.name, "attention");
+                assert!(topo.layers.iter().all(|l| l.is_gemm()));
             }
             other => panic!("wrong request {other:?}"),
         }

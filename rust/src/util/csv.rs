@@ -10,17 +10,25 @@ use std::path::Path;
 
 /// Parse csv text into trimmed string cells, skipping blank/comment lines.
 pub fn parse(text: &str) -> Vec<Vec<String>> {
+    parse_numbered(text).into_iter().map(|(_, cells)| cells).collect()
+}
+
+/// [`parse`], but each row carries its **1-based line number in the
+/// original text** (comment and blank lines shift data rows, so callers
+/// that report errors need the real file line, not the row index).
+pub fn parse_numbered(text: &str) -> Vec<(usize, Vec<String>)> {
     text.lines()
-        .map(str::trim)
-        .filter(|l| !l.is_empty() && !l.starts_with('#'))
-        .map(|line| {
+        .enumerate()
+        .map(|(i, l)| (i + 1, l.trim()))
+        .filter(|(_, l)| !l.is_empty() && !l.starts_with('#'))
+        .map(|(lineno, line)| {
             let mut cells: Vec<String> =
                 line.split(',').map(|c| c.trim().to_string()).collect();
             // tolerate a single trailing comma (original tool's files)
             if cells.last().is_some_and(|c| c.is_empty()) {
                 cells.pop();
             }
-            cells
+            (lineno, cells)
         })
         .collect()
 }
@@ -75,6 +83,14 @@ mod tests {
         assert_eq!(rows.len(), 2);
         assert_eq!(rows[0], vec!["a", "b", "c"]);
         assert_eq!(rows[1], vec!["1", "2", "3"]); // trailing comma dropped
+    }
+
+    #[test]
+    fn parse_numbered_keeps_file_line_numbers() {
+        let rows = parse_numbered("# hi\n\na, b\n# mid\n1,2,\n");
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], (3, vec!["a".to_string(), "b".to_string()]));
+        assert_eq!(rows[1], (5, vec!["1".to_string(), "2".to_string()]));
     }
 
     #[test]

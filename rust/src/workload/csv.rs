@@ -1,0 +1,258 @@
+//! Csv front ends for [`Workload`](super::Workload): the legacy Table-II
+//! conv format and the SCALE-Sim-v2 style GEMM format, with strict
+//! per-row validation (`src:line` in every error) and format sniffing.
+//!
+//! ## Table-II conv format (8 cells, legacy)
+//!
+//! ```text
+//! Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width,
+//! Channels, Num Filter, Strides,
+//! Conv1, 224, 224, 7, 7, 3, 64, 2,
+//! ```
+//!
+//! Rows become [`Op::TableII`] nodes, so lowering reproduces the
+//! pre-IR `Topology::parse` bit-identically (pinned by the equivalence
+//! suite).
+//!
+//! ## GEMM format (4 cells, SCALE-Sim v2 `mnk` style)
+//!
+//! ```text
+//! Layer, M, N, K,
+//! qkv_proj, 128, 1536, 512,
+//! ```
+//!
+//! `M` = output rows (pixels/batch), `N` = output columns (filters),
+//! `K` = contraction. Rows become [`Op::Gemm`] nodes (`m, k, n` =
+//! `M, K, N`).
+//!
+//! Both formats tolerate `#` comments, blank lines and one trailing
+//! comma; a header row is recognized (first row only) when **no** cell
+//! after the layer name parses as a number — so a data row with a typo
+//! is a loud error, never silently skipped as a header (the pre-IR
+//! parser's bug).
+
+use super::{Op, OpNode, Workload};
+use crate::arch::LayerShape;
+use crate::util::csv;
+use crate::{Error, Result};
+
+/// Cells per row in each supported format.
+const CONV_CELLS: usize = 8;
+const GEMM_CELLS: usize = 4;
+
+/// A header row carries no numeric cell after the name column.
+fn is_header(row: &[String]) -> bool {
+    row.len() >= 2 && row[1..].iter().all(|c| c.parse::<u64>().is_err())
+}
+
+/// Numbered, comment-stripped rows; errors if the file holds none.
+fn rows(name: &str, src: &str, text: &str) -> Result<Vec<(usize, Vec<String>)>> {
+    let rows = csv::parse_numbered(text);
+    if rows.is_empty() {
+        return Err(Error::Workload(format!("{src}: no rows found (workload {name:?})")));
+    }
+    Ok(rows)
+}
+
+fn arity_error(src: &str, line: usize, want: usize, columns: &str, row: &[String]) -> Error {
+    Error::Workload(format!(
+        "{src}:{line}: expected {want} cells ({columns}), got {}: {row:?}",
+        row.len()
+    ))
+}
+
+fn cell_u64(src: &str, line: usize, row: &[String], i: usize, label: &str) -> Result<u64> {
+    row[i].parse::<u64>().map_err(|_| {
+        Error::Workload(format!(
+            "{src}:{line}: cell {i} ({label}) is not a number: {:?}",
+            row[i]
+        ))
+    })
+}
+
+/// Parse the legacy Table-II conv csv into raw [`Op::TableII`] nodes.
+pub(super) fn parse_conv_csv(name: &str, src: &str, text: &str) -> Result<Workload> {
+    parse_conv_rows(name, src, &rows(name, src, text)?)
+}
+
+fn parse_conv_rows(name: &str, src: &str, rows: &[(usize, Vec<String>)]) -> Result<Workload> {
+    const COLUMNS: &str =
+        "Layer, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides";
+    let mut nodes = Vec::new();
+    for (i, (line, row)) in rows.iter().enumerate() {
+        if i == 0 && is_header(row) {
+            continue;
+        }
+        if row.len() != CONV_CELLS {
+            return Err(arity_error(src, *line, CONV_CELLS, COLUMNS, row));
+        }
+        let num = |idx: usize, label: &str| cell_u64(src, *line, row, idx, label);
+        let shape = LayerShape {
+            name: row[0].clone(),
+            ifmap_h: num(1, "ifmap height")?,
+            ifmap_w: num(2, "ifmap width")?,
+            filt_h: num(3, "filter height")?,
+            filt_w: num(4, "filter width")?,
+            channels: num(5, "channels")?,
+            num_filters: num(6, "num filters")?,
+            stride: num(7, "stride")?,
+        };
+        nodes.push(OpNode { name: shape.name.clone(), op: Op::TableII(shape) });
+    }
+    finish(name, src, nodes)
+}
+
+/// Parse the SCALE-Sim-v2 style GEMM csv into [`Op::Gemm`] nodes.
+pub(super) fn parse_gemm_csv(name: &str, src: &str, text: &str) -> Result<Workload> {
+    parse_gemm_rows(name, src, &rows(name, src, text)?)
+}
+
+fn parse_gemm_rows(name: &str, src: &str, rows: &[(usize, Vec<String>)]) -> Result<Workload> {
+    const COLUMNS: &str = "Layer, M, N, K";
+    let mut nodes = Vec::new();
+    for (i, (line, row)) in rows.iter().enumerate() {
+        if i == 0 && is_header(row) {
+            continue;
+        }
+        if row.len() != GEMM_CELLS {
+            return Err(arity_error(src, *line, GEMM_CELLS, COLUMNS, row));
+        }
+        let m = cell_u64(src, *line, row, 1, "M")?;
+        let n = cell_u64(src, *line, row, 2, "N")?;
+        let k = cell_u64(src, *line, row, 3, "K")?;
+        nodes.push(OpNode::new(&row[0], Op::Gemm { m, k, n }));
+    }
+    finish(name, src, nodes)
+}
+
+/// Sniff the format by the first row's arity and parse accordingly
+/// (tokenizing the text once).
+pub(super) fn parse_auto(name: &str, src: &str, text: &str) -> Result<Workload> {
+    let rows = rows(name, src, text)?;
+    let (line, first) = &rows[0];
+    match first.len() {
+        CONV_CELLS => parse_conv_rows(name, src, &rows),
+        GEMM_CELLS => parse_gemm_rows(name, src, &rows),
+        other => Err(Error::Workload(format!(
+            "{src}:{line}: unrecognized workload csv: {other} cells per row \
+             (Table-II conv = {CONV_CELLS}, GEMM = {GEMM_CELLS})"
+        ))),
+    }
+}
+
+/// Shared tail: non-empty check + op validation (which also validates
+/// the lowered tiles via `lower` at use time).
+fn finish(name: &str, src: &str, nodes: Vec<OpNode>) -> Result<Workload> {
+    if nodes.is_empty() {
+        return Err(Error::Workload(format!("{src}: no layers found (workload {name:?})")));
+    }
+    let w = Workload::new(name, nodes);
+    w.validate()?;
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CONV: &str = "\
+Layer name, IFMAP Height, IFMAP Width, Filter Height, Filter Width, Channels, Num Filter, Strides,
+Conv1, 224, 224, 7, 7, 3, 64, 2,
+FC, 1, 1, 1, 1, 2048, 1000, 1,
+";
+
+    const GEMM: &str = "\
+Layer, M, N, K,
+qkv, 128, 1536, 512,
+out, 128, 512, 512,
+";
+
+    #[test]
+    fn conv_csv_parses_to_table_ii_ops() {
+        let w = Workload::parse_conv_csv("t", "t.csv", CONV).unwrap();
+        assert_eq!(w.nodes.len(), 2);
+        let t = w.lower().unwrap();
+        assert_eq!(t.layers[0], LayerShape::conv("Conv1", 224, 224, 7, 7, 3, 64, 2));
+        assert_eq!(t.layers[1], LayerShape::gemm("FC", 1, 2048, 1000));
+    }
+
+    #[test]
+    fn gemm_csv_parses_m_n_k_column_order() {
+        let w = Workload::parse_gemm_csv("g", "g.csv", GEMM).unwrap();
+        assert_eq!(w.nodes[0].op, Op::Gemm { m: 128, k: 512, n: 1536 });
+        let t = w.lower().unwrap();
+        assert_eq!(t.layers[0], LayerShape::gemm("qkv", 128, 512, 1536));
+        assert_eq!(t.layers[0].gemm_view(), (128, 512, 1536));
+    }
+
+    #[test]
+    fn auto_sniffs_both_formats() {
+        assert_eq!(
+            Workload::parse_csv("t", "t.csv", CONV).unwrap(),
+            Workload::parse_conv_csv("t", "t.csv", CONV).unwrap()
+        );
+        assert_eq!(
+            Workload::parse_csv("g", "g.csv", GEMM).unwrap(),
+            Workload::parse_gemm_csv("g", "g.csv", GEMM).unwrap()
+        );
+        let err = Workload::parse_csv("x", "x.csv", "a, 1, 2\n").unwrap_err();
+        assert!(err.to_string().contains("x.csv:1"), "{err}");
+    }
+
+    #[test]
+    fn malformed_row_reports_file_and_line() {
+        // regression: short row no longer silently tolerated, and the
+        // error names the real file line (comments/blank lines counted)
+        let text = "\
+# preamble comment
+Conv1, 8, 8, 3, 3, 4, 16, 1,
+
+Conv2, 8, 8, 3, 3, 4, 16,
+";
+        let err = Workload::parse_conv_csv("bad", "bad.csv", text).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bad.csv:4"), "{msg}");
+        assert!(msg.contains("expected 8 cells"), "{msg}");
+
+        // extra cells are just as loud
+        let err = Workload::parse_conv_csv("bad", "bad.csv", "C, 8, 8, 3, 3, 4, 16, 1, 99,\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("bad.csv:1"), "{err}");
+
+        // gemm rows are strict too
+        let err =
+            Workload::parse_gemm_csv("bad", "g.csv", "ok, 8, 8, 8,\nshort, 8, 8,\n").unwrap_err();
+        assert!(err.to_string().contains("g.csv:2"), "{err}");
+    }
+
+    #[test]
+    fn non_numeric_cell_reports_position() {
+        let err =
+            Workload::parse_conv_csv("bad", "bad.csv", "C1, 8, x, 3, 3, 4, 16, 1,\n").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("bad.csv:1") && msg.contains("cell 2"), "{msg}");
+    }
+
+    #[test]
+    fn typo_first_row_is_not_mistaken_for_a_header() {
+        // pre-IR parser skipped any first row with a non-numeric second
+        // cell as a "header" — a malformed data row vanished silently
+        let err = Workload::parse_conv_csv("bad", "bad.csv", "C1, x, 8, 3, 3, 4, 16, 1,\n")
+            .unwrap_err();
+        assert!(err.to_string().contains("cell 1"), "{err}");
+    }
+
+    #[test]
+    fn comments_and_header_are_skipped() {
+        let text = "# c\nLayer, M, N, K,\n# mid\ng, 8, 16, 32,\n";
+        let w = Workload::parse_gemm_csv("g", "g.csv", text).unwrap();
+        assert_eq!(w.nodes.len(), 1);
+        assert_eq!(w.nodes[0].op, Op::Gemm { m: 8, k: 32, n: 16 });
+    }
+
+    #[test]
+    fn empty_files_error() {
+        assert!(Workload::parse_conv_csv("e", "e.csv", "# only\n").is_err());
+        assert!(Workload::parse_gemm_csv("e", "e.csv", "Layer, M, N, K,\n").is_err());
+    }
+}

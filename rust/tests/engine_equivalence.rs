@@ -269,3 +269,162 @@ fn coordinator_shim_equals_engine_run() {
         assert_eq!(legacy.report, sim_rep, "{df}");
     }
 }
+
+// ------------------------------------------------------- workload IR pins
+//
+// The typed workload IR (`workload::Workload`) replaced the raw csv
+// parser as the front end; these tests pin the equivalences the redesign
+// promised: legacy Table-II csv lowers bit-identically, GEMM-csv and
+// conv-encoded GEMMs produce identical tiles/reports, and equivalent ops
+// share memo-cache entries.
+
+use scale_sim::config::workloads;
+use scale_sim::workload::{Conv2d, Workload};
+
+/// An independent mini-parser over the embedded csv text — the reference
+/// the IR lowering must reproduce exactly (deliberately NOT routed
+/// through any crate parsing code).
+fn reference_rows(text: &str) -> Vec<LayerShape> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cells: Vec<&str> = line.split(',').map(str::trim).filter(|c| !c.is_empty()).collect();
+        if i == 0 && cells[1].parse::<u64>().is_err() {
+            continue; // header
+        }
+        let n = |j: usize| cells[j].parse::<u64>().unwrap();
+        out.push(LayerShape::conv(cells[0], n(1), n(2), n(3), n(4), n(5), n(6), n(7)));
+    }
+    out
+}
+
+#[test]
+fn legacy_table_ii_csv_lowers_bit_identically() {
+    for (name, text) in [
+        ("resnet50", include_str!("../../topologies/resnet50.csv")),
+        ("mobilenetv1", include_str!("../../topologies/mobilenetv1.csv")),
+        ("ncf", include_str!("../../topologies/ncf.csv")),
+        ("transformer", include_str!("../../topologies/transformer.csv")),
+    ] {
+        let want = reference_rows(text);
+        assert!(!want.is_empty(), "{name}");
+        let via_ir = Workload::parse_conv_csv(name, name, text).unwrap().lower().unwrap();
+        assert_eq!(via_ir.layers, want, "{name}: IR lowering must be verbatim");
+        let via_shim = Topology::parse(name, text).unwrap();
+        assert_eq!(via_shim, via_ir, "{name}: Topology::parse is a shim over the IR");
+        let builtin = workloads::builtin(name).unwrap();
+        assert_eq!(builtin.layers, want, "{name}: embedded builtin agrees");
+    }
+}
+
+#[test]
+fn legacy_csv_reports_bit_identical_through_the_workload_path() {
+    // same layers, two front doors, one engine: reports must match the
+    // cache-free Simulator reference bit-for-bit
+    let topo = workloads::builtin("ncf").unwrap();
+    let cfg = ArchConfig { array_h: 32, array_w: 32, ..config::paper_default() };
+    let engine = Engine::new(cfg.clone());
+    let via_workload = engine
+        .run_workload(&Workload::from_topology(&topo))
+        .unwrap()
+        .report;
+    let reference = Simulator::new(cfg).run_topology(&topo);
+    assert_eq!(via_workload, reference);
+}
+
+#[test]
+fn gemm_workload_runs_end_to_end_on_all_three_backends() {
+    let wl = Workload::builder("g3")
+        .gemm("mm", 24, 40, 16)
+        .fc("fc", 4, 96, 32)
+        .build()
+        .unwrap();
+    let mut reports = Vec::new();
+    for kind in BackendKind::ALL {
+        let engine = Engine::builder().array(16, 16).backend(kind).build().unwrap();
+        reports.push(engine.run_workload(&wl).unwrap().report);
+    }
+    assert_eq!(reports[0], reports[1], "trace-driven deviates");
+    assert_eq!(reports[0], reports[2], "rtl deviates");
+    assert_eq!(reports[0].layers.len(), 2);
+}
+
+#[test]
+fn conv_and_equivalent_gemm_share_cache_entries() {
+    // pointwise Conv2d op and the equivalent Gemm op, one engine: the
+    // second lookup must be a cache hit with an identical report body
+    let wl = Workload::builder("pair")
+        .conv2d(
+            "pw",
+            Conv2d {
+                ifmap_h: 14,
+                ifmap_w: 14,
+                in_channels: 64,
+                out_channels: 96,
+                ..Conv2d::default()
+            },
+        )
+        .gemm("g", 14 * 14, 64, 96)
+        .build()
+        .unwrap();
+    let engine = Engine::new(config::paper_default());
+    let report = engine.run_workload(&wl).unwrap().report;
+    let stats = engine.cache_stats();
+    assert_eq!(stats.layer_sims, 1, "one tile simulated");
+    assert_eq!(stats.cache_hits, 1, "the twin is served from the cache");
+    assert_eq!(report.layers[0].timing, report.layers[1].timing);
+    assert_eq!(report.layers[0].dram, report.layers[1].dram);
+    assert_eq!(report.layers[0].energy, report.layers[1].energy);
+
+    // and across csv front ends: the GEMM re-encoding of ncf replays the
+    // conv-encoded builtin entirely from cache
+    let engine = Engine::new(config::paper_default());
+    engine.run_topology(&workloads::builtin("ncf").unwrap());
+    let sims = engine.cache_stats().layer_sims;
+    let gemm = workloads::builtin_gemm("ncf_gemm").unwrap().lower().unwrap();
+    engine.run_topology(&gemm);
+    assert_eq!(engine.cache_stats().layer_sims, sims, "no new sims for the GEMM re-encoding");
+}
+
+#[test]
+fn dilated_and_grouped_convs_lower_to_valid_tiles_on_all_backends() {
+    let wl = Workload::builder("exotic")
+        .conv2d(
+            "dil",
+            Conv2d {
+                ifmap_h: 20,
+                ifmap_w: 20,
+                in_channels: 4,
+                out_channels: 8,
+                kernel_h: 3,
+                kernel_w: 3,
+                dilation: 2,
+                ..Conv2d::default()
+            },
+        )
+        .conv2d(
+            "grp",
+            Conv2d {
+                ifmap_h: 12,
+                ifmap_w: 12,
+                in_channels: 8,
+                out_channels: 16,
+                kernel_h: 3,
+                kernel_w: 3,
+                groups: 2,
+                ..Conv2d::default()
+            },
+        )
+        .depthwise("dw", 16, 16, 8, 3, 1)
+        .pool("mp", 14, 14, 8, 2, 2)
+        .build()
+        .unwrap();
+    let topo = wl.lower().unwrap();
+    assert_eq!(topo.layers.len(), 5, "grouped conv expands to 2 tiles");
+    let a = Engine::builder().array(8, 8).build().unwrap();
+    let b = Engine::builder().array(8, 8).backend(BackendKind::TraceDriven).build().unwrap();
+    assert_eq!(a.run_topology(&topo), b.run_topology(&topo));
+}

@@ -224,3 +224,121 @@ fn prop_fold_schedule_partitions_work() {
         });
     }
 }
+
+// ---------------------------------------------------------------------
+// util::json round-trip fuzz (the wire format the serve protocol and the
+// persistent result store depend on)
+
+use scale_sim::util::json::{Json, MAX_DEPTH};
+
+/// Characters chosen to stress the escaper: quotes, backslashes, every
+/// short escape, a control char that needs \u00xx, '/', and multi-byte
+/// UTF-8 (incl. a non-BMP scalar that encoders may surrogate-escape).
+const STRING_POOL: &[char] = &[
+    'a', 'Z', '9', ' ', '"', '\\', '\n', '\r', '\t', '\u{8}', '\u{c}', '\u{1}', '\u{1f}', '/',
+    'é', '\u{2603}', '\u{1f600}',
+];
+
+fn random_string(rng: &mut Rng) -> String {
+    let len = rng.range(0, 12) as usize;
+    (0..len).map(|_| *rng.pick(STRING_POOL)).collect()
+}
+
+/// A random JSON document; `depth` bounds container nesting.
+fn random_json(rng: &mut Rng, depth: u64) -> Json {
+    // range is inclusive: 0..=4 are scalars; 5 (only when depth
+    // remains) recurses into a container
+    let top = if depth == 0 { 4 } else { 5 };
+    match rng.range(0, top) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_u64() % 2 == 0),
+        2 => Json::u64(rng.next_u64()),
+        3 => {
+            // finite f64 via a ratio of draws (never NaN/Inf)
+            let num = rng.range(0, 1 << 20) as f64 - (1 << 19) as f64;
+            let den = rng.range(1, 1 << 10) as f64;
+            Json::f64(num / den)
+        }
+        4 => Json::Str(random_string(rng)),
+        _ => {
+            let n = rng.range(0, 4) as usize;
+            if rng.next_u64() % 2 == 0 {
+                Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+            } else {
+                Json::Obj(
+                    (0..n)
+                        .map(|i| (format!("{}{i}", random_string(rng)), random_json(rng, depth - 1)))
+                        .collect(),
+                )
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_json_parse_write_parse_is_identity() {
+    forall(0x150u64, 400, |r: &mut Rng| r.next_u64(), |&seed: &u64| {
+        let mut rng = Rng::new(seed);
+        let doc = random_json(&mut rng, 5);
+        let text = doc.to_string();
+        let Ok(parsed) = Json::parse(&text) else { return false };
+        // value identity AND textual fixpoint: write(parse(write(v)))
+        // must equal write(v), or persisted stores would churn
+        parsed == doc && parsed.to_string() == text
+    });
+}
+
+#[test]
+fn prop_json_depth_cap_is_exact() {
+    // parse succeeds exactly up to MAX_DEPTH, whatever mix of [ and {
+    forall(0xDEEPu64, 80, |r: &mut Rng| r.range(1, (MAX_DEPTH + 8) as u64), |&d: &u64| {
+        let mut open = String::new();
+        let mut close = String::new();
+        for i in 0..d {
+            if i % 2 == 0 {
+                open.push('[');
+                close.insert(0, ']');
+            } else {
+                open.push_str("{\"k\":");
+                close.insert(0, '}');
+            }
+        }
+        open.push_str("null");
+        open.push_str(&close);
+        Json::parse(&open).is_ok() == (d as usize <= MAX_DEPTH)
+    });
+}
+
+#[test]
+fn prop_json_string_escapes_round_trip() {
+    forall(0xE5Cu64, 300, |r: &mut Rng| r.next_u64(), |&seed: &u64| {
+        let mut rng = Rng::new(seed);
+        let s = random_string(&mut rng);
+        let doc = Json::Str(s.clone());
+        match Json::parse(&doc.to_string()) {
+            Ok(back) => back.as_str() == Some(s.as_str()),
+            Err(_) => false,
+        }
+    });
+}
+
+#[test]
+fn prop_json_numbers_round_trip_bit_exactly() {
+    forall(0xF64u64, 500, |r: &mut Rng| r.next_u64(), |&seed: &u64| {
+        let mut rng = Rng::new(seed);
+        // u64 path
+        let u = rng.next_u64();
+        if Json::parse(&Json::u64(u).to_string()).ok().and_then(|j| j.as_u64()) != Some(u) {
+            return false;
+        }
+        // finite f64 path: compare bit patterns after the round trip
+        let x = f64::from_bits(rng.next_u64());
+        if !x.is_finite() {
+            return true; // JSON carries finite values only
+        }
+        match Json::parse(&Json::f64(x).to_string()).ok().and_then(|j| j.as_f64()) {
+            Some(back) => back.to_bits() == x.to_bits(),
+            None => false,
+        }
+    });
+}

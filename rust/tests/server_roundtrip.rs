@@ -171,3 +171,59 @@ fn memostats_since_across_a_reset_saturates() {
     assert_eq!((d.layer_sims, d.cache_hits), (10, 40));
     assert!((d.hit_rate() - 0.8).abs() < 1e-12);
 }
+
+// ---------------------------------------------------------------------
+// Typed-workload (operator IR) submissions
+
+/// A typed `ops` submission is lowered server-side; a pointwise conv op
+/// and a GEMM-workload twin submitted by another client share the
+/// server's memo cache (the conv <-> GEMM sharing claim, end-to-end).
+#[test]
+fn inline_ops_run_and_share_the_cache_with_gemm_twins() {
+    let handle = server::start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr();
+
+    let mut alice = Client::connect(addr).unwrap();
+    let ops = r#"{"req":"run","id":21,"workload":"typed","ops":[
+        {"type":"conv2d","name":"pw","ifmap_h":14,"ifmap_w":14,"in_channels":32,"out_channels":48,"kernel_h":1},
+        {"type":"fc","name":"fc","batch":4,"in_features":96,"out_features":24},
+        {"type":"pool","name":"mp","ifmap_h":14,"ifmap_w":14,"channels":48,"window_h":2}
+    ]}"#
+    .replace('\n', " ");
+    let events = alice.request(&ops).unwrap();
+    let report = report_of(&events);
+    assert_eq!(report.layers.len(), 3);
+    // the pointwise conv arrived as the canonical GEMM tile
+    assert!(report.layers[0].layer.is_gemm());
+    assert_eq!(report.layers[0].layer.gemm_view(), (196, 32, 48));
+    assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+    let sims = alice.stats().unwrap().memo.layer_sims;
+
+    // a second client submits the GEMM twin of the pointwise conv
+    let mut bob = Client::connect(addr).unwrap();
+    let twin = r#"{"req":"run","id":22,"ops":[{"type":"gemm","name":"g","m":196,"k":32,"n":48}]}"#;
+    let twin_report = report_of(&bob.request(twin).unwrap());
+    let stats = bob.stats().unwrap();
+    assert_eq!(stats.memo.layer_sims, sims, "the GEMM twin must not re-simulate");
+    assert_eq!(twin_report.layers[0].timing, report.layers[0].timing);
+
+    // malformed ops are rejected at admission with an error event
+    let bad = bob
+        .request(r#"{"req":"run","id":23,"ops":[{"type":"gemm","name":"z","m":0,"k":1,"n":1}]}"#)
+        .unwrap();
+    assert_eq!(bad[0].str_field("event"), Some("error"));
+
+    handle.shutdown();
+}
+
+/// Built-in GEMM workloads resolve by name, like the conv family.
+#[test]
+fn builtin_gemm_workload_runs_by_name() {
+    let handle = server::start(ServeOpts::default()).unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let events = c.request(r#"{"req":"run","id":5,"workload":"attention"}"#).unwrap();
+    let report = report_of(&events);
+    assert!(report.layers.iter().all(|l| l.layer.is_gemm()));
+    assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+    handle.shutdown();
+}
