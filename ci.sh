@@ -10,6 +10,12 @@
 #   - serve smoke: start the TCP job server on an ephemeral port with a
 #     state dir, one client round trip, a /stats check, clean protocol
 #     shutdown (queue drained + store flushed).
+#   - dse smoke: tiny campaign through `scale-sim dse run`, a simulated
+#     kill (--max-points) + `dse resume`, byte-identical `dse report`
+#     frontiers, and a >=50% cache hit rate on the resumed half.
+# The default `cargo test -q` tier includes the golden regression
+# suite (rust/tests/golden.rs), the workload-IR property suite, and the
+# server stress suite.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -66,11 +72,40 @@ awk -v h="$HIT" 'BEGIN { exit (h >= 0.5) ? 0 : 1 }' \
   || { echo "conv<->gemm cache sharing broken: hit rate $HIT"; exit 1; }
 echo "ok (hit rate $HIT)"
 
-echo "== smoke: help lists the serve subcommands =="
-for sub in serve client bench-serve; do
+echo "== smoke: help lists the serve + dse subcommands =="
+for sub in serve client bench-serve dse; do
   "$BIN" --help | grep -q "scale-sim $sub" || { echo "missing $sub in --help"; exit 1; }
 done
 echo "ok"
+
+echo "== smoke: dse campaign (run, kill+resume, frontier identity, cache hit rate) =="
+DSE_A=$(mktemp -d)
+DSE_B=$(mktemp -d)
+# tiny 2 dataflows x 2 arrays x 2 bandwidths campaign on ncf
+cat > "$DSE_A/spec.json" <<'EOF'
+{"name":"ci","workloads":["ncf"],"dataflows":["os","ws"],"arrays":["16x16","32x32"],"sram_kb":[64],"dram_bw":[4,16],"energy":"28nm"}
+EOF
+"$BIN" dse run --spec "$DSE_A/spec.json" --state-dir "$DSE_A/state" \
+  --bench "$DSE_A/BENCH_dse.json" > "$DSE_A/full.txt"
+grep -q "Pareto frontier — runtime vs energy" "$DSE_A/full.txt"
+# interrupted twin: stop after half the grid ("kill"), then resume
+"$BIN" dse run --spec "$DSE_A/spec.json" --state-dir "$DSE_B/state" --max-points 4 \
+  > "$DSE_B/cut.txt"
+grep -q "campaign incomplete" "$DSE_B/cut.txt"
+"$BIN" dse resume --state-dir "$DSE_B/state" --bench "$DSE_B/BENCH_dse.json" > /dev/null
+# frontier identity: both journals must print byte-identical reports
+"$BIN" dse report --state-dir "$DSE_A/state" > "$DSE_A/report.txt"
+"$BIN" dse report --state-dir "$DSE_B/state" > "$DSE_B/report.txt"
+cmp "$DSE_A/report.txt" "$DSE_B/report.txt" \
+  || { echo "kill+resume frontier differs from uninterrupted run"; exit 1; }
+grep -q '"frontier_runtime_energy"' "$DSE_B/BENCH_dse.json"
+# the resumed half must be served >=50% from the shared/warm caches
+HIT=$(grep -o '"cache_hit_rate": *[0-9.e-]*' "$DSE_B/BENCH_dse.json" | grep -o '[0-9.e-]*$')
+awk -v h="$HIT" 'BEGIN { exit (h >= 0.5) ? 0 : 1 }' \
+  || { echo "resumed dse half hit rate $HIT < 0.5"; exit 1; }
+cat "$DSE_B/BENCH_dse.json"
+rm -rf "$DSE_A" "$DSE_B"
+echo "ok (resumed-half hit rate $HIT)"
 
 echo "== smoke: serve round trip (server + client + /stats + shutdown) =="
 SERVE_STATE=$(mktemp -d)

@@ -1,0 +1,520 @@
+//! Campaign execution — local pool or sharded over `scale-sim serve` —
+//! plus frontier assembly and the `BENCH_dse.json` writer.
+//!
+//! Both executors evaluate the same [`super::evaluate_point`] function
+//! over the same enumeration, journal every completed point as it
+//! finishes, and compute the final frontier from the full (restored +
+//! fresh) point set, so local, sharded, interrupted and resumed
+//! campaigns all converge to **bit-identical** frontiers:
+//!
+//! * **Local** — [`crate::sweep::parallel_map`] over one memoizing
+//!   engine; with a state dir the engine additionally warm-starts from
+//!   (and flushes to) a [`crate::server::store::ResultStore`], so a
+//!   resumed campaign re-enters with the killed run's cache warmth.
+//! * **Serve** — the pending indices split round-robin into shards,
+//!   each submitted as a `{"req":"dse"}` job to a running server
+//!   ([`crate::server::proto`]); every shard streams its points back
+//!   while the server's ONE process-wide memo cache de-duplicates
+//!   layer simulations *across* shards.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::engine::{BackendKind, Engine, MemoStats, SweepStats};
+use crate::server::store::ResultStore;
+use crate::sweep::parallel_map;
+use crate::util::bench::write_json;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::journal::Journal;
+use super::pareto::pareto_front;
+use super::{evaluate_point, Campaign, CampaignPoint, CompletedPoint};
+
+/// Marker file recording the energy preset the state dir's result store
+/// was priced under (absent = the default "28nm").
+const ENERGY_MARKER: &str = "energy.preset";
+
+/// How a campaign's pending points execute.
+#[derive(Clone, Debug)]
+pub enum Exec {
+    /// In-process worker pool over one memoizing engine.
+    Local { threads: usize },
+    /// Round-robin shards submitted to a running `scale-sim serve`.
+    Serve { addr: String, shards: usize },
+}
+
+/// Execution options shared by `run` and `resume`.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    pub exec: Exec,
+    /// Journal (and result-store) directory; `None` runs in memory.
+    pub state_dir: Option<PathBuf>,
+    /// Stop after this many evaluated points (the campaign stays
+    /// incomplete and resumable) — the deterministic stand-in for a
+    /// mid-campaign kill in tests and CI.
+    pub max_points: Option<usize>,
+    /// Fidelity backend for local execution (cycle-exact with every
+    /// other backend, so the frontier is backend-independent).
+    pub backend: BackendKind,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        RunOpts {
+            exec: Exec::Local { threads: crate::sweep::default_threads() },
+            state_dir: None,
+            max_points: None,
+            backend: BackendKind::Analytical,
+        }
+    }
+}
+
+/// Result of one campaign invocation.
+#[derive(Clone, Debug)]
+pub struct CampaignOutcome {
+    pub campaign: Campaign,
+    /// Every known completed point, sorted by index (restored + fresh).
+    pub completed: Vec<CompletedPoint>,
+    /// Points evaluated by this invocation.
+    pub ran: usize,
+    /// Points restored from the journal.
+    pub restored: usize,
+    /// Execution statistics for this invocation only (`points == ran`;
+    /// memo counters are zero for serve execution — the cache lives in
+    /// the server process, visible via `scale-sim client stats`).
+    pub stats: SweepStats,
+    /// Positions into `completed` of the runtime-vs-energy frontier.
+    pub frontier_runtime_energy: Vec<usize>,
+    /// Positions into `completed` of the runtime-vs-peak-DRAM-bandwidth
+    /// frontier.
+    pub frontier_runtime_bw: Vec<usize>,
+}
+
+impl CampaignOutcome {
+    /// True when every grid point has been evaluated.
+    pub fn is_complete(&self) -> bool {
+        self.completed.len() == self.campaign.len()
+    }
+
+    /// Write the `BENCH_dse.json` artifact: campaign coverage, frontier
+    /// sizes, and the shared sweep-stat fields (wall clock, memoization
+    /// counters, cache hit rate — the hit rate of *this* invocation,
+    /// which for a resumed campaign is the resumed half alone).
+    pub fn write_bench_json(&self, path: &Path) -> std::io::Result<()> {
+        let mut fields: Vec<(&str, f64)> = vec![
+            ("points_total", self.campaign.len() as f64),
+            ("points_run", self.ran as f64),
+            ("points_restored", self.restored as f64),
+            ("frontier_runtime_energy", self.frontier_runtime_energy.len() as f64),
+            ("frontier_runtime_bw", self.frontier_runtime_bw.len() as f64),
+        ];
+        for f in self.stats.bench_fields() {
+            // "points" would duplicate points_run under an ambiguous name
+            if f.0 != "points" {
+                fields.push(f);
+            }
+        }
+        write_json(path, &fields)
+    }
+}
+
+/// The two campaign frontiers over a completed-point set: positions of
+/// the non-dominated points under (total cycles, energy) and
+/// (total cycles, stall-free peak DRAM bandwidth), both minimized.
+pub fn frontiers(completed: &[CompletedPoint]) -> (Vec<usize>, Vec<usize>) {
+    let runtime_energy: Vec<(f64, f64)> = completed
+        .iter()
+        .map(|c| (c.metrics.total_cycles() as f64, c.metrics.energy_mj))
+        .collect();
+    let runtime_bw: Vec<(f64, f64)> = completed
+        .iter()
+        .map(|c| (c.metrics.total_cycles() as f64, c.metrics.peak_dram_bw))
+        .collect();
+    (pareto_front(&runtime_energy), pareto_front(&runtime_bw))
+}
+
+/// Start a campaign from scratch. With a state dir a fresh journal is
+/// created (an existing one is refused — use [`resume_campaign`]).
+pub fn run_campaign(campaign: Campaign, opts: &RunOpts) -> Result<CampaignOutcome> {
+    campaign.validate()?;
+    let journal = match &opts.state_dir {
+        Some(dir) => Some(Journal::create(dir, &campaign)?),
+        None => None,
+    };
+    let store_dir = opts.state_dir.clone();
+    execute(campaign, journal, Vec::new(), opts, store_dir)
+}
+
+/// Continue a journaled campaign: restore completed points, evaluate
+/// only the missing ones. The journal's directory doubles as the
+/// result-store directory (cache warmth), regardless of
+/// `opts.state_dir`.
+pub fn resume_campaign(state_dir: &Path, opts: &RunOpts) -> Result<CampaignOutcome> {
+    let (journal, campaign, done) = Journal::resume(state_dir)?;
+    execute(campaign, Some(journal), done, opts, Some(state_dir.to_path_buf()))
+}
+
+/// Read a journal without simulating anything — the `dse report` path.
+pub fn report_campaign(state_dir: &Path) -> Result<CampaignOutcome> {
+    let (_, campaign, done) = Journal::resume(state_dir)?;
+    Ok(assemble(campaign, done, 0, SweepStats {
+        points: 0,
+        wall: std::time::Duration::ZERO,
+        memo: MemoStats::default(),
+    }))
+}
+
+fn execute(
+    campaign: Campaign,
+    journal: Option<Journal>,
+    done: Vec<CompletedPoint>,
+    opts: &RunOpts,
+    store_dir: Option<PathBuf>,
+) -> Result<CampaignOutcome> {
+    let done_idx: HashSet<usize> = done.iter().map(|c| c.point.index).collect();
+    let mut pending: Vec<CampaignPoint> = (0..campaign.len())
+        .filter(|i| !done_idx.contains(i))
+        .map(|i| campaign.point(i))
+        .collect();
+    if let Some(cap) = opts.max_points {
+        pending.truncate(cap);
+    }
+
+    let t0 = Instant::now();
+    let (fresh, memo) = match &opts.exec {
+        Exec::Local { threads } => {
+            let topos = campaign.resolve_workloads(false)?;
+            let engine = Engine::builder()
+                .backend(opts.backend)
+                .energy_model(campaign.energy_model()?)
+                .build()?;
+            // Warm-start from the state dir's result store, but ONLY
+            // when it was written under this campaign's energy preset:
+            // cached reports embed energy numbers and the model is not
+            // part of the cache key, so a foreign store (different
+            // preset, or a serve dir priced at the default) would
+            // silently corrupt the energy frontier. A marker file
+            // records the pricing model; absent means the default
+            // ("28nm" — what `scale-sim serve` always prices at).
+            let store = match &store_dir {
+                Some(dir) => {
+                    let s = ResultStore::open(dir)?;
+                    let priced_at = std::fs::read_to_string(dir.join(ENERGY_MARKER))
+                        .map(|t| t.trim().to_string())
+                        .unwrap_or_else(|_| "28nm".to_string());
+                    if priced_at == campaign.energy {
+                        s.load_into(&engine)?;
+                    }
+                    Some(s)
+                }
+                None => None,
+            };
+            let before = engine.cache_stats();
+            let journal = journal.as_ref();
+            let fresh: Vec<CompletedPoint> =
+                parallel_map(&pending, (*threads).max(1), |p| {
+                    let cp = CompletedPoint {
+                        point: p.clone(),
+                        metrics: evaluate_point(&engine, &topos[&p.workload], p),
+                    };
+                    if let Some(j) = journal {
+                        if let Err(e) = j.append(&cp) {
+                            eprintln!("dse: journal append failed: {e}");
+                        }
+                    }
+                    cp
+                });
+            let memo = engine.cache_stats().since(&before);
+            if let Some(s) = &store {
+                // persist cache warmth so a resumed campaign re-enters warm
+                let _ = s.flush_from(&engine);
+                if let Some(dir) = &store_dir {
+                    let _ = std::fs::write(dir.join(ENERGY_MARKER), &campaign.energy);
+                }
+            }
+            (fresh, memo)
+        }
+        Exec::Serve { addr, shards } => {
+            let fresh = serve_exec(&campaign, &pending, addr, *shards, journal.as_ref())?;
+            (fresh, MemoStats::default())
+        }
+    };
+    let stats = SweepStats { points: fresh.len(), wall: t0.elapsed(), memo };
+
+    let ran = fresh.len();
+    let mut completed = done;
+    completed.extend(fresh);
+    Ok(assemble(campaign, completed, ran, stats))
+}
+
+fn assemble(
+    campaign: Campaign,
+    mut completed: Vec<CompletedPoint>,
+    ran: usize,
+    stats: SweepStats,
+) -> CampaignOutcome {
+    completed.sort_by_key(|c| c.point.index);
+    let restored = completed.len() - ran;
+    let (frontier_runtime_energy, frontier_runtime_bw) = frontiers(&completed);
+    CampaignOutcome {
+        campaign,
+        completed,
+        ran,
+        restored,
+        stats,
+        frontier_runtime_energy,
+        frontier_runtime_bw,
+    }
+}
+
+/// Submit the pending points to a running server as round-robin shards,
+/// one connection per shard, and collect the streamed results.
+fn serve_exec(
+    campaign: &Campaign,
+    pending: &[CampaignPoint],
+    addr: &str,
+    shards: usize,
+    journal: Option<&Journal>,
+) -> Result<Vec<CompletedPoint>> {
+    if pending.is_empty() {
+        return Ok(Vec::new());
+    }
+    let shards = shards.clamp(1, pending.len());
+    let spec = campaign.to_json();
+    let mut parts: Vec<Vec<usize>> = vec![Vec::new(); shards];
+    for (i, p) in pending.iter().enumerate() {
+        parts[i % shards].push(p.index);
+    }
+
+    let results: Mutex<Vec<CompletedPoint>> = Mutex::new(Vec::with_capacity(pending.len()));
+    let errors: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for (si, indices) in parts.iter().enumerate() {
+            let (spec, results, errors) = (&spec, &results, &errors);
+            s.spawn(move || {
+                let outcome = run_shard(spec, si, indices, addr, journal);
+                match outcome {
+                    Ok(mut v) => results.lock().unwrap().append(&mut v),
+                    Err(e) => errors.lock().unwrap().push(format!("shard {si}: {e}")),
+                }
+            });
+        }
+    });
+    let errors = errors.into_inner().unwrap();
+    if !errors.is_empty() {
+        let hint = if journal.is_some() {
+            "; completed points are journaled — `dse resume` picks up from them"
+        } else {
+            "; no --state-dir, so completed points were not preserved"
+        };
+        return Err(Error::Dse(format!(
+            "dse-over-serve failed ({}){hint}",
+            errors.join("; ")
+        )));
+    }
+    Ok(results.into_inner().unwrap())
+}
+
+fn run_shard(
+    spec: &Json,
+    shard: usize,
+    indices: &[usize],
+    addr: &str,
+    journal: Option<&Journal>,
+) -> std::result::Result<Vec<CompletedPoint>, String> {
+    let mut client =
+        crate::server::Client::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+    let req = Json::obj(vec![
+        ("req", Json::str("dse")),
+        ("id", Json::u64(shard as u64)),
+        ("campaign", spec.clone()),
+        ("indices", Json::Arr(indices.iter().map(|&i| Json::u64(i as u64)).collect())),
+    ])
+    .to_string();
+    client.send(&req).map_err(|e| e.to_string())?;
+    let mut out = Vec::with_capacity(indices.len());
+    loop {
+        let ev = client.recv().map_err(|e| e.to_string())?;
+        match ev.str_field("event") {
+            Some("dse_point") => {
+                let cp = CompletedPoint::from_json(&ev)?;
+                if let Some(j) = journal {
+                    if let Err(e) = j.append(&cp) {
+                        eprintln!("dse: journal append failed: {e}");
+                    }
+                }
+                out.push(cp);
+            }
+            Some("done") => return Ok(out),
+            Some("error") => {
+                return Err(ev.str_field("error").unwrap_or("server error").to_string())
+            }
+            _ => return Err(format!("unexpected server event: {ev}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Dataflow;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("scale_sim_dse_exec_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn tiny() -> Campaign {
+        Campaign {
+            name: "t".into(),
+            workloads: vec!["ncf".into()],
+            dataflows: vec![Dataflow::Os, Dataflow::Ws],
+            arrays: vec![(16, 16), (32, 32)],
+            sram_kb: vec![64],
+            dram_bw: vec![4.0, 16.0],
+            energy: "28nm".into(),
+        }
+    }
+
+    fn local(threads: usize) -> RunOpts {
+        RunOpts { exec: Exec::Local { threads }, ..RunOpts::default() }
+    }
+
+    #[test]
+    fn in_memory_run_completes_with_nonempty_frontiers() {
+        let out = run_campaign(tiny(), &local(2)).unwrap();
+        assert!(out.is_complete());
+        assert_eq!(out.completed.len(), 8);
+        assert_eq!((out.ran, out.restored), (8, 0));
+        assert!(!out.frontier_runtime_energy.is_empty());
+        assert!(!out.frontier_runtime_bw.is_empty());
+        // completed is index-sorted, so frontier positions == indices
+        for w in out.completed.windows(2) {
+            assert!(w[0].point.index < w[1].point.index);
+        }
+        // ncf repeats a layer shape and the bandwidth axis shares configs:
+        // the memoizing engine must see hits
+        assert!(out.stats.memo.cache_hits > 0);
+    }
+
+    #[test]
+    fn interrupted_then_resumed_matches_uninterrupted_bit_for_bit() {
+        let full_dir = tmp_dir("full");
+        let cut_dir = tmp_dir("cut");
+
+        let full = run_campaign(
+            tiny(),
+            &RunOpts { state_dir: Some(full_dir.clone()), ..local(2) },
+        )
+        .unwrap();
+        assert!(full.is_complete());
+
+        // "kill" after 3 points, then resume
+        let cut = run_campaign(
+            tiny(),
+            &RunOpts {
+                state_dir: Some(cut_dir.clone()),
+                max_points: Some(3),
+                ..local(2)
+            },
+        )
+        .unwrap();
+        assert!(!cut.is_complete());
+        assert_eq!(cut.ran, 3);
+
+        let resumed = resume_campaign(&cut_dir, &local(2)).unwrap();
+        assert!(resumed.is_complete());
+        assert_eq!((resumed.ran, resumed.restored), (5, 3));
+        assert_eq!(resumed.completed, full.completed, "point metrics must be bit-identical");
+        assert_eq!(resumed.frontier_runtime_energy, full.frontier_runtime_energy);
+        assert_eq!(resumed.frontier_runtime_bw, full.frontier_runtime_bw);
+
+        // report reads the same frontier without simulating
+        let report = report_campaign(&cut_dir).unwrap();
+        assert_eq!(report.completed, full.completed);
+        assert_eq!((report.ran, report.restored), (0, 8));
+
+        std::fs::remove_dir_all(&full_dir).unwrap();
+        std::fs::remove_dir_all(&cut_dir).unwrap();
+    }
+
+    #[test]
+    fn run_refuses_to_restart_a_journaled_campaign() {
+        let dir = tmp_dir("refuse");
+        let opts = RunOpts { state_dir: Some(dir.clone()), ..local(1) };
+        run_campaign(tiny(), &opts).unwrap();
+        assert!(run_campaign(tiny(), &opts).is_err(), "run must not clobber a journal");
+        // but resume on a complete campaign is a no-op that still reports
+        let resumed = resume_campaign(&dir, &local(1)).unwrap();
+        assert_eq!(resumed.ran, 0);
+        assert!(resumed.is_complete());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bench_json_carries_coverage_and_frontier_sizes() {
+        let dir = tmp_dir("bench");
+        let out = run_campaign(tiny(), &local(1)).unwrap();
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_dse.json");
+        out.write_bench_json(&path).unwrap();
+        let j = Json::parse(std::fs::read_to_string(&path).unwrap().trim()).unwrap();
+        assert_eq!(j.u64_field("points_total"), Some(8));
+        assert_eq!(j.u64_field("points_run"), Some(8));
+        assert_eq!(j.u64_field("points_restored"), Some(0));
+        assert!(j.f64_field("cache_hit_rate").is_some());
+        assert!(j.u64_field("frontier_runtime_energy").unwrap() >= 1);
+        assert!(j.get("points").is_none(), "ambiguous duplicate of points_run");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn warm_store_is_skipped_across_energy_presets() {
+        // a state dir whose result store was priced under a different
+        // energy model must cold-start (cached reports embed energy and
+        // the model is not keyed) — the frontier must match a fresh run
+        let dir = tmp_dir("energy_guard");
+        let mut c = tiny();
+        run_campaign(c.clone(), &RunOpts { state_dir: Some(dir.clone()), ..local(1) })
+            .unwrap();
+        // same axes, different pricing: journal must go, store may stay
+        std::fs::remove_file(dir.join(crate::dse::journal::JOURNAL_FILE)).unwrap();
+        c.energy = "7nm".into();
+        let guarded = run_campaign(
+            c.clone(),
+            &RunOpts { state_dir: Some(dir.clone()), ..local(1) },
+        )
+        .unwrap();
+        let fresh = run_campaign(c, &local(1)).unwrap();
+        assert_eq!(guarded.completed, fresh.completed, "28nm-priced warm entries leaked");
+        assert_eq!(
+            guarded.stats.memo.layer_sims, fresh.stats.memo.layer_sims,
+            "mismatched store must not pre-warm"
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resumed_half_is_served_from_shared_and_warm_caches() {
+        // the CI smoke's >=50% assertion, as a unit test: run half the
+        // campaign, resume, and require a >=50% hit rate on the rest
+        let dir = tmp_dir("hitrate");
+        let opts =
+            RunOpts { state_dir: Some(dir.clone()), max_points: Some(4), ..local(2) };
+        run_campaign(tiny(), &opts).unwrap();
+        let resumed = resume_campaign(&dir, &local(2)).unwrap();
+        assert!(resumed.is_complete());
+        assert!(
+            resumed.stats.hit_rate() >= 0.5,
+            "resumed half hit rate {:.3} < 0.5 ({:?})",
+            resumed.stats.hit_rate(),
+            resumed.stats.memo
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

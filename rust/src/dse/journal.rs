@@ -1,0 +1,272 @@
+//! The campaign checkpoint/resume journal.
+//!
+//! Layout under a state directory: `campaign.jsonl`, one JSON line per
+//! record. The first line is the header,
+//!
+//! ```text
+//! {"campaign":{...canonical spec...},"fingerprint":"9f2c..."}
+//! ```
+//!
+//! and every subsequent line is one completed point,
+//!
+//! ```text
+//! {"point":{"index":17,...},"metrics":{...}}
+//! ```
+//!
+//! appended **and flushed** as soon as the point finishes, so a killed
+//! campaign loses at most the points that were still in flight. On
+//! resume the header's fingerprint must match the spec it carries
+//! (refusing a journal whose spec was edited), completed lines are
+//! restored — numbers round-trip exactly ([`crate::util::json`]), so
+//! restored metrics are bit-identical to freshly computed ones — and
+//! only the missing indices re-simulate. A truncated trailing line
+//! (the kill arrived mid-write) is skipped, costing one re-simulation,
+//! never a failed resume.
+
+use std::collections::HashSet;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::{Campaign, CompletedPoint};
+
+/// Journal file name inside a campaign state directory.
+pub const JOURNAL_FILE: &str = "campaign.jsonl";
+
+/// Append-only campaign journal (thread-safe: workers append completed
+/// points concurrently; order on disk is completion order, identity is
+/// the point index).
+pub struct Journal {
+    path: PathBuf,
+    file: Mutex<File>,
+}
+
+impl Journal {
+    /// Start a fresh journal under `dir` (creating the directory).
+    /// Refuses to overwrite an existing journal — `dse resume` continues
+    /// one, deleting the file starts over.
+    pub fn create(dir: &Path, campaign: &Campaign) -> Result<Journal> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(JOURNAL_FILE);
+        if path.exists() {
+            return Err(Error::Dse(format!(
+                "{} already holds a campaign journal; continue it with `scale-sim dse \
+                 resume --state-dir {}` or remove the file to start over",
+                path.display(),
+                dir.display()
+            )));
+        }
+        let mut file = OpenOptions::new().create_new(true).append(true).open(&path)?;
+        let header = Json::obj(vec![
+            ("campaign", campaign.to_json()),
+            ("fingerprint", Json::str(campaign.fingerprint())),
+        ]);
+        file.write_all(header.to_string().as_bytes())?;
+        file.write_all(b"\n")?;
+        file.flush()?;
+        Ok(Journal { path, file: Mutex::new(file) })
+    }
+
+    /// Open an existing journal: returns the journal (in append mode),
+    /// the campaign its header carries, and every restorable completed
+    /// point (deduplicated by index; lines that fail to parse or do not
+    /// match the campaign's enumeration are skipped — they cost a
+    /// re-simulation, not a failure).
+    pub fn resume(dir: &Path) -> Result<(Journal, Campaign, Vec<CompletedPoint>)> {
+        let path = dir.join(JOURNAL_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(Error::Dse(format!(
+                    "no campaign journal under {} — start one with `scale-sim dse run \
+                     --state-dir {}`",
+                    dir.display(),
+                    dir.display()
+                )))
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let mut lines = text.lines();
+        let header = lines
+            .next()
+            .ok_or_else(|| Error::Dse(format!("{}: empty journal", path.display())))?;
+        let hj = Json::parse(header)
+            .map_err(|e| Error::Dse(format!("{}: bad journal header: {e}", path.display())))?;
+        let campaign = Campaign::from_json(
+            hj.get("campaign")
+                .ok_or_else(|| Error::Dse(format!("{}: header lacks \"campaign\"", path.display())))?,
+        )
+        .map_err(|e| Error::Dse(format!("{}: bad campaign spec: {e}", path.display())))?;
+        if hj.str_field("fingerprint") != Some(campaign.fingerprint().as_str()) {
+            return Err(Error::Dse(format!(
+                "{}: fingerprint mismatch — the journal belongs to a different campaign",
+                path.display()
+            )));
+        }
+        campaign.validate()?;
+
+        let total = campaign.len();
+        let mut done = Vec::new();
+        let mut seen: HashSet<usize> = HashSet::new();
+        for line in lines {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Ok(j) = Json::parse(line) else {
+                continue; // truncated tail from a kill: re-simulate that point
+            };
+            let Ok(cp) = CompletedPoint::from_json(&j) else {
+                continue;
+            };
+            // the entry must be the campaign's own enumeration of its index
+            if cp.point.index >= total || campaign.point(cp.point.index) != cp.point {
+                continue;
+            }
+            if seen.insert(cp.point.index) {
+                done.push(cp);
+            }
+        }
+        let file = OpenOptions::new().append(true).open(&path)?;
+        Ok((Journal { path, file: Mutex::new(file) }, campaign, done))
+    }
+
+    /// Append one completed point (one line, flushed before returning).
+    pub fn append(&self, cp: &CompletedPoint) -> Result<()> {
+        let mut line = cp.to_json().to_string();
+        line.push('\n');
+        let mut f = self.file.lock().unwrap();
+        f.write_all(line.as_bytes())?;
+        f.flush()?;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::dse::evaluate_point;
+    use crate::engine::Engine;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("scale_sim_dse_journal_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn campaign() -> Campaign {
+        Campaign {
+            name: "j".into(),
+            workloads: vec!["ncf".into()],
+            dataflows: vec![crate::Dataflow::Os],
+            arrays: vec![(16, 16)],
+            sram_kb: vec![64],
+            dram_bw: vec![4.0, 16.0],
+            energy: "28nm".into(),
+        }
+    }
+
+    fn completed(c: &Campaign, idx: usize) -> CompletedPoint {
+        let topos = c.resolve_workloads(true).unwrap();
+        let engine = Engine::new(config::paper_default());
+        let point = c.point(idx);
+        let metrics = evaluate_point(&engine, &topos["ncf"], &point);
+        CompletedPoint { point, metrics }
+    }
+
+    #[test]
+    fn create_append_resume_round_trips() {
+        let dir = tmp_dir("roundtrip");
+        let c = campaign();
+        let j = Journal::create(&dir, &c).unwrap();
+        let cp = completed(&c, 1);
+        j.append(&cp).unwrap();
+        drop(j);
+
+        let (j2, back, done) = Journal::resume(&dir).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0], cp, "restored point must be bit-identical");
+        // the reopened journal still appends
+        j2.append(&completed(&c, 0)).unwrap();
+        drop(j2);
+        let (_, _, done) = Journal::resume(&dir).unwrap();
+        assert_eq!(done.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_refuses_an_existing_journal() {
+        let dir = tmp_dir("refuse");
+        let c = campaign();
+        Journal::create(&dir, &c).unwrap();
+        let err = Journal::create(&dir, &c).unwrap_err();
+        assert!(err.to_string().contains("resume"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_skips_truncated_tail_and_duplicates() {
+        let dir = tmp_dir("truncated");
+        let c = campaign();
+        let j = Journal::create(&dir, &c).unwrap();
+        let cp = completed(&c, 0);
+        j.append(&cp).unwrap();
+        j.append(&cp).unwrap(); // duplicate index: restored once
+        drop(j);
+        // simulate a kill mid-write: a partial trailing line
+        let mut text = std::fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
+        text.push_str("{\"point\":{\"index\":1,\"work");
+        std::fs::write(dir.join(JOURNAL_FILE), text).unwrap();
+
+        let (_, _, done) = Journal::resume(&dir).unwrap();
+        assert_eq!(done.len(), 1, "duplicate deduped, truncated tail skipped");
+        assert_eq!(done[0].point.index, 0);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_rejects_missing_dir_and_edited_header() {
+        let missing = tmp_dir("missing");
+        assert!(Journal::resume(&missing).is_err());
+
+        let dir = tmp_dir("edited");
+        let c = campaign();
+        Journal::create(&dir, &c).unwrap();
+        // edit the spec inside the header without updating the fingerprint
+        let text = std::fs::read_to_string(dir.join(JOURNAL_FILE)).unwrap();
+        let edited = text.replace("\"ncf\"", "\"resnet50\"");
+        assert_ne!(edited, text);
+        std::fs::write(dir.join(JOURNAL_FILE), edited).unwrap();
+        let err = Journal::resume(&dir).unwrap_err();
+        assert!(err.to_string().contains("fingerprint"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_drops_entries_from_a_different_enumeration() {
+        let dir = tmp_dir("foreign");
+        let c = campaign();
+        let j = Journal::create(&dir, &c).unwrap();
+        // a forged entry whose coordinates disagree with point(0)
+        let mut forged = completed(&c, 0);
+        forged.point.array_h = 99;
+        j.append(&forged).unwrap();
+        j.append(&completed(&c, 1)).unwrap();
+        drop(j);
+        let (_, _, done) = Journal::resume(&dir).unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].point.index, 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

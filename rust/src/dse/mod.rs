@@ -1,0 +1,660 @@
+//! Resumable design-space-exploration campaigns — the `scale-sim dse`
+//! subsystem.
+//!
+//! The paper's headline contribution is not one simulation but the §IV
+//! sweeps: bandwidth, dataflow and array aspect ratio explored across
+//! vision/speech/text/game workloads, reported as runtime **and energy**
+//! trade-offs. [`crate::engine::SweepGrid`] runs cartesian grids, but a
+//! grid run is ephemeral — nothing survives a crash, nothing prunes the
+//! dominated points, nothing distributes the work. This module adds the
+//! campaign layer on top of the engine:
+//!
+//! * [`Campaign`] — a declarative spec of the axes (workloads x dataflow
+//!   x array shape x scratchpad KB x DRAM bytes/cycle), buildable in
+//!   code or parsed from a small JSON file. Points are enumerated in a
+//!   fixed nested order (workload outer, bandwidth innermost), so every
+//!   point has a stable index — the unit of checkpointing and sharding.
+//! * [`evaluate_point`] — the objective extractor: stall-free runtime
+//!   from the engine's memoized [`crate::engine::Engine::run_layer_with`]
+//!   path, stall cycles from the finite-bandwidth replay
+//!   ([`crate::memory::stall`]) at the point's DRAM bandwidth, energy
+//!   from [`crate::energy`], the stall-free peak/avg DRAM bandwidth
+//!   requirement, and row-hit statistics from the banked DRAM substrate
+//!   ([`crate::dram`]).
+//! * [`pareto::pareto_front`] — dominated-point pruning; the campaign
+//!   reports the runtime-vs-energy and runtime-vs-peak-bandwidth
+//!   frontiers (Fig 6/7-style conclusions, but as frontiers rather than
+//!   single curves).
+//! * [`journal::Journal`] — a checkpoint/resume log: with a state
+//!   directory every completed point is appended (and fsync-flushed) to
+//!   `campaign.jsonl`; a killed campaign restarts with `dse resume` and
+//!   re-simulates **only** the unfinished points, and because
+//!   [`crate::util::json`] round-trips every number exactly, the
+//!   resumed frontier is bit-identical to an uninterrupted run's.
+//! * [`exec`] — pluggable execution: a local
+//!   [`crate::sweep::parallel_map`] pool over one memoizing engine, or
+//!   shards submitted as jobs to a running `scale-sim serve`, where the
+//!   server's ONE process-wide memo cache is shared across all shards.
+//!
+//! ```text
+//! let campaign = Campaign::paper();              // §IV axes
+//! let out = dse::run_campaign(campaign, &RunOpts::default())?;
+//! for &i in &out.frontier_runtime_energy {
+//!     let p = &out.completed[i];
+//!     println!("{} {} {}x{}: {} cycles, {} mJ", ...);
+//! }
+//! ```
+
+pub mod exec;
+pub mod journal;
+pub mod pareto;
+
+pub use exec::{
+    frontiers, report_campaign, resume_campaign, run_campaign, CampaignOutcome, Exec, RunOpts,
+};
+pub use journal::Journal;
+pub use pareto::pareto_front;
+
+use std::collections::HashMap;
+
+use crate::config::{workloads, ArchConfig, Topology};
+use crate::dataflow::Dataflow;
+use crate::dram::{self, DramConfig};
+use crate::energy::EnergyModel;
+use crate::engine::Engine;
+use crate::memory::stall;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+/// A declarative campaign: the cartesian axes of one design-space
+/// exploration. Point `index` decodes in nested order — workload
+/// outermost, then dataflow, array shape, scratchpad size, and DRAM
+/// bandwidth innermost — so consecutive indices share their architecture
+/// configuration and therefore their memo-cache entries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Campaign {
+    pub name: String,
+    /// Workload specs: built-in names (conv or GEMM family) or csv
+    /// paths. Shard-over-serve execution accepts built-in names only
+    /// (the server has no access to client files).
+    pub workloads: Vec<String>,
+    pub dataflows: Vec<Dataflow>,
+    /// Array shapes `(rows, cols)` — the Fig 8 aspect-ratio axis.
+    pub arrays: Vec<(u64, u64)>,
+    /// Scratchpad sizes in KB, applied to the IFMAP and filter
+    /// partitions in lockstep (the Fig 7 convention).
+    pub sram_kb: Vec<u64>,
+    /// DRAM read bandwidths in bytes/cycle — the stall-model axis.
+    pub dram_bw: Vec<f64>,
+    /// Energy-model preset name (see [`EnergyModel::preset`]).
+    pub energy: String,
+}
+
+impl Campaign {
+    /// The paper's §IV axes: bandwidth x dataflow x aspect ratio over a
+    /// game workload (AlphaGoZero, W1) and a recommendation workload
+    /// (NCF, W4), with the Fig 7 scratchpad ladder.
+    pub fn paper() -> Campaign {
+        Campaign {
+            name: "paper".into(),
+            workloads: vec!["alphagozero".into(), "ncf".into()],
+            dataflows: Dataflow::ALL.to_vec(),
+            arrays: vec![(32, 512), (64, 256), (128, 128), (256, 64), (512, 32)],
+            sram_kb: vec![64, 256, 1024],
+            dram_bw: vec![10.0, 40.0],
+            energy: "28nm".into(),
+        }
+    }
+
+    /// Number of grid points (product of the axis lengths).
+    pub fn len(&self) -> usize {
+        self.workloads.len()
+            * self.dataflows.len()
+            * self.arrays.len()
+            * self.sram_kb.len()
+            * self.dram_bw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Check axis invariants (non-empty axes, positive dimensions,
+    /// finite positive bandwidths, resolvable energy preset).
+    pub fn validate(&self) -> Result<()> {
+        let bad = |m: String| Err(Error::Dse(format!("campaign {:?}: {m}", self.name)));
+        if self.workloads.is_empty() {
+            return bad("no workloads".into());
+        }
+        if self.dataflows.is_empty()
+            || self.arrays.is_empty()
+            || self.sram_kb.is_empty()
+            || self.dram_bw.is_empty()
+        {
+            return bad("every axis needs at least one value".into());
+        }
+        if self.arrays.iter().any(|&(h, w)| h == 0 || w == 0) {
+            return bad("array dimensions must be positive".into());
+        }
+        if self.sram_kb.iter().any(|&kb| kb == 0) {
+            return bad("sram_kb entries must be positive".into());
+        }
+        if self.dram_bw.iter().any(|&bw| !bw.is_finite() || bw <= 0.0) {
+            return bad("dram_bw entries must be finite and positive".into());
+        }
+        if EnergyModel::preset(&self.energy).is_none() {
+            return bad(format!("unknown energy preset {:?} (28nm|45nm|7nm)", self.energy));
+        }
+        Ok(())
+    }
+
+    /// The campaign's energy model (validated preset).
+    pub fn energy_model(&self) -> Result<EnergyModel> {
+        EnergyModel::preset(&self.energy).ok_or_else(|| {
+            Error::Dse(format!("unknown energy preset {:?} (28nm|45nm|7nm)", self.energy))
+        })
+    }
+
+    /// Decode one grid point by its stable index (panics when out of
+    /// range — callers iterate `0..len()`).
+    pub fn point(&self, index: usize) -> CampaignPoint {
+        assert!(index < self.len(), "point index {index} out of {}", self.len());
+        let mut i = index;
+        let dram_bw = self.dram_bw[i % self.dram_bw.len()];
+        i /= self.dram_bw.len();
+        let sram_kb = self.sram_kb[i % self.sram_kb.len()];
+        i /= self.sram_kb.len();
+        let (array_h, array_w) = self.arrays[i % self.arrays.len()];
+        i /= self.arrays.len();
+        let dataflow = self.dataflows[i % self.dataflows.len()];
+        i /= self.dataflows.len();
+        CampaignPoint {
+            index,
+            workload: self.workloads[i].clone(),
+            dataflow,
+            array_h,
+            array_w,
+            sram_kb,
+            dram_bw,
+        }
+    }
+
+    /// Every grid point in index order.
+    pub fn points(&self) -> Vec<CampaignPoint> {
+        (0..self.len()).map(|i| self.point(i)).collect()
+    }
+
+    /// Resolve each workload spec to its lowered topology. With
+    /// `builtin_only` (the serve path) csv paths are rejected — the
+    /// server never reads client-named files.
+    pub fn resolve_workloads(&self, builtin_only: bool) -> Result<HashMap<String, Topology>> {
+        let mut map = HashMap::new();
+        for spec in &self.workloads {
+            if map.contains_key(spec) {
+                continue;
+            }
+            let topo = match workloads::builtin_workload(spec) {
+                Some(w) => w.lower()?,
+                None if builtin_only => {
+                    return Err(Error::Dse(format!(
+                        "unknown built-in workload {spec:?} (dse-over-serve accepts \
+                         built-in names only; see `scale-sim workloads`)"
+                    )))
+                }
+                None => crate::workload::Workload::from_file(std::path::Path::new(spec))?
+                    .lower()?,
+            };
+            map.insert(spec.clone(), topo);
+        }
+        Ok(map)
+    }
+
+    /// Canonical JSON form (all axes explicit; stable field order).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            (
+                "workloads",
+                Json::Arr(self.workloads.iter().map(|w| Json::Str(w.clone())).collect()),
+            ),
+            (
+                "dataflows",
+                Json::Arr(self.dataflows.iter().map(|d| Json::str(d.name())).collect()),
+            ),
+            (
+                "arrays",
+                Json::Arr(
+                    self.arrays.iter().map(|&(h, w)| Json::str(format!("{h}x{w}"))).collect(),
+                ),
+            ),
+            ("sram_kb", Json::Arr(self.sram_kb.iter().map(|&kb| Json::u64(kb)).collect())),
+            ("dram_bw", Json::Arr(self.dram_bw.iter().map(|&bw| Json::f64(bw)).collect())),
+            ("energy", Json::str(self.energy.clone())),
+        ])
+    }
+
+    /// Parse the JSON form. Missing axes default to a single value
+    /// (array 128x128, sram 512 KB, bandwidth 64 B/cycle, all three
+    /// dataflows, 28 nm energy); `workloads` is required.
+    pub fn from_json(j: &Json) -> std::result::Result<Campaign, String> {
+        let name = j.str_field("name").unwrap_or("campaign").to_string();
+        let workloads = match j.get("workloads").and_then(Json::as_arr) {
+            Some(a) if !a.is_empty() => a
+                .iter()
+                .map(|v| {
+                    v.as_str()
+                        .map(str::to_string)
+                        .ok_or_else(|| "\"workloads\" entries must be strings".to_string())
+                })
+                .collect::<std::result::Result<Vec<_>, String>>()?,
+            _ => return Err("campaign needs a non-empty \"workloads\" array".into()),
+        };
+        let dataflows = match j.get("dataflows") {
+            None => Dataflow::ALL.to_vec(),
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"dataflows\" must be an array")?;
+                a.iter()
+                    .map(|d| {
+                        let s = d.as_str().ok_or("\"dataflows\" entries must be strings")?;
+                        Dataflow::parse(s).map_err(|e| e.to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
+        let arrays = match j.get("arrays") {
+            None => vec![(128, 128)],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"arrays\" must be an array")?;
+                a.iter()
+                    .map(|s| -> std::result::Result<(u64, u64), String> {
+                        let s = s
+                            .as_str()
+                            .ok_or_else(|| "\"arrays\" entries must be \"RxC\" strings".to_string())?;
+                        let (r, c) = s
+                            .split_once('x')
+                            .ok_or_else(|| format!("bad array shape {s:?} (RxC)"))?;
+                        Ok((
+                            r.parse().map_err(|_| format!("bad array rows {r:?}"))?,
+                            c.parse().map_err(|_| format!("bad array cols {c:?}"))?,
+                        ))
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
+        let sram_kb = match j.get("sram_kb") {
+            None => vec![512],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"sram_kb\" must be an array")?;
+                a.iter()
+                    .map(|x| {
+                        x.as_u64().ok_or_else(|| "\"sram_kb\" entries must be u64".to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
+        let dram_bw = match j.get("dram_bw") {
+            None => vec![64.0],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"dram_bw\" must be an array")?;
+                a.iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| "\"dram_bw\" entries must be numbers".to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
+        let energy = j.str_field("energy").unwrap_or("28nm").to_string();
+        Ok(Campaign { name, workloads, dataflows, arrays, sram_kb, dram_bw, energy })
+    }
+
+    /// Stable hash of the canonical JSON form — the journal's identity
+    /// check: `dse resume` refuses a state dir whose journal was written
+    /// for a different campaign.
+    pub fn fingerprint(&self) -> String {
+        let text = self.to_json().to_string();
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in text.as_bytes() {
+            h ^= u64::from(*b);
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        format!("{h:016x}")
+    }
+}
+
+/// One decoded grid point: the campaign coordinates plus its stable
+/// enumeration index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CampaignPoint {
+    pub index: usize,
+    pub workload: String,
+    pub dataflow: Dataflow,
+    pub array_h: u64,
+    pub array_w: u64,
+    /// IFMAP and filter partition size (lockstep, Fig 7 convention).
+    pub sram_kb: u64,
+    /// Modeled DRAM read bandwidth in bytes/cycle.
+    pub dram_bw: f64,
+}
+
+impl CampaignPoint {
+    /// The point's effective architecture: engine base + coordinates.
+    pub fn config(&self, base: &ArchConfig) -> ArchConfig {
+        ArchConfig {
+            array_h: self.array_h,
+            array_w: self.array_w,
+            dataflow: self.dataflow,
+            ifmap_sram_kb: self.sram_kb,
+            filter_sram_kb: self.sram_kb,
+            ..base.clone()
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("index", Json::u64(self.index as u64)),
+            ("workload", Json::str(self.workload.clone())),
+            ("dataflow", Json::str(self.dataflow.name())),
+            ("array_h", Json::u64(self.array_h)),
+            ("array_w", Json::u64(self.array_w)),
+            ("sram_kb", Json::u64(self.sram_kb)),
+            ("dram_bw", Json::f64(self.dram_bw)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> std::result::Result<CampaignPoint, String> {
+        Ok(CampaignPoint {
+            index: need_u64(j, "index")? as usize,
+            workload: j.str_field("workload").ok_or("missing \"workload\"")?.to_string(),
+            dataflow: Dataflow::parse(
+                j.str_field("dataflow").ok_or("missing \"dataflow\"")?,
+            )
+            .map_err(|e| e.to_string())?,
+            array_h: need_u64(j, "array_h")?,
+            array_w: need_u64(j, "array_w")?,
+            sram_kb: need_u64(j, "sram_kb")?,
+            dram_bw: need_f64(j, "dram_bw")?,
+        })
+    }
+}
+
+/// The objectives extracted at one grid point. Every field is a
+/// deterministic function of the point alone, so local, sharded and
+/// resumed executions produce bit-identical values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PointMetrics {
+    /// Stall-free runtime (the engine's cycle-exact timing).
+    pub ideal_cycles: u64,
+    /// Idle cycles under the point's finite DRAM bandwidth
+    /// ([`crate::memory::stall`]).
+    pub stall_cycles: u64,
+    /// Total energy in mJ ([`crate::energy`]).
+    pub energy_mj: f64,
+    /// Stall-free peak DRAM read-bandwidth requirement (bytes/cycle).
+    pub peak_dram_bw: f64,
+    /// Average DRAM read bandwidth over the stall-free runtime.
+    pub avg_dram_bw: f64,
+    /// Total DRAM traffic in bytes.
+    pub dram_bytes: u64,
+    /// Row-buffer hit rate of the read stream replayed through the
+    /// banked DRAM substrate ([`crate::dram`]).
+    pub dram_row_hit_rate: f64,
+    /// Runtime-weighted array utilization.
+    pub utilization: f64,
+}
+
+impl PointMetrics {
+    /// Bandwidth-aware runtime: stall-free cycles plus stalls.
+    pub fn total_cycles(&self) -> u64 {
+        self.ideal_cycles + self.stall_cycles
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ideal_cycles", Json::u64(self.ideal_cycles)),
+            ("stall_cycles", Json::u64(self.stall_cycles)),
+            ("energy_mj", Json::f64(self.energy_mj)),
+            ("peak_dram_bw", Json::f64(self.peak_dram_bw)),
+            ("avg_dram_bw", Json::f64(self.avg_dram_bw)),
+            ("dram_bytes", Json::u64(self.dram_bytes)),
+            ("dram_row_hit_rate", Json::f64(self.dram_row_hit_rate)),
+            ("utilization", Json::f64(self.utilization)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> std::result::Result<PointMetrics, String> {
+        Ok(PointMetrics {
+            ideal_cycles: need_u64(j, "ideal_cycles")?,
+            stall_cycles: need_u64(j, "stall_cycles")?,
+            energy_mj: need_f64(j, "energy_mj")?,
+            peak_dram_bw: need_f64(j, "peak_dram_bw")?,
+            avg_dram_bw: need_f64(j, "avg_dram_bw")?,
+            dram_bytes: need_u64(j, "dram_bytes")?,
+            dram_row_hit_rate: need_f64(j, "dram_row_hit_rate")?,
+            utilization: need_f64(j, "utilization")?,
+        })
+    }
+}
+
+/// One journaled result: the point plus its extracted objectives.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletedPoint {
+    pub point: CampaignPoint,
+    pub metrics: PointMetrics,
+}
+
+impl CompletedPoint {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![("point", self.point.to_json()), ("metrics", self.metrics.to_json())])
+    }
+
+    /// Parse from any object carrying `point`/`metrics` fields (journal
+    /// lines and serve `dse_point` events share the shape).
+    pub fn from_json(j: &Json) -> std::result::Result<CompletedPoint, String> {
+        let p = j.get("point").ok_or("missing \"point\"")?;
+        let m = j.get("metrics").ok_or("missing \"metrics\"")?;
+        Ok(CompletedPoint {
+            point: CampaignPoint::from_json(p)?,
+            metrics: PointMetrics::from_json(m)?,
+        })
+    }
+}
+
+pub(crate) fn need_u64(j: &Json, k: &str) -> std::result::Result<u64, String> {
+    j.u64_field(k).ok_or_else(|| format!("missing/invalid u64 field {k:?}"))
+}
+
+pub(crate) fn need_f64(j: &Json, k: &str) -> std::result::Result<f64, String> {
+    j.f64_field(k).ok_or_else(|| format!("missing/invalid number field {k:?}"))
+}
+
+/// The banked-DRAM substrate replay is independent of the campaign's
+/// bandwidth axis (the innermost one), so consecutive points differing
+/// only in `dram_bw` would redo identical replays; this process-wide
+/// memo absorbs that (values are deterministic, so memoization cannot
+/// change results — only wall-clock).
+fn substrate_replay(cfg: &ArchConfig, layer: &crate::arch::LayerShape) -> (u64, u64) {
+    use std::collections::HashMap as Map;
+    use std::sync::{Mutex, OnceLock};
+    type Key = (Dataflow, u64, u64, u64, u64, u64, u64, (u64, u64, u64, u64, u64, u64, u64));
+    static CACHE: OnceLock<Mutex<Map<Key, (u64, u64)>>> = OnceLock::new();
+    let key = (
+        cfg.dataflow,
+        cfg.array_h,
+        cfg.array_w,
+        cfg.ifmap_sram_kb,
+        cfg.filter_sram_kb,
+        cfg.ofmap_sram_kb,
+        cfg.word_bytes,
+        (
+            layer.ifmap_h,
+            layer.ifmap_w,
+            layer.filt_h,
+            layer.filt_w,
+            layer.channels,
+            layer.num_filters,
+            layer.stride,
+        ),
+    );
+    let cache = CACHE.get_or_init(|| Mutex::new(Map::new()));
+    if let Some(&hit) = cache.lock().unwrap().get(&key) {
+        return hit;
+    }
+    let s = dram::replay_layer(cfg.dataflow, layer, cfg, DramConfig::default());
+    let value = (s.requests, s.row_hits);
+    cache.lock().unwrap().insert(key, value);
+    value
+}
+
+/// Extract every objective at one grid point. The stall-free report
+/// comes from the engine's memo cache (shared across points differing
+/// only in bandwidth, and across shards on a server); the stall replay
+/// is a cheap fold-level pass computed fresh, and the DRAM-substrate
+/// replay is memoized per (config, layer-shape).
+pub fn evaluate_point(engine: &Engine, topo: &Topology, point: &CampaignPoint) -> PointMetrics {
+    let cfg = point.config(engine.cfg());
+    let report = engine.run_topology_with(&cfg, topo);
+    let mut stall_cycles = 0u64;
+    let mut dram_requests = 0u64;
+    let mut dram_row_hits = 0u64;
+    for layer in &topo.layers {
+        stall_cycles +=
+            stall::stalled_runtime(cfg.dataflow, layer, &cfg, point.dram_bw).stall_cycles;
+        let (requests, row_hits) = substrate_replay(&cfg, layer);
+        dram_requests += requests;
+        dram_row_hits += row_hits;
+    }
+    PointMetrics {
+        ideal_cycles: report.total_cycles(),
+        stall_cycles,
+        energy_mj: report.total_energy().total_mj(),
+        peak_dram_bw: report.peak_dram_read_bw(),
+        avg_dram_bw: report.avg_dram_read_bw(),
+        dram_bytes: report.total_dram().total(),
+        dram_row_hit_rate: if dram_requests == 0 {
+            0.0
+        } else {
+            dram_row_hits as f64 / dram_requests as f64
+        },
+        utilization: report.overall_utilization(cfg.total_pes()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+
+    fn tiny() -> Campaign {
+        Campaign {
+            name: "t".into(),
+            workloads: vec!["ncf".into()],
+            dataflows: vec![Dataflow::Os, Dataflow::Ws],
+            arrays: vec![(16, 16), (32, 32)],
+            sram_kb: vec![64],
+            dram_bw: vec![4.0, 16.0],
+            energy: "28nm".into(),
+        }
+    }
+
+    #[test]
+    fn enumeration_is_nested_with_bandwidth_innermost() {
+        let c = tiny();
+        assert_eq!(c.len(), 8);
+        let p0 = c.point(0);
+        let p1 = c.point(1);
+        // consecutive indices differ only in bandwidth => shared config
+        assert_eq!((p0.dataflow, p0.array_h, p0.sram_kb), (Dataflow::Os, 16, 64));
+        assert_eq!(p0.config(&config::paper_default()), p1.config(&config::paper_default()));
+        assert_eq!((p0.dram_bw, p1.dram_bw), (4.0, 16.0));
+        // array advances next, dataflow after that
+        assert_eq!(c.point(2).array_h, 32);
+        assert_eq!(c.point(4).dataflow, Dataflow::Ws);
+        assert_eq!(c.points().len(), 8);
+        for (i, p) in c.points().iter().enumerate() {
+            assert_eq!(p.index, i);
+        }
+    }
+
+    #[test]
+    fn campaign_json_round_trips_with_stable_fingerprint() {
+        let c = tiny();
+        let wire = c.to_json().to_string();
+        let back = Campaign::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.fingerprint(), c.fingerprint());
+        // a changed axis changes the fingerprint
+        let mut other = c.clone();
+        other.dram_bw = vec![4.0];
+        assert_ne!(other.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn from_json_defaults_missing_axes() {
+        let j = Json::parse(r#"{"workloads":["ncf"]}"#).unwrap();
+        let c = Campaign::from_json(&j).unwrap();
+        assert_eq!(c.dataflows, Dataflow::ALL.to_vec());
+        assert_eq!(c.arrays, vec![(128, 128)]);
+        assert_eq!(c.sram_kb, vec![512]);
+        assert_eq!(c.dram_bw, vec![64.0]);
+        assert_eq!(c.energy, "28nm");
+        c.validate().unwrap();
+        assert!(Campaign::from_json(&Json::parse(r#"{"name":"x"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_axes() {
+        let mut c = tiny();
+        c.dram_bw = vec![0.0];
+        assert!(c.validate().is_err());
+        let mut c = tiny();
+        c.arrays = vec![(0, 8)];
+        assert!(c.validate().is_err());
+        let mut c = tiny();
+        c.energy = "3nm".into();
+        assert!(c.validate().is_err());
+        let mut c = tiny();
+        c.workloads.clear();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn point_and_metrics_json_round_trip_exactly() {
+        let c = tiny();
+        let topos = c.resolve_workloads(true).unwrap();
+        let engine = Engine::new(config::paper_default());
+        let p = c.point(3);
+        let m = evaluate_point(&engine, &topos["ncf"], &p);
+        let cp = CompletedPoint { point: p, metrics: m };
+        let wire = cp.to_json().to_string();
+        let back = CompletedPoint::from_json(&Json::parse(&wire).unwrap()).unwrap();
+        assert_eq!(back, cp, "journal round trip must be bit-identical");
+    }
+
+    #[test]
+    fn evaluate_is_deterministic_and_consistent_with_the_engine() {
+        let c = tiny();
+        let topos = c.resolve_workloads(false).unwrap();
+        let engine = Engine::new(config::paper_default());
+        let p = c.point(0);
+        let a = evaluate_point(&engine, &topos["ncf"], &p);
+        let b = evaluate_point(&engine, &topos["ncf"], &p);
+        assert_eq!(a, b);
+        let report = engine.run_topology_with(&p.config(engine.cfg()), &topos["ncf"]);
+        assert_eq!(a.ideal_cycles, report.total_cycles());
+        assert_eq!(a.total_cycles(), a.ideal_cycles + a.stall_cycles);
+        assert!(a.energy_mj > 0.0 && a.peak_dram_bw > 0.0);
+        // 4 B/cycle starves a 16x16 array; the wider-bandwidth twin
+        // stalls no more than the narrow one
+        let wide = evaluate_point(&engine, &topos["ncf"], &c.point(1));
+        assert!(wide.stall_cycles <= a.stall_cycles);
+        assert_eq!(wide.ideal_cycles, a.ideal_cycles, "bandwidth only moves stalls");
+    }
+
+    #[test]
+    fn builtin_only_resolution_rejects_paths() {
+        let mut c = tiny();
+        c.workloads = vec!["topologies/ncf.csv".into()];
+        assert!(c.resolve_workloads(true).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Pareto-frontier computation: dominated-point pruning over two
+//! minimized objectives (runtime vs energy, runtime vs bandwidth — the
+//! trade-off views the paper's §IV sweeps chart one curve at a time).
+//!
+//! Point `a` *dominates* `b` when `a` is no worse on both coordinates
+//! and strictly better on at least one. The frontier is every point not
+//! dominated by any other; exact duplicates are all kept (neither
+//! dominates the other), so resumed campaigns that journal identical
+//! points reproduce identical frontiers.
+
+/// True when `a` dominates `b` under minimization of both coordinates.
+pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
+    a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1)
+}
+
+/// Indices of the non-dominated points of `pts` (both coordinates
+/// minimized), ordered by ascending `(x, y, index)` — a deterministic
+/// sweep in O(n log n).
+pub fn pareto_front(pts: &[(f64, f64)]) -> Vec<usize> {
+    let mut order: Vec<usize> = (0..pts.len()).collect();
+    order.sort_by(|&a, &b| {
+        pts[a]
+            .0
+            .partial_cmp(&pts[b].0)
+            .expect("pareto over NaN")
+            .then(pts[a].1.partial_cmp(&pts[b].1).expect("pareto over NaN"))
+            .then(a.cmp(&b))
+    });
+    let mut front: Vec<usize> = Vec::new();
+    for &i in &order {
+        // In sorted order the last kept point has the lowest y seen so
+        // far (and the lowest x among points with that y), so dominance
+        // against it alone is equivalent to dominance against all
+        // earlier points (dominance is transitive).
+        let dominated = front.last().is_some_and(|&j| dominates(pts[j], pts[i]));
+        if !dominated {
+            front.push(i);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// O(n²) reference: a point is on the frontier iff nothing dominates it.
+    fn brute_force(pts: &[(f64, f64)]) -> Vec<usize> {
+        let mut out: Vec<usize> = (0..pts.len())
+            .filter(|&i| !pts.iter().any(|&q| dominates(q, pts[i])))
+            .collect();
+        out.sort_by(|&a, &b| {
+            pts[a]
+                .0
+                .partial_cmp(&pts[b].0)
+                .unwrap()
+                .then(pts[a].1.partial_cmp(&pts[b].1).unwrap())
+                .then(a.cmp(&b))
+        });
+        out
+    }
+
+    #[test]
+    fn dominance_definition() {
+        assert!(dominates((1.0, 1.0), (2.0, 2.0)));
+        assert!(dominates((1.0, 2.0), (1.0, 3.0)));
+        assert!(!dominates((1.0, 1.0), (1.0, 1.0)), "equal points do not dominate");
+        assert!(!dominates((1.0, 3.0), (2.0, 2.0)), "trade-off points do not dominate");
+    }
+
+    #[test]
+    fn staircase_is_fully_kept_and_interior_pruned() {
+        //   y
+        //   4 .        (staircase 0,1,2 is the frontier; 3 is interior)
+        let pts = [(1.0, 4.0), (2.0, 2.0), (4.0, 1.0), (3.0, 3.0)];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn duplicates_are_all_kept() {
+        let pts = [(1.0, 2.0), (1.0, 2.0), (3.0, 1.0)];
+        assert_eq!(pareto_front(&pts), vec![0, 1, 2]);
+        // ... but a strictly better point prunes both copies
+        let pts = [(1.0, 2.0), (1.0, 2.0), (1.0, 1.0)];
+        assert_eq!(pareto_front(&pts), vec![2]);
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        assert!(pareto_front(&[]).is_empty());
+        assert_eq!(pareto_front(&[(5.0, 5.0)]), vec![0]);
+        // a single best corner dominates everything else
+        let pts = [(2.0, 2.0), (1.0, 1.0), (3.0, 3.0)];
+        assert_eq!(pareto_front(&pts), vec![1]);
+    }
+
+    #[test]
+    fn sweep_matches_brute_force_on_random_clouds() {
+        let mut rng = Rng::new(0xD5E_9E37);
+        for case in 0..200 {
+            let n = (rng.range(1, 40)) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| (rng.range(0, 12) as f64, rng.range(0, 12) as f64))
+                .collect();
+            assert_eq!(pareto_front(&pts), brute_force(&pts), "case {case}: {pts:?}");
+        }
+    }
+
+    #[test]
+    fn frontier_is_sorted_and_non_dominated() {
+        let mut rng = Rng::new(7);
+        let pts: Vec<(f64, f64)> =
+            (0..100).map(|_| (rng.range(0, 1000) as f64, rng.range(0, 1000) as f64)).collect();
+        let front = pareto_front(&pts);
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(pts[w[0]].0 <= pts[w[1]].0, "frontier must ascend in x");
+        }
+        for &i in &front {
+            assert!(!pts.iter().any(|&q| dominates(q, pts[i])));
+        }
+    }
+}

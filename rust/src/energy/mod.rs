@@ -65,6 +65,23 @@ impl EnergyModel {
             _ => None,
         }
     }
+
+    /// The preset name this model equals, if any — the inverse of
+    /// [`EnergyModel::preset`]. Used by the dse campaign spec (which
+    /// names its energy model) and by the serve path to check that a
+    /// submitted campaign prices energy the way the server's engine
+    /// does (cached reports embed energy numbers).
+    pub fn preset_name(&self) -> Option<&'static str> {
+        if *self == Self::NODE_28NM {
+            Some("28nm")
+        } else if *self == Self::NODE_45NM {
+            Some("45nm")
+        } else if *self == Self::NODE_7NM {
+            Some("7nm")
+        } else {
+            None
+        }
+    }
 }
 
 /// Energy split the way Fig 6 stacks it: compute vs memory transfers.
@@ -172,6 +189,12 @@ mod tests {
         assert_eq!(EnergyModel::preset("28nm").unwrap(), EnergyModel::NODE_28NM);
         assert_eq!(EnergyModel::preset(" 45NM ").unwrap(), EnergyModel::NODE_45NM);
         assert!(EnergyModel::preset("3nm").is_none());
+        // preset_name is the exact inverse of preset
+        for name in ["28nm", "45nm", "7nm"] {
+            assert_eq!(EnergyModel::preset(name).unwrap().preset_name(), Some(name));
+        }
+        let custom = EnergyModel { mac_pj: 1.0, ..EnergyModel::NODE_28NM };
+        assert_eq!(custom.preset_name(), None);
         // newer nodes must be cheaper per op across the board
         let (n45, n28, n7) = (EnergyModel::NODE_45NM, EnergyModel::NODE_28NM, EnergyModel::NODE_7NM);
         assert!(n45.mac_pj > n28.mac_pj && n28.mac_pj > n7.mac_pj);

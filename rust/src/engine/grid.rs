@@ -66,20 +66,23 @@ impl SweepStats {
         self.memo.hit_rate()
     }
 
-    /// Write the canonical `BENCH_sweep.json` record for this run
-    /// (wall-clock + memoization counters) — the single definition of
-    /// the field set, shared by the CLI and the fig benches.
+    /// The canonical BENCH field set (wall-clock + memoization
+    /// counters) — the single definition of the names, shared by
+    /// [`SweepStats::write_bench_json`] (the CLI and fig benches) and
+    /// the dse campaign's `BENCH_dse.json` writer.
+    pub fn bench_fields(&self) -> [(&'static str, f64); 5] {
+        [
+            ("sweep_wall_ms", self.wall.as_secs_f64() * 1e3),
+            ("points", self.points as f64),
+            ("layer_sims", self.memo.layer_sims as f64),
+            ("cache_hits", self.memo.cache_hits as f64),
+            ("cache_hit_rate", self.hit_rate()),
+        ]
+    }
+
+    /// Write the canonical `BENCH_sweep.json` record for this run.
     pub fn write_bench_json(&self, path: &std::path::Path) -> std::io::Result<()> {
-        crate::util::bench::write_json(
-            path,
-            &[
-                ("sweep_wall_ms", self.wall.as_secs_f64() * 1e3),
-                ("points", self.points as f64),
-                ("layer_sims", self.memo.layer_sims as f64),
-                ("cache_hits", self.memo.cache_hits as f64),
-                ("cache_hit_rate", self.hit_rate()),
-            ],
-        )
+        crate::util::bench::write_json(path, &self.bench_fields())
     }
 }
 

@@ -79,6 +79,9 @@
 //! * [`trace`]    — cycle-accurate SRAM address trace generators (§III-E)
 //! * [`memory`]   — double-buffered scratchpads, DRAM traffic + bandwidth (§III-C)
 //! * [`dram`]     — banked DRAM timing substrate (DRAMSim2 stand-in, §III-D)
+//! * [`dse`]      — **resumable DSE campaigns** (`scale-sim dse`): axis
+//!   specs, objective extraction, Pareto frontiers, checkpoint/resume
+//!   journal, local or shard-over-serve execution (§IV as a product)
 //! * [`energy`]   — access-cost energy model (Fig 6)
 //! * [`rtl`]      — cycle-level PE-grid simulator used for validation (Fig 4)
 //! * [`scaleout`] — scale-up vs scale-out study engine (§IV-E)
@@ -96,6 +99,7 @@ pub mod config;
 pub mod coordinator;
 pub mod dataflow;
 pub mod dram;
+pub mod dse;
 pub mod energy;
 pub mod engine;
 pub mod memory;
@@ -126,6 +130,7 @@ pub enum Error {
     InvalidLayer { name: String, reason: String },
     Workload(String),
     Runtime(String),
+    Dse(String),
     Io(std::io::Error),
 }
 
@@ -139,6 +144,7 @@ impl std::fmt::Display for Error {
             }
             Error::Workload(m) => write!(f, "workload error: {m}"),
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Dse(m) => write!(f, "dse error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
         }
     }

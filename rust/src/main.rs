@@ -61,6 +61,22 @@ USAGE:
       Show the functional-runtime platform and the AOT artifacts
       available for the functional path.
 
+  scale-sim dse <run|resume|report> [--spec FILE.json] [--state-dir DIR]
+               [--threads N] [--serve H:P] [--shards N] [--max-points N]
+               [--backend analytical|trace|rtl] [--bench FILE]
+      Resumable design-space-exploration campaigns with Pareto
+      frontiers (runtime-vs-energy, runtime-vs-peak-DRAM-bandwidth).
+      `run` starts a campaign — the paper's bandwidth x dataflow x
+      aspect-ratio axes by default, or a JSON spec ({\"workloads\":[..],
+      \"dataflows\":[..], \"arrays\":[\"RxC\",..], \"sram_kb\":[..],
+      \"dram_bw\":[..]}). With --state-dir every completed point is
+      journaled to campaign.jsonl; a killed campaign continues with
+      `resume`, re-simulating only unfinished points and producing a
+      bit-identical frontier. `report` prints the frontier from a
+      journal without simulating. --serve shards the points over a
+      running `scale-sim serve` (one shared memo cache across shards).
+      A complete campaign writes BENCH_dse.json (--bench overrides).
+
   scale-sim serve [--addr H:P] [--workers N] [--queue-cap N]
                   [--state-dir DIR] [-c cfg] [--dataflow os|ws|is]
                   [--array RxC] [--backend analytical|trace|rtl]
@@ -108,6 +124,7 @@ fn dispatch(args: &[String]) -> CliResult<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("dse") => cmd_dse(&args[1..]),
         Some("analyze") => cmd_analyze(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
         Some("workloads") => cmd_workloads(),
@@ -429,6 +446,91 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
     );
     stats.write_bench_json(Path::new("BENCH_sweep.json"))?;
     println!("wrote BENCH_sweep.json");
+    Ok(())
+}
+
+fn cmd_dse(rest: &[String]) -> CliResult<()> {
+    use scale_sim::dse::{self, Campaign, Exec, RunOpts};
+    use scale_sim::report::dse_summary;
+
+    let action = rest
+        .first()
+        .map(String::as_str)
+        .ok_or("dse needs an action: run|resume|report")?;
+    let a = Args(&rest[1..]);
+    let state_dir = a.value("--state-dir", None).map(PathBuf::from);
+    let bench_path = a.value("--bench", None).unwrap_or("BENCH_dse.json").to_string();
+
+    if action == "report" {
+        let dir = state_dir.ok_or("dse report needs --state-dir")?;
+        let out = dse::report_campaign(&dir)?;
+        print!("{}", dse_summary(&out));
+        return Ok(());
+    }
+
+    let mut opts = RunOpts::default();
+    opts.state_dir = state_dir;
+    if let Some(n) = a.value("--max-points", None) {
+        opts.max_points = Some(n.parse()?);
+    }
+    if let Some(b) = a.value("--backend", None) {
+        opts.backend = BackendKind::parse(b)?;
+    }
+    if let Some(addr) = a.value("--serve", None) {
+        let shards: usize = a.value("--shards", None).unwrap_or("4").parse()?;
+        opts.exec = Exec::Serve { addr: addr.to_string(), shards };
+    } else if let Some(t) = a.value("--threads", None) {
+        opts.exec = Exec::Local { threads: t.parse()? };
+    }
+
+    let out = match action {
+        "run" => {
+            let campaign = match a.value("--spec", None) {
+                Some(p) => {
+                    let text = std::fs::read_to_string(p)
+                        .map_err(|e| format!("cannot read spec {p}: {e}"))?;
+                    Campaign::from_json(&Json::parse(text.trim())?)?
+                }
+                None => Campaign::paper(),
+            };
+            dse::run_campaign(campaign, &opts)?
+        }
+        "resume" => {
+            let dir = opts
+                .state_dir
+                .clone()
+                .ok_or("dse resume needs --state-dir")?;
+            dse::resume_campaign(&dir, &opts)?
+        }
+        other => return fail(format!("unknown dse action {other:?} (run|resume|report)")),
+    };
+
+    if out.is_complete() {
+        print!("{}", dse_summary(&out));
+        println!(
+            "dse: {} points ({} run, {} restored) in {:.1} ms — {} layer sims, {} cache hits ({:.1}% hit rate)",
+            out.completed.len(),
+            out.ran,
+            out.restored,
+            out.stats.wall.as_secs_f64() * 1e3,
+            out.stats.memo.layer_sims,
+            out.stats.memo.cache_hits,
+            out.stats.hit_rate() * 100.0,
+        );
+        out.write_bench_json(Path::new(&bench_path))?;
+        println!("wrote {bench_path}");
+    } else {
+        let hint = match &opts.state_dir {
+            Some(d) => format!("continue with `scale-sim dse resume --state-dir {}`", d.display()),
+            None => "points are lost without --state-dir".into(),
+        };
+        println!(
+            "dse: campaign incomplete — {}/{} points journaled ({} run this invocation); {hint}",
+            out.completed.len(),
+            out.campaign.len(),
+            out.ran,
+        );
+    }
     Ok(())
 }
 

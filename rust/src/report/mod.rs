@@ -128,6 +128,104 @@ pub fn summary_markdown(r: &WorkloadReport, total_pes: u64) -> String {
     )
 }
 
+/// Human-readable dse campaign summary: coverage, the two Pareto
+/// frontiers (runtime-vs-energy, runtime-vs-peak-DRAM-bandwidth), and a
+/// per-workload "fastest / lowest-energy design" conclusion — the
+/// Fig 7/8-style takeaways, computed over the full frontier instead of
+/// one curve at a time. Deterministic: no wall-clock, stable ordering,
+/// so two journals holding the same points print byte-identical
+/// summaries (the CI kill+resume identity check relies on this).
+pub fn dse_summary(out: &crate::dse::CampaignOutcome) -> String {
+    use std::fmt::Write as _;
+
+    let c = &out.campaign;
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "campaign {:?} [{} energy]: {} workloads x {} dataflows x {} arrays x {} sram x {} bw = {} points ({} completed)",
+        c.name,
+        c.energy,
+        c.workloads.len(),
+        c.dataflows.len(),
+        c.arrays.len(),
+        c.sram_kb.len(),
+        c.dram_bw.len(),
+        c.len(),
+        out.completed.len(),
+    );
+
+    let frontier_table = |s: &mut String, title: &str, front: &[usize], col: &str, y: &dyn Fn(&crate::dse::PointMetrics) -> f64| {
+        let _ = writeln!(s, "\nPareto frontier — {title} ({} of {} points):", front.len(), out.completed.len());
+        let _ = writeln!(
+            s,
+            "{:<14} {:>4} {:>9} {:>8} {:>8} {:>14} {:>14}",
+            "workload", "df", "array", "sram_kb", "bw_B/cyc", "total_cycles", col
+        );
+        for &i in front {
+            let cp = &out.completed[i];
+            let p = &cp.point;
+            let _ = writeln!(
+                s,
+                "{:<14} {:>4} {:>9} {:>8} {:>8} {:>14} {:>14.6}",
+                p.workload,
+                p.dataflow.name(),
+                format!("{}x{}", p.array_h, p.array_w),
+                p.sram_kb,
+                p.dram_bw,
+                cp.metrics.total_cycles(),
+                y(&cp.metrics),
+            );
+        }
+    };
+    frontier_table(
+        &mut s,
+        "runtime vs energy",
+        &out.frontier_runtime_energy,
+        "energy_mJ",
+        &|m| m.energy_mj,
+    );
+    frontier_table(
+        &mut s,
+        "runtime vs peak DRAM bandwidth",
+        &out.frontier_runtime_bw,
+        "peak_bw_B/cyc",
+        &|m| m.peak_dram_bw,
+    );
+
+    let _ = writeln!(s, "\nper-workload best designs:");
+    for w in &c.workloads {
+        let mut fastest: Option<&crate::dse::CompletedPoint> = None;
+        let mut thriftiest: Option<&crate::dse::CompletedPoint> = None;
+        for cp in out.completed.iter().filter(|cp| &cp.point.workload == w) {
+            if fastest.map_or(true, |b| cp.metrics.total_cycles() < b.metrics.total_cycles()) {
+                fastest = Some(cp);
+            }
+            if thriftiest.map_or(true, |b| cp.metrics.energy_mj < b.metrics.energy_mj) {
+                thriftiest = Some(cp);
+            }
+        }
+        let (Some(f), Some(t)) = (fastest, thriftiest) else { continue };
+        let _ = writeln!(
+            s,
+            "  {w}: fastest = {} {}x{} sram {} bw {} ({} cycles, util {:.1}%); lowest energy = {} {}x{} sram {} bw {} ({:.6} mJ)",
+            f.point.dataflow.name(),
+            f.point.array_h,
+            f.point.array_w,
+            f.point.sram_kb,
+            f.point.dram_bw,
+            f.metrics.total_cycles(),
+            f.metrics.utilization * 100.0,
+            t.point.dataflow.name(),
+            t.point.array_h,
+            t.point.array_w,
+            t.point.sram_kb,
+            t.point.dram_bw,
+            t.metrics.energy_mj,
+        );
+    }
+    s
+}
+
 /// Write the full report set into `dir` (created if missing).
 pub fn write_all(dir: &Path, r: &WorkloadReport, total_pes: u64) -> Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -146,6 +244,28 @@ mod tests {
     use crate::config::{self, Topology};
     use crate::sim::Simulator;
     use crate::util::csv;
+
+    #[test]
+    fn dse_summary_is_deterministic_and_lists_frontiers() {
+        use crate::dse::{self, Campaign, Exec, RunOpts};
+        let campaign = Campaign {
+            name: "rep".into(),
+            workloads: vec!["ncf".into()],
+            dataflows: vec![crate::Dataflow::Os],
+            arrays: vec![(16, 16), (32, 32)],
+            sram_kb: vec![64],
+            dram_bw: vec![8.0],
+            energy: "28nm".into(),
+        };
+        let opts = RunOpts { exec: Exec::Local { threads: 1 }, ..RunOpts::default() };
+        let out = dse::run_campaign(campaign, &opts).unwrap();
+        let a = dse_summary(&out);
+        assert_eq!(a, dse_summary(&out), "summary must be deterministic");
+        assert!(a.contains("Pareto frontier — runtime vs energy"), "{a}");
+        assert!(a.contains("runtime vs peak DRAM bandwidth"), "{a}");
+        assert!(a.contains("per-workload best designs"), "{a}");
+        assert!(a.contains("ncf"), "{a}");
+    }
 
     fn report() -> WorkloadReport {
         let sim = Simulator::new(config::paper_default());

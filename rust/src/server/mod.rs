@@ -100,6 +100,14 @@ struct Job {
 enum JobKind {
     Run { topo: Topology, cfg: ArchConfig },
     Sweep { kind: SweepKind, topos: Vec<Topology>, cfg: ArchConfig },
+    /// One dse campaign shard: the points named by `indices`, evaluated
+    /// through the shared engine (so concurrent shards de-duplicate
+    /// layer simulations in the process-wide memo cache).
+    Dse {
+        campaign: crate::dse::Campaign,
+        topos: std::collections::HashMap<String, Topology>,
+        indices: Vec<usize>,
+    },
 }
 
 /// State shared by the accept loop, connection threads, and workers.
@@ -347,6 +355,27 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
                     cfg.validate().map(|()| JobKind::Sweep { kind, topos, cfg }),
                 );
             }
+            Ok(Request::Dse { id, campaign, indices }) => {
+                // the campaign's energy preset must match the server's
+                // engine: cached reports embed energy numbers and the
+                // model is not part of the cache key
+                let job = if shared.engine.energy_model().preset_name()
+                    != Some(campaign.energy.as_str())
+                {
+                    Err(crate::Error::Dse(format!(
+                        "campaign energy preset {:?} does not match the server's energy \
+                         model",
+                        campaign.energy
+                    )))
+                } else {
+                    // resolve at admission so unknown names error here,
+                    // not inside a worker
+                    campaign
+                        .resolve_workloads(true)
+                        .map(|topos| JobKind::Dse { campaign, topos, indices })
+                };
+                submit(shared, &writer, id, job);
+            }
         }
     }
 }
@@ -427,6 +456,18 @@ fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
                 send_line(&job.writer, &proto::point_line(job.id, p));
             }
             Some(out.points.len())
+        }
+        JobKind::Dse { campaign, topos, indices } => {
+            for &i in indices {
+                let point = campaign.point(i);
+                let topo = &topos[&point.workload];
+                let cp = crate::dse::CompletedPoint {
+                    metrics: crate::dse::evaluate_point(engine, topo, &point),
+                    point,
+                };
+                send_line(&job.writer, &proto::dse_point_line(job.id, &cp));
+            }
+            Some(indices.len())
         }
     }
 }

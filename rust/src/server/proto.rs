@@ -10,6 +10,7 @@
 //! | `{"req":"run","id":2,"workload":"mine","layers":[{...layer...},..]}` | simulate an inline topology (lowered Table-II layer objects, shape below) |
 //! | `{"req":"run","id":3,"workload":"mine","ops":[{...op...},..]}` | simulate an inline **typed workload** (operator IR, lowered server-side; op shape below) |
 //! | `{"req":"sweep","id":4,"kind":"dataflow","workload":"ncf"}` | run a paper sweep (`dataflow`\|`memory`\|`shape`); omit `workload` for the full MLPerf suite; `layers`/`ops` are accepted here too |
+//! | `{"req":"dse","id":5,"campaign":{...},"indices":[0,4,8]}` | evaluate one shard of a dse campaign ([`crate::dse::Campaign`] JSON spec; built-in workload names only). `indices` selects the campaign points to evaluate (omitted = all). Shards from concurrent clients share the server's ONE memo cache. The campaign's `energy` preset must match the server engine's model, and non-axis config fields (ofmap SRAM, word size) come from the server's base config — run the server on defaults for bit-identity with local execution |
 //! | `{"req":"stats"}` | server/queue/cache statistics (answered inline, never queued) |
 //! | `{"req":"shutdown"}` | drain the queue, flush the result store, stop |
 //!
@@ -47,6 +48,7 @@
 //! |---|---|
 //! | `result` | `"report"`: the full workload report (shape below) — `run` jobs |
 //! | `point` | one sweep grid point: coordinates + headline metrics — `sweep` jobs |
+//! | `dse_point` | one campaign point: `"point"` coordinates + `"metrics"` objectives ([`crate::dse::CompletedPoint`] shape) — `dse` jobs |
 //! | `done` | **terminal**; `"ms"` wall-clock, plus `"points"` for sweeps |
 //! | `error` | **terminal**; `"error"` message (bad request, queue closed, …) |
 //! | `stats` | **terminal**; see [`ServerStats`] field list |
@@ -75,6 +77,9 @@ use crate::util::json::Json;
 pub enum Request {
     Run { id: u64, topo: Topology, overrides: Overrides },
     Sweep { id: u64, kind: SweepKind, topos: Vec<Topology>, overrides: Overrides },
+    /// One shard of a dse campaign: the indices of the campaign points
+    /// this job evaluates (see [`crate::dse::Campaign::point`]).
+    Dse { id: u64, campaign: crate::dse::Campaign, indices: Vec<usize> },
     Stats,
     Shutdown,
 }
@@ -240,9 +245,36 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             };
             Ok(Request::Sweep { id, kind, topos, overrides })
         }
+        Some("dse") => {
+            let cj = j.get("campaign").ok_or("dse request needs a \"campaign\" spec")?;
+            let campaign = crate::dse::Campaign::from_json(cj)?;
+            campaign.validate().map_err(|e| e.to_string())?;
+            let total = campaign.len();
+            let indices: Vec<usize> = match j.get("indices") {
+                None => (0..total).collect(),
+                Some(v) => {
+                    let arr = v.as_arr().ok_or("\"indices\" must be an array")?;
+                    let mut out = Vec::with_capacity(arr.len());
+                    for x in arr {
+                        let i = x.as_u64().ok_or("\"indices\" entries must be u64")? as usize;
+                        if i >= total {
+                            return Err(format!(
+                                "campaign point index {i} out of range ({total} points)"
+                            ));
+                        }
+                        out.push(i);
+                    }
+                    out
+                }
+            };
+            if indices.is_empty() {
+                return Err("\"indices\" must not be empty".into());
+            }
+            Ok(Request::Dse { id, campaign, indices })
+        }
         Some("stats") => Ok(Request::Stats),
         Some("shutdown") => Ok(Request::Shutdown),
-        Some(other) => Err(format!("unknown req {other:?} (run|sweep|stats|shutdown)")),
+        Some(other) => Err(format!("unknown req {other:?} (run|sweep|dse|stats|shutdown)")),
         None => Err("request needs a \"req\" field".into()),
     }
 }
@@ -343,6 +375,17 @@ pub fn point_line(id: u64, p: &crate::engine::SweepPoint) -> String {
         ("utilization", Json::f64(p.report.overall_utilization(p.total_pes()))),
         ("dram_bytes", Json::u64(p.report.total_dram().total())),
         ("energy_mj", Json::f64(p.report.total_energy().total_mj())),
+    ])
+    .to_string()
+}
+
+/// One streamed dse campaign point (coordinates + extracted objectives).
+pub fn dse_point_line(id: u64, cp: &crate::dse::CompletedPoint) -> String {
+    Json::obj(vec![
+        ("id", Json::u64(id)),
+        ("event", Json::str("dse_point")),
+        ("point", cp.point.to_json()),
+        ("metrics", cp.metrics.to_json()),
     ])
     .to_string()
 }
@@ -614,6 +657,61 @@ mod tests {
             }
             other => panic!("wrong request {other:?}"),
         }
+    }
+
+    #[test]
+    fn dse_request_parses_and_validates() {
+        let line = r#"{"req":"dse","id":3,"campaign":{"workloads":["ncf"],"dataflows":["os"],"arrays":["16x16"],"sram_kb":[64],"dram_bw":[8]},"indices":[0]}"#;
+        match parse_request(line).unwrap() {
+            Request::Dse { id, campaign, indices } => {
+                assert_eq!(id, 3);
+                assert_eq!(campaign.len(), 1);
+                assert_eq!(indices, vec![0]);
+                assert_eq!(campaign.point(0).dram_bw, 8.0);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // omitted indices default to the whole grid
+        let line = r#"{"req":"dse","campaign":{"workloads":["ncf"],"dram_bw":[4,8]}}"#;
+        match parse_request(line).unwrap() {
+            Request::Dse { indices, campaign, .. } => {
+                assert_eq!(indices.len(), campaign.len())
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // out-of-range index, invalid axis, missing spec: parse-time errors
+        let oob = r#"{"req":"dse","campaign":{"workloads":["ncf"]},"indices":[999]}"#;
+        assert!(parse_request(oob).unwrap_err().contains("out of range"));
+        let bad_bw = r#"{"req":"dse","campaign":{"workloads":["ncf"],"dram_bw":[0]}}"#;
+        assert!(parse_request(bad_bw).is_err());
+        assert!(parse_request(r#"{"req":"dse"}"#).is_err());
+    }
+
+    #[test]
+    fn dse_point_line_round_trips() {
+        use crate::dse::{evaluate_point, Campaign, CompletedPoint};
+        let campaign = Campaign {
+            name: "p".into(),
+            workloads: vec!["ncf".into()],
+            dataflows: vec![Dataflow::Os],
+            arrays: vec![(16, 16)],
+            sram_kb: vec![64],
+            dram_bw: vec![8.0],
+            energy: "28nm".into(),
+        };
+        let topos = campaign.resolve_workloads(true).unwrap();
+        let engine = crate::engine::Engine::new(config::paper_default());
+        let point = campaign.point(0);
+        let cp = CompletedPoint {
+            metrics: evaluate_point(&engine, &topos["ncf"], &point),
+            point,
+        };
+        let line = dse_point_line(9, &cp);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.u64_field("id"), Some(9));
+        assert_eq!(j.str_field("event"), Some("dse_point"));
+        assert!(!is_terminal_event(&j));
+        assert_eq!(CompletedPoint::from_json(&j).unwrap(), cp);
     }
 
     #[test]

@@ -1,0 +1,180 @@
+//! Golden regression suite: checked-in fixtures pin the per-layer
+//! timing numbers (cycles, folds, utilization, mapping efficiency, the
+//! four SRAM access counts, and the finite-bandwidth stall cycles) for
+//! the first three layers of resnet50 + alexnet + the mlp GEMM suite,
+//! across **all three backends x all three dataflows**. Any future
+//! change that silently shifts a timing result fails here loudly, with
+//! the exact entry and field named.
+//!
+//! Regenerating after an *intentional* model change:
+//!
+//! ```text
+//! BLESS_GOLDEN=1 cargo test --test golden
+//! git diff rust/tests/golden/timings.json   # review the drift!
+//! ```
+//!
+//! The fixture stores numbers as shortest-round-trip decimals
+//! ([`scale_sim::util::json`]), so parsed values compare bit-exactly
+//! against freshly computed ones.
+
+use std::path::PathBuf;
+
+use scale_sim::config::{workloads, Topology};
+use scale_sim::engine::{BackendKind, Engine};
+use scale_sim::memory::stall::stalled_runtime;
+use scale_sim::util::json::Json;
+use scale_sim::Dataflow;
+
+/// Array shape the fixtures pin (32x32: small enough that the trace and
+/// RTL backends stay fast, large enough to fold every pinned layer).
+const ARRAY: u64 = 32;
+
+/// DRAM bandwidth (bytes/cycle) for the pinned stall count — a power of
+/// two so the stall model's `bytes / bw` division is exact.
+const STALL_BW: f64 = 16.0;
+
+/// Layers pinned per workload.
+const LAYERS: usize = 3;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/timings.json")
+}
+
+/// The pinned workloads: two conv suites + one GEMM suite.
+fn cases() -> Vec<(&'static str, Topology)> {
+    vec![
+        ("resnet50", workloads::builtin("resnet50").unwrap()),
+        ("alexnet", workloads::builtin("alexnet").unwrap()),
+        ("mlp", workloads::builtin_gemm("mlp").unwrap().lower().unwrap()),
+    ]
+}
+
+/// Compute every fixture entry, in the fixture's canonical order.
+fn compute_entries() -> Vec<Json> {
+    let mut out = Vec::new();
+    for (wname, topo) in cases() {
+        for layer in topo.layers.iter().take(LAYERS) {
+            for kind in BackendKind::ALL {
+                for df in Dataflow::ALL {
+                    let engine = Engine::builder()
+                        .array(ARRAY, ARRAY)
+                        .dataflow(df)
+                        .backend(kind)
+                        .build()
+                        .unwrap();
+                    let t = engine.run_layer(layer).timing;
+                    let stall =
+                        stalled_runtime(df, layer, engine.cfg(), STALL_BW).stall_cycles;
+                    out.push(Json::obj(vec![
+                        ("workload", Json::str(wname)),
+                        ("layer", Json::str(layer.name.clone())),
+                        ("backend", Json::str(kind.name())),
+                        ("dataflow", Json::str(df.name())),
+                        ("cycles", Json::u64(t.cycles)),
+                        ("row_folds", Json::u64(t.row_folds)),
+                        ("col_folds", Json::u64(t.col_folds)),
+                        ("utilization", Json::f64(t.utilization)),
+                        ("mapping_efficiency", Json::f64(t.mapping_efficiency)),
+                        ("sram_reads_ifmap", Json::u64(t.sram_reads_ifmap)),
+                        ("sram_reads_filter", Json::u64(t.sram_reads_filter)),
+                        ("sram_writes_ofmap", Json::u64(t.sram_writes_ofmap)),
+                        ("sram_reads_ofmap", Json::u64(t.sram_reads_ofmap)),
+                        ("stall_cycles_bw16", Json::u64(stall)),
+                    ]));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn write_fixture(entries: &[Json]) {
+    let path = fixture_path();
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    let mut text = String::from("{\"entries\":[\n");
+    for (i, e) in entries.iter().enumerate() {
+        text.push_str(&e.to_string());
+        if i + 1 < entries.len() {
+            text.push(',');
+        }
+        text.push('\n');
+    }
+    text.push_str("]}\n");
+    std::fs::write(&path, text).unwrap();
+}
+
+#[test]
+fn timings_match_the_golden_fixture() {
+    let entries = compute_entries();
+    assert_eq!(entries.len(), 3 * LAYERS * 3 * 3, "3 workloads x 3 layers x 3 backends x 3 dataflows");
+
+    if std::env::var("BLESS_GOLDEN").is_ok_and(|v| v == "1") {
+        write_fixture(&entries);
+        eprintln!("golden: blessed {} entries into {:?}", entries.len(), fixture_path());
+        return;
+    }
+
+    let text = std::fs::read_to_string(fixture_path()).unwrap_or_else(|e| {
+        panic!(
+            "golden fixture {:?} unreadable ({e}); regenerate with BLESS_GOLDEN=1 \
+             cargo test --test golden",
+            fixture_path()
+        )
+    });
+    let fixture = Json::parse(text.trim()).expect("golden fixture must be valid JSON");
+    let pinned = fixture.get("entries").and_then(Json::as_arr).expect("fixture entries array");
+    assert_eq!(
+        pinned.len(),
+        entries.len(),
+        "fixture entry count drifted — BLESS_GOLDEN=1 after reviewing why"
+    );
+
+    for (got, want) in entries.iter().zip(pinned) {
+        let ctx = format!(
+            "{}/{} backend={} dataflow={}",
+            got.str_field("workload").unwrap(),
+            got.str_field("layer").unwrap(),
+            got.str_field("backend").unwrap(),
+            got.str_field("dataflow").unwrap(),
+        );
+        for key in ["workload", "layer", "backend", "dataflow"] {
+            assert_eq!(got.str_field(key), want.str_field(key), "[{ctx}] fixture order drifted on {key:?}");
+        }
+        for key in [
+            "cycles",
+            "row_folds",
+            "col_folds",
+            "sram_reads_ifmap",
+            "sram_reads_filter",
+            "sram_writes_ofmap",
+            "sram_reads_ofmap",
+            "stall_cycles_bw16",
+        ] {
+            assert_eq!(
+                got.u64_field(key),
+                want.u64_field(key),
+                "[{ctx}] timing drift on {key:?} (got {:?}, golden {:?}) — if intentional, \
+                 BLESS_GOLDEN=1 cargo test --test golden",
+                got.u64_field(key),
+                want.u64_field(key),
+            );
+        }
+        for key in ["utilization", "mapping_efficiency"] {
+            let g = got.f64_field(key).unwrap();
+            let w = want.f64_field(key).unwrap_or(f64::NAN);
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "[{ctx}] {key} drifted bit-exactly: got {g}, golden {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn blessing_is_idempotent_in_memory() {
+    // two computations of the entry set must agree exactly — the
+    // regeneration path cannot be flaky
+    let a = compute_entries();
+    let b = compute_entries();
+    assert_eq!(a, b);
+}

@@ -1,0 +1,222 @@
+//! Server stress + dse-over-serve suite: concurrent clients against a
+//! bounded queue must never deadlock, a mid-flight shutdown must drain
+//! every admitted job, and a dse campaign must produce bit-identical
+//! frontiers whether it runs locally, sharded over a server, or is
+//! killed and resumed across executors.
+
+use std::path::PathBuf;
+
+use scale_sim::dse::{self, Campaign, Exec, RunOpts};
+use scale_sim::server::{start, Client, ServeOpts};
+use scale_sim::util::json::Json;
+use scale_sim::{Dataflow, LayerShape};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scale_sim_stress_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn run_request(id: u64) -> String {
+    let layers = Json::Arr(vec![scale_sim::server::proto::layer_shape_to_json(
+        &LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1),
+    )]);
+    Json::obj(vec![
+        ("req", Json::str("run")),
+        ("id", Json::u64(id)),
+        ("workload", Json::str("stress")),
+        ("layers", layers),
+        ("array", Json::str("16x16")),
+    ])
+    .to_string()
+}
+
+fn tiny_campaign() -> Campaign {
+    Campaign {
+        name: "stress".into(),
+        workloads: vec!["ncf".into()],
+        dataflows: vec![Dataflow::Os, Dataflow::Ws],
+        arrays: vec![(16, 16), (32, 32)],
+        sram_kb: vec![64],
+        dram_bw: vec![4.0, 16.0],
+        energy: "28nm".into(),
+    }
+}
+
+fn local(threads: usize) -> RunOpts {
+    RunOpts { exec: Exec::Local { threads }, ..RunOpts::default() }
+}
+
+#[test]
+fn eight_clients_against_a_tiny_queue_never_deadlock() {
+    // queue_cap 2 << clients 8: admission must backpressure, not drop,
+    // and every job must complete
+    let handle = start(ServeOpts { workers: 2, queue_cap: 2, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr();
+    const CLIENTS: usize = 8;
+    const ROUNDS: usize = 4;
+
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|ci| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr).expect("connect");
+                    let mut done = 0usize;
+                    for r in 0..ROUNDS {
+                        let id = (ci * 100 + r) as u64;
+                        let events = c.request(&run_request(id)).expect("request");
+                        let last = events.last().unwrap();
+                        assert_eq!(last.str_field("event"), Some("done"), "{last}");
+                        assert_eq!(last.u64_field("id"), Some(id));
+                        done += 1;
+                    }
+                    done
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, CLIENTS * ROUNDS);
+    });
+
+    let stats = handle.stats();
+    assert_eq!(stats.completed, (CLIENTS * ROUNDS) as u64);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.queue_depth, 0);
+    assert_eq!(stats.in_flight, 0);
+    // one shared cache: the repeated inline layer simulates once
+    assert_eq!(stats.memo.layer_sims, 1, "{:?}", stats.memo);
+    handle.shutdown();
+}
+
+#[test]
+fn midflight_shutdown_drains_admitted_jobs_cleanly() {
+    let handle = start(ServeOpts { workers: 1, queue_cap: 4, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr();
+
+    // pipeline several jobs without reading responses, so some are
+    // queued when the shutdown lands
+    let mut submitter = Client::connect(addr).unwrap();
+    const JOBS: u64 = 4;
+    for id in 0..JOBS {
+        submitter.send(&run_request(id)).unwrap();
+    }
+    let mut killer = Client::connect(addr).unwrap();
+    let bye = killer.request(r#"{"req":"shutdown"}"#).unwrap();
+    assert_eq!(bye[0].str_field("event"), Some("shutting_down"));
+
+    // every pipelined job must reach a terminal event: `done` for jobs
+    // admitted before the close, an error for ones rejected after — and
+    // the stream must terminate rather than hang
+    let mut terminals = 0;
+    let mut dones = 0;
+    while terminals < JOBS {
+        match submitter.recv() {
+            Ok(ev) => {
+                if scale_sim::server::proto::is_terminal_event(&ev) {
+                    terminals += 1;
+                    if ev.str_field("event") == Some("done") {
+                        dones += 1;
+                    }
+                }
+            }
+            Err(e) => panic!("response stream broke after {terminals} terminals: {e}"),
+        }
+    }
+    handle.join();
+    assert!(dones >= 1, "at least the in-flight job must have drained");
+}
+
+#[test]
+fn dse_sharded_over_serve_matches_local_bit_for_bit() {
+    let reference = dse::run_campaign(tiny_campaign(), &local(2)).unwrap();
+    assert!(reference.is_complete());
+
+    let handle = start(ServeOpts { workers: 3, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr().to_string();
+    let dir = tmp_dir("shard");
+    let out = dse::run_campaign(
+        tiny_campaign(),
+        &RunOpts {
+            exec: Exec::Serve { addr: addr.clone(), shards: 3 },
+            state_dir: Some(dir.clone()),
+            ..RunOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(out.is_complete());
+    assert_eq!(out.completed, reference.completed, "sharded metrics must be bit-identical");
+    assert_eq!(out.frontier_runtime_energy, reference.frontier_runtime_energy);
+    assert_eq!(out.frontier_runtime_bw, reference.frontier_runtime_bw);
+
+    // the shards shared the server's process-wide memo cache: across 8
+    // points only the distinct (config, layer-shape) pairs simulated
+    let stats = handle.stats();
+    assert!(
+        stats.memo.cache_hits > stats.memo.layer_sims,
+        "shards must share the cache: {:?}",
+        stats.memo
+    );
+    handle.shutdown();
+
+    // the journal a serve-execution wrote resumes like any other
+    let report = dse::report_campaign(&dir).unwrap();
+    assert_eq!(report.completed, reference.completed);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn killed_serve_campaign_resumes_locally_to_an_identical_frontier() {
+    let reference = dse::run_campaign(tiny_campaign(), &local(2)).unwrap();
+
+    let handle = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr().to_string();
+    let dir = tmp_dir("kill_resume");
+    // "kill" the campaign after 5 of 8 points, executed over the server
+    let cut = dse::run_campaign(
+        tiny_campaign(),
+        &RunOpts {
+            exec: Exec::Serve { addr, shards: 2 },
+            state_dir: Some(dir.clone()),
+            max_points: Some(5),
+            ..RunOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(!cut.is_complete());
+    handle.shutdown(); // the server dies with the campaign
+
+    // resume on a plain local pool: executor change must not change bits
+    let resumed = dse::resume_campaign(&dir, &local(2)).unwrap();
+    assert!(resumed.is_complete());
+    assert_eq!(resumed.ran, 3);
+    assert_eq!(resumed.restored, 5);
+    assert_eq!(resumed.completed, reference.completed);
+    assert_eq!(resumed.frontier_runtime_energy, reference.frontier_runtime_energy);
+    assert_eq!(resumed.frontier_runtime_bw, reference.frontier_runtime_bw);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn dse_over_serve_rejects_foreign_energy_and_csv_paths() {
+    let handle = start(ServeOpts::default()).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut c = tiny_campaign();
+    c.energy = "7nm".into(); // server engines price at the default 28nm
+    let err = dse::run_campaign(
+        c,
+        &RunOpts { exec: Exec::Serve { addr: addr.clone(), shards: 1 }, ..RunOpts::default() },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("energy"), "{err}");
+
+    let mut c = tiny_campaign();
+    c.workloads = vec!["topologies/ncf.csv".into()];
+    let err = dse::run_campaign(
+        c,
+        &RunOpts { exec: Exec::Serve { addr, shards: 1 }, ..RunOpts::default() },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("built-in"), "{err}");
+    handle.shutdown();
+}

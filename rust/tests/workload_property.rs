@@ -1,0 +1,224 @@
+//! Property tests over the typed workload IR: randomized operator
+//! graphs — including depthwise, grouped and dilated convolutions —
+//! must always lower without panicking, the lowered tiles must satisfy
+//! the closed-form output-dimension and MAC-count invariants, and
+//! `lower()` must be deterministic.
+
+use scale_sim::util::rng::Rng;
+use scale_sim::workload::{Conv2d, Op, OpNode, Workload};
+use scale_sim::LayerShape;
+
+/// A random *valid* Conv2d, biased to exercise the special lowerings:
+/// pointwise, depthwise, grouped, dilated, strided.
+fn random_conv(rng: &mut Rng) -> Conv2d {
+    let flavor = rng.range(0, 4);
+    let (groups, in_channels, out_channels) = match flavor {
+        // depthwise: groups == Cin == Cout
+        0 => {
+            let c = rng.range(1, 16);
+            (c, c, c)
+        }
+        // grouped: groups divides both channel counts
+        1 => {
+            let g = rng.range(2, 4);
+            (g, g * rng.range(1, 6), g * rng.range(1, 6))
+        }
+        // dense (flavors 2/3 double the weight of the common case)
+        _ => (1, rng.range(1, 24), rng.range(1, 24)),
+    };
+    let kernel_h = rng.range(1, 4);
+    let kernel_w = rng.range(1, 4);
+    let dilation = rng.range(1, 3);
+    let ekh = (kernel_h - 1) * dilation + 1;
+    let ekw = (kernel_w - 1) * dilation + 1;
+    Conv2d {
+        ifmap_h: ekh + rng.range(0, 20),
+        ifmap_w: ekw + rng.range(0, 20),
+        in_channels,
+        out_channels,
+        kernel_h,
+        kernel_w,
+        stride: rng.range(1, 3),
+        dilation,
+        groups,
+    }
+}
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.range(0, 5) {
+        0 | 1 => Op::Conv2d(random_conv(rng)),
+        2 => Op::Gemm { m: rng.range(1, 64), k: rng.range(1, 96), n: rng.range(1, 64) },
+        3 => Op::FullyConnected {
+            batch: rng.range(1, 8),
+            in_features: rng.range(1, 128),
+            out_features: rng.range(1, 64),
+        },
+        _ => {
+            let window_h = rng.range(1, 3);
+            let window_w = rng.range(1, 3);
+            Op::Pool {
+                ifmap_h: window_h + rng.range(0, 16),
+                ifmap_w: window_w + rng.range(0, 16),
+                channels: rng.range(1, 32),
+                window_h,
+                window_w,
+                stride: rng.range(1, 3),
+            }
+        }
+    }
+}
+
+fn random_workload(rng: &mut Rng, tag: u64) -> Workload {
+    let n = rng.range(1, 6) as usize;
+    let nodes = (0..n)
+        .map(|i| OpNode::new(&format!("op{tag}_{i}"), random_op(rng)))
+        .collect();
+    Workload::new(&format!("w{tag}"), nodes)
+}
+
+/// Closed-form MAC count for one op (the lowering must preserve it).
+fn expected_macs(op: &Op) -> u64 {
+    match op {
+        Op::Conv2d(c) => {
+            let (ekh, ekw) = c.effective_kernel();
+            let ofh = (c.ifmap_h - ekh) / c.stride + 1;
+            let ofw = (c.ifmap_w - ekw) / c.stride + 1;
+            ofh * ofw * c.kernel_h * c.kernel_w * c.in_channels * c.out_channels / c.groups
+        }
+        Op::Gemm { m, k, n } => m * k * n,
+        Op::FullyConnected { batch, in_features, out_features } => {
+            batch * in_features * out_features
+        }
+        Op::Pool { ifmap_h, ifmap_w, channels, window_h, window_w, stride } => {
+            let ofh = (ifmap_h - window_h) / stride + 1;
+            let ofw = (ifmap_w - window_w) / stride + 1;
+            ofh * ofw * window_h * window_w * channels
+        }
+        Op::TableII(l) => l.macs(),
+    }
+}
+
+/// Closed-form per-tile OFMAP dims for a conv op (dilation folded).
+fn expected_ofmap(c: &Conv2d) -> (u64, u64) {
+    let (ekh, ekw) = c.effective_kernel();
+    ((c.ifmap_h - ekh) / c.stride + 1, (c.ifmap_w - ekw) / c.stride + 1)
+}
+
+const CASES: u64 = 300;
+
+#[test]
+fn random_graphs_lower_without_panic_and_validate() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..CASES {
+        let w = random_workload(&mut rng, case);
+        let topo = w.lower().unwrap_or_else(|e| panic!("case {case}: valid graph failed to lower: {e}"));
+        assert!(!topo.layers.is_empty(), "case {case}");
+        for tile in &topo.layers {
+            tile.validate().unwrap_or_else(|e| panic!("case {case}: invalid tile {}: {e}", tile.name));
+        }
+    }
+}
+
+#[test]
+fn lowered_tiles_satisfy_mac_and_dimension_invariants() {
+    let mut rng = Rng::new(0xBEEF);
+    for case in 0..CASES {
+        let op = random_op(&mut rng);
+        let name = format!("p{case}");
+        let tiles = op.lower(&name).unwrap();
+        let macs: u64 = tiles.iter().map(LayerShape::macs).sum();
+        assert_eq!(macs, expected_macs(&op), "case {case}: MAC drift on {op:?}");
+
+        if let Op::Conv2d(c) = &op {
+            let (ofh, ofw) = expected_ofmap(c);
+            if c.is_pointwise() {
+                // canonical GEMM tile: M = H*W, K = Cin, N = Cout
+                assert_eq!(tiles.len(), 1);
+                assert_eq!(
+                    tiles[0].gemm_view(),
+                    (c.ifmap_h * c.ifmap_w, c.in_channels, c.out_channels),
+                    "case {case}"
+                );
+            } else {
+                let expect_tiles =
+                    if c.groups > 1 && !c.is_depthwise() { c.groups } else { 1 };
+                assert_eq!(tiles.len() as u64, expect_tiles, "case {case}: {op:?}");
+                for tile in &tiles {
+                    assert_eq!(
+                        (tile.ofmap_h(), tile.ofmap_w()),
+                        (ofh, ofw),
+                        "case {case}: OFMAP dims drift (dilation folding) on {op:?}"
+                    );
+                    // dilation must not change the window tap count
+                    assert_eq!(
+                        tile.filt_h * tile.filt_w,
+                        c.kernel_h * c.kernel_w,
+                        "case {case}"
+                    );
+                }
+            }
+        }
+        if let Op::Pool { ifmap_h, ifmap_w, window_h, window_w, stride, .. } = &op {
+            let ofh = (ifmap_h - window_h) / stride + 1;
+            let ofw = (ifmap_w - window_w) / stride + 1;
+            assert_eq!(tiles.len(), 1);
+            assert_eq!(tiles[0].npx(), ofh * ofw, "case {case}");
+            assert_eq!(tiles[0].num_filters, 1, "case {case}");
+        }
+    }
+}
+
+#[test]
+fn lowering_is_deterministic() {
+    let mut rng = Rng::new(0xD00D);
+    for case in 0..CASES {
+        let w = random_workload(&mut rng, case);
+        let a = w.lower().unwrap();
+        let b = w.lower().unwrap();
+        assert_eq!(a, b, "case {case}: lower() must be deterministic");
+        // and insensitive to an intervening clone
+        assert_eq!(w.clone().lower().unwrap(), a, "case {case}");
+    }
+}
+
+#[test]
+fn invalid_ops_error_instead_of_panicking() {
+    let mut rng = Rng::new(0xFA11);
+    for case in 0..CASES {
+        let op = random_op(&mut rng);
+        // break one invariant; every mutation must produce Err, never panic
+        let broken: Vec<Op> = match &op {
+            Op::Conv2d(c) => vec![
+                Op::Conv2d(Conv2d { in_channels: 0, ..c.clone() }),
+                Op::Conv2d(Conv2d { stride: 0, ..c.clone() }),
+                Op::Conv2d(Conv2d { kernel_h: c.ifmap_h + c.dilation, ..c.clone() }),
+                Op::Conv2d(Conv2d {
+                    groups: c.in_channels + 1,
+                    in_channels: c.in_channels + 2,
+                    ..c.clone()
+                }),
+            ],
+            Op::Gemm { k, n, .. } => vec![Op::Gemm { m: 0, k: *k, n: *n }],
+            Op::FullyConnected { in_features, out_features, .. } => vec![Op::FullyConnected {
+                batch: 0,
+                in_features: *in_features,
+                out_features: *out_features,
+            }],
+            Op::Pool { ifmap_h, ifmap_w, channels, window_w, stride, .. } => vec![Op::Pool {
+                ifmap_h: *ifmap_h,
+                ifmap_w: *ifmap_w,
+                channels: *channels,
+                window_h: ifmap_h + 1,
+                window_w: *window_w,
+                stride: *stride,
+            }],
+            Op::TableII(_) => Vec::new(),
+        };
+        for bad in broken {
+            assert!(
+                bad.lower("bad").is_err(),
+                "case {case}: {bad:?} must be rejected, not lowered"
+            );
+        }
+    }
+}
