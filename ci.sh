@@ -10,12 +10,17 @@
 #   - serve smoke: start the TCP job server on an ephemeral port with a
 #     state dir, one client round trip, a /stats check, clean protocol
 #     shutdown (queue drained + store flushed).
-#   - dse smoke: tiny campaign through `scale-sim dse run`, a simulated
-#     kill (--max-points) + `dse resume`, byte-identical `dse report`
-#     frontiers, and a >=50% cache hit rate on the resumed half.
+#   - dse smoke: tiny multi-array campaign through `scale-sim dse run`
+#     (nodes/partitions axes), a simulated kill (--max-points) +
+#     `dse resume`, byte-identical `dse report` frontiers, and a >=50%
+#     cache hit rate on the resumed half.
+#   - scaleout smoke: `scale-sim scaleout` renders the Fig 9/10 table
+#     and BENCH_scaleout.json carries nodes/partition fields.
 # The default `cargo test -q` tier includes the golden regression
-# suite (rust/tests/golden.rs), the workload-IR property suite, and the
-# server stress suite.
+# suites (rust/tests/golden.rs: timings + scaleout fixtures), the
+# workload-IR and scaleout property suites, and the server stress
+# suite; a test-inventory floor guards against suites silently
+# dropping out of the run.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -30,7 +35,22 @@ else
 fi
 
 echo "== test =="
-cargo test -q
+TEST_LOG=$(mktemp)
+cargo test -q 2>&1 | tee "$TEST_LOG"
+
+echo "== test-inventory floor =="
+# every `cargo test -q` result line reports "N passed"; the sum across
+# binaries must not drop below the checked-in floor — a suite falling
+# out of Cargo.toml (or a mass #[ignore]) fails here even though every
+# remaining test is green. Raise the floor as suites grow.
+TEST_FLOOR=378
+TOTAL_PASSED=$(grep -o '[0-9]\+ passed' "$TEST_LOG" | awk '{s+=$1} END {print s+0}')
+rm -f "$TEST_LOG"
+echo "total tests passed: $TOTAL_PASSED (floor $TEST_FLOOR)"
+if [ "$TOTAL_PASSED" -lt "$TEST_FLOOR" ]; then
+  echo "test inventory shrank below the floor ($TOTAL_PASSED < $TEST_FLOOR): a suite is not running"
+  exit 1
+fi
 
 BIN=target/release/scale-sim
 
@@ -72,24 +92,36 @@ awk -v h="$HIT" 'BEGIN { exit (h >= 0.5) ? 0 : 1 }' \
   || { echo "conv<->gemm cache sharing broken: hit rate $HIT"; exit 1; }
 echo "ok (hit rate $HIT)"
 
-echo "== smoke: help lists the serve + dse subcommands =="
-for sub in serve client bench-serve dse; do
+echo "== smoke: help lists the serve + dse + scaleout subcommands =="
+for sub in serve client bench-serve dse scaleout; do
   "$BIN" --help | grep -q "scale-sim $sub" || { echo "missing $sub in --help"; exit 1; }
 done
 echo "ok"
 
-echo "== smoke: dse campaign (run, kill+resume, frontier identity, cache hit rate) =="
+echo "== smoke: scaleout (Fig 9/10 table + BENCH_scaleout.json) =="
+"$BIN" scaleout -t ncf --partition auto > scaleout_smoke.txt
+grep -q "Fig 9" scaleout_smoke.txt || { echo "Fig 9 table missing"; exit 1; }
+rm -f scaleout_smoke.txt
+test -f BENCH_scaleout.json
+grep -q '"nodes"' BENCH_scaleout.json || { echo "BENCH_scaleout.json lacks nodes"; exit 1; }
+grep -q '"partition":"auto"' BENCH_scaleout.json || { echo "BENCH_scaleout.json lacks partition"; exit 1; }
+grep -q '"interconnect_avg_bw"' BENCH_scaleout.json
+cat BENCH_scaleout.json | head -c 300; echo
+echo "ok"
+
+echo "== smoke: dse campaign (multi-array axes, run, kill+resume, frontier identity, cache hit rate) =="
 DSE_A=$(mktemp -d)
 DSE_B=$(mktemp -d)
-# tiny 2 dataflows x 2 arrays x 2 bandwidths campaign on ncf
+# 2 dataflows x 2 arrays x 2 nodes x 2 partitions x 2 bandwidths on ncf
 cat > "$DSE_A/spec.json" <<'EOF'
-{"name":"ci","workloads":["ncf"],"dataflows":["os","ws"],"arrays":["16x16","32x32"],"sram_kb":[64],"dram_bw":[4,16],"energy":"28nm"}
+{"name":"ci","workloads":["ncf"],"dataflows":["os","ws"],"arrays":["16x16","32x32"],"nodes":[1,4],"partitions":["channels","auto"],"sram_kb":[64],"dram_bw":[4,16],"energy":"28nm"}
 EOF
 "$BIN" dse run --spec "$DSE_A/spec.json" --state-dir "$DSE_A/state" \
   --bench "$DSE_A/BENCH_dse.json" > "$DSE_A/full.txt"
 grep -q "Pareto frontier — runtime vs energy" "$DSE_A/full.txt"
+grep -q "x 2 nodes x 2 partitions" "$DSE_A/full.txt" || { echo "dse summary lacks multi axes"; exit 1; }
 # interrupted twin: stop after half the grid ("kill"), then resume
-"$BIN" dse run --spec "$DSE_A/spec.json" --state-dir "$DSE_B/state" --max-points 4 \
+"$BIN" dse run --spec "$DSE_A/spec.json" --state-dir "$DSE_B/state" --max-points 16 \
   > "$DSE_B/cut.txt"
 grep -q "campaign incomplete" "$DSE_B/cut.txt"
 "$BIN" dse resume --state-dir "$DSE_B/state" --bench "$DSE_B/BENCH_dse.json" > /dev/null

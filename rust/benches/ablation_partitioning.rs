@@ -6,6 +6,7 @@
 //! Compares output-channel vs pixel vs auto (per-layer best)
 //! partitioning for the scale-out side at 16384 PEs (256 nodes) and
 //! reports the runtime and the weight-duplication cost.
+#![allow(deprecated)] // scale_out_point is a pinned legacy shim
 
 use std::path::Path;
 

@@ -360,6 +360,7 @@ fn run_shard(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::Partition;
     use crate::Dataflow;
 
     fn tmp_dir(tag: &str) -> PathBuf {
@@ -375,6 +376,8 @@ mod tests {
             workloads: vec!["ncf".into()],
             dataflows: vec![Dataflow::Os, Dataflow::Ws],
             arrays: vec![(16, 16), (32, 32)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![4.0, 16.0],
             energy: "28nm".into(),

@@ -155,7 +155,7 @@ mod tests {
     use super::*;
     use crate::config;
     use crate::dse::evaluate_point;
-    use crate::engine::Engine;
+    use crate::engine::{Engine, Partition};
 
     fn tmp_dir(tag: &str) -> PathBuf {
         let d = std::env::temp_dir()
@@ -170,6 +170,8 @@ mod tests {
             workloads: vec!["ncf".into()],
             dataflows: vec![crate::Dataflow::Os],
             arrays: vec![(16, 16)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![4.0, 16.0],
             energy: "28nm".into(),

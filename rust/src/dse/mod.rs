@@ -10,10 +10,14 @@
 //! campaign layer on top of the engine:
 //!
 //! * [`Campaign`] — a declarative spec of the axes (workloads x dataflow
-//!   x array shape x scratchpad KB x DRAM bytes/cycle), buildable in
-//!   code or parsed from a small JSON file. Points are enumerated in a
-//!   fixed nested order (workload outer, bandwidth innermost), so every
-//!   point has a stable index — the unit of checkpointing and sharding.
+//!   x array shape x node count x partition x scratchpad KB x DRAM
+//!   bytes/cycle), buildable in code or parsed from a small JSON file.
+//!   The `nodes`/`partitions` axes sweep §IV-E multi-array scale-out
+//!   systems ([`crate::engine::multi`]) next to the single-array axes —
+//!   Pareto frontiers over array count come for free. Points are
+//!   enumerated in a fixed nested order (workload outer, bandwidth
+//!   innermost), so every point has a stable index — the unit of
+//!   checkpointing and sharding.
 //! * [`evaluate_point`] — the objective extractor: stall-free runtime
 //!   from the engine's memoized [`crate::engine::Engine::run_layer_with`]
 //!   path, stall cycles from the finite-bandwidth replay
@@ -61,16 +65,17 @@ use crate::config::{workloads, ArchConfig, Topology};
 use crate::dataflow::Dataflow;
 use crate::dram::{self, DramConfig};
 use crate::energy::EnergyModel;
-use crate::engine::Engine;
+use crate::engine::{Engine, MultiArrayConfig, Partition};
 use crate::memory::stall;
 use crate::util::json::Json;
 use crate::{Error, Result};
 
 /// A declarative campaign: the cartesian axes of one design-space
 /// exploration. Point `index` decodes in nested order — workload
-/// outermost, then dataflow, array shape, scratchpad size, and DRAM
-/// bandwidth innermost — so consecutive indices share their architecture
-/// configuration and therefore their memo-cache entries.
+/// outermost, then dataflow, array shape, node count, partition,
+/// scratchpad size, and DRAM bandwidth innermost — so consecutive
+/// indices share their architecture configuration and therefore their
+/// memo-cache entries.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Campaign {
     pub name: String,
@@ -81,6 +86,12 @@ pub struct Campaign {
     pub dataflows: Vec<Dataflow>,
     /// Array shapes `(rows, cols)` — the Fig 8 aspect-ratio axis.
     pub arrays: Vec<(u64, u64)>,
+    /// Multi-array node counts (§IV-E scale-out axis): each value `n`
+    /// simulates `n` replicas of the point's array shape. `[1]` (the
+    /// default) keeps the campaign single-array.
+    pub nodes: Vec<u64>,
+    /// Partition strategies for multi-array points.
+    pub partitions: Vec<Partition>,
     /// Scratchpad sizes in KB, applied to the IFMAP and filter
     /// partitions in lockstep (the Fig 7 convention).
     pub sram_kb: Vec<u64>,
@@ -100,7 +111,25 @@ impl Campaign {
             workloads: vec!["alphagozero".into(), "ncf".into()],
             dataflows: Dataflow::ALL.to_vec(),
             arrays: vec![(32, 512), (64, 256), (128, 128), (256, 64), (512, 32)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             sram_kb: vec![64, 256, 1024],
+            dram_bw: vec![10.0, 40.0],
+            energy: "28nm".into(),
+        }
+    }
+
+    /// The §IV-E scale-out study as a campaign: 8x8 nodes swept over the
+    /// paper's PE budgets under all three partition strategies.
+    pub fn paper_scaleout() -> Campaign {
+        Campaign {
+            name: "paper-scaleout".into(),
+            workloads: vec!["alphagozero".into(), "ncf".into()],
+            dataflows: vec![Dataflow::Os],
+            arrays: vec![(crate::engine::multi::NODE_DIM, crate::engine::multi::NODE_DIM)],
+            nodes: vec![1, 4, 16, 64, 256],
+            partitions: Partition::ALL.to_vec(),
+            sram_kb: vec![512],
             dram_bw: vec![10.0, 40.0],
             energy: "28nm".into(),
         }
@@ -111,6 +140,8 @@ impl Campaign {
         self.workloads.len()
             * self.dataflows.len()
             * self.arrays.len()
+            * self.nodes.len()
+            * self.partitions.len()
             * self.sram_kb.len()
             * self.dram_bw.len()
     }
@@ -135,6 +166,12 @@ impl Campaign {
         }
         if self.arrays.iter().any(|&(h, w)| h == 0 || w == 0) {
             return bad("array dimensions must be positive".into());
+        }
+        if self.nodes.is_empty() || self.partitions.is_empty() {
+            return bad("nodes and partitions axes need at least one value".into());
+        }
+        if self.nodes.iter().any(|&n| n == 0) {
+            return bad("node counts must be positive".into());
         }
         if self.sram_kb.iter().any(|&kb| kb == 0) {
             return bad("sram_kb entries must be positive".into());
@@ -164,6 +201,10 @@ impl Campaign {
         i /= self.dram_bw.len();
         let sram_kb = self.sram_kb[i % self.sram_kb.len()];
         i /= self.sram_kb.len();
+        let partition = self.partitions[i % self.partitions.len()];
+        i /= self.partitions.len();
+        let nodes = self.nodes[i % self.nodes.len()];
+        i /= self.nodes.len();
         let (array_h, array_w) = self.arrays[i % self.arrays.len()];
         i /= self.arrays.len();
         let dataflow = self.dataflows[i % self.dataflows.len()];
@@ -174,6 +215,8 @@ impl Campaign {
             dataflow,
             array_h,
             array_w,
+            nodes,
+            partition,
             sram_kb,
             dram_bw,
         }
@@ -209,9 +252,14 @@ impl Campaign {
         Ok(map)
     }
 
-    /// Canonical JSON form (all axes explicit; stable field order).
+    /// Canonical JSON form (stable field order). The multi-array axes
+    /// are emitted only when they deviate from their single-array
+    /// defaults (`[1]` / `["channels"]`), so a single-array campaign's
+    /// canonical form — and therefore its [`Campaign::fingerprint`] —
+    /// is identical to what pre-multi-array builds wrote: their
+    /// journals keep resuming.
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("name", Json::str(self.name.clone())),
             (
                 "workloads",
@@ -227,15 +275,35 @@ impl Campaign {
                     self.arrays.iter().map(|&(h, w)| Json::str(format!("{h}x{w}"))).collect(),
                 ),
             ),
-            ("sram_kb", Json::Arr(self.sram_kb.iter().map(|&kb| Json::u64(kb)).collect())),
-            ("dram_bw", Json::Arr(self.dram_bw.iter().map(|&bw| Json::f64(bw)).collect())),
-            ("energy", Json::str(self.energy.clone())),
-        ])
+        ];
+        if self.nodes != [1] {
+            fields.push((
+                "nodes",
+                Json::Arr(self.nodes.iter().map(|&n| Json::u64(n)).collect()),
+            ));
+        }
+        if self.partitions != [Partition::OutputChannels] {
+            fields.push((
+                "partitions",
+                Json::Arr(self.partitions.iter().map(|p| Json::str(p.name())).collect()),
+            ));
+        }
+        fields.push((
+            "sram_kb",
+            Json::Arr(self.sram_kb.iter().map(|&kb| Json::u64(kb)).collect()),
+        ));
+        fields.push((
+            "dram_bw",
+            Json::Arr(self.dram_bw.iter().map(|&bw| Json::f64(bw)).collect()),
+        ));
+        fields.push(("energy", Json::str(self.energy.clone())));
+        Json::obj(fields)
     }
 
     /// Parse the JSON form. Missing axes default to a single value
-    /// (array 128x128, sram 512 KB, bandwidth 64 B/cycle, all three
-    /// dataflows, 28 nm energy); `workloads` is required.
+    /// (array 128x128, 1 node, channels partition, sram 512 KB,
+    /// bandwidth 64 B/cycle, all three dataflows, 28 nm energy);
+    /// `workloads` is required.
     pub fn from_json(j: &Json) -> std::result::Result<Campaign, String> {
         let name = j.str_field("name").unwrap_or("campaign").to_string();
         let workloads = match j.get("workloads").and_then(Json::as_arr) {
@@ -281,6 +349,30 @@ impl Campaign {
                     .collect::<std::result::Result<Vec<_>, String>>()?
             }
         };
+        let nodes = match j.get("nodes") {
+            None => vec![1],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"nodes\" must be an array")?;
+                a.iter()
+                    .map(|x| {
+                        x.as_u64().ok_or_else(|| "\"nodes\" entries must be u64".to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
+        let partitions = match j.get("partitions") {
+            None => vec![Partition::default()],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"partitions\" must be an array")?;
+                a.iter()
+                    .map(|p| {
+                        let s =
+                            p.as_str().ok_or("\"partitions\" entries must be strings")?;
+                        Partition::parse(s).map_err(|e| e.to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
         let sram_kb = match j.get("sram_kb") {
             None => vec![512],
             Some(v) => {
@@ -305,7 +397,17 @@ impl Campaign {
             }
         };
         let energy = j.str_field("energy").unwrap_or("28nm").to_string();
-        Ok(Campaign { name, workloads, dataflows, arrays, sram_kb, dram_bw, energy })
+        Ok(Campaign {
+            name,
+            workloads,
+            dataflows,
+            arrays,
+            nodes,
+            partitions,
+            sram_kb,
+            dram_bw,
+            energy,
+        })
     }
 
     /// Stable hash of the canonical JSON form — the journal's identity
@@ -329,16 +431,22 @@ pub struct CampaignPoint {
     pub index: usize,
     pub workload: String,
     pub dataflow: Dataflow,
+    /// Per-node array shape (the whole array when `nodes == 1`).
     pub array_h: u64,
     pub array_w: u64,
+    /// Multi-array coordinates: `nodes` replicas of the array shape,
+    /// split by `partition` ([`crate::engine::multi`]).
+    pub nodes: u64,
+    pub partition: Partition,
     /// IFMAP and filter partition size (lockstep, Fig 7 convention).
     pub sram_kb: u64,
-    /// Modeled DRAM read bandwidth in bytes/cycle.
+    /// Modeled DRAM read bandwidth in bytes/cycle (shared across nodes).
     pub dram_bw: f64,
 }
 
 impl CampaignPoint {
-    /// The point's effective architecture: engine base + coordinates.
+    /// The point's effective per-node architecture: engine base +
+    /// coordinates.
     pub fn config(&self, base: &ArchConfig) -> ArchConfig {
         ArchConfig {
             array_h: self.array_h,
@@ -357,6 +465,8 @@ impl CampaignPoint {
             ("dataflow", Json::str(self.dataflow.name())),
             ("array_h", Json::u64(self.array_h)),
             ("array_w", Json::u64(self.array_w)),
+            ("nodes", Json::u64(self.nodes)),
+            ("partition", Json::str(self.partition.name())),
             ("sram_kb", Json::u64(self.sram_kb)),
             ("dram_bw", Json::f64(self.dram_bw)),
         ])
@@ -372,6 +482,15 @@ impl CampaignPoint {
             .map_err(|e| e.to_string())?,
             array_h: need_u64(j, "array_h")?,
             array_w: need_u64(j, "array_w")?,
+            // absent in pre-multi-array journals: single-array defaults
+            nodes: match j.get("nodes") {
+                None => 1,
+                Some(_) => need_u64(j, "nodes")?,
+            },
+            partition: match j.str_field("partition") {
+                None => Partition::default(),
+                Some(s) => Partition::parse(s).map_err(|e| e.to_string())?,
+            },
             sram_kb: need_u64(j, "sram_kb")?,
             dram_bw: need_f64(j, "dram_bw")?,
         })
@@ -511,8 +630,17 @@ fn substrate_replay(cfg: &ArchConfig, layer: &crate::arch::LayerShape) -> (u64, 
 /// only in bandwidth, and across shards on a server); the stall replay
 /// is a cheap fold-level pass computed fresh, and the DRAM-substrate
 /// replay is memoized per (config, layer-shape).
+///
+/// A multi-array point (`nodes > 1`) runs each per-node sub-shape
+/// through the same memoized path and composes the system-level
+/// objectives: slowest-node runtimes, shared-DRAM stalls (the point's
+/// bandwidth split across busy nodes), aggregate energy/traffic, and
+/// the summed interconnect bandwidth demand.
 pub fn evaluate_point(engine: &Engine, topo: &Topology, point: &CampaignPoint) -> PointMetrics {
     let cfg = point.config(engine.cfg());
+    if point.nodes > 1 {
+        return evaluate_multi_point(engine, topo, point, &cfg);
+    }
     let report = engine.run_topology_with(&cfg, topo);
     let mut stall_cycles = 0u64;
     let mut dram_requests = 0u64;
@@ -540,6 +668,45 @@ pub fn evaluate_point(engine: &Engine, topo: &Topology, point: &CampaignPoint) -
     }
 }
 
+/// The multi-array arm of [`evaluate_point`].
+fn evaluate_multi_point(
+    engine: &Engine,
+    topo: &Topology,
+    point: &CampaignPoint,
+    cfg: &ArchConfig,
+) -> PointMetrics {
+    let multi = MultiArrayConfig::new(point.nodes, cfg.array_h, cfg.array_w, point.partition);
+    let report = engine.run_multi_with(cfg, topo, &multi, Some(point.dram_bw));
+    // row-hit statistics: replay each distinct per-node sub-shape once
+    // (memoized) and weight by how many nodes stream it
+    let mut dram_requests = 0u64;
+    let mut dram_row_hits = 0u64;
+    for ml in &report.layers {
+        let (requests, row_hits) = substrate_replay(cfg, &ml.node_report.layer);
+        dram_requests += requests * ml.node_count;
+        dram_row_hits += row_hits * ml.node_count;
+        if let Some(r) = &ml.remainder {
+            let (requests, row_hits) = substrate_replay(cfg, &r.layer);
+            dram_requests += requests;
+            dram_row_hits += row_hits;
+        }
+    }
+    PointMetrics {
+        ideal_cycles: report.total_cycles(),
+        stall_cycles: report.total_stall_cycles(),
+        energy_mj: report.total_energy().total_mj(),
+        peak_dram_bw: report.peak_interconnect_bw(),
+        avg_dram_bw: report.avg_interconnect_bw(),
+        dram_bytes: report.total_dram().total(),
+        dram_row_hit_rate: if dram_requests == 0 {
+            0.0
+        } else {
+            dram_row_hits as f64 / dram_requests as f64
+        },
+        utilization: report.utilization(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -551,6 +718,8 @@ mod tests {
             workloads: vec!["ncf".into()],
             dataflows: vec![Dataflow::Os, Dataflow::Ws],
             arrays: vec![(16, 16), (32, 32)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![4.0, 16.0],
             energy: "28nm".into(),
@@ -656,5 +825,122 @@ mod tests {
         let mut c = tiny();
         c.workloads = vec!["topologies/ncf.csv".into()];
         assert!(c.resolve_workloads(true).is_err());
+    }
+
+    #[test]
+    fn paper_scaleout_campaign_validates_and_spans_the_pe_sweep() {
+        // the `dse run --scaleout` preset: 8x8 nodes over the paper's
+        // PE budgets (64..16384) under every partition strategy
+        let c = Campaign::paper_scaleout();
+        c.validate().unwrap();
+        assert_eq!(c.len(), 2 * 5 * 3 * 2);
+        assert_eq!(c.nodes, vec![1, 4, 16, 64, 256]);
+        let last = c.point(c.len() - 1);
+        assert_eq!((last.nodes, last.partition), (256, Partition::Auto));
+        assert_eq!(
+            (last.array_h, last.array_w),
+            (crate::engine::multi::NODE_DIM, crate::engine::multi::NODE_DIM)
+        );
+        // the multi axes are explicit in its canonical form
+        let wire = c.to_json().to_string();
+        assert!(wire.contains("\"nodes\"") && wire.contains("\"partitions\""), "{wire}");
+    }
+
+    #[test]
+    fn single_array_fingerprints_match_pre_multi_journals() {
+        // a journal header written before the nodes/partitions axes
+        // existed must still resume: the canonical form (and so the
+        // fingerprint) of a single-array campaign is unchanged
+        let c = tiny();
+        let legacy_wire = r#"{"name":"t","workloads":["ncf"],"dataflows":["os","ws"],"arrays":["16x16","32x32"],"sram_kb":[64],"dram_bw":[4,16],"energy":"28nm"}"#;
+        let legacy = Campaign::from_json(&Json::parse(legacy_wire).unwrap()).unwrap();
+        assert_eq!(legacy, c);
+        assert_eq!(
+            c.to_json().to_string(),
+            legacy_wire,
+            "canonical form must omit the default multi-array axes"
+        );
+        assert_eq!(legacy.fingerprint(), c.fingerprint());
+    }
+
+    fn tiny_multi() -> Campaign {
+        Campaign {
+            name: "tm".into(),
+            workloads: vec!["ncf".into()],
+            dataflows: vec![Dataflow::Os],
+            arrays: vec![(8, 8)],
+            nodes: vec![1, 4],
+            partitions: vec![Partition::OutputChannels, Partition::Auto],
+            sram_kb: vec![64],
+            dram_bw: vec![4.0, 16.0],
+            energy: "28nm".into(),
+        }
+    }
+
+    #[test]
+    fn multi_axes_enumerate_between_array_and_sram() {
+        let c = tiny_multi();
+        assert_eq!(c.len(), 8);
+        c.validate().unwrap();
+        // bandwidth innermost, then partition, then nodes
+        assert_eq!((c.point(0).nodes, c.point(0).partition), (1, Partition::OutputChannels));
+        assert_eq!(c.point(1).dram_bw, 16.0);
+        assert_eq!(c.point(2).partition, Partition::Auto);
+        assert_eq!(c.point(4).nodes, 4);
+        // round trip keeps the new axes and shifts the fingerprint
+        let back = Campaign::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        let mut single = c.clone();
+        single.nodes = vec![1];
+        assert_ne!(single.fingerprint(), c.fingerprint());
+        // zero node counts are rejected
+        let mut bad = c;
+        bad.nodes = vec![0];
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn multi_points_round_trip_and_default_on_legacy_journals() {
+        let c = tiny_multi();
+        let topos = c.resolve_workloads(true).unwrap();
+        let engine = Engine::new(config::paper_default());
+        let p = c.point(6); // 4 nodes, auto partition
+        assert_eq!((p.nodes, p.partition), (4, Partition::Auto));
+        let cp = CompletedPoint { metrics: evaluate_point(&engine, &topos["ncf"], &p), point: p };
+        let back =
+            CompletedPoint::from_json(&Json::parse(&cp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, cp, "multi-array journal round trip must be bit-identical");
+        // a pre-multi-array journal line (no nodes/partition) still parses
+        let legacy = Json::parse(
+            r#"{"index":0,"workload":"ncf","dataflow":"os","array_h":8,"array_w":8,"sram_kb":64,"dram_bw":4}"#,
+        )
+        .unwrap();
+        let lp = CampaignPoint::from_json(&legacy).unwrap();
+        assert_eq!((lp.nodes, lp.partition), (1, Partition::OutputChannels));
+    }
+
+    #[test]
+    fn multi_point_metrics_compose_the_scaleout_system() {
+        let c = tiny_multi();
+        let topos = c.resolve_workloads(true).unwrap();
+        let engine = Engine::new(config::paper_default());
+        let single = evaluate_point(&engine, &topos["ncf"], &c.point(0));
+        let multi = evaluate_point(&engine, &topos["ncf"], &c.point(4)); // 4 nodes, channels
+        assert_eq!(multi, evaluate_point(&engine, &topos["ncf"], &c.point(4)), "deterministic");
+        // partitioned nodes run in parallel: never slower than one node
+        assert!(multi.ideal_cycles <= single.ideal_cycles);
+        // the report view agrees with the metrics
+        let mc = MultiArrayConfig::new(4, 8, 8, Partition::OutputChannels);
+        let report = engine.run_multi_with(
+            &c.point(4).config(engine.cfg()),
+            &topos["ncf"],
+            &mc,
+            Some(c.point(4).dram_bw),
+        );
+        assert_eq!(multi.ideal_cycles, report.total_cycles());
+        assert_eq!(multi.stall_cycles, report.total_stall_cycles());
+        assert_eq!(multi.dram_bytes, report.total_dram().total());
+        assert!(multi.energy_mj > 0.0 && multi.peak_dram_bw > 0.0);
+        assert!(multi.utilization > 0.0 && multi.utilization <= 1.0);
     }
 }

@@ -16,6 +16,7 @@ use crate::sim::WorkloadReport;
 use crate::sweep::parallel_map;
 
 use super::cache::MemoStats;
+use super::multi::{MultiArrayConfig, Partition};
 use super::Engine;
 
 /// One evaluated grid point: the config coordinates plus the full
@@ -28,6 +29,11 @@ pub struct SweepPoint {
     pub array_w: u64,
     pub ifmap_sram_kb: u64,
     pub filter_sram_kb: u64,
+    /// Multi-array coordinates: `nodes` arrays of `array_h x array_w`
+    /// each, split by `partition`. `nodes == 1` is the plain
+    /// single-array point (bit-identical to a grid without the axes).
+    pub nodes: u64,
+    pub partition: Partition,
     pub report: WorkloadReport,
 }
 
@@ -45,8 +51,9 @@ impl SweepPoint {
         }
     }
 
+    /// PEs across the whole (possibly multi-array) system.
     pub fn total_pes(&self) -> u64 {
-        self.array_h * self.array_w
+        self.array_h * self.array_w * self.nodes
     }
 }
 
@@ -96,9 +103,10 @@ pub struct SweepOutcome {
 impl SweepOutcome {
     /// Find one point by its (workload name, dataflow, array shape)
     /// coordinates. Returns `None` when the coordinates are ambiguous —
-    /// i.e. the grid also swept an SRAM axis, so several points share
-    /// them — rather than silently returning an arbitrary one; use
-    /// [`SweepOutcome::find_sram`] on such grids.
+    /// i.e. the grid also swept an SRAM, node-count or partition axis,
+    /// so several points share them — rather than silently returning an
+    /// arbitrary one; use [`SweepOutcome::find_sram`] (or filter on
+    /// `nodes`/`partition` directly) on such grids.
     pub fn find(&self, workload: &str, df: Dataflow, h: u64, w: u64) -> Option<&SweepPoint> {
         let mut it = self.points.iter().filter(|p| {
             p.workload == workload && p.dataflow == df && p.array_h == h && p.array_w == w
@@ -110,7 +118,10 @@ impl SweepOutcome {
         Some(first)
     }
 
-    /// Find one point on a grid that swept the scratchpad axis.
+    /// Find one point on a grid that swept the scratchpad axis. Like
+    /// [`SweepOutcome::find`], returns `None` when the coordinates are
+    /// still ambiguous (the grid also swept the node-count/partition
+    /// axes) rather than silently picking an arbitrary match.
     pub fn find_sram(
         &self,
         workload: &str,
@@ -119,13 +130,18 @@ impl SweepOutcome {
         w: u64,
         ifmap_sram_kb: u64,
     ) -> Option<&SweepPoint> {
-        self.points.iter().find(|p| {
+        let mut it = self.points.iter().filter(|p| {
             p.workload == workload
                 && p.dataflow == df
                 && p.array_h == h
                 && p.array_w == w
                 && p.ifmap_sram_kb == ifmap_sram_kb
-        })
+        });
+        let first = it.next()?;
+        if it.next().is_some() {
+            return None; // ambiguous: nodes/partition axes differentiate
+        }
+        Some(first)
     }
 }
 
@@ -138,6 +154,8 @@ pub struct SweepGrid<'e> {
     dataflows: Vec<Dataflow>,
     arrays: Vec<(u64, u64)>,
     sram_kb: Vec<(u64, u64)>,
+    nodes: Vec<u64>,
+    partitions: Vec<Partition>,
     threads: usize,
 }
 
@@ -150,6 +168,8 @@ impl<'e> SweepGrid<'e> {
             dataflows: vec![cfg.dataflow],
             arrays: vec![(cfg.array_h, cfg.array_w)],
             sram_kb: vec![(cfg.ifmap_sram_kb, cfg.filter_sram_kb)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             threads: engine.threads(),
         }
     }
@@ -208,6 +228,23 @@ impl<'e> SweepGrid<'e> {
         self
     }
 
+    /// Multi-array node-count axis (§IV-E scale-out): each value `n`
+    /// simulates `n` replicas of the point's array shape, split by the
+    /// partition axis. `1` (the default) is the plain single array.
+    /// Panics on a zero node count.
+    pub fn nodes(mut self, counts: &[u64]) -> Self {
+        assert!(counts.iter().all(|&n| n > 0), "node counts must be positive");
+        self.nodes = counts.to_vec();
+        self
+    }
+
+    /// Partition-strategy axis for multi-array points (ignored at
+    /// `nodes == 1`, where every strategy is the whole layer).
+    pub fn partitions(mut self, ps: &[Partition]) -> Self {
+        self.partitions = ps.to_vec();
+        self
+    }
+
     /// Worker-thread override (default: the engine's thread count).
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = n.max(1);
@@ -216,7 +253,12 @@ impl<'e> SweepGrid<'e> {
 
     /// Number of points this grid will evaluate.
     pub fn len(&self) -> usize {
-        self.workloads.len() * self.dataflows.len() * self.arrays.len() * self.sram_kb.len()
+        self.workloads.len()
+            * self.dataflows.len()
+            * self.arrays.len()
+            * self.sram_kb.len()
+            * self.nodes.len()
+            * self.partitions.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -229,12 +271,17 @@ impl<'e> SweepGrid<'e> {
     pub fn run(self) -> SweepOutcome {
         let engine = self.engine;
         let base = engine.cfg();
-        let mut jobs: Vec<(&Topology, Dataflow, (u64, u64), (u64, u64))> = Vec::new();
+        type Job<'t> = (&'t Topology, Dataflow, (u64, u64), (u64, u64), u64, Partition);
+        let mut jobs: Vec<Job<'_>> = Vec::new();
         for topo in &self.workloads {
             for &df in &self.dataflows {
                 for &arr in &self.arrays {
                     for &sram in &self.sram_kb {
-                        jobs.push((topo, df, arr, sram));
+                        for &n in &self.nodes {
+                            for &p in &self.partitions {
+                                jobs.push((topo, df, arr, sram, n, p));
+                            }
+                        }
                     }
                 }
             }
@@ -242,25 +289,34 @@ impl<'e> SweepGrid<'e> {
 
         let before = engine.cache_stats();
         let t0 = Instant::now();
-        let points = parallel_map(&jobs, self.threads, |&(topo, df, (h, w), (ikb, fkb))| {
-            let cfg = ArchConfig {
-                array_h: h,
-                array_w: w,
-                dataflow: df,
-                ifmap_sram_kb: ikb,
-                filter_sram_kb: fkb,
-                ..base.clone()
-            };
-            SweepPoint {
-                workload: topo.name.clone(),
-                dataflow: df,
-                array_h: h,
-                array_w: w,
-                ifmap_sram_kb: ikb,
-                filter_sram_kb: fkb,
-                report: engine.run_topology_with(&cfg, topo),
-            }
-        });
+        let points =
+            parallel_map(&jobs, self.threads, |&(topo, df, (h, w), (ikb, fkb), n, p)| {
+                let cfg = ArchConfig {
+                    array_h: h,
+                    array_w: w,
+                    dataflow: df,
+                    ifmap_sram_kb: ikb,
+                    filter_sram_kb: fkb,
+                    ..base.clone()
+                };
+                let report = if n == 1 {
+                    engine.run_topology_with(&cfg, topo)
+                } else {
+                    let multi = MultiArrayConfig::new(n, h, w, p);
+                    engine.run_multi_with(&cfg, topo, &multi, None).to_workload_report()
+                };
+                SweepPoint {
+                    workload: topo.name.clone(),
+                    dataflow: df,
+                    array_h: h,
+                    array_w: w,
+                    ifmap_sram_kb: ikb,
+                    filter_sram_kb: fkb,
+                    nodes: n,
+                    partition: p,
+                    report,
+                }
+            });
         let wall = t0.elapsed();
         let memo = engine.cache_stats().since(&before);
         SweepOutcome { points, stats: SweepStats { points: jobs.len(), wall, memo } }
@@ -365,6 +421,33 @@ mod tests {
         for (a, b) in out.points[0].report.layers.iter().zip(&out.points[1].report.layers) {
             assert_eq!(a, b, "conv- and GEMM-encoded reports must be bit-identical");
         }
+    }
+
+    #[test]
+    fn node_axis_multiplies_the_grid_and_single_node_matches_plain() {
+        let e = engine();
+        let t = topo("t");
+        let plain = e.sweep().workload(&t).square_arrays(&[8]).run();
+        let multi = e
+            .sweep()
+            .workload(&t)
+            .square_arrays(&[8])
+            .nodes(&[1, 4])
+            .partitions(&[Partition::OutputChannels, Partition::Auto])
+            .run();
+        assert_eq!(multi.points.len(), 4);
+        // nodes outer, partition inner, appended after the legacy axes
+        assert_eq!(multi.points[0].nodes, 1);
+        assert_eq!(multi.points[1].partition, Partition::Auto);
+        assert_eq!(multi.points[2].nodes, 4);
+        // single-node points are bit-identical to the plain grid
+        assert_eq!(multi.points[0].report, plain.points[0].report);
+        assert_eq!(multi.points[1].report, plain.points[0].report);
+        assert_eq!(multi.points[0].total_pes(), 64);
+        assert_eq!(multi.points[2].total_pes(), 256);
+        // 4-node points really partitioned: aggregate DRAM differs from
+        // one node's
+        assert_ne!(multi.points[2].report.total_dram(), plain.points[0].report.total_dram());
     }
 
     #[test]

@@ -35,10 +35,14 @@
 pub mod backend;
 pub(crate) mod cache;
 pub mod grid;
+pub mod multi;
 
 pub use backend::{Analytical, Backend, BackendKind, Rtl, TraceDriven};
 pub use cache::{MemoStats, WarmStats};
 pub use grid::{SweepGrid, SweepOutcome, SweepPoint, SweepStats};
+pub use multi::{
+    MultiArrayConfig, MultiLayerReport, MultiWorkloadReport, Partition, ScaleComparison,
+};
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
@@ -295,16 +299,6 @@ impl Engine {
             fixed_cycles: fixed,
             flexible_cycles: flexible,
         }
-    }
-
-    /// Scale-up vs scale-out comparison (§IV-E) under the engine's base
-    /// configuration.
-    pub fn compare_scaling(
-        &self,
-        layers: &[LayerShape],
-        pe_budget: u64,
-    ) -> crate::scaleout::ScaleComparison {
-        crate::scaleout::compare_topology(&self.cfg, layers, pe_budget)
     }
 
     /// Write per-layer cycle-accurate SRAM traces: both the event-list

@@ -1,0 +1,839 @@
+//! Multi-array scale-out as a first-class engine citizen (§IV-E,
+//! Figs 9 & 10).
+//!
+//! The paper's scale-up vs scale-out study compares one big `√P x √P`
+//! array against `P/64` replicated 8x8 nodes with the workload
+//! partitioned across them. The original `scaleout` module computed that
+//! comparison with hand-rolled closed forms — no memoization, no DSE
+//! axis, no server path. This module promotes the multi-array system
+//! into the engine:
+//!
+//! * [`MultiArrayConfig`] — `nodes` x `node_shape` arrays plus a
+//!   [`Partition`] strategy. Each lowered [`LayerShape`] is split into
+//!   per-node sub-shapes by [`split_layer`], **conserving MACs and OFMAP
+//!   pixels exactly** (the trailing node takes the remainder share
+//!   instead of rounding up).
+//! * Every sub-shape runs through the engine's memoized
+//!   [`Engine::run_layer_with`] path, so identical sub-shapes across
+//!   nodes, sweep points, dse campaigns and `serve` clients share ONE
+//!   memo table — an `Auto` partition point after its two fixed-strategy
+//!   siblings is served entirely from cache.
+//! * Node timings compose under the parallel-node model (slowest node
+//!   bounds the layer; layers serialize), and a shared-DRAM contention
+//!   model splits a finite DRAM bandwidth across the busy nodes and
+//!   feeds each share through [`crate::memory::stall`] — the aggregate
+//!   per-node demand the paper only tabulates is reported as the
+//!   required interconnect bandwidth ([`MultiLayerReport::avg_bw`] /
+//!   [`MultiLayerReport::peak_bw`]).
+//!
+//! The legacy `scaleout::compare_topology` closed forms survive as
+//! bit-identical deprecated shims over [`Engine::compare_scaling_with`]
+//! (pinned by the equivalence suite): the shim derives the legacy
+//! quantities — full-share node cycles, full-share filter bytes times
+//! used nodes — from the [`MultiLayerReport`] rather than recomputing
+//! them.
+
+use crate::arch::LayerShape;
+use crate::config::{ArchConfig, Topology};
+use crate::energy::EnergyBreakdown;
+use crate::memory::{stall, BandwidthReport, DramTraffic};
+use crate::sim::{LayerReport, WorkloadReport};
+use crate::util::{ceil_div, isqrt};
+use crate::{Error, Result};
+
+use super::Engine;
+
+/// Scale-out node geometry used in the paper's study (8x8 tensor-core
+/// style nodes).
+pub const NODE_DIM: u64 = 8;
+pub const NODE_PES: u64 = NODE_DIM * NODE_DIM;
+
+/// The paper's PE-budget sweep: 64 PEs to 16384 PEs, x4 per step.
+pub const PE_SWEEP: [u64; 5] = [64, 256, 1024, 4096, 16384];
+
+/// Workload partitioning strategy across the nodes of a multi-array
+/// system.
+///
+/// The paper's study uses output-channel partitioning but notes that
+/// "alternate partitioning strategies exist, and in fact the best
+/// strategy may differ from layer to layer depending on the number of
+/// filters vs channels" (§IV-E).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Partition {
+    /// Split filters across nodes (the paper's choice): each node
+    /// produces different output channels.
+    #[default]
+    OutputChannels,
+    /// Split output pixels (ofmap rows) across nodes: each node produces
+    /// all channels for a horizontal stripe of the OFMAP. Every node
+    /// fetches the FULL filter set — weight duplication is the price.
+    Pixels,
+    /// Per layer, pick whichever fixed strategy is faster — by total
+    /// runtime including shared-DRAM stalls when a bandwidth is
+    /// modeled, by stall-free cycles otherwise (ties go to
+    /// `OutputChannels`, matching the legacy closed forms, which never
+    /// model a shared bandwidth).
+    Auto,
+}
+
+impl Partition {
+    pub const ALL: [Partition; 3] =
+        [Partition::OutputChannels, Partition::Pixels, Partition::Auto];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partition::OutputChannels => "channels",
+            Partition::Pixels => "pixels",
+            Partition::Auto => "auto",
+        }
+    }
+
+    /// Parse the wire/CLI spelling (the `name()` strings).
+    pub fn parse(s: &str) -> Result<Partition> {
+        match s {
+            "channels" => Ok(Partition::OutputChannels),
+            "pixels" => Ok(Partition::Pixels),
+            "auto" => Ok(Partition::Auto),
+            other => Err(Error::Config(format!(
+                "unknown partition {other:?} (channels|pixels|auto)"
+            ))),
+        }
+    }
+}
+
+/// A partitioned multi-array system: `nodes` replicas of a
+/// `node_shape.0 x node_shape.1` array, each keeping the base config's
+/// scratchpad sizes (as in the paper), with layers split across nodes by
+/// `partition`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiArrayConfig {
+    pub nodes: u64,
+    pub node_shape: (u64, u64),
+    pub partition: Partition,
+}
+
+impl MultiArrayConfig {
+    pub fn new(nodes: u64, node_h: u64, node_w: u64, partition: Partition) -> Self {
+        MultiArrayConfig { nodes, node_shape: (node_h, node_w), partition }
+    }
+
+    /// The paper's scale-out side for one PE budget: `budget/64` nodes
+    /// of 8x8, output-channel partitioning.
+    pub fn paper(pe_budget: u64) -> Self {
+        MultiArrayConfig::new(pe_budget / NODE_PES, NODE_DIM, NODE_DIM, Partition::default())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            return Err(Error::Config("multi-array config needs >= 1 node".into()));
+        }
+        if self.node_shape.0 == 0 || self.node_shape.1 == 0 {
+            return Err(Error::Config("node array dimensions must be positive".into()));
+        }
+        Ok(())
+    }
+
+    /// One node's architecture: the base config with the node's array
+    /// shape (scratchpads and word size stay per-node, as in the paper).
+    pub fn node_cfg(&self, base: &ArchConfig) -> ArchConfig {
+        ArchConfig { array_h: self.node_shape.0, array_w: self.node_shape.1, ..base.clone() }
+    }
+
+    /// PEs across the whole system.
+    pub fn total_pes(&self) -> u64 {
+        self.nodes * self.node_shape.0 * self.node_shape.1
+    }
+}
+
+/// One node-group of a partitioned layer: `count` nodes each running the
+/// same per-node sub-shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct NodeShare {
+    pub layer: LayerShape,
+    pub count: u64,
+}
+
+/// Split one layer across `nodes` nodes under a **fixed** strategy
+/// (`Auto` is resolved by the engine, which can compare timings).
+///
+/// Returns 1 or 2 groups: the maximal share (first, on `count` nodes)
+/// and, when the axis does not divide evenly, one trailing remainder
+/// share — so the groups conserve total MACs and OFMAP pixels *exactly*,
+/// and every returned share is non-empty. Nodes beyond the returned
+/// counts are explicitly idle (`used < nodes`).
+///
+/// Panics on `nodes == 0` or `partition == Auto`.
+pub fn split_layer(layer: &LayerShape, nodes: u64, partition: Partition) -> Vec<NodeShare> {
+    assert!(nodes > 0, "split_layer needs >= 1 node");
+    if nodes == 1 {
+        // the single node runs the layer exactly as a plain engine
+        // would — in particular, a pixel "stripe" of the whole OFMAP
+        // must not trim stride-unreachable bottom ifmap rows, or a
+        // 1-node system would deviate from the single-array model
+        return vec![NodeShare { layer: layer.clone(), count: 1 }];
+    }
+    match partition {
+        Partition::OutputChannels => {
+            let per = ceil_div(layer.num_filters, nodes);
+            let full = layer.num_filters / per;
+            let rem = layer.num_filters % per;
+            let mut out = vec![NodeShare {
+                layer: LayerShape { num_filters: per, ..layer.clone() },
+                count: full,
+            }];
+            if rem > 0 {
+                out.push(NodeShare {
+                    layer: LayerShape { num_filters: rem, ..layer.clone() },
+                    count: 1,
+                });
+            }
+            out
+        }
+        Partition::Pixels => {
+            let rows = layer.ofmap_h();
+            let per = ceil_div(rows, nodes);
+            let full = rows / per;
+            let rem = rows % per;
+            // a stripe of `r` output rows needs (r-1)*stride + filt_h
+            // ifmap rows (valid padding)
+            let stripe = |r: u64| LayerShape {
+                ifmap_h: (r - 1) * layer.stride + layer.filt_h,
+                ..layer.clone()
+            };
+            let mut out = vec![NodeShare { layer: stripe(per), count: full }];
+            if rem > 0 {
+                out.push(NodeShare { layer: stripe(rem), count: 1 });
+            }
+            out
+        }
+        Partition::Auto => unreachable!("Auto must be resolved before split_layer"),
+    }
+}
+
+/// One layer simulated across a multi-array system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiLayerReport {
+    /// The original (unsplit) layer.
+    pub layer: LayerShape,
+    /// The strategy actually used (`Auto` resolves to a fixed one).
+    pub partition: Partition,
+    /// Nodes that received work / sat idle.
+    pub used_nodes: u64,
+    pub idle_nodes: u64,
+    /// Engine report of the maximal per-node share (bounds the runtime;
+    /// `node_count` nodes run it).
+    pub node_report: LayerReport,
+    pub node_count: u64,
+    /// The trailing smaller share, when the partition axis does not
+    /// divide evenly (always on exactly one node).
+    pub remainder: Option<LayerReport>,
+    /// Stall-free layer runtime: the slowest node (nodes run in
+    /// parallel).
+    pub cycles: u64,
+    /// Idle cycles of the slowest node under the shared DRAM bandwidth
+    /// (0 when simulated without one).
+    pub stall_cycles: u64,
+}
+
+impl MultiLayerReport {
+    /// Aggregate DRAM traffic across every node (exact remainder
+    /// accounting — unlike the legacy closed forms, the trailing node
+    /// only fetches its own share).
+    pub fn dram(&self) -> DramTraffic {
+        let mut t = DramTraffic {
+            ifmap_bytes: self.node_report.dram.ifmap_bytes * self.node_count,
+            filter_bytes: self.node_report.dram.filter_bytes * self.node_count,
+            ofmap_bytes: self.node_report.dram.ofmap_bytes * self.node_count,
+        };
+        if let Some(r) = &self.remainder {
+            t.ifmap_bytes += r.dram.ifmap_bytes;
+            t.filter_bytes += r.dram.filter_bytes;
+            t.ofmap_bytes += r.dram.ofmap_bytes;
+        }
+        t
+    }
+
+    /// Aggregate energy across every node.
+    pub fn energy(&self) -> EnergyBreakdown {
+        let n = self.node_count as f64;
+        let mut e = EnergyBreakdown {
+            compute_mj: self.node_report.energy.compute_mj * n,
+            sram_mj: self.node_report.energy.sram_mj * n,
+            dram_mj: self.node_report.energy.dram_mj * n,
+        };
+        if let Some(r) = &self.remainder {
+            e.compute_mj += r.energy.compute_mj;
+            e.sram_mj += r.energy.sram_mj;
+            e.dram_mj += r.energy.dram_mj;
+        }
+        e
+    }
+
+    /// Average interconnect (shared-DRAM) read bandwidth this layer
+    /// demands: aggregate read bytes over the layer's runtime —
+    /// the quantity the paper tabulates but never models.
+    pub fn avg_bw(&self) -> f64 {
+        if self.cycles == 0 {
+            return 0.0;
+        }
+        self.dram().read_bytes() as f64 / self.cycles as f64
+    }
+
+    /// Peak interconnect read bandwidth: every node bursts its own peak
+    /// concurrently, so the per-node peaks sum.
+    pub fn peak_bw(&self) -> f64 {
+        let mut bw = self.node_report.bandwidth.peak_read_bw * self.node_count as f64;
+        if let Some(r) = &self.remainder {
+            bw += r.bandwidth.peak_read_bw;
+        }
+        bw
+    }
+
+    /// Total runtime including shared-DRAM stalls.
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles + self.stall_cycles
+    }
+}
+
+/// A whole topology simulated across a multi-array system.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MultiWorkloadReport {
+    pub workload: String,
+    pub multi: MultiArrayConfig,
+    pub layers: Vec<MultiLayerReport>,
+}
+
+impl MultiWorkloadReport {
+    /// Stall-free runtime: per-layer slowest nodes, layers serialized.
+    pub fn total_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.cycles).sum()
+    }
+
+    pub fn total_stall_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.stall_cycles).sum()
+    }
+
+    pub fn total_dram(&self) -> DramTraffic {
+        let mut t = DramTraffic::default();
+        for l in &self.layers {
+            let d = l.dram();
+            t.ifmap_bytes += d.ifmap_bytes;
+            t.filter_bytes += d.filter_bytes;
+            t.ofmap_bytes += d.ofmap_bytes;
+        }
+        t
+    }
+
+    pub fn total_energy(&self) -> EnergyBreakdown {
+        let mut e = EnergyBreakdown::default();
+        for l in &self.layers {
+            let le = l.energy();
+            e.compute_mj += le.compute_mj;
+            e.sram_mj += le.sram_mj;
+            e.dram_mj += le.dram_mj;
+        }
+        e
+    }
+
+    /// Average required interconnect read bandwidth over the whole run.
+    pub fn avg_interconnect_bw(&self) -> f64 {
+        let cycles = self.total_cycles();
+        if cycles == 0 {
+            return 0.0;
+        }
+        self.total_dram().read_bytes() as f64 / cycles as f64
+    }
+
+    /// Worst per-layer interconnect burst across the run.
+    pub fn peak_interconnect_bw(&self) -> f64 {
+        self.layers.iter().map(MultiLayerReport::peak_bw).fold(0.0, f64::max)
+    }
+
+    /// System-level utilization: MACs over `total PEs x runtime` (idle
+    /// nodes count against it, exactly like idle rows of a big array).
+    pub fn utilization(&self) -> f64 {
+        let denom = self.multi.total_pes() * self.total_cycles();
+        if denom == 0 {
+            return 0.0;
+        }
+        let macs: u64 = self.layers.iter().map(|l| l.layer.macs()).sum();
+        macs as f64 / denom as f64
+    }
+
+    /// Collapse into the single-array report shape (what the sweep grid,
+    /// the serve protocol and the CLI tables carry): per layer the
+    /// slowest node's timing, aggregate DRAM traffic/energy, and the
+    /// summed interconnect bandwidths. A single-node system returns the
+    /// plain engine report bit-for-bit.
+    pub fn to_workload_report(&self) -> WorkloadReport {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| {
+                if l.used_nodes == 1 && l.remainder.is_none() && l.node_report.layer == l.layer
+                {
+                    return l.node_report.clone();
+                }
+                let dram = l.dram();
+                let slowest = match &l.remainder {
+                    Some(r) if r.timing.cycles > l.node_report.timing.cycles => &r.timing,
+                    _ => &l.node_report.timing,
+                };
+                LayerReport {
+                    layer: l.layer.clone(),
+                    timing: slowest.clone(),
+                    dram,
+                    bandwidth: BandwidthReport {
+                        avg_read_bw: if l.cycles == 0 {
+                            0.0
+                        } else {
+                            dram.read_bytes() as f64 / l.cycles as f64
+                        },
+                        avg_write_bw: if l.cycles == 0 {
+                            0.0
+                        } else {
+                            dram.ofmap_bytes as f64 / l.cycles as f64
+                        },
+                        peak_read_bw: l.peak_bw(),
+                    },
+                    energy: l.energy(),
+                }
+            })
+            .collect();
+        WorkloadReport { workload: self.workload.clone(), layers }
+    }
+}
+
+impl Engine {
+    /// Simulate one layer across a partitioned multi-array system under
+    /// an arbitrary base configuration. Every per-node sub-shape goes
+    /// through the memoized [`Engine::run_layer_with`] path; with
+    /// `shared_dram_bw` the finite bandwidth is split equally across the
+    /// busy nodes (per-node demands sum against the shared interface)
+    /// and the slowest node's share replays through
+    /// [`crate::memory::stall`].
+    pub fn run_multi_layer_with(
+        &self,
+        cfg: &ArchConfig,
+        layer: &LayerShape,
+        multi: &MultiArrayConfig,
+        shared_dram_bw: Option<f64>,
+    ) -> MultiLayerReport {
+        assert!(multi.nodes > 0, "multi-array config needs >= 1 node");
+        let node_cfg = multi.node_cfg(cfg);
+        match multi.partition {
+            Partition::Auto => {
+                let a = self.multi_fixed(
+                    &node_cfg,
+                    layer,
+                    multi.nodes,
+                    Partition::OutputChannels,
+                    shared_dram_bw,
+                );
+                let b = self.multi_fixed(
+                    &node_cfg,
+                    layer,
+                    multi.nodes,
+                    Partition::Pixels,
+                    shared_dram_bw,
+                );
+                // compare total runtime (== stall-free cycles when no
+                // shared bandwidth is modeled, so the legacy closed
+                // forms — which never model one — stay bit-identical);
+                // ties go to channels, matching them too
+                if b.total_cycles() < a.total_cycles() {
+                    b
+                } else {
+                    a
+                }
+            }
+            p => self.multi_fixed(&node_cfg, layer, multi.nodes, p, shared_dram_bw),
+        }
+    }
+
+    fn multi_fixed(
+        &self,
+        node_cfg: &ArchConfig,
+        layer: &LayerShape,
+        nodes: u64,
+        partition: Partition,
+        shared_dram_bw: Option<f64>,
+    ) -> MultiLayerReport {
+        let shares = split_layer(layer, nodes, partition);
+        let node_report = self.run_layer_with(node_cfg, &shares[0].layer);
+        let node_count = shares[0].count;
+        let remainder = shares.get(1).map(|s| self.run_layer_with(node_cfg, &s.layer));
+        let used_nodes = node_count + remainder.is_some() as u64;
+        let cycles = match &remainder {
+            Some(r) => node_report.timing.cycles.max(r.timing.cycles),
+            None => node_report.timing.cycles,
+        };
+        // shared DRAM: the busy nodes' demands sum against one interface,
+        // so each gets an equal share; the slowest (maximal) share's
+        // fold/fetch schedule replays against it
+        let stall_cycles = match shared_dram_bw {
+            Some(bw) => {
+                let share = bw / used_nodes as f64;
+                stall::stalled_runtime(node_cfg.dataflow, &shares[0].layer, node_cfg, share)
+                    .stall_cycles
+            }
+            None => 0,
+        };
+        MultiLayerReport {
+            layer: layer.clone(),
+            partition,
+            used_nodes,
+            idle_nodes: nodes - used_nodes,
+            node_report,
+            node_count,
+            remainder,
+            cycles,
+            stall_cycles,
+        }
+    }
+
+    /// Simulate a whole topology across a multi-array system under an
+    /// arbitrary base configuration.
+    pub fn run_multi_with(
+        &self,
+        cfg: &ArchConfig,
+        topo: &Topology,
+        multi: &MultiArrayConfig,
+        shared_dram_bw: Option<f64>,
+    ) -> MultiWorkloadReport {
+        MultiWorkloadReport {
+            workload: topo.name.clone(),
+            multi: *multi,
+            layers: topo
+                .layers
+                .iter()
+                .map(|l| self.run_multi_layer_with(cfg, l, multi, shared_dram_bw))
+                .collect(),
+        }
+    }
+
+    /// Simulate a topology across a multi-array system under the
+    /// engine's base configuration (no shared-bandwidth stall model).
+    pub fn run_multi(&self, topo: &Topology, multi: &MultiArrayConfig) -> MultiWorkloadReport {
+        self.run_multi_with(&self.cfg, topo, multi, None)
+    }
+
+    /// Lower a typed workload ([`crate::workload::Workload`]) and run it
+    /// across a multi-array system — the front-end form of
+    /// [`Engine::run_multi`].
+    pub fn run_multi_workload(
+        &self,
+        workload: &crate::workload::Workload,
+        multi: &MultiArrayConfig,
+    ) -> Result<MultiWorkloadReport> {
+        Ok(self.run_multi(&workload.lower()?, multi))
+    }
+
+    /// Scale-up vs scale-out comparison (§IV-E, Figs 9/10) under the
+    /// engine's base configuration and a chosen partition strategy: one
+    /// `√budget x √budget` array vs `budget/64` 8x8 nodes. Preserves the
+    /// legacy closed forms' arithmetic exactly (full-share node cycles;
+    /// full-share filter bytes times used nodes), so the deprecated
+    /// `scaleout` shims stay bit-identical.
+    pub fn compare_scaling_with(
+        &self,
+        layers: &[LayerShape],
+        pe_budget: u64,
+        partition: Partition,
+    ) -> ScaleComparison {
+        assert!(pe_budget >= NODE_PES, "budget below one node");
+        let up_cfg = scale_up_cfg(&self.cfg, pe_budget);
+        let multi = MultiArrayConfig::paper(pe_budget);
+        let mut up_cycles = 0u64;
+        let mut out_cycles = 0u64;
+        let mut up_weight_bytes = 0f64;
+        let mut out_weight_bytes = 0f64;
+        for layer in layers {
+            let up = self.run_layer_with(&up_cfg, layer);
+            let m = self.run_multi_layer_with(
+                &self.cfg,
+                layer,
+                &MultiArrayConfig { partition, ..multi },
+                None,
+            );
+            // the legacy view: every used node fetches (and runs) the
+            // full per-node share
+            let out_c = m.node_report.timing.cycles;
+            let out_bytes = m.node_report.dram.filter_bytes * m.used_nodes;
+            let up_weight_bw = up.dram.filter_bytes as f64 / up.timing.cycles as f64;
+            let out_weight_bw = out_bytes as f64 / out_c as f64;
+            up_cycles += up.timing.cycles;
+            out_cycles += out_c;
+            up_weight_bytes += up_weight_bw * up.timing.cycles as f64;
+            out_weight_bytes += out_weight_bw * out_c as f64;
+        }
+        ScaleComparison {
+            pe_budget,
+            nodes: multi.nodes,
+            up_cycles,
+            out_cycles,
+            up_weight_bw: up_weight_bytes / up_cycles as f64,
+            out_weight_bw: out_weight_bytes / out_cycles as f64,
+        }
+    }
+
+    /// The paper's comparison: output-channel partitioning.
+    pub fn compare_scaling(&self, layers: &[LayerShape], pe_budget: u64) -> ScaleComparison {
+        self.compare_scaling_with(layers, pe_budget, Partition::OutputChannels)
+    }
+}
+
+/// Scale-up configuration: one square array of `pe_budget` PEs.
+///
+/// Panics if `pe_budget` is not a perfect square (the paper's sweep uses
+/// 64 * 4^i, always square).
+pub fn scale_up_cfg(base: &ArchConfig, pe_budget: u64) -> ArchConfig {
+    let dim = isqrt(pe_budget);
+    assert_eq!(dim * dim, pe_budget, "PE budget {pe_budget} is not square");
+    ArchConfig { array_h: dim, array_w: dim, ..base.clone() }
+}
+
+/// Result of one scale-up vs scale-out comparison point.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScaleComparison {
+    pub pe_budget: u64,
+    pub nodes: u64,
+    /// Runtime on the single big array.
+    pub up_cycles: u64,
+    /// Runtime of the slowest node (nodes run in parallel).
+    pub out_cycles: u64,
+    /// DRAM bandwidth demanded for *weights*, bytes/cycle (Fig 10).
+    pub up_weight_bw: f64,
+    pub out_weight_bw: f64,
+}
+
+impl ScaleComparison {
+    /// Fig 9's y-axis: runtime(scale-up) / runtime(scale-out);
+    /// < 1 means scale-up wins.
+    pub fn runtime_ratio(&self) -> f64 {
+        self.up_cycles as f64 / self.out_cycles as f64
+    }
+
+    /// Fig 10's y-axis: weight-bandwidth(up) / weight-bandwidth(out).
+    pub fn weight_bw_ratio(&self) -> f64 {
+        self.up_weight_bw / self.out_weight_bw
+    }
+}
+
+/// One `scale-sim scaleout` table row: the Fig 9/10 comparison plus the
+/// interconnect-bandwidth numbers only the engine path can report.
+#[derive(Clone, Debug)]
+pub struct ScaleoutPoint {
+    pub workload: String,
+    pub partition: Partition,
+    pub comparison: ScaleComparison,
+    /// Required interconnect read bandwidth of the scale-out side
+    /// (aggregate across nodes), average over the run and worst layer
+    /// burst.
+    pub interconnect_avg_bw: f64,
+    pub interconnect_peak_bw: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::Dataflow;
+
+    fn engine(df: Dataflow) -> Engine {
+        Engine::new(ArchConfig { dataflow: df, ..config::paper_default() })
+    }
+
+    #[test]
+    fn split_conserves_macs_and_ofmap_pixels_exactly() {
+        let l = LayerShape::conv("c", 30, 30, 3, 3, 8, 100, 1);
+        for nodes in [1u64, 2, 3, 7, 16, 64, 1000] {
+            for p in [Partition::OutputChannels, Partition::Pixels] {
+                let shares = split_layer(&l, nodes, p);
+                let macs: u64 = shares.iter().map(|s| s.count * s.layer.macs()).sum();
+                let ofmap: u64 =
+                    shares.iter().map(|s| s.count * s.layer.ofmap_elems()).sum();
+                assert_eq!(macs, l.macs(), "{p:?} nodes={nodes}");
+                assert_eq!(ofmap, l.ofmap_elems(), "{p:?} nodes={nodes}");
+                let used: u64 = shares.iter().map(|s| s.count).sum();
+                assert!(used <= nodes);
+                assert!(shares.iter().all(|s| s.count >= 1));
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_split_puts_the_remainder_on_one_node() {
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 100, 1);
+        let shares = split_layer(&l, 16, Partition::OutputChannels);
+        assert_eq!(shares.len(), 2);
+        assert_eq!((shares[0].layer.num_filters, shares[0].count), (7, 14));
+        assert_eq!((shares[1].layer.num_filters, shares[1].count), (2, 1));
+    }
+
+    #[test]
+    fn single_node_multi_is_the_plain_engine_bit_for_bit() {
+        let e = engine(Dataflow::Os);
+        let l = LayerShape::conv("c", 28, 28, 3, 3, 16, 32, 1);
+        for p in Partition::ALL {
+            let multi = MultiArrayConfig::new(1, 16, 16, p);
+            let m = e.run_multi_layer_with(e.cfg(), &l, &multi, None);
+            let plain =
+                e.run_layer_with(&ArchConfig { array_h: 16, array_w: 16, ..e.cfg().clone() }, &l);
+            assert_eq!(m.node_report, plain, "{p:?}");
+            assert_eq!(m.cycles, plain.timing.cycles);
+            assert_eq!((m.used_nodes, m.idle_nodes), (1, 0));
+            assert!(m.remainder.is_none());
+            assert_eq!(m.dram(), plain.dram);
+        }
+        let topo = Topology::new("t", vec![l]);
+        let multi = MultiArrayConfig::new(1, 16, 16, Partition::Auto);
+        let wr = e.run_multi(&topo, &multi).to_workload_report();
+        let plain = e.run_topology_with(
+            &ArchConfig { array_h: 16, array_w: 16, ..e.cfg().clone() },
+            &topo,
+        );
+        assert_eq!(wr, plain);
+    }
+
+    #[test]
+    fn auto_resolves_to_the_faster_fixed_strategy() {
+        let e = engine(Dataflow::Os);
+        for l in [
+            LayerShape::conv("fewfilt", 64, 64, 3, 3, 32, 8, 1),
+            LayerShape::conv("deep", 19, 19, 3, 3, 256, 256, 1),
+            LayerShape::fc("fc", 4, 512, 512),
+        ] {
+            let mk = |p| MultiArrayConfig::new(64, NODE_DIM, NODE_DIM, p);
+            let auto = e.run_multi_layer_with(e.cfg(), &l, &mk(Partition::Auto), None);
+            let ch = e.run_multi_layer_with(e.cfg(), &l, &mk(Partition::OutputChannels), None);
+            let px = e.run_multi_layer_with(e.cfg(), &l, &mk(Partition::Pixels), None);
+            assert_eq!(auto.cycles, ch.cycles.min(px.cycles), "{}", l.name);
+            assert_ne!(auto.partition, Partition::Auto, "Auto must resolve");
+        }
+    }
+
+    #[test]
+    fn auto_under_shared_dram_picks_the_faster_total_runtime() {
+        // pixel partitioning duplicates the filter set on every node, so
+        // under a tight shared bandwidth its stalls can outweigh a small
+        // stall-free advantage — Auto must rank by TOTAL runtime
+        let e = engine(Dataflow::Os);
+        for l in [
+            LayerShape::conv("fewfilt", 64, 64, 3, 3, 32, 8, 1),
+            LayerShape::conv("deep", 19, 19, 3, 3, 256, 256, 1),
+            LayerShape::conv("wide", 60, 60, 3, 3, 24, 100, 1),
+        ] {
+            for bw in [2.0, 16.0] {
+                let mk = |p| MultiArrayConfig::new(64, NODE_DIM, NODE_DIM, p);
+                let auto =
+                    e.run_multi_layer_with(e.cfg(), &l, &mk(Partition::Auto), Some(bw));
+                let ch = e.run_multi_layer_with(
+                    e.cfg(),
+                    &l,
+                    &mk(Partition::OutputChannels),
+                    Some(bw),
+                );
+                let px =
+                    e.run_multi_layer_with(e.cfg(), &l, &mk(Partition::Pixels), Some(bw));
+                assert_eq!(
+                    auto.total_cycles(),
+                    ch.total_cycles().min(px.total_cycles()),
+                    "{} bw={bw}",
+                    l.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn shared_dram_contention_stalls_grow_with_node_count() {
+        // the same total bandwidth split across more busy nodes starves
+        // each node harder
+        let e = engine(Dataflow::Os);
+        let l = LayerShape::conv("c", 64, 64, 3, 3, 32, 256, 1);
+        let mut last = 0u64;
+        for nodes in [4u64, 16, 64] {
+            let multi = MultiArrayConfig::new(nodes, NODE_DIM, NODE_DIM, Partition::Pixels);
+            let m = e.run_multi_layer_with(e.cfg(), &l, &multi, Some(16.0));
+            assert!(m.stall_cycles >= last, "nodes={nodes}");
+            last = m.stall_cycles;
+        }
+        assert!(last > 0, "64 nodes on 16 B/cyc must stall");
+        // and without a bandwidth there are no stalls
+        let multi = MultiArrayConfig::new(64, NODE_DIM, NODE_DIM, Partition::Pixels);
+        assert_eq!(e.run_multi_layer_with(e.cfg(), &l, &multi, None).stall_cycles, 0);
+    }
+
+    #[test]
+    fn identical_shares_across_nodes_hit_the_memo_cache() {
+        let e = engine(Dataflow::Os);
+        let l = LayerShape::conv("c", 30, 30, 3, 3, 16, 64, 1);
+        let multi = MultiArrayConfig::new(16, NODE_DIM, NODE_DIM, Partition::OutputChannels);
+        let _ = e.run_multi_layer_with(e.cfg(), &l, &multi, None);
+        let sims = e.cache_stats().layer_sims;
+        // an even 64/16 split = one distinct sub-shape
+        assert_eq!(sims, 1);
+        // auto re-uses the channels entry and only adds the pixels one
+        let auto = MultiArrayConfig { partition: Partition::Auto, ..multi };
+        let _ = e.run_multi_layer_with(e.cfg(), &l, &auto, None);
+        let stats = e.cache_stats();
+        assert_eq!(stats.layer_sims, 2, "{stats:?}");
+        assert!(stats.cache_hits >= 1, "{stats:?}");
+    }
+
+    #[test]
+    fn aggregate_dram_accounts_the_remainder_exactly() {
+        let e = engine(Dataflow::Os);
+        // 100 filters over 16 nodes: 14 full nodes + 1 remainder node
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 100, 1);
+        let multi = MultiArrayConfig::new(16, NODE_DIM, NODE_DIM, Partition::OutputChannels);
+        let m = e.run_multi_layer_with(e.cfg(), &l, &multi, None);
+        assert_eq!(m.used_nodes, 15);
+        assert_eq!(m.idle_nodes, 1);
+        let r = m.remainder.as_ref().unwrap();
+        assert_eq!(
+            m.dram().filter_bytes,
+            m.node_report.dram.filter_bytes * 14 + r.dram.filter_bytes
+        );
+        // exact accounting is strictly below the legacy full-node
+        // approximation
+        assert!(m.dram().filter_bytes < m.node_report.dram.filter_bytes * 15);
+    }
+
+    #[test]
+    fn compare_scaling_matches_across_partitions_and_budgets() {
+        let topo = Topology::new(
+            "t",
+            vec![
+                LayerShape::conv("a", 32, 32, 3, 3, 32, 64, 1),
+                LayerShape::fc("fc", 4, 512, 512),
+            ],
+        );
+        for df in Dataflow::ALL {
+            let e = engine(df);
+            for &pe in &PE_SWEEP {
+                for p in Partition::ALL {
+                    let c = e.compare_scaling_with(&topo.layers, pe, p);
+                    assert!(c.up_cycles > 0 && c.out_cycles > 0);
+                    assert!(c.runtime_ratio() > 0.0 && c.weight_bw_ratio() > 0.0);
+                    assert_eq!(c.nodes, pe / NODE_PES);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_config_validates() {
+        assert!(MultiArrayConfig::new(0, 8, 8, Partition::Auto).validate().is_err());
+        assert!(MultiArrayConfig::new(4, 0, 8, Partition::Auto).validate().is_err());
+        assert!(MultiArrayConfig::new(4, 8, 8, Partition::Auto).validate().is_ok());
+        assert_eq!(MultiArrayConfig::paper(1024).nodes, 16);
+        assert_eq!(MultiArrayConfig::paper(1024).total_pes(), 1024);
+        assert_eq!(Partition::parse("pixels").unwrap(), Partition::Pixels);
+        assert!(Partition::parse("diag").is_err());
+        for p in Partition::ALL {
+            assert_eq!(Partition::parse(p.name()).unwrap(), p);
+        }
+    }
+}

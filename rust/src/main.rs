@@ -53,6 +53,17 @@ USAGE:
       best dataflow per layer (flexible-dataflow study), and the DRAM
       bandwidth to provision for <5%% slowdown (§III-D stall model).
 
+  scale-sim scaleout [-t|--workload spec]... [--partition channels|pixels|auto]
+                     [--budgets 64,256,...] [--dataflow os|ws|is] [--bench FILE]
+      Reproduce the paper's §IV-E scale-up vs scale-out study (Figs 9 &
+      10) through the engine's multi-array model: at each PE budget one
+      √P x √P array vs P/64 replicated 8x8 nodes, the workload split
+      across nodes by the chosen partition strategy (output channels —
+      the paper's choice — OFMAP pixel stripes, or per-layer auto).
+      Prints runtime and weight-DRAM-bandwidth ratios plus the required
+      interconnect bandwidth the paper only tabulates, and writes
+      BENCH_scaleout.json. Default workloads: alphagozero + ncf.
+
   scale-sim workloads
       List the built-in workloads: the MLPerf conv suite (Table III)
       and the GEMM suite (tag G: mlp, attention, lstm, ncf_gemm).
@@ -61,15 +72,21 @@ USAGE:
       Show the functional-runtime platform and the AOT artifacts
       available for the functional path.
 
-  scale-sim dse <run|resume|report> [--spec FILE.json] [--state-dir DIR]
-               [--threads N] [--serve H:P] [--shards N] [--max-points N]
-               [--backend analytical|trace|rtl] [--bench FILE]
+  scale-sim dse <run|resume|report> [--spec FILE.json | --scaleout]
+               [--state-dir DIR] [--threads N] [--serve H:P] [--shards N]
+               [--max-points N] [--backend analytical|trace|rtl]
+               [--bench FILE]
       Resumable design-space-exploration campaigns with Pareto
       frontiers (runtime-vs-energy, runtime-vs-peak-DRAM-bandwidth).
       `run` starts a campaign — the paper's bandwidth x dataflow x
       aspect-ratio axes by default, or a JSON spec ({\"workloads\":[..],
-      \"dataflows\":[..], \"arrays\":[\"RxC\",..], \"sram_kb\":[..],
-      \"dram_bw\":[..]}). With --state-dir every completed point is
+      \"dataflows\":[..], \"arrays\":[\"RxC\",..], \"nodes\":[..],
+      \"partitions\":[\"channels\",..], \"sram_kb\":[..],
+      \"dram_bw\":[..]}). The nodes/partitions axes sweep §IV-E
+      multi-array scale-out systems (Pareto frontiers over array
+      count); --scaleout runs the built-in §IV-E campaign (8x8 nodes,
+      1..256 node counts, all partition strategies) without a spec
+      file. With --state-dir every completed point is
       journaled to campaign.jsonl; a killed campaign continues with
       `resume`, re-simulating only unfinished points and producing a
       bit-identical frontier. `report` prints the frontier from a
@@ -90,6 +107,7 @@ USAGE:
   scale-sim client <run|sweep|stats|shutdown> [--addr H:P]
                    [-t topology] [--dataflow os|ws|is] [--array RxC]
                    [--kind dataflow|memory|shape]
+                   [--nodes N] [--partition channels|pixels|auto]
       Submit a job to a running server and stream its JSON response
       lines (protocol: rust/src/server/proto.rs). `-t` takes a
       built-in name or a conv/GEMM csv path (lowered locally and sent
@@ -124,6 +142,7 @@ fn dispatch(args: &[String]) -> CliResult<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
+        Some("scaleout") => cmd_scaleout(&args[1..]),
         Some("dse") => cmd_dse(&args[1..]),
         Some("analyze") => cmd_analyze(&args[1..]),
         Some("validate") => cmd_validate(&args[1..]),
@@ -449,6 +468,115 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
     Ok(())
 }
 
+fn cmd_scaleout(rest: &[String]) -> CliResult<()> {
+    use scale_sim::engine::multi::{
+        MultiArrayConfig, Partition, ScaleoutPoint, NODE_DIM, NODE_PES, PE_SWEEP,
+    };
+    use scale_sim::report::scaleout_summary;
+    use scale_sim::util::isqrt;
+
+    let a = Args(rest);
+    let cfg = base_config(&a)?;
+    let partition = match a.value("--partition", None) {
+        Some(p) => Partition::parse(p)?,
+        None => Partition::OutputChannels,
+    };
+    let budgets: Vec<u64> = match a.value("--budgets", None) {
+        Some(list) => list
+            .split(',')
+            .map(|s| s.trim().parse::<u64>())
+            .collect::<std::result::Result<_, _>>()?,
+        None => PE_SWEEP.to_vec(),
+    };
+    for &pe in &budgets {
+        if pe < NODE_PES {
+            return fail(format!("PE budget {pe} is below one {NODE_DIM}x{NODE_DIM} node"));
+        }
+        if isqrt(pe) * isqrt(pe) != pe {
+            return fail(format!(
+                "PE budget {pe} is not a perfect square (the scale-up side is one √P x √P array)"
+            ));
+        }
+        if pe % NODE_PES != 0 {
+            return fail(format!(
+                "PE budget {pe} is not a multiple of {NODE_PES} (the scale-out side is whole \
+                 {NODE_DIM}x{NODE_DIM} nodes; a remainder would bias the comparison)"
+            ));
+        }
+    }
+
+    let mut specs = a.values("--topology", Some("-t"))?;
+    specs.extend(a.values("--workload", None)?);
+    let topos: Vec<Topology> = if specs.is_empty() {
+        vec![load_topology("alphagozero")?, load_topology("ncf")?]
+    } else {
+        specs.iter().map(|s| load_topology(s)).collect::<CliResult<_>>()?
+    };
+
+    let engine = Engine::builder().config(cfg).build()?;
+    let t0 = Instant::now();
+    let mut points = Vec::new();
+    for topo in &topos {
+        for &pe in &budgets {
+            let comparison = engine.compare_scaling_with(&topo.layers, pe, partition);
+            let mc = MultiArrayConfig::new(pe / NODE_PES, NODE_DIM, NODE_DIM, partition);
+            let m = engine.run_multi(topo, &mc);
+            points.push(ScaleoutPoint {
+                workload: topo.name.clone(),
+                partition,
+                comparison,
+                interconnect_avg_bw: m.avg_interconnect_bw(),
+                interconnect_peak_bw: m.peak_interconnect_bw(),
+            });
+        }
+    }
+    print!("{}", scaleout_summary(&points));
+    let stats = engine.cache_stats();
+    println!(
+        "scaleout: {} points in {:.1} ms — {} layer sims, {} cache hits ({:.1}% hit rate)",
+        points.len(),
+        t0.elapsed().as_secs_f64() * 1e3,
+        stats.layer_sims,
+        stats.cache_hits,
+        stats.hit_rate() * 100.0,
+    );
+
+    let bench = a.value("--bench", None).unwrap_or("BENCH_scaleout.json");
+    let json = Json::obj(vec![
+        ("partition", Json::str(partition.name())),
+        ("node_dim", Json::u64(NODE_DIM)),
+        ("budgets", Json::Arr(budgets.iter().map(|&b| Json::u64(b)).collect())),
+        ("workloads", Json::u64(topos.len() as u64)),
+        ("layer_sims", Json::u64(stats.layer_sims)),
+        ("cache_hits", Json::u64(stats.cache_hits)),
+        (
+            "points",
+            Json::Arr(
+                points
+                    .iter()
+                    .map(|p| {
+                        Json::obj(vec![
+                            ("workload", Json::str(&p.workload)),
+                            ("partition", Json::str(p.partition.name())),
+                            ("pe_budget", Json::u64(p.comparison.pe_budget)),
+                            ("nodes", Json::u64(p.comparison.nodes)),
+                            ("up_cycles", Json::u64(p.comparison.up_cycles)),
+                            ("out_cycles", Json::u64(p.comparison.out_cycles)),
+                            ("runtime_ratio", Json::f64(p.comparison.runtime_ratio())),
+                            ("weight_bw_ratio", Json::f64(p.comparison.weight_bw_ratio())),
+                            ("interconnect_avg_bw", Json::f64(p.interconnect_avg_bw)),
+                            ("interconnect_peak_bw", Json::f64(p.interconnect_peak_bw)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(bench, format!("{json}\n"))?;
+    println!("wrote {bench}");
+    Ok(())
+}
+
 fn cmd_dse(rest: &[String]) -> CliResult<()> {
     use scale_sim::dse::{self, Campaign, Exec, RunOpts};
     use scale_sim::report::dse_summary;
@@ -491,6 +619,7 @@ fn cmd_dse(rest: &[String]) -> CliResult<()> {
                         .map_err(|e| format!("cannot read spec {p}: {e}"))?;
                     Campaign::from_json(&Json::parse(text.trim())?)?
                 }
+                None if a.flag("--scaleout") => Campaign::paper_scaleout(),
                 None => Campaign::paper(),
             };
             dse::run_campaign(campaign, &opts)?
@@ -720,6 +849,12 @@ fn cmd_client(rest: &[String]) -> CliResult<()> {
             }
             if let Some(arr) = a.value("--array", None) {
                 fields.push(("array", Json::str(arr)));
+            }
+            if let Some(n) = a.value("--nodes", None) {
+                fields.push(("nodes", Json::u64(n.parse()?)));
+            }
+            if let Some(p) = a.value("--partition", None) {
+                fields.push(("partition", Json::str(p)));
             }
             Json::obj(fields).to_string()
         }

@@ -142,12 +142,14 @@ pub fn dse_summary(out: &crate::dse::CampaignOutcome) -> String {
     let mut s = String::new();
     let _ = writeln!(
         s,
-        "campaign {:?} [{} energy]: {} workloads x {} dataflows x {} arrays x {} sram x {} bw = {} points ({} completed)",
+        "campaign {:?} [{} energy]: {} workloads x {} dataflows x {} arrays x {} nodes x {} partitions x {} sram x {} bw = {} points ({} completed)",
         c.name,
         c.energy,
         c.workloads.len(),
         c.dataflows.len(),
         c.arrays.len(),
+        c.nodes.len(),
+        c.partitions.len(),
         c.sram_kb.len(),
         c.dram_bw.len(),
         c.len(),
@@ -158,18 +160,20 @@ pub fn dse_summary(out: &crate::dse::CampaignOutcome) -> String {
         let _ = writeln!(s, "\nPareto frontier — {title} ({} of {} points):", front.len(), out.completed.len());
         let _ = writeln!(
             s,
-            "{:<14} {:>4} {:>9} {:>8} {:>8} {:>14} {:>14}",
-            "workload", "df", "array", "sram_kb", "bw_B/cyc", "total_cycles", col
+            "{:<14} {:>4} {:>9} {:>6} {:>9} {:>8} {:>8} {:>14} {:>14}",
+            "workload", "df", "array", "nodes", "partition", "sram_kb", "bw_B/cyc", "total_cycles", col
         );
         for &i in front {
             let cp = &out.completed[i];
             let p = &cp.point;
             let _ = writeln!(
                 s,
-                "{:<14} {:>4} {:>9} {:>8} {:>8} {:>14} {:>14.6}",
+                "{:<14} {:>4} {:>9} {:>6} {:>9} {:>8} {:>8} {:>14} {:>14.6}",
                 p.workload,
                 p.dataflow.name(),
                 format!("{}x{}", p.array_h, p.array_w),
+                p.nodes,
+                p.partition.name(),
                 p.sram_kb,
                 p.dram_bw,
                 cp.metrics.total_cycles(),
@@ -205,12 +209,20 @@ pub fn dse_summary(out: &crate::dse::CampaignOutcome) -> String {
             }
         }
         let (Some(f), Some(t)) = (fastest, thriftiest) else { continue };
+        let multi = |p: &crate::dse::CampaignPoint| {
+            if p.nodes > 1 {
+                format!(" x{} nodes ({})", p.nodes, p.partition.name())
+            } else {
+                String::new()
+            }
+        };
         let _ = writeln!(
             s,
-            "  {w}: fastest = {} {}x{} sram {} bw {} ({} cycles, util {:.1}%); lowest energy = {} {}x{} sram {} bw {} ({:.6} mJ)",
+            "  {w}: fastest = {} {}x{}{} sram {} bw {} ({} cycles, util {:.1}%); lowest energy = {} {}x{}{} sram {} bw {} ({:.6} mJ)",
             f.point.dataflow.name(),
             f.point.array_h,
             f.point.array_w,
+            multi(&f.point),
             f.point.sram_kb,
             f.point.dram_bw,
             f.metrics.total_cycles(),
@@ -218,9 +230,57 @@ pub fn dse_summary(out: &crate::dse::CampaignOutcome) -> String {
             t.point.dataflow.name(),
             t.point.array_h,
             t.point.array_w,
+            multi(&t.point),
             t.point.sram_kb,
             t.point.dram_bw,
             t.metrics.energy_mj,
+        );
+    }
+    s
+}
+
+/// Human-readable §IV-E scale-up vs scale-out summary (`scale-sim
+/// scaleout`): the Fig 9 runtime-ratio and Fig 10 weight-bandwidth-ratio
+/// columns per (workload, PE budget), plus the aggregate interconnect
+/// bandwidth the scale-out side demands — the number the paper only
+/// tabulates, reported here from the engine's multi-array model.
+pub fn scaleout_summary(points: &[crate::engine::multi::ScaleoutPoint]) -> String {
+    use std::fmt::Write as _;
+
+    let mut s = String::new();
+    let _ = writeln!(
+        s,
+        "Fig 9/10 — scale-up vs scale-out (8x8 nodes; runtime up/out > 1 => scale-out wins, weight-bw up/out < 1 => scale-up cheaper)"
+    );
+    let _ = writeln!(
+        s,
+        "{:<14} {:>9} {:>7} {:>6} {:>14} {:>14} {:>8} {:>8} {:>12} {:>12}",
+        "workload",
+        "partition",
+        "PEs",
+        "nodes",
+        "up_cycles",
+        "out_cycles",
+        "up/out",
+        "wbw_u/o",
+        "icn_avg_B/c",
+        "icn_peak_B/c"
+    );
+    for p in points {
+        let c = &p.comparison;
+        let _ = writeln!(
+            s,
+            "{:<14} {:>9} {:>7} {:>6} {:>14} {:>14} {:>8.3} {:>8.3} {:>12.4} {:>12.4}",
+            p.workload,
+            p.partition.name(),
+            c.pe_budget,
+            c.nodes,
+            c.up_cycles,
+            c.out_cycles,
+            c.runtime_ratio(),
+            c.weight_bw_ratio(),
+            p.interconnect_avg_bw,
+            p.interconnect_peak_bw,
         );
     }
     s
@@ -242,6 +302,7 @@ mod tests {
     use super::*;
     use crate::arch::LayerShape;
     use crate::config::{self, Topology};
+    use crate::engine::Partition;
     use crate::sim::Simulator;
     use crate::util::csv;
 
@@ -253,6 +314,8 @@ mod tests {
             workloads: vec!["ncf".into()],
             dataflows: vec![crate::Dataflow::Os],
             arrays: vec![(16, 16), (32, 32)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![8.0],
             energy: "28nm".into(),
@@ -265,6 +328,35 @@ mod tests {
         assert!(a.contains("runtime vs peak DRAM bandwidth"), "{a}");
         assert!(a.contains("per-workload best designs"), "{a}");
         assert!(a.contains("ncf"), "{a}");
+    }
+
+    #[test]
+    fn scaleout_summary_lists_every_point_with_ratios() {
+        use crate::engine::multi::ScaleoutPoint;
+        let engine = crate::engine::Engine::new(config::paper_default());
+        let layers = vec![LayerShape::conv("a", 32, 32, 3, 3, 32, 64, 1)];
+        let mut points = Vec::new();
+        for pe in [1024u64, 4096] {
+            let comparison = engine.compare_scaling_with(&layers, pe, Partition::Auto);
+            let mc = crate::engine::MultiArrayConfig::paper(pe);
+            let m = engine.run_multi(
+                &Topology::new("a", layers.clone()),
+                &crate::engine::MultiArrayConfig { partition: Partition::Auto, ..mc },
+            );
+            points.push(ScaleoutPoint {
+                workload: "a".into(),
+                partition: Partition::Auto,
+                comparison,
+                interconnect_avg_bw: m.avg_interconnect_bw(),
+                interconnect_peak_bw: m.peak_interconnect_bw(),
+            });
+        }
+        let s = scaleout_summary(&points);
+        assert_eq!(s, scaleout_summary(&points), "deterministic");
+        assert!(s.contains("Fig 9"), "{s}");
+        assert!(s.contains("1024") && s.contains("4096"), "{s}");
+        assert!(s.contains("auto"), "{s}");
+        assert_eq!(s.lines().count(), 2 + points.len());
     }
 
     fn report() -> WorkloadReport {

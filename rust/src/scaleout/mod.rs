@@ -1,156 +1,80 @@
-//! Scaling-up vs scaling-out (§IV-E, Figs 9 & 10).
+//! **Deprecated shim** over [`crate::engine::multi`] — the scale-up vs
+//! scale-out study (§IV-E, Figs 9 & 10) as closed-form free functions.
 //!
-//! *Scale-up* grows one array (the TPU approach): a PE budget `P` becomes
-//! one `√P x √P` array. *Scale-out* replicates 8x8 arrays (the
-//! tensor-core approach): `P/64` nodes, with the workload partitioned
-//! along output channels — "the different filters are assigned to
-//! different nodes, thus different nodes generating different output
-//! channels". Each node keeps its own scratchpad configuration; as in
-//! the paper, the inter-node interconnect is not arbitrated — its
-//! required bandwidth is *reported* (from SRAM/DRAM interface numbers),
-//! not modeled as a constraint.
+//! Multi-array simulation is now a first-class engine citizen: the
+//! partition geometry, the per-node engine runs (memoized), the
+//! shared-DRAM contention model and the comparison arithmetic all live
+//! in [`crate::engine::multi`], surfaced as [`Engine::run_multi`],
+//! [`Engine::compare_scaling_with`], the sweep grid's `nodes`/
+//! `partitions` axes, the dse campaign's `nodes`/`partitions` axes, the
+//! serve protocol's multi-array fields, and `scale-sim scaleout`.
+//!
+//! The functions here reproduce the original closed forms
+//! **bit-identically** (pinned by the equivalence suite): they derive
+//! the legacy quantities — full-share node cycles, full-share filter
+//! bytes times used nodes — from the engine's [`MultiLayerReport`].
+//!
+//! [`Engine::run_multi`]: crate::engine::Engine::run_multi
+//! [`Engine::compare_scaling_with`]: crate::engine::Engine::compare_scaling_with
+//! [`MultiLayerReport`]: crate::engine::MultiLayerReport
 
 use crate::arch::LayerShape;
 use crate::config::ArchConfig;
-use crate::memory;
-use crate::util::{ceil_div, isqrt};
+use crate::engine::multi::MultiArrayConfig;
+use crate::engine::Engine;
 
-/// Scale-out node geometry used in the paper's study.
-pub const NODE_DIM: u64 = 8;
-pub const NODE_PES: u64 = NODE_DIM * NODE_DIM;
-
-/// Workload partitioning strategy across scale-out nodes.
-///
-/// The paper's study uses output-channel partitioning but notes that
-/// "alternate partitioning strategies exist, and in fact the best
-/// strategy may differ from layer to layer depending on the number of
-/// filters vs channels" (§IV-E) — implemented here as an extension and
-/// ablated in `rust/benches/` / `examples/`.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub enum Partition {
-    /// Split filters across nodes (the paper's choice): each node
-    /// produces different output channels.
-    #[default]
-    OutputChannels,
-    /// Split output pixels (ifmap rows) across nodes: each node produces
-    /// all channels for a horizontal stripe of the OFMAP.
-    Pixels,
-    /// Per layer, pick whichever of the two is faster (the paper's
-    /// "best strategy may differ from layer to layer").
-    Auto,
-}
-
-impl Partition {
-    pub const ALL: [Partition; 3] =
-        [Partition::OutputChannels, Partition::Pixels, Partition::Auto];
-
-    pub fn name(&self) -> &'static str {
-        match self {
-            Partition::OutputChannels => "channels",
-            Partition::Pixels => "pixels",
-            Partition::Auto => "auto",
-        }
-    }
-}
-
-/// Scale-up configuration: one square array of `pe_budget` PEs.
-///
-/// Panics if `pe_budget` is not a perfect square (the paper's sweep uses
-/// 64 * 4^i, always square).
-pub fn scale_up_cfg(base: &ArchConfig, pe_budget: u64) -> ArchConfig {
-    let dim = isqrt(pe_budget);
-    assert_eq!(dim * dim, pe_budget, "PE budget {pe_budget} is not square");
-    ArchConfig { array_h: dim, array_w: dim, ..base.clone() }
-}
+pub use crate::engine::multi::{
+    scale_up_cfg, Partition, ScaleComparison, NODE_DIM, NODE_PES, PE_SWEEP,
+};
 
 /// One node's share of a layer under output-channel partitioning across
 /// `nodes` nodes: the (maximal) per-node filter count, and how many nodes
 /// actually receive filters.
+#[deprecated(note = "use engine::multi::split_layer")]
 pub fn partition_filters(layer: &LayerShape, nodes: u64) -> (u64, u64) {
-    let per_node = ceil_div(layer.num_filters, nodes);
-    let used = ceil_div(layer.num_filters, per_node);
-    (per_node, used)
+    let shares = crate::engine::multi::split_layer(layer, nodes, Partition::OutputChannels);
+    let used: u64 = shares.iter().map(|s| s.count).sum();
+    (shares[0].layer.num_filters, used)
 }
 
 /// The per-node sub-layer (same geometry, fewer output channels).
+#[deprecated(note = "use engine::multi::split_layer")]
 pub fn node_layer(layer: &LayerShape, per_node_filters: u64) -> LayerShape {
     LayerShape { num_filters: per_node_filters, ..layer.clone() }
 }
 
 /// Pixel partitioning: each node computes a horizontal stripe of the
-/// OFMAP (all channels). Returns the per-node sub-layer and the number
-/// of nodes that receive work.
+/// OFMAP (all channels). Returns the (maximal) per-node sub-layer and
+/// the number of nodes that receive work.
+///
+/// Kept as the exact legacy closed form (a stripe's ifmap is always
+/// `(rows-1)*stride + filt_h` tall, trimming stride-unreachable bottom
+/// rows even at `nodes == 1`); `engine::multi::split_layer` instead
+/// returns the unchanged layer for a single node so a 1-node system
+/// matches the plain engine bit-for-bit.
+#[deprecated(note = "use engine::multi::split_layer")]
 pub fn node_layer_pixels(layer: &LayerShape, nodes: u64) -> (LayerShape, u64) {
-    let eh = layer.ofmap_h();
-    let rows_per_node = ceil_div(eh, nodes);
-    let used = ceil_div(eh, rows_per_node);
-    // a stripe of `rows_per_node` output rows needs this many ifmap rows
-    let ifmap_h = (rows_per_node - 1) * layer.stride + layer.filt_h;
+    let rows = layer.ofmap_h();
+    let per = crate::util::ceil_div(rows, nodes);
+    let used = crate::util::ceil_div(rows, per);
+    let ifmap_h = (per - 1) * layer.stride + layer.filt_h;
     (LayerShape { ifmap_h, ..layer.clone() }, used)
 }
 
-/// Result of one scale-up vs scale-out comparison point.
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub struct ScaleComparison {
-    pub pe_budget: u64,
-    pub nodes: u64,
-    /// Runtime on the single big array.
-    pub up_cycles: u64,
-    /// Runtime of the slowest node (nodes run in parallel).
-    pub out_cycles: u64,
-    /// DRAM bandwidth demanded for *weights*, bytes/cycle (Fig 10).
-    pub up_weight_bw: f64,
-    pub out_weight_bw: f64,
-}
-
-impl ScaleComparison {
-    /// Fig 9's y-axis: runtime(scale-up) / runtime(scale-out);
-    /// < 1 means scale-up wins.
-    pub fn runtime_ratio(&self) -> f64 {
-        self.up_cycles as f64 / self.out_cycles as f64
-    }
-
-    /// Fig 10's y-axis: weight-bandwidth(up) / weight-bandwidth(out).
-    pub fn weight_bw_ratio(&self) -> f64 {
-        self.up_weight_bw / self.out_weight_bw
-    }
-}
-
 /// One scale-out design point: slowest-node runtime + aggregate weight
-/// DRAM bytes, under a given partition strategy.
+/// DRAM bytes, under a given partition strategy. Legacy accounting:
+/// every used node is charged the full per-node share.
+#[deprecated(note = "use Engine::run_multi_layer_with")]
 pub fn scale_out_point(
     base: &ArchConfig,
     layer: &LayerShape,
     nodes: u64,
     partition: Partition,
 ) -> (u64, u64) {
-    let df = base.dataflow;
-    let node_cfg = ArchConfig { array_h: NODE_DIM, array_w: NODE_DIM, ..base.clone() };
-    match partition {
-        Partition::OutputChannels => {
-            let (per_node, used_nodes) = partition_filters(layer, nodes);
-            let nl = node_layer(layer, per_node);
-            // all busy nodes run the same-shaped sub-layer; the slowest
-            // (= any full node) bounds runtime
-            let cycles = df.timing(&nl, NODE_DIM, NODE_DIM).cycles;
-            let (node_dram, _) = memory::simulate(df, &nl, &node_cfg);
-            // no duplication: each node fetches distinct filters
-            (cycles, node_dram.filter_bytes * used_nodes)
-        }
-        Partition::Pixels => {
-            let (nl, used_nodes) = node_layer_pixels(layer, nodes);
-            let cycles = df.timing(&nl, NODE_DIM, NODE_DIM).cycles;
-            let (node_dram, _) = memory::simulate(df, &nl, &node_cfg);
-            // every node needs the FULL filter set — weight duplication
-            // is the price of pixel partitioning
-            (cycles, node_dram.filter_bytes * used_nodes)
-        }
-        Partition::Auto => {
-            let a = scale_out_point(base, layer, nodes, Partition::OutputChannels);
-            let b = scale_out_point(base, layer, nodes, Partition::Pixels);
-            if b.0 < a.0 { b } else { a }
-        }
-    }
+    let engine = Engine::new(base.clone());
+    let multi = MultiArrayConfig::new(nodes, NODE_DIM, NODE_DIM, partition);
+    let m = engine.run_multi_layer_with(base, layer, &multi, None);
+    (m.node_report.timing.cycles, m.node_report.dram.filter_bytes * m.used_nodes)
 }
 
 /// Compare scale-up vs scale-out for one layer at one PE budget under a
@@ -158,75 +82,39 @@ pub fn scale_out_point(
 ///
 /// `base` fixes dataflow, scratchpad sizes and word size for both sides;
 /// scale-out nodes are 8x8 copies of `base`.
+#[deprecated(note = "use Engine::compare_scaling_with")]
 pub fn compare_layer_with(
     base: &ArchConfig,
     layer: &LayerShape,
     pe_budget: u64,
     partition: Partition,
 ) -> ScaleComparison {
-    assert!(pe_budget >= NODE_PES, "budget below one node");
-    let df = base.dataflow;
-
-    // --- scale-up ---------------------------------------------------------
-    let up = scale_up_cfg(base, pe_budget);
-    let up_cycles = df.timing(layer, up.array_h, up.array_w).cycles;
-    let (up_dram, _) = memory::simulate(df, layer, &up);
-    let up_weight_bw = up_dram.filter_bytes as f64 / up_cycles as f64;
-
-    // --- scale-out --------------------------------------------------------
-    let nodes = pe_budget / NODE_PES;
-    let (out_cycles, out_weight_bytes) = scale_out_point(base, layer, nodes, partition);
-    let out_weight_bw = out_weight_bytes as f64 / out_cycles as f64;
-
-    ScaleComparison {
+    Engine::new(base.clone()).compare_scaling_with(
+        std::slice::from_ref(layer),
         pe_budget,
-        nodes,
-        up_cycles,
-        out_cycles,
-        up_weight_bw,
-        out_weight_bw,
-    }
+        partition,
+    )
 }
 
 /// The paper's comparison: output-channel partitioning (§IV-E).
+#[deprecated(note = "use Engine::compare_scaling")]
 pub fn compare_layer(base: &ArchConfig, layer: &LayerShape, pe_budget: u64) -> ScaleComparison {
-    compare_layer_with(base, layer, pe_budget, Partition::OutputChannels)
+    Engine::new(base.clone()).compare_scaling(std::slice::from_ref(layer), pe_budget)
 }
 
 /// Whole-topology comparison: layer runtimes sum (layers serialize),
 /// weight bandwidths aggregate per layer then average runtime-weighted.
+#[deprecated(note = "use Engine::compare_scaling")]
 pub fn compare_topology(
     base: &ArchConfig,
     layers: &[LayerShape],
     pe_budget: u64,
 ) -> ScaleComparison {
-    let mut up_cycles = 0;
-    let mut out_cycles = 0;
-    let mut up_weight_bytes = 0f64;
-    let mut out_weight_bytes = 0f64;
-    let mut nodes = 0;
-    for layer in layers {
-        let c = compare_layer(base, layer, pe_budget);
-        up_cycles += c.up_cycles;
-        out_cycles += c.out_cycles;
-        up_weight_bytes += c.up_weight_bw * c.up_cycles as f64;
-        out_weight_bytes += c.out_weight_bw * c.out_cycles as f64;
-        nodes = c.nodes;
-    }
-    ScaleComparison {
-        pe_budget,
-        nodes,
-        up_cycles,
-        out_cycles,
-        up_weight_bw: up_weight_bytes / up_cycles as f64,
-        out_weight_bw: out_weight_bytes / out_cycles as f64,
-    }
+    Engine::new(base.clone()).compare_scaling(layers, pe_budget)
 }
 
-/// The paper's sweep: 64 PEs to 16384 PEs, x4 per step.
-pub const PE_SWEEP: [u64; 5] = [64, 256, 1024, 4096, 16384];
-
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::config;

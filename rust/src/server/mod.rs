@@ -98,8 +98,13 @@ struct Job {
 }
 
 enum JobKind {
-    Run { topo: Topology, cfg: ArchConfig },
-    Sweep { kind: SweepKind, topos: Vec<Topology>, cfg: ArchConfig },
+    Run { topo: Topology, cfg: ArchConfig, multi: Option<proto::MultiReq> },
+    Sweep {
+        kind: SweepKind,
+        topos: Vec<Topology>,
+        cfg: ArchConfig,
+        multi: Option<proto::MultiReq>,
+    },
     /// One dse campaign shard: the points named by `indices`, evaluated
     /// through the shared engine (so concurrent shards de-duplicate
     /// layer simulations in the process-wide memo cache).
@@ -342,17 +347,22 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
                 shared.begin_shutdown();
                 break;
             }
-            Ok(Request::Run { id, topo, overrides }) => {
-                let cfg = overrides.apply(shared.engine.cfg());
-                submit(shared, &writer, id, cfg.validate().map(|()| JobKind::Run { topo, cfg }));
-            }
-            Ok(Request::Sweep { id, kind, topos, overrides }) => {
+            Ok(Request::Run { id, topo, overrides, multi }) => {
                 let cfg = overrides.apply(shared.engine.cfg());
                 submit(
                     shared,
                     &writer,
                     id,
-                    cfg.validate().map(|()| JobKind::Sweep { kind, topos, cfg }),
+                    cfg.validate().map(|()| JobKind::Run { topo, cfg, multi }),
+                );
+            }
+            Ok(Request::Sweep { id, kind, topos, overrides, multi }) => {
+                let cfg = overrides.apply(shared.engine.cfg());
+                submit(
+                    shared,
+                    &writer,
+                    id,
+                    cfg.validate().map(|()| JobKind::Sweep { kind, topos, cfg, multi }),
                 );
             }
             Ok(Request::Dse { id, campaign, indices }) => {
@@ -425,33 +435,49 @@ fn worker_loop(shared: &Shared) {
 /// the terminal `done`. Returns the point count for sweep jobs.
 fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
     match &job.kind {
-        JobKind::Run { topo, cfg } => {
-            let report = engine.run_topology_with(cfg, topo);
+        JobKind::Run { topo, cfg, multi } => {
+            let report = match multi {
+                None => engine.run_topology_with(cfg, topo),
+                // multi-array run: the composed system view (slowest-node
+                // timings, aggregate traffic/energy, summed interconnect
+                // bandwidth) in the same wire shape
+                Some(m) => {
+                    let mc = crate::engine::MultiArrayConfig::new(
+                        m.nodes,
+                        cfg.array_h,
+                        cfg.array_w,
+                        m.partition,
+                    );
+                    engine.run_multi_with(cfg, topo, &mc, None).to_workload_report()
+                }
+            };
             send_line(&job.writer, &proto::result_line(job.id, &report));
             None
         }
-        JobKind::Sweep { kind, topos, cfg } => {
-            let out = match kind {
+        JobKind::Sweep { kind, topos, cfg, multi } => {
+            let (nodes, partitions) = match multi {
+                None => (vec![1], vec![crate::engine::Partition::default()]),
+                Some(m) => (vec![m.nodes], vec![m.partition]),
+            };
+            let grid = match kind {
                 SweepKind::Dataflow => engine
                     .sweep()
                     .workloads(topos)
                     .dataflows(&Dataflow::ALL)
-                    .square_arrays(&[128, 64, 32, 16, 8])
-                    .run(),
+                    .square_arrays(&[128, 64, 32, 16, 8]),
                 SweepKind::Memory => engine
                     .sweep()
                     .workloads(topos)
                     .dataflows(&[cfg.dataflow])
                     .array_shapes(&[(cfg.array_h, cfg.array_w)])
-                    .sram_sizes_kb(&[32, 64, 128, 256, 512, 1024, 2048])
-                    .run(),
+                    .sram_sizes_kb(&[32, 64, 128, 256, 512, 1024, 2048]),
                 SweepKind::Shape => engine
                     .sweep()
                     .workloads(topos)
                     .dataflows(&Dataflow::ALL)
-                    .array_shapes(&crate::sweep::fig8_shapes())
-                    .run(),
+                    .array_shapes(&crate::sweep::fig8_shapes()),
             };
+            let out = grid.nodes(&nodes).partitions(&partitions).run();
             for p in &out.points {
                 send_line(&job.writer, &proto::point_line(job.id, p));
             }
@@ -615,6 +641,53 @@ mod tests {
         // the connection is still usable afterwards
         let ok = c.request(&inline_run_request(7)).unwrap();
         assert_eq!(ok.last().unwrap().str_field("event"), Some("done"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn multi_array_run_reports_the_composed_system() {
+        let handle = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+        let mut c = Client::connect(handle.addr()).unwrap();
+
+        // 4 nodes of 16x16, channel partition, inline layers
+        let layers = Json::Arr(vec![proto::layer_shape_to_json(&LayerShape::conv(
+            "c1", 16, 16, 3, 3, 4, 8, 1,
+        ))]);
+        let req = Json::obj(vec![
+            ("req", Json::str("run")),
+            ("id", Json::u64(11)),
+            ("workload", Json::str("multi")),
+            ("layers", layers),
+            ("array", Json::str("16x16")),
+            ("nodes", Json::u64(4)),
+            ("partition", Json::str("channels")),
+        ])
+        .to_string();
+        let events = c.request(&req).unwrap();
+        assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+        let report =
+            proto::workload_report_from_json(events[0].get("report").unwrap()).unwrap();
+        // the wire report is the engine's composed multi view, bit-identical
+        let engine = crate::engine::Engine::new(ArchConfig {
+            array_h: 16,
+            array_w: 16,
+            ..ArchConfig::default()
+        });
+        let topo = Topology::new("multi", vec![LayerShape::conv("c1", 16, 16, 3, 3, 4, 8, 1)]);
+        let mc = crate::engine::MultiArrayConfig::new(
+            4,
+            16,
+            16,
+            crate::engine::Partition::OutputChannels,
+        );
+        let want = engine.run_multi(&topo, &mc).to_workload_report();
+        assert_eq!(report, want);
+
+        // partition without nodes is rejected at parse time
+        let bad = c
+            .request(r#"{"req":"run","workload":"ncf","partition":"pixels"}"#)
+            .unwrap();
+        assert_eq!(bad[0].str_field("event"), Some("error"));
         handle.shutdown();
     }
 

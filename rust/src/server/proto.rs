@@ -23,6 +23,15 @@
 //! arbitrary client-chosen `u64` echoed on every response line for that
 //! job (default 0).
 //!
+//! **Multi-array fields** (§IV-E scale-out, [`crate::engine::multi`]):
+//! `run` and `sweep` accept `"nodes":N` (> 0) plus an optional
+//! `"partition":"channels|pixels|auto"` — the job then simulates `N`
+//! replicas of the (per-node) array shape with the workload partitioned
+//! across them, reporting the composed system view (slowest-node
+//! timings, aggregate traffic/energy, summed interconnect bandwidth).
+//! `"partition"` without `"nodes"` is rejected. `dse` campaigns carry
+//! their own `"nodes"`/`"partitions"` axes inside the campaign spec.
+//!
 //! A layer object is the Table-II row:
 //! `{"name":"c1","ifmap_h":16,"ifmap_w":16,"filt_h":3,"filt_w":3,
 //!   "channels":4,"num_filters":8,"stride":1}`.
@@ -67,16 +76,30 @@ use crate::arch::LayerShape;
 use crate::config::{workloads, ArchConfig, Topology};
 use crate::dataflow::{Dataflow, Timing};
 use crate::energy::EnergyBreakdown;
-use crate::engine::{MemoStats, WarmStats};
+use crate::engine::{MemoStats, Partition, WarmStats};
 use crate::memory::{BandwidthReport, DramTraffic};
 use crate::sim::{LayerReport, WorkloadReport};
 use crate::util::json::Json;
 
+/// Multi-array coordinates of a run/sweep job (node shape = the job's
+/// effective array shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MultiReq {
+    pub nodes: u64,
+    pub partition: Partition,
+}
+
 /// One parsed client request.
 #[derive(Debug)]
 pub enum Request {
-    Run { id: u64, topo: Topology, overrides: Overrides },
-    Sweep { id: u64, kind: SweepKind, topos: Vec<Topology>, overrides: Overrides },
+    Run { id: u64, topo: Topology, overrides: Overrides, multi: Option<MultiReq> },
+    Sweep {
+        id: u64,
+        kind: SweepKind,
+        topos: Vec<Topology>,
+        overrides: Overrides,
+        multi: Option<MultiReq>,
+    },
     /// One shard of a dse campaign: the indices of the campaign points
     /// this job evaluates (see [`crate::dse::Campaign::point`]).
     Dse { id: u64, campaign: crate::dse::Campaign, indices: Vec<usize> },
@@ -211,7 +234,12 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
         Some("run") => {
             let topo = request_topology(&j)?
                 .ok_or("run request needs \"workload\" (built-in name) or \"layers\"")?;
-            Ok(Request::Run { id, topo, overrides: parse_overrides(&j)? })
+            Ok(Request::Run {
+                id,
+                topo,
+                overrides: parse_overrides(&j)?,
+                multi: parse_multi(&j)?,
+            })
         }
         Some("sweep") => {
             let kind =
@@ -243,7 +271,7 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 Some(t) => vec![t],
                 None => workloads::mlperf_suite(),
             };
-            Ok(Request::Sweep { id, kind, topos, overrides })
+            Ok(Request::Sweep { id, kind, topos, overrides, multi: parse_multi(&j)? })
         }
         Some("dse") => {
             let cj = j.get("campaign").ok_or("dse request needs a \"campaign\" spec")?;
@@ -350,6 +378,28 @@ fn parse_overrides(j: &Json) -> Result<Overrides, String> {
     Ok(o)
 }
 
+/// Parse the multi-array fields: `"nodes":N` activates multi-array
+/// execution; `"partition"` refines it (default: channels).
+fn parse_multi(j: &Json) -> Result<Option<MultiReq>, String> {
+    let nodes = match j.get("nodes") {
+        None => {
+            if j.get("partition").is_some() {
+                return Err("\"partition\" requires \"nodes\"".into());
+            }
+            return Ok(None);
+        }
+        Some(v) => v.as_u64().ok_or("\"nodes\" must be u64")?,
+    };
+    if nodes == 0 {
+        return Err("\"nodes\" must be positive".into());
+    }
+    let partition = match j.str_field("partition") {
+        None => Partition::default(),
+        Some(s) => Partition::parse(s).map_err(|e| e.to_string())?,
+    };
+    Ok(Some(MultiReq { nodes, partition }))
+}
+
 // ---------------------------------------------------------------- responses
 
 pub fn result_line(id: u64, report: &WorkloadReport) -> String {
@@ -371,6 +421,8 @@ pub fn point_line(id: u64, p: &crate::engine::SweepPoint) -> String {
         ("array_h", Json::u64(p.array_h)),
         ("array_w", Json::u64(p.array_w)),
         ("ifmap_sram_kb", Json::u64(p.ifmap_sram_kb)),
+        ("nodes", Json::u64(p.nodes)),
+        ("partition", Json::str(p.partition.name())),
         ("cycles", Json::u64(p.report.total_cycles())),
         ("utilization", Json::f64(p.report.overall_utilization(p.total_pes()))),
         ("dram_bytes", Json::u64(p.report.total_dram().total())),
@@ -593,7 +645,8 @@ mod tests {
         let r = parse_request(r#"{"req":"run","id":7,"workload":"ncf","dataflow":"ws","array":"32x16"}"#)
             .unwrap();
         match r {
-            Request::Run { id, topo, overrides } => {
+            Request::Run { id, topo, overrides, multi } => {
+                assert_eq!(multi, None);
                 assert_eq!(id, 7);
                 assert!(!topo.layers.is_empty());
                 assert_eq!(overrides.dataflow, Some(Dataflow::Ws));
@@ -603,6 +656,37 @@ mod tests {
             }
             other => panic!("wrong request {other:?}"),
         }
+    }
+
+    #[test]
+    fn multi_array_fields_parse_and_validate() {
+        match parse_request(r#"{"req":"run","workload":"ncf","nodes":16}"#).unwrap() {
+            Request::Run { multi, .. } => {
+                assert_eq!(
+                    multi,
+                    Some(MultiReq { nodes: 16, partition: Partition::OutputChannels })
+                );
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        match parse_request(
+            r#"{"req":"sweep","kind":"memory","workload":"ncf","nodes":4,"partition":"auto"}"#,
+        )
+        .unwrap()
+        {
+            Request::Sweep { multi, .. } => {
+                assert_eq!(multi, Some(MultiReq { nodes: 4, partition: Partition::Auto }));
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // partition without nodes, zero nodes, unknown strategy: rejected
+        let e = parse_request(r#"{"req":"run","workload":"ncf","partition":"pixels"}"#);
+        assert!(e.unwrap_err().contains("nodes"));
+        assert!(parse_request(r#"{"req":"run","workload":"ncf","nodes":0}"#).is_err());
+        assert!(
+            parse_request(r#"{"req":"run","workload":"ncf","nodes":4,"partition":"diag"}"#)
+                .is_err()
+        );
     }
 
     #[test]
@@ -695,6 +779,8 @@ mod tests {
             workloads: vec!["ncf".into()],
             dataflows: vec![Dataflow::Os],
             arrays: vec![(16, 16)],
+            nodes: vec![1],
+            partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![8.0],
             energy: "28nm".into(),

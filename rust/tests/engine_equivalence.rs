@@ -428,3 +428,154 @@ fn dilated_and_grouped_convs_lower_to_valid_tiles_on_all_backends() {
     let b = Engine::builder().array(8, 8).backend(BackendKind::TraceDriven).build().unwrap();
     assert_eq!(a.run_topology(&topo), b.run_topology(&topo));
 }
+
+// ------------------------------------------------------------------
+// Scale-out shims: the deprecated `scaleout` closed forms must stay
+// bit-identical to the engine's multi-array path they now delegate to.
+// The reference below is an independent copy of the ORIGINAL pre-engine
+// closed forms (dataflow timing + memory::simulate, no memoization).
+
+mod legacy_scaleout_reference {
+    use scale_sim::config::ArchConfig;
+    use scale_sim::engine::multi::{Partition, NODE_DIM, NODE_PES};
+    use scale_sim::memory;
+    use scale_sim::util::{ceil_div, isqrt};
+    use scale_sim::LayerShape;
+
+    pub fn scale_out_point(
+        base: &ArchConfig,
+        layer: &LayerShape,
+        nodes: u64,
+        partition: Partition,
+    ) -> (u64, u64) {
+        let df = base.dataflow;
+        let node_cfg = ArchConfig { array_h: NODE_DIM, array_w: NODE_DIM, ..base.clone() };
+        match partition {
+            Partition::OutputChannels => {
+                let per_node = ceil_div(layer.num_filters, nodes);
+                let used = ceil_div(layer.num_filters, per_node);
+                let nl = LayerShape { num_filters: per_node, ..layer.clone() };
+                let cycles = df.timing(&nl, NODE_DIM, NODE_DIM).cycles;
+                let (node_dram, _) = memory::simulate(df, &nl, &node_cfg);
+                (cycles, node_dram.filter_bytes * used)
+            }
+            Partition::Pixels => {
+                let eh = layer.ofmap_h();
+                let rows_per_node = ceil_div(eh, nodes);
+                let used = ceil_div(eh, rows_per_node);
+                let ifmap_h = (rows_per_node - 1) * layer.stride + layer.filt_h;
+                let nl = LayerShape { ifmap_h, ..layer.clone() };
+                let cycles = df.timing(&nl, NODE_DIM, NODE_DIM).cycles;
+                let (node_dram, _) = memory::simulate(df, &nl, &node_cfg);
+                (cycles, node_dram.filter_bytes * used)
+            }
+            Partition::Auto => {
+                let a = scale_out_point(base, layer, nodes, Partition::OutputChannels);
+                let b = scale_out_point(base, layer, nodes, Partition::Pixels);
+                if b.0 < a.0 {
+                    b
+                } else {
+                    a
+                }
+            }
+        }
+    }
+
+    pub fn compare_topology(
+        base: &ArchConfig,
+        layers: &[LayerShape],
+        pe_budget: u64,
+        partition: Partition,
+    ) -> (u64, u64, u64, f64, f64) {
+        assert!(pe_budget >= NODE_PES);
+        let df = base.dataflow;
+        let dim = isqrt(pe_budget);
+        assert_eq!(dim * dim, pe_budget);
+        let up_cfg = ArchConfig { array_h: dim, array_w: dim, ..base.clone() };
+        let nodes = pe_budget / NODE_PES;
+        let mut up_cycles = 0u64;
+        let mut out_cycles = 0u64;
+        let mut up_weight_bytes = 0f64;
+        let mut out_weight_bytes = 0f64;
+        for layer in layers {
+            let up_c = df.timing(layer, dim, dim).cycles;
+            let (up_dram, _) = memory::simulate(df, layer, &up_cfg);
+            let up_weight_bw = up_dram.filter_bytes as f64 / up_c as f64;
+            let (out_c, out_bytes) = scale_out_point(base, layer, nodes, partition);
+            let out_weight_bw = out_bytes as f64 / out_c as f64;
+            up_cycles += up_c;
+            out_cycles += out_c;
+            up_weight_bytes += up_weight_bw * up_c as f64;
+            out_weight_bytes += out_weight_bw * out_c as f64;
+        }
+        (
+            nodes,
+            up_cycles,
+            out_cycles,
+            up_weight_bytes / up_cycles as f64,
+            out_weight_bytes / out_cycles as f64,
+        )
+    }
+}
+
+#[test]
+fn scaleout_shims_are_bit_identical_to_the_legacy_closed_forms() {
+    use scale_sim::engine::multi::{Partition, PE_SWEEP};
+    use scale_sim::scaleout;
+
+    let layers = vec![
+        LayerShape::conv("a", 32, 32, 3, 3, 16, 100, 1), // uneven channel split
+        LayerShape::conv("b", 19, 19, 3, 3, 64, 256, 1),
+        LayerShape::conv("s2", 30, 30, 5, 5, 8, 24, 2), // strided pixel stripes
+        LayerShape::fc("fc", 4, 512, 300),
+        LayerShape::gemm("g", 129, 64, 2048), // residual-fold spill
+    ];
+    for df in Dataflow::ALL {
+        let base = ArchConfig { dataflow: df, ..config::paper_default() };
+        let engine = Engine::new(base.clone());
+        for partition in Partition::ALL {
+            // per-layer scale-out points at assorted node counts
+            for layer in &layers {
+                for &nodes in &[1u64, 3, 16, 64, 200] {
+                    let want =
+                        legacy_scaleout_reference::scale_out_point(&base, layer, nodes, partition);
+                    let got = scaleout::scale_out_point(&base, layer, nodes, partition);
+                    assert_eq!(got, want, "{df} {partition:?} nodes={nodes} {}", layer.name);
+                }
+            }
+            // whole-topology comparison across the paper's PE sweep
+            for &pe in &PE_SWEEP {
+                let (nodes, up_c, out_c, up_bw, out_bw) =
+                    legacy_scaleout_reference::compare_topology(&base, &layers, pe, partition);
+                let via_engine = engine.compare_scaling_with(&layers, pe, partition);
+                assert_eq!(via_engine.nodes, nodes, "{df} {partition:?} {pe}");
+                assert_eq!(via_engine.up_cycles, up_c, "{df} {partition:?} {pe}");
+                assert_eq!(via_engine.out_cycles, out_c, "{df} {partition:?} {pe}");
+                assert_eq!(
+                    via_engine.up_weight_bw.to_bits(),
+                    up_bw.to_bits(),
+                    "{df} {partition:?} {pe}: up weight bw must be bit-identical"
+                );
+                assert_eq!(
+                    via_engine.out_weight_bw.to_bits(),
+                    out_bw.to_bits(),
+                    "{df} {partition:?} {pe}: out weight bw must be bit-identical"
+                );
+                // the deprecated free-function shims route through the
+                // same engine path
+                if partition == Partition::OutputChannels {
+                    let shim = scaleout::compare_topology(&base, &layers, pe);
+                    assert_eq!(shim, via_engine, "{df} {pe}");
+                }
+                let shim_layer =
+                    scaleout::compare_layer_with(&base, &layers[0], pe, partition);
+                let engine_layer = engine.compare_scaling_with(
+                    std::slice::from_ref(&layers[0]),
+                    pe,
+                    partition,
+                );
+                assert_eq!(shim_layer, engine_layer, "{df} {partition:?} {pe}");
+            }
+        }
+    }
+}

@@ -1,43 +1,57 @@
-//! Golden regression suite: checked-in fixtures pin the per-layer
-//! timing numbers (cycles, folds, utilization, mapping efficiency, the
-//! four SRAM access counts, and the finite-bandwidth stall cycles) for
-//! the first three layers of resnet50 + alexnet + the mlp GEMM suite,
-//! across **all three backends x all three dataflows**. Any future
-//! change that silently shifts a timing result fails here loudly, with
-//! the exact entry and field named.
+//! Golden regression suites: checked-in fixtures pin exact simulation
+//! numbers so any future change that silently shifts a result fails
+//! loudly, with the exact entry and field named.
+//!
+//! * `timings.json` — per-layer timing (cycles, folds, utilization,
+//!   mapping efficiency, the four SRAM access counts, and the
+//!   finite-bandwidth stall cycles) for the first three layers of
+//!   resnet50 + alexnet + the mlp GEMM suite, across **all three
+//!   backends x all three dataflows**.
+//! * `scaleout.json` — the multi-array engine path: per-node cycles,
+//!   slowest-node cycles, shared-DRAM stall cycles and the required
+//!   interconnect bandwidth for the same layers at 4/16/64 nodes of
+//!   8x8 under all three partition strategies.
 //!
 //! Regenerating after an *intentional* model change:
 //!
 //! ```text
 //! BLESS_GOLDEN=1 cargo test --test golden
-//! git diff rust/tests/golden/timings.json   # review the drift!
+//! git diff rust/tests/golden/   # review the drift!
 //! ```
 //!
-//! The fixture stores numbers as shortest-round-trip decimals
+//! Fixtures store numbers as shortest-round-trip decimals
 //! ([`scale_sim::util::json`]), so parsed values compare bit-exactly
-//! against freshly computed ones.
+//! against freshly computed ones. The comparison is **strict**: a
+//! fixture entry missing an expected key, carrying an unknown key, or
+//! drifting on any value is an error — BLESS drift cannot hide behind
+//! `None == None`.
 
 use std::path::PathBuf;
 
 use scale_sim::config::{workloads, Topology};
+use scale_sim::engine::multi::{MultiArrayConfig, Partition, NODE_DIM};
 use scale_sim::engine::{BackendKind, Engine};
 use scale_sim::memory::stall::stalled_runtime;
 use scale_sim::util::json::Json;
 use scale_sim::Dataflow;
 
-/// Array shape the fixtures pin (32x32: small enough that the trace and
-/// RTL backends stay fast, large enough to fold every pinned layer).
+/// Array shape the timing fixtures pin (32x32: small enough that the
+/// trace and RTL backends stay fast, large enough to fold every pinned
+/// layer).
 const ARRAY: u64 = 32;
 
-/// DRAM bandwidth (bytes/cycle) for the pinned stall count — a power of
+/// DRAM bandwidth (bytes/cycle) for the pinned stall counts — a power of
 /// two so the stall model's `bytes / bw` division is exact.
 const STALL_BW: f64 = 16.0;
 
 /// Layers pinned per workload.
 const LAYERS: usize = 3;
 
-fn fixture_path() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden/timings.json")
+/// Node counts the scaleout fixture pins (8x8 nodes each).
+const SCALEOUT_NODES: [u64; 3] = [4, 16, 64];
+
+fn fixture_path(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("rust/tests/golden").join(name)
 }
 
 /// The pinned workloads: two conv suites + one GEMM suite.
@@ -49,7 +63,147 @@ fn cases() -> Vec<(&'static str, Topology)> {
     ]
 }
 
-/// Compute every fixture entry, in the fixture's canonical order.
+// ------------------------------------------------------------ strict checker
+
+/// Key schema of one fixture family. Every entry must carry exactly
+/// these keys — no more, no fewer.
+struct FixtureSpec {
+    str_keys: &'static [&'static str],
+    u64_keys: &'static [&'static str],
+    f64_keys: &'static [&'static str],
+}
+
+impl FixtureSpec {
+    fn knows(&self, key: &str) -> bool {
+        self.str_keys.contains(&key)
+            || self.u64_keys.contains(&key)
+            || self.f64_keys.contains(&key)
+    }
+}
+
+/// Compare computed entries against pinned ones under a strict schema.
+/// Returns the first problem found (entry-count drift, unknown or
+/// missing keys on either side, or any value drift) — the caller panics
+/// with it; negative tests assert on it directly.
+fn check_entries(
+    computed: &[Json],
+    pinned: &[Json],
+    spec: &FixtureSpec,
+) -> Result<(), String> {
+    if computed.len() != pinned.len() {
+        return Err(format!(
+            "fixture entry count drifted: computed {} vs pinned {} — BLESS_GOLDEN=1 after \
+             reviewing why",
+            computed.len(),
+            pinned.len()
+        ));
+    }
+    for (got, want) in computed.iter().zip(pinned) {
+        let ctx: Vec<&str> =
+            spec.str_keys.iter().filter_map(|&k| got.str_field(k)).collect();
+        let ctx = ctx.join("/");
+        let Json::Obj(fields) = want else {
+            return Err(format!("[{ctx}] fixture entry is not an object"));
+        };
+        for (k, _) in fields {
+            if !spec.knows(k) {
+                return Err(format!(
+                    "[{ctx}] fixture carries unknown key {k:?} — corrupted or stale \
+                     fixture; regenerate with BLESS_GOLDEN=1 cargo test --test golden"
+                ));
+            }
+        }
+        let missing = |side: &str, k: &str| {
+            format!(
+                "[{ctx}] {side} entry is missing key {k:?} — fixture schema drifted; \
+                 BLESS_GOLDEN=1 after reviewing why"
+            )
+        };
+        for &k in spec.str_keys {
+            let g = got.str_field(k).ok_or_else(|| missing("computed", k))?;
+            let w = want.str_field(k).ok_or_else(|| missing("fixture", k))?;
+            if g != w {
+                return Err(format!(
+                    "[{ctx}] fixture order drifted on {k:?}: computed {g:?}, golden {w:?}"
+                ));
+            }
+        }
+        for &k in spec.u64_keys {
+            let g = got.u64_field(k).ok_or_else(|| missing("computed", k))?;
+            let w = want.u64_field(k).ok_or_else(|| missing("fixture", k))?;
+            if g != w {
+                return Err(format!(
+                    "[{ctx}] drift on {k:?} (got {g}, golden {w}) — if intentional, \
+                     BLESS_GOLDEN=1 cargo test --test golden"
+                ));
+            }
+        }
+        for &k in spec.f64_keys {
+            let g = got.f64_field(k).ok_or_else(|| missing("computed", k))?;
+            let w = want.f64_field(k).ok_or_else(|| missing("fixture", k))?;
+            if g.to_bits() != w.to_bits() {
+                return Err(format!(
+                    "[{ctx}] {k} drifted bit-exactly: got {g}, golden {w}"
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn write_fixture(name: &str, entries: &[Json]) {
+    let path = fixture_path(name);
+    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+    let mut text = String::from("{\"entries\":[\n");
+    for (i, e) in entries.iter().enumerate() {
+        text.push_str(&e.to_string());
+        if i + 1 < entries.len() {
+            text.push(',');
+        }
+        text.push('\n');
+    }
+    text.push_str("]}\n");
+    std::fs::write(&path, text).unwrap();
+}
+
+fn read_fixture(name: &str) -> Vec<Json> {
+    let text = std::fs::read_to_string(fixture_path(name)).unwrap_or_else(|e| {
+        panic!(
+            "golden fixture {:?} unreadable ({e}); regenerate with BLESS_GOLDEN=1 \
+             cargo test --test golden",
+            fixture_path(name)
+        )
+    });
+    let fixture = Json::parse(text.trim()).expect("golden fixture must be valid JSON");
+    fixture
+        .get("entries")
+        .and_then(Json::as_arr)
+        .expect("fixture entries array")
+        .to_vec()
+}
+
+fn blessing() -> bool {
+    std::env::var("BLESS_GOLDEN").is_ok_and(|v| v == "1")
+}
+
+// ----------------------------------------------------------- timing fixture
+
+const TIMINGS_SPEC: FixtureSpec = FixtureSpec {
+    str_keys: &["workload", "layer", "backend", "dataflow"],
+    u64_keys: &[
+        "cycles",
+        "row_folds",
+        "col_folds",
+        "sram_reads_ifmap",
+        "sram_reads_filter",
+        "sram_writes_ofmap",
+        "sram_reads_ofmap",
+        "stall_cycles_bw16",
+    ],
+    f64_keys: &["utilization", "mapping_efficiency"],
+};
+
+/// Compute every timing entry, in the fixture's canonical order.
 fn compute_entries() -> Vec<Json> {
     let mut out = Vec::new();
     for (wname, topo) in cases() {
@@ -88,85 +242,20 @@ fn compute_entries() -> Vec<Json> {
     out
 }
 
-fn write_fixture(entries: &[Json]) {
-    let path = fixture_path();
-    std::fs::create_dir_all(path.parent().unwrap()).unwrap();
-    let mut text = String::from("{\"entries\":[\n");
-    for (i, e) in entries.iter().enumerate() {
-        text.push_str(&e.to_string());
-        if i + 1 < entries.len() {
-            text.push(',');
-        }
-        text.push('\n');
-    }
-    text.push_str("]}\n");
-    std::fs::write(&path, text).unwrap();
-}
-
 #[test]
 fn timings_match_the_golden_fixture() {
     let entries = compute_entries();
     assert_eq!(entries.len(), 3 * LAYERS * 3 * 3, "3 workloads x 3 layers x 3 backends x 3 dataflows");
 
-    if std::env::var("BLESS_GOLDEN").is_ok_and(|v| v == "1") {
-        write_fixture(&entries);
-        eprintln!("golden: blessed {} entries into {:?}", entries.len(), fixture_path());
+    if blessing() {
+        write_fixture("timings.json", &entries);
+        eprintln!("golden: blessed {} timing entries", entries.len());
         return;
     }
 
-    let text = std::fs::read_to_string(fixture_path()).unwrap_or_else(|e| {
-        panic!(
-            "golden fixture {:?} unreadable ({e}); regenerate with BLESS_GOLDEN=1 \
-             cargo test --test golden",
-            fixture_path()
-        )
-    });
-    let fixture = Json::parse(text.trim()).expect("golden fixture must be valid JSON");
-    let pinned = fixture.get("entries").and_then(Json::as_arr).expect("fixture entries array");
-    assert_eq!(
-        pinned.len(),
-        entries.len(),
-        "fixture entry count drifted — BLESS_GOLDEN=1 after reviewing why"
-    );
-
-    for (got, want) in entries.iter().zip(pinned) {
-        let ctx = format!(
-            "{}/{} backend={} dataflow={}",
-            got.str_field("workload").unwrap(),
-            got.str_field("layer").unwrap(),
-            got.str_field("backend").unwrap(),
-            got.str_field("dataflow").unwrap(),
-        );
-        for key in ["workload", "layer", "backend", "dataflow"] {
-            assert_eq!(got.str_field(key), want.str_field(key), "[{ctx}] fixture order drifted on {key:?}");
-        }
-        for key in [
-            "cycles",
-            "row_folds",
-            "col_folds",
-            "sram_reads_ifmap",
-            "sram_reads_filter",
-            "sram_writes_ofmap",
-            "sram_reads_ofmap",
-            "stall_cycles_bw16",
-        ] {
-            assert_eq!(
-                got.u64_field(key),
-                want.u64_field(key),
-                "[{ctx}] timing drift on {key:?} (got {:?}, golden {:?}) — if intentional, \
-                 BLESS_GOLDEN=1 cargo test --test golden",
-                got.u64_field(key),
-                want.u64_field(key),
-            );
-        }
-        for key in ["utilization", "mapping_efficiency"] {
-            let g = got.f64_field(key).unwrap();
-            let w = want.f64_field(key).unwrap_or(f64::NAN);
-            assert!(
-                g.to_bits() == w.to_bits(),
-                "[{ctx}] {key} drifted bit-exactly: got {g}, golden {w}"
-            );
-        }
+    let pinned = read_fixture("timings.json");
+    if let Err(e) = check_entries(&entries, &pinned, &TIMINGS_SPEC) {
+        panic!("timings.json: {e}");
     }
 }
 
@@ -177,4 +266,196 @@ fn blessing_is_idempotent_in_memory() {
     let a = compute_entries();
     let b = compute_entries();
     assert_eq!(a, b);
+}
+
+// --------------------------------------------------------- scaleout fixture
+
+const SCALEOUT_SPEC: FixtureSpec = FixtureSpec {
+    str_keys: &["workload", "layer", "partition"],
+    u64_keys: &[
+        "nodes",
+        "used_nodes",
+        "node_cycles",
+        "cycles",
+        "stall_cycles_bw16",
+        "dram_bytes",
+    ],
+    f64_keys: &["interconnect_avg_bw", "interconnect_peak_bw"],
+};
+
+/// Compute every scaleout entry: the engine's multi-array path on 8x8
+/// nodes under the OS dataflow, shared-DRAM stalls at [`STALL_BW`].
+fn compute_scaleout_entries() -> Vec<Json> {
+    let engine = Engine::builder().dataflow(Dataflow::Os).build().unwrap();
+    let mut out = Vec::new();
+    for (wname, topo) in cases() {
+        for layer in topo.layers.iter().take(LAYERS) {
+            for &nodes in &SCALEOUT_NODES {
+                for partition in Partition::ALL {
+                    let multi = MultiArrayConfig::new(nodes, NODE_DIM, NODE_DIM, partition);
+                    let m = engine.run_multi_layer_with(
+                        engine.cfg(),
+                        layer,
+                        &multi,
+                        Some(STALL_BW),
+                    );
+                    out.push(Json::obj(vec![
+                        ("workload", Json::str(wname)),
+                        ("layer", Json::str(layer.name.clone())),
+                        ("partition", Json::str(partition.name())),
+                        ("nodes", Json::u64(nodes)),
+                        ("used_nodes", Json::u64(m.used_nodes)),
+                        ("node_cycles", Json::u64(m.node_report.timing.cycles)),
+                        ("cycles", Json::u64(m.cycles)),
+                        ("stall_cycles_bw16", Json::u64(m.stall_cycles)),
+                        ("dram_bytes", Json::u64(m.dram().total())),
+                        ("interconnect_avg_bw", Json::f64(m.avg_bw())),
+                        ("interconnect_peak_bw", Json::f64(m.peak_bw())),
+                    ]));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn scaleout_matches_the_golden_fixture() {
+    let entries = compute_scaleout_entries();
+    assert_eq!(
+        entries.len(),
+        3 * LAYERS * SCALEOUT_NODES.len() * 3,
+        "3 workloads x 3 layers x 3 node counts x 3 partitions"
+    );
+
+    if blessing() {
+        write_fixture("scaleout.json", &entries);
+        eprintln!("golden: blessed {} scaleout entries", entries.len());
+        return;
+    }
+
+    let pinned = read_fixture("scaleout.json");
+    if let Err(e) = check_entries(&entries, &pinned, &SCALEOUT_SPEC) {
+        panic!("scaleout.json: {e}");
+    }
+}
+
+#[test]
+fn scaleout_blessing_is_idempotent_in_memory() {
+    assert_eq!(compute_scaleout_entries(), compute_scaleout_entries());
+}
+
+// ------------------------------------------------- corrupted-fixture guards
+
+/// Build a tiny synthetic entry carrying the full timing schema.
+fn synthetic_entry(cycles: u64) -> Json {
+    Json::obj(vec![
+        ("workload", Json::str("w")),
+        ("layer", Json::str("l")),
+        ("backend", Json::str("analytical")),
+        ("dataflow", Json::str("os")),
+        ("cycles", Json::u64(cycles)),
+        ("row_folds", Json::u64(1)),
+        ("col_folds", Json::u64(2)),
+        ("utilization", Json::f64(0.5)),
+        ("mapping_efficiency", Json::f64(1.0)),
+        ("sram_reads_ifmap", Json::u64(3)),
+        ("sram_reads_filter", Json::u64(4)),
+        ("sram_writes_ofmap", Json::u64(5)),
+        ("sram_reads_ofmap", Json::u64(0)),
+        ("stall_cycles_bw16", Json::u64(7)),
+    ])
+}
+
+/// Return the entry with `key` dropped.
+fn without_key(entry: &Json, key: &str) -> Json {
+    let Json::Obj(fields) = entry else { panic!("entry must be an object") };
+    Json::Obj(fields.iter().filter(|(k, _)| k != key).cloned().collect())
+}
+
+/// Return the entry with an extra unknown key appended.
+fn with_unknown_key(entry: &Json) -> Json {
+    let Json::Obj(fields) = entry else { panic!("entry must be an object") };
+    let mut fields = fields.clone();
+    fields.push(("mystery_metric".to_string(), Json::u64(9)));
+    Json::Obj(fields)
+}
+
+#[test]
+fn corrupted_fixtures_fail_instead_of_passing_silently() {
+    let computed = vec![synthetic_entry(100)];
+
+    // intact fixture passes
+    check_entries(&computed, &[synthetic_entry(100)], &TIMINGS_SPEC).unwrap();
+
+    // a fixture entry MISSING an expected key must error, not compare
+    // None == None and pass — this is the regression this test pins
+    let err = check_entries(
+        &computed,
+        &[without_key(&synthetic_entry(100), "stall_cycles_bw16")],
+        &TIMINGS_SPEC,
+    )
+    .unwrap_err();
+    assert!(err.contains("missing key \"stall_cycles_bw16\""), "{err}");
+
+    // a computed entry missing a schema key (checker/key-list drift)
+    let err = check_entries(
+        &[without_key(&synthetic_entry(100), "cycles")],
+        &[synthetic_entry(100)],
+        &TIMINGS_SPEC,
+    )
+    .unwrap_err();
+    assert!(err.contains("computed entry is missing key \"cycles\""), "{err}");
+
+    // an unknown key in the fixture is corruption, not noise
+    let err = check_entries(
+        &computed,
+        &[with_unknown_key(&synthetic_entry(100))],
+        &TIMINGS_SPEC,
+    )
+    .unwrap_err();
+    assert!(err.contains("unknown key \"mystery_metric\""), "{err}");
+
+    // value drift names the entry and field
+    let err =
+        check_entries(&computed, &[synthetic_entry(101)], &TIMINGS_SPEC).unwrap_err();
+    assert!(err.contains("drift on \"cycles\"") && err.contains("[w/l/analytical/os]"), "{err}");
+
+    // entry-count drift
+    let err = check_entries(&computed, &[], &TIMINGS_SPEC).unwrap_err();
+    assert!(err.contains("entry count drifted"), "{err}");
+
+    // a wrong-typed value (string where a number belongs) reads as missing
+    let Json::Obj(mut fields) = synthetic_entry(100) else { unreachable!() };
+    for f in fields.iter_mut() {
+        if f.0 == "cycles" {
+            f.1 = Json::str("fast");
+        }
+    }
+    let err = check_entries(&computed, &[Json::Obj(fields)], &TIMINGS_SPEC).unwrap_err();
+    assert!(err.contains("missing key \"cycles\""), "{err}");
+}
+
+#[test]
+fn checked_in_fixtures_have_no_schema_drift() {
+    // even before value comparison, the checked-in fixtures must carry
+    // exactly the expected keys on every entry (guards hand-edits)
+    for (name, spec, len) in [
+        ("timings.json", &TIMINGS_SPEC, 3 * LAYERS * 3 * 3),
+        ("scaleout.json", &SCALEOUT_SPEC, 3 * LAYERS * SCALEOUT_NODES.len() * 3),
+    ] {
+        if blessing() {
+            continue; // fixtures may be mid-regeneration
+        }
+        let pinned = read_fixture(name);
+        assert_eq!(pinned.len(), len, "{name} entry count");
+        for e in &pinned {
+            let Json::Obj(fields) = e else { panic!("{name}: entry is not an object") };
+            for (k, _) in fields {
+                assert!(spec.knows(k), "{name}: unknown key {k:?}");
+            }
+            let total = spec.str_keys.len() + spec.u64_keys.len() + spec.f64_keys.len();
+            assert_eq!(fields.len(), total, "{name}: entry key count");
+        }
+    }
 }

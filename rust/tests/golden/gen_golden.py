@@ -1,0 +1,489 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/timings.json by porting the analytical model.
+
+Every formula is ported 1:1 from the Rust sources (dataflow/{os,ws,is}.rs,
+dataflow/mod.rs, trace/folds.rs, memory/mod.rs, memory/stall.rs). Before
+emitting the fixture, the port is validated against the hand-computed
+values asserted in the repo's own Rust unit tests; any mismatch aborts.
+"""
+import json
+import math
+import os
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", ".."))
+
+# ---------------------------------------------------------------- layer shape
+
+class Layer:
+    def __init__(self, name, ih, iw, fh, fw, c, nf, s):
+        self.name, self.ifmap_h, self.ifmap_w = name, ih, iw
+        self.filt_h, self.filt_w, self.channels = fh, fw, c
+        self.num_filters, self.stride = nf, s
+
+    def ofmap_h(self): return (self.ifmap_h - self.filt_h) // self.stride + 1
+    def ofmap_w(self): return (self.ifmap_w - self.filt_w) // self.stride + 1
+    def npx(self): return self.ofmap_h() * self.ofmap_w()
+    def window(self): return self.filt_h * self.filt_w * self.channels
+    def macs(self): return self.npx() * self.window() * self.num_filters
+    def ifmap_elems(self): return self.ifmap_h * self.ifmap_w * self.channels
+    def filter_elems(self): return self.window() * self.num_filters
+    def ofmap_elems(self): return self.npx() * self.num_filters
+    def gemm_view(self): return (self.npx(), self.window(), self.num_filters)
+
+def gemm(name, m, k, n):
+    return Layer(name, m, 1, 1, 1, k, n, 1)
+
+def ceil_div(a, b): return -(-a // b)
+
+# ---------------------------------------------------------------- fold shapes
+
+def for_fold_shapes(total_r, rows, total_c, cols):
+    """Yield (count, r_used, c_used) for the at-most-4 distinct shapes."""
+    full_r, resid_r = total_r // rows, total_r % rows
+    full_c, resid_c = total_c // cols, total_c % cols
+    if full_r > 0 and full_c > 0: yield (full_r * full_c, rows, cols)
+    if resid_r > 0 and full_c > 0: yield (full_c, resid_r, cols)
+    if full_r > 0 and resid_c > 0: yield (full_r, rows, resid_c)
+    if resid_r > 0 and resid_c > 0: yield (1, resid_r, resid_c)
+
+def mapping_efficiency(total_r, rows, total_c, cols):
+    mapped = nfolds = 0
+    for n, r, c in for_fold_shapes(total_r, rows, total_c, cols):
+        mapped += n * r * c
+        nfolds += n
+    return mapped / (rows * cols * nfolds)
+
+# ---------------------------------------------------------------- timings
+
+def os_fold_cycles(r, c, k): return 2 * r + c + k - 2
+def ws_fold_cycles(r, c, npx): return 2 * r + c + npx - 1
+def is_fold_cycles(r, c, nf): return 2 * r + c + nf - 1
+
+def timing(df, layer, rows, cols):
+    npx, k, nf = layer.gemm_view()
+    if df == "os":
+        row_folds, col_folds = ceil_div(npx, rows), ceil_div(nf, cols)
+        cycles = sum(n * os_fold_cycles(r, c, k)
+                     for n, r, c in for_fold_shapes(npx, rows, nf, cols))
+        sram = dict(
+            sram_reads_ifmap=k * npx * col_folds,
+            sram_reads_filter=k * nf * row_folds,
+            sram_writes_ofmap=npx * nf,
+            sram_reads_ofmap=0,
+        )
+        meff = mapping_efficiency(npx, rows, nf, cols)
+    elif df == "ws":
+        row_folds, col_folds = ceil_div(k, rows), ceil_div(nf, cols)
+        cycles = sum(n * ws_fold_cycles(r, c, npx)
+                     for n, r, c in for_fold_shapes(k, rows, nf, cols))
+        sram = dict(
+            sram_reads_ifmap=npx * k * col_folds,
+            sram_reads_filter=k * nf,
+            sram_writes_ofmap=npx * nf * row_folds,
+            sram_reads_ofmap=npx * nf * (row_folds - 1),
+        )
+        meff = mapping_efficiency(k, rows, nf, cols)
+    elif df == "is":
+        row_folds, col_folds = ceil_div(k, rows), ceil_div(npx, cols)
+        cycles = sum(n * is_fold_cycles(r, c, nf)
+                     for n, r, c in for_fold_shapes(k, rows, npx, cols))
+        sram = dict(
+            sram_reads_ifmap=k * npx,
+            sram_reads_filter=nf * k * col_folds,
+            sram_writes_ofmap=npx * nf * row_folds,
+            sram_reads_ofmap=npx * nf * (row_folds - 1),
+        )
+        meff = mapping_efficiency(k, rows, npx, cols)
+    else:
+        raise ValueError(df)
+    return dict(
+        cycles=cycles,
+        row_folds=row_folds,
+        col_folds=col_folds,
+        utilization=layer.macs() / (rows * cols * cycles),
+        mapping_efficiency=meff,
+        **sram,
+    )
+
+# ---------------------------------------------------------------- fold schedule
+
+def fold_schedule(df, layer, rows, cols):
+    """Yield folds as dicts, mirroring trace/folds.rs iteration order."""
+    npx, k, nf = layer.gemm_view()
+    if df == "os":
+        total_r, total_c, stream = npx, nf, k
+        fold_cycles = os_fold_cycles
+    elif df == "ws":
+        total_r, total_c, stream = k, nf, npx
+        fold_cycles = ws_fold_cycles
+    else:
+        total_r, total_c, stream = k, npx, nf
+        fold_cycles = is_fold_cycles
+    row_folds = ceil_div(total_r, rows)
+    col_folds = ceil_div(total_c, cols)
+    if df == "os":
+        outer_count, inner_count = row_folds, col_folds
+    else:
+        outer_count, inner_count = col_folds, row_folds
+
+    def rng(total, tile, idx):
+        lo = idx * tile
+        return (lo, min(lo + tile, total))
+
+    for outer in range(outer_count):
+        for inner in range(inner_count):
+            if df == "os":
+                row_idx, col_idx = outer, inner
+            else:
+                row_idx, col_idx = inner, outer
+            row_range = rng(total_r, rows, row_idx)
+            col_range = rng(total_c, cols, col_idx)
+            r_used = row_range[1] - row_range[0]
+            c_used = col_range[1] - col_range[0]
+            yield dict(
+                cycles=fold_cycles(r_used, c_used, stream),
+                r_used=r_used, c_used=c_used,
+                row_range=row_range, col_range=col_range,
+            )
+
+# ---------------------------------------------------------------- memory model
+
+class SegCache:
+    def __init__(self, cap):
+        self.cap, self.used = cap, 0
+        self.fifo, self.resident = [], {}
+
+    def touch(self, seg, nbytes):
+        if nbytes == 0: return 0
+        if seg in self.resident: return 0
+        if nbytes > self.cap: return nbytes
+        while self.used + nbytes > self.cap:
+            victim = self.fifo.pop(0)
+            self.used -= self.resident.pop(victim)
+        self.resident[seg] = nbytes
+        self.fifo.append(seg)
+        self.used += nbytes
+        return nbytes
+
+class RowCache:
+    def __init__(self, cap, row_bytes, rows):
+        self.cap, self.used, self.row_bytes = cap, 0, row_bytes
+        self.resident = [False] * rows
+        self.fifo = []
+
+    def touch(self, y):
+        if self.resident[y]: return 0
+        if self.row_bytes > self.cap: return self.row_bytes
+        while self.used + self.row_bytes > self.cap:
+            victim = self.fifo.pop(0)
+            self.resident[victim] = False
+            self.used -= self.row_bytes
+        self.resident[y] = True
+        self.fifo.append(y)
+        self.used += self.row_bytes
+        return self.row_bytes
+
+def ifmap_row_span(layer, p0, p1):
+    ew = layer.ofmap_w()
+    oy0 = p0 // ew
+    oy1 = (p1 - 1) // ew
+    y0 = oy0 * layer.stride
+    y1 = min(oy1 * layer.stride + layer.filt_h, layer.ifmap_h)
+    return (y0, y1)
+
+def ifmap_region_bytes(layer, p0, p1, word):
+    y0, y1 = ifmap_row_span(layer, p0, p1)
+    return (y1 - y0) * layer.ifmap_w * layer.channels * word
+
+class Cfg:
+    def __init__(self, rows, cols, ifmap_kb=512, filter_kb=512, ofmap_kb=256, word=1):
+        self.array_h, self.array_w, self.word_bytes = rows, cols, word
+        self.ifmap_sram_kb, self.filter_sram_kb, self.ofmap_sram_kb = ifmap_kb, filter_kb, ofmap_kb
+
+    def ifmap_sram_bytes(self): return self.ifmap_sram_kb * 1024
+    def filter_sram_bytes(self): return self.filter_sram_kb * 1024
+    def ofmap_sram_bytes(self): return self.ofmap_sram_kb * 1024
+
+def simulate_with(df, layer, cfg):
+    """Returns (traffic dict, fetches list of (cycles, bytes))."""
+    word = cfg.word_bytes
+    npx, k, nf = layer.gemm_view()
+    ifmap = SegCache(cfg.ifmap_sram_bytes())
+    ifmap_rows = RowCache(cfg.ifmap_sram_bytes(),
+                          layer.ifmap_w * layer.channels * word, layer.ifmap_h)
+    filt = SegCache(cfg.filter_sram_bytes())
+    traffic = dict(ifmap_bytes=0, filter_bytes=0, ofmap_bytes=0)
+    fetches = []
+    total_cycles = 0
+    for fold in fold_schedule(df, layer, cfg.array_h, cfg.array_w):
+        if df == "os":
+            fi = 0
+            y0, y1 = ifmap_row_span(layer, fold["row_range"][0], fold["row_range"][1])
+            for y in range(y0, y1):
+                fi += ifmap_rows.touch(y)
+            fseg = fold["col_range"][0] // cfg.array_w
+            fb = fold["c_used"] * k * word
+            ff = filt.touch(fseg, fb)
+        elif df == "ws":
+            iseg = fold["row_range"][0] // cfg.array_h
+            ib = ceil_div(layer.ifmap_elems() * fold["r_used"], k) * word
+            fi = ifmap.touch(iseg, ib)
+            ff = fold["r_used"] * fold["c_used"] * word
+        else:  # is
+            region = ifmap_region_bytes(layer, fold["col_range"][0], fold["col_range"][1], word)
+            iseg = fold["col_range"][0] // cfg.array_w * 1_000_003 + fold["row_range"][0] // cfg.array_h
+            ib = ceil_div(region * fold["r_used"], k)
+            fi = ifmap.touch(iseg, ib)
+            fseg = fold["row_range"][0] // cfg.array_h
+            fb = nf * fold["r_used"] * word
+            ff = filt.touch(fseg, fb)
+        traffic["ifmap_bytes"] += fi
+        traffic["filter_bytes"] += ff
+        fetched = fi + ff
+        total_cycles += fold["cycles"]
+        fetches.append((fold["cycles"], fetched))
+
+    window_folds = 1 if df == "os" else ceil_div(k, cfg.array_h)
+    ofmap_total = layer.ofmap_elems() * word
+    if window_folds == 1:
+        traffic["ofmap_bytes"] = ofmap_total
+    else:
+        if df == "ws":
+            partial_set = npx * min(cfg.array_w, nf) * word
+        else:
+            partial_set = min(cfg.array_w, npx) * nf * word
+        if partial_set <= cfg.ofmap_sram_bytes():
+            traffic["ofmap_bytes"] = ofmap_total
+        else:
+            traffic["ofmap_bytes"] = ofmap_total * (2 * window_folds - 1)
+    return traffic, fetches
+
+def stalled_runtime(df, layer, cfg, bw):
+    _, fetches = simulate_with(df, layer, cfg)
+    ideal = stall = 0
+    for i, (cycles, nbytes) in enumerate(fetches):
+        ideal += cycles
+        fetch_cycles = math.ceil(nbytes / bw)
+        if i == 0:
+            stall += fetch_cycles
+        else:
+            window = fetches[i - 1][0]
+            stall += max(fetch_cycles - window, 0)
+    return dict(ideal_cycles=ideal, stall_cycles=stall)
+
+# ---------------------------------------------------------------- self-checks
+
+def check(cond, msg):
+    if not cond:
+        print("SELF-CHECK FAILED:", msg, file=sys.stderr)
+        sys.exit(1)
+
+def self_checks():
+    # --- os.rs unit tests
+    t = timing("os", gemm("mm", 8, 8, 8), 8, 8)
+    check(t["cycles"] == 30 and t["row_folds"] == 1 and t["col_folds"] == 1, "os 8x8x8")
+    check(t["sram_reads_ifmap"] == 64 and t["sram_reads_filter"] == 64
+          and t["sram_writes_ofmap"] == 64 and t["sram_reads_ofmap"] == 0, "os sram 8x8x8")
+    check(timing("os", gemm("mm", 16, 8, 16), 8, 8)["cycles"] == 4 * 30, "os folds multiply")
+    check(timing("os", gemm("mm", 9, 8, 8), 8, 8)["cycles"] == 30 + 16, "os residual")
+    l = Layer("c", 12, 12, 3, 3, 4, 10, 1)
+    check(timing("os", l, 8, 8)["sram_writes_ofmap"] == l.npx() * 10, "os ofmap writes")
+    l2 = gemm("a", 8, 8, 8); l3 = gemm("b", 8, 8, 16)
+    check(timing("os", l3, 8, 8)["sram_reads_ifmap"] == 2 * timing("os", l2, 8, 8)["sram_reads_ifmap"],
+          "os ifmap reads scale with col folds")
+
+    # --- ws.rs unit tests
+    t = timing("ws", gemm("mm", 8, 8, 8), 8, 8)
+    check(t["cycles"] == 31 and t["sram_reads_filter"] == 64 and t["sram_reads_ifmap"] == 64
+          and t["sram_writes_ofmap"] == 64 and t["sram_reads_ofmap"] == 0, "ws 8x8x8")
+    t = timing("ws", gemm("mm", 8, 16, 8), 8, 8)
+    check(t["row_folds"] == 2 and t["sram_writes_ofmap"] == 128 and t["sram_reads_ofmap"] == 64,
+          "ws window fold")
+    l = Layer("c", 14, 14, 3, 3, 32, 48, 1)
+    check(timing("ws", l, 16, 16)["sram_reads_filter"] == l.filter_elems(), "ws weights once")
+    l = Layer("c", 112, 112, 1, 1, 8, 8, 1)
+    check(timing("ws", l, 8, 8)["cycles"] == ws_fold_cycles(8, 8, l.npx()), "ws npx stream")
+    l = Layer("c", 64, 64, 3, 3, 8, 8, 1)
+    check(timing("ws", l, 16, 16)["cycles"] < timing("is", l, 16, 16)["cycles"], "ws beats is")
+    l = gemm("fc", 4, 2048, 1024)
+    check(timing("is", l, 16, 16)["cycles"] < timing("ws", l, 16, 16)["cycles"], "is beats ws")
+
+    # --- is.rs unit tests
+    t = timing("is", gemm("mm", 8, 8, 8), 8, 8)
+    check(t["cycles"] == 31 and t["sram_reads_ifmap"] == 64 and t["sram_reads_filter"] == 64,
+          "is 8x8x8")
+    l = gemm("mm", 24, 40, 24)
+    check(timing("is", l, 8, 8)["cycles"] == timing("ws", l, 8, 8)["cycles"], "is/ws dual")
+    l = Layer("c", 10, 10, 3, 3, 4, 7, 1)
+    check(timing("is", l, 8, 8)["sram_reads_ifmap"] == l.window() * l.npx(), "is ifmap once")
+    t = timing("is", gemm("mm", 8, 20, 8), 8, 8)
+    check(t["row_folds"] == 3 and t["sram_reads_ofmap"] == 2 * 64, "is partial folds")
+
+    # --- dataflow/mod.rs tests
+    for (tr, r, tc, c) in [(10, 4, 7, 3), (8, 8, 8, 8), (1, 128, 1, 128), (129, 64, 300, 7)]:
+        area = sum(n * ru * cu for n, ru, cu in for_fold_shapes(tr, r, tc, c))
+        check(area == tr * tc, f"fold shapes partition {(tr, r, tc, c)}")
+    check(mapping_efficiency(16, 8, 24, 8) == 1.0, "meff exact")
+    l = Layer("c", 19, 19, 3, 3, 256, 256, 1)
+    check(l.window() > l.npx(), "alphago window")
+    for n in (8, 16, 32, 64, 128):
+        o = timing("os", l, n, n)["cycles"]
+        w = timing("ws", l, n, n)["cycles"]
+        i = timing("is", l, n, n)["cycles"]
+        check(o <= w and o <= i, f"os wins {n}")
+
+    # --- trace/folds.rs tests
+    l = Layer("c", 10, 10, 3, 3, 4, 10, 1)
+    for df in ("os", "ws", "is"):
+        t = timing(df, l, 8, 8)
+        folds = list(fold_schedule(df, l, 8, 8))
+        check(len(folds) == t["row_folds"] * t["col_folds"], f"{df} fold count")
+        check(sum(f["cycles"] for f in folds) == t["cycles"], f"{df} fold cycles")
+        npx, k, nf = l.gemm_view()
+        tr, tc = dict(os=(npx, nf), ws=(k, nf), **{"is": (k, npx)})[df]
+        covered = sum(f["r_used"] * f["c_used"] for f in folds)
+        check(covered == tr * tc, f"{df} fold coverage")
+
+    # --- memory/mod.rs tests
+    l = Layer("c", 28, 28, 3, 3, 16, 32, 1)
+    tr, _ = simulate_with("os", l, Cfg(16, 16, 2048, 2048, 2048))
+    check(tr["ifmap_bytes"] == l.ifmap_elems() and tr["filter_bytes"] == l.filter_elems()
+          and tr["ofmap_bytes"] == l.ofmap_elems(), "os big sram once")
+    big = simulate_with("os", l, Cfg(16, 16, 2048, 2048, 2048))[0]
+    tiny = simulate_with("os", l, Cfg(16, 16, 1, 1, 1))[0]
+    check(sum(tiny.values()) > sum(big.values()), "tiny refetches")
+    for df in ("os", "ws", "is"):
+        last = None
+        for kb in (1, 4, 16, 64, 256, 1024):
+            tot = sum(simulate_with(df, l, Cfg(16, 16, kb, kb, kb))[0].values())
+            check(last is None or tot <= last, f"{df} monotone {kb}")
+            last = tot
+    tr, _ = simulate_with("ws", l, Cfg(16, 16, 64, 64, 64))
+    check(tr["filter_bytes"] == l.filter_elems(), "ws weights cross once")
+    l = Layer("c", 30, 30, 3, 3, 64, 8, 1)
+    spill = simulate_with("ws", l, Cfg(16, 16, 64, 64, 1))[0]["ofmap_bytes"]
+    clean = simulate_with("ws", l, Cfg(16, 16, 64, 64, 1024))[0]["ofmap_bytes"]
+    check(clean == l.ofmap_elems() and spill > clean, "ws partial spill")
+    l = Layer("c", 10, 10, 3, 3, 2, 1, 1)
+    check(ifmap_region_bytes(l, 0, 1, 1) == 3 * 10 * 2, "region single px")
+    check(ifmap_region_bytes(l, 0, l.npx(), 1) == 10 * 10 * 2, "region full")
+
+    # --- memory/stall.rs tests
+    l = Layer("c", 28, 28, 3, 3, 16, 32, 1)
+    cfg = Cfg(16, 16)
+    r = stalled_runtime("os", l, cfg, 1e12)
+    check(r["ideal_cycles"] == timing("os", l, 16, 16)["cycles"], "stall ideal cycles")
+    check(r["stall_cycles"] <= 1, "stall near zero at infinite bw")
+    last = 0
+    for bw in (64.0, 16.0, 4.0, 1.0, 0.25):
+        r = stalled_runtime("os", l, cfg, bw)
+        check(r["stall_cycles"] >= last, f"stall monotone {bw}")
+        last = r["stall_cycles"]
+    check(last > 0, "low bw must stall")
+
+    print("all self-checks passed", file=sys.stderr)
+
+# ---------------------------------------------------------------- fixture
+
+def load_conv_csv(path):
+    layers = []
+    with open(path) as f:
+        rows = []
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            cells = [c.strip() for c in line.split(",")]
+            if cells and cells[-1] == "":
+                cells.pop()
+            rows.append(cells)
+    for i, row in enumerate(rows):
+        if i == 0 and all(not c.isdigit() for c in row[1:]):
+            continue  # header
+        name = row[0]
+        ih, iw, fh, fw, c, nf, s = (int(x) for x in row[1:8])
+        layers.append(Layer(name, ih, iw, fh, fw, c, nf, s))
+    return layers
+
+def load_gemm_csv(path):
+    layers = []
+    with open(path) as f:
+        rows = []
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            cells = [c.strip() for c in line.split(",")]
+            if cells and cells[-1] == "":
+                cells.pop()
+            rows.append(cells)
+    for i, row in enumerate(rows):
+        if i == 0 and all(not c.isdigit() for c in row[1:]):
+            continue
+        name, m, n, k = row[0], int(row[1]), int(row[2]), int(row[3])
+        layers.append(gemm(name, m, k, n))  # Gemm{m,k,n} -> conv(m,1,1,1,k,n,1)
+    return layers
+
+ARRAY = 32
+STALL_BW = 16.0
+LAYERS = 3
+BACKENDS = ["analytical", "trace", "rtl"]
+DATAFLOWS = ["os", "ws", "is"]
+
+def fmt_num(v):
+    if isinstance(v, int):
+        return str(v)
+    r = repr(float(v))
+    # Rust f64 Display never uses exponent for these magnitudes and
+    # prints integral floats without ".0"; the parser accepts both, but
+    # keep the common form compact.
+    if r.endswith(".0"):
+        r = r[:-2]
+    return r
+
+def main():
+    self_checks()
+    cases = [
+        ("resnet50", load_conv_csv(os.path.join(REPO, "topologies/resnet50.csv"))),
+        ("alexnet", load_conv_csv(os.path.join(REPO, "topologies/alexnet.csv"))),
+        ("mlp", load_gemm_csv(os.path.join(REPO, "topologies/gemm/mlp.csv"))),
+    ]
+    entries = []
+    cfg = Cfg(ARRAY, ARRAY)
+    for wname, layers in cases:
+        assert len(layers) >= LAYERS, wname
+        for layer in layers[:LAYERS]:
+            for backend in BACKENDS:
+                for df in DATAFLOWS:
+                    t = timing(df, layer, ARRAY, ARRAY)
+                    stall = stalled_runtime(df, layer, cfg, STALL_BW)["stall_cycles"]
+                    check(0.0 < t["utilization"] <= 1.0, f"util bound {wname}/{layer.name}")
+                    check(0.0 < t["mapping_efficiency"] <= 1.0, f"meff bound {wname}/{layer.name}")
+                    e = [
+                        ("workload", json.dumps(wname)),
+                        ("layer", json.dumps(layer.name)),
+                        ("backend", json.dumps(backend)),
+                        ("dataflow", json.dumps(df)),
+                        ("cycles", fmt_num(t["cycles"])),
+                        ("row_folds", fmt_num(t["row_folds"])),
+                        ("col_folds", fmt_num(t["col_folds"])),
+                        ("utilization", fmt_num(t["utilization"])),
+                        ("mapping_efficiency", fmt_num(t["mapping_efficiency"])),
+                        ("sram_reads_ifmap", fmt_num(t["sram_reads_ifmap"])),
+                        ("sram_reads_filter", fmt_num(t["sram_reads_filter"])),
+                        ("sram_writes_ofmap", fmt_num(t["sram_writes_ofmap"])),
+                        ("sram_reads_ofmap", fmt_num(t["sram_reads_ofmap"])),
+                        ("stall_cycles_bw16", fmt_num(stall)),
+                    ]
+                    entries.append("{" + ",".join(f'"{k}":{v}' for k, v in e) + "}")
+    assert len(entries) == 3 * LAYERS * 3 * 3, len(entries)
+    out = "{\"entries\":[\n" + ",\n".join(entries) + "\n]}\n"
+    path = os.path.join(REPO, "rust/tests/golden/timings.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(out)
+    print(f"wrote {len(entries)} entries to {path}")
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,275 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/scaleout.json by porting the engine's
+multi-array model (rust/src/engine/multi.rs) on top of the verified
+timing/memory port in gen_golden.py.
+
+Ports, 1:1 from the Rust sources:
+  - split_layer (channels / pixels, exact remainder accounting)
+  - Auto resolution (pixels iff strictly faster by total runtime;
+    ties -> channels)
+  - slowest-node cycles, shared-DRAM stall (bw split across used nodes)
+  - aggregate DRAM traffic, avg/peak interconnect bandwidth
+
+Self-checks mirror the assertions in rust/src/engine/multi.rs tests and
+rust/src/scaleout/mod.rs tests; any mismatch aborts without writing.
+"""
+import json
+import math
+import os
+import sys
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", ".."))
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from gen_golden import (  # noqa: E402
+    Cfg, Layer, ceil_div, check, fmt_num, gemm, load_conv_csv, load_gemm_csv,
+    self_checks, simulate_with, stalled_runtime, timing,
+)
+
+NODE_DIM = 8
+STALL_BW = 16.0
+LAYERS = 3
+SCALEOUT_NODES = [4, 16, 64]
+PARTITIONS = ["channels", "pixels", "auto"]
+
+
+def clone_layer(l, **kw):
+    vals = dict(name=l.name, ih=l.ifmap_h, iw=l.ifmap_w, fh=l.filt_h,
+                fw=l.filt_w, c=l.channels, nf=l.num_filters, s=l.stride)
+    vals.update(kw)
+    return Layer(vals["name"], vals["ih"], vals["iw"], vals["fh"],
+                 vals["fw"], vals["c"], vals["nf"], vals["s"])
+
+
+def split_layer(layer, nodes, partition):
+    """Port of engine::multi::split_layer: [(sub_layer, count), ...]."""
+    assert nodes > 0
+    if nodes == 1:
+        return [(clone_layer(layer), 1)]
+    if partition == "channels":
+        per = ceil_div(layer.num_filters, nodes)
+        full = layer.num_filters // per
+        rem = layer.num_filters % per
+        out = [(clone_layer(layer, nf=per), full)]
+        if rem > 0:
+            out.append((clone_layer(layer, nf=rem), 1))
+        return out
+    if partition == "pixels":
+        rows = layer.ofmap_h()
+        per = ceil_div(rows, nodes)
+        full = rows // per
+        rem = rows % per
+        stripe = lambda r: clone_layer(layer, ih=(r - 1) * layer.stride + layer.filt_h)
+        out = [(stripe(per), full)]
+        if rem > 0:
+            out.append((stripe(rem), 1))
+        return out
+    raise ValueError(partition)
+
+
+def bandwidth_report(df, layer, cfg):
+    """Port of memory::simulate's BandwidthReport (avg/peak read bw)."""
+    traffic, fetches = simulate_with(df, layer, cfg)
+    total_cycles = sum(c for c, _ in fetches)
+    peak = 0.0
+    prev = None
+    for cycles, nbytes in fetches:
+        if prev is not None:
+            peak = max(peak, nbytes / prev)
+        prev = cycles
+    read_bytes = traffic["ifmap_bytes"] + traffic["filter_bytes"]
+    avg = read_bytes / total_cycles
+    return traffic, max(peak, avg)
+
+
+
+def multi_fixed(df, layer, nodes, partition, cfg, bw):
+    """Port of Engine::multi_fixed (analytical backend)."""
+    shares = split_layer(layer, nodes, partition)
+    main_layer, main_count = shares[0]
+    main_cycles = timing(df, main_layer, cfg.array_h, cfg.array_w)["cycles"]
+    main_traffic, main_peak = bandwidth_report(df, main_layer, cfg)
+    used = main_count
+    cycles = main_cycles
+    rem = None
+    if len(shares) > 1:
+        rem_layer, rem_count = shares[1]
+        assert rem_count == 1
+        rem_cycles = timing(df, rem_layer, cfg.array_h, cfg.array_w)["cycles"]
+        rem_traffic, rem_peak = bandwidth_report(df, rem_layer, cfg)
+        used += 1
+        cycles = max(main_cycles, rem_cycles)
+        rem = dict(layer=rem_layer, cycles=rem_cycles, traffic=rem_traffic, peak=rem_peak)
+    stall = (stalled_runtime(df, main_layer, cfg, bw / used)["stall_cycles"]
+             if bw is not None else 0)
+    dram = dict(
+        ifmap_bytes=main_traffic["ifmap_bytes"] * main_count,
+        filter_bytes=main_traffic["filter_bytes"] * main_count,
+        ofmap_bytes=main_traffic["ofmap_bytes"] * main_count,
+    )
+    peak_bw = main_peak * float(main_count)
+    if rem is not None:
+        for k in dram:
+            dram[k] += rem["traffic"][k]
+        peak_bw += rem["peak"]
+    read_bytes = dram["ifmap_bytes"] + dram["filter_bytes"]
+    avg_bw = 0.0 if cycles == 0 else read_bytes / cycles
+    return dict(
+        partition=partition,
+        used_nodes=used,
+        node_cycles=main_cycles,
+        cycles=cycles,
+        stall_cycles=stall,
+        dram=dram,
+        dram_total=dram["ifmap_bytes"] + dram["filter_bytes"] + dram["ofmap_bytes"],
+        avg_bw=avg_bw,
+        peak_bw=peak_bw,
+    )
+
+
+def run_multi_layer(df, layer, nodes, partition, cfg, bw):
+    if partition == "auto":
+        a = multi_fixed(df, layer, nodes, "channels", cfg, bw)
+        b = multi_fixed(df, layer, nodes, "pixels", cfg, bw)
+        # total runtime (== stall-free cycles without a shared bw);
+        # ties -> channels, matching the legacy closed forms
+        total = lambda m: m["cycles"] + m["stall_cycles"]
+        return b if total(b) < total(a) else a
+    return multi_fixed(df, layer, nodes, partition, cfg, bw)
+
+
+# ------------------------------------------------------------- self-checks
+
+def scaleout_self_checks():
+    cfg8 = Cfg(NODE_DIM, NODE_DIM)
+
+    # multi.rs: split conserves MACs and OFMAP pixels exactly
+    l = Layer("c", 30, 30, 3, 3, 8, 100, 1)
+    for nodes in (1, 2, 3, 7, 16, 64, 1000):
+        for p in ("channels", "pixels"):
+            shares = split_layer(l, nodes, p)
+            macs = sum(n * s.macs() for s, n in shares)
+            ofmap = sum(n * s.ofmap_elems() for s, n in shares)
+            check(macs == l.macs(), f"macs conserved {p} {nodes}")
+            check(ofmap == l.ofmap_elems(), f"ofmap conserved {p} {nodes}")
+            check(sum(n for _, n in shares) <= nodes, f"used <= nodes {p} {nodes}")
+
+    # multi.rs: uneven split puts the remainder on one node
+    l = Layer("c", 16, 16, 3, 3, 8, 100, 1)
+    shares = split_layer(l, 16, "channels")
+    check(len(shares) == 2, "two groups")
+    check(shares[0][0].num_filters == 7 and shares[0][1] == 14, "main 7x14")
+    check(shares[1][0].num_filters == 2 and shares[1][1] == 1, "rem 2x1")
+    m = run_multi_layer("os", l, 16, "channels", cfg8, None)
+    check(m["used_nodes"] == 15, "used 15")
+
+    # scaleout/mod.rs: partition_filters legacy expectations
+    l = Layer("c", 16, 16, 3, 3, 8, 256, 1)
+    shares = split_layer(l, 16, "channels")
+    check(shares[0][0].num_filters == 16 and shares[0][1] == 16 and len(shares) == 1,
+          "256/16 even")
+    l = Layer("c", 16, 16, 3, 3, 8, 4, 1)
+    shares = split_layer(l, 16, "channels")
+    check(shares[0][0].num_filters == 1 and shares[0][1] == 4, "4 filters 16 nodes")
+
+    # scaleout/mod.rs: pixel partition covers all output rows
+    l = Layer("c", 30, 30, 3, 3, 8, 16, 1)
+    for nodes in (1, 2, 4, 7, 28, 100):
+        shares = split_layer(l, nodes, "pixels")
+        rows = sum(n * s.ofmap_h() for s, n in shares)
+        check(rows == l.ofmap_h(), f"pixel rows {nodes}")
+        check(shares[0][0].ifmap_w == 30 and shares[0][0].channels == 8
+              and shares[0][0].num_filters == 16, "stripe geometry")
+
+    # scaleout/mod.rs: pixel partitioning duplicates weights (filter
+    # traffic only — channels partitioning duplicates the ifmap instead)
+    l = Layer("c", 64, 64, 3, 3, 32, 64, 1)
+    ch = multi_fixed("os", l, 16, "channels", cfg8, None)
+    px = multi_fixed("os", l, 16, "pixels", cfg8, None)
+    check(px["dram"]["filter_bytes"] > ch["dram"]["filter_bytes"],
+          "pixel weight duplication")
+
+    # scaleout/mod.rs + multi.rs: auto never slower, resolves to min
+    for l in (Layer("fewfilt", 64, 64, 3, 3, 32, 8, 1),
+              Layer("deep", 19, 19, 3, 3, 256, 256, 1),
+              gemm("fc", 4, 512, 512)):
+        auto = run_multi_layer("os", l, 64, "auto", cfg8, None)
+        ch = multi_fixed("os", l, 64, "channels", cfg8, None)
+        px = multi_fixed("os", l, 64, "pixels", cfg8, None)
+        check(auto["cycles"] == min(ch["cycles"], px["cycles"]), f"auto min {l.name}")
+
+    # multi.rs: few filters prefer pixel partition
+    l = Layer("fewfilt", 64, 64, 3, 3, 32, 8, 1)
+    ch = multi_fixed("os", l, 64, "channels", cfg8, None)
+    px = multi_fixed("os", l, 64, "pixels", cfg8, None)
+    check(px["cycles"] < ch["cycles"], "few filters prefer pixels")
+
+    # multi.rs: under a shared bandwidth, auto ranks by TOTAL runtime
+    for l in (Layer("fewfilt", 64, 64, 3, 3, 32, 8, 1),
+              Layer("deep", 19, 19, 3, 3, 256, 256, 1),
+              Layer("wide", 60, 60, 3, 3, 24, 100, 1)):
+        for bw in (2.0, 16.0):
+            auto = run_multi_layer("os", l, 64, "auto", cfg8, bw)
+            ch = multi_fixed("os", l, 64, "channels", cfg8, bw)
+            px = multi_fixed("os", l, 64, "pixels", cfg8, bw)
+            total = lambda m: m["cycles"] + m["stall_cycles"]
+            check(total(auto) == min(total(ch), total(px)),
+                  f"auto total-runtime min {l.name} {bw}")
+
+    # multi.rs: shared-DRAM stalls grow with node count
+    l = Layer("c", 64, 64, 3, 3, 32, 256, 1)
+    last = 0
+    for nodes in (4, 16, 64):
+        m = run_multi_layer("os", l, nodes, "pixels", cfg8, STALL_BW)
+        check(m["stall_cycles"] >= last, f"stall monotone {nodes}")
+        last = m["stall_cycles"]
+    check(last > 0, "64 nodes on 16 B/cyc must stall")
+
+    print("scaleout self-checks passed", file=sys.stderr)
+
+
+# ----------------------------------------------------------------- fixture
+
+
+def main():
+    self_checks()  # the timing/memory port must still hold
+    scaleout_self_checks()
+    cases = [
+        ("resnet50", load_conv_csv(os.path.join(REPO, "topologies/resnet50.csv"))),
+        ("alexnet", load_conv_csv(os.path.join(REPO, "topologies/alexnet.csv"))),
+        ("mlp", load_gemm_csv(os.path.join(REPO, "topologies/gemm/mlp.csv"))),
+    ]
+    cfg = Cfg(NODE_DIM, NODE_DIM)
+    entries = []
+    for wname, layers in cases:
+        assert len(layers) >= LAYERS, wname
+        for layer in layers[:LAYERS]:
+            for nodes in SCALEOUT_NODES:
+                for partition in PARTITIONS:
+                    m = run_multi_layer("os", layer, nodes, partition, cfg, STALL_BW)
+                    check(m["cycles"] >= m["node_cycles"] > 0, "cycles sane")
+                    check(m["avg_bw"] > 0.0 and m["peak_bw"] > 0.0, "bw sane")
+                    e = [
+                        ("workload", json.dumps(wname)),
+                        ("layer", json.dumps(layer.name)),
+                        ("partition", json.dumps(partition)),
+                        ("nodes", fmt_num(nodes)),
+                        ("used_nodes", fmt_num(m["used_nodes"])),
+                        ("node_cycles", fmt_num(m["node_cycles"])),
+                        ("cycles", fmt_num(m["cycles"])),
+                        ("stall_cycles_bw16", fmt_num(m["stall_cycles"])),
+                        ("dram_bytes", fmt_num(m["dram_total"])),
+                        ("interconnect_avg_bw", fmt_num(m["avg_bw"])),
+                        ("interconnect_peak_bw", fmt_num(m["peak_bw"])),
+                    ]
+                    entries.append("{" + ",".join(f'"{k}":{v}' for k, v in e) + "}")
+    assert len(entries) == 3 * LAYERS * len(SCALEOUT_NODES) * len(PARTITIONS), len(entries)
+    out = "{\"entries\":[\n" + ",\n".join(entries) + "\n]}\n"
+    path = os.path.join(REPO, "rust/tests/golden/scaleout.json")
+    with open(path, "w") as f:
+        f.write(out)
+    print(f"wrote {len(entries)} entries to {path}")
+
+
+if __name__ == "__main__":
+    main()

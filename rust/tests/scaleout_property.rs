@@ -1,0 +1,238 @@
+//! Property tests over the multi-array partition geometry and the
+//! engine's scale-out path ([`scale_sim::engine::multi`]):
+//!
+//! * for random workloads — including depthwise/grouped/dilated convs
+//!   lowered through the typed IR — partitioned sub-shapes conserve
+//!   total MACs and OFMAP pixels **exactly**;
+//! * every node-group is non-empty, and nodes beyond the used count are
+//!   explicitly idle (never a zero-work share);
+//! * `Auto` is never slower than either fixed strategy;
+//! * a single-node multi-array system is the plain engine bit-for-bit.
+
+use scale_sim::config::Topology;
+use scale_sim::engine::multi::{split_layer, MultiArrayConfig, Partition, NODE_DIM};
+use scale_sim::engine::Engine;
+use scale_sim::util::rng::Rng;
+use scale_sim::workload::{Conv2d, Op, OpNode, Workload};
+use scale_sim::{ArchConfig, Dataflow, LayerShape};
+
+/// A random *valid* Conv2d, biased to exercise the special lowerings:
+/// pointwise, depthwise, grouped, dilated, strided.
+fn random_conv(rng: &mut Rng) -> Conv2d {
+    let flavor = rng.range(0, 4);
+    let (groups, in_channels, out_channels) = match flavor {
+        // depthwise: groups == Cin == Cout
+        0 => {
+            let c = rng.range(1, 16);
+            (c, c, c)
+        }
+        // grouped: groups divides both channel counts
+        1 => {
+            let g = rng.range(2, 4);
+            (g, g * rng.range(1, 6), g * rng.range(1, 6))
+        }
+        // dense (flavors 2/3 double the weight of the common case)
+        _ => (1, rng.range(1, 24), rng.range(1, 24)),
+    };
+    let kernel_h = rng.range(1, 4);
+    let kernel_w = rng.range(1, 4);
+    let dilation = rng.range(1, 3);
+    let ekh = (kernel_h - 1) * dilation + 1;
+    let ekw = (kernel_w - 1) * dilation + 1;
+    Conv2d {
+        ifmap_h: ekh + rng.range(0, 20),
+        ifmap_w: ekw + rng.range(0, 20),
+        in_channels,
+        out_channels,
+        kernel_h,
+        kernel_w,
+        stride: rng.range(1, 3),
+        dilation,
+        groups,
+    }
+}
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.range(0, 4) {
+        0 | 1 => Op::Conv2d(random_conv(rng)),
+        2 => Op::Gemm { m: rng.range(1, 64), k: rng.range(1, 96), n: rng.range(1, 64) },
+        _ => Op::FullyConnected {
+            batch: rng.range(1, 8),
+            in_features: rng.range(1, 128),
+            out_features: rng.range(1, 64),
+        },
+    }
+}
+
+/// Random lowered layer shapes (through the typed IR, so depthwise and
+/// grouped convs contribute their per-group tiles).
+fn random_layers(rng: &mut Rng, tag: u64) -> Vec<LayerShape> {
+    let n = rng.range(1, 4) as usize;
+    let nodes = (0..n)
+        .map(|i| OpNode::new(&format!("op{tag}_{i}"), random_op(rng)))
+        .collect();
+    Workload::new(&format!("w{tag}"), nodes)
+        .lower()
+        .expect("random valid workloads lower")
+        .layers
+}
+
+const NODE_COUNTS: [u64; 7] = [1, 2, 3, 5, 8, 16, 64];
+
+#[test]
+fn partitions_conserve_macs_and_ofmap_pixels_exactly() {
+    let mut rng = Rng::new(0x5CA1E_0);
+    for tag in 0..40 {
+        for layer in random_layers(&mut rng, tag) {
+            for &nodes in &NODE_COUNTS {
+                for partition in [Partition::OutputChannels, Partition::Pixels] {
+                    let shares = split_layer(&layer, nodes, partition);
+                    let macs: u64 = shares.iter().map(|s| s.count * s.layer.macs()).sum();
+                    let ofmap: u64 =
+                        shares.iter().map(|s| s.count * s.layer.ofmap_elems()).sum();
+                    assert_eq!(
+                        macs,
+                        layer.macs(),
+                        "MACs not conserved: {partition:?} nodes={nodes} {layer:?}"
+                    );
+                    assert_eq!(
+                        ofmap,
+                        layer.ofmap_elems(),
+                        "OFMAP pixels not conserved: {partition:?} nodes={nodes} {layer:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_share_is_nonempty_and_idle_nodes_are_explicit() {
+    let mut rng = Rng::new(0x5CA1E_1);
+    for tag in 0..40 {
+        for layer in random_layers(&mut rng, tag) {
+            for &nodes in &NODE_COUNTS {
+                for partition in [Partition::OutputChannels, Partition::Pixels] {
+                    let shares = split_layer(&layer, nodes, partition);
+                    assert!(!shares.is_empty() && shares.len() <= 2);
+                    let used: u64 = shares.iter().map(|s| s.count).sum();
+                    assert!(used >= 1 && used <= nodes, "{partition:?} nodes={nodes}");
+                    for s in &shares {
+                        assert!(s.count >= 1, "empty node-group: {partition:?}");
+                        assert!(s.layer.validate().is_ok(), "invalid share {:?}", s.layer);
+                        assert!(s.layer.macs() > 0, "zero-work share: {partition:?}");
+                    }
+                    // the trailing group, when present, is the uneven
+                    // remainder on exactly one node
+                    if let Some(rem) = shares.get(1) {
+                        assert_eq!(rem.count, 1);
+                        match partition {
+                            Partition::OutputChannels => assert!(
+                                rem.layer.num_filters < shares[0].layer.num_filters
+                            ),
+                            Partition::Pixels => {
+                                assert!(rem.layer.ofmap_h() < shares[0].layer.ofmap_h())
+                            }
+                            Partition::Auto => unreachable!(),
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn auto_is_never_slower_than_either_fixed_strategy() {
+    let mut rng = Rng::new(0x5CA1E_2);
+    let engine = Engine::new(ArchConfig::default());
+    for tag in 0..12 {
+        for layer in random_layers(&mut rng, tag) {
+            for &nodes in &[2u64, 7, 16] {
+                let mk = |p| MultiArrayConfig::new(nodes, NODE_DIM, NODE_DIM, p);
+                let auto = engine.run_multi_layer_with(
+                    engine.cfg(),
+                    &layer,
+                    &mk(Partition::Auto),
+                    None,
+                );
+                let ch = engine.run_multi_layer_with(
+                    engine.cfg(),
+                    &layer,
+                    &mk(Partition::OutputChannels),
+                    None,
+                );
+                let px = engine.run_multi_layer_with(
+                    engine.cfg(),
+                    &layer,
+                    &mk(Partition::Pixels),
+                    None,
+                );
+                assert!(
+                    auto.cycles <= ch.cycles && auto.cycles <= px.cycles,
+                    "auto slower: nodes={nodes} {layer:?}"
+                );
+                assert_eq!(auto.cycles, ch.cycles.min(px.cycles), "auto must pick the min");
+                assert_ne!(auto.partition, Partition::Auto, "auto must resolve");
+            }
+        }
+    }
+}
+
+#[test]
+fn single_node_multi_array_is_the_plain_engine_bit_for_bit() {
+    let mut rng = Rng::new(0x5CA1E_3);
+    for tag in 0..12 {
+        let layers = random_layers(&mut rng, tag);
+        let topo = Topology::new("prop", layers);
+        for df in Dataflow::ALL {
+            let cfg = ArchConfig {
+                dataflow: df,
+                array_h: 16,
+                array_w: 16,
+                ..ArchConfig::default()
+            };
+            let engine = Engine::new(cfg.clone());
+            let plain = engine.run_topology(&topo);
+            for partition in Partition::ALL {
+                let multi = MultiArrayConfig::new(1, 16, 16, partition);
+                let m = engine.run_multi(&topo, &multi);
+                assert_eq!(
+                    m.to_workload_report(),
+                    plain,
+                    "single-node multi-array deviates under {partition:?}/{df}"
+                );
+                assert_eq!(m.total_cycles(), plain.total_cycles());
+                assert_eq!(m.total_dram(), plain.total_dram());
+                for ml in &m.layers {
+                    assert_eq!((ml.used_nodes, ml.idle_nodes), (1, 0));
+                    assert!(ml.remainder.is_none());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn slowest_node_bounds_and_cache_sharing_across_partition_points() {
+    // the composed layer runtime is exactly the slowest node's, and the
+    // Auto point after its two fixed siblings is served from cache
+    let engine = Engine::new(ArchConfig::default());
+    let layer = LayerShape::conv("c", 60, 60, 3, 3, 24, 100, 1);
+    for &nodes in &[4u64, 16] {
+        let mk = |p| MultiArrayConfig::new(nodes, NODE_DIM, NODE_DIM, p);
+        for p in [Partition::OutputChannels, Partition::Pixels] {
+            let m = engine.run_multi_layer_with(engine.cfg(), &layer, &mk(p), None);
+            let mut expect = m.node_report.timing.cycles;
+            if let Some(r) = &m.remainder {
+                expect = expect.max(r.timing.cycles);
+            }
+            assert_eq!(m.cycles, expect, "{p:?} nodes={nodes}");
+        }
+        let before = engine.cache_stats();
+        let _ = engine.run_multi_layer_with(engine.cfg(), &layer, &mk(Partition::Auto), None);
+        let delta = engine.cache_stats().since(&before);
+        assert_eq!(delta.layer_sims, 0, "auto after fixed must be fully cached");
+        assert!(delta.cache_hits >= 2, "{delta:?}");
+    }
+}

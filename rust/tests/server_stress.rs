@@ -7,6 +7,7 @@
 use std::path::PathBuf;
 
 use scale_sim::dse::{self, Campaign, Exec, RunOpts};
+use scale_sim::engine::Partition;
 use scale_sim::server::{start, Client, ServeOpts};
 use scale_sim::util::json::Json;
 use scale_sim::{Dataflow, LayerShape};
@@ -37,6 +38,8 @@ fn tiny_campaign() -> Campaign {
         workloads: vec!["ncf".into()],
         dataflows: vec![Dataflow::Os, Dataflow::Ws],
         arrays: vec![(16, 16), (32, 32)],
+        nodes: vec![1],
+        partitions: vec![Partition::default()],
         sram_kb: vec![64],
         dram_bw: vec![4.0, 16.0],
         energy: "28nm".into(),
@@ -194,6 +197,94 @@ fn killed_serve_campaign_resumes_locally_to_an_identical_frontier() {
     assert_eq!(resumed.frontier_runtime_energy, reference.frontier_runtime_energy);
     assert_eq!(resumed.frontier_runtime_bw, reference.frontier_runtime_bw);
     std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The §IV-E acceptance campaign: multi-array axes over two workloads.
+fn multi_campaign() -> Campaign {
+    Campaign {
+        name: "stress-multi".into(),
+        workloads: vec!["ncf".into(), "mlp".into()],
+        dataflows: vec![Dataflow::Os],
+        arrays: vec![(8, 8)],
+        nodes: vec![1, 4, 16, 64],
+        partitions: Partition::ALL.to_vec(),
+        sram_kb: vec![64],
+        dram_bw: vec![4.0, 16.0],
+        energy: "28nm".into(),
+    }
+}
+
+#[test]
+fn multi_array_dse_over_serve_matches_local_with_cross_node_cache_hits() {
+    // 2 workloads x {1,4,16,64} nodes x 3 partitions x 2 bandwidths
+    let campaign = multi_campaign();
+    assert_eq!(campaign.len(), 48);
+    let reference = dse::run_campaign(campaign.clone(), &local(2)).unwrap();
+    assert!(reference.is_complete());
+    // the memoized engine must be exercised hard by the multi axes:
+    // bandwidth twins share configs, single-node partition triplets
+    // coincide, and Auto re-reads both fixed strategies' sub-shapes
+    assert!(
+        reference.stats.hit_rate() >= 0.5,
+        "multi-array campaign hit rate {:.3} < 0.5 ({:?})",
+        reference.stats.hit_rate(),
+        reference.stats.memo
+    );
+
+    let handle = start(ServeOpts { workers: 3, ..ServeOpts::default() }).unwrap();
+    let addr = handle.addr().to_string();
+    let dir = tmp_dir("multi_shard");
+    let out = dse::run_campaign(
+        campaign,
+        &RunOpts {
+            exec: Exec::Serve { addr, shards: 2 },
+            state_dir: Some(dir.clone()),
+            ..RunOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(out.is_complete());
+    assert_eq!(out.completed, reference.completed, "sharded multi-array metrics must be bit-identical");
+    assert_eq!(out.frontier_runtime_energy, reference.frontier_runtime_energy);
+    assert_eq!(out.frontier_runtime_bw, reference.frontier_runtime_bw);
+
+    // cross-node + cross-shard sharing through the server's ONE memo
+    // table: identical sub-shapes across nodes and shards hit, so hits
+    // outnumber distinct simulations
+    let stats = handle.stats();
+    assert!(stats.memo.cache_hits > 0, "no cross-node cache hits: {:?}", stats.memo);
+    assert!(
+        stats.memo.cache_hits > stats.memo.layer_sims,
+        "shards must share the cache: {:?}",
+        stats.memo
+    );
+    handle.shutdown();
+
+    // the journal written over serve reports the same frontier
+    let report = dse::report_campaign(&dir).unwrap();
+    assert_eq!(report.completed, reference.completed);
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // ...and the campaign survives a kill + resume with a bit-identical
+    // frontier: stop after half the grid, resume locally
+    let cut_dir = tmp_dir("multi_cut");
+    let cut = dse::run_campaign(
+        multi_campaign(),
+        &RunOpts {
+            state_dir: Some(cut_dir.clone()),
+            max_points: Some(24),
+            ..local(2)
+        },
+    )
+    .unwrap();
+    assert!(!cut.is_complete());
+    let resumed = dse::resume_campaign(&cut_dir, &local(2)).unwrap();
+    assert!(resumed.is_complete());
+    assert_eq!((resumed.ran, resumed.restored), (24, 24));
+    assert_eq!(resumed.completed, reference.completed);
+    assert_eq!(resumed.frontier_runtime_energy, reference.frontier_runtime_energy);
+    assert_eq!(resumed.frontier_runtime_bw, reference.frontier_runtime_bw);
+    std::fs::remove_dir_all(&cut_dir).unwrap();
 }
 
 #[test]
