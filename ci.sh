@@ -34,6 +34,19 @@ else
   echo "rustfmt unavailable in this toolchain; skipped"
 fi
 
+echo "== clippy =="
+if cargo clippy --version > /dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "clippy unavailable in this toolchain; skipped"
+fi
+
+echo "== lint (in-tree static analysis, ratcheted by lint.baseline) =="
+# hard gate: any finding not enumerated in lint.baseline fails, and so
+# does any stale baseline entry — the accepted-violation count can only
+# ratchet down. See README ("scale-sim lint") and docs/INVARIANTS.md.
+target/release/scale-sim lint --root .
+
 echo "== test =="
 TEST_LOG=$(mktemp)
 cargo test -q 2>&1 | tee "$TEST_LOG"
@@ -43,7 +56,7 @@ echo "== test-inventory floor =="
 # binaries must not drop below the checked-in floor — a suite falling
 # out of Cargo.toml (or a mass #[ignore]) fails here even though every
 # remaining test is green. Raise the floor as suites grow.
-TEST_FLOOR=378
+TEST_FLOOR=410
 TOTAL_PASSED=$(grep -o '[0-9]\+ passed' "$TEST_LOG" | awk '{s+=$1} END {print s+0}')
 rm -f "$TEST_LOG"
 echo "total tests passed: $TOTAL_PASSED (floor $TEST_FLOOR)"
@@ -93,7 +106,7 @@ awk -v h="$HIT" 'BEGIN { exit (h >= 0.5) ? 0 : 1 }' \
 echo "ok (hit rate $HIT)"
 
 echo "== smoke: help lists the serve + dse + scaleout subcommands =="
-for sub in serve client bench-serve dse scaleout; do
+for sub in serve client bench-serve dse scaleout lint; do
   "$BIN" --help | grep -q "scale-sim $sub" || { echo "missing $sub in --help"; exit 1; }
 done
 echo "ok"

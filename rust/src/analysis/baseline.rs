@@ -1,0 +1,248 @@
+//! The ratcheted lint baseline: accepted findings, checked in, counts
+//! only allowed to go *down*.
+//!
+//! Format (`lint.baseline` at the lint root) — `#` comments, one
+//! `RULE path count` line per (rule, file) with accepted findings:
+//!
+//! ```text
+//! # pre-pr-violations: 41
+//! R2 rust/src/dse/journal.rs 1
+//! R4 rust/src/dse/exec.rs 6
+//! ```
+//!
+//! Counts are keyed per (rule, file) rather than per line number, so
+//! unrelated edits that shift lines never invalidate the baseline —
+//! only *adding* or *removing* a violation does. The check is a
+//! two-sided ratchet:
+//!
+//! * more findings than baselined → **new violations**, fail with the
+//!   `file:line` of every finding in the group;
+//! * fewer findings than baselined → **stale entry**, fail too: a fix
+//!   must shrink the checked-in file, so the count monotonically
+//!   decreases and nobody can silently re-spend a fixed allowance.
+//!
+//! The optional `# pre-pr-violations: N` header records what the
+//! linter counted on the tree *before* the pass landed; the baseline
+//! total must stay strictly below it (the gate proves it ratchets).
+
+use std::collections::BTreeMap;
+
+use super::rules::{Finding, RuleId};
+
+/// Parsed baseline: per-(rule, file) accepted counts plus the ratchet
+/// floor header.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    /// `# pre-pr-violations: N` header, if present: the finding count
+    /// of the tree before this pass existed. The baseline total must
+    /// stay strictly below it.
+    pub pre_pr_violations: Option<u64>,
+    /// (rule, root-relative path) → accepted finding count (> 0).
+    pub counts: BTreeMap<(RuleId, String), u64>,
+}
+
+/// One way the current findings disagree with the baseline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Drift {
+    /// More findings than baselined: `lines` locates every finding in
+    /// the group (the newcomers are among them).
+    New { rule: RuleId, file: String, have: u64, allowed: u64, lines: Vec<u32> },
+    /// Fewer findings than baselined: the fix must also shrink the
+    /// baseline file.
+    Stale { rule: RuleId, file: String, have: u64, allowed: u64 },
+}
+
+impl Baseline {
+    /// Parse the baseline text. Errors (returned, never panicked) on
+    /// unknown rules, malformed lines, or duplicate (rule, file) keys.
+    pub fn parse(text: &str) -> std::result::Result<Baseline, String> {
+        let mut b = Baseline::default();
+        for (n, raw) in text.lines().enumerate() {
+            let lineno = n + 1;
+            let line = raw.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(comment) = line.strip_prefix('#') {
+                if let Some(v) = comment.trim().strip_prefix("pre-pr-violations:") {
+                    let parsed = v
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|_| format!("line {lineno}: bad pre-pr-violations count"))?;
+                    b.pre_pr_violations = Some(parsed);
+                }
+                continue;
+            }
+            let mut parts = line.split_whitespace();
+            let (rule, file, count) = match (parts.next(), parts.next(), parts.next(), parts.next())
+            {
+                (Some(r), Some(f), Some(c), None) => (r, f, c),
+                _ => {
+                    return Err(format!(
+                        "line {lineno}: expected `RULE path count`, got {line:?}"
+                    ))
+                }
+            };
+            let rule = RuleId::parse(rule)
+                .ok_or_else(|| format!("line {lineno}: unknown rule {rule:?}"))?;
+            let count = count
+                .parse::<u64>()
+                .map_err(|_| format!("line {lineno}: bad count {count:?}"))?;
+            if count == 0 {
+                return Err(format!(
+                    "line {lineno}: zero-count entry — remove the line instead"
+                ));
+            }
+            if b.counts.insert((rule, file.to_string()), count).is_some() {
+                return Err(format!("line {lineno}: duplicate entry {rule:?} {file}", rule = rule.code()));
+            }
+        }
+        b.validate()?;
+        Ok(b)
+    }
+
+    /// The self-consistency invariant: with a recorded pre-PR count,
+    /// the baseline total must sit strictly below it.
+    pub fn validate(&self) -> std::result::Result<(), String> {
+        if let Some(floor) = self.pre_pr_violations {
+            if self.total() >= floor {
+                return Err(format!(
+                    "ratchet regressed: baseline holds {} findings but the pre-PR tree \
+                     produced {floor} — the baseline must only shrink",
+                    self.total()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a baseline accepting exactly `findings` (no ratchet header).
+    pub fn from_findings(findings: &[Finding]) -> Baseline {
+        let mut counts: BTreeMap<(RuleId, String), u64> = BTreeMap::new();
+        for f in findings {
+            *counts.entry((f.rule, f.file.clone())).or_insert(0) += 1;
+        }
+        Baseline { pre_pr_violations: None, counts }
+    }
+
+    /// Serialize back to the checked-in format (stable: BTreeMap order).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(
+            "# scale-sim lint baseline — accepted findings, one `RULE path count` line per\n\
+             # (rule, file). New findings fail `scale-sim lint`; fixing a finding requires\n\
+             # removing it here, so counts only ratchet down. Regenerate (after deliberate\n\
+             # review!) with `scale-sim lint --write-baseline`.\n",
+        );
+        if let Some(floor) = self.pre_pr_violations {
+            out.push_str(&format!("# pre-pr-violations: {floor}\n"));
+        }
+        for ((rule, file), count) in &self.counts {
+            out.push_str(&format!("{} {} {}\n", rule.code(), file, count));
+        }
+        out
+    }
+
+    /// Total accepted findings.
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Compare current findings against the baseline. Empty result =
+    /// the gate passes.
+    pub fn check(&self, findings: &[Finding]) -> Vec<Drift> {
+        let mut have: BTreeMap<(RuleId, String), Vec<u32>> = BTreeMap::new();
+        for f in findings {
+            have.entry((f.rule, f.file.clone())).or_default().push(f.line);
+        }
+        let mut drift = Vec::new();
+        for ((rule, file), lines) in &have {
+            let allowed = self.counts.get(&(*rule, file.clone())).copied().unwrap_or(0);
+            if lines.len() as u64 > allowed {
+                drift.push(Drift::New {
+                    rule: *rule,
+                    file: file.clone(),
+                    have: lines.len() as u64,
+                    allowed,
+                    lines: lines.clone(),
+                });
+            } else if (lines.len() as u64) < allowed {
+                drift.push(Drift::Stale {
+                    rule: *rule,
+                    file: file.clone(),
+                    have: lines.len() as u64,
+                    allowed,
+                });
+            }
+        }
+        for ((rule, file), &allowed) in &self.counts {
+            if !have.contains_key(&(*rule, file.clone())) {
+                drift.push(Drift::Stale { rule: *rule, file: file.clone(), have: 0, allowed });
+            }
+        }
+        drift.sort_by(|a, b| a.key().cmp(&b.key()));
+        drift
+    }
+}
+
+impl Drift {
+    fn key(&self) -> (String, RuleId, u8) {
+        match self {
+            Drift::New { rule, file, .. } => (file.clone(), *rule, 0),
+            Drift::Stale { rule, file, .. } => (file.clone(), *rule, 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(rule: RuleId, file: &str, line: u32) -> Finding {
+        Finding { rule, file: file.into(), line, message: "m".into() }
+    }
+
+    #[test]
+    fn round_trips_through_render_and_parse() {
+        let findings = vec![
+            f(RuleId::R4, "rust/src/a.rs", 3),
+            f(RuleId::R4, "rust/src/a.rs", 9),
+            f(RuleId::R2, "rust/src/b.rs", 1),
+        ];
+        let mut b = Baseline::from_findings(&findings);
+        b.pre_pr_violations = Some(40);
+        let back = Baseline::parse(&b.render()).unwrap();
+        assert_eq!(back, b);
+        assert_eq!(back.total(), 3);
+        assert!(back.check(&findings).is_empty(), "exact match = clean gate");
+    }
+
+    #[test]
+    fn new_findings_and_stale_entries_both_fail() {
+        let b = Baseline::parse("R4 rust/src/a.rs 1\nR2 rust/src/b.rs 1\n").unwrap();
+        // one extra R4 in a.rs, and b.rs fixed but not removed from baseline
+        let now = vec![f(RuleId::R4, "rust/src/a.rs", 3), f(RuleId::R4, "rust/src/a.rs", 7)];
+        let drift = b.check(&now);
+        assert_eq!(drift.len(), 2);
+        assert!(matches!(&drift[0], Drift::New { file, have: 2, allowed: 1, lines, .. }
+            if file == "rust/src/a.rs" && lines == &vec![3, 7]));
+        assert!(matches!(&drift[1], Drift::Stale { file, have: 0, allowed: 1, .. }
+            if file == "rust/src/b.rs"));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Baseline::parse("R9 x 1\n").is_err(), "unknown rule");
+        assert!(Baseline::parse("R1 x\n").is_err(), "missing count");
+        assert!(Baseline::parse("R1 x 0\n").is_err(), "zero count");
+        assert!(Baseline::parse("R1 x 1\nR1 x 2\n").is_err(), "duplicate");
+        assert!(Baseline::parse("# pre-pr-violations: nope\n").is_err());
+    }
+
+    #[test]
+    fn ratchet_floor_is_enforced() {
+        assert!(Baseline::parse("# pre-pr-violations: 2\nR1 x 1\n").is_ok());
+        let err = Baseline::parse("# pre-pr-violations: 1\nR1 x 1\n").unwrap_err();
+        assert!(err.contains("ratchet"), "{err}");
+    }
+}

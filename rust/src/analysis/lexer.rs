@@ -1,0 +1,391 @@
+//! A minimal Rust lexer for the in-tree static-analysis pass
+//! ([`crate::analysis`]) — identifiers, punctuation, and string
+//! literals with line numbers, everything else (comments, char
+//! literals, lifetimes, numbers, whitespace) consumed and discarded.
+//!
+//! This is deliberately not a full Rust lexer: the rule visitors only
+//! need to see identifier/punct streams that are *guaranteed free of
+//! comment and string-literal text* (so `// HashMap` in a doc comment
+//! never trips the determinism rule), plus string contents for the one
+//! rule that inspects literals (golden-bless hygiene). Handled
+//! correctly: line comments, nested block comments, cooked strings
+//! with escapes, raw strings (`r#".."#`, any hash depth), byte
+//! strings, char literals vs. lifetimes, raw identifiers (`r#type`).
+
+/// One significant token.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword (raw identifiers are unprefixed).
+    Ident(String),
+    /// One ASCII punctuation character (`.`, `:`, `(`, `{`, `!`, ...).
+    Punct(char),
+    /// A string literal's body (escapes left as written — the only
+    /// consumer substring-searches, it never unescapes).
+    Str(String),
+}
+
+/// A token plus the 1-based source line it starts on.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Token {
+    pub tok: Tok,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, name: &str) -> bool {
+        matches!(&self.tok, Tok::Ident(s) if s == name)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        matches!(&self.tok, Tok::Punct(p) if *p == c)
+    }
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_'
+}
+
+fn is_ident_continue(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// Lex `src` into significant tokens. Never panics: malformed input
+/// (unterminated strings/comments) simply ends the token stream at the
+/// point of confusion — the linter runs over sources that rustc has
+/// already accepted, so recovery heuristics are not worth their bugs.
+pub fn lex(src: &str) -> Vec<Token> {
+    Lexer { b: src.as_bytes(), i: 0, line: 1, out: Vec::new() }.run()
+}
+
+struct Lexer<'a> {
+    b: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl<'a> Lexer<'a> {
+    fn peek(&self, ahead: usize) -> Option<u8> {
+        self.b.get(self.i + ahead).copied()
+    }
+
+    /// Consume one byte, tracking line numbers.
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.b.get(self.i).copied();
+        if let Some(c) = c {
+            self.i += 1;
+            if c == b'\n' {
+                self.line += 1;
+            }
+        }
+        c
+    }
+
+    fn push(&mut self, tok: Tok, line: u32) {
+        self.out.push(Token { tok, line });
+    }
+
+    fn run(mut self) -> Vec<Token> {
+        while let Some(c) = self.peek(0) {
+            match c {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek(1) == Some(b'/') => self.line_comment(),
+                b'/' if self.peek(1) == Some(b'*') => self.block_comment(),
+                b'"' => self.cooked_string(),
+                b'\'' => self.char_or_lifetime(),
+                _ if is_ident_start(c) => self.ident_or_prefixed_literal(),
+                _ if c.is_ascii_digit() => self.number(),
+                _ => {
+                    let line = self.line;
+                    self.bump();
+                    if c.is_ascii() {
+                        self.push(Tok::Punct(c as char), line);
+                    }
+                }
+            }
+        }
+        self.out
+    }
+
+    fn line_comment(&mut self) {
+        while let Some(c) = self.bump() {
+            if c == b'\n' {
+                break;
+            }
+        }
+    }
+
+    fn block_comment(&mut self) {
+        self.bump(); // '/'
+        self.bump(); // '*'
+        let mut depth = 1u32;
+        while depth > 0 {
+            match self.bump() {
+                Some(b'/') if self.peek(0) == Some(b'*') => {
+                    self.bump();
+                    depth += 1;
+                }
+                Some(b'*') if self.peek(0) == Some(b'/') => {
+                    self.bump();
+                    depth -= 1;
+                }
+                Some(_) => {}
+                None => return,
+            }
+        }
+    }
+
+    /// `"..."` with `\"` / `\\` escapes; emits the body.
+    fn cooked_string(&mut self) {
+        let line = self.line;
+        self.bump(); // opening quote
+        let mut body = String::new();
+        while let Some(c) = self.bump() {
+            match c {
+                b'"' => break,
+                b'\\' => {
+                    body.push('\\');
+                    if let Some(e) = self.bump() {
+                        if e.is_ascii() {
+                            body.push(e as char);
+                        }
+                    }
+                }
+                _ if c.is_ascii() => body.push(c as char),
+                _ => {}
+            }
+        }
+        self.push(Tok::Str(body), line);
+    }
+
+    /// `r"..."` / `r#"..."#` (any hash depth); emits the body.
+    /// Called with `self.i` on the first `#` or `"` after the prefix.
+    fn raw_string(&mut self) {
+        let line = self.line;
+        let mut hashes = 0usize;
+        while self.peek(0) == Some(b'#') {
+            self.bump();
+            hashes += 1;
+        }
+        if self.peek(0) != Some(b'"') {
+            return; // not actually a raw string (e.g. `r#ident` handled upstream)
+        }
+        self.bump();
+        let mut body = String::new();
+        'scan: while let Some(c) = self.bump() {
+            if c == b'"' {
+                // a close quote counts only when followed by `hashes` hashes
+                for k in 0..hashes {
+                    if self.peek(k) != Some(b'#') {
+                        body.push('"');
+                        continue 'scan;
+                    }
+                }
+                for _ in 0..hashes {
+                    self.bump();
+                }
+                break;
+            }
+            if c.is_ascii() {
+                body.push(c as char);
+            }
+        }
+        self.push(Tok::Str(body), line);
+    }
+
+    /// Char literal (`'a'`, `'\n'`) vs lifetime (`'a`, `'static`).
+    fn char_or_lifetime(&mut self) {
+        self.bump(); // the quote
+        match self.peek(0) {
+            Some(b'\\') => {
+                // escaped char literal: consume escape then closing quote
+                self.bump();
+                self.bump();
+                if self.peek(0) == Some(b'\'') {
+                    self.bump();
+                }
+            }
+            Some(c) if is_ident_start(c) => {
+                // could be 'a' (char) or 'a / 'static (lifetime)
+                let mut k = 0usize;
+                while self.peek(k).is_some_and(is_ident_continue) {
+                    k += 1;
+                }
+                if self.peek(k) == Some(b'\'') {
+                    // char literal: skip body + closing quote
+                    for _ in 0..=k {
+                        self.bump();
+                    }
+                } else {
+                    // lifetime: skip the name, no closing quote
+                    for _ in 0..k {
+                        self.bump();
+                    }
+                }
+            }
+            Some(_) => {
+                // char literal of a non-ident char, e.g. '(' or ' '
+                self.bump();
+                if self.peek(0) == Some(b'\'') {
+                    self.bump();
+                }
+            }
+            None => {}
+        }
+    }
+
+    /// Identifier, or the `r"`/`br"`/`b"`/`b'` literal prefixes.
+    fn ident_or_prefixed_literal(&mut self) {
+        let line = self.line;
+        let start = self.i;
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump();
+        }
+        let ident = &self.b[start..self.i];
+        match (ident, self.peek(0)) {
+            (b"r", Some(b'"')) | (b"br", Some(b'"')) | (b"b", Some(b'"')) => {
+                self.raw_or_cooked_after_prefix(ident == b"b")
+            }
+            (b"r", Some(b'#')) | (b"br", Some(b'#')) => {
+                // raw string r#".."# — or a raw identifier r#name
+                let mut k = 0usize;
+                while self.peek(k) == Some(b'#') {
+                    k += 1;
+                }
+                if self.peek(k) == Some(b'"') {
+                    self.raw_string();
+                } else {
+                    // raw identifier: skip the hash, lex the name
+                    self.bump();
+                    let s = self.i;
+                    while self.peek(0).is_some_and(is_ident_continue) {
+                        self.bump();
+                    }
+                    let name = String::from_utf8_lossy(&self.b[s..self.i]).into_owned();
+                    self.push(Tok::Ident(name), line);
+                }
+            }
+            (b"b", Some(b'\'')) => {
+                self.char_or_lifetime();
+            }
+            _ => {
+                let name = String::from_utf8_lossy(ident).into_owned();
+                self.push(Tok::Ident(name), line);
+            }
+        }
+    }
+
+    fn raw_or_cooked_after_prefix(&mut self, cooked: bool) {
+        if cooked {
+            self.cooked_string();
+        } else {
+            self.raw_string();
+        }
+    }
+
+    /// Numeric literal: consumed, not emitted. Stops before `..` so
+    /// ranges survive (`0..n`), but eats `1.5`, `1e-3`, `0xff`, `1_000`.
+    fn number(&mut self) {
+        while self.peek(0).is_some_and(is_ident_continue) {
+            self.bump();
+        }
+        if self.peek(0) == Some(b'.') && self.peek(1).is_some_and(|c| c.is_ascii_digit()) {
+            self.bump();
+            while self.peek(0).is_some_and(is_ident_continue) {
+                self.bump();
+            }
+        }
+        // float exponent with a sign: `1e-3` lexes as ident-continue up
+        // to `e`, then needs the sign + digits consumed
+        if self.peek(0).is_some_and(|c| c == b'+' || c == b'-')
+            && self
+                .b
+                .get(self.i.wrapping_sub(1))
+                .is_some_and(|&p| p == b'e' || p == b'E')
+        {
+            self.bump();
+            while self.peek(0).is_some_and(is_ident_continue) {
+                self.bump();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn comments_and_strings_never_leak_identifiers() {
+        let src = r##"
+            // HashMap in a line comment
+            /* HashMap /* nested */ still comment */
+            let x = "HashMap in a string";
+            let y = r#"HashMap raw "quoted" body"#;
+            let z = b"bytes";
+            real_ident();
+        "##;
+        let ids = idents(src);
+        assert!(ids.contains(&"real_ident".to_string()));
+        assert!(!ids.contains(&"HashMap".to_string()));
+        // but the string bodies are preserved for literal-inspecting rules
+        let strs: Vec<String> = lex(src)
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Str(s) => Some(s),
+                _ => None,
+            })
+            .collect();
+        assert!(strs.iter().any(|s| s.contains("HashMap in a string")));
+        assert!(strs.iter().any(|s| s.contains("raw \"quoted\" body")));
+    }
+
+    #[test]
+    fn char_literals_vs_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'x'; let s = ' '; let e = '\\n'; g(c, s, e); }";
+        let ids = idents(src);
+        assert!(ids.contains(&"a".to_string()), "lifetime name is an ident");
+        assert!(!ids.contains(&"x'".to_string()));
+        assert!(ids.contains(&"g".to_string()), "lexer must survive past the literals");
+    }
+
+    #[test]
+    fn line_numbers_are_one_based_and_accurate() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<(String, u32)> = toks
+            .into_iter()
+            .filter_map(|t| match t.tok {
+                Tok::Ident(s) => Some((s, t.line)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            lines,
+            vec![("a".into(), 1), ("b".into(), 2), ("c".into(), 4)]
+        );
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_range_dots() {
+        let toks = lex("for i in 0..10 { x[i] = 1.5e-3; }");
+        let dots = toks.iter().filter(|t| t.is_punct('.')).count();
+        assert_eq!(dots, 2, "the `..` survives; the float's dot does not");
+    }
+
+    #[test]
+    fn raw_identifiers_lex_as_plain_names() {
+        assert_eq!(idents("let r#type = 1;"), vec!["let", "type"]);
+    }
+}

@@ -1,0 +1,147 @@
+//! In-tree static analysis: the `scale-sim lint` pass.
+//!
+//! Everything this reproduction promises rests on bit-exact
+//! reproducibility — golden fixtures, dse journal fingerprints, the
+//! "deprecated shims stay bit-identical" contract. This module is the
+//! machine-checked enforcer of the invariants those promises rest on,
+//! run over the repo's **own sources** as a hard CI gate (`ci.sh`):
+//!
+//! * [`lexer`] — a minimal hand-rolled Rust lexer (std-only, no
+//!   syn/clippy: the offline build bans external crates), producing
+//!   identifier/punct/string tokens with line numbers and guaranteed
+//!   free of comment text.
+//! * [`rules`] — the five rule visitors (R1 determinism, R2 lock
+//!   discipline, R3 shim boundary, R4 panic hygiene, R5 golden-bless
+//!   hygiene) with their exemption matrix.
+//! * [`baseline`] — the checked-in ratchet (`lint.baseline`): existing
+//!   violations are enumerated, new ones fail CI, fixed ones must be
+//!   removed, so the count monotonically decreases.
+//! * [`report`] — clickable `file:line:` diagnostic rendering.
+//!
+//! The pass lints itself: this module is `rust/src/` library code and
+//! therefore subject to every rule it implements — which is why it
+//! contains no `unwrap`/`expect`/`panic!` and no `HashMap`.
+
+pub mod baseline;
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+pub use baseline::{Baseline, Drift};
+pub use rules::{classify, lint_source, FileClass, Finding, RuleId};
+
+use crate::{Error, Result};
+
+/// Directories scanned under the lint root.
+const LINT_ROOTS: [&str; 3] = ["rust/src", "rust/tests", "rust/benches"];
+
+/// Path components excluded from the scan: the fixture corpus *is*
+/// seeded violations (each one asserted by `rust/tests/lint.rs`).
+const EXCLUDED_COMPONENTS: [&str; 1] = ["lint_fixtures"];
+
+/// Every `.rs` file the pass covers, as root-relative forward-slash
+/// paths, sorted (deterministic walk order regardless of readdir).
+pub fn collect_sources(root: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    for sub in LINT_ROOTS {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            walk(&dir, root, &mut out)?;
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        if EXCLUDED_COMPONENTS.contains(&name) {
+            continue;
+        }
+        if path.is_dir() {
+            walk(&path, root, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(relative(root, &path));
+        }
+    }
+    Ok(())
+}
+
+/// Root-relative path with forward slashes (the form findings, the
+/// baseline, and diagnostics all use).
+fn relative(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    let s = rel.to_string_lossy();
+    if s.contains('\\') {
+        s.replace('\\', "/")
+    } else {
+        s.into_owned()
+    }
+}
+
+/// Lint every source under `root`. Findings are sorted by
+/// (file, line, rule) — byte-stable across runs and machines.
+pub fn lint_root(root: &Path) -> Result<Vec<Finding>> {
+    let files = collect_sources(root)?;
+    if files.is_empty() {
+        return Err(Error::Config(format!(
+            "lint root {} contains no rust/src sources — pass --root at the repo root",
+            root.display()
+        )));
+    }
+    let mut out = Vec::new();
+    for rel in &files {
+        let text = std::fs::read_to_string(root.join(rel))?;
+        out.extend(lint_source(rel, &text));
+    }
+    // lint_source sorts within a file; files arrive sorted
+    Ok(out)
+}
+
+/// Number of files [`lint_root`] would scan (for the summary line).
+pub fn source_count(root: &Path) -> Result<usize> {
+    Ok(collect_sources(root)?.len())
+}
+
+/// Convenience for the CLI: load a baseline file, treating a missing
+/// file as the empty baseline (zero accepted findings).
+pub fn load_baseline(path: &Path) -> Result<Baseline> {
+    match std::fs::read_to_string(path) {
+        Ok(text) => Baseline::parse(&text)
+            .map_err(|e| Error::Config(format!("{}: {e}", path.display()))),
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Baseline::default()),
+        Err(e) => Err(e.into()),
+    }
+}
+
+/// The default baseline location under a lint root.
+pub fn default_baseline_path(root: &Path) -> PathBuf {
+    root.join("lint.baseline")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_fixture_corpus_is_excluded_from_the_walk() {
+        let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+        let files = collect_sources(root).unwrap();
+        assert!(!files.is_empty());
+        assert!(files.iter().all(|f| !f.contains("lint_fixtures")), "{files:?}");
+        assert!(files.iter().any(|f| f == "rust/src/analysis/mod.rs"), "lints itself");
+        let mut sorted = files.clone();
+        sorted.sort();
+        assert_eq!(files, sorted, "deterministic order");
+    }
+
+    #[test]
+    fn missing_baseline_is_the_empty_baseline() {
+        let b = load_baseline(Path::new("/nonexistent/lint.baseline")).unwrap();
+        assert_eq!(b.total(), 0);
+    }
+}

@@ -1,0 +1,84 @@
+//! Diagnostic rendering for `scale-sim lint` — stable, grep-able,
+//! clickable `file:line:` text output.
+
+use super::baseline::Drift;
+use super::rules::Finding;
+
+/// Render every finding, one diagnostic per line.
+pub fn render_findings(findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for f in findings {
+        out.push_str(&f.render());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render baseline drift: new violations with their locations, stale
+/// entries with the edit the ratchet demands.
+pub fn render_drift(drift: &[Drift], findings: &[Finding]) -> String {
+    let mut out = String::new();
+    for d in drift {
+        match d {
+            Drift::New { rule, file, have, allowed, lines } => {
+                out.push_str(&format!(
+                    "{file}: {have} {code}[{slug}] finding(s), baseline allows {allowed}:\n",
+                    code = rule.code(),
+                    slug = rule.slug(),
+                ));
+                for f in findings.iter().filter(|f| f.rule == *rule && &f.file == file) {
+                    out.push_str(&format!("  {}\n", f.render()));
+                }
+                // lines is redundant with the filter above but keeps the
+                // drift value self-contained for programmatic consumers
+                let _ = lines;
+            }
+            Drift::Stale { rule, file, have, allowed } => {
+                out.push_str(&format!(
+                    "{file}: stale baseline entry `{code} {file} {allowed}` — only {have} \
+                     finding(s) remain; shrink or remove the line (the ratchet only \
+                     goes down)\n",
+                    code = rule.code(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// One-line pass summary.
+pub fn summary(files: usize, findings: usize, baselined: u64) -> String {
+    format!(
+        "lint: {files} files scanned, {findings} finding(s), {baselined} baselined — clean"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::rules::RuleId;
+
+    #[test]
+    fn diagnostics_are_clickable_file_line() {
+        let f = Finding {
+            rule: RuleId::R4,
+            file: "rust/src/a.rs".into(),
+            line: 17,
+            message: "bad".into(),
+        };
+        let text = render_findings(&[f]);
+        assert_eq!(text, "rust/src/a.rs:17: R4[panic-hygiene]: bad\n");
+    }
+
+    #[test]
+    fn drift_rendering_names_the_edit() {
+        let drift = vec![Drift::Stale {
+            rule: RuleId::R2,
+            file: "rust/src/b.rs".into(),
+            have: 0,
+            allowed: 1,
+        }];
+        let text = render_drift(&drift, &[]);
+        assert!(text.contains("stale baseline entry `R2 rust/src/b.rs 1`"), "{text}");
+    }
+}

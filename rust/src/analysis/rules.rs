@@ -1,0 +1,703 @@
+//! The rule visitors (R1–R5) of the in-tree static-analysis pass.
+//!
+//! Every rule walks the token stream of [`crate::analysis::lexer`] —
+//! no syntax tree, so each check is an explicitly documented *token
+//! heuristic*, tuned to this repo's idioms and pinned by the fixture
+//! suite (`rust/tests/lint_fixtures/`). The repo invariants enforced:
+//!
+//! | rule | invariant |
+//! |------|-----------|
+//! | R1 `determinism`     | no `HashMap`/`HashSet` in serialization/fingerprint-bearing modules; no wall clock or entropy outside `util::bench`/`util::rng` |
+//! | R2 `lock-discipline` | no `Mutex`/`RwLock` guard held across I/O or a second `lock()` |
+//! | R3 `shim-boundary`   | engine-era modules never call the deprecated pre-engine shims |
+//! | R4 `panic-hygiene`   | no `unwrap()`/`expect()`/`panic!` in library code |
+//! | R5 `golden-bless`    | `BLESS_GOLDEN` is only read inside `rust/tests/golden*` |
+//!
+//! `#[cfg(test)]` regions are exempt from R1–R4 (tests may use
+//! HashMaps, unwrap freely, and call shims to pin their equivalence);
+//! R5 applies everywhere because a stray bless hook in a unit test is
+//! exactly the bug the rule exists to catch.
+
+use super::lexer::{lex, Tok, Token};
+
+/// Rule identifier — `R1`..`R5`, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    R1,
+    R2,
+    R3,
+    R4,
+    R5,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 5] = [RuleId::R1, RuleId::R2, RuleId::R3, RuleId::R4, RuleId::R5];
+
+    /// Short code used in baseline lines (`R1`).
+    pub fn code(self) -> &'static str {
+        match self {
+            RuleId::R1 => "R1",
+            RuleId::R2 => "R2",
+            RuleId::R3 => "R3",
+            RuleId::R4 => "R4",
+            RuleId::R5 => "R5",
+        }
+    }
+
+    /// Human slug used in diagnostics (`R1[determinism]`).
+    pub fn slug(self) -> &'static str {
+        match self {
+            RuleId::R1 => "determinism",
+            RuleId::R2 => "lock-discipline",
+            RuleId::R3 => "shim-boundary",
+            RuleId::R4 => "panic-hygiene",
+            RuleId::R5 => "golden-bless",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.code() == s)
+    }
+}
+
+/// One diagnostic: rule + `file:line` + message.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: RuleId,
+    /// Path relative to the lint root, forward slashes.
+    pub file: String,
+    /// 1-based source line.
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    /// The clickable diagnostic form: `file:line: R1[determinism]: msg`.
+    pub fn render(&self) -> String {
+        format!(
+            "{}:{}: {}[{}]: {}",
+            self.file,
+            self.line,
+            self.rule.code(),
+            self.rule.slug(),
+            self.message
+        )
+    }
+}
+
+/// What kind of source file a path is — decides which rules apply.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FileClass {
+    /// Library module under `rust/src/` (full rule set).
+    Lib,
+    /// Deprecated-shim module (`sim/`, `sweep/`, `scaleout/`,
+    /// `coordinator/`, `config/topology.rs`): exempt from R3 — the
+    /// shims may reference each other — but held to everything else.
+    Shim,
+    /// `rust/src/main.rs`: a CLI is allowed to panic on broken
+    /// invariants (R4 exempt) but not to be nondeterministic.
+    Main,
+    /// Integration test under `rust/tests/` (only R5 applies).
+    Test,
+    /// Bench binary under `rust/benches/` (only R5 applies).
+    Bench,
+}
+
+/// Module prefixes whose output feeds JSON writers, fingerprints,
+/// journal lines, or golden-compared reports — where HashMap iteration
+/// order would leak nondeterminism into bytes we promise are stable.
+const DETERMINISM_CRITICAL: [&str; 5] = [
+    "rust/src/dse/",
+    "rust/src/server/",
+    "rust/src/config/",
+    "rust/src/report/",
+    "rust/src/trace/",
+];
+
+/// Files allowed to touch wall-clock/entropy sources (R1's second half).
+const CLOCK_EXEMPT: [&str; 2] = ["rust/src/util/bench.rs", "rust/src/util/rng.rs"];
+
+/// Modules the shim-boundary rule (R3) protects: engine-era code that
+/// must route through [`crate::engine`] rather than the deprecated
+/// pre-engine entry points.
+const SHIM_BOUNDARY_SCOPE: [&str; 4] = [
+    "rust/src/engine/",
+    "rust/src/dse/",
+    "rust/src/server/",
+    "rust/src/workload/",
+];
+
+/// Deprecated free functions (call position or `::`-qualified use).
+const DEPRECATED_FNS: [&str; 10] = [
+    "dataflow_sweep",
+    "memory_sweep",
+    "shape_sweep",
+    "partition_filters",
+    "node_layer",
+    "node_layer_pixels",
+    "scale_out_point",
+    "compare_layer_with",
+    "compare_layer",
+    "compare_topology",
+];
+
+/// I/O methods a lock guard must not be held across (R2): TCP/file
+/// writes, flushes, blocking reads, fsyncs.
+const GUARDED_IO_CALLS: [&str; 9] = [
+    "write_all",
+    "write_fmt",
+    "flush",
+    "read_until",
+    "read_line",
+    "read_exact",
+    "read_to_string",
+    "sync_all",
+    "sync_data",
+];
+
+/// Classify a lint-root-relative path (forward slashes).
+pub fn classify(rel: &str) -> FileClass {
+    if rel.starts_with("rust/tests/") {
+        FileClass::Test
+    } else if rel.starts_with("rust/benches/") {
+        FileClass::Bench
+    } else if rel == "rust/src/main.rs" {
+        FileClass::Main
+    } else if rel.starts_with("rust/src/sim/")
+        || rel.starts_with("rust/src/sweep/")
+        || rel.starts_with("rust/src/scaleout/")
+        || rel.starts_with("rust/src/coordinator/")
+        || rel == "rust/src/config/topology.rs"
+    {
+        FileClass::Shim
+    } else {
+        FileClass::Lib
+    }
+}
+
+/// Lint one source file, addressed by its lint-root-relative path
+/// (which decides the applicable rules). Findings are sorted by
+/// (line, rule).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let toks = lex(src);
+    let test_mask = test_region_mask(&toks);
+    let class = classify(rel);
+    let mut out = Vec::new();
+
+    let prod = |i: usize| !test_mask.get(i).copied().unwrap_or(false);
+    let in_prod_code = !matches!(class, FileClass::Test | FileClass::Bench);
+
+    if in_prod_code {
+        rule_r1(rel, &toks, &prod, &mut out);
+        rule_r2(rel, &toks, &prod, &mut out);
+        if class == FileClass::Lib && SHIM_BOUNDARY_SCOPE.iter().any(|p| rel.starts_with(p)) {
+            rule_r3(rel, &toks, &prod, &mut out);
+        }
+        if matches!(class, FileClass::Lib | FileClass::Shim) {
+            rule_r4(rel, &toks, &prod, &mut out);
+        }
+    }
+    rule_r5(rel, &toks, &mut out);
+
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    out
+}
+
+/// Mark every token inside a `#[cfg(test)]` item (a `mod { .. }`,
+/// `fn { .. }`, `impl { .. }` body, or a `use ..;`). Returns one bool
+/// per token: `true` = test-only code.
+fn test_region_mask(toks: &[Token]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if let Some(after_attr) = match_cfg_test_attr(toks, i) {
+            // skip any further attributes between #[cfg(test)] and the item
+            let mut j = after_attr;
+            while toks.get(j).is_some_and(|t| t.is_punct('#')) {
+                match skip_attr(toks, j) {
+                    Some(n) => j = n,
+                    None => break,
+                }
+            }
+            if let Some(end) = item_end(toks, j) {
+                for m in mask.iter_mut().take(end).skip(i) {
+                    *m = true;
+                }
+                i = end;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// If tokens at `i` spell `#[cfg(test)]`, return the index just past
+/// the closing `]`.
+fn match_cfg_test_attr(toks: &[Token], i: usize) -> Option<usize> {
+    let want: [&dyn Fn(&Token) -> bool; 7] = [
+        &|t| t.is_punct('#'),
+        &|t| t.is_punct('['),
+        &|t| t.is_ident("cfg"),
+        &|t| t.is_punct('('),
+        &|t| t.is_ident("test"),
+        &|t| t.is_punct(')'),
+        &|t| t.is_punct(']'),
+    ];
+    for (k, pred) in want.iter().enumerate() {
+        if !toks.get(i + k).is_some_and(|t| pred(t)) {
+            return None;
+        }
+    }
+    Some(i + want.len())
+}
+
+/// Skip a `#[...]` attribute starting at `i` (on the `#`); returns the
+/// index just past its closing `]`.
+fn skip_attr(toks: &[Token], i: usize) -> Option<usize> {
+    if !toks.get(i)?.is_punct('#') || !toks.get(i + 1)?.is_punct('[') {
+        return None;
+    }
+    let mut depth = 0i32;
+    let mut j = i + 1;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('[') {
+            depth += 1;
+        } else if t.is_punct(']') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Find where the item starting at `i` ends: past the matching `}` of
+/// its first brace (mod/fn/impl bodies), or past the `;` for `use`.
+fn item_end(toks: &[Token], i: usize) -> Option<usize> {
+    let mut j = i;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct(';') {
+            return Some(j + 1); // e.g. #[cfg(test)] use helpers::*;
+        }
+        if t.is_punct('{') {
+            let mut depth = 0i32;
+            let mut k = j;
+            while let Some(u) = toks.get(k) {
+                if u.is_punct('{') {
+                    depth += 1;
+                } else if u.is_punct('}') {
+                    depth -= 1;
+                    if depth == 0 {
+                        return Some(k + 1);
+                    }
+                }
+                k += 1;
+            }
+            return None;
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Skip a balanced `( .. )` group starting at `open` (on the `(`);
+/// returns the index just past the matching `)`.
+fn skip_parens(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = open;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+fn ident_at<'t>(toks: &'t [Token], i: usize) -> Option<&'t str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+// ---------------------------------------------------------------- R1
+
+fn rule_r1(rel: &str, toks: &[Token], prod: &dyn Fn(usize) -> bool, out: &mut Vec<Finding>) {
+    let critical = DETERMINISM_CRITICAL.iter().any(|p| rel.starts_with(p));
+    let clock_ok = CLOCK_EXEMPT.contains(&rel);
+    for (i, t) in toks.iter().enumerate() {
+        if !prod(i) {
+            continue;
+        }
+        let Tok::Ident(name) = &t.tok else { continue };
+        if critical && (name == "HashMap" || name == "HashSet") {
+            out.push(Finding {
+                rule: RuleId::R1,
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "{name} in a determinism-critical module: iteration order is \
+                     nondeterministic and this module feeds JSON/fingerprint/golden \
+                     output — use BTreeMap/BTreeSet (or sort before emitting)"
+                ),
+            });
+        }
+        if !clock_ok
+            && matches!(
+                name.as_str(),
+                "SystemTime" | "thread_rng" | "from_entropy" | "getrandom" | "RandomState"
+            )
+        {
+            out.push(Finding {
+                rule: RuleId::R1,
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "{name} outside util::bench/util::rng: wall clocks and entropy \
+                     sources break bit-exact reproducibility — thread timestamps in \
+                     from the caller, or use util::rng's seeded generator"
+                ),
+            });
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R2
+
+/// A `let`-bound lock guard: `let [mut] g = <expr>.lock()[.unwrap()...];`
+/// tracked from its `;` to the closing `}` of the enclosing block or an
+/// explicit `drop(g)`. Within that span, an I/O call or a second
+/// `.lock(` acquisition is flagged (first occurrence of each, so the
+/// finding count per guard is stable under refactors of the span body).
+///
+/// Guard detection requires the lock chain to *end* the initializer
+/// (only `.unwrap()`/`.expect(..)`/`.unwrap_or_else(..)` may follow):
+/// `let x = m.lock().unwrap().field.clone();` copies data out and drops
+/// the temporary guard at the `;`, so it is deliberately not tracked.
+fn rule_r2(rel: &str, toks: &[Token], prod: &dyn Fn(usize) -> bool, out: &mut Vec<Finding>) {
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(prod(i) && toks[i].is_ident("let")) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+            j += 1;
+        }
+        let Some(guard_name) = ident_at(toks, j).map(str::to_string) else {
+            i += 1;
+            continue;
+        };
+        // scan the initializer up to its terminating `;`
+        let Some((semi, acquires)) = initializer_acquires_guard(toks, j + 1) else {
+            i += 1;
+            continue;
+        };
+        if !acquires {
+            i = semi + 1;
+            continue;
+        }
+        scan_guard_span(rel, toks, prod, &guard_name, semi + 1, out);
+        i = semi + 1;
+    }
+}
+
+/// Walk `= <expr> ;` from just past the guard name. Returns the index
+/// of the `;` and whether the initializer *ends* in a lock acquisition.
+fn initializer_acquires_guard(toks: &[Token], mut j: usize) -> Option<(usize, bool)> {
+    if !toks.get(j)?.is_punct('=') {
+        return None;
+    }
+    j += 1;
+    let mut acquired_at_tail = false;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct(';') {
+            return Some((j, acquired_at_tail));
+        }
+        if t.is_punct('(') {
+            j = skip_parens(toks, j)?;
+            continue;
+        }
+        if t.is_punct('.') {
+            let name = ident_at(toks, j + 1);
+            let after = j + 2;
+            if toks.get(after).is_some_and(|t| t.is_punct('(')) {
+                let past = skip_parens(toks, after)?;
+                // acquisitions are zero-argument (`lock()`, RwLock's
+                // `read()`/`write()`): an argument means io::Read::read
+                // or similar, never a guard
+                let no_args = past == after + 2;
+                match name {
+                    Some("lock") | Some("read") | Some("write") if no_args => {
+                        acquired_at_tail = true
+                    }
+                    Some("unwrap") | Some("expect") | Some("unwrap_or_else") => {
+                        // adapter over the guard: keeps the acquisition live
+                    }
+                    _ => acquired_at_tail = false,
+                }
+                j = past;
+                // `?` after the chain changes nothing
+                if toks.get(j).is_some_and(|t| t.is_punct('?')) {
+                    j += 1;
+                }
+                continue;
+            }
+            // field access etc. — the tail is no longer the guard
+            acquired_at_tail = false;
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Flag I/O calls and second acquisitions between `start` and the `}`
+/// closing the guard's block (or `drop(guard)`).
+fn scan_guard_span(
+    rel: &str,
+    toks: &[Token],
+    prod: &dyn Fn(usize) -> bool,
+    guard: &str,
+    start: usize,
+    out: &mut Vec<Finding>,
+) {
+    let mut depth = 0i32;
+    let mut io_flagged = false;
+    let mut lock_flagged = false;
+    let mut j = start;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                return; // enclosing block closed: guard dropped
+            }
+        } else if t.is_ident("drop")
+            && toks.get(j + 1).is_some_and(|t| t.is_punct('('))
+            && ident_at(toks, j + 2) == Some(guard)
+            && toks.get(j + 3).is_some_and(|t| t.is_punct(')'))
+        {
+            return; // explicit early drop
+        } else if t.is_punct('.') && prod(j) {
+            if let Some(name) = ident_at(toks, j + 1) {
+                if toks.get(j + 2).is_some_and(|t| t.is_punct('(')) {
+                    if !io_flagged && GUARDED_IO_CALLS.contains(&name) {
+                        io_flagged = true;
+                        out.push(Finding {
+                            rule: RuleId::R2,
+                            file: rel.to_string(),
+                            line: toks[j + 1].line,
+                            message: format!(
+                                "lock guard `{guard}` held across I/O call `{name}` — \
+                                 a slow peer stalls every thread contending on this \
+                                 lock; copy the data out, drop the guard, then do I/O"
+                            ),
+                        });
+                    }
+                    if !lock_flagged && name == "lock" {
+                        lock_flagged = true;
+                        out.push(Finding {
+                            rule: RuleId::R2,
+                            file: rel.to_string(),
+                            line: toks[j + 1].line,
+                            message: format!(
+                                "lock guard `{guard}` held across a second `lock()` \
+                                 acquisition — nested locking invites deadlock; drop \
+                                 `{guard}` first or merge the critical sections"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+        j += 1;
+    }
+}
+
+// ---------------------------------------------------------------- R3
+
+fn rule_r3(rel: &str, toks: &[Token], prod: &dyn Fn(usize) -> bool, out: &mut Vec<Finding>) {
+    let flag = |out: &mut Vec<Finding>, line: u32, what: &str| {
+        out.push(Finding {
+            rule: RuleId::R3,
+            file: rel.to_string(),
+            line,
+            message: format!(
+                "engine-era module calls deprecated shim API `{what}` — route through \
+                 crate::engine / the typed Workload IR instead (the shims exist only \
+                 to keep pre-engine callers bit-identical)"
+            ),
+        });
+    };
+    let path_sep = |k: usize| {
+        toks.get(k).is_some_and(|t| t.is_punct(':')) && toks.get(k + 1).is_some_and(|t| t.is_punct(':'))
+    };
+    for i in 0..toks.len() {
+        if !prod(i) {
+            continue;
+        }
+        let Some(name) = ident_at(toks, i) else { continue };
+        if name == "Simulator" {
+            flag(out, toks[i].line, "sim::Simulator");
+            continue;
+        }
+        if DEPRECATED_FNS.contains(&name) {
+            // call position or `::`-qualified mention (imports included)
+            let called = toks.get(i + 1).is_some_and(|t| t.is_punct('('));
+            let qualified = i >= 2 && path_sep(i - 2);
+            if called || qualified {
+                flag(out, toks[i].line, name);
+            }
+            continue;
+        }
+        if name == "coordinator" && path_sep(i + 1) && ident_at(toks, i + 3) == Some("run") {
+            flag(out, toks[i].line, "coordinator::run");
+            continue;
+        }
+        if name == "Topology" && path_sep(i + 1) {
+            if let Some(m @ ("parse" | "from_file")) = ident_at(toks, i + 3) {
+                flag(out, toks[i].line, &format!("Topology::{m}"));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R4
+
+fn rule_r4(rel: &str, toks: &[Token], prod: &dyn Fn(usize) -> bool, out: &mut Vec<Finding>) {
+    for i in 0..toks.len() {
+        if !prod(i) {
+            continue;
+        }
+        let Some(name) = ident_at(toks, i) else { continue };
+        let flag = |out: &mut Vec<Finding>, what: &str| {
+            out.push(Finding {
+                rule: RuleId::R4,
+                file: rel.to_string(),
+                line: toks[i].line,
+                message: format!(
+                    "`{what}` in library code — a poisoned lock or malformed input \
+                     must surface as an Error (or recover via \
+                     PoisonError::into_inner), not take the process down"
+                ),
+            });
+        };
+        match name {
+            "unwrap" | "expect" => {
+                let method_call = i >= 1
+                    && toks[i - 1].is_punct('.')
+                    && toks.get(i + 1).is_some_and(|t| t.is_punct('('));
+                if method_call {
+                    flag(out, &format!("{name}()"));
+                }
+            }
+            "panic" => {
+                if toks.get(i + 1).is_some_and(|t| t.is_punct('!')) {
+                    flag(out, "panic!");
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R5
+
+fn rule_r5(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
+    if rel.starts_with("rust/tests/golden") {
+        return;
+    }
+    // assembled at runtime so the linter's own source never contains
+    // the literal it hunts (the pass lints itself)
+    let needle = concat!("BLESS_", "GOLDEN");
+    for t in toks {
+        let hit = match &t.tok {
+            Tok::Ident(s) => s == needle,
+            Tok::Str(s) => s.contains(needle),
+            Tok::Punct(_) => false,
+        };
+        if hit {
+            out.push(Finding {
+                rule: RuleId::R5,
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "{needle} referenced outside rust/tests/golden* — blessing \
+                     golden fixtures from anywhere else silently rewrites the \
+                     regression contract"
+                ),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn find(rel: &str, src: &str) -> Vec<(RuleId, u32)> {
+        lint_source(rel, src).into_iter().map(|f| (f.rule, f.line)).collect()
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "\
+use std::collections::HashMap;\n\
+#[cfg(test)]\n\
+mod tests {\n\
+    use std::collections::HashMap;\n\
+    fn f() { x.unwrap(); }\n\
+}\n";
+        let hits = find("rust/src/dse/x.rs", src);
+        assert_eq!(hits, vec![(RuleId::R1, 1)], "only the non-test HashMap flags");
+    }
+
+    #[test]
+    fn r2_does_not_flag_temporary_guards_or_dropped_guards() {
+        let clean = "\
+fn a(m: &Mutex<u32>) -> u32 { *m.lock().unwrap() }\n\
+fn b(m: &Mutex<Vec<u8>>, w: &mut TcpStream) {\n\
+    let data = m.lock().unwrap().clone();\n\
+    let g = m.lock().unwrap();\n\
+    drop(g);\n\
+    w.write_all(&data).ok();\n\
+}\n";
+        assert!(find("rust/src/util/x.rs", clean).iter().all(|(r, _)| *r != RuleId::R2));
+    }
+
+    #[test]
+    fn r3_ignores_non_deprecated_sweep_infrastructure() {
+        let src = "\
+use crate::sweep::parallel_map;\n\
+fn f() { let t = crate::sweep::default_threads(); parallel_map(&v, t, |x| x); }\n";
+        assert!(find("rust/src/engine/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn r4_skips_unwrap_or_variants() {
+        let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0).max(x.unwrap_or_else(|| 1)) }\n";
+        assert!(find("rust/src/util/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn classification_matrix() {
+        assert_eq!(classify("rust/src/engine/mod.rs"), FileClass::Lib);
+        assert_eq!(classify("rust/src/sweep/mod.rs"), FileClass::Shim);
+        assert_eq!(classify("rust/src/config/topology.rs"), FileClass::Shim);
+        assert_eq!(classify("rust/src/config/cfg.rs"), FileClass::Lib);
+        assert_eq!(classify("rust/src/main.rs"), FileClass::Main);
+        assert_eq!(classify("rust/tests/golden.rs"), FileClass::Test);
+        assert_eq!(classify("rust/benches/perf_hotpath.rs"), FileClass::Bench);
+    }
+}

@@ -20,7 +20,7 @@
 //! Both `key: value` and `key = value` are accepted; keys are
 //! case-insensitive; unknown keys are an error (typo protection).
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use crate::dataflow::Dataflow;
@@ -97,7 +97,7 @@ impl ArchConfig {
 
     /// Parse the cfg text format.
     pub fn parse(text: &str) -> Result<Self> {
-        let mut kv: HashMap<String, String> = HashMap::new();
+        let mut kv: BTreeMap<String, String> = BTreeMap::new();
         for (lineno, raw) in text.lines().enumerate() {
             let line = raw.trim();
             if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
@@ -117,7 +117,9 @@ impl ArchConfig {
         Self::from_map(kv)
     }
 
-    fn from_map(mut kv: HashMap<String, String>) -> Result<Self> {
+    // BTreeMap keeps the unknown-key diagnostic deterministic (first
+    // offending key in lexicographic order, not hash order).
+    fn from_map(mut kv: BTreeMap<String, String>) -> Result<Self> {
         let mut cfg = ArchConfig::default();
         let mut take = |k: &str| kv.remove(k);
 

@@ -36,7 +36,7 @@ use crate::arch::LayerShape;
 use crate::{Error, Result};
 
 /// Mapping strategy (Table I `Dataflow`: legal values `os`, `ws`, `is`).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub enum Dataflow {
     Os,
     Ws,

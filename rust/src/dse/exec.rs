@@ -17,7 +17,7 @@
 //!   while the server's ONE process-wide memo cache de-duplicates
 //!   layer simulations *across* shards.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 use std::time::Instant;
@@ -174,7 +174,7 @@ fn execute(
     opts: &RunOpts,
     store_dir: Option<PathBuf>,
 ) -> Result<CampaignOutcome> {
-    let done_idx: HashSet<usize> = done.iter().map(|c| c.point.index).collect();
+    let done_idx: BTreeSet<usize> = done.iter().map(|c| c.point.index).collect();
     let mut pending: Vec<CampaignPoint> = (0..campaign.len())
         .filter(|i| !done_idx.contains(i))
         .map(|i| campaign.point(i))
@@ -297,13 +297,19 @@ fn serve_exec(
             s.spawn(move || {
                 let outcome = run_shard(spec, si, indices, addr, journal);
                 match outcome {
-                    Ok(mut v) => results.lock().unwrap().append(&mut v),
-                    Err(e) => errors.lock().unwrap().push(format!("shard {si}: {e}")),
+                    Ok(mut v) => results
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .append(&mut v),
+                    Err(e) => errors
+                        .lock()
+                        .unwrap_or_else(std::sync::PoisonError::into_inner)
+                        .push(format!("shard {si}: {e}")),
                 }
             });
         }
     });
-    let errors = errors.into_inner().unwrap();
+    let errors = errors.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     if !errors.is_empty() {
         let hint = if journal.is_some() {
             "; completed points are journaled — `dse resume` picks up from them"
@@ -315,7 +321,7 @@ fn serve_exec(
             errors.join("; ")
         )));
     }
-    Ok(results.into_inner().unwrap())
+    Ok(results.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner))
 }
 
 fn run_shard(

@@ -23,7 +23,7 @@
 //! (the kill arrived mid-write) is skipped, costing one re-simulation,
 //! never a failed resume.
 
-use std::collections::HashSet;
+use std::collections::BTreeSet;
 use std::fs::{File, OpenOptions};
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -111,7 +111,7 @@ impl Journal {
 
         let total = campaign.len();
         let mut done = Vec::new();
-        let mut seen: HashSet<usize> = HashSet::new();
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
         for line in lines {
             let line = line.trim();
             if line.is_empty() {
@@ -139,7 +139,9 @@ impl Journal {
     pub fn append(&self, cp: &CompletedPoint) -> Result<()> {
         let mut line = cp.to_json().to_string();
         line.push('\n');
-        let mut f = self.file.lock().unwrap();
+        // recover from poisoning (a worker that panicked mid-append at
+        // worst leaves a truncated line, which resume already skips)
+        let mut f = self.file.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
         f.write_all(line.as_bytes())?;
         f.flush()?;
         Ok(())

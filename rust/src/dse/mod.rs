@@ -59,7 +59,7 @@ pub use exec::{
 pub use journal::Journal;
 pub use pareto::pareto_front;
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::config::{workloads, ArchConfig, Topology};
 use crate::dataflow::Dataflow;
@@ -230,8 +230,8 @@ impl Campaign {
     /// Resolve each workload spec to its lowered topology. With
     /// `builtin_only` (the serve path) csv paths are rejected — the
     /// server never reads client-named files.
-    pub fn resolve_workloads(&self, builtin_only: bool) -> Result<HashMap<String, Topology>> {
-        let mut map = HashMap::new();
+    pub fn resolve_workloads(&self, builtin_only: bool) -> Result<BTreeMap<String, Topology>> {
+        let mut map = BTreeMap::new();
         for spec in &self.workloads {
             if map.contains_key(spec) {
                 continue;
@@ -593,7 +593,7 @@ pub(crate) fn need_f64(j: &Json, k: &str) -> std::result::Result<f64, String> {
 /// memo absorbs that (values are deterministic, so memoization cannot
 /// change results — only wall-clock).
 fn substrate_replay(cfg: &ArchConfig, layer: &crate::arch::LayerShape) -> (u64, u64) {
-    use std::collections::HashMap as Map;
+    use std::collections::BTreeMap as Map;
     use std::sync::{Mutex, OnceLock};
     type Key = (Dataflow, u64, u64, u64, u64, u64, u64, (u64, u64, u64, u64, u64, u64, u64));
     static CACHE: OnceLock<Mutex<Map<Key, (u64, u64)>>> = OnceLock::new();
@@ -616,12 +616,13 @@ fn substrate_replay(cfg: &ArchConfig, layer: &crate::arch::LayerShape) -> (u64, 
         ),
     );
     let cache = CACHE.get_or_init(|| Mutex::new(Map::new()));
-    if let Some(&hit) = cache.lock().unwrap().get(&key) {
+    let poisoned = std::sync::PoisonError::into_inner;
+    if let Some(&hit) = cache.lock().unwrap_or_else(poisoned).get(&key) {
         return hit;
     }
     let s = dram::replay_layer(cfg.dataflow, layer, cfg, DramConfig::default());
     let value = (s.requests, s.row_hits);
-    cache.lock().unwrap().insert(key, value);
+    cache.lock().unwrap_or_else(poisoned).insert(key, value);
     value
 }
 

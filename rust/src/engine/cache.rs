@@ -175,6 +175,14 @@ pub(crate) struct LayerCache {
 }
 
 impl LayerCache {
+    /// Lock the memo table, recovering from poisoning: entries are only
+    /// ever inserted whole (`Slot` values are moved in, never mutated in
+    /// place), so a panicking computer cannot leave a torn entry — and
+    /// the `InFlightGuard` below already withdraws its claim on panic.
+    fn table(&self) -> std::sync::MutexGuard<'_, HashMap<CacheKey, Slot>> {
+        self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     pub(crate) fn new() -> Self {
         LayerCache {
             map: Mutex::new(HashMap::new()),
@@ -203,7 +211,7 @@ impl LayerCache {
             Absent,
         }
         {
-            let mut map = self.map.lock().unwrap();
+            let mut map = self.table();
             loop {
                 // resolve the slot to an owned view first, so no borrow
                 // of `map` is live when we hand the guard to the condvar
@@ -222,7 +230,10 @@ impl LayerCache {
                         return restamp(&hit, name);
                     }
                     Found::InFlight => {
-                        map = self.ready.wait(map).unwrap();
+                        map = self
+                            .ready
+                            .wait(map)
+                            .unwrap_or_else(std::sync::PoisonError::into_inner);
                     }
                     Found::Absent => {
                         map.insert(key.clone(), Slot::InFlight);
@@ -238,9 +249,9 @@ impl LayerCache {
         let mut guard = InFlightGuard { cache: self, key: Some(key) };
         let report = compute();
         // disarm: with the key taken, the guard's Drop is a no-op
-        let key = guard.key.take().expect("claim taken once");
-        {
-            let mut map = self.map.lock().unwrap();
+        // (`key` is Some by construction — the claim is taken exactly here)
+        if let Some(key) = guard.key.take() {
+            let mut map = self.table();
             map.insert(key, Slot::Ready { report: Arc::new(report.clone()), warm: false });
         }
         self.sims.fetch_add(1, Ordering::Relaxed);
@@ -252,7 +263,7 @@ impl LayerCache {
     /// No-op (returns `false`) when the key is already present; never
     /// counts as a layer sim.
     pub(crate) fn insert_prewarmed(&self, key: CacheKey, report: LayerReport) -> bool {
-        let mut map = self.map.lock().unwrap();
+        let mut map = self.table();
         if map.contains_key(&key) {
             return false;
         }
@@ -264,9 +275,7 @@ impl LayerCache {
     /// Snapshot every ready entry (in-flight computations are skipped) —
     /// the server's shutdown flush.
     pub(crate) fn export(&self) -> Vec<(CacheKey, Arc<LayerReport>)> {
-        self.map
-            .lock()
-            .unwrap()
+        self.table()
             .iter()
             .filter_map(|(k, slot)| match slot {
                 Slot::Ready { report, .. } => Some((k.clone(), Arc::clone(report))),
@@ -290,9 +299,7 @@ impl LayerCache {
     }
 
     pub(crate) fn entries(&self) -> usize {
-        self.map
-            .lock()
-            .unwrap()
+        self.table()
             .values()
             .filter(|s| matches!(s, Slot::Ready { .. }))
             .count()
@@ -316,7 +323,7 @@ struct InFlightGuard<'a> {
 impl Drop for InFlightGuard<'_> {
     fn drop(&mut self) {
         if let Some(key) = self.key.take() {
-            self.cache.map.lock().unwrap().remove(&key);
+            self.cache.table().remove(&key);
             self.cache.ready.notify_all();
         }
     }

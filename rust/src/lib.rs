@@ -92,8 +92,13 @@
 //! * [`report`]   — csv / markdown output writers (§III-F)
 //! * [`runtime`]  — functional executor for the AOT Pallas/JAX artifacts
 //! * [`coordinator`] — legacy run orchestration (shim over `engine`)
+//! * [`analysis`] — **in-tree static analysis** (`scale-sim lint`):
+//!   determinism / lock-discipline / shim-boundary / panic-hygiene /
+//!   golden-bless rules over the repo's own sources, ratcheted through
+//!   the checked-in `lint.baseline`
 //! * [`util`]     — rng, mini property-test harness, bench timing, csv
 
+pub mod analysis;
 pub mod arch;
 pub mod config;
 pub mod coordinator;

@@ -94,6 +94,21 @@ USAGE:
       running `scale-sim serve` (one shared memo cache across shards).
       A complete campaign writes BENCH_dse.json (--bench overrides).
 
+  scale-sim lint [--root DIR] [--baseline FILE] [--list] [--no-baseline]
+                 [--write-baseline]
+      Run the in-tree static-analysis pass (rust/src/analysis) over the
+      repo's own sources: R1 determinism (no HashMap/HashSet or wall
+      clock in serialization/fingerprint paths), R2 lock discipline (no
+      guard held across I/O or a second lock()), R3 shim boundary
+      (engine-era modules never call the deprecated pre-engine shims),
+      R4 panic hygiene (no unwrap/expect/panic! in library code), R5
+      golden-bless hygiene (the golden-fixture bless env hook may only
+      be read inside rust/tests/golden*).
+      Findings are checked against the ratcheted lint.baseline: new
+      violations fail, fixed ones must be removed (the count only goes
+      down). --list prints every finding; --write-baseline regenerates
+      the baseline (deliberate review only).
+
   scale-sim serve [--addr H:P] [--workers N] [--queue-cap N]
                   [--state-dir DIR] [-c cfg] [--dataflow os|ws|is]
                   [--array RxC] [--backend analytical|trace|rtl]
@@ -148,6 +163,7 @@ fn dispatch(args: &[String]) -> CliResult<()> {
         Some("validate") => cmd_validate(&args[1..]),
         Some("workloads") => cmd_workloads(),
         Some("artifacts") => cmd_artifacts(),
+        Some("lint") => cmd_lint(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("client") => cmd_client(&args[1..]),
         Some("bench-serve") => cmd_bench_serve(&args[1..]),
@@ -782,6 +798,60 @@ fn cmd_artifacts() -> CliResult<()> {
         println!("  {n}");
     }
     Ok(())
+}
+
+fn cmd_lint(rest: &[String]) -> CliResult<()> {
+    use scale_sim::analysis::{self, Baseline};
+
+    let a = Args(rest);
+    let root = PathBuf::from(a.value("--root", None).unwrap_or("."));
+    let baseline_path = a
+        .value("--baseline", None)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| analysis::default_baseline_path(&root));
+
+    let findings = analysis::lint_root(&root)?;
+    let files = analysis::source_count(&root)?;
+
+    if a.flag("--write-baseline") {
+        // regenerating keeps the recorded ratchet floor, so a rewrite
+        // can never loosen the "strictly below pre-PR" invariant
+        let floor = analysis::load_baseline(&baseline_path)
+            .ok()
+            .and_then(|b| b.pre_pr_violations);
+        let mut b = Baseline::from_findings(&findings);
+        b.pre_pr_violations = floor;
+        b.validate()?;
+        std::fs::write(&baseline_path, b.render())?;
+        println!(
+            "wrote {} ({} finding(s) across {} entries)",
+            baseline_path.display(),
+            b.total(),
+            b.counts.len()
+        );
+        return Ok(());
+    }
+
+    if a.flag("--list") {
+        print!("{}", scale_sim::analysis::report::render_findings(&findings));
+    }
+
+    let baseline =
+        if a.flag("--no-baseline") { Baseline::default() } else { analysis::load_baseline(&baseline_path)? };
+    let drift = baseline.check(&findings);
+    if drift.is_empty() {
+        println!(
+            "{}",
+            scale_sim::analysis::report::summary(files, findings.len(), baseline.total())
+        );
+        return Ok(());
+    }
+    print!("{}", scale_sim::analysis::report::render_drift(&drift, &findings));
+    fail(format!(
+        "lint failed: {} drift(s) against {}",
+        drift.len(),
+        if a.flag("--no-baseline") { "an empty baseline (--no-baseline)".to_string() } else { baseline_path.display().to_string() }
+    ))
 }
 
 const DEFAULT_SERVE_ADDR: &str = "127.0.0.1:7433";

@@ -50,6 +50,15 @@ pub struct JobQueue<T> {
 }
 
 impl<T> JobQueue<T> {
+    /// Lock the queue state, recovering from poisoning: a panicking
+    /// worker at worst leaves a counter stale, never a torn queue
+    /// structure (every mutation below is a single push/pop/store), so
+    /// cascading the panic into every producer and consumer would turn
+    /// one bad job into a dead server.
+    fn state(&self) -> std::sync::MutexGuard<'_, Inner<T>> {
+        self.inner.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// A queue admitting at most `cap >= 1` waiting jobs.
     pub fn bounded(cap: usize) -> Self {
         JobQueue {
@@ -72,9 +81,12 @@ impl<T> JobQueue<T> {
     /// not possible, the job is dropped — when the queue has been
     /// closed; callers should then report the rejection to the client.
     pub fn push(&self, job: T) -> bool {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         while !inner.closed && inner.q.len() >= self.cap {
-            inner = self.not_full.wait(inner).unwrap();
+            inner = self
+                .not_full
+                .wait(inner)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
         if inner.closed {
             return false;
@@ -89,7 +101,7 @@ impl<T> JobQueue<T> {
     /// Claim the next job, blocking while the queue is empty. Returns
     /// `None` once the queue is closed **and** drained.
     pub fn pop(&self) -> Option<T> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         loop {
             if let Some(job) = inner.q.pop_front() {
                 inner.in_flight += 1;
@@ -100,7 +112,10 @@ impl<T> JobQueue<T> {
             if inner.closed {
                 return None;
             }
-            inner = self.not_empty.wait(inner).unwrap();
+            inner = self
+                .not_empty
+                .wait(inner)
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
         }
     }
 
@@ -108,7 +123,7 @@ impl<T> JobQueue<T> {
     /// `ok = false` records an abnormal end (counted in `failed`, not
     /// `completed`).
     pub fn job_done(&self, ok: bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.state();
         debug_assert!(inner.in_flight > 0, "job_done without a matching pop");
         inner.in_flight = inner.in_flight.saturating_sub(1);
         if ok {
@@ -121,17 +136,17 @@ impl<T> JobQueue<T> {
     /// Stop admitting jobs and wake every blocked producer/consumer.
     /// Already-admitted jobs continue to drain through [`JobQueue::pop`].
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        self.state().closed = true;
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
 
     pub fn is_closed(&self) -> bool {
-        self.inner.lock().unwrap().closed
+        self.state().closed
     }
 
     pub fn stats(&self) -> QueueStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.state();
         QueueStats {
             depth: inner.q.len(),
             in_flight: inner.in_flight,

@@ -56,11 +56,14 @@ where
                     }
                     local.push((i, f(&items[i])));
                 }
-                collected.lock().unwrap().extend(local);
+                collected
+                    .lock()
+                    .unwrap_or_else(std::sync::PoisonError::into_inner)
+                    .extend(local);
             });
         }
     });
-    let mut pairs = collected.into_inner().unwrap();
+    let mut pairs = collected.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     pairs.sort_by_key(|(i, _)| *i);
     debug_assert_eq!(pairs.len(), n);
     pairs.into_iter().map(|(_, r)| r).collect()

@@ -91,7 +91,7 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).expect("percentile over NaN"));
+    s.sort_by(|a, b| a.total_cmp(b));
     let rank = (p / 100.0).clamp(0.0, 1.0) * (s.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;

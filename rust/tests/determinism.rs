@@ -1,0 +1,98 @@
+//! Cross-process determinism: the R1 lint rule's end-to-end witness.
+//!
+//! The dse subsystem promises bit-exact artifacts — journal headers
+//! carry a campaign fingerprint, `dse report` output is golden-diffable,
+//! resume restores bit-identical metrics. Hash-ordered containers
+//! anywhere on those paths would break the promise *across processes*
+//! while looking fine within one (std's SipHash keys are per-process).
+//! So: run the same campaign in two separate child processes and demand
+//! byte-identical journals and reports.
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+const BIN: &str = env!("CARGO_BIN_EXE_scale-sim");
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scale_sim_det_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+const SPEC: &str = r#"{"name":"det","workloads":["ncf","mlp"],"dataflows":["os","ws"],"arrays":["16x16","32x32"]}"#;
+
+/// Run the campaign in a fresh child process; return the report bytes
+/// and the journal header line.
+fn run_in_child(work: &Path, tag: &str) -> (String, String) {
+    let spec = work.join("campaign.json");
+    std::fs::write(&spec, SPEC).unwrap();
+    let state = work.join(format!("state_{tag}"));
+    let bench = work.join(format!("bench_{tag}.json"));
+
+    let run = Command::new(BIN)
+        .current_dir(work)
+        .args(["dse", "run", "--threads", "2"])
+        .arg("--spec")
+        .arg(&spec)
+        .arg("--state-dir")
+        .arg(&state)
+        .arg("--bench")
+        .arg(&bench)
+        .output()
+        .expect("spawn scale-sim dse run");
+    assert!(
+        run.status.success(),
+        "dse run failed: {}",
+        String::from_utf8_lossy(&run.stderr)
+    );
+
+    let report = Command::new(BIN)
+        .current_dir(work)
+        .args(["dse", "report", "--state-dir"])
+        .arg(&state)
+        .output()
+        .expect("spawn scale-sim dse report");
+    assert!(
+        report.status.success(),
+        "dse report failed: {}",
+        String::from_utf8_lossy(&report.stderr)
+    );
+    let stdout = String::from_utf8(report.stdout).expect("report output is UTF-8");
+
+    let journal = std::fs::read_to_string(state.join("campaign.jsonl")).unwrap();
+    let header = journal.lines().next().expect("journal has a header").to_string();
+    (stdout, header)
+}
+
+#[test]
+fn dse_report_and_journal_fingerprint_are_byte_identical_across_processes() {
+    let work = tmp_dir("two_proc");
+
+    // two completely separate OS processes: any per-process hash seed
+    // leaking into enumeration order, fingerprints, or report text
+    // diverges here
+    let (report_a, header_a) = run_in_child(&work, "a");
+    let (report_b, header_b) = run_in_child(&work, "b");
+
+    assert!(!report_a.is_empty());
+    assert!(report_a.contains("Pareto frontier"), "{report_a}");
+    assert_eq!(report_a, report_b, "dse report must be byte-identical across processes");
+    assert!(header_a.contains("\"fingerprint\""), "{header_a}");
+    assert_eq!(header_a, header_b, "journal headers (spec + fingerprint) must match");
+
+    std::fs::remove_dir_all(&work).unwrap();
+}
+
+#[test]
+fn unknown_cfg_key_diagnostic_is_deterministic() {
+    // Config::from_map used to report an arbitrary hash-ordered unknown
+    // key; with BTreeMap it must always name the lexicographically first
+    use scale_sim::ArchConfig;
+    let cfg = "zzz_late: 1\naaa_early: 2\nmmm_mid: 3\n";
+    let msgs: Vec<String> = (0..4)
+        .map(|_| ArchConfig::parse(cfg).unwrap_err().to_string())
+        .collect();
+    assert!(msgs[0].contains("\"aaa_early\""), "{}", msgs[0]);
+    assert!(msgs.iter().all(|m| m == &msgs[0]), "{msgs:?}");
+}

@@ -1,0 +1,196 @@
+//! Regression suite for the in-tree static-analysis pass
+//! (`rust/src/analysis`, surfaced as `scale-sim lint`).
+//!
+//! Three layers:
+//!
+//! 1. **Fixture corpus** (`rust/tests/lint_fixtures/`): one seeded
+//!    violation per rule plus a clean twin, asserted down to the exact
+//!    `file:line` + rule id. The corpus directory is excluded from the
+//!    repo walk, so the seeded violations never reach the CI gate.
+//! 2. **Baseline ratchet**: the checked-in `lint.baseline` parses,
+//!    records the pre-PR finding count, and round-trips bit-exactly.
+//! 3. **Self-clean**: linting the repo's own sources produces exactly
+//!    the baselined findings — no drift — both through the library API
+//!    and through the `scale-sim lint` CLI that ci.sh gates on.
+
+use std::path::Path;
+use std::process::Command;
+
+use scale_sim::analysis::{self, Baseline, RuleId};
+
+const ROOT: &str = env!("CARGO_MANIFEST_DIR");
+const BIN: &str = env!("CARGO_BIN_EXE_scale-sim");
+
+/// Lint fixture text under a pretend repo-relative path.
+fn hits(rel: &str, src: &str) -> Vec<(RuleId, u32)> {
+    analysis::lint_source(rel, src).into_iter().map(|f| (f.rule, f.line)).collect()
+}
+
+// ------------------------------------------------------ fixture corpus
+
+#[test]
+fn r1_fixture_flags_hash_containers_and_wall_clock_exactly() {
+    let bad = include_str!("lint_fixtures/r1_determinism_bad.rs");
+    // under a determinism-critical path: both halves of the rule fire
+    assert_eq!(
+        hits("rust/src/dse/fixture.rs", bad),
+        vec![(RuleId::R1, 2), (RuleId::R1, 4), (RuleId::R1, 5), (RuleId::R1, 6)]
+    );
+    // under a non-critical path the HashMaps are legal; the wall clock
+    // is not (only util::bench / util::rng may touch it)
+    assert_eq!(hits("rust/src/arch/fixture.rs", bad), vec![(RuleId::R1, 5)]);
+
+    let clean = include_str!("lint_fixtures/r1_determinism_clean.rs");
+    assert_eq!(hits("rust/src/dse/fixture.rs", clean), vec![]);
+}
+
+#[test]
+fn r2_fixture_flags_io_and_second_lock_under_a_held_guard() {
+    let bad = include_str!("lint_fixtures/r2_lock_bad.rs");
+    assert_eq!(
+        hits("rust/src/server/fixture.rs", bad),
+        vec![(RuleId::R2, 7), (RuleId::R2, 8)],
+        "line 7: write_all under the guard; line 8: nested lock()"
+    );
+    let clean = include_str!("lint_fixtures/r2_lock_clean.rs");
+    assert_eq!(hits("rust/src/server/fixture.rs", clean), vec![]);
+}
+
+#[test]
+fn r3_fixture_flags_shim_calls_only_inside_the_protected_scope() {
+    let bad = include_str!("lint_fixtures/r3_shim_bad.rs");
+    assert_eq!(
+        hits("rust/src/engine/fixture.rs", bad),
+        vec![(RuleId::R3, 3), (RuleId::R3, 4)]
+    );
+    // shims may reference each other: the same text under sim/ is legal
+    assert_eq!(hits("rust/src/sim/fixture.rs", bad), vec![]);
+
+    let clean = include_str!("lint_fixtures/r3_shim_clean.rs");
+    assert_eq!(hits("rust/src/engine/fixture.rs", clean), vec![]);
+}
+
+#[test]
+fn r4_fixture_flags_panics_in_lib_code_but_not_in_main_or_tests() {
+    let bad = include_str!("lint_fixtures/r4_panic_bad.rs");
+    assert_eq!(
+        hits("rust/src/util/fixture.rs", bad),
+        vec![(RuleId::R4, 4), (RuleId::R4, 6), (RuleId::R4, 6)],
+        "panic! on 4; unwrap and expect on 6"
+    );
+    // the CLI binary may panic on broken invariants
+    assert_eq!(hits("rust/src/main.rs", bad), vec![]);
+
+    let clean = include_str!("lint_fixtures/r4_panic_clean.rs");
+    assert_eq!(
+        hits("rust/src/util/fixture.rs", clean),
+        vec![],
+        "#[cfg(test)] regions may unwrap"
+    );
+}
+
+#[test]
+fn r5_fixture_flags_the_bless_hook_everywhere_but_the_golden_suite() {
+    let bad = include_str!("lint_fixtures/r5_bless_bad.rs");
+    assert_eq!(hits("rust/src/util/fixture.rs", bad), vec![(RuleId::R5, 3)]);
+    // unlike R1-R4, R5 applies to test code too...
+    assert_eq!(hits("rust/tests/other.rs", bad), vec![(RuleId::R5, 3)]);
+    // ...except the golden suite itself, whose job is blessing
+    assert_eq!(hits("rust/tests/golden_helpers.rs", bad), vec![]);
+
+    let clean = include_str!("lint_fixtures/r5_bless_clean.rs");
+    assert_eq!(hits("rust/src/util/fixture.rs", clean), vec![]);
+}
+
+#[test]
+fn diagnostics_render_as_clickable_file_line_rule() {
+    let bad = include_str!("lint_fixtures/r4_panic_bad.rs");
+    let findings = analysis::lint_source("rust/src/util/fixture.rs", bad);
+    assert_eq!(
+        findings[0].render(),
+        "rust/src/util/fixture.rs:4: R4[panic-hygiene]: `panic!` in library code — \
+         a poisoned lock or malformed input must surface as an Error (or recover \
+         via PoisonError::into_inner), not take the process down"
+    );
+}
+
+// ---------------------------------------------------- baseline ratchet
+
+#[test]
+fn checked_in_baseline_parses_and_records_the_ratchet_floor() {
+    let text = std::fs::read_to_string(Path::new(ROOT).join("lint.baseline")).unwrap();
+    let b = Baseline::parse(&text).unwrap();
+    assert_eq!(
+        b.pre_pr_violations,
+        Some(66),
+        "the tree before the lint pass landed carried 66 findings"
+    );
+    assert!(
+        b.total() < 66,
+        "the ratchet requires the baseline to sit strictly below the pre-PR count, \
+         got {}",
+        b.total()
+    );
+}
+
+#[test]
+fn baseline_round_trips_and_detects_both_drift_directions() {
+    let bad = include_str!("lint_fixtures/r4_panic_bad.rs");
+    let findings = analysis::lint_source("rust/src/util/fixture.rs", bad);
+    assert_eq!(findings.len(), 3);
+
+    // render -> parse -> check: the exact finding set is clean
+    let mut b = Baseline::from_findings(&findings);
+    b.pre_pr_violations = Some(10);
+    let back = Baseline::parse(&b.render()).unwrap();
+    assert_eq!(back, b);
+    assert!(back.check(&findings).is_empty());
+
+    // one extra finding: New drift. One fixed finding: Stale drift.
+    assert_eq!(Baseline::from_findings(&findings[..2]).check(&findings).len(), 1);
+    assert_eq!(back.check(&findings[..2]).len(), 1);
+}
+
+// ------------------------------------------------------- self-clean
+
+#[test]
+fn the_repo_lints_clean_against_its_checked_in_baseline() {
+    let root = Path::new(ROOT);
+    let findings = analysis::lint_root(root).unwrap();
+    let baseline = analysis::load_baseline(&analysis::default_baseline_path(root)).unwrap();
+    let drift = baseline.check(&findings);
+    assert!(
+        drift.is_empty(),
+        "lint drift against lint.baseline:\n{}",
+        scale_sim::analysis::report::render_drift(&drift, &findings)
+    );
+    // the pass lints itself
+    let files = analysis::collect_sources(root).unwrap();
+    assert!(files.iter().any(|f| f == "rust/src/analysis/rules.rs"));
+    assert!(files.iter().all(|f| !f.contains("lint_fixtures")));
+}
+
+#[test]
+fn the_cli_gate_passes_and_fails_like_the_library() {
+    // the exact invocation ci.sh gates on
+    let ok = Command::new(BIN).args(["lint", "--root", ROOT]).output().unwrap();
+    assert!(
+        ok.status.success(),
+        "scale-sim lint failed:\n{}{}",
+        String::from_utf8_lossy(&ok.stdout),
+        String::from_utf8_lossy(&ok.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&ok.stdout);
+    assert!(stdout.contains("clean"), "{stdout}");
+
+    // with the ratchet disabled the baselined findings become failures:
+    // the gate actually bites
+    let strict = Command::new(BIN)
+        .args(["lint", "--root", ROOT, "--no-baseline", "--list"])
+        .output()
+        .unwrap();
+    assert!(!strict.status.success(), "--no-baseline must fail while findings remain");
+    let listing = String::from_utf8_lossy(&strict.stdout);
+    assert!(listing.contains("R2[lock-discipline]"), "{listing}");
+    assert!(listing.contains("rust/src/dse/journal.rs"), "{listing}");
+}

@@ -1,0 +1,7 @@
+//! seeded R1 violations (fixture corpus — excluded from the repo walk)
+use std::collections::HashMap;
+
+pub fn wall_clock_and_hash() -> HashMap<u32, u32> {
+    let _ = std::time::SystemTime::now();
+    HashMap::new()
+}

@@ -1,0 +1,6 @@
+//! clean twin: ordered containers, no wall clock
+use std::collections::BTreeMap;
+
+pub fn ordered() -> BTreeMap<u32, u32> {
+    BTreeMap::new()
+}

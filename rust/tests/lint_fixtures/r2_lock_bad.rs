@@ -1,0 +1,9 @@
+//! seeded R2 violations: guard held across I/O, then a second lock
+use std::io::Write;
+use std::sync::Mutex;
+
+pub fn bad(m: &Mutex<Vec<u8>>, n: &Mutex<u8>, w: &mut std::net::TcpStream) {
+    let g = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    w.write_all(&g).ok();
+    let _h = n.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+}

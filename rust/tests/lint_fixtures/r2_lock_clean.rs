@@ -1,0 +1,11 @@
+//! clean twin: copy the data out, drop the guard, then do I/O
+use std::io::Write;
+use std::sync::Mutex;
+
+pub fn good(m: &Mutex<Vec<u8>>, n: &Mutex<u8>, w: &mut std::net::TcpStream) {
+    let data = m.lock().unwrap_or_else(std::sync::PoisonError::into_inner).clone();
+    w.write_all(&data).ok();
+    let g = n.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+    drop(g);
+    w.flush().ok();
+}

@@ -1,0 +1,5 @@
+//! seeded R3 violations: engine-era code reaching for the shims
+pub fn call_shims() {
+    let _ = crate::sweep::dataflow_sweep();
+    let _ = crate::sim::Simulator::new();
+}

@@ -1,0 +1,6 @@
+//! clean twin: routes through the engine facade; non-deprecated sweep
+//! infrastructure (the thread pool) stays legal
+pub fn engine_era() {
+    let _ = crate::engine::Engine::builder();
+    let _ = crate::sweep::default_threads();
+}

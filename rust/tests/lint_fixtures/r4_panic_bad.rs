@@ -1,0 +1,7 @@
+//! seeded R4 violations: library code that can take the process down
+pub fn panicky(x: Option<u32>) -> u32 {
+    if x.is_none() {
+        panic!("boom");
+    }
+    x.unwrap() + Some(1).expect("one")
+}

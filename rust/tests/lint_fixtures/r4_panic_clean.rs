@@ -1,0 +1,12 @@
+//! clean twin: errors surface as Results; #[cfg(test)] may unwrap
+pub fn graceful(x: Option<u32>) -> Result<u32, String> {
+    x.ok_or_else(|| "missing".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_is_fine_here() {
+        assert_eq!(super::graceful(Some(2)).unwrap(), 2);
+    }
+}

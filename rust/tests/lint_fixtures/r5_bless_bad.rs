@@ -1,0 +1,4 @@
+//! seeded R5 violation: the bless hook outside the golden suite
+pub fn bless() -> bool {
+    std::env::var("BLESS_GOLDEN").is_ok()
+}

@@ -1,0 +1,4 @@
+//! clean twin: talks about blessing without wiring the hook
+pub fn describe() -> &'static str {
+    "golden fixtures are blessed only by the golden suite"
+}

@@ -288,6 +288,86 @@ fn multi_array_dse_over_serve_matches_local_with_cross_node_cache_hits() {
 }
 
 #[test]
+fn garbage_bytes_on_the_wire_get_error_lines_and_the_connection_survives() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let handle = start(ServeOpts::default()).unwrap();
+    let addr = handle.addr();
+
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    let mut lines = BufReader::new(raw.try_clone().unwrap());
+    let next_event = |lines: &mut BufReader<std::net::TcpStream>| {
+        let mut line = String::new();
+        lines.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+
+    // non-UTF-8 garbage: an error event, and the connection stays open
+    raw.write_all(&[0xff, 0xfe, 0x80, 0x00, b'\n']).unwrap();
+    let ev = next_event(&mut lines);
+    assert_eq!(ev.str_field("event"), Some("error"), "{ev}");
+
+    // valid UTF-8 that is not a protocol request: another error event
+    raw.write_all(b"this is not json\n").unwrap();
+    let ev = next_event(&mut lines);
+    assert_eq!(ev.str_field("event"), Some("error"), "{ev}");
+
+    // ...and the SAME connection still executes a real job afterwards
+    raw.write_all(run_request(7).as_bytes()).unwrap();
+    raw.write_all(b"\n").unwrap();
+    loop {
+        let ev = next_event(&mut lines);
+        if scale_sim::server::proto::is_terminal_event(&ev) {
+            assert_eq!(ev.str_field("event"), Some("done"), "{ev}");
+            assert_eq!(ev.u64_field("id"), Some(7));
+            break;
+        }
+    }
+    drop(raw);
+
+    // the server as a whole is unharmed: fresh clients round-trip and
+    // no worker died digesting the garbage
+    let stats = handle.stats();
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.completed, 1);
+    handle.shutdown();
+}
+
+#[test]
+fn truncated_results_store_never_blocks_startup() {
+    let dir = tmp_dir("trunc_store");
+
+    // populate a store: run one job, shut down (the supervisor flushes)
+    let h1 = start(ServeOpts { state_dir: Some(dir.clone()), ..ServeOpts::default() }).unwrap();
+    let mut c = Client::connect(h1.addr()).unwrap();
+    let events = c.request(&run_request(1)).unwrap();
+    assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+    drop(c);
+    h1.shutdown();
+
+    // simulate a kill mid-flush: a truncated trailing line
+    let path = dir.join("results.jsonl");
+    let mut text = std::fs::read_to_string(&path).unwrap();
+    assert!(!text.is_empty(), "shutdown must have flushed the store");
+    text.push_str("{\"key\":{\"backend\":\"analytical\",\"arr");
+    std::fs::write(&path, text).unwrap();
+
+    // restart on the damaged store: starts, pre-warms the intact lines,
+    // and serves — the corrupt tail costs a re-simulation, not a crash
+    let h2 = start(ServeOpts { state_dir: Some(dir.clone()), ..ServeOpts::default() }).unwrap();
+    let mut c = Client::connect(h2.addr()).unwrap();
+    let stats = c.stats().unwrap();
+    assert!(stats.warm.entries >= 1, "intact lines must pre-warm: {:?}", stats.warm);
+    let events = c.request(&run_request(2)).unwrap();
+    assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+    let stats = c.stats().unwrap();
+    assert!(stats.warm.hits >= 1, "the rerun job must hit the warm entry: {:?}", stats.warm);
+    drop(c);
+    h2.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
 fn dse_over_serve_rejects_foreign_energy_and_csv_paths() {
     let handle = start(ServeOpts::default()).unwrap();
     let addr = handle.addr().to_string();
