@@ -16,6 +16,10 @@
 #     cache hit rate on the resumed half.
 #   - scaleout smoke: `scale-sim scaleout` renders the Fig 9/10 table
 #     and BENCH_scaleout.json carries nodes/partition fields.
+#   - profile smoke: `scale-sim profile` renders the per-layer span
+#     table and writes a Chrome trace + Prometheus metrics snapshot
+#     (docs/OBSERVABILITY.md); the serve smoke also scrapes
+#     `client metrics` for the queue/worker/cache series.
 # The default `cargo test -q` tier includes the golden regression
 # suites (rust/tests/golden.rs: timings + scaleout fixtures), the
 # workload-IR and scaleout property suites, and the server stress
@@ -56,7 +60,7 @@ echo "== test-inventory floor =="
 # binaries must not drop below the checked-in floor — a suite falling
 # out of Cargo.toml (or a mass #[ignore]) fails here even though every
 # remaining test is green. Raise the floor as suites grow.
-TEST_FLOOR=410
+TEST_FLOOR=425
 TOTAL_PASSED=$(grep -o '[0-9]\+ passed' "$TEST_LOG" | awk '{s+=$1} END {print s+0}')
 rm -f "$TEST_LOG"
 echo "total tests passed: $TOTAL_PASSED (floor $TEST_FLOOR)"
@@ -106,9 +110,22 @@ awk -v h="$HIT" 'BEGIN { exit (h >= 0.5) ? 0 : 1 }' \
 echo "ok (hit rate $HIT)"
 
 echo "== smoke: help lists the serve + dse + scaleout subcommands =="
-for sub in serve client bench-serve dse scaleout lint; do
+for sub in serve client bench-serve dse scaleout lint profile; do
   "$BIN" --help | grep -q "scale-sim $sub" || { echo "missing $sub in --help"; exit 1; }
 done
+echo "ok"
+
+echo "== smoke: profile (span table + Chrome trace + metrics snapshot) =="
+PROF=$(mktemp -d)
+"$BIN" profile -t topologies/alexnet.csv --dram-bw 16 \
+  --trace-out "$PROF/trace.json" --metrics-out "$PROF/metrics.prom" \
+  --bench "$PROF/BENCH_profile.json" > "$PROF/table.txt"
+grep -q "TOTAL:" "$PROF/table.txt" || { echo "profile table lacks TOTAL"; exit 1; }
+grep -q '"traceEvents"' "$PROF/trace.json" || { echo "trace is not Chrome trace JSON"; exit 1; }
+grep -q 'scale_sim_cache_misses_total' "$PROF/metrics.prom" \
+  || { echo "metrics snapshot lacks cache series"; exit 1; }
+grep -q '"total_cycles"' "$PROF/BENCH_profile.json"
+rm -rf "$PROF"
 echo "ok"
 
 echo "== smoke: scaleout (Fig 9/10 table + BENCH_scaleout.json) =="
@@ -170,7 +187,15 @@ test -n "$ADDR" || { echo "server never reported its address"; cat "$SERVE_LOG";
 # GEMM csv; the ncf_gemm tiles hit the entries ncf just populated)
 "$BIN" client run --addr "$ADDR" -t topologies/gemm/ncf_gemm.csv | tail -1 | grep -q '"event":"done"'
 "$BIN" client stats --addr "$ADDR" | grep -q '"queue_depth"'
+"$BIN" client stats --addr "$ADDR" | grep -q '"workers_busy"'
 "$BIN" client stats --addr "$ADDR" | grep -q '"cache_hits"'
+# Prometheus scrape over the wire: cache + queue + worker series
+"$BIN" client metrics --addr "$ADDR" > metrics_smoke.prom
+grep -q 'scale_sim_queue_depth' metrics_smoke.prom || { echo "scrape lacks queue series"; exit 1; }
+grep -q 'scale_sim_workers_busy' metrics_smoke.prom || { echo "scrape lacks worker series"; exit 1; }
+grep -q '# TYPE scale_sim_cache_hits_total counter' metrics_smoke.prom \
+  || { echo "scrape lacks cache series"; exit 1; }
+rm -f metrics_smoke.prom
 "$BIN" client shutdown --addr "$ADDR" | grep -q '"event":"shutting_down"'
 wait "$SERVE_PID"
 test -f "$SERVE_STATE/results.jsonl" || { echo "store was not flushed on shutdown"; exit 1; }

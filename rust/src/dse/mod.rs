@@ -638,6 +638,7 @@ fn substrate_replay(cfg: &ArchConfig, layer: &crate::arch::LayerShape) -> (u64, 
 /// bandwidth split across busy nodes), aggregate energy/traffic, and
 /// the summed interconnect bandwidth demand.
 pub fn evaluate_point(engine: &Engine, topo: &Topology, point: &CampaignPoint) -> PointMetrics {
+    crate::obs::metrics::count_dse_point();
     let cfg = point.config(engine.cfg());
     if point.nodes > 1 {
         return evaluate_multi_point(engine, topo, point, &cfg);

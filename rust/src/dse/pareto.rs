@@ -18,12 +18,14 @@ pub fn dominates(a: (f64, f64), b: (f64, f64)) -> bool {
 /// sweep in O(n log n).
 pub fn pareto_front(pts: &[(f64, f64)]) -> Vec<usize> {
     let mut order: Vec<usize> = (0..pts.len()).collect();
+    // total_cmp: finite metrics order exactly as partial_cmp, and a NaN
+    // (which the objective extractors never emit) sorts deterministically
+    // last instead of panicking
     order.sort_by(|&a, &b| {
         pts[a]
             .0
-            .partial_cmp(&pts[b].0)
-            .expect("pareto over NaN")
-            .then(pts[a].1.partial_cmp(&pts[b].1).expect("pareto over NaN"))
+            .total_cmp(&pts[b].0)
+            .then(pts[a].1.total_cmp(&pts[b].1))
             .then(a.cmp(&b))
     });
     let mut front: Vec<usize> = Vec::new();

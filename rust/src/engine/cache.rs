@@ -116,6 +116,10 @@ pub struct MemoStats {
     /// Lookups served from the cache (including lookups that waited on
     /// an in-flight computation and reused its result).
     pub cache_hits: u64,
+    /// Lookups that blocked on another thread's in-flight computation of
+    /// the same key before being served (a subset of `cache_hits`; each
+    /// wait episode counts once, however many spurious wakes it sees).
+    pub inflight_waits: u64,
 }
 
 impl MemoStats {
@@ -140,6 +144,7 @@ impl MemoStats {
         MemoStats {
             layer_sims: self.layer_sims.saturating_sub(earlier.layer_sims),
             cache_hits: self.cache_hits.saturating_sub(earlier.cache_hits),
+            inflight_waits: self.inflight_waits.saturating_sub(earlier.inflight_waits),
         }
     }
 }
@@ -170,6 +175,7 @@ pub(crate) struct LayerCache {
     ready: Condvar,
     sims: AtomicU64,
     hits: AtomicU64,
+    inflight_waits: AtomicU64,
     warm_entries: AtomicU64,
     warm_hits: AtomicU64,
 }
@@ -189,6 +195,7 @@ impl LayerCache {
             ready: Condvar::new(),
             sims: AtomicU64::new(0),
             hits: AtomicU64::new(0),
+            inflight_waits: AtomicU64::new(0),
             warm_entries: AtomicU64::new(0),
             warm_hits: AtomicU64::new(0),
         }
@@ -212,6 +219,7 @@ impl LayerCache {
         }
         {
             let mut map = self.table();
+            let mut waited = false;
             loop {
                 // resolve the slot to an owned view first, so no borrow
                 // of `map` is live when we hand the guard to the condvar
@@ -230,6 +238,10 @@ impl LayerCache {
                         return restamp(&hit, name);
                     }
                     Found::InFlight => {
+                        if !waited {
+                            waited = true;
+                            self.inflight_waits.fetch_add(1, Ordering::Relaxed);
+                        }
                         map = self
                             .ready
                             .wait(map)
@@ -288,6 +300,7 @@ impl LayerCache {
         MemoStats {
             layer_sims: self.sims.load(Ordering::Relaxed),
             cache_hits: self.hits.load(Ordering::Relaxed),
+            inflight_waits: self.inflight_waits.load(Ordering::Relaxed),
         }
     }
 
@@ -412,10 +425,10 @@ mod tests {
 
     #[test]
     fn stats_delta() {
-        let a = MemoStats { layer_sims: 10, cache_hits: 30 };
-        let b = MemoStats { layer_sims: 4, cache_hits: 10 };
+        let a = MemoStats { layer_sims: 10, cache_hits: 30, inflight_waits: 5 };
+        let b = MemoStats { layer_sims: 4, cache_hits: 10, inflight_waits: 2 };
         let d = a.since(&b);
-        assert_eq!((d.layer_sims, d.cache_hits), (6, 20));
+        assert_eq!((d.layer_sims, d.cache_hits, d.inflight_waits), (6, 20, 3));
         assert_eq!(MemoStats::default().hit_rate(), 0.0);
     }
 
@@ -458,6 +471,10 @@ mod tests {
         let s = cache.stats();
         assert_eq!(s.layer_sims, 1);
         assert_eq!(s.cache_hits, (THREADS - 1) as u64);
+        assert!(
+            s.inflight_waits <= s.cache_hits,
+            "waiters are a subset of hits: {s:?}"
+        );
         assert_eq!(cache.entries(), 1);
     }
 
@@ -516,8 +533,8 @@ mod tests {
     fn since_saturates_across_a_reset() {
         // a fresh engine's counters restart at zero; a stale snapshot
         // from before the reset must yield zeros, not underflow
-        let before_reset = MemoStats { layer_sims: 100, cache_hits: 400 };
-        let after_reset = MemoStats { layer_sims: 3, cache_hits: 1 };
+        let before_reset = MemoStats { layer_sims: 100, cache_hits: 400, inflight_waits: 9 };
+        let after_reset = MemoStats { layer_sims: 3, cache_hits: 1, inflight_waits: 0 };
         let d = after_reset.since(&before_reset);
         assert_eq!((d.layer_sims, d.cache_hits), (0, 0));
         assert_eq!(d.hit_rate(), 0.0);

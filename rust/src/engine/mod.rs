@@ -196,12 +196,18 @@ impl Engine {
     pub fn run_layer_with(&self, cfg: &ArchConfig, layer: &LayerShape) -> LayerReport {
         let key = CacheKey::new(self.kind, cfg, layer);
         self.cache.get_or_compute(key, &layer.name, || {
-            let timing = self.backend.timing(cfg, layer);
-            let (dram, bandwidth) = memory::simulate(cfg.dataflow, layer, cfg);
-            let energy =
-                self.energy_model
-                    .layer_energy(layer.macs(), &timing, &dram, cfg.word_bytes);
-            LayerReport { layer: layer.clone(), timing, dram, bandwidth, energy }
+            // wall-clock the miss path only (through the sanctioned
+            // bench clock) and feed the per-backend latency histogram
+            let (report, elapsed) = crate::util::bench::time(|| {
+                let timing = self.backend.timing(cfg, layer);
+                let (dram, bandwidth) = memory::simulate(cfg.dataflow, layer, cfg);
+                let energy =
+                    self.energy_model
+                        .layer_energy(layer.macs(), &timing, &dram, cfg.word_bytes);
+                LayerReport { layer: layer.clone(), timing, dram, bandwidth, energy }
+            });
+            crate::obs::metrics::observe_simulate_latency(self.kind.name(), elapsed);
+            report
         })
     }
 
@@ -289,7 +295,14 @@ impl Engine {
             for (f, c) in fixed.iter_mut().zip(cycles) {
                 *f += c;
             }
-            let best_i = (0..3).min_by_key(|&i| cycles[i]).unwrap();
+            // manual scan (no unwrap, R4): `<=` keeps min_by_key's
+            // last-minimum tie-break, so `best` dataflows are unchanged
+            let mut best_i = 0;
+            for i in 1..3 {
+                if cycles[i] <= cycles[best_i] {
+                    best_i = i;
+                }
+            }
             flexible += cycles[best_i];
             layers.push(FlexLayer { name: layer.name.clone(), best: Dataflow::ALL[best_i], cycles });
         }

@@ -78,6 +78,9 @@
 //!   backends, memoizing sweep grid (§IV methodology)
 //! * [`trace`]    — cycle-accurate SRAM address trace generators (§III-E)
 //! * [`memory`]   — double-buffered scratchpads, DRAM traffic + bandwidth (§III-C)
+//! * [`obs`]      — **two-timeline observability**: cycle-stamped span
+//!   traces (Chrome trace-event JSON) + a metrics registry with
+//!   Prometheus text exposition (`scale-sim profile`, `client metrics`)
 //! * [`dram`]     — banked DRAM timing substrate (DRAMSim2 stand-in, §III-D)
 //! * [`dse`]      — **resumable DSE campaigns** (`scale-sim dse`): axis
 //!   specs, objective extraction, Pareto frontiers, checkpoint/resume
@@ -108,6 +111,7 @@ pub mod dse;
 pub mod energy;
 pub mod engine;
 pub mod memory;
+pub mod obs;
 pub mod report;
 pub mod rtl;
 pub mod runtime;

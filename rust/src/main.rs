@@ -11,6 +11,7 @@ use std::time::Instant;
 
 use scale_sim::config::{workloads, ArchConfig, Topology};
 use scale_sim::engine::{BackendKind, Engine};
+use scale_sim::obs::{metrics, trace};
 use scale_sim::runtime::{default_artifact_dir, Runtime};
 use scale_sim::server::{self, proto, ServeOpts};
 use scale_sim::util::bench::{percentile, write_json};
@@ -27,19 +28,39 @@ USAGE:
                 [--dataflow os|ws|is] [--array RxC]
                 [--backend analytical|trace|rtl]
                 [--dump-traces] [--functional TILE] [--threads N]
+                [--trace-out FILE.json]
       Simulate a workload: a built-in name (`resnet50`/`W5`, or a GEMM
       suite name like `mlp`/`attention`/`lstm`), a Table-II conv csv
       path, or a SCALE-Sim-v2 style GEMM csv path (`Layer, M, N, K`
       rows) — the format is sniffed, parsed into the typed operator IR
       and lowered onto the engine. --format json|csv makes the report
       machine-readable on stdout; -o writes the report files.
+      --trace-out exports the run's cycle timeline as Chrome trace-event
+      JSON (load in Perfetto; docs/OBSERVABILITY.md).
+
+  scale-sim profile [-c cfg] [-t|--workload spec] [--dataflow os|ws|is]
+                    [--array RxC] [--backend analytical|trace|rtl]
+                    [--dram-bw B] [--nodes N] [--partition channels|pixels|auto]
+                    [--trace-out FILE.json] [--metrics-out FILE.prom]
+                    [--bench FILE]
+      Two-timeline observability for one workload. Simulated time: the
+      per-layer fill/stream/drain/stall phase table (cycle sums equal
+      the engine report exactly) and, with --trace-out, the span tree
+      as Chrome trace-event JSON — per-node tracks under --nodes.
+      Host time: BENCH_profile.json (wall clock + cache counters) and,
+      with --metrics-out, the deterministic Prometheus snapshot of the
+      engine metrics registry. --dram-bw (bytes/cycle) adds the §III-D
+      stall spans.
 
   scale-sim sweep <dataflow|memory|shape> [-t|--workload spec]...
+                  [--trace-out FILE.json]
       Reproduce the paper's design-space sweeps (Figs 5-8 series printed
       as tables) through the memoizing engine grid; repeat -t/--workload
       to sweep several workloads (conv and GEMM specs mix freely and
       share lowered-tile cache entries); default is the MLPerf suite.
-      Writes BENCH_sweep.json (wall-clock + cache hit-rate).
+      Writes BENCH_sweep.json (wall-clock + cache hit-rate);
+      --trace-out exports every grid point's cycle timeline on its own
+      track.
 
   scale-sim validate [--max N] [-t|--workload spec]...
       Without workload specs: Fig 4 — run every engine backend
@@ -75,7 +96,7 @@ USAGE:
   scale-sim dse <run|resume|report> [--spec FILE.json | --scaleout]
                [--state-dir DIR] [--threads N] [--serve H:P] [--shards N]
                [--max-points N] [--backend analytical|trace|rtl]
-               [--bench FILE]
+               [--bench FILE] [--trace-out FILE.json]
       Resumable design-space-exploration campaigns with Pareto
       frontiers (runtime-vs-energy, runtime-vs-peak-DRAM-bandwidth).
       `run` starts a campaign — the paper's bandwidth x dataflow x
@@ -93,6 +114,8 @@ USAGE:
       journal without simulating. --serve shards the points over a
       running `scale-sim serve` (one shared memo cache across shards).
       A complete campaign writes BENCH_dse.json (--bench overrides).
+      --trace-out re-simulates the runtime-vs-energy frontier points
+      (cache-warm) and exports their cycle timelines, one track each.
 
   scale-sim lint [--root DIR] [--baseline FILE] [--list] [--no-baseline]
                  [--write-baseline]
@@ -119,7 +142,7 @@ USAGE:
       flush on shutdown). Prints `listening on ADDR`; stop it with
       `scale-sim client shutdown`.
 
-  scale-sim client <run|sweep|stats|shutdown> [--addr H:P]
+  scale-sim client <run|sweep|stats|metrics|shutdown> [--addr H:P]
                    [-t topology] [--dataflow os|ws|is] [--array RxC]
                    [--kind dataflow|memory|shape]
                    [--nodes N] [--partition channels|pixels|auto]
@@ -127,6 +150,8 @@ USAGE:
       lines (protocol: rust/src/server/proto.rs). `-t` takes a
       built-in name or a conv/GEMM csv path (lowered locally and sent
       inline); the protocol also accepts typed operator specs ("ops").
+      `metrics` prints the server's Prometheus text exposition (cache,
+      queue, and worker series) raw — scrape-ready.
 
   scale-sim bench-serve [--clients N] [--rounds N] [--workers N]
                         [--state-dir DIR]
@@ -156,6 +181,7 @@ fn main() -> ExitCode {
 fn dispatch(args: &[String]) -> CliResult<()> {
     match args.first().map(String::as_str) {
         Some("run") => cmd_run(&args[1..]),
+        Some("profile") => cmd_profile(&args[1..]),
         Some("sweep") => cmd_sweep(&args[1..]),
         Some("scaleout") => cmd_scaleout(&args[1..]),
         Some("dse") => cmd_dse(&args[1..]),
@@ -391,6 +417,155 @@ fn cmd_run(rest: &[String]) -> CliResult<()> {
         }
         _ => unreachable!("--format validated before the run"),
     }
+    if let Some(path) = a.value("--trace-out", None) {
+        let t = trace::workload_trace(cfg.dataflow, cfg.array_h, cfg.array_w, r, None);
+        t.write(Path::new(path))?;
+        // stderr keeps --format json|csv stdout machine-readable
+        eprintln!("wrote {path} ({} spans)", t.spans.len());
+    }
+    Ok(())
+}
+
+fn cmd_profile(rest: &[String]) -> CliResult<()> {
+    use scale_sim::engine::{multi::MultiArrayConfig, Partition};
+    use scale_sim::memory::stall;
+
+    let a = Args(rest);
+    let cfg = base_config(&a)?;
+    let mut specs = a.values("--topology", Some("-t"))?;
+    specs.extend(a.values("--workload", None)?);
+    if specs.len() != 1 {
+        return fail(format!("profile takes exactly one -t/--workload, got {}", specs.len()));
+    }
+    let topo = load_topology(specs[0])?;
+    let dram_bw = match a.value("--dram-bw", None) {
+        Some(v) => {
+            let bw: f64 = v.parse()?;
+            if !(bw > 0.0 && bw.is_finite()) {
+                return fail(format!("--dram-bw must be a positive bytes/cycle figure, got {v}"));
+            }
+            Some(bw)
+        }
+        None => None,
+    };
+    let nodes: u64 = match a.value("--nodes", None) {
+        Some(n) => n.parse()?,
+        None => 1,
+    };
+    let partition = match a.value("--partition", None) {
+        Some(p) => Partition::parse(p)?,
+        None => Partition::default(),
+    };
+
+    // threads(1): the profile's cache counters and metrics snapshot are
+    // part of the two-process determinism contract
+    let mut b = Engine::builder().config(cfg).threads(1);
+    if let Some(backend) = a.value("--backend", None) {
+        b = b.backend(BackendKind::parse(backend)?);
+    }
+    let engine = b.build()?;
+    let cfg = engine.cfg().clone();
+    let t0 = Instant::now();
+
+    let (t, total_compute, total_stall) = if nodes > 1 {
+        let mc = MultiArrayConfig::new(nodes, cfg.array_h, cfg.array_w, partition);
+        let m = engine.run_multi_with(&cfg, &topo, &mc, dram_bw);
+        let t = trace::multi_trace(cfg.dataflow, &m);
+        println!(
+            "profile {} — {} on {nodes} x {}x{} nodes ({} partition, backend {})",
+            m.workload,
+            cfg.dataflow,
+            cfg.array_h,
+            cfg.array_w,
+            partition.name(),
+            engine.backend_kind()
+        );
+        println!(
+            "{:<18} {:>12} {:>10} {:>6} {:>7}",
+            "layer", "cycles", "stall", "nodes", "util%"
+        );
+        for l in &m.layers {
+            println!(
+                "{:<18} {:>12} {:>10} {:>6} {:>7.2}",
+                l.node_report.name(),
+                l.cycles,
+                l.stall_cycles,
+                l.used_nodes,
+                l.node_report.timing.utilization * 100.0
+            );
+        }
+        (t, m.total_cycles(), m.total_stall_cycles())
+    } else {
+        let report = engine.run_topology_with(&cfg, &topo);
+        let stalls: Option<Vec<u64>> = dram_bw.map(|bw| {
+            topo.layers
+                .iter()
+                .map(|l| stall::stalled_runtime(cfg.dataflow, l, &cfg, bw).stall_cycles)
+                .collect()
+        });
+        let t =
+            trace::workload_trace(cfg.dataflow, cfg.array_h, cfg.array_w, &report, stalls.as_deref());
+        println!(
+            "profile {} — {} {}x{} (backend {})",
+            report.workload, cfg.dataflow, cfg.array_h, cfg.array_w, engine.backend_kind()
+        );
+        println!(
+            "{:<18} {:>12} {:>10} {:>12} {:>10} {:>10} {:>7}",
+            "layer", "cycles", "fill", "stream", "drain", "stall", "util%"
+        );
+        let mut total_stall = 0u64;
+        for (i, l) in report.layers.iter().enumerate() {
+            // phase sums equal timing.cycles exactly (pinned by the obs
+            // suite); the table is the span tree flattened per layer
+            let p = trace::phase_totals(cfg.dataflow, cfg.array_h, cfg.array_w, &l.layer);
+            let stall = stalls.as_ref().map_or(0, |s| s[i]);
+            println!(
+                "{:<18} {:>12} {:>10} {:>12} {:>10} {:>10} {:>7.2}",
+                l.name(),
+                l.timing.cycles,
+                p.fill,
+                p.stream,
+                p.drain,
+                stall,
+                l.timing.utilization * 100.0
+            );
+            total_stall += stall;
+        }
+        (t, report.total_cycles(), total_stall)
+    };
+    println!("TOTAL: {total_compute} compute cycles + {total_stall} stall cycles");
+
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let stats = engine.cache_stats();
+    let bench = a.value("--bench", None).unwrap_or("BENCH_profile.json");
+    write_json(
+        Path::new(bench),
+        &[
+            ("wall_ms", wall_ms),
+            ("layers", topo.layers.len() as f64),
+            ("total_cycles", (total_compute + total_stall) as f64),
+            ("layer_sims", stats.layer_sims as f64),
+            ("cache_hits", stats.cache_hits as f64),
+            ("trace_events", t.spans.len() as f64),
+        ],
+    )?;
+    println!("wrote {bench}");
+    if let Some(path) = a.value("--trace-out", None) {
+        t.write(Path::new(path))?;
+        println!("wrote {path} ({} spans)", t.spans.len());
+    }
+    if let Some(path) = a.value("--metrics-out", None) {
+        // deterministic class only: the snapshot is byte-identical
+        // across processes for a fixed workload (determinism suite)
+        metrics::record_cache(
+            metrics::global(),
+            &stats,
+            &engine.warm_stats(),
+            engine.cache_entries() as u64,
+        );
+        std::fs::write(path, metrics::global().render(false))?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -406,7 +581,7 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
     };
     let engine = Engine::builder().config(ArchConfig::default()).build()?;
 
-    let stats = match kind {
+    let outcome = match kind {
         "dataflow" => {
             let out = engine
                 .sweep()
@@ -428,7 +603,7 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
                     e.memory_mj()
                 );
             }
-            out.stats
+            out
         }
         "memory" => {
             let out = engine
@@ -446,7 +621,7 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
                     p.report.avg_dram_read_bw()
                 );
             }
-            out.stats
+            out
         }
         "shape" => {
             let out = engine
@@ -465,11 +640,12 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
                     p.report.total_cycles()
                 );
             }
-            out.stats
+            out
         }
         other => return fail(format!("unknown sweep {other:?} (dataflow|memory|shape)")),
     };
 
+    let stats = &outcome.stats;
     let wall_ms = stats.wall.as_secs_f64() * 1e3;
     println!(
         "sweep: {} points in {:.1} ms — {} layer sims, {} cache hits ({:.1}% hit rate)",
@@ -481,6 +657,33 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
     );
     stats.write_bench_json(Path::new("BENCH_sweep.json"))?;
     println!("wrote BENCH_sweep.json");
+    if let Some(path) = a.value("--trace-out", None) {
+        let mut t = trace::Trace::new();
+        let mut skipped = 0usize;
+        for (pid, p) in outcome.points.iter().enumerate() {
+            let pid = pid as u64;
+            // composed multi-array reports have no single-array span
+            // decomposition; the CLI sweep never sets the nodes axis,
+            // so this only guards future grid shapes
+            if p.nodes > 1 {
+                skipped += 1;
+                continue;
+            }
+            t.name_process(
+                pid,
+                format!("{} {} {}x{}", p.workload, p.dataflow.name(), p.array_h, p.array_w),
+            );
+            let mut cursor = 0u64;
+            for l in &p.report.layers {
+                cursor = trace::layer_spans(&mut t, pid, cursor, p.dataflow, p.array_h, p.array_w, l, 0);
+            }
+        }
+        if skipped > 0 {
+            println!("trace: skipped {skipped} multi-array point(s)");
+        }
+        t.write(Path::new(path))?;
+        println!("wrote {path} ({} spans)", t.spans.len());
+    }
     Ok(())
 }
 
@@ -609,6 +812,13 @@ fn cmd_dse(rest: &[String]) -> CliResult<()> {
         let dir = state_dir.ok_or("dse report needs --state-dir")?;
         let out = dse::report_campaign(&dir)?;
         print!("{}", dse_summary(&out));
+        if let Some(path) = a.value("--trace-out", None) {
+            let backend = match a.value("--backend", None) {
+                Some(b) => BackendKind::parse(b)?,
+                None => BackendKind::Analytical,
+            };
+            dse_trace_out(path, &out, backend)?;
+        }
         return Ok(());
     }
 
@@ -676,6 +886,64 @@ fn cmd_dse(rest: &[String]) -> CliResult<()> {
             out.ran,
         );
     }
+    if let Some(path) = a.value("--trace-out", None) {
+        dse_trace_out(path, &out, opts.backend)?;
+    }
+    Ok(())
+}
+
+/// `dse --trace-out`: re-simulate the runtime-vs-energy frontier points
+/// (cache-warm after a local campaign) and export their cycle timelines,
+/// one `pid` track per frontier point.
+fn dse_trace_out(
+    path: &str,
+    out: &scale_sim::dse::CampaignOutcome,
+    backend: BackendKind,
+) -> CliResult<()> {
+    let topos = out.campaign.resolve_workloads(false)?;
+    let engine = Engine::builder().backend(backend).threads(1).build()?;
+    let mut t = trace::Trace::new();
+    let mut skipped = 0usize;
+    for (track, &pos) in out.frontier_runtime_energy.iter().enumerate() {
+        let p = &out.completed[pos].point;
+        // composed multi-array reports have no single-array span
+        // decomposition — scale-out frontier points stay tabular
+        if p.nodes > 1 {
+            skipped += 1;
+            continue;
+        }
+        let track = track as u64;
+        let cfg = p.config(engine.cfg());
+        let report = engine.run_topology_with(&cfg, &topos[&p.workload]);
+        t.name_process(
+            track,
+            format!(
+                "#{} {} {} {}x{} bw{}",
+                p.index,
+                p.workload,
+                p.dataflow.name(),
+                p.array_h,
+                p.array_w,
+                p.dram_bw
+            ),
+        );
+        let mut cursor = 0u64;
+        for l in &report.layers {
+            let stall = if p.dram_bw.is_finite() && p.dram_bw > 0.0 {
+                scale_sim::memory::stall::stalled_runtime(cfg.dataflow, &l.layer, &cfg, p.dram_bw)
+                    .stall_cycles
+            } else {
+                0
+            };
+            cursor =
+                trace::layer_spans(&mut t, track, cursor, cfg.dataflow, cfg.array_h, cfg.array_w, l, stall);
+        }
+    }
+    if skipped > 0 {
+        println!("trace: skipped {skipped} multi-array frontier point(s)");
+    }
+    t.write(Path::new(path))?;
+    println!("wrote {path} ({} spans)", t.spans.len());
     Ok(())
 }
 
@@ -891,9 +1159,18 @@ fn cmd_client(rest: &[String]) -> CliResult<()> {
     let action = rest
         .first()
         .map(String::as_str)
-        .ok_or("client needs an action: run|sweep|stats|shutdown")?;
+        .ok_or("client needs an action: run|sweep|stats|metrics|shutdown")?;
     let a = Args(&rest[1..]);
     let addr = a.value("--addr", None).unwrap_or(DEFAULT_SERVE_ADDR);
+
+    // metrics prints the Prometheus text raw (scrape-ready), not as a
+    // JSON event line like the other actions
+    if action == "metrics" {
+        let mut client = server::Client::connect(addr)
+            .map_err(|e| format!("cannot reach server at {addr}: {e}"))?;
+        print!("{}", client.metrics()?);
+        return Ok(());
+    }
 
     let req = match action {
         "stats" => r#"{"req":"stats"}"#.to_string(),
@@ -928,7 +1205,11 @@ fn cmd_client(rest: &[String]) -> CliResult<()> {
             }
             Json::obj(fields).to_string()
         }
-        other => return fail(format!("unknown client action {other:?} (run|sweep|stats|shutdown)")),
+        other => {
+            return fail(format!(
+                "unknown client action {other:?} (run|sweep|stats|metrics|shutdown)"
+            ))
+        }
     };
 
     let mut client = server::Client::connect(addr)

@@ -92,9 +92,11 @@ impl SegCache {
             // larger than the partition: stream through, never resident
             return bytes;
         }
+        // `used > 0` implies a nonempty fifo; a `while let` makes the
+        // loop panic-free even if that invariant were ever violated
         while self.used + bytes > self.cap {
-            let victim = self.fifo.pop_front().expect("used>0 implies fifo nonempty");
-            self.used -= self.resident.remove(&victim).unwrap();
+            let Some(victim) = self.fifo.pop_front() else { break };
+            self.used -= self.resident.remove(&victim).unwrap_or(0);
         }
         self.resident.insert(seg, bytes);
         self.fifo.push_back(seg);
@@ -135,7 +137,7 @@ impl RowCache {
             return self.row_bytes; // stream through
         }
         while self.used + self.row_bytes > self.cap {
-            let victim = self.fifo.pop_front().expect("used>0 implies fifo nonempty");
+            let Some(victim) = self.fifo.pop_front() else { break };
             self.resident[victim as usize] = false;
             self.used -= self.row_bytes;
         }

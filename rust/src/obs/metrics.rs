@@ -1,0 +1,392 @@
+//! Host wall-time metrics: a counters/gauges/histograms registry with
+//! deterministic Prometheus text exposition.
+//!
+//! Two classes of series live side by side (the *two-timeline model*,
+//! `docs/OBSERVABILITY.md`):
+//!
+//! * **deterministic** — counters and gauges whose values derive from
+//!   simulated quantities or event counts (cache hits, queue depth,
+//!   dse points). Given the same inputs they are bit-identical across
+//!   processes, so [`Registry::render`]`(false)` — the default server
+//!   `metrics` response and the `--metrics-out` snapshot — is
+//!   byte-stable and two-process-diffable.
+//! * **wall-clock** — latency histograms observed through the sanctioned
+//!   [`crate::util::bench`] timing path (lint R1 allows no other clock).
+//!   Only `render(true)` includes them.
+//!
+//! Keys are a `BTreeMap`, so exposition order is lexicographic and
+//! stable — never hash order. Labeled series embed their label set in
+//! the key (`scale_sim_simulate_seconds{backend="analytical"}`); the
+//! metric *family* is the key up to the `{`, and `# HELP`/`# TYPE`
+//! headers are emitted once per family.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::engine::{MemoStats, WarmStats};
+
+/// Histogram bucket upper bounds in seconds (per-layer simulate
+/// latencies span ~1µs analytical to ~100ms RTL). `+Inf` is implicit.
+pub const LATENCY_BUCKETS: [f64; 8] =
+    [0.000001, 0.00001, 0.0001, 0.001, 0.01, 0.1, 1.0, 10.0];
+
+enum Metric {
+    Counter { help: &'static str, value: u64 },
+    Gauge { help: &'static str, value: f64 },
+    /// Wall-clock class: one cumulative count per [`LATENCY_BUCKETS`]
+    /// bound plus the implicit `+Inf`.
+    Histogram { help: &'static str, buckets: [u64; LATENCY_BUCKETS.len()], sum: f64, count: u64 },
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter { .. } => "counter",
+            Metric::Gauge { .. } => "gauge",
+            Metric::Histogram { .. } => "histogram",
+        }
+    }
+
+    fn help(&self) -> &'static str {
+        match self {
+            Metric::Counter { help, .. }
+            | Metric::Gauge { help, .. }
+            | Metric::Histogram { help, .. } => help,
+        }
+    }
+}
+
+/// A metrics registry: `BTreeMap`-keyed for deterministic exposition.
+/// [`global`] returns the process-wide instance; scoped instances (e.g.
+/// the server's per-[`ServerStats`](crate::server::ServerStats)
+/// exposition) are built fresh per render.
+pub struct Registry {
+    inner: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry::new()
+    }
+}
+
+impl Registry {
+    pub const fn new() -> Registry {
+        Registry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Poison-recovering lock: metrics must never take a worker down.
+    fn table(&self) -> std::sync::MutexGuard<'_, BTreeMap<String, Metric>> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Monotonically increase a counter by `delta`.
+    pub fn add_counter(&self, name: &str, help: &'static str, delta: u64) {
+        let mut t = self.table();
+        match t.get_mut(name) {
+            Some(Metric::Counter { value, .. }) => *value += delta,
+            _ => {
+                t.insert(name.to_string(), Metric::Counter { help, value: delta });
+            }
+        }
+    }
+
+    /// Set a counter to an absolute value (for counters mirrored from a
+    /// source atomic — the pull-model series).
+    pub fn set_counter(&self, name: &str, help: &'static str, value: u64) {
+        self.table().insert(name.to_string(), Metric::Counter { help, value });
+    }
+
+    pub fn set_gauge(&self, name: &str, help: &'static str, value: f64) {
+        self.table().insert(name.to_string(), Metric::Gauge { help, value });
+    }
+
+    /// Record one wall-clock observation into a latency histogram.
+    pub fn observe_seconds(&self, name: &str, help: &'static str, secs: f64) {
+        let mut t = self.table();
+        let entry = t.entry(name.to_string()).or_insert(Metric::Histogram {
+            help,
+            buckets: [0; LATENCY_BUCKETS.len()],
+            sum: 0.0,
+            count: 0,
+        });
+        if let Metric::Histogram { buckets, sum, count, .. } = entry {
+            for (i, bound) in LATENCY_BUCKETS.iter().enumerate() {
+                if secs <= *bound {
+                    buckets[i] += 1;
+                }
+            }
+            *sum += secs;
+            *count += 1;
+        }
+    }
+
+    /// Drop every series (test isolation).
+    pub fn reset(&self) {
+        self.table().clear();
+    }
+
+    /// Prometheus text exposition. `include_wall: false` renders only
+    /// the deterministic class (counters + gauges); `true` adds the
+    /// wall-clock histograms. Output ends with a newline; families are
+    /// in lexicographic key order with one `# HELP`/`# TYPE` pair each.
+    pub fn render(&self, include_wall: bool) -> String {
+        let t = self.table();
+        let mut out = String::new();
+        let mut last_family = String::new();
+        for (key, m) in t.iter() {
+            if matches!(m, Metric::Histogram { .. }) && !include_wall {
+                continue;
+            }
+            let (family, labels) = split_labels(key);
+            if family != last_family {
+                out.push_str(&format!("# HELP {family} {}\n", m.help()));
+                out.push_str(&format!("# TYPE {family} {}\n", m.type_name()));
+                last_family = family.to_string();
+            }
+            match m {
+                Metric::Counter { value, .. } => out.push_str(&format!("{key} {value}\n")),
+                Metric::Gauge { value, .. } => out.push_str(&format!("{key} {value}\n")),
+                Metric::Histogram { buckets, sum, count, .. } => {
+                    for (i, bound) in LATENCY_BUCKETS.iter().enumerate() {
+                        out.push_str(&format!(
+                            "{family}_bucket{{{}le=\"{bound}\"}} {}\n",
+                            label_prefix(labels),
+                            buckets[i]
+                        ));
+                    }
+                    out.push_str(&format!(
+                        "{family}_bucket{{{}le=\"+Inf\"}} {count}\n",
+                        label_prefix(labels)
+                    ));
+                    out.push_str(&format!("{family}_sum{labels_suffix} {sum}\n",
+                        labels_suffix = brace(labels)));
+                    out.push_str(&format!("{family}_count{labels_suffix} {count}\n",
+                        labels_suffix = brace(labels)));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Split `family{label="x"}` into `(family, inner labels)`; labels are
+/// `""` for unlabeled keys.
+fn split_labels(key: &str) -> (&str, &str) {
+    match key.find('{') {
+        Some(i) => (&key[..i], key[i + 1..].trim_end_matches('}')),
+        None => (key, ""),
+    }
+}
+
+/// `labels` followed by a comma, or empty — for joining with `le=`.
+fn label_prefix(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{labels},")
+    }
+}
+
+/// `{labels}` or empty — for `_sum`/`_count` sample names.
+fn brace(labels: &str) -> String {
+    if labels.is_empty() {
+        String::new()
+    } else {
+        format!("{{{labels}}}")
+    }
+}
+
+/// The process-wide registry: engine simulate-latency histograms and
+/// dse progress counters land here.
+pub fn global() -> &'static Registry {
+    static GLOBAL: Registry = Registry::new();
+    &GLOBAL
+}
+
+/// Mirror the engine's memo-cache counters into `reg` (pull model: the
+/// cache keeps its own atomics; exposition snapshots them).
+pub fn record_cache(reg: &Registry, memo: &MemoStats, warm: &WarmStats, entries: u64) {
+    reg.set_counter(
+        "scale_sim_cache_misses_total",
+        "Layer simulations actually computed (memo-cache misses)",
+        memo.layer_sims,
+    );
+    reg.set_counter(
+        "scale_sim_cache_hits_total",
+        "Layer reports served from the memo cache",
+        memo.cache_hits,
+    );
+    reg.set_counter(
+        "scale_sim_cache_inflight_waits_total",
+        "Threads that blocked on another thread's in-flight computation of the same key",
+        memo.inflight_waits,
+    );
+    reg.set_counter(
+        "scale_sim_cache_warm_hits_total",
+        "Hits served by entries prewarmed from a persistent store",
+        warm.hits,
+    );
+    reg.set_gauge(
+        "scale_sim_cache_entries",
+        "Distinct (config, layer-shape) entries currently cached",
+        entries as f64,
+    );
+    reg.set_gauge(
+        "scale_sim_cache_warm_entries",
+        "Cache entries preloaded from a persistent store",
+        warm.entries as f64,
+    );
+}
+
+/// Render the server's `metrics` response from one [`ServerStats`]
+/// snapshot: cache + queue + worker series in a *fresh* registry (never
+/// the process-global one, so concurrent in-process servers — as in the
+/// loopback test suites — cannot cross-contaminate each other's
+/// scrapes). Deterministic class only: two scrapes of an idle server
+/// are byte-identical.
+pub fn server_exposition(s: &crate::server::proto::ServerStats) -> String {
+    let reg = Registry::new();
+    record_cache(&reg, &s.memo, &s.warm, s.cache_entries as u64);
+    reg.set_gauge(
+        "scale_sim_queue_depth",
+        "Jobs waiting in the bounded submission queue",
+        s.queue_depth as f64,
+    );
+    reg.set_gauge(
+        "scale_sim_queue_inflight",
+        "Jobs accepted but not yet finished (queued + executing)",
+        s.in_flight as f64,
+    );
+    reg.set_counter(
+        "scale_sim_jobs_submitted_total",
+        "Jobs accepted into the queue since server start",
+        s.submitted,
+    );
+    reg.set_counter(
+        "scale_sim_jobs_completed_total",
+        "Jobs that finished normally",
+        s.completed,
+    );
+    reg.set_counter(
+        "scale_sim_jobs_failed_total",
+        "Jobs that ended abnormally (worker panic)",
+        s.failed,
+    );
+    reg.set_gauge("scale_sim_workers", "Worker threads serving the queue", s.workers as f64);
+    reg.set_gauge(
+        "scale_sim_workers_busy",
+        "Worker threads currently executing a job",
+        s.workers_busy as f64,
+    );
+    reg.render(false)
+}
+
+/// Observe one per-layer simulate latency under its backend label (the
+/// engine calls this on every memo-cache miss, timed through
+/// [`crate::util::bench::time`]).
+pub fn observe_simulate_latency(backend: &'static str, elapsed: Duration) {
+    global().observe_seconds(
+        &format!("scale_sim_simulate_seconds{{backend=\"{backend}\"}}"),
+        "Wall-clock latency of one per-layer backend simulation",
+        elapsed.as_secs_f64(),
+    );
+}
+
+/// Count one evaluated dse campaign point (shard progress).
+pub fn count_dse_point() {
+    global().add_counter(
+        "scale_sim_dse_points_total",
+        "DSE campaign points evaluated by this process",
+        1,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_is_sorted_grouped_and_stable() {
+        let reg = Registry::new();
+        reg.set_gauge("b_gauge", "second", 2.5);
+        reg.set_counter("a_counter", "first", 7);
+        let text = reg.render(false);
+        let a = text.find("a_counter 7").unwrap();
+        let b = text.find("b_gauge 2.5").unwrap();
+        assert!(a < b, "{text}");
+        assert!(text.contains("# HELP a_counter first"), "{text}");
+        assert!(text.contains("# TYPE a_counter counter"), "{text}");
+        assert!(text.contains("# TYPE b_gauge gauge"), "{text}");
+        assert_eq!(text, reg.render(false), "render must be idempotent");
+    }
+
+    #[test]
+    fn histograms_are_wall_class_only() {
+        let reg = Registry::new();
+        reg.set_counter("a_total", "det", 1);
+        reg.observe_seconds("lat_seconds", "wall", 0.0005);
+        reg.observe_seconds("lat_seconds", "wall", 2.0);
+        let det = reg.render(false);
+        assert!(!det.contains("lat_seconds"), "{det}");
+        let wall = reg.render(true);
+        assert!(wall.contains("lat_seconds_bucket{le=\"0.001\"} 1"), "{wall}");
+        assert!(wall.contains("lat_seconds_bucket{le=\"+Inf\"} 2"), "{wall}");
+        assert!(wall.contains("lat_seconds_count 2"), "{wall}");
+        // bucket counts are cumulative (monotone)
+        let mut last = 0u64;
+        for b in LATENCY_BUCKETS {
+            let needle = format!("lat_seconds_bucket{{le=\"{b}\"}} ");
+            let line = wall.lines().find(|l| l.starts_with(&needle)).unwrap();
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= last, "{wall}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn labeled_families_share_one_header() {
+        let reg = Registry::new();
+        reg.observe_seconds("sim_seconds{backend=\"analytical\"}", "h", 0.001);
+        reg.observe_seconds("sim_seconds{backend=\"rtl\"}", "h", 0.1);
+        let text = reg.render(true);
+        assert_eq!(text.matches("# TYPE sim_seconds histogram").count(), 1, "{text}");
+        assert!(text.contains("sim_seconds_bucket{backend=\"analytical\",le=\"0.001\"} 1"));
+        assert!(text.contains("sim_seconds_sum{backend=\"rtl\"}"), "{text}");
+    }
+
+    #[test]
+    fn cache_mirror_names_the_promised_series() {
+        let reg = Registry::new();
+        record_cache(
+            &reg,
+            &MemoStats { layer_sims: 3, cache_hits: 9, inflight_waits: 1 },
+            &WarmStats { entries: 2, hits: 5 },
+            4,
+        );
+        let text = reg.render(false);
+        for needle in [
+            "scale_sim_cache_misses_total 3",
+            "scale_sim_cache_hits_total 9",
+            "scale_sim_cache_inflight_waits_total 1",
+            "scale_sim_cache_warm_hits_total 5",
+            "scale_sim_cache_entries 4",
+            "scale_sim_cache_warm_entries 2",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in {text}");
+        }
+    }
+
+    #[test]
+    fn counters_add_and_set() {
+        let reg = Registry::new();
+        reg.add_counter("c", "h", 2);
+        reg.add_counter("c", "h", 3);
+        assert!(reg.render(false).contains("c 5"));
+        reg.set_counter("c", "h", 1);
+        assert!(reg.render(false).contains("c 1"));
+        reg.reset();
+        assert_eq!(reg.render(true), "");
+    }
+}

@@ -1,0 +1,32 @@
+//! Two-timeline observability (ROADMAP items 2 & 5's instrumentation
+//! substrate).
+//!
+//! The paper's core results (Figs 5–10) are *cycle breakdowns* — compute
+//! vs drain vs stall, per dataflow, per node — yet end-of-run aggregates
+//! flatten all of it. This module keeps the two timelines separate and
+//! first-class:
+//!
+//! * [`trace`] — **simulated time**: hierarchical spans stamped in
+//!   cycles (layer → fold → fill/stream/drain, plus stall and per-node
+//!   tracks), built post hoc from engine reports and exported as Chrome
+//!   trace-event JSON (`--trace-out`, Perfetto-loadable). Span totals
+//!   equal the reports' cycle counts exactly — the timeline *is* the
+//!   paper's breakdown, inspectable.
+//! * [`metrics`] — **host wall time**: a `BTreeMap`-keyed
+//!   counters/gauges/histograms registry with Prometheus text
+//!   exposition. Deterministic series (cache, queue, workers, dse
+//!   progress) render byte-stably; wall-clock latency histograms are an
+//!   opt-in second class, fed only through the sanctioned
+//!   [`crate::util::bench`] clock (lint R1).
+//!
+//! Surfaces: `scale-sim profile` (span-tree table + `BENCH_profile.json`
+//! + `--trace-out`/`--metrics-out`), the serve protocol's `metrics`
+//! request (`scale-sim client metrics`), and `--trace-out` on
+//! run/sweep/dse. See `docs/OBSERVABILITY.md` for the span taxonomy and
+//! metric name inventory.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::Registry;
+pub use trace::{FoldPhases, Trace, TraceSpan};

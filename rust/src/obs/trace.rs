@@ -1,0 +1,374 @@
+//! Simulated-time spans: the engine's cycle breakdowns as a hierarchical
+//! timeline, exported as Chrome trace-event JSON (Perfetto-loadable).
+//!
+//! Spans are built *post hoc* from reports — the analytical backends
+//! already know every fold's exact phase decomposition, so nothing on the
+//! simulation hot path is instrumented. Per layer the span tree is:
+//!
+//! ```text
+//! layer <name>                               (cat "layer")
+//! ├─ fold x<n> <r>x<c>                       (cat "fold", one per distinct
+//! │  ├─ fill    ─ array fill / operand pin    fold shape, aggregated over
+//! │  ├─ stream  ─ moving-operand stream       its n occurrences)
+//! │  └─ drain   ─ column reduction + drain
+//! ├─ ...                                     (≤ 4 distinct shapes)
+//! └─ stall                                   (cat "stall", only when a
+//!                                             DRAM bandwidth is modeled)
+//! ```
+//!
+//! Phase durations come from the same closed forms the dataflows use
+//! (per-fold `fill + stream + drain == fold_cycles` by construction — see
+//! [`fold_phases`]), so a layer's span total equals its
+//! [`LayerReport`](crate::sim::LayerReport) `timing.cycles` **exactly**;
+//! the obs test suite pins that identity across dataflows and shapes.
+//!
+//! Timestamps are cycles. Chrome's `ts`/`dur` unit is microseconds; we
+//! write cycles into those fields directly, so Perfetto's "us" readouts
+//! are really cycles — `docs/OBSERVABILITY.md` documents the convention.
+//! Multi-array runs place each node on its own `pid` track, so per-node
+//! skew (remainder shares, idle nodes) is visible at a glance.
+
+use std::path::Path;
+
+use crate::arch::LayerShape;
+use crate::dataflow::{self, Dataflow};
+use crate::engine::MultiWorkloadReport;
+use crate::sim::{LayerReport, WorkloadReport};
+use crate::util::json::Json;
+
+/// One complete ("ph":"X") trace event, stamped in cycles.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceSpan {
+    pub name: String,
+    /// Category: `layer` | `fold` | `phase` | `stall`.
+    pub cat: &'static str,
+    /// Process track — node index under multi-array runs, 0 otherwise.
+    pub pid: u64,
+    /// Start cycle.
+    pub ts: u64,
+    /// Duration in cycles.
+    pub dur: u64,
+    /// Extra `args` fields surfaced in the trace viewer.
+    pub args: Vec<(&'static str, Json)>,
+}
+
+/// An in-memory trace: spans plus per-pid track names.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub spans: Vec<TraceSpan>,
+    /// `(pid, display name)` — emitted as `process_name` metadata events.
+    names: Vec<(u64, String)>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn push(&mut self, span: TraceSpan) {
+        self.spans.push(span);
+    }
+
+    /// Name the `pid` track (e.g. `node 3`) in the viewer.
+    pub fn name_process(&mut self, pid: u64, name: impl Into<String>) {
+        self.names.push((pid, name.into()));
+    }
+
+    /// Total span cycles per category (the profile table's input).
+    pub fn category_total(&self, cat: &str) -> u64 {
+        self.spans.iter().filter(|s| s.cat == cat).map(|s| s.dur).sum()
+    }
+
+    /// The Chrome trace-event document: `{"traceEvents":[...]}` with one
+    /// `M` (metadata) event per named track and one `X` (complete) event
+    /// per span, in insertion order.
+    pub fn to_json(&self) -> Json {
+        let mut events = Vec::with_capacity(self.names.len() + self.spans.len());
+        for (pid, name) in &self.names {
+            events.push(Json::obj(vec![
+                ("name", Json::str("process_name")),
+                ("ph", Json::str("M")),
+                ("pid", Json::u64(*pid)),
+                ("tid", Json::u64(0)),
+                ("args", Json::obj(vec![("name", Json::str(name.clone()))])),
+            ]));
+        }
+        for s in &self.spans {
+            let mut args = vec![("cat_cycles", Json::u64(s.dur))];
+            args.extend(s.args.iter().cloned());
+            events.push(Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("cat", Json::str(s.cat)),
+                ("ph", Json::str("X")),
+                ("ts", Json::u64(s.ts)),
+                ("dur", Json::u64(s.dur)),
+                ("pid", Json::u64(s.pid)),
+                ("tid", Json::u64(0)),
+                ("args", Json::Obj(args.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+            ]));
+        }
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            // cycles ride in the microsecond fields; see module docs
+            ("displayTimeUnit", Json::str("ms")),
+        ])
+    }
+
+    /// Write the trace document (single line + trailing newline).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, format!("{}\n", self.to_json()))
+    }
+}
+
+/// Per-fold phase durations for one fold shape (`r x c` PEs mapped).
+///
+/// `fill + stream + drain` equals the dataflow's per-fold closed form
+/// exactly:
+///
+/// | df | fill  | stream | drain   | total          |
+/// |----|-------|--------|---------|----------------|
+/// | OS | `r-1` | `K`    | `r+c-1` | `2r+c+K-2`     |
+/// | WS | `r`   | `Npx`  | `r+c-1` | `2r+c+Npx-1`   |
+/// | IS | `r`   | `Nf`   | `r+c-1` | `2r+c+Nf-1`    |
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FoldPhases {
+    /// Array fill: input skew (OS) or stationary-operand pin (WS/IS).
+    pub fill: u64,
+    /// Moving-operand stream through the pinned array.
+    pub stream: u64,
+    /// Column reduction skew + result drain.
+    pub drain: u64,
+}
+
+impl FoldPhases {
+    pub fn total(&self) -> u64 {
+        self.fill + self.stream + self.drain
+    }
+}
+
+/// Phase decomposition of one fold mapping `r x c` PEs of `layer` under
+/// `df` (see the [`FoldPhases`] table).
+pub fn fold_phases(df: Dataflow, layer: &LayerShape, r: u64, c: u64) -> FoldPhases {
+    let drain = r + c - 1;
+    match df {
+        Dataflow::Os => FoldPhases { fill: r - 1, stream: layer.window(), drain },
+        Dataflow::Ws => FoldPhases { fill: r, stream: layer.npx(), drain },
+        Dataflow::Is => FoldPhases { fill: r, stream: layer.num_filters, drain },
+    }
+}
+
+/// The fold grid `(total_r, total_c)` a dataflow time-multiplexes over
+/// `rows x cols` PEs (OS: pixels x filters; WS: window x filters;
+/// IS: window x pixels).
+pub fn fold_grid(df: Dataflow, layer: &LayerShape) -> (u64, u64) {
+    match df {
+        Dataflow::Os => (layer.npx(), layer.num_filters),
+        Dataflow::Ws => (layer.window(), layer.num_filters),
+        Dataflow::Is => (layer.window(), layer.npx()),
+    }
+}
+
+/// Aggregate fill/stream/drain cycles of a whole layer (every fold,
+/// multiplicity-weighted) — the profile table's per-layer row, with
+/// `total() == Timing.cycles` exactly.
+pub fn phase_totals(df: Dataflow, rows: u64, cols: u64, layer: &LayerShape) -> FoldPhases {
+    let (total_r, total_c) = fold_grid(df, layer);
+    let mut agg = FoldPhases { fill: 0, stream: 0, drain: 0 };
+    dataflow::for_fold_shapes(total_r, rows, total_c, cols, |n, r, c| {
+        let p = fold_phases(df, layer, r, c);
+        agg.fill += n * p.fill;
+        agg.stream += n * p.stream;
+        agg.drain += n * p.drain;
+    });
+    agg
+}
+
+/// Append the span tree of one simulated layer starting at cycle
+/// `start` on track `pid`; returns the cursor past the layer (compute +
+/// stall). The fold grid is walked in the dataflows' own shape order
+/// (≤ 4 distinct shapes), each shape contributing one aggregated
+/// `fold x<n>` span with fill/stream/drain children.
+pub fn layer_spans(
+    trace: &mut Trace,
+    pid: u64,
+    start: u64,
+    df: Dataflow,
+    rows: u64,
+    cols: u64,
+    report: &LayerReport,
+    stall_cycles: u64,
+) -> u64 {
+    let layer = &report.layer;
+    let compute = report.timing.cycles;
+    trace.push(TraceSpan {
+        name: layer.name.clone(),
+        cat: "layer",
+        pid,
+        ts: start,
+        dur: compute + stall_cycles,
+        args: vec![
+            ("cycles", Json::u64(compute)),
+            ("stall_cycles", Json::u64(stall_cycles)),
+            ("utilization", Json::f64(report.timing.utilization)),
+            ("dataflow", Json::str(df.name())),
+        ],
+    });
+    let (total_r, total_c) = fold_grid(df, layer);
+    let mut shapes = Vec::new();
+    dataflow::for_fold_shapes(total_r, rows, total_c, cols, |n, r, c| shapes.push((n, r, c)));
+    let mut cursor = start;
+    for (n, r, c) in shapes {
+        let p = fold_phases(df, layer, r, c);
+        let dur = n * p.total();
+        trace.push(TraceSpan {
+            name: format!("fold x{n} {r}x{c}"),
+            cat: "fold",
+            pid,
+            ts: cursor,
+            dur,
+            args: vec![("folds", Json::u64(n))],
+        });
+        for (name, phase_dur) in
+            [("fill", n * p.fill), ("stream", n * p.stream), ("drain", n * p.drain)]
+        {
+            trace.push(TraceSpan {
+                name: name.to_string(),
+                cat: "phase",
+                pid,
+                ts: cursor,
+                dur: phase_dur,
+                args: Vec::new(),
+            });
+            cursor += phase_dur;
+        }
+    }
+    debug_assert_eq!(cursor - start, compute, "span phases must tile the layer exactly");
+    if stall_cycles > 0 {
+        trace.push(TraceSpan {
+            name: "stall".to_string(),
+            cat: "stall",
+            pid,
+            ts: start + compute,
+            dur: stall_cycles,
+            args: Vec::new(),
+        });
+    }
+    start + compute + stall_cycles
+}
+
+/// Span timeline of a whole single-array workload: layers laid
+/// back-to-back from cycle 0 on track `pid` 0. `stalls`, when present,
+/// carries one DRAM-stall cycle count per layer (same order).
+pub fn workload_trace(
+    df: Dataflow,
+    rows: u64,
+    cols: u64,
+    report: &WorkloadReport,
+    stalls: Option<&[u64]>,
+) -> Trace {
+    let mut t = Trace::new();
+    t.name_process(0, format!("{} ({} {rows}x{cols})", report.workload, df.name()));
+    let mut cursor = 0u64;
+    for (i, l) in report.layers.iter().enumerate() {
+        let stall = stalls.and_then(|s| s.get(i).copied()).unwrap_or(0);
+        cursor = layer_spans(&mut t, 0, cursor, df, rows, cols, l, stall);
+    }
+    t
+}
+
+/// Span timeline of a multi-array run: one `pid` track per node, nodes
+/// running each layer in parallel (layers still serialize — each starts
+/// at the previous layer's slowest-node finish, stalls included).
+/// Remainder shares land on the last used node; idle nodes show gaps.
+pub fn multi_trace(df: Dataflow, report: &MultiWorkloadReport) -> Trace {
+    let (rows, cols) = report.multi.node_shape;
+    let mut t = Trace::new();
+    let max_used = report.layers.iter().map(|l| l.used_nodes).max().unwrap_or(0);
+    for pid in 0..max_used {
+        t.name_process(pid, format!("node {pid} ({} {rows}x{cols})", df.name()));
+    }
+    let mut cursor = 0u64;
+    for l in &report.layers {
+        for pid in 0..l.node_count {
+            layer_spans(&mut t, pid, cursor, df, rows, cols, &l.node_report, 0);
+        }
+        if let Some(r) = &l.remainder {
+            layer_spans(&mut t, l.node_count, cursor, df, rows, cols, r, 0);
+        }
+        if l.stall_cycles > 0 {
+            // shared-DRAM stall of the slowest node bounds the layer
+            t.push(TraceSpan {
+                name: "stall".to_string(),
+                cat: "stall",
+                pid: 0,
+                ts: cursor + l.cycles,
+                dur: l.stall_cycles,
+                args: Vec::new(),
+            });
+        }
+        cursor += l.cycles + l.stall_cycles;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config;
+    use crate::engine::Engine;
+
+    #[test]
+    fn phases_tile_every_fold_shape_exactly() {
+        let l = LayerShape::conv("c", 17, 17, 3, 3, 13, 37, 1);
+        for df in Dataflow::ALL {
+            for &(r, c) in &[(1u64, 1u64), (3, 5), (8, 8), (16, 2)] {
+                let p = fold_phases(df, &l, r, c);
+                let expect = match df {
+                    Dataflow::Os => 2 * r + c + l.window() - 2,
+                    Dataflow::Ws => 2 * r + c + l.npx() - 1,
+                    Dataflow::Is => 2 * r + c + l.num_filters - 1,
+                };
+                assert_eq!(p.total(), expect, "{df} {r}x{c}");
+            }
+        }
+    }
+
+    #[test]
+    fn layer_span_totals_equal_report_cycles() {
+        let cfg = config::paper_default();
+        let e = Engine::new(cfg.clone());
+        let l = LayerShape::conv("c", 31, 31, 3, 3, 30, 70, 1);
+        for df in Dataflow::ALL {
+            let cfg = crate::config::ArchConfig { dataflow: df, ..cfg.clone() };
+            let report = e.run_layer_with(&cfg, &l);
+            let mut t = Trace::new();
+            let end = layer_spans(&mut t, 0, 0, df, cfg.array_h, cfg.array_w, &report, 0);
+            assert_eq!(end, report.timing.cycles, "{df}");
+            let agg = phase_totals(df, cfg.array_h, cfg.array_w, &l);
+            assert_eq!(agg.total(), report.timing.cycles, "{df}");
+        }
+    }
+
+    #[test]
+    fn trace_json_parses_and_round_trips() {
+        let mut t = Trace::new();
+        t.name_process(0, "p");
+        t.push(TraceSpan {
+            name: "x".into(),
+            cat: "layer",
+            pid: 0,
+            ts: 0,
+            dur: 10,
+            args: vec![("cycles", Json::u64(10))],
+        });
+        let text = t.to_json().to_string();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.to_string(), text);
+        assert_eq!(parsed.get("traceEvents").unwrap().as_arr().unwrap().len(), 2);
+    }
+}

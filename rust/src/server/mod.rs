@@ -120,6 +120,9 @@ struct Shared {
     engine: Arc<Engine>,
     queue: JobQueue<Job>,
     workers: usize,
+    /// Workers currently inside `run_job` (worker-utilization gauge for
+    /// the `stats`/`metrics` surfaces).
+    busy: AtomicUsize,
     stopping: AtomicBool,
     addr: SocketAddr,
     conns: AtomicUsize,
@@ -136,6 +139,7 @@ impl Shared {
             failed: q.failed,
             submitted: q.submitted,
             workers: self.workers,
+            workers_busy: self.busy.load(Ordering::SeqCst),
             cache_entries: self.engine.cache_entries(),
             memo: self.engine.cache_stats(),
             warm: self.engine.warm_stats(),
@@ -235,6 +239,7 @@ pub fn start(opts: ServeOpts) -> Result<ServerHandle> {
         engine,
         queue: JobQueue::bounded(opts.queue_cap),
         workers: opts.workers.max(1),
+        busy: AtomicUsize::new(0),
         stopping: AtomicBool::new(false),
         addr,
         conns: AtomicUsize::new(0),
@@ -342,6 +347,12 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
             Ok(Request::Stats) => {
                 send_line(&writer, &shared.stats().to_json().to_string());
             }
+            // metrics is the same snapshot in Prometheus text clothing,
+            // likewise answered inline from the connection thread
+            Ok(Request::Metrics) => {
+                let text = crate::obs::metrics::server_exposition(&shared.stats());
+                send_line(&writer, &proto::metrics_line(&text));
+            }
             Ok(Request::Shutdown) => {
                 send_line(&writer, &proto::shutting_down_line());
                 shared.begin_shutdown();
@@ -413,9 +424,11 @@ fn worker_loop(shared: &Shared) {
     while let Some(job) = shared.queue.pop() {
         let t0 = Instant::now();
         // a panicking job must not kill the worker or hang the client
+        shared.busy.fetch_add(1, Ordering::SeqCst);
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_job(&shared.engine, &job)
         }));
+        shared.busy.fetch_sub(1, Ordering::SeqCst);
         // count the job done BEFORE emitting the terminal event, so a
         // client that sees `done` and immediately asks for `stats`
         // observes its job in `completed` (panics land in `failed`)
@@ -584,6 +597,24 @@ impl Client {
         })?;
         ServerStats::from_json(last)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    /// Convenience: fetch the Prometheus text exposition (the `metrics`
+    /// event's `"text"` payload).
+    pub fn metrics(&mut self) -> std::io::Result<String> {
+        let events = self.request(r#"{"req":"metrics"}"#)?;
+        let last = events.last().ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "metrics request returned no events",
+            )
+        })?;
+        last.str_field("text").map(str::to_string).ok_or_else(|| {
+            std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "metrics event is missing its \"text\" field",
+            )
+        })
     }
 }
 

@@ -12,6 +12,7 @@
 //! | `{"req":"sweep","id":4,"kind":"dataflow","workload":"ncf"}` | run a paper sweep (`dataflow`\|`memory`\|`shape`); omit `workload` for the full MLPerf suite; `layers`/`ops` are accepted here too |
 //! | `{"req":"dse","id":5,"campaign":{...},"indices":[0,4,8]}` | evaluate one shard of a dse campaign ([`crate::dse::Campaign`] JSON spec; built-in workload names only). `indices` selects the campaign points to evaluate (omitted = all). Shards from concurrent clients share the server's ONE memo cache. The campaign's `energy` preset must match the server engine's model, and non-axis config fields (ofmap SRAM, word size) come from the server's base config — run the server on defaults for bit-identity with local execution |
 //! | `{"req":"stats"}` | server/queue/cache statistics (answered inline, never queued) |
+//! | `{"req":"metrics"}` | Prometheus text exposition of the same statistics (answered inline; see [`crate::obs::metrics`]) |
 //! | `{"req":"shutdown"}` | drain the queue, flush the result store, stop |
 //!
 //! `run` accepts optional architecture overrides applied on top of the
@@ -61,6 +62,7 @@
 //! | `done` | **terminal**; `"ms"` wall-clock, plus `"points"` for sweeps |
 //! | `error` | **terminal**; `"error"` message (bad request, queue closed, …) |
 //! | `stats` | **terminal**; see [`ServerStats`] field list |
+//! | `metrics` | **terminal**; `"text"`: Prometheus text exposition (cache/queue/worker series) |
 //! | `shutting_down` | **terminal**; acknowledges a shutdown request |
 //!
 //! The workload report is
@@ -104,6 +106,9 @@ pub enum Request {
     /// this job evaluates (see [`crate::dse::Campaign::point`]).
     Dse { id: u64, campaign: crate::dse::Campaign, indices: Vec<usize> },
     Stats,
+    /// Prometheus text exposition of the server statistics (answered
+    /// inline, never queued — same data as `Stats`, different surface).
+    Metrics,
     Shutdown,
 }
 
@@ -178,6 +183,10 @@ pub struct ServerStats {
     pub failed: u64,
     pub submitted: u64,
     pub workers: usize,
+    /// Workers currently executing a job (`<= workers`; `in_flight`
+    /// counts jobs accepted but not yet finished, which also covers
+    /// queued hand-off time).
+    pub workers_busy: usize,
     pub cache_entries: usize,
     pub memo: MemoStats,
     pub warm: WarmStats,
@@ -193,9 +202,11 @@ impl ServerStats {
             ("failed", Json::u64(self.failed)),
             ("submitted", Json::u64(self.submitted)),
             ("workers", Json::u64(self.workers as u64)),
+            ("workers_busy", Json::u64(self.workers_busy as u64)),
             ("cache_entries", Json::u64(self.cache_entries as u64)),
             ("layer_sims", Json::u64(self.memo.layer_sims)),
             ("cache_hits", Json::u64(self.memo.cache_hits)),
+            ("inflight_waits", Json::u64(self.memo.inflight_waits)),
             ("hit_rate", Json::f64(self.memo.hit_rate())),
             ("warm_entries", Json::u64(self.warm.entries)),
             ("warm_hits", Json::u64(self.warm.hits)),
@@ -211,10 +222,12 @@ impl ServerStats {
             failed: need_u64(j, "failed")?,
             submitted: need_u64(j, "submitted")?,
             workers: need_u64(j, "workers")? as usize,
+            workers_busy: need_u64(j, "workers_busy")? as usize,
             cache_entries: need_u64(j, "cache_entries")? as usize,
             memo: MemoStats {
                 layer_sims: need_u64(j, "layer_sims")?,
                 cache_hits: need_u64(j, "cache_hits")?,
+                inflight_waits: need_u64(j, "inflight_waits")?,
             },
             warm: WarmStats {
                 entries: need_u64(j, "warm_entries")?,
@@ -301,8 +314,11 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             Ok(Request::Dse { id, campaign, indices })
         }
         Some("stats") => Ok(Request::Stats),
+        Some("metrics") => Ok(Request::Metrics),
         Some("shutdown") => Ok(Request::Shutdown),
-        Some(other) => Err(format!("unknown req {other:?} (run|sweep|dse|stats|shutdown)")),
+        Some(other) => {
+            Err(format!("unknown req {other:?} (run|sweep|dse|stats|metrics|shutdown)"))
+        }
         None => Err("request needs a \"req\" field".into()),
     }
 }
@@ -467,11 +483,18 @@ pub fn shutting_down_line() -> String {
     Json::obj(vec![("event", Json::str("shutting_down"))]).to_string()
 }
 
+/// The `metrics` event: Prometheus text exposition as one JSON string
+/// field (the newline-heavy body rides safely inside the JSON-lines
+/// framing).
+pub fn metrics_line(text: &str) -> String {
+    Json::obj(vec![("event", Json::str("metrics")), ("text", Json::str(text))]).to_string()
+}
+
 /// True for the events that end a request's response stream.
 pub fn is_terminal_event(j: &Json) -> bool {
     matches!(
         j.str_field("event"),
-        Some("done") | Some("error") | Some("stats") | Some("shutting_down")
+        Some("done") | Some("error") | Some("stats") | Some("metrics") | Some("shutting_down")
     )
 }
 
@@ -844,6 +867,7 @@ mod tests {
             done_line(3, 1.5, Some(12)),
             error_line(9, "boom"),
             shutting_down_line(),
+            metrics_line("# HELP x\n"),
             ServerStats::default().to_json().to_string(),
         ] {
             assert!(is_terminal_event(&Json::parse(&line).unwrap()), "{line}");
@@ -859,8 +883,9 @@ mod tests {
             failed: 1,
             submitted: 45,
             workers: 8,
+            workers_busy: 2,
             cache_entries: 17,
-            memo: MemoStats { layer_sims: 10, cache_hits: 30 },
+            memo: MemoStats { layer_sims: 10, cache_hits: 30, inflight_waits: 6 },
             warm: WarmStats { entries: 5, hits: 4 },
         };
         let j = Json::parse(&s.to_json().to_string()).unwrap();

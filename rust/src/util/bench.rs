@@ -36,6 +36,17 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Time one closure, returning its value and the elapsed wall time —
+/// THE sanctioned wall-clock entry point for instrumentation living
+/// outside this module (lint R1 bans clock sources elsewhere; callers
+/// route single-shot timings through here, e.g. the engine's simulate
+/// latency histograms in [`crate::obs::metrics`]).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
 /// Time `f` with `warmup` throwaway runs then `iters` measured runs.
 pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
     assert!(iters > 0);

@@ -84,6 +84,60 @@ fn dse_report_and_journal_fingerprint_are_byte_identical_across_processes() {
     std::fs::remove_dir_all(&work).unwrap();
 }
 
+/// The observability artifacts keep the same promise: `profile`'s trace
+/// JSON and deterministic-class metrics snapshot are byte-identical
+/// across processes (span cycles derive from simulated time, metric
+/// values from event counts — wall time only ever lands in the bench
+/// file, which is exempt from the byte comparison).
+#[test]
+fn profile_trace_and_metrics_are_byte_identical_across_processes() {
+    use scale_sim::util::json::Json;
+
+    let work = tmp_dir("profile");
+    let run = |tag: &str| -> (String, String) {
+        let trace = work.join(format!("trace_{tag}.json"));
+        let metrics = work.join(format!("metrics_{tag}.prom"));
+        let bench = work.join(format!("bench_{tag}.json"));
+        let out = Command::new(BIN)
+            .current_dir(&work)
+            .args(["profile", "-t", "ncf", "--dram-bw", "16"])
+            .arg("--trace-out")
+            .arg(&trace)
+            .arg("--metrics-out")
+            .arg(&metrics)
+            .arg("--bench")
+            .arg(&bench)
+            .output()
+            .expect("spawn scale-sim profile");
+        assert!(
+            out.status.success(),
+            "profile failed: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        (
+            std::fs::read_to_string(&trace).unwrap(),
+            std::fs::read_to_string(&metrics).unwrap(),
+        )
+    };
+
+    let (trace_a, metrics_a) = run("a");
+    let (trace_b, metrics_b) = run("b");
+    assert_eq!(trace_a, trace_b, "trace JSON must be byte-identical across processes");
+    assert_eq!(metrics_a, metrics_b, "metrics snapshot must be byte-identical across processes");
+
+    // the trace file is one line of JSON that util::json round-trips
+    let line = trace_a.strip_suffix('\n').expect("trace file ends with a newline");
+    let parsed = Json::parse(line).expect("trace file parses as JSON");
+    assert_eq!(parsed.to_string(), line, "trace JSON must round-trip exactly");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "trace has events");
+    for needle in ["scale_sim_cache_misses_total", "scale_sim_cache_hits_total"] {
+        assert!(metrics_a.contains(needle), "missing {needle} in:\n{metrics_a}");
+    }
+
+    std::fs::remove_dir_all(&work).unwrap();
+}
+
 #[test]
 fn unknown_cfg_key_diagnostic_is_deterministic() {
     // Config::from_map used to report an arbitrary hash-ordered unknown

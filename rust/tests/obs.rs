@@ -1,0 +1,229 @@
+//! Observability suite: the two-timeline contract, end to end.
+//!
+//! Simulated time — the span trees built by [`scale_sim::obs::trace`]
+//! must tile the engine's reports *exactly*: every per-layer span total
+//! equals that layer's `timing.cycles`, across dataflows, array shapes,
+//! and workloads (the `scale-sim profile` acceptance identity). Host
+//! time — the metrics registry's Prometheus exposition must be
+//! deterministic for the deterministic class, and the server's
+//! `metrics` surface must cover the promised cache/queue/worker series.
+
+use scale_sim::config::{workloads, ArchConfig};
+use scale_sim::engine::{Engine, MultiArrayConfig, Partition};
+use scale_sim::obs::metrics::{self, Registry};
+use scale_sim::obs::trace;
+use scale_sim::util::json::Json;
+use scale_sim::Dataflow;
+
+/// Per-layer span totals == LayerReport cycles, for every dataflow and
+/// several array shapes, over a conv net (alexnet), an MLPerf net, and
+/// a GEMM workload — the `scale-sim profile` acceptance identity.
+#[test]
+fn span_totals_equal_report_cycles_exactly() {
+    let topos = vec![
+        workloads::builtin("alexnet").unwrap(),
+        workloads::builtin("ncf").unwrap(),
+        workloads::builtin_workload("mlp").unwrap().lower().unwrap(),
+    ];
+    for topo in &topos {
+        for df in Dataflow::ALL {
+            for &(h, w) in &[(8u64, 8u64), (32, 32), (16, 64)] {
+                let cfg = ArchConfig {
+                    dataflow: df,
+                    array_h: h,
+                    array_w: w,
+                    ..ArchConfig::default()
+                };
+                let engine = Engine::new(cfg.clone());
+                let report = engine.run_topology(topo);
+                let t = trace::workload_trace(df, h, w, &report, None);
+
+                // one layer span per report layer, dur == cycles, laid
+                // back-to-back from cycle 0
+                let layer_spans: Vec<_> =
+                    t.spans.iter().filter(|s| s.cat == "layer").collect();
+                assert_eq!(layer_spans.len(), report.layers.len());
+                let mut cursor = 0u64;
+                for (span, l) in layer_spans.iter().zip(&report.layers) {
+                    assert_eq!(span.name, l.name(), "{} {df} {h}x{w}", topo.name);
+                    assert_eq!(span.ts, cursor, "{} {df} {h}x{w}", topo.name);
+                    assert_eq!(
+                        span.dur, l.timing.cycles,
+                        "layer span total must equal LayerReport cycles \
+                         ({} {} {df} {h}x{w})",
+                        topo.name,
+                        l.name()
+                    );
+                    cursor += l.timing.cycles;
+                }
+                // the phase children tile each layer exactly, so their
+                // grand total is the workload's total cycles
+                assert_eq!(t.category_total("phase"), report.total_cycles());
+                assert_eq!(t.category_total("layer"), report.total_cycles());
+                assert_eq!(t.category_total("fold"), report.total_cycles());
+
+                // the aggregate closed form agrees layer by layer
+                for l in &report.layers {
+                    let p = trace::phase_totals(df, h, w, &l.layer);
+                    assert_eq!(p.total(), l.timing.cycles, "{}", l.name());
+                }
+            }
+        }
+    }
+}
+
+/// Stall spans extend the timeline without disturbing compute spans.
+#[test]
+fn stall_spans_append_after_compute() {
+    let topo = workloads::builtin("ncf").unwrap();
+    let cfg = ArchConfig::default();
+    let engine = Engine::new(cfg.clone());
+    let report = engine.run_topology(&topo);
+    let stalls: Vec<u64> = (0..report.layers.len() as u64).map(|i| i * 10).collect();
+    let t = trace::workload_trace(cfg.dataflow, cfg.array_h, cfg.array_w, &report, Some(&stalls));
+    let stall_total: u64 = stalls.iter().sum();
+    assert_eq!(t.category_total("stall"), stall_total);
+    assert_eq!(t.category_total("phase"), report.total_cycles());
+    let end = t.spans.iter().map(|s| s.ts + s.dur).max().unwrap();
+    assert_eq!(end, report.total_cycles() + stall_total);
+}
+
+/// Multi-array traces put each node on its own pid track and span the
+/// composed system's exact cycle count (stalls included).
+#[test]
+fn multi_trace_tracks_nodes_and_totals() {
+    let topo = workloads::builtin("ncf").unwrap();
+    let cfg = ArchConfig { array_h: 16, array_w: 16, ..ArchConfig::default() };
+    let engine = Engine::new(cfg.clone());
+    let mc = MultiArrayConfig::new(4, 16, 16, Partition::default());
+    let m = engine.run_multi_with(&cfg, &topo, &mc, Some(10.0));
+    let t = trace::multi_trace(cfg.dataflow, &m);
+
+    let max_used = m.layers.iter().map(|l| l.used_nodes).max().unwrap();
+    assert!(max_used > 1, "partitioning must engage more than one node");
+    let pids: std::collections::BTreeSet<u64> = t.spans.iter().map(|s| s.pid).collect();
+    assert!(pids.len() as u64 >= max_used, "one track per used node: {pids:?}");
+
+    // layers serialize at the slowest node: the timeline ends exactly at
+    // the composed runtime (compute + shared-DRAM stalls)
+    let end = t.spans.iter().map(|s| s.ts + s.dur).max().unwrap();
+    assert_eq!(end, m.total_cycles() + m.total_stall_cycles());
+
+    // per-layer: one span per used node (the remainder share rides the
+    // last one), full-share spans lasting exactly the node report cycles
+    let mut cursor = 0u64;
+    for l in &m.layers {
+        let spans: Vec<_> =
+            t.spans.iter().filter(|s| s.cat == "layer" && s.ts == cursor).collect();
+        assert_eq!(spans.len() as u64, l.used_nodes, "{}", l.layer.name);
+        for s in &spans {
+            assert_eq!(s.name, l.layer.name);
+            if s.pid < l.node_count {
+                assert_eq!(s.dur, l.node_report.timing.cycles);
+            }
+        }
+        cursor += l.cycles + l.stall_cycles;
+    }
+}
+
+/// The Chrome trace document survives an exact util::json round trip and
+/// carries the viewer-required fields on every event.
+#[test]
+fn trace_json_round_trips_and_is_well_formed() {
+    let topo = workloads::builtin("ncf").unwrap();
+    let cfg = ArchConfig::default();
+    let engine = Engine::new(cfg.clone());
+    let report = engine.run_topology(&topo);
+    let t = trace::workload_trace(cfg.dataflow, cfg.array_h, cfg.array_w, &report, None);
+
+    let text = t.to_json().to_string();
+    let parsed = Json::parse(&text).expect("trace JSON parses");
+    assert_eq!(parsed.to_string(), text, "exact round trip");
+
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), t.spans.len() + 1, "spans + one process_name metadata event");
+    for e in events {
+        match e.str_field("ph") {
+            Some("M") => assert_eq!(e.str_field("name"), Some("process_name")),
+            Some("X") => {
+                for field in ["ts", "dur", "pid", "tid"] {
+                    assert!(e.u64_field(field).is_some(), "X event missing {field}: {e}");
+                }
+                assert!(e.str_field("cat").is_some());
+            }
+            other => panic!("unexpected event phase {other:?}"),
+        }
+    }
+
+    // write() emits the same document plus a trailing newline
+    let dir = std::env::temp_dir().join(format!("scale_sim_obs_{}", std::process::id()));
+    let path = dir.join("trace.json");
+    t.write(&path).unwrap();
+    let disk = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(disk, format!("{text}\n"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Deterministic-class Prometheus exposition is byte-stable and ordered;
+/// the wall-clock class stays out unless asked for.
+#[test]
+fn prometheus_exposition_is_deterministic() {
+    let reg = Registry::new();
+    reg.set_counter("scale_sim_cache_hits_total", "hits", 42);
+    reg.set_gauge("scale_sim_queue_depth", "depth", 3.0);
+    reg.observe_seconds("scale_sim_simulate_seconds{backend=\"analytical\"}", "lat", 0.001);
+
+    let det = reg.render(false);
+    assert_eq!(det, reg.render(false), "deterministic class must be byte-stable");
+    assert!(!det.contains("simulate_seconds"), "histograms are wall-clock class:\n{det}");
+    assert!(det.contains("# TYPE scale_sim_cache_hits_total counter"), "{det}");
+    assert!(det.contains("# TYPE scale_sim_queue_depth gauge"), "{det}");
+    let hits = det.find("scale_sim_cache_hits_total 42").unwrap();
+    let depth = det.find("scale_sim_queue_depth 3").unwrap();
+    assert!(hits < depth, "lexicographic family order:\n{det}");
+
+    let wall = reg.render(true);
+    assert!(wall.contains("scale_sim_simulate_seconds_bucket"), "{wall}");
+    assert!(wall.contains("le=\"+Inf\""), "{wall}");
+}
+
+/// The server exposition covers the cache, queue, and worker series the
+/// protocol promises, and is a pure function of the stats snapshot.
+#[test]
+fn server_exposition_covers_promised_series() {
+    use scale_sim::engine::{MemoStats, WarmStats};
+    use scale_sim::server::proto::ServerStats;
+
+    let s = ServerStats {
+        queue_depth: 3,
+        in_flight: 5,
+        completed: 40,
+        failed: 1,
+        submitted: 46,
+        workers: 8,
+        workers_busy: 2,
+        cache_entries: 17,
+        memo: MemoStats { layer_sims: 10, cache_hits: 30, inflight_waits: 4 },
+        warm: WarmStats { entries: 6, hits: 9 },
+    };
+    let text = metrics::server_exposition(&s);
+    assert_eq!(text, metrics::server_exposition(&s), "pure function of the snapshot");
+    for needle in [
+        "scale_sim_cache_misses_total 10",
+        "scale_sim_cache_hits_total 30",
+        "scale_sim_cache_inflight_waits_total 4",
+        "scale_sim_cache_warm_hits_total 9",
+        "scale_sim_cache_entries 17",
+        "scale_sim_cache_warm_entries 6",
+        "scale_sim_queue_depth 3",
+        "scale_sim_queue_inflight 5",
+        "scale_sim_jobs_submitted_total 46",
+        "scale_sim_jobs_completed_total 40",
+        "scale_sim_jobs_failed_total 1",
+        "scale_sim_workers 8",
+        "scale_sim_workers_busy 2",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    assert!(text.ends_with('\n'), "exposition ends with a newline");
+}

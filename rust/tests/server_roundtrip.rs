@@ -159,17 +159,66 @@ fn memostats_hit_rate_with_zero_lookups_is_zero_not_nan() {
 #[test]
 fn memostats_since_across_a_reset_saturates() {
     // snapshot taken before a server restart (counters restarted at 0)
-    let stale = MemoStats { layer_sims: 50, cache_hits: 200 };
-    let fresh = MemoStats { layer_sims: 2, cache_hits: 5 };
+    let stale = MemoStats { layer_sims: 50, cache_hits: 200, inflight_waits: 8 };
+    let fresh = MemoStats { layer_sims: 2, cache_hits: 5, inflight_waits: 1 };
     let delta = fresh.since(&stale);
-    assert_eq!((delta.layer_sims, delta.cache_hits), (0, 0));
+    assert_eq!((delta.layer_sims, delta.cache_hits, delta.inflight_waits), (0, 0, 0));
     assert_eq!(delta.hit_rate(), 0.0);
 
     // normal forward delta still exact
-    let later = MemoStats { layer_sims: 60, cache_hits: 240 };
+    let later = MemoStats { layer_sims: 60, cache_hits: 240, inflight_waits: 10 };
     let d = later.since(&stale);
-    assert_eq!((d.layer_sims, d.cache_hits), (10, 40));
+    assert_eq!((d.layer_sims, d.cache_hits, d.inflight_waits), (10, 40, 2));
     assert!((d.hit_rate() - 0.8).abs() < 1e-12);
+}
+
+// ---------------------------------------------------------------------
+// Observability surfaces: stats gauges + the Prometheus metrics scrape
+
+/// The stats event carries the queue/worker occupancy gauges, and the
+/// `metrics` request exposes the same snapshot as deterministic
+/// Prometheus text (byte-identical across scrapes of an idle server).
+#[test]
+fn stats_and_metrics_surface_queue_and_worker_series() {
+    let handle = server::start(ServeOpts { workers: 3, ..ServeOpts::default() }).unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    let _ = report_of(&c.request(&inline_run_request(7, &small_layers())).unwrap());
+
+    // the worker counts the job done (and itself idle) BEFORE emitting
+    // `done`, so a stats request issued after the terminal event must
+    // observe a fully idle server
+    let s = c.stats().unwrap();
+    assert_eq!(s.workers, 3);
+    assert_eq!(s.queue_depth, 0, "idle server has an empty queue");
+    assert_eq!(s.in_flight, 0, "nothing accepted-but-unfinished");
+    assert_eq!(s.workers_busy, 0, "no worker mid-job");
+    assert_eq!(s.completed, 1);
+
+    // raw wire check: the stats event itself names every gauge
+    let raw = c.request(r#"{"req":"stats"}"#).unwrap();
+    assert_eq!(raw.len(), 1, "stats is a terminal event");
+    for field in ["queue_depth", "in_flight", "workers", "workers_busy", "inflight_waits"] {
+        assert!(raw[0].u64_field(field).is_some(), "stats event missing {field}: {}", raw[0]);
+    }
+
+    // the Prometheus scrape covers the promised cache/queue/worker series
+    let text = c.metrics().unwrap();
+    for needle in [
+        "# TYPE scale_sim_cache_hits_total counter",
+        "scale_sim_cache_misses_total 3",
+        "scale_sim_queue_depth 0",
+        "scale_sim_queue_inflight 0",
+        "scale_sim_jobs_submitted_total 1",
+        "scale_sim_jobs_completed_total 1",
+        "scale_sim_jobs_failed_total 0",
+        "scale_sim_workers 3",
+        "scale_sim_workers_busy 0",
+    ] {
+        assert!(text.contains(needle), "missing {needle} in:\n{text}");
+    }
+    assert_eq!(text, c.metrics().unwrap(), "idle scrapes must be byte-identical");
+
+    handle.shutdown();
 }
 
 // ---------------------------------------------------------------------
