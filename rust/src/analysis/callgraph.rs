@@ -1,0 +1,508 @@
+//! Crate-wide call-graph construction for the interprocedural rules.
+//!
+//! Every identifier occurrence in every file is matched against the
+//! crate's [`items::FnItem`] table and resolved through one of four
+//! contexts — method call (`x.f(..)`), qualified call (`a::b::f(..)`),
+//! free call (`f(..)`), or bare mention (`f` passed as a value) — each
+//! with an explicit **confidence** bit:
+//!
+//! * `confident` edges have exactly one plausible in-crate target and
+//!   feed effect *propagation* (R6's transitive lock/I/O sets). A
+//!   wrong confident edge would invent findings, so ambiguity always
+//!   degrades to non-confident.
+//! * non-confident edges (ambiguous methods, bare mentions, shadowed
+//!   free names) still count for *reachability* (R8), where
+//!   over-approximation merely keeps surface alive — the safe
+//!   direction for a dead-code rule.
+//!
+//! Known limitations (documented in the README): no trait-object or
+//! closure dispatch, no type inference — method calls resolve only
+//! when the method name is unique crate-wide and not a common std
+//! name; calls through `std` types never produce edges.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::items::{self, FileItems, FnItem};
+use super::lexer::{Tok, Token};
+
+/// One lexed + item-parsed source file.
+pub struct ParsedSource {
+    pub rel: String,
+    pub toks: Vec<Token>,
+    /// Per-token: inside a `#[cfg(test)]`-gated region.
+    pub test_mask: Vec<bool>,
+    pub items: FileItems,
+}
+
+/// A function node: which file it lives in plus its parsed item.
+pub struct FnNode {
+    pub file: usize,
+    pub item: FnItem,
+}
+
+/// One call (or mention) edge.
+#[derive(Clone, Copy, Debug)]
+pub struct Edge {
+    pub from: usize,
+    pub to: usize,
+    /// Token index of the callee name within the *caller's* file.
+    pub tok: usize,
+    pub line: u32,
+    pub confident: bool,
+}
+
+/// The crate call graph.
+pub struct Graph {
+    pub fns: Vec<FnNode>,
+    /// Sorted by (from, tok, to).
+    pub edges: Vec<Edge>,
+    /// Edge indices grouped by caller, in token order.
+    pub calls_from: BTreeMap<usize, Vec<usize>>,
+    /// Fns mentioned outside any fn body (statics, consts, macro
+    /// arguments at item scope) — reachability roots.
+    pub top_mentions: BTreeSet<usize>,
+}
+
+/// Rust keywords plus `self`/`Self`: never callee candidates.
+const KEYWORDS: [&str; 40] = [
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "dyn", "else",
+    "enum", "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match",
+    "mod", "move", "mut", "pub", "ref", "return", "self", "static", "struct", "super",
+    "trait", "true", "type", "unsafe", "use", "where", "while", "Self", "yield",
+];
+
+/// Method names so common on std types that a bare `x.name()` match
+/// against a same-named crate method would usually be wrong. These
+/// resolve as non-confident candidates only.
+const STD_METHODS: [&str; 60] = [
+    "abs", "all", "any", "append", "as_bytes", "as_str", "bytes", "chars", "clear",
+    "clone", "cloned", "collect", "contains", "copied", "count", "drain", "drop",
+    "ends_with", "entry", "enumerate", "expect", "extend", "filter", "find", "first",
+    "flush", "fmt", "fold", "get", "insert", "is_empty", "iter", "join", "keys", "last",
+    "len", "lock", "map", "max", "min", "next", "parse", "peek", "pop", "position",
+    "push", "read", "recv", "remove", "rev", "send", "sort", "split", "starts_with",
+    "sum", "take", "to_string", "trim", "unwrap", "write",
+];
+
+/// Build the crate call graph from every parsed source.
+pub fn build(files: &[ParsedSource]) -> Graph {
+    let mut fns: Vec<FnNode> = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for item in &f.items.fns {
+            fns.push(FnNode { file: fi, item: item.clone() });
+        }
+    }
+    let mut by_name: BTreeMap<&str, Vec<usize>> = BTreeMap::new();
+    for (i, n) in fns.iter().enumerate() {
+        by_name.entry(n.item.name.as_str()).or_default().push(i);
+    }
+    let mut edges: Vec<Edge> = Vec::new();
+    let mut top_mentions: BTreeSet<usize> = BTreeSet::new();
+    for (fi, f) in files.iter().enumerate() {
+        scan_file(fi, f, &fns, &by_name, &mut edges, &mut top_mentions);
+    }
+    edges.sort_by_key(|e| (e.from, e.tok, e.to));
+    let mut calls_from: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    for (i, e) in edges.iter().enumerate() {
+        calls_from.entry(e.from).or_default().push(i);
+    }
+    Graph { fns, edges, calls_from, top_mentions }
+}
+
+impl Graph {
+    /// Fns reachable from `roots` over **all** edges (confident or not).
+    pub fn reachable(&self, roots: &BTreeSet<usize>) -> BTreeSet<usize> {
+        let mut seen = roots.clone();
+        let mut queue: Vec<usize> = roots.iter().copied().collect();
+        while let Some(f) = queue.pop() {
+            if let Some(edge_ids) = self.calls_from.get(&f) {
+                for &ei in edge_ids {
+                    let to = self.edges[ei].to;
+                    if seen.insert(to) {
+                        queue.push(to);
+                    }
+                }
+            }
+        }
+        seen
+    }
+}
+
+/// Map every token of `file` to the fn whose body contains it.
+/// Later-recorded (inner, nested) fns overwrite their enclosing fn's
+/// claim, so tokens attribute to the innermost body.
+fn owner_map(file: &ParsedSource, fns: &[FnNode], fi: usize) -> Vec<Option<usize>> {
+    let mut owners: Vec<Option<usize>> = vec![None; file.toks.len()];
+    for (gid, node) in fns.iter().enumerate() {
+        if node.file != fi {
+            continue;
+        }
+        if let Some((b0, b1)) = node.item.body {
+            for slot in owners.iter_mut().take(b1.min(owners.len())).skip(b0) {
+                *slot = Some(gid);
+            }
+        }
+    }
+    owners
+}
+
+fn scan_file(
+    fi: usize,
+    file: &ParsedSource,
+    fns: &[FnNode],
+    by_name: &BTreeMap<&str, Vec<usize>>,
+    edges: &mut Vec<Edge>,
+    top_mentions: &mut BTreeSet<usize>,
+) {
+    let owners = owner_map(file, fns, fi);
+    let toks = &file.toks;
+    for (i, t) in toks.iter().enumerate() {
+        let Tok::Ident(name) = &t.tok else { continue };
+        if KEYWORDS.contains(&name.as_str()) {
+            continue;
+        }
+        let Some(cands) = by_name.get(name.as_str()) else { continue };
+        // skip the declaration itself
+        if i > 0 && toks[i - 1].is_ident("fn") {
+            continue;
+        }
+        // skip macro names (`name!(..)`)
+        if toks.get(i + 1).is_some_and(|u| u.is_punct('!')) {
+            continue;
+        }
+        let prev_dot = i > 0 && toks[i - 1].is_punct('.');
+        let prev_qual = i >= 2 && toks[i - 1].is_punct(':') && toks[i - 2].is_punct(':');
+        let next_call = toks.get(i + 1).is_some_and(|u| u.is_punct('('));
+        let owner = owners[i];
+        let (targets, confident) = if prev_dot && next_call {
+            resolve_method(name, cands, fns)
+        } else if prev_qual && next_call {
+            resolve_qualified(toks, i, name, cands, fns, file, owner)
+        } else if next_call && !prev_dot && !prev_qual {
+            resolve_free(name, cands, fns, file, fi)
+        } else if !prev_dot {
+            // bare mention — `f` as a value, re-export, or match arm;
+            // counts for reachability only
+            (cands.clone(), false)
+        } else {
+            // field access `x.f` without call parens
+            continue;
+        };
+        let confident = confident && targets.len() == 1;
+        match owner {
+            Some(from) => {
+                for to in targets {
+                    edges.push(Edge { from, to, tok: i, line: t.line, confident });
+                }
+            }
+            None => top_mentions.extend(targets),
+        }
+    }
+}
+
+/// `x.name(..)` — confident only if exactly one crate method bears the
+/// name and the name is not a common std-type method.
+fn resolve_method(name: &str, cands: &[usize], fns: &[FnNode]) -> (Vec<usize>, bool) {
+    let methods: Vec<usize> = cands
+        .iter()
+        .copied()
+        .filter(|&c| fns[c].item.has_receiver)
+        .collect();
+    if methods.is_empty() {
+        return (cands.to_vec(), false);
+    }
+    let confident = methods.len() == 1 && !STD_METHODS.contains(&name);
+    (methods, confident)
+}
+
+/// `a::b::name(..)` — resolve the path prefix through the caller file's
+/// `use` map and module path.
+fn resolve_qualified(
+    toks: &[Token],
+    i: usize,
+    name: &str,
+    cands: &[usize],
+    fns: &[FnNode],
+    file: &ParsedSource,
+    owner: Option<usize>,
+) -> (Vec<usize>, bool) {
+    // collect path segments backwards: ident :: ident :: ... :: name
+    let mut segs: Vec<String> = Vec::new();
+    let mut k = i;
+    while k >= 3 && toks[k - 1].is_punct(':') && toks[k - 2].is_punct(':') {
+        match &toks[k - 3].tok {
+            Tok::Ident(s) => {
+                segs.push(s.clone());
+                k -= 3;
+            }
+            // `<T as Trait>::name` or turbofish residue — give up on
+            // the prefix, keep every candidate non-confidently
+            _ => return (cands.to_vec(), false),
+        }
+    }
+    segs.reverse();
+    let Some(q) = segs.last().cloned() else {
+        return (cands.to_vec(), false);
+    };
+    if q == "Self" {
+        // method on the caller's own impl type
+        let own_qual = owner.and_then(|o| fns[o].item.qual.clone());
+        if let Some(own) = own_qual {
+            let hits: Vec<usize> = cands
+                .iter()
+                .copied()
+                .filter(|&c| fns[c].item.qual.as_deref() == Some(own.as_str()))
+                .collect();
+            if !hits.is_empty() {
+                let confident = hits.len() == 1;
+                return (hits, confident);
+            }
+        }
+        return (cands.to_vec(), false);
+    }
+    if q.chars().next().is_some_and(|c| c.is_ascii_uppercase()) {
+        // `Type::name` — resolve the type alias, match on impl qual
+        let type_name = match file.items.uses.get(&q) {
+            Some(path) => path.rsplit("::").next().unwrap_or(&q).to_string(),
+            None => q,
+        };
+        let hits: Vec<usize> = cands
+            .iter()
+            .copied()
+            .filter(|&c| fns[c].item.qual.as_deref() == Some(type_name.as_str()))
+            .collect();
+        if hits.is_empty() {
+            return (cands.to_vec(), false);
+        }
+        let confident = hits.len() == 1;
+        return (hits, confident);
+    }
+    // module-qualified free call: resolve the first segment through the
+    // use map, then root the whole prefix against the file's module
+    let mut resolved = segs.clone();
+    if let Some(first) = resolved.first().cloned() {
+        if let Some(path) = file.items.uses.get(&first) {
+            let mut repl: Vec<String> = path.split("::").map(str::to_string).collect();
+            repl.extend(resolved.drain(1..));
+            resolved = repl;
+        }
+    }
+    let prefix = items::resolve_path(&resolved, &file.items.module);
+    let want = if prefix.is_empty() { name.to_string() } else { format!("{prefix}::{name}") };
+    let hits: Vec<usize> = cands
+        .iter()
+        .copied()
+        .filter(|&c| {
+            let p = fns[c].item.path();
+            p == want || p.ends_with(&format!("::{want}"))
+        })
+        .collect();
+    if hits.is_empty() {
+        return (cands.to_vec(), false);
+    }
+    let confident = hits.len() == 1;
+    (hits, confident)
+}
+
+/// `name(..)` with no path — explicit `use` alias wins, then same-file
+/// free fns, then glob imports, then a unique crate-wide free fn.
+fn resolve_free(
+    name: &str,
+    cands: &[usize],
+    fns: &[FnNode],
+    file: &ParsedSource,
+    fi: usize,
+) -> (Vec<usize>, bool) {
+    if let Some(path) = file.items.uses.get(name) {
+        let hits: Vec<usize> = cands
+            .iter()
+            .copied()
+            .filter(|&c| fns[c].item.path() == *path)
+            .collect();
+        if hits.len() == 1 {
+            return (hits, true);
+        }
+        if !hits.is_empty() {
+            return (hits, false);
+        }
+        // aliased to something we cannot see (std, re-export) —
+        // conservatively keep every candidate, non-confident
+        return (cands.to_vec(), false);
+    }
+    let same_file: Vec<usize> = cands
+        .iter()
+        .copied()
+        .filter(|&c| fns[c].file == fi && fns[c].item.qual.is_none())
+        .collect();
+    if !same_file.is_empty() {
+        let confident = same_file.len() == 1;
+        return (same_file, confident);
+    }
+    let via_glob: Vec<usize> = cands
+        .iter()
+        .copied()
+        .filter(|&c| {
+            fns[c].item.qual.is_none()
+                && file
+                    .items
+                    .globs
+                    .iter()
+                    .any(|g| fns[c].item.path() == format!("{g}::{name}"))
+        })
+        .collect();
+    if via_glob.len() == 1 {
+        return (via_glob, true);
+    }
+    if !via_glob.is_empty() {
+        return (via_glob, false);
+    }
+    let free: Vec<usize> =
+        cands.iter().copied().filter(|&c| fns[c].item.qual.is_none()).collect();
+    if free.len() == 1 {
+        return (free, true);
+    }
+    (cands.to_vec(), false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+    use crate::analysis::rules::test_region_mask as mask;
+
+    fn parsed(rel: &str, src: &str) -> ParsedSource {
+        let toks = lex(src);
+        let test_mask = mask(&toks);
+        let items = items::parse_file(rel, &toks);
+        ParsedSource { rel: rel.to_string(), toks, test_mask, items }
+    }
+
+    fn edge_names(g: &Graph, from_name: &str) -> Vec<(String, bool)> {
+        let from = g
+            .fns
+            .iter()
+            .position(|n| n.item.name == from_name)
+            .expect("caller in graph");
+        g.edges
+            .iter()
+            .filter(|e| e.from == from)
+            .map(|e| (g.fns[e.to].item.name.clone(), e.confident))
+            .collect()
+    }
+
+    #[test]
+    fn unique_method_calls_resolve_confidently() {
+        let files = vec![
+            parsed(
+                "rust/src/a.rs",
+                "pub struct S;\nimpl S { pub fn simulate_layer(&self) {} }\n",
+            ),
+            parsed(
+                "rust/src/b.rs",
+                "fn driver(s: &crate::a::S) { s.simulate_layer(); }\n",
+            ),
+        ];
+        let g = build(&files);
+        assert_eq!(edge_names(&g, "driver"), vec![("simulate_layer".to_string(), true)]);
+    }
+
+    #[test]
+    fn std_method_names_stay_non_confident() {
+        // `q.send(..)` matches a crate method named `send`, but `send`
+        // is a common std method — the edge must not feed propagation.
+        let files = vec![
+            parsed("rust/src/a.rs", "pub struct Q;\nimpl Q { pub fn send(&self) {} }\n"),
+            parsed("rust/src/b.rs", "fn driver(q: &crate::a::Q) { q.send(); }\n"),
+        ];
+        let g = build(&files);
+        assert_eq!(edge_names(&g, "driver"), vec![("send".to_string(), false)]);
+    }
+
+    #[test]
+    fn use_aliased_free_calls_resolve_through_the_alias() {
+        let files = vec![
+            parsed("rust/src/dse/journal.rs", "pub fn replay() {}\n"),
+            parsed("rust/src/other.rs", "pub fn replay() {}\n"),
+            parsed(
+                "rust/src/cli.rs",
+                "use crate::dse::journal::replay;\nfn run() { replay(); }\n",
+            ),
+        ];
+        let g = build(&files);
+        let edges = edge_names(&g, "run");
+        assert_eq!(edges, vec![("replay".to_string(), true)]);
+        let from = g.fns.iter().position(|n| n.item.name == "run").unwrap();
+        let e = g.edges.iter().find(|e| e.from == from).unwrap();
+        assert_eq!(g.fns[e.to].item.path(), "dse::journal::replay", "alias picked the right one");
+    }
+
+    #[test]
+    fn module_qualified_calls_resolve_via_use_map() {
+        let files = vec![
+            parsed("rust/src/dse/journal.rs", "pub fn replay() {}\n"),
+            parsed(
+                "rust/src/cli.rs",
+                "use crate::dse::journal;\nfn run() { journal::replay(); }\n",
+            ),
+        ];
+        let g = build(&files);
+        assert_eq!(edge_names(&g, "run"), vec![("replay".to_string(), true)]);
+    }
+
+    #[test]
+    fn ambiguous_and_unresolvable_calls_degrade_to_non_confident() {
+        // two crate fns named `helper`, called without qualification
+        // from a third file: neither same-file nor unique — every
+        // candidate kept, none confident (R8 sees them, R6 does not).
+        let files = vec![
+            parsed("rust/src/a.rs", "pub fn helper() {}\n"),
+            parsed("rust/src/b.rs", "pub fn helper() {}\n"),
+            parsed("rust/src/c.rs", "fn run() { helper(); }\n"),
+        ];
+        let g = build(&files);
+        let edges = edge_names(&g, "run");
+        assert_eq!(edges.len(), 2);
+        assert!(edges.iter().all(|(_, conf)| !conf));
+    }
+
+    #[test]
+    fn same_file_free_call_beats_crate_wide_duplicates() {
+        let files = vec![
+            parsed("rust/src/a.rs", "pub fn helper() {}\n"),
+            parsed("rust/src/b.rs", "fn helper() {}\nfn run() { helper(); }\n"),
+        ];
+        let g = build(&files);
+        let from = g.fns.iter().position(|n| n.item.name == "run").unwrap();
+        let hits: Vec<&Edge> = g.edges.iter().filter(|e| e.from == from).collect();
+        assert_eq!(hits.len(), 1);
+        assert!(hits[0].confident);
+        assert_eq!(g.fns[hits[0].to].file, 1, "resolved to the same-file fn");
+    }
+
+    #[test]
+    fn bare_mentions_reach_but_do_not_propagate() {
+        let files = vec![
+            parsed("rust/src/a.rs", "pub fn callback() {}\n"),
+            parsed("rust/src/b.rs", "fn run(f: fn()) { run(callback); }\n"),
+        ];
+        let g = build(&files);
+        let edges = edge_names(&g, "run");
+        assert!(edges.contains(&("callback".to_string(), false)), "{edges:?}");
+        let roots: BTreeSet<usize> =
+            g.fns.iter().position(|n| n.item.name == "run").into_iter().collect();
+        let reach = g.reachable(&roots);
+        let cb = g.fns.iter().position(|n| n.item.name == "callback").unwrap();
+        assert!(reach.contains(&cb), "mentions count for reachability");
+    }
+
+    #[test]
+    fn top_level_mentions_root_reachability() {
+        let files = vec![
+            parsed("rust/src/a.rs", "pub fn entry() {}\n"),
+            parsed("rust/src/b.rs", "pub static HOOK: fn() = crate::a::entry;\n"),
+        ];
+        let g = build(&files);
+        let entry = g.fns.iter().position(|n| n.item.name == "entry").unwrap();
+        assert!(g.top_mentions.contains(&entry));
+    }
+}

@@ -1,0 +1,608 @@
+//! Lightweight item parser for the interprocedural lint rules.
+//!
+//! Built directly over [`super::lexer`]'s token stream — still no
+//! syntax tree, no syn. It recovers just enough structure for the
+//! call graph: `fn` declarations (name, visibility, receiver, body
+//! token range) with their enclosing `mod`/`impl` scopes, and each
+//! file's `use` alias map with `crate`/`self`/`super` heads resolved
+//! against the file's module path. Everything else (expressions,
+//! generics, types) is skipped with balanced-bracket matching.
+//!
+//! The parser is deliberately conservative: any construct it cannot
+//! follow it drops. A dropped item costs call edges — *missed*
+//! findings downstream — never invented ones.
+
+use std::collections::BTreeMap;
+
+use super::lexer::{Tok, Token};
+
+/// The crate's lib name as it appears in integration-test `use` paths.
+const CRATE_NAME: &str = "scale_sim";
+
+/// One `fn` item.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FnItem {
+    pub name: String,
+    /// Enclosing `impl` type name (`None` for free functions).
+    pub qual: Option<String>,
+    /// Module path within the crate, `::`-joined (`"dse::journal"`;
+    /// the crate root is `""`).
+    pub module: String,
+    /// 1-based line of the `fn` name.
+    pub line: u32,
+    /// Token index of the `fn` name (for test-region lookups).
+    pub decl_tok: usize,
+    /// Plain `pub` only — `pub(crate)`/`pub(super)` are not public
+    /// surface and are deliberately `false` here.
+    pub is_pub: bool,
+    /// Whether the first parameter is a `self` receiver.
+    pub has_receiver: bool,
+    /// Token range of the body *including both braces*; `None` for
+    /// bodyless trait method declarations.
+    pub body: Option<(usize, usize)>,
+}
+
+impl FnItem {
+    /// Crate-rooted `::`-joined path (`"dse::journal::Journal::append"`).
+    pub fn path(&self) -> String {
+        let mut segs: Vec<&str> = Vec::new();
+        if !self.module.is_empty() {
+            segs.extend(self.module.split("::"));
+        }
+        if let Some(q) = &self.qual {
+            segs.push(q);
+        }
+        segs.push(&self.name);
+        segs.join("::")
+    }
+}
+
+/// Items recovered from one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileItems {
+    /// The file's own module path segments (empty at the crate root).
+    pub module: Vec<String>,
+    pub fns: Vec<FnItem>,
+    /// `use` alias map: local name -> crate-rooted path (`"Campaign"`
+    /// -> `"dse::Campaign"`). External paths (`std`, ...) keep their
+    /// head segment and simply never match a crate item.
+    pub uses: BTreeMap<String, String>,
+    /// Resolved prefixes of glob imports (`use x::*;`).
+    pub globs: Vec<String>,
+}
+
+/// Module path a root-relative file implements: `rust/src/dse/journal.rs`
+/// -> `["dse", "journal"]`; `mod.rs` maps to its directory; `lib.rs`,
+/// `main.rs`, tests and benches map to the crate root (empty).
+pub fn module_path(rel: &str) -> Vec<String> {
+    let Some(stripped) = rel.strip_prefix("rust/src/") else {
+        return Vec::new(); // tests/benches address the crate externally
+    };
+    let mut segs: Vec<String> = stripped.split('/').map(str::to_string).collect();
+    let Some(last) = segs.pop() else {
+        return Vec::new();
+    };
+    match last.as_str() {
+        "lib.rs" | "main.rs" | "mod.rs" => {}
+        other => segs.push(other.strip_suffix(".rs").unwrap_or(other).to_string()),
+    }
+    segs
+}
+
+/// Resolve a `use`-path's head against the file's module path:
+/// `crate::`/`scale_sim::` roots it, `self::` prepends the module,
+/// each `super::` pops one segment. Anything else (std, core, ...) is
+/// left as written.
+pub fn resolve_path(segs: &[String], base: &[String]) -> String {
+    let mut rest: &[String] = segs;
+    let mut root: Vec<String> = Vec::new();
+    let head = rest.first().map(String::as_str);
+    if head == Some("crate") || head == Some(CRATE_NAME) {
+        rest = &rest[1..];
+    } else if head == Some("self") {
+        root = base.to_vec();
+        rest = &rest[1..];
+    } else if head == Some("super") {
+        root = base.to_vec();
+        while rest.first().map(String::as_str) == Some("super") {
+            root.pop();
+            rest = &rest[1..];
+        }
+    }
+    let mut out = root;
+    out.extend(rest.iter().cloned());
+    out.join("::")
+}
+
+pub(crate) fn ident_at<'t>(toks: &'t [Token], i: usize) -> Option<&'t str> {
+    match toks.get(i).map(|t| &t.tok) {
+        Some(Tok::Ident(s)) => Some(s.as_str()),
+        _ => None,
+    }
+}
+
+/// Skip a balanced `( .. )` group starting at `open` (on the `(`);
+/// returns the index just past the matching `)`.
+pub(crate) fn skip_paren_group(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = open;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('(') {
+            depth += 1;
+        } else if t.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Skip a balanced `{ .. }` group starting at `open` (on the `{`);
+/// returns the index just past the matching `}`.
+pub(crate) fn skip_brace_group(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = open;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+/// Skip a balanced `< .. >` generics group starting at `open` (on the
+/// `<`); returns the index just past the matching `>`. An `->` inside
+/// (`Fn() -> T` bounds) does not close the group.
+pub(crate) fn skip_angle_group(toks: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i32;
+    let mut j = open;
+    while let Some(t) = toks.get(j) {
+        if t.is_punct('-') && toks.get(j + 1).is_some_and(|u| u.is_punct('>')) {
+            j += 2;
+            continue;
+        }
+        if t.is_punct('<') {
+            depth += 1;
+        } else if t.is_punct('>') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j + 1);
+            }
+        }
+        j += 1;
+    }
+    None
+}
+
+enum ScopeKind {
+    Mod(String),
+    Impl(Option<String>),
+}
+
+struct Scope {
+    kind: ScopeKind,
+    /// Brace depth of the scope's body tokens; the scope pops when the
+    /// walker's depth drops back below it.
+    body_depth: i32,
+}
+
+/// Parse one file's items from its token stream.
+pub fn parse_file(rel: &str, toks: &[Token]) -> FileItems {
+    let base = module_path(rel);
+    let mut out = FileItems { module: base.clone(), ..FileItems::default() };
+    let mut scopes: Vec<Scope> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.is_punct('{') {
+            depth += 1;
+            i += 1;
+            continue;
+        }
+        if t.is_punct('}') {
+            depth -= 1;
+            while scopes.last().is_some_and(|s| s.body_depth > depth) {
+                scopes.pop();
+            }
+            i += 1;
+            continue;
+        }
+        let Tok::Ident(word) = &t.tok else {
+            i += 1;
+            continue;
+        };
+        match word.as_str() {
+            "mod" => {
+                if ident_at(toks, i + 1).is_some()
+                    && toks.get(i + 2).is_some_and(|t| t.is_punct('{'))
+                {
+                    let name = ident_at(toks, i + 1).unwrap_or("").to_string();
+                    scopes.push(Scope { kind: ScopeKind::Mod(name), body_depth: depth + 1 });
+                    i += 2; // lands on `{`, handled by the next iteration
+                } else {
+                    i += 1; // `mod x;` file declaration
+                }
+            }
+            "impl" if at_item_position(toks, i) => match parse_impl_header(toks, i + 1) {
+                Some((qual, brace)) => {
+                    scopes.push(Scope { kind: ScopeKind::Impl(qual), body_depth: depth + 1 });
+                    i = brace; // on `{`
+                }
+                None => i += 1,
+            },
+            "fn" => {
+                if let Some(item) = parse_fn(toks, i, &base, &scopes) {
+                    out.fns.push(item);
+                }
+                // continue just past the name: nested fns inside the
+                // body are discovered by the same walk
+                i += 2;
+            }
+            "use" => {
+                i = parse_use(toks, i + 1, &base, &mut out);
+            }
+            _ => i += 1,
+        }
+    }
+    out
+}
+
+/// Whether the token at `i` starts an item (vs `impl Trait` in a type
+/// position, which follows `->`, `(`, `:`, `<`, `,`, `=`, or `+`).
+fn at_item_position(toks: &[Token], i: usize) -> bool {
+    if i == 0 {
+        return true;
+    }
+    match &toks[i - 1].tok {
+        Tok::Punct(c) => matches!(c, ';' | '}' | '{' | ']'),
+        Tok::Ident(w) => w == "unsafe" || w == "pub",
+        Tok::Str(_) => false,
+    }
+}
+
+/// Parse an `impl` header from just past the keyword: returns the
+/// subject type's last path segment and the index of the body's `{`.
+fn parse_impl_header(toks: &[Token], mut j: usize) -> Option<(Option<String>, usize)> {
+    if toks.get(j).is_some_and(|t| t.is_punct('<')) {
+        j = skip_angle_group(toks, j)?;
+    }
+    let (mut qual, mut k) = parse_type_path(toks, j)?;
+    // `impl Trait for Type` — the type after `for` is the subject
+    if toks.get(k).is_some_and(|t| t.is_ident("for")) {
+        let (q2, k2) = parse_type_path(toks, k + 1)?;
+        qual = q2;
+        k = k2;
+    }
+    // find the body `{` past any where clause (no braces occur before it)
+    let mut b = k;
+    while let Some(t) = toks.get(b) {
+        if t.is_punct('{') {
+            return Some((qual, b));
+        }
+        if t.is_punct(';') {
+            return None;
+        }
+        b += 1;
+    }
+    None
+}
+
+/// Parse a type path (`a::b::Type<..>`), returning its last segment
+/// and the index just past it. Tuple types yield `None` for the name.
+fn parse_type_path(toks: &[Token], mut j: usize) -> Option<(Option<String>, usize)> {
+    while toks
+        .get(j)
+        .is_some_and(|t| t.is_punct('&') || t.is_ident("dyn") || t.is_ident("mut"))
+    {
+        j += 1;
+    }
+    if toks.get(j).is_some_and(|t| t.is_punct('(')) {
+        return Some((None, skip_paren_group(toks, j)?));
+    }
+    let mut last: Option<String> = None;
+    loop {
+        let seg = ident_at(toks, j)?;
+        last = Some(seg.to_string());
+        j += 1;
+        if toks.get(j).is_some_and(|t| t.is_punct('<')) {
+            j = skip_angle_group(toks, j)?;
+        }
+        if toks.get(j).is_some_and(|t| t.is_punct(':'))
+            && toks.get(j + 1).is_some_and(|t| t.is_punct(':'))
+        {
+            j += 2;
+            continue;
+        }
+        return Some((last, j));
+    }
+}
+
+fn parse_fn(toks: &[Token], i: usize, base: &[String], scopes: &[Scope]) -> Option<FnItem> {
+    let name = ident_at(toks, i + 1)?.to_string();
+    let decl_tok = i + 1;
+    let line = toks.get(decl_tok)?.line;
+    // visibility: scan back over fn qualifiers to an optional `pub`
+    let mut is_pub = false;
+    let mut k = i;
+    while k > 0 {
+        k -= 1;
+        match &toks[k].tok {
+            Tok::Ident(w) if matches!(w.as_str(), "const" | "unsafe" | "async" | "extern") => {}
+            Tok::Str(_) => {} // the ABI string of `extern "C"`
+            Tok::Ident(w) if w == "pub" => {
+                is_pub = true;
+                break;
+            }
+            // a `)` here is `pub(crate)`/`pub(super)` — restricted
+            // visibility, not public surface
+            _ => break,
+        }
+    }
+    // parameter list (generics first, if any)
+    let mut j = i + 2;
+    if toks.get(j).is_some_and(|t| t.is_punct('<')) {
+        j = skip_angle_group(toks, j)?;
+    }
+    if !toks.get(j).is_some_and(|t| t.is_punct('(')) {
+        return None;
+    }
+    let has_receiver = receiver_at(toks, j + 1);
+    let after_params = skip_paren_group(toks, j)?;
+    // body: `;` (bodyless trait decl) or `{ .. }`. Brackets are tracked
+    // so the `;` inside `-> [u8; N]` does not end the signature.
+    let mut b = after_params;
+    let mut brackets = 0i32;
+    let body = loop {
+        let t = toks.get(b)?;
+        if t.is_punct('[') {
+            brackets += 1;
+        } else if t.is_punct(']') {
+            brackets -= 1;
+        } else if t.is_punct('(') {
+            b = skip_paren_group(toks, b)?;
+            continue;
+        } else if brackets == 0 && t.is_punct(';') {
+            break None;
+        } else if brackets == 0 && t.is_punct('{') {
+            break Some((b, skip_brace_group(toks, b)?));
+        }
+        b += 1;
+    };
+    let mut module = base.to_vec();
+    let mut qual = None;
+    for s in scopes {
+        match &s.kind {
+            ScopeKind::Mod(m) => module.push(m.clone()),
+            ScopeKind::Impl(q) => qual = q.clone(),
+        }
+    }
+    Some(FnItem {
+        name,
+        qual,
+        module: module.join("::"),
+        line,
+        decl_tok,
+        is_pub,
+        has_receiver,
+        body,
+    })
+}
+
+/// Whether the parameter list starting at `j` (just past `(`) begins
+/// with a `self` receiver, skipping `&`, lifetimes, and `mut`.
+fn receiver_at(toks: &[Token], mut j: usize) -> bool {
+    for _ in 0..6 {
+        let Some(t) = toks.get(j) else { return false };
+        if t.is_punct('&') {
+            j += 1;
+            continue;
+        }
+        let Some(w) = ident_at(toks, j) else { return false };
+        if w == "self" {
+            return true;
+        }
+        // `mut self`, or a lifetime name before `mut`/`self` (the lexer
+        // emits lifetime names as plain idents)
+        let next_is_recv = ident_at(toks, j + 1).is_some_and(|n| n == "self" || n == "mut");
+        if w == "mut" || next_is_recv {
+            j += 1;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Parse one `use` declaration from just past the keyword; returns the
+/// index past the terminating `;`.
+fn parse_use(toks: &[Token], mut i: usize, base: &[String], out: &mut FileItems) -> usize {
+    // leading `::` of an explicitly-external path
+    if toks.get(i).is_some_and(|t| t.is_punct(':'))
+        && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+    {
+        i += 2;
+    }
+    let mut j = use_tree(toks, i, &[], base, out);
+    while let Some(t) = toks.get(j) {
+        if t.is_punct(';') {
+            return j + 1;
+        }
+        // never run away past a malformed tree into item territory
+        if t.is_punct('{') || t.is_punct('}') {
+            return j;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Recursive descent over one `use`-tree node; returns the index past it.
+fn use_tree(
+    toks: &[Token],
+    mut i: usize,
+    prefix: &[String],
+    base: &[String],
+    out: &mut FileItems,
+) -> usize {
+    let mut segs: Vec<String> = prefix.to_vec();
+    loop {
+        if toks.get(i).is_some_and(|t| t.is_punct('*')) {
+            out.globs.push(resolve_path(&segs, base));
+            return i + 1;
+        }
+        if toks.get(i).is_some_and(|t| t.is_punct('{')) {
+            i += 1;
+            loop {
+                i = use_tree(toks, i, &segs, base, out);
+                if toks.get(i).is_some_and(|t| t.is_punct(',')) {
+                    i += 1;
+                    continue;
+                }
+                if toks.get(i).is_some_and(|t| t.is_punct('}')) {
+                    return i + 1;
+                }
+                return i; // malformed: bail without consuming further
+            }
+        }
+        let Some(seg) = ident_at(toks, i) else { return i };
+        let seg = seg.to_string();
+        segs.push(seg.clone());
+        i += 1;
+        if toks.get(i).is_some_and(|t| t.is_punct(':'))
+            && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+        {
+            i += 2;
+            continue;
+        }
+        // path ends here: optional `as` rename
+        let mut alias = seg.clone();
+        if toks.get(i).is_some_and(|t| t.is_ident("as")) {
+            if let Some(re) = ident_at(toks, i + 1) {
+                alias = re.to_string();
+                i += 2;
+            }
+        }
+        // `use x::{self, y}`: `self` imports the parent module name
+        if seg == "self" {
+            segs.pop();
+            if alias == "self" {
+                match segs.last() {
+                    Some(parent) => alias = parent.clone(),
+                    None => return i,
+                }
+            }
+        }
+        out.uses.insert(alias, resolve_path(&segs, base));
+        return i;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::lexer::lex;
+
+    fn parse(rel: &str, src: &str) -> FileItems {
+        parse_file(rel, &lex(src))
+    }
+
+    #[test]
+    fn module_paths_follow_file_layout() {
+        assert_eq!(module_path("rust/src/lib.rs"), Vec::<String>::new());
+        assert_eq!(module_path("rust/src/dse/journal.rs"), vec!["dse", "journal"]);
+        assert_eq!(module_path("rust/src/analysis/mod.rs"), vec!["analysis"]);
+        assert_eq!(module_path("rust/tests/lint.rs"), Vec::<String>::new());
+    }
+
+    #[test]
+    fn fns_record_visibility_receiver_and_qual() {
+        let src = "\
+pub struct S;\n\
+impl S {\n\
+    pub fn new() -> S { S }\n\
+    pub(crate) fn helper(&self) {}\n\
+    fn private(&mut self, x: u32) -> u32 { x }\n\
+}\n\
+pub fn free() {}\n\
+fn hidden<'a>(s: &'a str) -> &'a str { s }\n";
+        let items = parse("rust/src/util/s.rs", src);
+        let by_name = |n: &str| items.fns.iter().find(|f| f.name == n);
+        let new = by_name("new").expect("new parsed");
+        assert!(new.is_pub && !new.has_receiver);
+        assert_eq!(new.qual.as_deref(), Some("S"));
+        assert_eq!(new.path(), "util::s::S::new");
+        let helper = by_name("helper").expect("helper parsed");
+        assert!(!helper.is_pub, "pub(crate) is not public surface");
+        assert!(helper.has_receiver);
+        let private = by_name("private").expect("private parsed");
+        assert!(private.has_receiver, "&mut self is a receiver");
+        let free = by_name("free").expect("free parsed");
+        assert!(free.is_pub && free.qual.is_none());
+        let hidden = by_name("hidden").expect("hidden parsed");
+        assert!(!hidden.has_receiver, "lifetime-generic fn, plain arg");
+    }
+
+    #[test]
+    fn trait_impls_attribute_methods_to_the_subject_type() {
+        let src = "\
+impl std::fmt::Display for Wide<u8> {\n\
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result { Ok(()) }\n\
+}\n\
+fn after() {}\n";
+        let items = parse("rust/src/util/w.rs", src);
+        let fmt = items.fns.iter().find(|f| f.name == "fmt").expect("fmt parsed");
+        assert_eq!(fmt.qual.as_deref(), Some("Wide"));
+        let after = items.fns.iter().find(|f| f.name == "after").expect("after parsed");
+        assert_eq!(after.qual, None, "impl scope popped at its closing brace");
+    }
+
+    #[test]
+    fn use_maps_resolve_crate_self_super_and_renames() {
+        let src = "\
+use crate::dse::{Campaign, journal::Journal as J};\n\
+use super::backend;\n\
+use self::helpers::*;\n\
+use std::collections::BTreeMap;\n\
+use scale_sim::engine::Engine;\n";
+        let items = parse("rust/src/engine/cache.rs", src);
+        assert_eq!(items.uses.get("Campaign").map(String::as_str), Some("dse::Campaign"));
+        assert_eq!(items.uses.get("J").map(String::as_str), Some("dse::journal::Journal"));
+        assert_eq!(items.uses.get("backend").map(String::as_str), Some("engine::backend"));
+        assert_eq!(items.globs, vec!["engine::cache::helpers".to_string()]);
+        assert_eq!(
+            items.uses.get("BTreeMap").map(String::as_str),
+            Some("std::collections::BTreeMap"),
+            "external paths keep their head"
+        );
+        assert_eq!(items.uses.get("Engine").map(String::as_str), Some("engine::Engine"));
+    }
+
+    #[test]
+    fn bodyless_trait_decls_and_nested_fns() {
+        let src = "\
+pub trait Backend {\n\
+    fn simulate(&self, x: u32) -> u32;\n\
+    fn tag(&self) -> [u8; 4] { *b\"none\" }\n\
+}\n\
+fn outer() {\n\
+    fn inner() {}\n\
+    inner();\n\
+}\n";
+        let items = parse("rust/src/engine/b.rs", src);
+        let sim = items.fns.iter().find(|f| f.name == "simulate").expect("decl parsed");
+        assert_eq!(sim.body, None, "bodyless decl");
+        let tag = items.fns.iter().find(|f| f.name == "tag").expect("tag parsed");
+        assert!(tag.body.is_some(), "the `;` in [u8; 4] does not end the default body");
+        assert!(items.fns.iter().any(|f| f.name == "inner"), "nested fn discovered");
+    }
+}

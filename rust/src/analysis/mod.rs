@@ -10,22 +10,35 @@
 //!   syn/clippy: the offline build bans external crates), producing
 //!   identifier/punct/string tokens with line numbers and guaranteed
 //!   free of comment text.
-//! * [`rules`] — the five rule visitors (R1 determinism, R2 lock
+//! * [`rules`] — the per-file rule visitors (R1 determinism, R2 lock
 //!   discipline, R3 shim boundary, R4 panic hygiene, R5 golden-bless
-//!   hygiene) with their exemption matrix.
+//!   hygiene) with their exemption matrix, plus the interprocedural
+//!   families that run over the whole crate at once: R6 lock-order /
+//!   transitive lock discipline, R7 two-timeline unit taint, R8
+//!   reachability / dead-surface drift.
+//! * [`items`] — a lightweight item parser over the lexer: fn / impl /
+//!   mod boundaries, `use` alias maps, receiver detection.
+//! * [`callgraph`] — crate-wide call-edge resolution (free calls,
+//!   qualified paths, method-name heuristics) with explicit confidence.
+//! * [`taint`] — cycle- / wall- / byte-class classification of
+//!   identifiers for R7.
 //! * [`baseline`] — the checked-in ratchet (`lint.baseline`): existing
 //!   violations are enumerated, new ones fail CI, fixed ones must be
 //!   removed, so the count monotonically decreases.
-//! * [`report`] — clickable `file:line:` diagnostic rendering.
+//! * [`report`] — clickable `file:line:` diagnostic rendering and the
+//!   `--format json` encoding.
 //!
 //! The pass lints itself: this module is `rust/src/` library code and
 //! therefore subject to every rule it implements — which is why it
 //! contains no `unwrap`/`expect`/`panic!` and no `HashMap`.
 
 pub mod baseline;
+pub mod callgraph;
+pub mod items;
 pub mod lexer;
 pub mod report;
 pub mod rules;
+pub mod taint;
 
 use std::path::{Path, PathBuf};
 
@@ -58,7 +71,13 @@ pub fn collect_sources(root: &Path) -> Result<Vec<String>> {
 fn walk(dir: &Path, root: &Path, out: &mut Vec<String>) -> Result<()> {
     for entry in std::fs::read_dir(dir)? {
         let path = entry?.path();
-        let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+        // A non-UTF-8 file name can never be part of the corpus (every
+        // checked-in source has an ASCII name) and could not be rendered
+        // in a finding path anyway — skip it outright rather than
+        // letting it bypass the excluded-component check as "".
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
         if EXCLUDED_COMPONENTS.contains(&name) {
             continue;
         }
@@ -93,13 +112,28 @@ pub fn lint_root(root: &Path) -> Result<Vec<Finding>> {
             root.display()
         )));
     }
-    let mut out = Vec::new();
-    for rel in &files {
-        let text = std::fs::read_to_string(root.join(rel))?;
-        out.extend(lint_source(rel, &text));
+    let mut sources = Vec::with_capacity(files.len());
+    for rel in files {
+        let text = std::fs::read_to_string(root.join(&rel))?;
+        sources.push((rel, text));
     }
-    // lint_source sorts within a file; files arrive sorted
-    Ok(out)
+    Ok(lint_crate(&sources))
+}
+
+/// Lint an in-memory crate: per-file rules (R1–R5) plus the
+/// interprocedural families (R6–R8) that need every file at once.
+/// `sources` holds `(root-relative path, text)` pairs; findings come
+/// back sorted by (file, line, rule).
+pub fn lint_crate(sources: &[(String, String)]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (rel, text) in sources {
+        out.extend(lint_source(rel, text));
+    }
+    out.extend(rules::lint_interprocedural(sources));
+    out.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    out
 }
 
 /// Number of files [`lint_root`] would scan (for the summary line).
@@ -143,5 +177,36 @@ mod tests {
     fn missing_baseline_is_the_empty_baseline() {
         let b = load_baseline(Path::new("/nonexistent/lint.baseline")).unwrap();
         assert_eq!(b.total(), 0);
+    }
+
+    /// Regression: a directory entry whose file name is not valid UTF-8
+    /// used to fall through the excluded-component check as `""` and be
+    /// treated as lintable. The walk must skip it — and must still skip
+    /// `lint_fixtures` alongside it.
+    #[cfg(unix)]
+    #[test]
+    fn walk_skips_non_utf8_names_and_excluded_components() {
+        use std::os::unix::ffi::OsStrExt;
+        let root = std::env::temp_dir()
+            .join(format!("scale_sim_lint_walk_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&root);
+        let src = root.join("rust/src");
+        std::fs::create_dir_all(&src).unwrap();
+        std::fs::write(src.join("lib.rs"), "pub fn ok() {}\n").unwrap();
+        // seeded violation inside the excluded fixture dir
+        let fx = root.join("rust/tests/lint_fixtures");
+        std::fs::create_dir_all(&fx).unwrap();
+        std::fs::write(fx.join("bad.rs"), "fn f() { panic!(\"x\") }\n").unwrap();
+        // a file whose name is invalid UTF-8 (lone 0x80 byte)
+        let weird = src.join(std::ffi::OsStr::from_bytes(b"weird_\x80.rs"));
+        std::fs::write(&weird, "fn g() { panic!(\"x\") }\n").unwrap();
+        // a directory with a non-UTF-8 name containing a source
+        let weird_dir = src.join(std::ffi::OsStr::from_bytes(b"dir_\x80"));
+        std::fs::create_dir_all(&weird_dir).unwrap();
+        std::fs::write(weird_dir.join("inner.rs"), "fn h() {}\n").unwrap();
+
+        let files = collect_sources(&root).unwrap();
+        assert_eq!(files, vec!["rust/src/lib.rs".to_string()], "{files:?}");
+        std::fs::remove_dir_all(&root).unwrap();
     }
 }

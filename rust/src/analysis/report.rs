@@ -1,8 +1,10 @@
 //! Diagnostic rendering for `scale-sim lint` — stable, grep-able,
-//! clickable `file:line:` text output.
+//! clickable `file:line:` text output, plus the `--format json`
+//! machine encoding (byte-deterministic: same sources, same bytes).
 
 use super::baseline::Drift;
-use super::rules::Finding;
+use super::rules::{Finding, RuleId};
+use crate::util::json::Json;
 
 /// Render every finding, one diagnostic per line.
 pub fn render_findings(findings: &[Finding]) -> String {
@@ -46,6 +48,60 @@ pub fn render_drift(drift: &[Drift], findings: &[Finding]) -> String {
     out
 }
 
+/// Encode findings as one JSON document (trailing newline included):
+/// `{"findings":[{"rule":"R2","slug":"lock-discipline","file":..,
+/// "line":N,"message":..},..]}`. Key order is fixed and element order
+/// follows the (already sorted) findings slice, so the output is
+/// byte-identical across runs and machines — safe to diff in CI.
+pub fn findings_to_json(findings: &[Finding]) -> String {
+    let items: Vec<Json> = findings
+        .iter()
+        .map(|f| {
+            Json::obj(vec![
+                ("rule", Json::str(f.rule.code())),
+                ("slug", Json::str(f.rule.slug())),
+                ("file", Json::str(f.file.as_str())),
+                ("line", Json::u64(u64::from(f.line))),
+                ("message", Json::str(f.message.as_str())),
+            ])
+        })
+        .collect();
+    let mut out = Json::obj(vec![("findings", Json::Arr(items))]).to_string();
+    out.push('\n');
+    out
+}
+
+/// Decode [`findings_to_json`] output — the round-trip is pinned by
+/// tests so downstream tooling can rely on the schema.
+pub fn findings_from_json(text: &str) -> Result<Vec<Finding>, String> {
+    let doc = Json::parse(text)?;
+    let arr = doc
+        .get("findings")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "missing `findings` array".to_string())?;
+    let mut out = Vec::with_capacity(arr.len());
+    for item in arr {
+        let rule = item
+            .str_field("rule")
+            .and_then(RuleId::parse)
+            .ok_or_else(|| "missing or unknown `rule` code".to_string())?;
+        let file = item
+            .str_field("file")
+            .ok_or_else(|| "missing `file`".to_string())?
+            .to_string();
+        let line = item
+            .u64_field("line")
+            .and_then(|l| u32::try_from(l).ok())
+            .ok_or_else(|| "missing `line`".to_string())?;
+        let message = item
+            .str_field("message")
+            .ok_or_else(|| "missing `message`".to_string())?
+            .to_string();
+        out.push(Finding { rule, file, line, message });
+    }
+    Ok(out)
+}
+
 /// One-line pass summary.
 pub fn summary(files: usize, findings: usize, baselined: u64) -> String {
     format!(
@@ -68,6 +124,38 @@ mod tests {
         };
         let text = render_findings(&[f]);
         assert_eq!(text, "rust/src/a.rs:17: R4[panic-hygiene]: bad\n");
+    }
+
+    #[test]
+    fn json_encoding_round_trips_byte_exactly() {
+        let findings = vec![
+            Finding {
+                rule: RuleId::R6,
+                file: "rust/src/a.rs".into(),
+                line: 3,
+                message: "guard `g` held across call to `b::locks`".into(),
+            },
+            Finding {
+                rule: RuleId::R7,
+                file: "rust/src/b.rs".into(),
+                line: 9,
+                message: "mixes \"cycle\" and wall-time values".into(),
+            },
+        ];
+        let text = findings_to_json(&findings);
+        assert!(text.ends_with('\n'));
+        let back = findings_from_json(&text).unwrap();
+        assert_eq!(back, findings);
+        assert_eq!(findings_to_json(&back), text, "encode is a fixpoint");
+    }
+
+    #[test]
+    fn json_decoding_rejects_malformed_documents() {
+        assert!(findings_from_json("{}").is_err());
+        assert!(findings_from_json("{\"findings\":[{\"rule\":\"R99\"}]}").is_err());
+        assert!(findings_from_json("not json").is_err());
+        let empty = findings_from_json("{\"findings\":[]}").unwrap();
+        assert!(empty.is_empty());
     }
 
     #[test]

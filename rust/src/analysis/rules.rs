@@ -12,15 +12,31 @@
 //! | R3 `shim-boundary`   | engine-era modules never call the deprecated pre-engine shims |
 //! | R4 `panic-hygiene`   | no `unwrap()`/`expect()`/`panic!` in library code |
 //! | R5 `golden-bless`    | `BLESS_GOLDEN` is only read inside `rust/tests/golden*` |
+//! | R6 `lock-order`      | no guard held across a callee that (transitively) locks or does I/O; the global lock-order graph is acyclic |
+//! | R7 `unit-taint`      | cycle-, wall-, and byte-valued quantities never mix in arithmetic or flow into the wrong metric sink |
+//! | R8 `dead-surface`    | every protocol Request variant and CLI subcommand reaches a handler; no unreachable pub library fn |
 //!
-//! `#[cfg(test)]` regions are exempt from R1–R4 (tests may use
-//! HashMaps, unwrap freely, and call shims to pin their equivalence);
-//! R5 applies everywhere because a stray bless hook in a unit test is
-//! exactly the bug the rule exists to catch.
+//! R1–R5 are per-file ([`lint_source`]); R6–R8 are **interprocedural**
+//! ([`lint_interprocedural`]) — they parse every file's items, build
+//! the crate call graph ([`super::callgraph`]) and propagate effects
+//! along it, catching exactly the violations a single-function token
+//! scan provably cannot (a guard held across a call into a function
+//! that locks two files away).
+//!
+//! `#[cfg(test)]` regions are exempt from R1–R4 and R6–R7 (tests may
+//! use HashMaps, unwrap freely, and call shims to pin their
+//! equivalence); R5 applies everywhere because a stray bless hook in a
+//! unit test is exactly the bug the rule exists to catch, and R8
+//! treats test code as reachability *roots*.
 
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::callgraph::{self, Graph, ParsedSource};
+use super::items::{self, FnItem};
 use super::lexer::{lex, Tok, Token};
+use super::taint::{classify_ident, UnitClass};
 
-/// Rule identifier — `R1`..`R5`, ordered.
+/// Rule identifier — `R1`..`R8`, ordered.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum RuleId {
     R1,
@@ -28,10 +44,22 @@ pub enum RuleId {
     R3,
     R4,
     R5,
+    R6,
+    R7,
+    R8,
 }
 
 impl RuleId {
-    pub const ALL: [RuleId; 5] = [RuleId::R1, RuleId::R2, RuleId::R3, RuleId::R4, RuleId::R5];
+    pub const ALL: [RuleId; 8] = [
+        RuleId::R1,
+        RuleId::R2,
+        RuleId::R3,
+        RuleId::R4,
+        RuleId::R5,
+        RuleId::R6,
+        RuleId::R7,
+        RuleId::R8,
+    ];
 
     /// Short code used in baseline lines (`R1`).
     pub fn code(self) -> &'static str {
@@ -41,6 +69,9 @@ impl RuleId {
             RuleId::R3 => "R3",
             RuleId::R4 => "R4",
             RuleId::R5 => "R5",
+            RuleId::R6 => "R6",
+            RuleId::R7 => "R7",
+            RuleId::R8 => "R8",
         }
     }
 
@@ -52,6 +83,9 @@ impl RuleId {
             RuleId::R3 => "shim-boundary",
             RuleId::R4 => "panic-hygiene",
             RuleId::R5 => "golden-bless",
+            RuleId::R6 => "lock-order",
+            RuleId::R7 => "unit-taint",
+            RuleId::R8 => "dead-surface",
         }
     }
 
@@ -206,7 +240,7 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
 /// Mark every token inside a `#[cfg(test)]` item (a `mod { .. }`,
 /// `fn { .. }`, `impl { .. }` body, or a `use ..;`). Returns one bool
 /// per token: `true` = test-only code.
-fn test_region_mask(toks: &[Token]) -> Vec<bool> {
+pub(crate) fn test_region_mask(toks: &[Token]) -> Vec<bool> {
     let mut mask = vec![false; toks.len()];
     let mut i = 0usize;
     while i < toks.len() {
@@ -642,6 +676,656 @@ fn rule_r5(rel: &str, toks: &[Token], out: &mut Vec<Finding>) {
     }
 }
 
+// ------------------------------------------------- interprocedural
+
+/// Effect summary of one fn: the lock identities it (transitively)
+/// acquires and whether it (transitively) performs guarded I/O.
+#[derive(Clone, Debug, Default)]
+struct FnEffects {
+    locks: BTreeSet<String>,
+    io: bool,
+}
+
+/// Run the interprocedural rule families (R6–R8) over the whole crate:
+/// parse every file's items, build the call graph, propagate lock/I-O
+/// effects along confident edges, then apply the three rule drivers.
+/// `sources` holds `(root-relative path, text)` pairs; findings come
+/// back unsorted ([`super::lint_crate`] orders them globally).
+pub fn lint_interprocedural(sources: &[(String, String)]) -> Vec<Finding> {
+    let files: Vec<ParsedSource> = sources
+        .iter()
+        .map(|(rel, text)| {
+            let toks = lex(text);
+            let test_mask = test_region_mask(&toks);
+            let parsed = items::parse_file(rel, &toks);
+            ParsedSource { rel: rel.clone(), toks, test_mask, items: parsed }
+        })
+        .collect();
+    let graph = callgraph::build(&files);
+    let mut out = Vec::new();
+    rule_r6(&files, &graph, &mut out);
+    for f in &files {
+        rule_r7(f, &mut out);
+    }
+    rule_r8(&files, &graph, &mut out);
+    out
+}
+
+fn prod_at(file: &ParsedSource, i: usize) -> bool {
+    !file.test_mask.get(i).copied().unwrap_or(false)
+}
+
+// ---------------------------------------------------------------- R6
+
+fn rule_r6(files: &[ParsedSource], graph: &Graph, out: &mut Vec<Finding>) {
+    // 1. direct per-fn effects
+    let mut eff: Vec<FnEffects> = graph
+        .fns
+        .iter()
+        .map(|node| direct_effects(&files[node.file], &node.item))
+        .collect();
+    // 2. propagate to a fixpoint along *confident* edges only — an
+    //    ambiguous edge feeding propagation would invent findings
+    loop {
+        let mut changed = false;
+        for e in &graph.edges {
+            if !e.confident {
+                continue;
+            }
+            let callee = eff[e.to].clone();
+            let caller = &mut eff[e.from];
+            if callee.io && !caller.io {
+                caller.io = true;
+                changed = true;
+            }
+            for l in callee.locks {
+                if caller.locks.insert(l) {
+                    changed = true;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+    // 3. per-guard span scans + lock-order edge collection
+    let mut order: BTreeMap<(String, String), (String, u32)> = BTreeMap::new();
+    for (gid, node) in graph.fns.iter().enumerate() {
+        let file = &files[node.file];
+        if matches!(classify(&file.rel), FileClass::Test | FileClass::Bench) {
+            continue;
+        }
+        if !prod_at(file, node.item.decl_tok) {
+            continue;
+        }
+        guard_spans(file, &node.item, gid, graph, &eff, &mut order, out);
+    }
+    // 4. cycles in the global lock-order graph
+    order_cycles(&order, out);
+}
+
+/// Token-level effects of one fn body (prod tokens only).
+fn direct_effects(file: &ParsedSource, item: &FnItem) -> FnEffects {
+    let mut eff = FnEffects::default();
+    let Some((b0, b1)) = item.body else { return eff };
+    let toks = &file.toks;
+    for j in b0..b1.min(toks.len()) {
+        if !prod_at(file, j) || !toks[j].is_punct('.') {
+            continue;
+        }
+        if let Some(id) = lock_acquisition_at(toks, j, item.qual.as_deref()) {
+            eff.locks.insert(id);
+        }
+        if let Some(name) = ident_at(toks, j + 1) {
+            if toks.get(j + 2).is_some_and(|t| t.is_punct('(')) && GUARDED_IO_CALLS.contains(&name)
+            {
+                eff.io = true;
+            }
+        }
+    }
+    eff
+}
+
+/// If the `.` at `dot` begins a zero-argument `lock()`/`read()`/
+/// `write()` acquisition, return the lock's identity: the receiver's
+/// ident chain (leading `self` replaced by the impl type), dot-joined —
+/// `self.state.lock()` inside `impl Shared` is `"Shared.state"`.
+/// Non-ident receivers (`(*x).lock()`, `helper().lock()`) return
+/// `None`: better to miss an order edge than to invent one.
+fn lock_acquisition_at(toks: &[Token], dot: usize, qual: Option<&str>) -> Option<String> {
+    let name = ident_at(toks, dot + 1)?;
+    if !matches!(name, "lock" | "read" | "write") {
+        return None;
+    }
+    if !(toks.get(dot + 2).is_some_and(|t| t.is_punct('('))
+        && toks.get(dot + 3).is_some_and(|t| t.is_punct(')')))
+    {
+        return None;
+    }
+    let mut segs: Vec<String> = Vec::new();
+    let mut k = dot; // toks[k] is the `.` whose receiver chain we walk
+    loop {
+        let Some(id) = k.checked_sub(1).and_then(|p| ident_at(toks, p)) else {
+            return None;
+        };
+        segs.push(id.to_string());
+        if k >= 3 && toks[k - 2].is_punct('.') && ident_at(toks, k - 3).is_some() {
+            k -= 2;
+        } else {
+            break;
+        }
+    }
+    segs.reverse();
+    if segs.first().map(String::as_str) == Some("self") {
+        if let Some(q) = qual {
+            segs[0] = q.to_string();
+        }
+    }
+    Some(segs.join("."))
+}
+
+/// Find `let`-bound guards in one fn body; flag confident calls into
+/// lock-acquiring or I/O-performing callees made while the guard is
+/// held, and record lock-order edges for the global cycle check.
+fn guard_spans(
+    file: &ParsedSource,
+    item: &FnItem,
+    gid: usize,
+    graph: &Graph,
+    eff: &[FnEffects],
+    order: &mut BTreeMap<(String, String), (String, u32)>,
+    out: &mut Vec<Finding>,
+) {
+    let Some((b0, b1)) = item.body else { return };
+    let toks = &file.toks;
+    let no_edges: Vec<usize> = Vec::new();
+    let edge_ids = graph.calls_from.get(&gid).unwrap_or(&no_edges);
+    let mut i = b0;
+    while i < b1.min(toks.len()) {
+        if !(prod_at(file, i) && toks[i].is_ident("let")) {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 1;
+        if toks.get(j).is_some_and(|t| t.is_ident("mut")) {
+            j += 1;
+        }
+        let Some(guard) = ident_at(toks, j).map(str::to_string) else {
+            i += 1;
+            continue;
+        };
+        let Some((semi, acquires)) = initializer_acquires_guard(toks, j + 1) else {
+            i += 1;
+            continue;
+        };
+        if !acquires {
+            i = semi + 1;
+            continue;
+        }
+        // identity of the held lock: last acquisition in the initializer
+        let mut held: Option<String> = None;
+        for d in j + 1..semi {
+            if toks[d].is_punct('.') {
+                if let Some(id) = lock_acquisition_at(toks, d, item.qual.as_deref()) {
+                    held = Some(id);
+                }
+            }
+        }
+        let end = guard_span_end(toks, &guard, semi + 1, b1);
+        // direct second acquisitions inside the span: R2 flags the
+        // violation itself; R6 records only the ordering
+        if let Some(h) = &held {
+            for d in semi + 1..end {
+                if !toks[d].is_punct('.') {
+                    continue;
+                }
+                if let Some(id) = lock_acquisition_at(toks, d, item.qual.as_deref()) {
+                    record_order(order, h, &id, &file.rel, toks[d].line);
+                }
+            }
+        }
+        // confident calls made while the guard is held
+        let mut call_flagged = false;
+        let mut io_flagged = false;
+        for &ei in edge_ids {
+            let e = &graph.edges[ei];
+            if !e.confident || e.tok <= semi || e.tok >= end {
+                continue;
+            }
+            let callee = &graph.fns[e.to].item;
+            let ce = &eff[e.to];
+            if !ce.locks.is_empty() {
+                if !call_flagged {
+                    call_flagged = true;
+                    let locks: Vec<&str> = ce.locks.iter().map(String::as_str).collect();
+                    out.push(Finding {
+                        rule: RuleId::R6,
+                        file: file.rel.clone(),
+                        line: e.line,
+                        message: format!(
+                            "lock guard `{guard}` held across call to `{}`, which \
+                             (transitively) acquires {} — invisible to the \
+                             same-function scan (R2); drop the guard before the call",
+                            callee.path(),
+                            locks.join(", "),
+                        ),
+                    });
+                }
+                if let Some(h) = &held {
+                    for l in &ce.locks {
+                        record_order(order, h, l, &file.rel, e.line);
+                    }
+                }
+            }
+            if ce.io && !io_flagged {
+                io_flagged = true;
+                out.push(Finding {
+                    rule: RuleId::R6,
+                    file: file.rel.clone(),
+                    line: e.line,
+                    message: format!(
+                        "lock guard `{guard}` held across call to `{}`, which \
+                         (transitively) performs I/O — a slow peer stalls every \
+                         thread contending on this lock",
+                        callee.path(),
+                    ),
+                });
+            }
+        }
+        i = semi + 1;
+    }
+}
+
+/// Index of the first token at which the guard bound before `start` is
+/// no longer live: the enclosing block's `}`, an explicit
+/// `drop(guard)`, or the body end.
+fn guard_span_end(toks: &[Token], guard: &str, start: usize, body_end: usize) -> usize {
+    let mut depth = 0i32;
+    let mut j = start;
+    while j < body_end.min(toks.len()) {
+        let t = &toks[j];
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth < 0 {
+                return j;
+            }
+        } else if t.is_ident("drop")
+            && toks.get(j + 1).is_some_and(|t| t.is_punct('('))
+            && ident_at(toks, j + 2) == Some(guard)
+            && toks.get(j + 3).is_some_and(|t| t.is_punct(')'))
+        {
+            return j;
+        }
+        j += 1;
+    }
+    j
+}
+
+/// Record one lock-order edge, keeping the lexicographically smallest
+/// site per edge (deterministic finding anchors across runs).
+fn record_order(
+    order: &mut BTreeMap<(String, String), (String, u32)>,
+    from: &str,
+    to: &str,
+    rel: &str,
+    line: u32,
+) {
+    if from == to {
+        return; // double-lock: reported as a finding, not an ordering
+    }
+    let key = (from.to_string(), to.to_string());
+    let site = (rel.to_string(), line);
+    match order.get(&key) {
+        Some(existing) if *existing <= site => {}
+        _ => {
+            order.insert(key, site);
+        }
+    }
+}
+
+/// Walk the lock-order graph from `start`; returns every node
+/// reachable through at least one edge.
+fn order_reach<'a>(
+    adj: &BTreeMap<&'a str, BTreeSet<&'a str>>,
+    start: &str,
+) -> BTreeSet<&'a str> {
+    let mut seen: BTreeSet<&'a str> = BTreeSet::new();
+    let mut queue: Vec<&str> = vec![start];
+    while let Some(n) = queue.pop() {
+        if let Some(next) = adj.get(n) {
+            for &m in next {
+                if seen.insert(m) {
+                    queue.push(m);
+                }
+            }
+        }
+    }
+    seen
+}
+
+/// Fail on any strongly-connected component of size > 1 in the global
+/// lock-order graph: two locks mutually ordered means two threads can
+/// take them in opposite orders and deadlock.
+fn order_cycles(order: &BTreeMap<(String, String), (String, u32)>, out: &mut Vec<Finding>) {
+    let mut adj: BTreeMap<&str, BTreeSet<&str>> = BTreeMap::new();
+    for (from, to) in order.keys() {
+        adj.entry(from).or_default().insert(to);
+        adj.entry(to).or_default();
+    }
+    let nodes: Vec<&str> = adj.keys().copied().collect();
+    let mut assigned: BTreeSet<&str> = BTreeSet::new();
+    for node in nodes {
+        if assigned.contains(node) {
+            continue;
+        }
+        let fwd = order_reach(&adj, node);
+        if !fwd.contains(node) {
+            continue; // no cycle through this node
+        }
+        let scc: BTreeSet<&str> = fwd
+            .iter()
+            .copied()
+            .filter(|&m| order_reach(&adj, m).contains(node))
+            .collect();
+        assigned.extend(scc.iter().copied());
+        if scc.len() < 2 {
+            continue; // self-edges are filtered at record time
+        }
+        // anchor at the smallest site among the component's edges
+        let mut site: Option<&(String, u32)> = None;
+        for ((f, t), s) in order {
+            if scc.contains(f.as_str()) && scc.contains(t.as_str()) {
+                match site {
+                    Some(cur) if cur <= s => {}
+                    _ => site = Some(s),
+                }
+            }
+        }
+        let Some((file, line)) = site else { continue };
+        let ring: Vec<&str> = scc.iter().copied().collect();
+        let mut cycle = ring.join(" -> ");
+        cycle.push_str(" -> ");
+        cycle.push_str(ring[0]);
+        out.push(Finding {
+            rule: RuleId::R6,
+            file: file.clone(),
+            line: *line,
+            message: format!(
+                "lock-order cycle: {cycle} — threads acquiring these locks in \
+                 different orders can deadlock; pick one global order"
+            ),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- R7
+
+/// Files exempt from R7: span payloads in `obs/trace.rs` deliberately
+/// carry simulated cycles in wire fields whose names say `us`
+/// (documented there — the trace *renders* cycles on a time axis).
+const TAINT_EXEMPT: [&str; 1] = ["rust/src/obs/trace.rs"];
+
+fn rule_r7(file: &ParsedSource, out: &mut Vec<Finding>) {
+    if matches!(classify(&file.rel), FileClass::Test | FileClass::Bench)
+        || TAINT_EXEMPT.contains(&file.rel.as_str())
+    {
+        return;
+    }
+    let toks = &file.toks;
+    for (i, t) in toks.iter().enumerate() {
+        if !prod_at(file, i) {
+            continue;
+        }
+        match &t.tok {
+            Tok::Punct(op @ ('+' | '-')) => {
+                // `->` return arrows are not subtraction
+                if *op == '-' && toks.get(i + 1).is_some_and(|t| t.is_punct('>')) {
+                    continue;
+                }
+                let Some(lhs) = i.checked_sub(1).and_then(|p| ident_at(toks, p)) else {
+                    continue;
+                };
+                let Some(a) = classify_ident(lhs) else { continue };
+                // `a += b` lexes as `+` `=`; the operand is one further on
+                let mut j = i + 1;
+                if toks.get(j).is_some_and(|t| t.is_punct('=')) {
+                    j += 1;
+                }
+                if ident_at(toks, j).is_none() {
+                    continue;
+                }
+                // follow the dotted chain to its final field/method name
+                while toks.get(j + 1).is_some_and(|t| t.is_punct('.'))
+                    && ident_at(toks, j + 2).is_some()
+                {
+                    j += 2;
+                }
+                let Some(rhs) = ident_at(toks, j) else { continue };
+                let Some(b) = classify_ident(rhs) else { continue };
+                if a != b {
+                    out.push(Finding {
+                        rule: RuleId::R7,
+                        file: file.rel.clone(),
+                        line: t.line,
+                        message: format!(
+                            "`{lhs}` is {}-valued but `{rhs}` is {}-valued — the two \
+                             timelines (and byte counts) must not meet in arithmetic; \
+                             convert explicitly or rename the mislabelled quantity",
+                            a.name(),
+                            b.name(),
+                        ),
+                    });
+                }
+            }
+            Tok::Ident(sink)
+                if matches!(sink.as_str(), "observe_seconds" | "observe_simulate_latency") =>
+            {
+                // a call site, not the method's own declaration
+                if !toks.get(i + 1).is_some_and(|t| t.is_punct('(')) {
+                    continue;
+                }
+                if i.checked_sub(1).and_then(|p| ident_at(toks, p)) == Some("fn") {
+                    continue;
+                }
+                let Some(close) = skip_parens(toks, i + 1) else { continue };
+                for j in i + 2..close - 1 {
+                    if let Some(arg) = ident_at(toks, j) {
+                        if classify_ident(arg) == Some(UnitClass::Cycles) {
+                            out.push(Finding {
+                                rule: RuleId::R7,
+                                file: file.rel.clone(),
+                                line: toks[j].line,
+                                message: format!(
+                                    "cycle-valued `{arg}` fed to wall-time sink \
+                                     `{sink}` — simulated time in a wall-clock \
+                                     histogram renders latency dashboards wrong"
+                                ),
+                            });
+                            break;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------- R8
+
+fn rule_r8(files: &[ParsedSource], graph: &Graph, out: &mut Vec<Finding>) {
+    r8_proto_variants(files, out);
+    // reachability roots: every fn in a binary/test/bench file, every
+    // #[cfg(test)] fn in a lib file, and every item-level mention
+    let mut roots: BTreeSet<usize> = graph.top_mentions.clone();
+    let mut main_fns: Vec<usize> = Vec::new();
+    for (gid, node) in graph.fns.iter().enumerate() {
+        let file = &files[node.file];
+        let class = classify(&file.rel);
+        match class {
+            FileClass::Main | FileClass::Test | FileClass::Bench => {
+                roots.insert(gid);
+                if class == FileClass::Main {
+                    main_fns.push(gid);
+                }
+            }
+            _ => {
+                if !prod_at(file, node.item.decl_tok) {
+                    roots.insert(gid);
+                }
+            }
+        }
+    }
+    let live = graph.reachable(&roots);
+    // (b) CLI dispatch: cmd_* handlers must be reachable from main itself
+    let main_roots: BTreeSet<usize> = main_fns
+        .iter()
+        .copied()
+        .filter(|&g| graph.fns[g].item.name == "main")
+        .collect();
+    let from_main = graph.reachable(&main_roots);
+    for &gid in &main_fns {
+        let node = &graph.fns[gid];
+        if node.item.name.starts_with("cmd_") && !from_main.contains(&gid) {
+            out.push(Finding {
+                rule: RuleId::R8,
+                file: files[node.file].rel.clone(),
+                line: node.item.line,
+                message: format!(
+                    "CLI subcommand handler `{}` is unreachable from main — the \
+                     dispatch match no longer routes to it",
+                    node.item.name,
+                ),
+            });
+        }
+    }
+    // (c) dead public surface
+    for (gid, node) in graph.fns.iter().enumerate() {
+        let file = &files[node.file];
+        if !matches!(classify(&file.rel), FileClass::Lib | FileClass::Shim) {
+            continue;
+        }
+        let it = &node.item;
+        if !it.is_pub || it.body.is_none() || !prod_at(file, it.decl_tok) {
+            continue;
+        }
+        if !live.contains(&gid) {
+            out.push(Finding {
+                rule: RuleId::R8,
+                file: file.rel.clone(),
+                line: it.line,
+                message: format!(
+                    "dead public surface: `{}` is unreachable from main, any \
+                     test, bench, or item-level mention — delete it or cover it",
+                    it.path(),
+                ),
+            });
+        }
+    }
+}
+
+/// Every `Request` enum variant in `server/proto.rs` must be named as
+/// `Request::Variant` in at least one *other* file — the dispatch
+/// match, a handler, or a test pinning the behaviour.
+fn r8_proto_variants(files: &[ParsedSource], out: &mut Vec<Finding>) {
+    let mut handled: BTreeSet<String> = BTreeSet::new();
+    for f in files {
+        if f.rel.ends_with("server/proto.rs") {
+            continue;
+        }
+        let toks = &f.toks;
+        for i in 0..toks.len() {
+            if toks[i].is_ident("Request")
+                && toks.get(i + 1).is_some_and(|t| t.is_punct(':'))
+                && toks.get(i + 2).is_some_and(|t| t.is_punct(':'))
+            {
+                if let Some(v) = ident_at(toks, i + 3) {
+                    handled.insert(v.to_string());
+                }
+            }
+        }
+    }
+    for f in files {
+        if !f.rel.ends_with("server/proto.rs") {
+            continue;
+        }
+        for (v, line) in enum_variants(&f.toks, "Request") {
+            if !handled.contains(&v) {
+                out.push(Finding {
+                    rule: RuleId::R8,
+                    file: f.rel.clone(),
+                    line,
+                    message: format!(
+                        "protocol variant `Request::{v}` has no handler — nothing \
+                         outside proto.rs names it, so requests of this kind fall \
+                         through the dispatch match"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Variant names (with lines) of `enum <name>` in a token stream.
+fn enum_variants(toks: &[Token], name: &str) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(toks[i].is_ident("enum") && toks.get(i + 1).is_some_and(|t| t.is_ident(name))) {
+            i += 1;
+            continue;
+        }
+        // scan to the body's opening brace
+        let mut j = i + 2;
+        while toks.get(j).is_some_and(|t| !t.is_punct('{')) {
+            j += 1;
+        }
+        let Some(end) = item_end(toks, j) else { return out };
+        let mut expect_variant = true;
+        let mut k = j + 1;
+        while k + 1 < end {
+            let t = &toks[k];
+            if t.is_punct('#') {
+                match skip_attr(toks, k) {
+                    Some(n) => k = n,
+                    None => break,
+                }
+                continue;
+            }
+            if t.is_punct('(') {
+                match skip_parens(toks, k) {
+                    Some(n) => k = n,
+                    None => break,
+                }
+                continue;
+            }
+            if t.is_punct('{') {
+                match item_end(toks, k) {
+                    Some(n) => k = n,
+                    None => break,
+                }
+                continue;
+            }
+            if t.is_punct(',') {
+                expect_variant = true;
+                k += 1;
+                continue;
+            }
+            if expect_variant {
+                if let Tok::Ident(v) = &t.tok {
+                    out.push((v.clone(), t.line));
+                    expect_variant = false;
+                }
+            }
+            k += 1;
+        }
+        return out;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -688,6 +1372,158 @@ fn f() { let t = crate::sweep::default_threads(); parallel_map(&v, t, |x| x); }\
     fn r4_skips_unwrap_or_variants() {
         let src = "fn f(x: Option<u32>) -> u32 { x.unwrap_or(0).max(x.unwrap_or_else(|| 1)) }\n";
         assert!(find("rust/src/util/x.rs", src).is_empty());
+    }
+
+    fn interp(files: &[(&str, &str)]) -> Vec<Finding> {
+        let sources: Vec<(String, String)> =
+            files.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect();
+        lint_interprocedural(&sources)
+    }
+
+    #[test]
+    fn r6_cross_function_double_lock_that_r2_cannot_see() {
+        let src = "\
+pub struct Shared { inner: Mutex<u32> }\n\
+impl Shared {\n\
+    fn helper(&self) -> u32 { *self.inner.lock().unwrap() }\n\
+    fn outer(&self) -> u32 {\n\
+        let g = self.inner.lock().unwrap();\n\
+        *g + self.helper()\n\
+    }\n\
+}\n";
+        // R2's same-function scan sees no violation in `outer`...
+        assert!(lint_source("rust/src/a.rs", src)
+            .iter()
+            .all(|f| f.rule != RuleId::R2));
+        // ...but the call graph does: the guard is held across a callee
+        // that re-acquires the same mutex.
+        let hits = interp(&[("rust/src/a.rs", src)]);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!((hits[0].rule, hits[0].line), (RuleId::R6, 6));
+        assert!(hits[0].message.contains("Shared.inner"), "{}", hits[0].message);
+    }
+
+    #[test]
+    fn r6_guard_across_callee_that_does_io() {
+        let files = [
+            (
+                "rust/src/net.rs",
+                "pub(crate) fn push(w: &mut TcpStream, b: &[u8]) { w.write_all(b).ok(); }\n",
+            ),
+            (
+                "rust/src/svc.rs",
+                "\
+use crate::net::push;\n\
+fn tick(m: &Mutex<Vec<u8>>, w: &mut TcpStream) {\n\
+    let g = m.lock().unwrap();\n\
+    push(w, &g);\n\
+}\n",
+            ),
+        ];
+        let hits = interp(&files);
+        assert_eq!(hits.len(), 1, "{hits:?}");
+        assert_eq!(hits[0].rule, RuleId::R6);
+        assert_eq!((hits[0].file.as_str(), hits[0].line), ("rust/src/svc.rs", 4));
+        assert!(hits[0].message.contains("performs I/O"), "{}", hits[0].message);
+    }
+
+    #[test]
+    fn r6_two_file_lock_order_cycle() {
+        let files = [
+            (
+                "rust/src/x.rs",
+                "\
+fn ab(a: &Mutex<u32>, b: &Mutex<u32>) {\n\
+    let g = a.lock().unwrap();\n\
+    let h = b.lock().unwrap();\n\
+    drop(h);\n\
+    drop(g);\n\
+}\n",
+            ),
+            (
+                "rust/src/y.rs",
+                "\
+fn ba(a: &Mutex<u32>, b: &Mutex<u32>) {\n\
+    let g = b.lock().unwrap();\n\
+    let h = a.lock().unwrap();\n\
+    drop(h);\n\
+    drop(g);\n\
+}\n",
+            ),
+        ];
+        let hits = interp(&files);
+        let cycles: Vec<&Finding> = hits
+            .iter()
+            .filter(|f| f.message.contains("lock-order cycle"))
+            .collect();
+        assert_eq!(cycles.len(), 1, "{hits:?}");
+        assert_eq!(cycles[0].rule, RuleId::R6);
+        assert_eq!(cycles[0].file, "rust/src/x.rs", "anchored at the smallest site");
+        assert!(cycles[0].message.contains("a -> b -> a"), "{}", cycles[0].message);
+    }
+
+    #[test]
+    fn r7_flags_cross_timeline_arithmetic_and_sinks() {
+        let src = "\
+fn f(total_cycles: u64, elapsed: u64) -> u64 {\n\
+    total_cycles + elapsed\n\
+}\n\
+fn g(reg: &Registry, drained_cycles: u64) {\n\
+    reg.observe_seconds(\"t\", drained_cycles as f64);\n\
+}\n\
+fn clean(total_cycles: u64, fill_cycles: u64) -> u64 {\n\
+    total_cycles + fill_cycles\n\
+}\n";
+        let hits = interp(&[("rust/src/obs/metrics2.rs", src)]);
+        let locs: Vec<(RuleId, u32)> = hits.iter().map(|f| (f.rule, f.line)).collect();
+        assert_eq!(locs, vec![(RuleId::R7, 2), (RuleId::R7, 5)], "{hits:?}");
+    }
+
+    #[test]
+    fn r8_unhandled_proto_variant_and_dead_pub_fn() {
+        let files = [
+            (
+                "rust/src/server/proto.rs",
+                "\
+pub enum Request {\n\
+    Ping,\n\
+    Run { id: u64 },\n\
+    Orphan,\n\
+}\n",
+            ),
+            (
+                "rust/src/server/mod.rs",
+                "\
+fn dispatch(req: Request) {\n\
+    match req {\n\
+        Request::Ping => {}\n\
+        Request::Run { id } => {}\n\
+        _ => {}\n\
+    }\n\
+}\n",
+            ),
+            (
+                "rust/src/util/extra.rs",
+                "pub fn used() -> u32 { 1 }\npub fn dead() -> u32 { 2 }\n",
+            ),
+            (
+                "rust/tests/t.rs",
+                "fn t() { scale_sim::util::extra::used(); }\n",
+            ),
+        ];
+        let hits = interp(&files);
+        let r8: Vec<(&str, u32)> = hits
+            .iter()
+            .filter(|f| f.rule == RuleId::R8)
+            .map(|f| (f.file.as_str(), f.line))
+            .collect();
+        assert!(r8.contains(&("rust/src/server/proto.rs", 4)), "{hits:?}");
+        assert!(r8.contains(&("rust/src/util/extra.rs", 2)), "{hits:?}");
+        assert!(
+            !r8.contains(&("rust/src/util/extra.rs", 1)),
+            "test-reached fn is live: {hits:?}"
+        );
+        assert_eq!(r8.len(), 2, "{hits:?}");
     }
 
     #[test]

@@ -1,0 +1,102 @@
+//! Unit classification for R7, the two-timeline taint rule.
+//!
+//! The simulator lives on two clocks at once: the **simulated** clock
+//! (cycles, the paper's unit of account) and the **wall** clock (how
+//! long the simulator itself takes). PR 7's observability work made
+//! mixing them an easy mistake — a cycle count fed into a wall-time
+//! histogram renders a dashboard that is confidently wrong. R7 flags
+//! arithmetic and metric sinks that mix the two (or either with raw
+//! byte counts, the third unit family in bandwidth math).
+//!
+//! Classification is by **name provenance** only: an identifier's
+//! substrings decide its class. That is deliberately shallow — it
+//! needs no type information, works on the token stream, and matches
+//! how this codebase actually names things (`cycles`, `total_cycles`,
+//! `elapsed`, `wall_secs`, `bytes_read`). Names that hit two families
+//! (`bytes_per_cycle`) are rates, not raw quantities, and classify as
+//! nothing.
+
+/// The three unit families R7 keeps apart.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnitClass {
+    /// Simulated time: cycle counts.
+    Cycles,
+    /// Wall-clock time: seconds, milliseconds, latencies.
+    Wall,
+    /// Raw byte counts.
+    Bytes,
+}
+
+impl UnitClass {
+    /// Human-readable family name for findings.
+    pub fn name(self) -> &'static str {
+        match self {
+            UnitClass::Cycles => "cycle",
+            UnitClass::Wall => "wall-time",
+            UnitClass::Bytes => "byte",
+        }
+    }
+}
+
+/// Substrings marking an identifier as wall-clock-valued.
+const WALL_CONTAINS: [&str; 5] = ["wall", "elapsed", "seconds", "secs", "latency"];
+/// Unit-suffix spellings of wall-clock durations.
+const WALL_SUFFIX: [&str; 5] = ["_ms", "_us", "_micros", "_millis", "_sec"];
+const WALL_PREFIX: [&str; 2] = ["ms_", "us_"];
+
+/// Classify an identifier by name, or `None` if it names no unit
+/// family (or more than one — a rate or conversion, which legitimately
+/// spans timelines).
+pub fn classify_ident(name: &str) -> Option<UnitClass> {
+    let lower = name.to_ascii_lowercase();
+    let mut hits: Vec<UnitClass> = Vec::new();
+    if lower.contains("cycle") {
+        hits.push(UnitClass::Cycles);
+    }
+    let wall = WALL_CONTAINS.iter().any(|w| lower.contains(w))
+        || WALL_SUFFIX.iter().any(|s| lower.ends_with(s))
+        || WALL_PREFIX.iter().any(|p| lower.starts_with(p));
+    if wall {
+        hits.push(UnitClass::Wall);
+    }
+    if lower.contains("byte") {
+        hits.push(UnitClass::Bytes);
+    }
+    match hits.as_slice() {
+        [one] => Some(*one),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_names_classify_as_cycles() {
+        for n in ["cycles", "total_cycles", "CycleCount", "fill_cycles"] {
+            assert_eq!(classify_ident(n), Some(UnitClass::Cycles), "{n}");
+        }
+    }
+
+    #[test]
+    fn wall_names_classify_as_wall() {
+        for n in ["elapsed", "wall_secs", "latency", "simulate_seconds", "dur_ms", "t_us"] {
+            assert_eq!(classify_ident(n), Some(UnitClass::Wall), "{n}");
+        }
+    }
+
+    #[test]
+    fn byte_names_classify_as_bytes() {
+        for n in ["bytes_read", "sram_bytes", "total_bytes"] {
+            assert_eq!(classify_ident(n), Some(UnitClass::Bytes), "{n}");
+        }
+    }
+
+    #[test]
+    fn rates_and_plain_names_classify_as_nothing() {
+        for n in ["bytes_per_cycle", "cycles_per_sec", "utilization", "layer", "x", "mask"] {
+            assert_eq!(classify_ident(n), None, "{n}");
+        }
+    }
+}

@@ -205,6 +205,16 @@ mod tests {
     }
 
     #[test]
+    fn remaps_counts_the_full_fold_grid() {
+        // 14x14 ofmap (196 px) on 64 rows → 4 row folds; 8 filters on
+        // 3 cols → 3 col folds (OS mapping): one remap per fold pair.
+        let l = crate::arch::LayerShape::conv("c", 16, 16, 3, 3, 4, 8, 1);
+        let t = Dataflow::Os.timing(&l, 64, 3);
+        assert_eq!((t.row_folds, t.col_folds), (4, 3));
+        assert_eq!(t.remaps(), 12);
+    }
+
+    #[test]
     fn os_wins_when_folds_favor_it_like_fig5() {
         // Fig 5's glance: OS outperforms the other two. OS fold count is
         // ∝ Npx·Nf while WS/IS is ∝ K·(Nf|Npx); with K > Npx (deep conv,

@@ -13,8 +13,9 @@
 //! {"point":{"index":17,...},"metrics":{...}}
 //! ```
 //!
-//! appended **and flushed** as soon as the point finishes, so a killed
-//! campaign loses at most the points that were still in flight. On
+//! appended (one `O_APPEND` write per line) as soon as the point
+//! finishes, so a killed campaign loses at most the points that were
+//! still in flight. On
 //! resume the header's fingerprint must match the spec it carries
 //! (refusing a journal whose spec was edited), completed lines are
 //! restored — numbers round-trip exactly ([`crate::util::json`]), so
@@ -24,10 +25,9 @@
 //! never a failed resume.
 
 use std::collections::BTreeSet;
-use std::fs::{File, OpenOptions};
+use std::fs::OpenOptions;
 use std::io::Write;
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
 
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -39,10 +39,11 @@ pub const JOURNAL_FILE: &str = "campaign.jsonl";
 
 /// Append-only campaign journal (thread-safe: workers append completed
 /// points concurrently; order on disk is completion order, identity is
-/// the point index).
+/// the point index). Appends go through a fresh `O_APPEND` handle per
+/// line rather than a shared locked file, so no lock guard is ever held
+/// across I/O (R2) and concurrent appenders serialize in the kernel.
 pub struct Journal {
     path: PathBuf,
-    file: Mutex<File>,
 }
 
 impl Journal {
@@ -65,10 +66,10 @@ impl Journal {
             ("campaign", campaign.to_json()),
             ("fingerprint", Json::str(campaign.fingerprint())),
         ]);
-        file.write_all(header.to_string().as_bytes())?;
-        file.write_all(b"\n")?;
-        file.flush()?;
-        Ok(Journal { path, file: Mutex::new(file) })
+        let mut line = header.to_string();
+        line.push('\n');
+        file.write_all(line.as_bytes())?;
+        Ok(Journal { path })
     }
 
     /// Open an existing journal: returns the journal (in append mode),
@@ -131,19 +132,22 @@ impl Journal {
                 done.push(cp);
             }
         }
-        let file = OpenOptions::new().append(true).open(&path)?;
-        Ok((Journal { path, file: Mutex::new(file) }, campaign, done))
+        // probe appendability now so a read-only journal fails at resume
+        // time with a clear error, not on the first completed point
+        drop(OpenOptions::new().append(true).open(&path)?);
+        Ok((Journal { path }, campaign, done))
     }
 
-    /// Append one completed point (one line, flushed before returning).
+    /// Append one completed point: one line, one `write_all` on a fresh
+    /// `O_APPEND` handle. The kernel serializes same-file appends, so
+    /// concurrent workers interleave whole lines without any lock; a
+    /// worker killed mid-write at worst leaves a truncated tail, which
+    /// resume already skips.
     pub fn append(&self, cp: &CompletedPoint) -> Result<()> {
         let mut line = cp.to_json().to_string();
         line.push('\n');
-        // recover from poisoning (a worker that panicked mid-append at
-        // worst leaves a truncated line, which resume already skips)
-        let mut f = self.file.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let mut f = OpenOptions::new().append(true).open(&self.path)?;
         f.write_all(line.as_bytes())?;
-        f.flush()?;
         Ok(())
     }
 

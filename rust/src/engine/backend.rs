@@ -82,18 +82,20 @@ impl BackendKind {
 
     /// Instantiate the built-in implementation for this kind.
     ///
-    /// Panics on [`BackendKind::Custom`]: it has no built-in
+    /// Errors on [`BackendKind::Custom`]: it has no built-in
     /// implementation — supply the object via
     /// `EngineBuilder::custom_backend` instead (`build` rejects the
-    /// kind without one, so the builder never reaches this panic).
-    pub fn instantiate(&self) -> Box<dyn Backend> {
+    /// kind without one, so the builder never reaches this error).
+    pub fn instantiate(&self) -> Result<Box<dyn Backend>> {
         match self {
-            BackendKind::Analytical => Box::new(Analytical),
-            BackendKind::TraceDriven => Box::new(TraceDriven),
-            BackendKind::Rtl => Box::new(Rtl::default()),
-            BackendKind::Custom => {
-                panic!("BackendKind::Custom has no built-in implementation; use EngineBuilder::custom_backend")
-            }
+            BackendKind::Analytical => Ok(Box::new(Analytical)),
+            BackendKind::TraceDriven => Ok(Box::new(TraceDriven)),
+            BackendKind::Rtl => Ok(Box::new(Rtl::default())),
+            BackendKind::Custom => Err(Error::Config(
+                "BackendKind::Custom has no built-in implementation; use \
+                 EngineBuilder::custom_backend"
+                    .into(),
+            )),
         }
     }
 }

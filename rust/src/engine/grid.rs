@@ -457,4 +457,21 @@ mod tests {
         assert!(out.find("t", Dataflow::Os, 8, 8).is_some());
         assert!(out.find("t", Dataflow::Ws, 8, 8).is_none());
     }
+
+    #[test]
+    fn find_sram_disambiguates_the_scratchpad_axis() {
+        let e = engine();
+        let out = e
+            .sweep()
+            .workload(&topo("t"))
+            .square_arrays(&[16])
+            .sram_sizes_kb(&[32, 64])
+            .run();
+        // the sram axis makes plain find() ambiguous...
+        assert!(out.find("t", Dataflow::Os, 16, 16).is_none());
+        // ...and find_sram pins the exact point
+        let p = out.find_sram("t", Dataflow::Os, 16, 16, 64).unwrap();
+        assert_eq!((p.ifmap_sram_kb, p.filter_sram_kb), (64, 64));
+        assert!(out.find_sram("t", Dataflow::Os, 16, 16, 128).is_none());
+    }
 }

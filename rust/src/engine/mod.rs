@@ -555,7 +555,10 @@ impl EngineBuilder {
     fn build_unchecked(self) -> Engine {
         let backend = match self.custom {
             Some(b) => b,
-            None => self.kind.instantiate(),
+            // `build` rejects Custom-without-custom_backend, so the only
+            // error instantiate can return is unreachable here; fall back
+            // to the default fidelity rather than panic
+            None => self.kind.instantiate().unwrap_or_else(|_| Box::new(backend::Analytical)),
         };
         // the backend object is the source of truth for its identity
         let kind = backend.kind();
@@ -607,6 +610,24 @@ mod tests {
         assert_eq!((e.cfg().array_h, e.cfg().array_w), (32, 16));
         assert_eq!(e.threads(), 2);
         assert!(Engine::builder().array(0, 8).build().is_err());
+    }
+
+    #[test]
+    fn builder_config_file_loads_table_i_presets() {
+        let dir = std::env::temp_dir()
+            .join(format!("scale_sim_builder_cfg_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("run.cfg");
+        std::fs::write(
+            &path,
+            "[architecture_presets]\nArrayHeight: 32\nArrayWidth: 16\nDataflow: ws\n",
+        )
+        .unwrap();
+        let e = Engine::builder().config_file(&path).unwrap().build().unwrap();
+        assert_eq!((e.cfg().array_h, e.cfg().array_w), (32, 16));
+        assert_eq!(e.cfg().dataflow, Dataflow::Ws);
+        assert!(Engine::builder().config_file(&dir.join("missing.cfg")).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -697,6 +697,30 @@ mod tests {
     }
 
     #[test]
+    fn run_multi_workload_lowers_and_matches_run_multi() {
+        use crate::workload::{Conv2d, Workload};
+        let wl = Workload::builder("w")
+            .conv2d(
+                "c1",
+                Conv2d {
+                    ifmap_h: 16,
+                    ifmap_w: 16,
+                    in_channels: 4,
+                    out_channels: 8,
+                    kernel_h: 3,
+                    kernel_w: 3,
+                    ..Conv2d::default()
+                },
+            )
+            .build()
+            .unwrap();
+        let e = engine(Dataflow::Os);
+        let multi = MultiArrayConfig::new(4, 16, 16, Partition::OutputChannels);
+        let out = e.run_multi_workload(&wl, &multi).unwrap();
+        assert_eq!(out, e.run_multi(&wl.lower().unwrap(), &multi));
+    }
+
+    #[test]
     fn auto_resolves_to_the_faster_fixed_strategy() {
         let e = engine(Dataflow::Os);
         for l in [

@@ -118,7 +118,7 @@ USAGE:
       (cache-warm) and exports their cycle timelines, one track each.
 
   scale-sim lint [--root DIR] [--baseline FILE] [--list] [--no-baseline]
-                 [--write-baseline]
+                 [--write-baseline] [--format text|json]
       Run the in-tree static-analysis pass (rust/src/analysis) over the
       repo's own sources: R1 determinism (no HashMap/HashSet or wall
       clock in serialization/fingerprint paths), R2 lock discipline (no
@@ -126,11 +126,19 @@ USAGE:
       (engine-era modules never call the deprecated pre-engine shims),
       R4 panic hygiene (no unwrap/expect/panic! in library code), R5
       golden-bless hygiene (the golden-fixture bless env hook may only
-      be read inside rust/tests/golden*).
+      be read inside rust/tests/golden*); plus the interprocedural
+      families built on the crate call graph: R6 lock order (no guard
+      held across a callee that transitively locks or does I/O, global
+      lock-order graph acyclic), R7 unit taint (cycle-, wall- and
+      byte-valued quantities never mix in arithmetic or metric sinks),
+      R8 dead surface (every proto Request variant and CLI subcommand
+      reaches a handler; no unreachable pub library fn).
       Findings are checked against the ratcheted lint.baseline: new
       violations fail, fixed ones must be removed (the count only goes
-      down). --list prints every finding; --write-baseline regenerates
-      the baseline (deliberate review only).
+      down). --list prints every finding; --format json emits the
+      findings as one byte-deterministic JSON document on stdout;
+      --write-baseline regenerates the baseline (deliberate review
+      only).
 
   scale-sim serve [--addr H:P] [--workers N] [--queue-cap N]
                   [--state-dir DIR] [-c cfg] [--dataflow os|ws|is]
@@ -1078,6 +1086,11 @@ fn cmd_lint(rest: &[String]) -> CliResult<()> {
         .map(PathBuf::from)
         .unwrap_or_else(|| analysis::default_baseline_path(&root));
 
+    let format = a.value("--format", None).unwrap_or("text");
+    if !matches!(format, "text" | "json") {
+        return fail(format!("unknown --format `{format}` (expected text or json)"));
+    }
+
     let findings = analysis::lint_root(&root)?;
     let files = analysis::source_count(&root)?;
 
@@ -1100,7 +1113,11 @@ fn cmd_lint(rest: &[String]) -> CliResult<()> {
         return Ok(());
     }
 
-    if a.flag("--list") {
+    if format == "json" {
+        // stdout carries exactly the JSON document (byte-deterministic);
+        // drift diagnostics below still decide the exit code
+        print!("{}", scale_sim::analysis::report::findings_to_json(&findings));
+    } else if a.flag("--list") {
         print!("{}", scale_sim::analysis::report::render_findings(&findings));
     }
 
@@ -1108,13 +1125,21 @@ fn cmd_lint(rest: &[String]) -> CliResult<()> {
         if a.flag("--no-baseline") { Baseline::default() } else { analysis::load_baseline(&baseline_path)? };
     let drift = baseline.check(&findings);
     if drift.is_empty() {
-        println!(
-            "{}",
-            scale_sim::analysis::report::summary(files, findings.len(), baseline.total())
-        );
+        if format != "json" {
+            println!(
+                "{}",
+                scale_sim::analysis::report::summary(files, findings.len(), baseline.total())
+            );
+        }
         return Ok(());
     }
-    print!("{}", scale_sim::analysis::report::render_drift(&drift, &findings));
+    let drift_text = scale_sim::analysis::report::render_drift(&drift, &findings);
+    if format == "json" {
+        // keep stdout pure JSON; diagnostics go to stderr
+        eprint!("{drift_text}");
+    } else {
+        print!("{drift_text}");
+    }
     fail(format!(
         "lint failed: {} drift(s) against {}",
         drift.len(),

@@ -41,7 +41,7 @@ use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
@@ -94,7 +94,7 @@ impl Default for ServeOpts {
 struct Job {
     id: u64,
     kind: JobKind,
-    writer: Arc<Mutex<TcpStream>>,
+    writer: ConnWriter,
 }
 
 enum JobKind {
@@ -309,7 +309,7 @@ const WRITE_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(30);
 fn handle_conn(shared: &Shared, stream: TcpStream) {
     let Ok(write_half) = stream.try_clone() else { return };
     let _ = write_half.set_write_timeout(Some(WRITE_TIMEOUT));
-    let writer = Arc::new(Mutex::new(write_half));
+    let writer = ConnWriter::spawn(write_half);
     let mut reader = BufReader::new(stream);
     let mut buf: Vec<u8> = Vec::new();
     loop {
@@ -325,11 +325,11 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
             Err(_) => break,
         };
         if n > MAX_LINE_BYTES {
-            send_line(&writer, &proto::error_line(0, "request line exceeds 4 MiB"));
+            writer.send_line(&proto::error_line(0, "request line exceeds 4 MiB"));
             break; // mid-line: cannot resync, drop the connection
         }
         let Ok(text) = std::str::from_utf8(&buf) else {
-            send_line(&writer, &proto::error_line(0, "request is not UTF-8"));
+            writer.send_line(&proto::error_line(0, "request is not UTF-8"));
             continue;
         };
         let line = text.trim();
@@ -340,21 +340,21 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
             Err(e) => {
                 // best-effort id echo so clients can pair the error
                 let id = Json::parse(line).ok().and_then(|j| j.u64_field("id")).unwrap_or(0);
-                send_line(&writer, &proto::error_line(id, &e));
+                writer.send_line(&proto::error_line(id, &e));
             }
             // stats answers inline from the connection thread — never
             // queued, so it observes queue depth rather than adding to it
             Ok(Request::Stats) => {
-                send_line(&writer, &shared.stats().to_json().to_string());
+                writer.send_line(&shared.stats().to_json().to_string());
             }
             // metrics is the same snapshot in Prometheus text clothing,
             // likewise answered inline from the connection thread
             Ok(Request::Metrics) => {
                 let text = crate::obs::metrics::server_exposition(&shared.stats());
-                send_line(&writer, &proto::metrics_line(&text));
+                writer.send_line(&proto::metrics_line(&text));
             }
             Ok(Request::Shutdown) => {
-                send_line(&writer, &proto::shutting_down_line());
+                writer.send_line(&proto::shutting_down_line());
                 shared.begin_shutdown();
                 break;
             }
@@ -403,18 +403,13 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
 
 /// Queue a validated job (blocking on a full queue = backpressure), or
 /// report why it cannot run.
-fn submit(
-    shared: &Shared,
-    writer: &Arc<Mutex<TcpStream>>,
-    id: u64,
-    kind: Result<JobKind>,
-) {
+fn submit(shared: &Shared, writer: &ConnWriter, id: u64, kind: Result<JobKind>) {
     match kind {
-        Err(e) => send_line(writer, &proto::error_line(id, &e.to_string())),
+        Err(e) => writer.send_line(&proto::error_line(id, &e.to_string())),
         Ok(kind) => {
-            let job = Job { id, kind, writer: Arc::clone(writer) };
+            let job = Job { id, kind, writer: writer.clone() };
             if !shared.queue.push(job) {
-                send_line(writer, &proto::error_line(id, "server is shutting down"));
+                writer.send_line(&proto::error_line(id, "server is shutting down"));
             }
         }
     }
@@ -435,10 +430,10 @@ fn worker_loop(shared: &Shared) {
         shared.queue.job_done(outcome.is_ok());
         match outcome {
             Ok(points) => {
-                send_line(&job.writer, &proto::done_line(job.id, ms_since(t0), points));
+                job.writer.send_line(&proto::done_line(job.id, ms_since(t0), points));
             }
             Err(_) => {
-                send_line(&job.writer, &proto::error_line(job.id, "internal error: job panicked"));
+                job.writer.send_line(&proto::error_line(job.id, "internal error: job panicked"));
             }
         }
     }
@@ -464,7 +459,7 @@ fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
                     engine.run_multi_with(cfg, topo, &mc, None).to_workload_report()
                 }
             };
-            send_line(&job.writer, &proto::result_line(job.id, &report));
+            job.writer.send_line(&proto::result_line(job.id, &report));
             None
         }
         JobKind::Sweep { kind, topos, cfg, multi } => {
@@ -492,7 +487,7 @@ fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
             };
             let out = grid.nodes(&nodes).partitions(&partitions).run();
             for p in &out.points {
-                send_line(&job.writer, &proto::point_line(job.id, p));
+                job.writer.send_line(&proto::point_line(job.id, p));
             }
             Some(out.points.len())
         }
@@ -504,7 +499,7 @@ fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
                     metrics: crate::dse::evaluate_point(engine, topo, &point),
                     point,
                 };
-                send_line(&job.writer, &proto::dse_point_line(job.id, &cp));
+                job.writer.send_line(&proto::dse_point_line(job.id, &cp));
             }
             Some(indices.len())
         }
@@ -515,19 +510,46 @@ fn ms_since(t0: Instant) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3
 }
 
-/// Write one response line; errors (client hung up) are swallowed — the
-/// job still completes and populates the shared cache.
-fn send_line(writer: &Mutex<TcpStream>, line: &str) {
-    // poisoning only means another sender panicked mid-write; this
-    // stream is best-effort, so recover and keep the connection alive.
-    // (Holding the guard across write_all/flush is the one accepted
-    // R2 lint finding here: the mutex IS the per-connection write
-    // serializer, so the I/O must happen under it.)
-    let mut w = writer.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
-    let _ = w
-        .write_all(line.as_bytes())
-        .and_then(|()| w.write_all(b"\n"))
-        .and_then(|()| w.flush());
+/// Lines queued per connection before senders block (backpressure to
+/// the worker, mirroring the queue's blocking-push discipline).
+const WRITE_QUEUE_LINES: usize = 1024;
+
+/// Per-connection response writer: a bounded channel feeding one
+/// dedicated writer thread, so response serialization never holds a
+/// lock across socket I/O (the old `Mutex<TcpStream>` was the single
+/// accepted R2 finding). Clones share the channel; the writer thread
+/// exits when the last clone drops, after delivering anything queued —
+/// the same lifetime a job's `Arc` clone used to provide.
+#[derive(Clone)]
+struct ConnWriter {
+    tx: std::sync::mpsc::SyncSender<String>,
+}
+
+impl ConnWriter {
+    fn spawn(stream: TcpStream) -> ConnWriter {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<String>(WRITE_QUEUE_LINES);
+        std::thread::spawn(move || {
+            let mut stream = stream;
+            let mut dead = false;
+            for line in rx {
+                if dead {
+                    continue; // keep draining so senders never block on a dead peer
+                }
+                let outcome = stream
+                    .write_all(line.as_bytes())
+                    .and_then(|()| stream.write_all(b"\n"))
+                    .and_then(|()| stream.flush());
+                dead = outcome.is_err();
+            }
+        });
+        ConnWriter { tx }
+    }
+
+    /// Queue one response line; errors (client hung up) are swallowed —
+    /// the job still completes and populates the shared cache.
+    fn send_line(&self, line: &str) {
+        let _ = self.tx.send(line.to_string());
+    }
 }
 
 /// Blocking JSON-lines client for the serve protocol — what

@@ -209,7 +209,9 @@ mod tests {
         let q = JobQueue::bounded(4);
         assert!(q.push("a"));
         assert!(q.push("b"));
+        assert!(!q.is_closed());
         q.close();
+        assert!(q.is_closed());
         assert!(!q.push("c"), "closed queue admits nothing");
         assert_eq!(q.pop(), Some("a"), "admitted jobs still drain");
         assert_eq!(q.pop(), Some("b"));

@@ -38,14 +38,14 @@ impl FlexReport {
     /// the paper's §IV-B answer ("might not lead to significant losses")
     /// predicts this stays small.
     pub fn speedup_over_best_fixed(&self) -> f64 {
-        let best_fixed = *self.fixed_cycles.iter().min().unwrap();
+        let best_fixed = self.fixed_cycles.iter().copied().min().unwrap_or(0);
         best_fixed as f64 / self.flexible_cycles as f64
     }
 
     /// Speedup over the *worst* fixed dataflow — the risk of freezing
     /// the wrong one.
     pub fn speedup_over_worst_fixed(&self) -> f64 {
-        let worst = *self.fixed_cycles.iter().max().unwrap();
+        let worst = self.fixed_cycles.iter().copied().max().unwrap_or(0);
         worst as f64 / self.flexible_cycles as f64
     }
 
@@ -79,7 +79,7 @@ pub fn flexible_study(cfg: &ArchConfig, topo: &Topology) -> FlexReport {
         for (f, c) in fixed.iter_mut().zip(cycles) {
             *f += c;
         }
-        let best_i = (0..3).min_by_key(|&i| cycles[i]).unwrap();
+        let best_i = (0..3).min_by_key(|&i| cycles[i]).unwrap_or(0);
         flexible += cycles[best_i];
         layers.push(FlexLayer {
             name: layer.name.clone(),

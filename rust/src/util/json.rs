@@ -201,7 +201,7 @@ impl<'a> Parser<'a> {
         self.bytes.get(self.pos).copied()
     }
 
-    fn expect(&mut self, b: u8) -> Result<(), String> {
+    fn expect_byte(&mut self, b: u8) -> Result<(), String> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -248,7 +248,8 @@ impl<'a> Parser<'a> {
         {
             self.pos += 1;
         }
-        let tok = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let tok = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("bad number at offset {start}"))?;
         // validate by parsing as f64; the token text is what we keep
         tok.parse::<f64>()
             .map_err(|_| format!("bad number {tok:?} at offset {start}"))?;
@@ -256,7 +257,7 @@ impl<'a> Parser<'a> {
     }
 
     fn string(&mut self) -> Result<String, String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut out = String::new();
         loop {
             match self.peek() {
@@ -309,7 +310,9 @@ impl<'a> Parser<'a> {
                     // consume one UTF-8 scalar (multi-byte safe)
                     let rest = std::str::from_utf8(&self.bytes[self.pos..])
                         .map_err(|_| "invalid utf-8 in string")?;
-                    let c = rest.chars().next().unwrap();
+                    let Some(c) = rest.chars().next() else {
+                        return Err("unterminated string".into());
+                    };
                     out.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -337,7 +340,7 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, String> {
         self.enter()?;
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         let mut items = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
@@ -363,7 +366,7 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, String> {
         self.enter()?;
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         let mut fields = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
@@ -375,7 +378,7 @@ impl<'a> Parser<'a> {
             self.skip_ws();
             let k = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let v = self.value()?;
             fields.push((k, v));
@@ -417,6 +420,14 @@ mod tests {
         for n in [0u64, 7, u64::MAX] {
             assert_eq!(Json::parse(&Json::u64(n).to_string()).unwrap().as_u64(), Some(n));
         }
+    }
+
+    #[test]
+    fn as_bool_projects_only_booleans() {
+        assert_eq!(Json::parse("true").unwrap().as_bool(), Some(true));
+        assert_eq!(Json::parse("false").unwrap().as_bool(), Some(false));
+        assert_eq!(Json::parse("1").unwrap().as_bool(), None);
+        assert_eq!(Json::parse("\"true\"").unwrap().as_bool(), None);
     }
 
     #[test]

@@ -49,8 +49,9 @@ impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
 
 /// Run a property over `cases` random inputs; shrink on failure.
 ///
-/// Panics (test failure) with the minimal counterexample found.
-pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P)
+/// Returns `Err` describing the minimal counterexample found. Use
+/// [`forall`] in tests for the asserting form.
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, prop: P) -> Result<(), String>
 where
     T: Shrink,
     G: FnMut(&mut Rng) -> T,
@@ -61,11 +62,24 @@ where
         let input = gen(&mut rng);
         if !prop(&input) {
             let minimal = shrink_to_minimal(input, &prop);
-            panic!(
+            return Err(format!(
                 "property failed (seed={seed}, case={case}); minimal counterexample: {minimal:?}"
-            );
+            ));
         }
     }
+    Ok(())
+}
+
+/// Asserting form of [`check`]: fails the calling test with the minimal
+/// counterexample message.
+pub fn forall<T, G, P>(seed: u64, cases: usize, gen: G, prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: Fn(&T) -> bool,
+{
+    let outcome = check(seed, cases, gen, prop);
+    assert!(outcome.is_ok(), "{}", outcome.unwrap_err());
 }
 
 fn shrink_to_minimal<T: Shrink, P: Fn(&T) -> bool>(mut failing: T, prop: &P) -> T {

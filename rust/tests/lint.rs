@@ -1,29 +1,55 @@
 //! Regression suite for the in-tree static-analysis pass
 //! (`rust/src/analysis`, surfaced as `scale-sim lint`).
 //!
-//! Three layers:
+//! Four layers:
 //!
 //! 1. **Fixture corpus** (`rust/tests/lint_fixtures/`): one seeded
 //!    violation per rule plus a clean twin, asserted down to the exact
-//!    `file:line` + rule id. The corpus directory is excluded from the
-//!    repo walk, so the seeded violations never reach the CI gate.
+//!    `file:line` + rule id — including the interprocedural families
+//!    (R6–R8), whose fixtures are multi-file crates fed through the
+//!    call graph. The corpus directory is excluded from the repo walk,
+//!    so the seeded violations never reach the CI gate.
 //! 2. **Baseline ratchet**: the checked-in `lint.baseline` parses,
-//!    records the pre-PR finding count, and round-trips bit-exactly.
+//!    records the pre-PR finding count, and — now that the R1–R5 debt
+//!    is fully burned down — may only carry interprocedural entries.
 //! 3. **Self-clean**: linting the repo's own sources produces exactly
 //!    the baselined findings — no drift — both through the library API
 //!    and through the `scale-sim lint` CLI that ci.sh gates on.
+//! 4. **Gate bite**: seeded violation trees (a lock-order cycle, a
+//!    cycles-into-wall-histogram mix) must *fail* the CLI, and
+//!    `--format json` output must be byte-deterministic and round-trip.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 use std::process::Command;
 
-use scale_sim::analysis::{self, Baseline, RuleId};
+use scale_sim::analysis::{self, Baseline, Finding, RuleId};
 
 const ROOT: &str = env!("CARGO_MANIFEST_DIR");
 const BIN: &str = env!("CARGO_BIN_EXE_scale-sim");
 
-/// Lint fixture text under a pretend repo-relative path.
+/// Lint fixture text under a pretend repo-relative path (R1–R5).
 fn hits(rel: &str, src: &str) -> Vec<(RuleId, u32)> {
     analysis::lint_source(rel, src).into_iter().map(|f| (f.rule, f.line)).collect()
+}
+
+/// Run the interprocedural families (R6–R8) over a pretend crate.
+fn interp(files: &[(&str, &str)]) -> Vec<Finding> {
+    let sources: Vec<(String, String)> =
+        files.iter().map(|(a, b)| (a.to_string(), b.to_string())).collect();
+    scale_sim::analysis::rules::lint_interprocedural(&sources)
+}
+
+/// Materialize a pretend repo tree under a unique temp dir.
+fn seed_tree(tag: &str, files: &[(&str, &str)]) -> PathBuf {
+    let root =
+        std::env::temp_dir().join(format!("scale_sim_lint_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    for (rel, text) in files {
+        let p = root.join(rel);
+        std::fs::create_dir_all(p.parent().unwrap()).unwrap();
+        std::fs::write(&p, text).unwrap();
+    }
+    root
 }
 
 // ------------------------------------------------------ fixture corpus
@@ -103,6 +129,96 @@ fn r5_fixture_flags_the_bless_hook_everywhere_but_the_golden_suite() {
 }
 
 #[test]
+fn r6_fixture_cross_function_double_lock_that_r2_provably_misses() {
+    let bad = include_str!("lint_fixtures/r6_interproc_bad.rs");
+    // the same-function scan (R2) sees nothing wrong in `outer`...
+    assert!(
+        hits("rust/src/engine/fixture.rs", bad).iter().all(|(r, _)| *r != RuleId::R2),
+        "R2 must be blind to the cross-function re-acquisition"
+    );
+    // ...but the call graph catches the guard held across a callee that
+    // re-acquires the same mutex
+    let found = interp(&[("rust/src/engine/fixture.rs", bad)]);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(
+        (found[0].rule, found[0].file.as_str(), found[0].line),
+        (RuleId::R6, "rust/src/engine/fixture.rs", 8)
+    );
+    assert!(found[0].message.contains("Shared.inner"), "{}", found[0].message);
+
+    let clean = include_str!("lint_fixtures/r6_interproc_clean.rs");
+    assert_eq!(interp(&[("rust/src/engine/fixture.rs", clean)]), vec![]);
+}
+
+#[test]
+fn r6_fixture_two_file_lock_order_cycle() {
+    let a = include_str!("lint_fixtures/r6_order_cycle_a.rs");
+    let b = include_str!("lint_fixtures/r6_order_cycle_b.rs");
+    // each half alone fixes an order — only together do they conflict
+    assert_eq!(interp(&[("rust/src/order_a.rs", a)]), vec![]);
+    assert_eq!(interp(&[("rust/src/order_b.rs", b)]), vec![]);
+    let found = interp(&[("rust/src/order_a.rs", a), ("rust/src/order_b.rs", b)]);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(
+        (found[0].rule, found[0].file.as_str(), found[0].line),
+        (RuleId::R6, "rust/src/order_a.rs", 4),
+        "anchored at the lexicographically smallest edge site"
+    );
+    assert!(found[0].message.contains("lock-order cycle"), "{}", found[0].message);
+    assert!(found[0].message.contains("a -> b -> a"), "{}", found[0].message);
+}
+
+#[test]
+fn r6_fixture_guard_held_across_callee_that_does_io_two_files_away() {
+    let callee = include_str!("lint_fixtures/r6_io_callee.rs");
+    let caller = include_str!("lint_fixtures/r6_io_caller.rs");
+    let found = interp(&[("rust/src/net.rs", callee), ("rust/src/svc.rs", caller)]);
+    assert_eq!(found.len(), 1, "{found:?}");
+    assert_eq!(
+        (found[0].rule, found[0].file.as_str(), found[0].line),
+        (RuleId::R6, "rust/src/svc.rs", 6)
+    );
+    assert!(found[0].message.contains("performs I/O"), "{}", found[0].message);
+    assert!(found[0].message.contains("net::send_all"), "{}", found[0].message);
+}
+
+#[test]
+fn r7_fixture_flags_cross_timeline_arithmetic_and_the_wall_sink() {
+    let bad = include_str!("lint_fixtures/r7_taint_bad.rs");
+    let found = interp(&[("rust/src/obs/fixture.rs", bad)]);
+    let pins: Vec<(RuleId, u32)> = found.iter().map(|f| (f.rule, f.line)).collect();
+    assert_eq!(pins, vec![(RuleId::R7, 3), (RuleId::R7, 6)], "{found:?}");
+    assert!(found[1].message.contains("wall-time sink"), "{}", found[1].message);
+
+    let clean = include_str!("lint_fixtures/r7_taint_clean.rs");
+    assert_eq!(interp(&[("rust/src/obs/fixture.rs", clean)]), vec![]);
+    // tests and the documented trace exemption are out of scope
+    assert_eq!(interp(&[("rust/tests/fixture.rs", bad)]), vec![]);
+    assert_eq!(interp(&[("rust/src/obs/trace.rs", bad)]), vec![]);
+}
+
+#[test]
+fn r8_fixture_unhandled_proto_variant_and_dead_pub_fn() {
+    let proto = include_str!("lint_fixtures/r8_surface_bad_proto.rs");
+    let dispatch = include_str!("lint_fixtures/r8_surface_bad_dispatch.rs");
+    let found = interp(&[
+        ("rust/src/server/proto.rs", proto),
+        ("rust/src/server/mod.rs", dispatch),
+    ]);
+    let pins: Vec<(RuleId, &str, u32)> =
+        found.iter().map(|f| (f.rule, f.file.as_str(), f.line)).collect();
+    assert!(
+        pins.contains(&(RuleId::R8, "rust/src/server/proto.rs", 5)),
+        "Orphan variant unhandled: {found:?}"
+    );
+    assert!(
+        pins.contains(&(RuleId::R8, "rust/src/server/mod.rs", 10)),
+        "forgotten_helper is dead surface: {found:?}"
+    );
+    assert_eq!(found.len(), 2, "{found:?}");
+}
+
+#[test]
 fn diagnostics_render_as_clickable_file_line_rule() {
     let bad = include_str!("lint_fixtures/r4_panic_bad.rs");
     let findings = analysis::lint_source("rust/src/util/fixture.rs", bad);
@@ -130,6 +246,13 @@ fn checked_in_baseline_parses_and_records_the_ratchet_floor() {
         "the ratchet requires the baseline to sit strictly below the pre-PR count, \
          got {}",
         b.total()
+    );
+    // the R1–R5 debt is fully burned down: only the interprocedural
+    // families may carry accepted findings from here on
+    assert!(
+        b.counts.keys().all(|(r, _)| matches!(r, RuleId::R6 | RuleId::R7 | RuleId::R8)),
+        "R1–R5 baseline sections must stay empty, got {:?}",
+        b.counts
     );
 }
 
@@ -164,9 +287,10 @@ fn the_repo_lints_clean_against_its_checked_in_baseline() {
         "lint drift against lint.baseline:\n{}",
         scale_sim::analysis::report::render_drift(&drift, &findings)
     );
-    // the pass lints itself
+    // the pass lints itself — including the interprocedural modules
     let files = analysis::collect_sources(root).unwrap();
     assert!(files.iter().any(|f| f == "rust/src/analysis/rules.rs"));
+    assert!(files.iter().any(|f| f == "rust/src/analysis/callgraph.rs"));
     assert!(files.iter().all(|f| !f.contains("lint_fixtures")));
 }
 
@@ -184,13 +308,93 @@ fn the_cli_gate_passes_and_fails_like_the_library() {
     assert!(stdout.contains("clean"), "{stdout}");
 
     // with the ratchet disabled the baselined findings become failures:
-    // the gate actually bites
+    // the gate actually bites (the one remaining accepted finding is
+    // R8's dead-surface entry for the deprecated scaleout shim)
     let strict = Command::new(BIN)
         .args(["lint", "--root", ROOT, "--no-baseline", "--list"])
         .output()
         .unwrap();
     assert!(!strict.status.success(), "--no-baseline must fail while findings remain");
     let listing = String::from_utf8_lossy(&strict.stdout);
-    assert!(listing.contains("R2[lock-discipline]"), "{listing}");
-    assert!(listing.contains("rust/src/dse/journal.rs"), "{listing}");
+    assert!(listing.contains("R8[dead-surface]"), "{listing}");
+    assert!(listing.contains("rust/src/scaleout/mod.rs"), "{listing}");
+}
+
+// ------------------------------------------------------- gate bite
+
+#[test]
+fn the_cli_gate_fails_on_a_seeded_lock_order_cycle() {
+    let root = seed_tree(
+        "cycle",
+        &[
+            (
+                "rust/src/x.rs",
+                "fn ab(a: &Mutex<u64>, b: &Mutex<u64>) {\n    let g = a.lock();\n    \
+                 let h = b.lock();\n    drop(h);\n    drop(g);\n}\n",
+            ),
+            (
+                "rust/src/y.rs",
+                "fn ba(a: &Mutex<u64>, b: &Mutex<u64>) {\n    let g = b.lock();\n    \
+                 let h = a.lock();\n    drop(h);\n    drop(g);\n}\n",
+            ),
+        ],
+    );
+    let out = Command::new(BIN)
+        .args(["lint", "--root", root.to_str().unwrap(), "--list"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a seeded lock-order cycle must fail the gate");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("R6[lock-order]"), "{text}");
+    assert!(text.contains("lock-order cycle"), "{text}");
+    assert!(text.contains("rust/src/x.rs:3"), "anchored deterministically: {text}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn the_cli_gate_fails_on_cycles_fed_into_a_wall_histogram() {
+    let root = seed_tree(
+        "taint",
+        &[(
+            "rust/src/m.rs",
+            "fn observe(reg: &Registry, sim_cycles: u64) {\n    \
+             reg.observe_seconds(\"simulate\", sim_cycles as f64);\n}\n",
+        )],
+    );
+    let out = Command::new(BIN)
+        .args(["lint", "--root", root.to_str().unwrap(), "--list"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "a seeded timeline mix must fail the gate");
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("R7[unit-taint]"), "{text}");
+    assert!(text.contains("wall-time sink"), "{text}");
+    assert!(text.contains("rust/src/m.rs:2"), "{text}");
+    std::fs::remove_dir_all(&root).unwrap();
+}
+
+#[test]
+fn cli_json_format_is_byte_deterministic_and_round_trips() {
+    let run = || {
+        Command::new(BIN)
+            .args(["lint", "--root", ROOT, "--format", "json"])
+            .output()
+            .unwrap()
+    };
+    let one = run();
+    assert!(one.status.success(), "{}", String::from_utf8_lossy(&one.stderr));
+    let two = run();
+    assert_eq!(one.stdout, two.stdout, "same sources must give identical bytes");
+
+    let text = String::from_utf8(one.stdout).unwrap();
+    let parsed = scale_sim::analysis::report::findings_from_json(&text).unwrap();
+    let lib = analysis::lint_root(Path::new(ROOT)).unwrap();
+    assert_eq!(parsed, lib, "the JSON document carries exactly the library findings");
+
+    // unknown formats are rejected up front
+    let bad = Command::new(BIN)
+        .args(["lint", "--root", ROOT, "--format", "yaml"])
+        .output()
+        .unwrap();
+    assert!(!bad.status.success());
 }

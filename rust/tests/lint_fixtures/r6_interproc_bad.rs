@@ -1,0 +1,10 @@
+//! Seeded R6: the guard in `outer` is held across `helper`, which
+//! re-acquires the same mutex — invisible to R2's same-function scan.
+pub struct Shared { inner: Mutex<u64> }
+impl Shared {
+    fn helper(&self) -> u64 { *self.inner.lock().unwrap() }
+    fn outer(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        *g + self.helper()
+    }
+}

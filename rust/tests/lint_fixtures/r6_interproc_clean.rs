@@ -1,0 +1,12 @@
+//! Clean twin: the snapshot is taken and the guard dropped before the
+//! re-acquiring call, so no lock is held across `helper`.
+pub struct Shared { inner: Mutex<u64> }
+impl Shared {
+    fn helper(&self) -> u64 { *self.inner.lock().unwrap() }
+    fn outer(&self) -> u64 {
+        let g = self.inner.lock().unwrap();
+        let snapshot = *g;
+        drop(g);
+        snapshot + self.helper()
+    }
+}

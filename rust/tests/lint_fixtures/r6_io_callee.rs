@@ -1,0 +1,4 @@
+//! Seeded R6 helper: a callee that performs guarded I/O.
+pub(crate) fn send_all(w: &mut TcpStream, b: &[u8]) {
+    w.write_all(b).ok();
+}

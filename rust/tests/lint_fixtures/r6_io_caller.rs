@@ -1,0 +1,7 @@
+//! Seeded R6: guard held across a call into a function that does I/O
+//! two files away — R2's same-function scan cannot see it.
+use crate::net::send_all;
+fn tick(m: &Mutex<Vec<u8>>, w: &mut TcpStream) {
+    let g = m.lock().unwrap();
+    send_all(w, &g);
+}

@@ -1,0 +1,6 @@
+//! Seeded R6 (half 1): acquires `a` then `b`.
+fn ab(a: &Mutex<u64>, b: &Mutex<u64>) -> u64 {
+    let g = a.lock().unwrap();
+    let h = b.lock().unwrap();
+    *g + *h
+}

@@ -1,0 +1,7 @@
+//! Seeded R6 (half 2): acquires `b` then `a` — opposite order, so the
+//! two files together close a lock-order cycle.
+fn ba(a: &Mutex<u64>, b: &Mutex<u64>) -> u64 {
+    let g = b.lock().unwrap();
+    let h = a.lock().unwrap();
+    *g + *h
+}

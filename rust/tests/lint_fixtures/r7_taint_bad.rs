@@ -1,0 +1,7 @@
+//! Seeded R7: simulated cycles meeting wall-clock quantities.
+fn mix(total_cycles: u64, elapsed_secs: u64) -> u64 {
+    total_cycles + elapsed_secs
+}
+fn observe(reg: &Registry, drained_cycles: u64) {
+    reg.observe_seconds("simulate", drained_cycles as f64);
+}

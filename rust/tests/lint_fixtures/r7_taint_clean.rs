@@ -1,0 +1,8 @@
+//! Clean twin: same-family arithmetic, a wall value in the wall sink,
+//! and a rate name that legitimately spans both timelines.
+fn total(fill_cycles: u64, drain_cycles: u64) -> u64 {
+    fill_cycles + drain_cycles
+}
+fn observe(reg: &Registry, wall_secs: f64, cycles_per_sec: f64) {
+    reg.observe_seconds("simulate", wall_secs + cycles_per_sec * 0.0);
+}

@@ -1,0 +1,10 @@
+//! Handles every variant but `Orphan`; also carries a dead pub fn.
+fn dispatch(req: Request) {
+    match req {
+        Request::Ping => {}
+        Request::Simulate { id } => run(id),
+        _ => {}
+    }
+}
+fn run(_id: u64) {}
+pub fn forgotten_helper() -> u64 { 7 }

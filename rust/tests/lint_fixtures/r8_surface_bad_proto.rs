@@ -1,0 +1,6 @@
+//! Seeded R8: `Orphan` has no handler anywhere outside proto.rs.
+pub enum Request {
+    Ping,
+    Simulate { id: u64 },
+    Orphan,
+}
