@@ -71,7 +71,7 @@ echo "== test-inventory floor =="
 # binaries must not drop below the checked-in floor — a suite falling
 # out of Cargo.toml (or a mass #[ignore]) fails here even though every
 # remaining test is green. Raise the floor as suites grow.
-TEST_FLOOR=463
+TEST_FLOOR=493
 TOTAL_PASSED=$(grep -o '[0-9]\+ passed' "$TEST_LOG" | awk '{s+=$1} END {print s+0}')
 rm -f "$TEST_LOG"
 echo "total tests passed: $TOTAL_PASSED (floor $TEST_FLOOR)"
@@ -148,6 +148,28 @@ grep -q '"nodes"' BENCH_scaleout.json || { echo "BENCH_scaleout.json lacks nodes
 grep -q '"partition":"auto"' BENCH_scaleout.json || { echo "BENCH_scaleout.json lacks partition"; exit 1; }
 grep -q '"interconnect_avg_bw"' BENCH_scaleout.json
 cat BENCH_scaleout.json | head -c 300; echo
+echo "ok"
+
+echo "== smoke: scaleout --fabric (route-aware interconnect + BENCH_fabric.json) =="
+# the route-aware fabric study: flat (legacy baseline) vs line vs mesh
+# at the same node counts; the JSON must carry per-link peak/avg
+# throughput, stall cycles and banked-DRAM row-buffer stats, and a bad
+# bandwidth figure must be rejected at the flag, not by a stall assert
+"$BIN" scaleout -t ncf --budgets 1024 --fabric flat,line,mesh \
+  --link-bw 8 --dram-bw 16 > /dev/null
+test -f BENCH_fabric.json
+for field in '"fabric":"mesh"' '"stall_cycles"' '"max_link_peak_bw"' \
+             '"hop_bytes"' '"dram_row_hit_rate"' '"link_bw":8'; do
+  grep -q "$field" BENCH_fabric.json \
+    || { echo "BENCH_fabric.json lacks $field"; exit 1; }
+done
+if "$BIN" scaleout -t ncf --fabric line --dram-bw 0 > /dev/null 2>&1; then
+  echo "scaleout accepted --dram-bw 0"; exit 1
+fi
+if "$BIN" scaleout -t ncf --fabric torus > /dev/null 2>&1; then
+  echo "scaleout accepted an unknown fabric"; exit 1
+fi
+cat BENCH_fabric.json | head -c 300; echo
 echo "ok"
 
 echo "== smoke: dse campaign (multi-array axes, run, kill+resume, frontier identity, cache hit rate) =="

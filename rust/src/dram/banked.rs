@@ -1,0 +1,311 @@
+//! Tick-driven banked DRAM backend — the selectable high-fidelity
+//! memory model behind the multi-array fabric path.
+//!
+//! [`super::Dram`] answers "when does this burst complete" from bank
+//! ready times alone: requests never occupy space, a bank accepts any
+//! backlog, and cold misses are folded into the miss count. This model
+//! runs the full bank state machine instead:
+//!
+//! * each bank owns a **bounded request queue**: a burst occupies a slot
+//!   from its arrival tick until its data transfer completes, and a
+//!   producer arriving at a full queue stalls until the oldest occupant
+//!   drains ([`BankedStats::queue_wait_cycles`] accounts the wait);
+//! * the row-buffer state machine distinguishes all three access
+//!   classes — **row hit** (`t_cas`), **row conflict**
+//!   (`t_rp + t_rcd + t_cas`, a different row is open) and **cold
+//!   miss** (`t_rcd + t_cas`, bank idle since reset);
+//! * **per-transaction latency** (arrival to data, queue wait included)
+//!   is accumulated exactly, not averaged from a closed form.
+//!
+//! Each bank's clock advances tick by tick to the request's arrival
+//! (occupants whose transfer completed leave their slots); because every
+//! service time is deterministic, the advance is computed in one step
+//! per request — the observable state at every tick is identical to a
+//! cycle loop, without paying for idle ticks.
+//!
+//! The model is deterministic end to end (pure integer arithmetic, no
+//! clocks, no RNG): its stats join the golden-pinned deterministic
+//! class.
+
+use std::collections::VecDeque;
+
+use super::{DramConfig, Request};
+
+/// Queue capacity used when a surface enables the banked model without
+/// sizing one (8 in-flight bursts per bank, DDR4-controller-ish).
+pub const DEFAULT_QUEUE_CAP: usize = 8;
+
+/// Aggregate results of replaying a request stream through the banked
+/// model.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BankedStats {
+    pub requests: u64,
+    /// Open-row accesses (`t_cas`).
+    pub row_hits: u64,
+    /// Accesses that had to close another row first
+    /// (`t_rp + t_rcd + t_cas`).
+    pub row_conflicts: u64,
+    /// First touch of an idle bank (`t_rcd + t_cas`).
+    pub cold_misses: u64,
+    /// Sum of per-transaction latencies (arrival tick to last data
+    /// tick, queue wait included).
+    pub total_latency_cycles: u64,
+    pub max_latency_cycles: u64,
+    /// Cycles requests spent stalled waiting for a queue slot.
+    pub queue_wait_cycles: u64,
+    /// Deepest any bank queue ever got (occupied slots).
+    pub max_queue_depth: u64,
+    /// Tick the last transfer completed.
+    pub finish_cycle: u64,
+    pub bytes: u64,
+}
+
+impl BankedStats {
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.row_hits as f64 / self.requests as f64
+    }
+
+    pub fn avg_latency(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.total_latency_cycles as f64 / self.requests as f64
+    }
+
+    /// Achieved bandwidth over the whole replay window (bytes/cycle).
+    pub fn achieved_bw(&self) -> f64 {
+        if self.finish_cycle == 0 {
+            return 0.0;
+        }
+        self.bytes as f64 / self.finish_cycle as f64
+    }
+}
+
+struct BankState {
+    open_row: Option<u64>,
+    /// Completion tick of the newest accepted request (service is FIFO).
+    ready_at: u64,
+    /// Completion ticks of every request still occupying a queue slot,
+    /// oldest first.
+    occupants: VecDeque<u64>,
+}
+
+/// The tick-driven banked model. Requests are admitted in stream
+/// (program) order; the arrival tick stamps when the producer offers
+/// each burst.
+pub struct BankedDram {
+    cfg: DramConfig,
+    queue_cap: usize,
+    banks: Vec<BankState>,
+    stats: BankedStats,
+}
+
+impl BankedDram {
+    pub fn new(cfg: DramConfig, queue_cap: usize) -> Self {
+        let banks = (0..cfg.banks)
+            .map(|_| BankState { open_row: None, ready_at: 0, occupants: VecDeque::new() })
+            .collect();
+        BankedDram { cfg, queue_cap: queue_cap.max(1), banks, stats: BankedStats::default() }
+    }
+
+    fn bank_and_row(&self, addr: u64) -> (usize, u64) {
+        let row_global = addr / self.cfg.row_bytes;
+        ((row_global % self.cfg.banks as u64) as usize, row_global / self.cfg.banks as u64)
+    }
+
+    /// Advance the target bank to the request's arrival tick, stall for
+    /// a queue slot if needed, serve the access, and return its
+    /// completion tick.
+    pub fn issue(&mut self, req: Request) -> u64 {
+        let cap = self.queue_cap;
+        let (b, row) = self.bank_and_row(req.addr);
+        let Some(bank) = self.banks.get_mut(b) else {
+            return req.cycle; // unreachable: bank index is addr % banks
+        };
+        // occupants whose transfer finished by the arrival tick have
+        // left their slots
+        while bank.occupants.front().is_some_and(|&done| done <= req.cycle) {
+            bank.occupants.pop_front();
+        }
+        // full queue: the producer stalls until the oldest occupant
+        // drains (slots free in completion order under FIFO service)
+        let mut admitted_at = req.cycle;
+        while bank.occupants.len() >= cap {
+            if let Some(done) = bank.occupants.pop_front() {
+                admitted_at = admitted_at.max(done);
+            }
+        }
+        self.stats.queue_wait_cycles += admitted_at - req.cycle;
+        let start = admitted_at.max(bank.ready_at);
+        let access = match bank.open_row {
+            Some(open) if open == row => {
+                self.stats.row_hits += 1;
+                self.cfg.t_cas
+            }
+            Some(_) => {
+                self.stats.row_conflicts += 1;
+                self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cas
+            }
+            None => {
+                self.stats.cold_misses += 1;
+                self.cfg.t_rcd + self.cfg.t_cas
+            }
+        };
+        bank.open_row = Some(row);
+        let done = start + access + self.cfg.t_burst;
+        bank.ready_at = done;
+        bank.occupants.push_back(done);
+        self.stats.max_queue_depth = self.stats.max_queue_depth.max(bank.occupants.len() as u64);
+        let latency_cycles = done - req.cycle;
+        self.stats.requests += 1;
+        self.stats.total_latency_cycles += latency_cycles;
+        self.stats.max_latency_cycles = self.stats.max_latency_cycles.max(latency_cycles);
+        self.stats.finish_cycle = self.stats.finish_cycle.max(done);
+        self.stats.bytes += self.cfg.burst_bytes;
+        done
+    }
+
+    /// Replay a whole stream; returns the stats.
+    pub fn replay(mut self, reqs: impl IntoIterator<Item = Request>) -> BankedStats {
+        for r in reqs {
+            self.issue(r);
+        }
+        self.stats
+    }
+
+    pub fn stats(&self) -> BankedStats {
+        self.stats
+    }
+}
+
+/// Replay one layer's DRAM read traffic through the banked model — the
+/// high-fidelity sibling of [`super::replay_layer`], sharing the exact
+/// same request stream.
+pub fn banked_replay_layer(
+    df: crate::dataflow::Dataflow,
+    layer: &crate::arch::LayerShape,
+    cfg: &crate::config::ArchConfig,
+    dcfg: DramConfig,
+    queue_cap: usize,
+) -> BankedStats {
+    let reqs = super::layer_request_stream(df, layer, cfg, &dcfg);
+    BankedDram::new(dcfg, queue_cap).replay(reqs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Dram;
+    use super::*;
+
+    fn cfg() -> DramConfig {
+        DramConfig::default()
+    }
+
+    fn read(cycle: u64, addr: u64) -> Request {
+        Request { cycle, addr, is_write: false }
+    }
+
+    #[test]
+    fn classifies_hit_conflict_and_cold_separately() {
+        let c = cfg();
+        let mut d = BankedDram::new(c, DEFAULT_QUEUE_CAP);
+        d.issue(read(0, 0)); // cold
+        d.issue(read(0, 64)); // same row: hit
+        d.issue(read(0, c.row_bytes * c.banks as u64)); // same bank, new row
+        let s = d.stats();
+        assert_eq!((s.cold_misses, s.row_hits, s.row_conflicts), (1, 1, 1));
+        assert_eq!(s.requests, 3);
+    }
+
+    #[test]
+    fn unbounded_queue_matches_the_analytical_replay() {
+        // with queues deep enough to never bind, the tick model's
+        // timing must agree with the closed-form Dram exactly
+        use crate::arch::LayerShape;
+        use crate::config;
+        use crate::dataflow::Dataflow;
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 16, 1);
+        let cfgm = config::ArchConfig { array_h: 8, array_w: 8, ..config::paper_default() };
+        let reqs = super::super::layer_request_stream(Dataflow::Os, &l, &cfgm, &cfg());
+        let banked = BankedDram::new(cfg(), usize::MAX).replay(reqs.clone());
+        let flat = Dram::new(cfg()).replay(reqs);
+        assert_eq!(banked.requests, flat.requests);
+        assert_eq!(banked.row_hits, flat.row_hits);
+        assert_eq!(banked.row_conflicts + banked.cold_misses, flat.row_misses);
+        assert_eq!(banked.finish_cycle, flat.finish_cycle);
+        assert_eq!(banked.total_latency_cycles, flat.total_latency);
+        assert_eq!(banked.queue_wait_cycles, 0);
+    }
+
+    #[test]
+    fn full_queue_stalls_the_producer() {
+        let c = cfg();
+        // every request to the same bank/row, all arriving at tick 0:
+        // with a 2-deep queue the third request must wait for a slot
+        let mut d = BankedDram::new(c, 2);
+        d.issue(read(0, 0));
+        d.issue(read(0, 64));
+        d.issue(read(0, 128));
+        let s = d.stats();
+        assert!(s.queue_wait_cycles > 0, "{s:?}");
+        assert_eq!(s.max_queue_depth, 2);
+        // and the wait shows up in that transaction's latency
+        let deep = BankedDram::new(c, DEFAULT_QUEUE_CAP)
+            .replay([read(0, 0), read(0, 64), read(0, 128)]);
+        assert!(s.total_latency_cycles >= deep.total_latency_cycles);
+        assert_eq!(s.max_queue_depth, 2);
+        assert!(deep.queue_wait_cycles == 0);
+    }
+
+    #[test]
+    fn queue_depth_tracks_backlog() {
+        let c = cfg();
+        let mut d = BankedDram::new(c, DEFAULT_QUEUE_CAP);
+        for i in 0..6 {
+            d.issue(read(0, i * 64)); // one bank, same row, burst pile-up
+        }
+        assert_eq!(d.stats().max_queue_depth, 6);
+        // spaced-out arrivals never queue
+        let mut d = BankedDram::new(c, DEFAULT_QUEUE_CAP);
+        for i in 0..6 {
+            d.issue(read(i * 1000, i * 64));
+        }
+        assert_eq!(d.stats().max_queue_depth, 1);
+    }
+
+    #[test]
+    fn latency_includes_queue_wait() {
+        let c = cfg();
+        let mut d = BankedDram::new(c, 1);
+        let d1 = d.issue(read(0, 0));
+        // arrives while the first is in service; the single slot frees
+        // only at d1, so service (a row hit) starts there
+        let d2 = d.issue(read(1, 64));
+        assert_eq!(d2, d1 + c.t_cas + c.t_burst);
+        let s = d.stats();
+        assert_eq!(s.queue_wait_cycles, d1 - 1);
+        assert_eq!(s.max_latency_cycles, d2 - 1);
+    }
+
+    #[test]
+    fn banked_layer_replay_is_deterministic() {
+        use crate::arch::LayerShape;
+        use crate::config;
+        use crate::dataflow::Dataflow;
+        let l = LayerShape::conv("c", 16, 16, 3, 3, 8, 16, 1);
+        let cfgm = config::ArchConfig { array_h: 8, array_w: 8, ..config::paper_default() };
+        let a = banked_replay_layer(Dataflow::Os, &l, &cfgm, cfg(), DEFAULT_QUEUE_CAP);
+        let b = banked_replay_layer(Dataflow::Os, &l, &cfgm, cfg(), DEFAULT_QUEUE_CAP);
+        assert_eq!(a, b);
+        assert!(a.requests > 0);
+        assert!(a.row_hits + a.row_conflicts + a.cold_misses == a.requests);
+        // derived-metric sanity: hit rate is a fraction of requests and
+        // both latency and bandwidth figures are positive and finite
+        assert!(a.hit_rate() >= 0.0 && a.hit_rate() <= 1.0);
+        assert!(a.avg_latency() > 0.0 && a.avg_latency().is_finite());
+        assert!(a.achieved_bw() > 0.0 && a.achieved_bw().is_finite());
+    }
+}

@@ -14,6 +14,10 @@
 
 use std::collections::VecDeque;
 
+pub mod banked;
+
+pub use banked::{banked_replay_layer, BankedDram, BankedStats, DEFAULT_QUEUE_CAP};
+
 /// DRAM timing/geometry parameters (cycles / bytes).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DramConfig {

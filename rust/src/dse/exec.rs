@@ -386,6 +386,8 @@ mod tests {
             partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![4.0, 16.0],
+            topologies: vec![crate::engine::FabricKind::Flat],
+            link_bw: vec![crate::engine::DEFAULT_LINK_BW],
             energy: "28nm".into(),
         }
     }

@@ -65,7 +65,9 @@ use crate::config::{workloads, ArchConfig, Topology};
 use crate::dataflow::Dataflow;
 use crate::dram::{self, DramConfig};
 use crate::energy::EnergyModel;
-use crate::engine::{Engine, MultiArrayConfig, Partition};
+use crate::engine::{
+    Engine, FabricConfig, FabricKind, MultiArrayConfig, MultiOpts, Partition, DEFAULT_LINK_BW,
+};
 use crate::memory::stall;
 use crate::util::json::Json;
 use crate::{Error, Result};
@@ -97,6 +99,13 @@ pub struct Campaign {
     pub sram_kb: Vec<u64>,
     /// DRAM read bandwidths in bytes/cycle — the stall-model axis.
     pub dram_bw: Vec<f64>,
+    /// Interconnect topologies for multi-array points
+    /// ([`crate::engine::fabric`]): `[Flat]` (the default) keeps the
+    /// legacy equal-split contention; `Line`/`Ring`/`Mesh` route the
+    /// shared-DRAM traffic hop by hop.
+    pub topologies: Vec<FabricKind>,
+    /// Per-link bandwidths in bytes/cycle for the fabric axis.
+    pub link_bw: Vec<f64>,
     /// Energy-model preset name (see [`EnergyModel::preset`]).
     pub energy: String,
 }
@@ -115,6 +124,8 @@ impl Campaign {
             partitions: vec![Partition::default()],
             sram_kb: vec![64, 256, 1024],
             dram_bw: vec![10.0, 40.0],
+            topologies: vec![FabricKind::Flat],
+            link_bw: vec![DEFAULT_LINK_BW],
             energy: "28nm".into(),
         }
     }
@@ -131,6 +142,8 @@ impl Campaign {
             partitions: Partition::ALL.to_vec(),
             sram_kb: vec![512],
             dram_bw: vec![10.0, 40.0],
+            topologies: vec![FabricKind::Flat],
+            link_bw: vec![DEFAULT_LINK_BW],
             energy: "28nm".into(),
         }
     }
@@ -144,6 +157,8 @@ impl Campaign {
             * self.partitions.len()
             * self.sram_kb.len()
             * self.dram_bw.len()
+            * self.topologies.len()
+            * self.link_bw.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -179,6 +194,12 @@ impl Campaign {
         if self.dram_bw.iter().any(|&bw| !bw.is_finite() || bw <= 0.0) {
             return bad("dram_bw entries must be finite and positive".into());
         }
+        if self.topologies.is_empty() || self.link_bw.is_empty() {
+            return bad("topologies and link_bw axes need at least one value".into());
+        }
+        if self.link_bw.iter().any(|&bw| !bw.is_finite() || bw <= 0.0) {
+            return bad("link_bw entries must be finite and positive".into());
+        }
         if EnergyModel::preset(&self.energy).is_none() {
             return bad(format!("unknown energy preset {:?} (28nm|45nm|7nm)", self.energy));
         }
@@ -197,6 +218,10 @@ impl Campaign {
     pub fn point(&self, index: usize) -> CampaignPoint {
         assert!(index < self.len(), "point index {index} out of {}", self.len());
         let mut i = index;
+        let link_bw = self.link_bw[i % self.link_bw.len()];
+        i /= self.link_bw.len();
+        let topology = self.topologies[i % self.topologies.len()];
+        i /= self.topologies.len();
         let dram_bw = self.dram_bw[i % self.dram_bw.len()];
         i /= self.dram_bw.len();
         let sram_kb = self.sram_kb[i % self.sram_kb.len()];
@@ -219,6 +244,8 @@ impl Campaign {
             partition,
             sram_kb,
             dram_bw,
+            topology,
+            link_bw,
         }
     }
 
@@ -296,6 +323,20 @@ impl Campaign {
             "dram_bw",
             Json::Arr(self.dram_bw.iter().map(|&bw| Json::f64(bw)).collect()),
         ));
+        // fabric axes: same omit-when-default convention as
+        // nodes/partitions, so pre-fabric fingerprints keep resuming
+        if self.topologies != [FabricKind::Flat] {
+            fields.push((
+                "topologies",
+                Json::Arr(self.topologies.iter().map(|t| Json::str(t.name())).collect()),
+            ));
+        }
+        if self.link_bw != [DEFAULT_LINK_BW] {
+            fields.push((
+                "link_bw",
+                Json::Arr(self.link_bw.iter().map(|&bw| Json::f64(bw)).collect()),
+            ));
+        }
         fields.push(("energy", Json::str(self.energy.clone())));
         Json::obj(fields)
     }
@@ -396,6 +437,31 @@ impl Campaign {
                     .collect::<std::result::Result<Vec<_>, String>>()?
             }
         };
+        let topologies = match j.get("topologies") {
+            None => vec![FabricKind::Flat],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"topologies\" must be an array")?;
+                a.iter()
+                    .map(|t| {
+                        let s =
+                            t.as_str().ok_or("\"topologies\" entries must be strings")?;
+                        FabricKind::parse(s).map_err(|e| e.to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
+        let link_bw = match j.get("link_bw") {
+            None => vec![DEFAULT_LINK_BW],
+            Some(v) => {
+                let a = v.as_arr().ok_or("\"link_bw\" must be an array")?;
+                a.iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .ok_or_else(|| "\"link_bw\" entries must be numbers".to_string())
+                    })
+                    .collect::<std::result::Result<Vec<_>, String>>()?
+            }
+        };
         let energy = j.str_field("energy").unwrap_or("28nm").to_string();
         Ok(Campaign {
             name,
@@ -406,6 +472,8 @@ impl Campaign {
             partitions,
             sram_kb,
             dram_bw,
+            topologies,
+            link_bw,
             energy,
         })
     }
@@ -442,6 +510,12 @@ pub struct CampaignPoint {
     pub sram_kb: u64,
     /// Modeled DRAM read bandwidth in bytes/cycle (shared across nodes).
     pub dram_bw: f64,
+    /// Interconnect topology for multi-array points (`Flat` = legacy
+    /// equal-split contention, no fabric model).
+    pub topology: FabricKind,
+    /// Per-link bandwidth in bytes/cycle (only meaningful with a
+    /// non-`Flat` topology).
+    pub link_bw: f64,
 }
 
 impl CampaignPoint {
@@ -469,6 +543,8 @@ impl CampaignPoint {
             ("partition", Json::str(self.partition.name())),
             ("sram_kb", Json::u64(self.sram_kb)),
             ("dram_bw", Json::f64(self.dram_bw)),
+            ("topology", Json::str(self.topology.name())),
+            ("link_bw", Json::f64(self.link_bw)),
         ])
     }
 
@@ -493,6 +569,15 @@ impl CampaignPoint {
             },
             sram_kb: need_u64(j, "sram_kb")?,
             dram_bw: need_f64(j, "dram_bw")?,
+            // absent in pre-fabric journals: flat-interconnect defaults
+            topology: match j.str_field("topology") {
+                None => FabricKind::Flat,
+                Some(s) => FabricKind::parse(s).map_err(|e| e.to_string())?,
+            },
+            link_bw: match j.get("link_bw") {
+                None => DEFAULT_LINK_BW,
+                Some(_) => need_f64(j, "link_bw")?,
+            },
         })
     }
 }
@@ -678,7 +763,13 @@ fn evaluate_multi_point(
     cfg: &ArchConfig,
 ) -> PointMetrics {
     let multi = MultiArrayConfig::new(point.nodes, cfg.array_h, cfg.array_w, point.partition);
-    let report = engine.run_multi_with(cfg, topo, &multi, Some(point.dram_bw));
+    let opts = MultiOpts {
+        shared_dram_bw: Some(point.dram_bw),
+        fabric: (point.topology != FabricKind::Flat)
+            .then(|| FabricConfig::new(point.topology, point.link_bw)),
+        dram: None,
+    };
+    let report = engine.run_multi_opts(cfg, topo, &multi, &opts);
     // row-hit statistics: replay each distinct per-node sub-shape once
     // (memoized) and weight by how many nodes stream it
     let mut dram_requests = 0u64;
@@ -724,6 +815,8 @@ mod tests {
             partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![4.0, 16.0],
+            topologies: vec![FabricKind::Flat],
+            link_bw: vec![DEFAULT_LINK_BW],
             energy: "28nm".into(),
         }
     }
@@ -875,6 +968,8 @@ mod tests {
             partitions: vec![Partition::OutputChannels, Partition::Auto],
             sram_kb: vec![64],
             dram_bw: vec![4.0, 16.0],
+            topologies: vec![FabricKind::Flat],
+            link_bw: vec![DEFAULT_LINK_BW],
             energy: "28nm".into(),
         }
     }
@@ -919,6 +1014,52 @@ mod tests {
         .unwrap();
         let lp = CampaignPoint::from_json(&legacy).unwrap();
         assert_eq!((lp.nodes, lp.partition), (1, Partition::OutputChannels));
+    }
+
+    #[test]
+    fn fabric_axes_enumerate_innermost_and_round_trip() {
+        let mut c = tiny_multi();
+        c.topologies = vec![FabricKind::Flat, FabricKind::Line];
+        c.link_bw = vec![DEFAULT_LINK_BW, 4.0];
+        c.validate().unwrap();
+        assert_eq!(c.len(), 8 * 4);
+        // link_bw is the innermost axis, topology next
+        assert_eq!((c.point(0).topology, c.point(0).link_bw), (FabricKind::Flat, DEFAULT_LINK_BW));
+        assert_eq!(c.point(1).link_bw, 4.0);
+        assert_eq!(c.point(2).topology, FabricKind::Line);
+        assert_eq!(c.point(4).dram_bw, 16.0, "dram_bw advances after the fabric axes");
+        // canonical form keeps the axes; defaults are omitted
+        let back = Campaign::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert_ne!(c.fingerprint(), tiny_multi().fingerprint());
+        let flat_wire = tiny_multi().to_json().to_string();
+        assert!(
+            !flat_wire.contains("topologies") && !flat_wire.contains("link_bw"),
+            "{flat_wire}"
+        );
+        // zero / non-finite link bandwidths are rejected at validation
+        let mut bad = c.clone();
+        bad.link_bw = vec![0.0];
+        assert!(bad.validate().is_err());
+        bad.link_bw = vec![f64::INFINITY];
+        assert!(bad.validate().is_err());
+        // a fabric point evaluates deterministically and journals exactly
+        let topos = c.resolve_workloads(true).unwrap();
+        let engine = Engine::new(config::paper_default());
+        let p = c.point(c.len() - 2); // 4 nodes, auto, line fabric
+        assert_eq!((p.nodes, p.topology), (4, FabricKind::Line));
+        let m = evaluate_point(&engine, &topos["ncf"], &p);
+        assert_eq!(m, evaluate_point(&engine, &topos["ncf"], &p));
+        let cp = CompletedPoint { point: p, metrics: m };
+        let rt = CompletedPoint::from_json(&Json::parse(&cp.to_json().to_string()).unwrap());
+        assert_eq!(rt.unwrap(), cp);
+        // a pre-fabric journal line still parses with flat defaults
+        let legacy = Json::parse(
+            r#"{"index":0,"workload":"ncf","dataflow":"os","array_h":8,"array_w":8,"sram_kb":64,"dram_bw":4}"#,
+        )
+        .unwrap();
+        let lp = CampaignPoint::from_json(&legacy).unwrap();
+        assert_eq!((lp.topology, lp.link_bw), (FabricKind::Flat, DEFAULT_LINK_BW));
     }
 
     #[test]

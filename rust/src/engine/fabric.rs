@@ -1,0 +1,486 @@
+//! Route-aware interconnect fabric for the multi-array system (§IV-E).
+//!
+//! The paper tabulates the interconnect bandwidth a scale-out system
+//! *demands* but never models what the interconnect *delivers*. This
+//! module turns that column into a simulated quantity: nodes sit on a
+//! [`Topology`] ([`Line`] / [`Ring`] / [`Mesh`]) with the memory
+//! controller at node 0, every node's read traffic is routed hop by hop
+//! toward it, and per-link loads plus a demand-proportional DRAM share
+//! decide each node's *effective* fetch bandwidth:
+//!
+//! * DRAM side: the shared interface serves the nodes' aggregate demand
+//!   `D` at `dram_bw`, so draining takes `D / dram_bw` cycles — each
+//!   node's share is proportional to its own demand (`bw * d_j / D`).
+//! * Fabric side: a flow from node `j` crosses every link on its route
+//!   and is stored-and-forwarded behind the other flows sharing those
+//!   links, so its path drains in `Σ_route load_l / link_bw` cycles.
+//!
+//! Whichever is slower binds: the node's effective bandwidth is its own
+//! demand over that time, and its fold/fetch schedule replays against it
+//! through [`crate::memory::stall`]. The model is deliberately
+//! closed-form per layer (no RNG, no wall clock): reports are
+//! byte-identical across runs and machines, so fabric metrics join the
+//! deterministic class pinned by the golden suite.
+//!
+//! Two structural facts the property suite pins:
+//!
+//! * **Flow conservation** — `Σ link_bytes == Σ d_j * hops_j`
+//!   ([`FabricLayerReport::hop_bytes`]): every byte is accounted on
+//!   every link it crosses, no more, no less.
+//! * **Mesh never slower than Line** at equal link bandwidth: every
+//!   mesh route's link loads embed termwise into the line's (the line's
+//!   first link carries the whole non-root demand), so per-node
+//!   effective bandwidth can only improve.
+
+use crate::util::isqrt;
+use crate::{Error, Result};
+
+/// Interconnect topology selector. `Flat` is the legacy contention
+/// model (even bandwidth split, no routed fabric) and the default, so
+/// every pre-fabric surface keeps its exact behavior.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum FabricKind {
+    #[default]
+    Flat,
+    Line,
+    Ring,
+    Mesh,
+}
+
+impl FabricKind {
+    pub const ALL: [FabricKind; 4] =
+        [FabricKind::Flat, FabricKind::Line, FabricKind::Ring, FabricKind::Mesh];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Flat => "flat",
+            FabricKind::Line => "line",
+            FabricKind::Ring => "ring",
+            FabricKind::Mesh => "mesh",
+        }
+    }
+
+    /// Parse the wire/CLI spelling (the `name()` strings).
+    pub fn parse(s: &str) -> Result<FabricKind> {
+        match s {
+            "flat" => Ok(FabricKind::Flat),
+            "line" => Ok(FabricKind::Line),
+            "ring" => Ok(FabricKind::Ring),
+            "mesh" => Ok(FabricKind::Mesh),
+            other => Err(Error::Config(format!(
+                "unknown fabric {other:?} (flat|line|ring|mesh)"
+            ))),
+        }
+    }
+}
+
+/// A routed fabric: topology kind plus per-link bandwidth in
+/// bytes/cycle (every link is provisioned identically).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FabricConfig {
+    pub kind: FabricKind,
+    pub link_bw: f64,
+}
+
+/// Default per-link bandwidth (bytes/cycle) when a surface enables a
+/// fabric without provisioning one — matches the shared-DRAM bandwidth
+/// the scaleout study uses.
+pub const DEFAULT_LINK_BW: f64 = 16.0;
+
+impl FabricConfig {
+    pub fn new(kind: FabricKind, link_bw: f64) -> Self {
+        FabricConfig { kind, link_bw }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.link_bw.is_finite() || self.link_bw <= 0.0 {
+            return Err(Error::Config(format!(
+                "link bandwidth must be positive and finite, got {}",
+                self.link_bw
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A node-to-memory-controller routed interconnect over `nodes` nodes.
+/// Node 0 hosts the memory controller (and is also a compute node, with
+/// a zero-hop route); links are bidirectional and identified by a dense
+/// index in `0..link_count()`.
+pub trait Topology {
+    /// Stable display name (`"line"` / `"ring"` / `"mesh"`).
+    fn name(&self) -> &'static str;
+
+    /// Number of links in the fabric.
+    fn link_count(&self) -> usize;
+
+    /// Links node `j`'s traffic crosses toward node 0, in traversal
+    /// order starting at the node. Node 0 returns an empty route.
+    fn route(&self, node: u64) -> Vec<usize>;
+}
+
+/// Nodes in a row: `i -- i+1`; link `i` joins nodes `i` and `i+1`.
+/// Everything funnels through link 0, the classic worst case.
+pub struct Line {
+    pub nodes: u64,
+}
+
+impl Topology for Line {
+    fn name(&self) -> &'static str {
+        "line"
+    }
+
+    fn link_count(&self) -> usize {
+        self.nodes.saturating_sub(1) as usize
+    }
+
+    fn route(&self, node: u64) -> Vec<usize> {
+        (0..node as usize).rev().collect()
+    }
+}
+
+/// Nodes in a cycle: link `i` joins nodes `i` and `(i+1) % nodes`; each
+/// node takes the shorter direction to node 0 (ties go clockwise, i.e.
+/// through decreasing node indices).
+pub struct Ring {
+    pub nodes: u64,
+}
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn link_count(&self) -> usize {
+        if self.nodes < 2 {
+            0
+        } else {
+            self.nodes as usize
+        }
+    }
+
+    fn route(&self, node: u64) -> Vec<usize> {
+        if node == 0 || self.nodes < 2 {
+            return Vec::new();
+        }
+        let down = node; // hops via node-1, ..., 0
+        let up = self.nodes - node; // hops via node+1, ..., n-1, 0
+        if down <= up {
+            (0..node as usize).rev().collect()
+        } else {
+            (node as usize..self.nodes as usize).collect()
+        }
+    }
+}
+
+/// Nodes row-major on a `side x side` grid (`side = ceil(sqrt(nodes))`,
+/// trailing positions vacant), XY-routed: along the row to column 0,
+/// then up column 0 to the controller at (0, 0). Horizontal links come
+/// first in the index space, then vertical ones.
+pub struct Mesh {
+    pub nodes: u64,
+    side: u64,
+}
+
+impl Mesh {
+    pub fn new(nodes: u64) -> Self {
+        let s = isqrt(nodes);
+        let side = if s * s == nodes { s } else { s + 1 };
+        Mesh { nodes, side: side.max(1) }
+    }
+
+    /// Grid side length.
+    pub fn side(&self) -> u64 {
+        self.side
+    }
+
+    /// Horizontal link between `(row, col)` and `(row, col - 1)`.
+    fn h_link(&self, row: u64, col: u64) -> usize {
+        (row * (self.side - 1) + (col - 1)) as usize
+    }
+
+    /// Vertical link between `(row, col)` and `(row - 1, col)`.
+    fn v_link(&self, row: u64, col: u64) -> usize {
+        (self.side * (self.side - 1) + col * (self.side - 1) + (row - 1)) as usize
+    }
+}
+
+impl Topology for Mesh {
+    fn name(&self) -> &'static str {
+        "mesh"
+    }
+
+    fn link_count(&self) -> usize {
+        if self.nodes < 2 {
+            0
+        } else {
+            (2 * self.side * (self.side - 1)) as usize
+        }
+    }
+
+    fn route(&self, node: u64) -> Vec<usize> {
+        if node == 0 || self.nodes < 2 {
+            return Vec::new();
+        }
+        let (row, col) = (node / self.side, node % self.side);
+        let mut links = Vec::with_capacity((row + col) as usize);
+        for c in (1..=col).rev() {
+            links.push(self.h_link(row, c));
+        }
+        for r in (1..=row).rev() {
+            links.push(self.v_link(r, 0));
+        }
+        links
+    }
+}
+
+/// Instantiate the topology for `kind` over `nodes` placed nodes.
+/// `Flat` has no routed fabric and returns `None`.
+pub fn topology(kind: FabricKind, nodes: u64) -> Option<Box<dyn Topology>> {
+    match kind {
+        FabricKind::Flat => None,
+        FabricKind::Line => Some(Box::new(Line { nodes })),
+        FabricKind::Ring => Some(Box::new(Ring { nodes })),
+        FabricKind::Mesh => Some(Box::new(Mesh::new(nodes))),
+    }
+}
+
+/// Per-node outcome of routing one layer's flows over a fabric.
+pub(crate) struct Contention {
+    /// Effective fetch bandwidth per node (bytes/cycle); `None` means
+    /// unconstrained (no DRAM bandwidth modeled and an empty route, or
+    /// a node with zero demand).
+    pub eff_bw: Vec<Option<f64>>,
+    /// Total bytes crossing each link.
+    pub link_bytes: Vec<u64>,
+    /// Route of each node (link ids in traversal order).
+    pub routes: Vec<Vec<usize>>,
+    /// `Σ d_j * hops_j`: every byte counted on every link it crosses.
+    pub hop_bytes: u64,
+}
+
+/// Route per-node read demands (bytes) over the fabric and resolve the
+/// contention model described in the module docs. `demands[j]` is node
+/// `j`'s read traffic; node 0 co-locates with the memory controller.
+pub(crate) fn contention(
+    topo: &dyn Topology,
+    link_bw: f64,
+    dram_bw: Option<f64>,
+    demands: &[u64],
+) -> Contention {
+    let routes: Vec<Vec<usize>> = (0..demands.len() as u64).map(|j| topo.route(j)).collect();
+    let mut link_bytes = vec![0u64; topo.link_count()];
+    let mut hop_bytes = 0u64;
+    for (j, route) in routes.iter().enumerate() {
+        for &l in route {
+            if let Some(b) = link_bytes.get_mut(l) {
+                *b += demands[j];
+            }
+        }
+        hop_bytes += demands[j] * route.len() as u64;
+    }
+    let total_demand: u64 = demands.iter().sum();
+    let dram_time = match dram_bw {
+        Some(bw) => total_demand as f64 / bw,
+        None => 0.0,
+    };
+    let eff_bw = demands
+        .iter()
+        .zip(&routes)
+        .map(|(&d, route)| {
+            if d == 0 {
+                return None;
+            }
+            let mut path_time = 0.0f64;
+            for &l in route {
+                path_time += link_bytes[l] as f64 / link_bw;
+            }
+            if path_time > dram_time {
+                // link-bound: the node's bytes drain behind every flow
+                // sharing its route, hop by hop
+                Some(d as f64 / path_time)
+            } else {
+                // DRAM-bound: demand-proportional share of the
+                // interface (a single node gets the full bandwidth,
+                // bit-for-bit)
+                dram_bw.map(|bw| bw * (d as f64 / total_demand as f64))
+            }
+        })
+        .collect();
+    Contention { eff_bw, link_bytes, routes, hop_bytes }
+}
+
+/// Per-layer fabric accounting attached to a
+/// [`crate::engine::MultiLayerReport`] when a fabric is enabled.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FabricLayerReport {
+    pub kind: FabricKind,
+    pub link_bw: f64,
+    /// Nodes placed on the fabric for this layer (busy nodes).
+    pub placed_nodes: u64,
+    /// Total bytes crossing each link over the layer.
+    pub link_bytes: Vec<u64>,
+    /// Per-link average throughput over the layer's total (stalled)
+    /// runtime.
+    pub link_avg_bw: Vec<f64>,
+    /// Per-link offered peak: the per-flow burst peaks of every flow
+    /// crossing the link, summed (nodes burst concurrently).
+    pub link_peak_bw: Vec<f64>,
+    /// `Σ demand_j * hops_j` — the in-flight message-hop total; equals
+    /// the sum of `link_bytes` (flow conservation).
+    pub hop_bytes: u64,
+    /// Stalled completion time of each placed node (main-share nodes
+    /// first, the remainder node last); the layer finishes with the
+    /// maximum.
+    pub node_total_cycles: Vec<u64>,
+    /// Banked-DRAM replay of the slowest share's request stream, when
+    /// the banked memory model is enabled alongside the fabric.
+    pub dram: Option<crate::dram::BankedStats>,
+}
+
+impl FabricLayerReport {
+    /// Busiest link by average throughput.
+    pub fn max_link_avg_bw(&self) -> f64 {
+        self.link_avg_bw.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Busiest link by offered peak.
+    pub fn max_link_peak_bw(&self) -> f64 {
+        self.link_peak_bw.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// Total bytes crossing any link (== `hop_bytes`).
+    pub fn total_link_bytes(&self) -> u64 {
+        self.link_bytes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_routes_funnel_through_link_zero() {
+        let line = Line { nodes: 4 };
+        assert_eq!(line.link_count(), 3);
+        assert_eq!(line.route(0), Vec::<usize>::new());
+        assert_eq!(line.route(1), vec![0]);
+        assert_eq!(line.route(3), vec![2, 1, 0]);
+    }
+
+    #[test]
+    fn ring_takes_the_shorter_direction() {
+        let ring = Ring { nodes: 6 };
+        assert_eq!(ring.link_count(), 6);
+        assert_eq!(ring.route(1), vec![0]);
+        // tie at n/2 goes clockwise (down through decreasing indices)
+        assert_eq!(ring.route(3), vec![2, 1, 0]);
+        assert_eq!(ring.route(4), vec![4, 5]);
+        assert_eq!(ring.route(5), vec![5]);
+    }
+
+    #[test]
+    fn mesh_xy_routes_go_row_first_then_column_zero() {
+        let mesh = Mesh::new(16);
+        assert_eq!(mesh.side(), 4);
+        assert_eq!(mesh.link_count(), 24);
+        assert_eq!(mesh.route(0), Vec::<usize>::new());
+        // node 5 = (1, 1): one hop left, one hop up
+        assert_eq!(mesh.route(5), vec![mesh.h_link(1, 1), mesh.v_link(1, 0)]);
+        // node 15 = (3, 3): three left, three up
+        assert_eq!(
+            mesh.route(15),
+            vec![
+                mesh.h_link(3, 3),
+                mesh.h_link(3, 2),
+                mesh.h_link(3, 1),
+                mesh.v_link(3, 0),
+                mesh.v_link(2, 0),
+                mesh.v_link(1, 0),
+            ]
+        );
+    }
+
+    #[test]
+    fn mesh_covers_non_square_node_counts() {
+        let mesh = Mesh::new(6); // 3x3 grid, positions 6..9 vacant
+        assert_eq!(mesh.side(), 3);
+        for j in 0..6 {
+            for l in mesh.route(j) {
+                assert!(l < mesh.link_count(), "node {j} link {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn link_loads_conserve_flow() {
+        for kind in [FabricKind::Line, FabricKind::Ring, FabricKind::Mesh] {
+            let topo = topology(kind, 7).unwrap();
+            let demands = [5u64, 11, 0, 3, 9, 2, 7];
+            let c = contention(topo.as_ref(), 4.0, Some(16.0), &demands);
+            let linked: u64 = c.link_bytes.iter().sum();
+            assert_eq!(linked, c.hop_bytes, "{}", kind.name());
+            let by_route: u64 = demands
+                .iter()
+                .zip(&c.routes)
+                .map(|(d, r)| d * r.len() as u64)
+                .sum();
+            assert_eq!(linked, by_route, "{}", kind.name());
+        }
+    }
+
+    #[test]
+    fn single_node_contention_is_the_plain_dram_bandwidth() {
+        let topo = topology(FabricKind::Mesh, 1).unwrap();
+        let c = contention(topo.as_ref(), 4.0, Some(16.0), &[1234]);
+        // bit-for-bit the configured bandwidth: d/D == 1.0 exactly
+        assert_eq!(c.eff_bw, vec![Some(16.0)]);
+        assert_eq!(c.hop_bytes, 0);
+        // and with no DRAM bandwidth either, fully unconstrained
+        let c = contention(topo.as_ref(), 4.0, None, &[1234]);
+        assert_eq!(c.eff_bw, vec![None]);
+    }
+
+    #[test]
+    fn farther_line_nodes_get_less_effective_bandwidth() {
+        let topo = topology(FabricKind::Line, 4).unwrap();
+        let c = contention(topo.as_ref(), 8.0, None, &[10, 10, 10, 10]);
+        let bw: Vec<f64> = c.eff_bw.iter().map(|b| b.unwrap_or(f64::INFINITY)).collect();
+        assert!(bw[0].is_infinite(), "root node is link-free");
+        assert!(bw[1] > bw[2] && bw[2] > bw[3], "{bw:?}");
+    }
+
+    #[test]
+    fn mesh_effective_bandwidth_dominates_line_per_node() {
+        let demands = [7u64, 13, 5, 11, 3, 9, 6, 2, 8];
+        let line = topology(FabricKind::Line, 9).unwrap();
+        let mesh = topology(FabricKind::Mesh, 9).unwrap();
+        let cl = contention(line.as_ref(), 2.0, Some(16.0), &demands);
+        let cm = contention(mesh.as_ref(), 2.0, Some(16.0), &demands);
+        for j in 0..demands.len() {
+            let l = cl.eff_bw[j].unwrap_or(f64::INFINITY);
+            let m = cm.eff_bw[j].unwrap_or(f64::INFINITY);
+            assert!(m >= l, "node {j}: mesh {m} < line {l}");
+        }
+    }
+
+    #[test]
+    fn kind_parse_roundtrips() {
+        for kind in FabricKind::ALL {
+            assert_eq!(FabricKind::parse(kind.name()).ok(), Some(kind));
+        }
+        assert!(FabricKind::parse("torus").is_err());
+        assert_eq!(FabricKind::default(), FabricKind::Flat);
+    }
+
+    #[test]
+    fn link_bw_validation_rejects_non_positive() {
+        assert!(FabricConfig::new(FabricKind::Line, 16.0).validate().is_ok());
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(
+                FabricConfig::new(FabricKind::Line, bad).validate().is_err(),
+                "{bad}"
+            );
+        }
+    }
+}

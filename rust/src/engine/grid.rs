@@ -16,7 +16,8 @@ use crate::sim::WorkloadReport;
 use crate::sweep::parallel_map;
 
 use super::cache::MemoStats;
-use super::multi::{MultiArrayConfig, Partition};
+use super::fabric::{FabricConfig, FabricKind, DEFAULT_LINK_BW};
+use super::multi::{MultiArrayConfig, MultiOpts, Partition};
 use super::Engine;
 
 /// One evaluated grid point: the config coordinates plus the full
@@ -34,6 +35,15 @@ pub struct SweepPoint {
     /// single-array point (bit-identical to a grid without the axes).
     pub nodes: u64,
     pub partition: Partition,
+    /// Interconnect coordinates: the route-aware fabric this point's
+    /// multi-array system was simulated under (`Flat` = the legacy
+    /// contention-free interconnect) and its per-link bandwidth.
+    pub fabric: FabricKind,
+    pub link_bw: f64,
+    /// Link-contention stall cycles summed over the workload (always 0
+    /// on single-array and `Flat` points — the grid models no shared
+    /// DRAM bandwidth).
+    pub stall_cycles: u64,
     pub report: WorkloadReport,
 }
 
@@ -156,6 +166,8 @@ pub struct SweepGrid<'e> {
     sram_kb: Vec<(u64, u64)>,
     nodes: Vec<u64>,
     partitions: Vec<Partition>,
+    fabrics: Vec<FabricKind>,
+    link_bws: Vec<f64>,
     threads: usize,
 }
 
@@ -170,6 +182,8 @@ impl<'e> SweepGrid<'e> {
             sram_kb: vec![(cfg.ifmap_sram_kb, cfg.filter_sram_kb)],
             nodes: vec![1],
             partitions: vec![Partition::default()],
+            fabrics: vec![FabricKind::Flat],
+            link_bws: vec![DEFAULT_LINK_BW],
             threads: engine.threads(),
         }
     }
@@ -245,6 +259,27 @@ impl<'e> SweepGrid<'e> {
         self
     }
 
+    /// Interconnect-topology axis for multi-array points
+    /// ([`crate::engine::fabric`]). `Flat` (the default) keeps the
+    /// contention-free legacy interconnect; `Line`/`Ring`/`Mesh` route
+    /// every node's DRAM traffic hop by hop and report link-bound
+    /// stalls in [`SweepPoint::stall_cycles`].
+    pub fn fabrics(mut self, kinds: &[FabricKind]) -> Self {
+        self.fabrics = kinds.to_vec();
+        self
+    }
+
+    /// Per-link bandwidth axis (bytes/cycle) for the fabric axis.
+    /// Panics on non-finite or non-positive bandwidths.
+    pub fn link_bws(mut self, bws: &[f64]) -> Self {
+        assert!(
+            bws.iter().all(|bw| bw.is_finite() && *bw > 0.0),
+            "link bandwidths must be finite and positive"
+        );
+        self.link_bws = bws.to_vec();
+        self
+    }
+
     /// Worker-thread override (default: the engine's thread count).
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = n.max(1);
@@ -259,6 +294,8 @@ impl<'e> SweepGrid<'e> {
             * self.sram_kb.len()
             * self.nodes.len()
             * self.partitions.len()
+            * self.fabrics.len()
+            * self.link_bws.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -271,7 +308,8 @@ impl<'e> SweepGrid<'e> {
     pub fn run(self) -> SweepOutcome {
         let engine = self.engine;
         let base = engine.cfg();
-        type Job<'t> = (&'t Topology, Dataflow, (u64, u64), (u64, u64), u64, Partition);
+        type Job<'t> =
+            (&'t Topology, Dataflow, (u64, u64), (u64, u64), u64, Partition, FabricKind, f64);
         let mut jobs: Vec<Job<'_>> = Vec::new();
         for topo in &self.workloads {
             for &df in &self.dataflows {
@@ -279,7 +317,11 @@ impl<'e> SweepGrid<'e> {
                     for &sram in &self.sram_kb {
                         for &n in &self.nodes {
                             for &p in &self.partitions {
-                                jobs.push((topo, df, arr, sram, n, p));
+                                for &fk in &self.fabrics {
+                                    for &lbw in &self.link_bws {
+                                        jobs.push((topo, df, arr, sram, n, p, fk, lbw));
+                                    }
+                                }
                             }
                         }
                     }
@@ -289,8 +331,10 @@ impl<'e> SweepGrid<'e> {
 
         let before = engine.cache_stats();
         let t0 = Instant::now();
-        let points =
-            parallel_map(&jobs, self.threads, |&(topo, df, (h, w), (ikb, fkb), n, p)| {
+        let points = parallel_map(
+            &jobs,
+            self.threads,
+            |&(topo, df, (h, w), (ikb, fkb), n, p, fk, lbw)| {
                 let cfg = ArchConfig {
                     array_h: h,
                     array_w: w,
@@ -299,11 +343,18 @@ impl<'e> SweepGrid<'e> {
                     filter_sram_kb: fkb,
                     ..base.clone()
                 };
-                let report = if n == 1 {
-                    engine.run_topology_with(&cfg, topo)
+                let (report, stall_cycles) = if n == 1 {
+                    (engine.run_topology_with(&cfg, topo), 0)
                 } else {
                     let multi = MultiArrayConfig::new(n, h, w, p);
-                    engine.run_multi_with(&cfg, topo, &multi, None).to_workload_report()
+                    let opts = MultiOpts {
+                        shared_dram_bw: None,
+                        fabric: (fk != FabricKind::Flat)
+                            .then(|| FabricConfig::new(fk, lbw)),
+                        dram: None,
+                    };
+                    let r = engine.run_multi_opts(&cfg, topo, &multi, &opts);
+                    (r.to_workload_report(), r.total_stall_cycles())
                 };
                 SweepPoint {
                     workload: topo.name.clone(),
@@ -314,9 +365,13 @@ impl<'e> SweepGrid<'e> {
                     filter_sram_kb: fkb,
                     nodes: n,
                     partition: p,
+                    fabric: fk,
+                    link_bw: lbw,
+                    stall_cycles,
                     report,
                 }
-            });
+            },
+        );
         let wall = t0.elapsed();
         let memo = engine.cache_stats().since(&before);
         SweepOutcome { points, stats: SweepStats { points: jobs.len(), wall, memo } }
@@ -448,6 +503,30 @@ mod tests {
         // 4-node points really partitioned: aggregate DRAM differs from
         // one node's
         assert_ne!(multi.points[2].report.total_dram(), plain.points[0].report.total_dram());
+    }
+
+    #[test]
+    fn fabric_axis_reports_link_bound_stalls() {
+        let e = engine();
+        let t = topo("t");
+        let out = e
+            .sweep()
+            .workload(&t)
+            .square_arrays(&[8])
+            .nodes(&[16])
+            .fabrics(&[FabricKind::Flat, FabricKind::Line])
+            .link_bws(&[0.25])
+            .run();
+        assert_eq!(out.points.len(), 2);
+        let (flat, line) = (&out.points[0], &out.points[1]);
+        assert_eq!((flat.fabric, line.fabric), (FabricKind::Flat, FabricKind::Line));
+        assert_eq!(line.link_bw, 0.25);
+        // the grid models no shared DRAM bandwidth, so the flat point
+        // cannot stall; the starved line fabric must
+        assert_eq!(flat.stall_cycles, 0);
+        assert!(line.stall_cycles > 0, "0.25 B/cycle links must starve 16 nodes");
+        // fabric contention never changes the stall-free report
+        assert_eq!(flat.report, line.report);
     }
 
     #[test]

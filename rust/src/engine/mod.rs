@@ -34,14 +34,17 @@
 
 pub mod backend;
 pub(crate) mod cache;
+pub mod fabric;
 pub mod grid;
 pub mod multi;
 
 pub use backend::{Analytical, Backend, BackendKind, Rtl, TraceDriven};
 pub use cache::{MemoStats, WarmStats};
+pub use fabric::{FabricConfig, FabricKind, FabricLayerReport, DEFAULT_LINK_BW};
 pub use grid::{SweepGrid, SweepOutcome, SweepPoint, SweepStats};
 pub use multi::{
-    MultiArrayConfig, MultiLayerReport, MultiWorkloadReport, Partition, ScaleComparison,
+    MultiArrayConfig, MultiLayerReport, MultiOpts, MultiWorkloadReport, Partition,
+    ScaleComparison,
 };
 
 use std::path::{Path, PathBuf};

@@ -33,14 +33,18 @@
 //! used nodes — from the [`MultiLayerReport`] rather than recomputing
 //! them.
 
+use std::collections::BTreeMap;
+
 use crate::arch::LayerShape;
 use crate::config::{ArchConfig, Topology};
+use crate::dram::DramConfig;
 use crate::energy::EnergyBreakdown;
 use crate::memory::{stall, BandwidthReport, DramTraffic};
 use crate::sim::{LayerReport, WorkloadReport};
 use crate::util::{ceil_div, isqrt};
 use crate::{Error, Result};
 
+use super::fabric::{self, FabricConfig, FabricLayerReport};
 use super::Engine;
 
 /// Scale-out node geometry used in the paper's study (8x8 tensor-core
@@ -145,6 +149,34 @@ impl MultiArrayConfig {
     }
 }
 
+/// Options for a multi-array run beyond the partitioning itself.
+///
+/// `MultiOpts::default()` is the legacy analytical model — no
+/// shared-bandwidth stalls, no fabric, no banked DRAM — and reproduces
+/// every pre-fabric code path bit-for-bit. The route-aware fabric and
+/// the tick-driven banked DRAM substrate are strictly opt-in.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MultiOpts {
+    /// Finite shared DRAM read bandwidth (bytes/cycle); `None` simulates
+    /// stall-free. Without a fabric the bandwidth splits equally across
+    /// the busy nodes; with one it splits demand-proportionally and
+    /// competes with per-link contention.
+    pub shared_dram_bw: Option<f64>,
+    /// Route-aware interconnect model; `None` (or `FabricKind::Flat`)
+    /// keeps the legacy equal-split contention.
+    pub fabric: Option<FabricConfig>,
+    /// Banked tick-driven DRAM replay attached to the fabric report
+    /// (only consulted when `fabric` selects a real topology).
+    pub dram: Option<DramConfig>,
+}
+
+impl MultiOpts {
+    /// The legacy surface: only the equal-split shared bandwidth.
+    pub fn with_shared_bw(shared_dram_bw: Option<f64>) -> Self {
+        MultiOpts { shared_dram_bw, ..MultiOpts::default() }
+    }
+}
+
 /// One node-group of a partitioned layer: `count` nodes each running the
 /// same per-node sub-shape.
 #[derive(Clone, Debug, PartialEq)]
@@ -230,9 +262,13 @@ pub struct MultiLayerReport {
     /// Stall-free layer runtime: the slowest node (nodes run in
     /// parallel).
     pub cycles: u64,
-    /// Idle cycles of the slowest node under the shared DRAM bandwidth
-    /// (0 when simulated without one).
+    /// Extra cycles until the last node finishes under the shared DRAM
+    /// bandwidth / fabric contention, beyond the stall-free runtime
+    /// (0 when simulated without a bandwidth).
     pub stall_cycles: u64,
+    /// Per-link traffic report when the route-aware fabric model ran
+    /// (`None` on the legacy equal-split path).
+    pub fabric: Option<FabricLayerReport>,
 }
 
 impl MultiLayerReport {
@@ -419,6 +455,18 @@ impl Engine {
         multi: &MultiArrayConfig,
         shared_dram_bw: Option<f64>,
     ) -> MultiLayerReport {
+        self.run_multi_layer_opts(cfg, layer, multi, &MultiOpts::with_shared_bw(shared_dram_bw))
+    }
+
+    /// [`Engine::run_multi_layer_with`] with the full option surface:
+    /// route-aware fabric contention and the banked DRAM replay.
+    pub fn run_multi_layer_opts(
+        &self,
+        cfg: &ArchConfig,
+        layer: &LayerShape,
+        multi: &MultiArrayConfig,
+        opts: &MultiOpts,
+    ) -> MultiLayerReport {
         assert!(multi.nodes > 0, "multi-array config needs >= 1 node");
         let node_cfg = multi.node_cfg(cfg);
         match multi.partition {
@@ -428,15 +476,9 @@ impl Engine {
                     layer,
                     multi.nodes,
                     Partition::OutputChannels,
-                    shared_dram_bw,
+                    opts,
                 );
-                let b = self.multi_fixed(
-                    &node_cfg,
-                    layer,
-                    multi.nodes,
-                    Partition::Pixels,
-                    shared_dram_bw,
-                );
+                let b = self.multi_fixed(&node_cfg, layer, multi.nodes, Partition::Pixels, opts);
                 // compare total runtime (== stall-free cycles when no
                 // shared bandwidth is modeled, so the legacy closed
                 // forms — which never model one — stay bit-identical);
@@ -447,7 +489,7 @@ impl Engine {
                     a
                 }
             }
-            p => self.multi_fixed(&node_cfg, layer, multi.nodes, p, shared_dram_bw),
+            p => self.multi_fixed(&node_cfg, layer, multi.nodes, p, opts),
         }
     }
 
@@ -457,7 +499,7 @@ impl Engine {
         layer: &LayerShape,
         nodes: u64,
         partition: Partition,
-        shared_dram_bw: Option<f64>,
+        opts: &MultiOpts,
     ) -> MultiLayerReport {
         let shares = split_layer(layer, nodes, partition);
         let node_report = self.run_layer_with(node_cfg, &shares[0].layer);
@@ -468,16 +510,49 @@ impl Engine {
             Some(r) => node_report.timing.cycles.max(r.timing.cycles),
             None => node_report.timing.cycles,
         };
-        // shared DRAM: the busy nodes' demands sum against one interface,
-        // so each gets an equal share; the slowest (maximal) share's
-        // fold/fetch schedule replays against it
-        let stall_cycles = match shared_dram_bw {
-            Some(bw) => {
-                let share = bw / used_nodes as f64;
-                stall::stalled_runtime(node_cfg.dataflow, &shares[0].layer, node_cfg, share)
-                    .stall_cycles
+        let route_aware =
+            opts.fabric.and_then(|fc| fabric::topology(fc.kind, used_nodes).map(|t| (fc, t)));
+        let (stall_cycles, fabric) = match route_aware {
+            Some((fc, topo)) => {
+                let (stall, report) = self.fabric_stalls(
+                    node_cfg,
+                    &shares,
+                    &node_report,
+                    remainder.as_ref(),
+                    cycles,
+                    fc,
+                    opts,
+                    topo.as_ref(),
+                );
+                (stall, Some(report))
             }
-            None => 0,
+            None => {
+                // shared DRAM: the busy nodes' demands sum against one
+                // interface, so each gets an equal share; every share's
+                // fold/fetch schedule replays against it and the layer
+                // stalls with whichever node finishes LAST — not
+                // unconditionally the maximal share (under an equal
+                // split the maximal share provably dominates, but the
+                // selection must not bake that assumption in)
+                let stall = match opts.shared_dram_bw {
+                    Some(bw) => {
+                        let share_bw = bw / used_nodes as f64;
+                        let df = node_cfg.dataflow;
+                        let mut completion =
+                            stall::stalled_runtime(df, &shares[0].layer, node_cfg, share_bw)
+                                .total_cycles();
+                        if let Some(s) = shares.get(1) {
+                            completion = completion.max(
+                                stall::stalled_runtime(df, &s.layer, node_cfg, share_bw)
+                                    .total_cycles(),
+                            );
+                        }
+                        completion.saturating_sub(cycles)
+                    }
+                    None => 0,
+                };
+                (stall, None)
+            }
         };
         MultiLayerReport {
             layer: layer.clone(),
@@ -489,7 +564,106 @@ impl Engine {
             remainder,
             cycles,
             stall_cycles,
+            fabric,
         }
+    }
+
+    /// Route-aware contention: place the `count` main-share nodes on
+    /// fabric nodes `0..count` (nearest the memory controller at node 0)
+    /// and the remainder share on the farthest node, derive each node's
+    /// effective read bandwidth from the per-link loads, replay every
+    /// distinct (share, bandwidth) pair through the stall model, and
+    /// report per-link traffic. Returns the layer's stall cycles (the
+    /// slowest stalled completion minus the stall-free runtime) plus the
+    /// fabric report.
+    #[allow(clippy::too_many_arguments)]
+    fn fabric_stalls(
+        &self,
+        node_cfg: &ArchConfig,
+        shares: &[NodeShare],
+        node_report: &LayerReport,
+        remainder: Option<&LayerReport>,
+        cycles: u64,
+        fc: FabricConfig,
+        opts: &MultiOpts,
+        topo: &dyn fabric::Topology,
+    ) -> (u64, FabricLayerReport) {
+        let node_count = shares[0].count as usize;
+        let mut demands = vec![node_report.dram.read_bytes(); node_count];
+        let mut ideal_cycles = vec![node_report.timing.cycles; node_count];
+        let mut peaks = vec![node_report.bandwidth.peak_read_bw; node_count];
+        if let Some(r) = remainder {
+            demands.push(r.dram.read_bytes());
+            ideal_cycles.push(r.timing.cycles);
+            peaks.push(r.bandwidth.peak_read_bw);
+        }
+        let cont = fabric::contention(topo, fc.link_bw, opts.shared_dram_bw, &demands);
+        // replay each node's fold/fetch schedule at its effective
+        // bandwidth; identical (share, bandwidth) pairs replay once
+        let mut memo: BTreeMap<(bool, u64), u64> = BTreeMap::new();
+        let mut node_total_cycles = Vec::with_capacity(cont.eff_bw.len());
+        let mut completion = 0u64;
+        let mut slowest = 0usize;
+        for (j, eff) in cont.eff_bw.iter().enumerate() {
+            let is_rem = j >= node_count;
+            let total = match eff {
+                Some(b) => *memo.entry((is_rem, b.to_bits())).or_insert_with(|| {
+                    let l = if is_rem { &shares[1].layer } else { &shares[0].layer };
+                    stall::stalled_runtime(node_cfg.dataflow, l, node_cfg, *b).total_cycles()
+                }),
+                None => *ideal_cycles.get(j).unwrap_or(&0),
+            };
+            node_total_cycles.push(total);
+            if total > completion {
+                completion = total;
+                slowest = j;
+            }
+        }
+        let stall_cycles = completion.saturating_sub(cycles);
+        let total_cycles = cycles + stall_cycles;
+        let link_avg_bw = cont
+            .link_bytes
+            .iter()
+            .map(|&b| if total_cycles == 0 { 0.0 } else { b as f64 / total_cycles as f64 })
+            .collect();
+        // peak per link: every flow crossing it bursts its node's peak
+        // concurrently
+        let mut link_peak_bw = vec![0.0f64; cont.link_bytes.len()];
+        for (j, route) in cont.routes.iter().enumerate() {
+            for &l in route {
+                if let Some(p) = link_peak_bw.get_mut(l) {
+                    *p += peaks[j];
+                }
+            }
+        }
+        // banked tick-driven DRAM replay of the slowest node's share
+        let dram = opts.dram.map(|dcfg| {
+            let l = if slowest >= node_count && shares.len() > 1 {
+                &shares[1].layer
+            } else {
+                &shares[0].layer
+            };
+            crate::dram::banked_replay_layer(
+                node_cfg.dataflow,
+                l,
+                node_cfg,
+                dcfg,
+                crate::dram::DEFAULT_QUEUE_CAP,
+            )
+        });
+        crate::obs::metrics::count_fabric_layer();
+        let report = FabricLayerReport {
+            kind: fc.kind,
+            link_bw: fc.link_bw,
+            placed_nodes: demands.len() as u64,
+            link_bytes: cont.link_bytes,
+            link_avg_bw,
+            link_peak_bw,
+            hop_bytes: cont.hop_bytes,
+            node_total_cycles,
+            dram,
+        };
+        (stall_cycles, report)
     }
 
     /// Simulate a whole topology across a multi-array system under an
@@ -501,13 +675,25 @@ impl Engine {
         multi: &MultiArrayConfig,
         shared_dram_bw: Option<f64>,
     ) -> MultiWorkloadReport {
+        self.run_multi_opts(cfg, topo, multi, &MultiOpts::with_shared_bw(shared_dram_bw))
+    }
+
+    /// [`Engine::run_multi_with`] with the full option surface (fabric
+    /// contention, banked DRAM replay).
+    pub fn run_multi_opts(
+        &self,
+        cfg: &ArchConfig,
+        topo: &Topology,
+        multi: &MultiArrayConfig,
+        opts: &MultiOpts,
+    ) -> MultiWorkloadReport {
         MultiWorkloadReport {
             workload: topo.name.clone(),
             multi: *multi,
             layers: topo
                 .layers
                 .iter()
-                .map(|l| self.run_multi_layer_with(cfg, l, multi, shared_dram_bw))
+                .map(|l| self.run_multi_layer_opts(cfg, l, multi, opts))
                 .collect(),
         }
     }

@@ -76,6 +76,7 @@ USAGE:
 
   scale-sim scaleout [-t|--workload spec]... [--partition channels|pixels|auto]
                      [--budgets 64,256,...] [--dataflow os|ws|is] [--bench FILE]
+                     [--fabric flat,line,ring,mesh] [--link-bw B] [--dram-bw B]
       Reproduce the paper's §IV-E scale-up vs scale-out study (Figs 9 &
       10) through the engine's multi-array model: at each PE budget one
       √P x √P array vs P/64 replicated 8x8 nodes, the workload split
@@ -84,6 +85,12 @@ USAGE:
       Prints runtime and weight-DRAM-bandwidth ratios plus the required
       interconnect bandwidth the paper only tabulates, and writes
       BENCH_scaleout.json. Default workloads: alphagozero + ncf.
+      --fabric adds the route-aware interconnect study: the same node
+      counts rerun on each listed topology with per-link bandwidth
+      --link-bw and shared DRAM bandwidth --dram-bw (bytes/cycle,
+      default 16 each). Per-link peak/average throughput, stall cycles
+      and banked-DRAM row-buffer stats go to BENCH_fabric.json; "flat"
+      rows keep the legacy even-split model as the baseline.
 
   scale-sim workloads
       List the built-in workloads: the MLPerf conv suite (Table III)
@@ -103,7 +110,8 @@ USAGE:
       aspect-ratio axes by default, or a JSON spec ({\"workloads\":[..],
       \"dataflows\":[..], \"arrays\":[\"RxC\",..], \"nodes\":[..],
       \"partitions\":[\"channels\",..], \"sram_kb\":[..],
-      \"dram_bw\":[..]}). The nodes/partitions axes sweep §IV-E
+      \"dram_bw\":[..], \"topologies\":[\"flat\",\"mesh\",..],
+      \"link_bw\":[..]}). The nodes/partitions axes sweep §IV-E
       multi-array scale-out systems (Pareto frontiers over array
       count); --scaleout runs the built-in §IV-E campaign (8x8 nodes,
       1..256 node counts, all partition strategies) without a spec
@@ -696,9 +704,11 @@ fn cmd_sweep(rest: &[String]) -> CliResult<()> {
 }
 
 fn cmd_scaleout(rest: &[String]) -> CliResult<()> {
+    use scale_sim::dram::DramConfig;
     use scale_sim::engine::multi::{
-        MultiArrayConfig, Partition, ScaleoutPoint, NODE_DIM, NODE_PES, PE_SWEEP,
+        MultiArrayConfig, MultiOpts, Partition, ScaleoutPoint, NODE_DIM, NODE_PES, PE_SWEEP,
     };
+    use scale_sim::engine::{FabricConfig, FabricKind, DEFAULT_LINK_BW};
     use scale_sim::report::scaleout_summary;
     use scale_sim::util::isqrt;
 
@@ -708,6 +718,43 @@ fn cmd_scaleout(rest: &[String]) -> CliResult<()> {
         Some(p) => Partition::parse(p)?,
         None => Partition::OutputChannels,
     };
+    // --fabric switches on the route-aware interconnect study;
+    // --link-bw/--dram-bw provision it. Validated here at admission so a
+    // bad figure never reaches the stall-model assert.
+    let fabric_kinds: Option<Vec<FabricKind>> = match a.value("--fabric", None) {
+        Some(list) => {
+            let mut kinds = Vec::new();
+            for s in list.split(',') {
+                kinds.push(FabricKind::parse(s.trim())?);
+            }
+            Some(kinds)
+        }
+        None => None,
+    };
+    let positive_bw = |flag: &str| -> CliResult<f64> {
+        match a.value(flag, None) {
+            Some(v) => {
+                let bw: f64 = v.parse()?;
+                if !(bw > 0.0 && bw.is_finite()) {
+                    return fail(format!(
+                        "{flag} must be a positive bytes/cycle figure, got {v}"
+                    ));
+                }
+                Ok(bw)
+            }
+            None => Ok(DEFAULT_LINK_BW),
+        }
+    };
+    let link_bw = positive_bw("--link-bw")?;
+    let fabric_dram_bw = positive_bw("--dram-bw")?;
+    if fabric_kinds.is_none()
+        && (a.value("--link-bw", None).is_some() || a.value("--dram-bw", None).is_some())
+    {
+        return fail(
+            "--link-bw/--dram-bw provision the fabric study; pass --fabric to enable it"
+                .to_string(),
+        );
+    }
     let budgets: Vec<u64> = match a.value("--budgets", None) {
         Some(list) => list
             .split(',')
@@ -801,6 +848,70 @@ fn cmd_scaleout(rest: &[String]) -> CliResult<()> {
     ]);
     std::fs::write(bench, format!("{json}\n"))?;
     println!("wrote {bench}");
+
+    if let Some(kinds) = fabric_kinds {
+        let base_cfg = engine.cfg().clone();
+        let mut fpoints = Vec::new();
+        for topo in &topos {
+            for &pe in &budgets {
+                let mc = MultiArrayConfig::new(pe / NODE_PES, NODE_DIM, NODE_DIM, partition);
+                for &kind in &kinds {
+                    let opts = MultiOpts {
+                        shared_dram_bw: Some(fabric_dram_bw),
+                        fabric: (kind != FabricKind::Flat)
+                            .then(|| FabricConfig::new(kind, link_bw)),
+                        dram: (kind != FabricKind::Flat).then(DramConfig::default),
+                    };
+                    let m = engine.run_multi_opts(&base_cfg, topo, &mc, &opts);
+                    let mut hop_bytes = 0u64;
+                    let mut max_peak = 0.0f64;
+                    let mut max_avg = 0.0f64;
+                    let (mut dram_reqs, mut dram_hits) = (0u64, 0u64);
+                    for l in &m.layers {
+                        if let Some(f) = &l.fabric {
+                            hop_bytes += f.hop_bytes;
+                            max_peak = max_peak.max(f.max_link_peak_bw());
+                            max_avg = max_avg.max(f.max_link_avg_bw());
+                            if let Some(d) = &f.dram {
+                                dram_reqs += d.requests;
+                                dram_hits += d.row_hits;
+                            }
+                        }
+                    }
+                    fpoints.push(Json::obj(vec![
+                        ("workload", Json::str(&m.workload)),
+                        ("fabric", Json::str(kind.name())),
+                        ("nodes", Json::u64(mc.nodes)),
+                        ("cycles", Json::u64(m.total_cycles())),
+                        ("stall_cycles", Json::u64(m.total_stall_cycles())),
+                        ("hop_bytes", Json::u64(hop_bytes)),
+                        ("max_link_peak_bw", Json::f64(max_peak)),
+                        ("max_link_avg_bw", Json::f64(max_avg)),
+                        (
+                            "dram_row_hit_rate",
+                            Json::f64(if dram_reqs == 0 {
+                                0.0
+                            } else {
+                                dram_hits as f64 / dram_reqs as f64
+                            }),
+                        ),
+                    ]));
+                }
+            }
+        }
+        let fjson = Json::obj(vec![
+            ("partition", Json::str(partition.name())),
+            ("link_bw", Json::f64(link_bw)),
+            ("dram_bw", Json::f64(fabric_dram_bw)),
+            (
+                "fabrics",
+                Json::Arr(kinds.iter().map(|k| Json::str(k.name())).collect()),
+            ),
+            ("points", Json::Arr(fpoints)),
+        ]);
+        std::fs::write("BENCH_fabric.json", format!("{fjson}\n"))?;
+        println!("wrote BENCH_fabric.json");
+    }
     Ok(())
 }
 

@@ -74,6 +74,12 @@ pub fn stalled_runtime(
 /// The minimum bandwidth at which the layer runs within `tolerance` of
 /// stall-free (binary search over the stall model) — a provisioning
 /// answer the paper's Fig 7 only gives in average terms.
+///
+/// Returns `f64::INFINITY` when no finite bandwidth meets the
+/// tolerance (the compulsory fold-0 fill stalls at least one cycle at
+/// any finite bandwidth, so a tolerance of 0 on a short layer is
+/// genuinely unreachable); a finite answer always satisfies the
+/// tolerance.
 pub fn provision_bandwidth(
     df: Dataflow,
     layer: &LayerShape,
@@ -83,6 +89,17 @@ pub fn provision_bandwidth(
     assert!(tolerance >= 0.0);
     let target = 1.0 + tolerance;
     let (mut lo, mut hi) = (1e-3f64, 4096.0f64);
+    // Grow the upper bound until it actually meets the tolerance: the
+    // historical fixed 4096 B/cyc ceiling was silently returned for
+    // layers whose demand exceeds it, fabricating a bandwidth that does
+    // not deliver the promised slowdown.
+    while stalled_runtime(df, layer, cfg, hi).slowdown() > target {
+        if hi >= 1e12 {
+            return f64::INFINITY;
+        }
+        lo = hi;
+        hi *= 2.0;
+    }
     for _ in 0..48 {
         let mid = 0.5 * (lo + hi);
         if stalled_runtime(df, layer, cfg, mid).slowdown() <= target {
@@ -162,5 +179,32 @@ mod tests {
     #[should_panic(expected = "bandwidth must be positive")]
     fn zero_bandwidth_panics() {
         stalled_runtime(Dataflow::Os, &layer(), &cfg(), 0.0);
+    }
+
+    #[test]
+    fn provisioning_grows_past_the_historical_ceiling() {
+        // 512-byte words push this layer's demand well past 4096 B/cyc:
+        // the old fixed ceiling was silently returned even though it
+        // delivers a 2.5x slowdown, not the promised 5%
+        let l = layer();
+        let c = ArchConfig { word_bytes: 512, ..cfg() };
+        let at_ceiling = stalled_runtime(Dataflow::Os, &l, &c, 4096.0);
+        assert!(at_ceiling.slowdown() > 1.05, "demand must exceed the ceiling");
+        let bw = provision_bandwidth(Dataflow::Os, &l, &c, 0.05);
+        assert!(bw > 4096.0, "must grow past the old ceiling, got {bw}");
+        assert!(bw.is_finite());
+        let r = stalled_runtime(Dataflow::Os, &l, &c, bw);
+        assert!(r.slowdown() <= 1.051, "{}", r.slowdown());
+    }
+
+    #[test]
+    fn unreachable_tolerance_surfaces_as_infinity() {
+        // the compulsory fill stalls >= 1 cycle at any finite bandwidth,
+        // so zero tolerance on a short layer has no finite answer — the
+        // miss must be surfaced, not papered over with the ceiling
+        let l = LayerShape::gemm("mm", 8, 8, 8);
+        let c = ArchConfig { array_h: 8, array_w: 8, ..config::paper_default() };
+        let bw = provision_bandwidth(Dataflow::Os, &l, &c, 0.0);
+        assert!(bw.is_infinite(), "got {bw}");
     }
 }

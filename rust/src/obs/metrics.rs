@@ -303,6 +303,16 @@ pub fn count_dse_point() {
     );
 }
 
+/// Count one layer simulated through the route-aware fabric path (the
+/// opt-in cycle-accurate interconnect model).
+pub fn count_fabric_layer() {
+    global().add_counter(
+        "scale_sim_fabric_layers_total",
+        "Layers simulated through the route-aware fabric contention model",
+        1,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

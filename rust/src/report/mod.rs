@@ -318,6 +318,8 @@ mod tests {
             partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![8.0],
+            topologies: vec![crate::engine::FabricKind::Flat],
+            link_bw: vec![crate::engine::DEFAULT_LINK_BW],
             energy: "28nm".into(),
         };
         let opts = RunOpts { exec: Exec::Local { threads: 1 }, ..RunOpts::default() };

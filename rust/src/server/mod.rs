@@ -456,16 +456,26 @@ fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
                         cfg.array_w,
                         m.partition,
                     );
-                    engine.run_multi_with(cfg, topo, &mc, None).to_workload_report()
+                    engine.run_multi_opts(cfg, topo, &mc, &m.opts()).to_workload_report()
                 }
             };
             job.writer.send_line(&proto::result_line(job.id, &report));
             None
         }
         JobKind::Sweep { kind, topos, cfg, multi } => {
-            let (nodes, partitions) = match multi {
-                None => (vec![1], vec![crate::engine::Partition::default()]),
-                Some(m) => (vec![m.nodes], vec![m.partition]),
+            let (nodes, partitions, fabrics, link_bws) = match multi {
+                None => (
+                    vec![1],
+                    vec![crate::engine::Partition::default()],
+                    vec![crate::engine::FabricKind::Flat],
+                    vec![crate::engine::DEFAULT_LINK_BW],
+                ),
+                Some(m) => (
+                    vec![m.nodes],
+                    vec![m.partition],
+                    vec![m.fabric.unwrap_or_default()],
+                    vec![m.link_bw.unwrap_or(crate::engine::DEFAULT_LINK_BW)],
+                ),
             };
             let grid = match kind {
                 SweepKind::Dataflow => engine
@@ -485,7 +495,12 @@ fn run_job(engine: &Engine, job: &Job) -> Option<usize> {
                     .dataflows(&Dataflow::ALL)
                     .array_shapes(&crate::sweep::fig8_shapes()),
             };
-            let out = grid.nodes(&nodes).partitions(&partitions).run();
+            let out = grid
+                .nodes(&nodes)
+                .partitions(&partitions)
+                .fabrics(&fabrics)
+                .link_bws(&link_bws)
+                .run();
             for p in &out.points {
                 job.writer.send_line(&proto::point_line(job.id, p));
             }

@@ -30,8 +30,15 @@
 //! replicas of the (per-node) array shape with the workload partitioned
 //! across them, reporting the composed system view (slowest-node
 //! timings, aggregate traffic/energy, summed interconnect bandwidth).
-//! `"partition"` without `"nodes"` is rejected. `dse` campaigns carry
-//! their own `"nodes"`/`"partitions"` axes inside the campaign spec.
+//! `"partition"` without `"nodes"` is rejected. Three more multi-array
+//! fields refine the memory system: `"dram_bw":B` (finite positive
+//! bytes/cycle) models shared-DRAM stalls, `"fabric":"flat|line|ring|
+//! mesh"` selects the route-aware interconnect, and `"link_bw":B`
+//! (finite positive; requires `"fabric"`, default 16) sets its per-link
+//! bandwidth — all validated at admission, so a bad bandwidth is an
+//! `error` event, never a worker panic. `dse` campaigns carry their own
+//! `"nodes"`/`"partitions"`/`"topologies"`/`"link_bw"` axes inside the
+//! campaign spec.
 //!
 //! A layer object is the Table-II row:
 //! `{"name":"c1","ifmap_h":16,"ifmap_w":16,"filt_h":3,"filt_w":3,
@@ -78,17 +85,43 @@ use crate::arch::LayerShape;
 use crate::config::{workloads, ArchConfig, Topology};
 use crate::dataflow::{Dataflow, Timing};
 use crate::energy::EnergyBreakdown;
-use crate::engine::{MemoStats, Partition, WarmStats};
+use crate::engine::{
+    FabricConfig, FabricKind, MemoStats, MultiOpts, Partition, WarmStats, DEFAULT_LINK_BW,
+};
 use crate::memory::{BandwidthReport, DramTraffic};
 use crate::sim::{LayerReport, WorkloadReport};
 use crate::util::json::Json;
 
 /// Multi-array coordinates of a run/sweep job (node shape = the job's
 /// effective array shape).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MultiReq {
     pub nodes: u64,
     pub partition: Partition,
+    /// Shared DRAM read bandwidth in bytes/cycle to model stalls
+    /// against. Validated finite and positive at parse time — a
+    /// non-positive bandwidth is an admission error, never a worker
+    /// panic.
+    pub dram_bw: Option<f64>,
+    /// Route-aware interconnect topology ([`crate::engine::fabric`]);
+    /// `flat` (or absent) keeps the legacy contention model.
+    pub fabric: Option<FabricKind>,
+    /// Per-link bandwidth in bytes/cycle (requires `fabric`; default
+    /// [`DEFAULT_LINK_BW`]). Validated finite and positive.
+    pub link_bw: Option<f64>,
+}
+
+impl MultiReq {
+    /// The engine-side run options this request selects.
+    pub fn opts(&self) -> MultiOpts {
+        MultiOpts {
+            shared_dram_bw: self.dram_bw,
+            fabric: self
+                .fabric
+                .map(|kind| FabricConfig::new(kind, self.link_bw.unwrap_or(DEFAULT_LINK_BW))),
+            dram: None,
+        }
+    }
 }
 
 /// One parsed client request.
@@ -284,7 +317,15 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
                 Some(t) => vec![t],
                 None => workloads::mlperf_suite(),
             };
-            Ok(Request::Sweep { id, kind, topos, overrides, multi: parse_multi(&j)? })
+            let multi = parse_multi(&j)?;
+            if multi.as_ref().is_some_and(|m| m.dram_bw.is_some()) {
+                return Err(
+                    "sweep jobs do not support \"dram_bw\" (the grid models no shared \
+                     DRAM bandwidth; use a dse campaign's dram_bw axis)"
+                        .into(),
+                );
+            }
+            Ok(Request::Sweep { id, kind, topos, overrides, multi })
         }
         Some("dse") => {
             let cj = j.get("campaign").ok_or("dse request needs a \"campaign\" spec")?;
@@ -395,12 +436,17 @@ fn parse_overrides(j: &Json) -> Result<Overrides, String> {
 }
 
 /// Parse the multi-array fields: `"nodes":N` activates multi-array
-/// execution; `"partition"` refines it (default: channels).
+/// execution; `"partition"`, `"dram_bw"`, `"fabric"` and `"link_bw"`
+/// refine it. Every bandwidth is validated here, at admission — the
+/// stall replay's positive-bandwidth precondition must never be reached
+/// by wire input.
 fn parse_multi(j: &Json) -> Result<Option<MultiReq>, String> {
     let nodes = match j.get("nodes") {
         None => {
-            if j.get("partition").is_some() {
-                return Err("\"partition\" requires \"nodes\"".into());
+            for k in ["partition", "dram_bw", "fabric", "link_bw"] {
+                if j.get(k).is_some() {
+                    return Err(format!("{k:?} requires \"nodes\""));
+                }
             }
             return Ok(None);
         }
@@ -413,7 +459,31 @@ fn parse_multi(j: &Json) -> Result<Option<MultiReq>, String> {
         None => Partition::default(),
         Some(s) => Partition::parse(s).map_err(|e| e.to_string())?,
     };
-    Ok(Some(MultiReq { nodes, partition }))
+    let positive = |k: &str, v: &Json| -> Result<f64, String> {
+        let bw = v.as_f64().ok_or_else(|| format!("{k:?} must be a number"))?;
+        if !bw.is_finite() || bw <= 0.0 {
+            return Err(format!("{k:?} must be finite and positive (got {v})"));
+        }
+        Ok(bw)
+    };
+    let dram_bw = match j.get("dram_bw") {
+        None => None,
+        Some(v) => Some(positive("dram_bw", v)?),
+    };
+    let fabric = match j.str_field("fabric") {
+        None => None,
+        Some(s) => Some(FabricKind::parse(s).map_err(|e| e.to_string())?),
+    };
+    let link_bw = match j.get("link_bw") {
+        None => None,
+        Some(v) => {
+            if fabric.is_none() {
+                return Err("\"link_bw\" requires \"fabric\"".into());
+            }
+            Some(positive("link_bw", v)?)
+        }
+    };
+    Ok(Some(MultiReq { nodes, partition, dram_bw, fabric, link_bw }))
 }
 
 // ---------------------------------------------------------------- responses
@@ -427,9 +497,11 @@ pub fn result_line(id: u64, report: &WorkloadReport) -> String {
     .to_string()
 }
 
-/// One streamed sweep grid point (coordinates + headline metrics).
+/// One streamed sweep grid point (coordinates + headline metrics). The
+/// fabric coordinates appear only on points simulated under a real
+/// (non-`Flat`) topology, so pre-fabric clients see unchanged lines.
 pub fn point_line(id: u64, p: &crate::engine::SweepPoint) -> String {
-    Json::obj(vec![
+    let mut fields = vec![
         ("id", Json::u64(id)),
         ("event", Json::str("point")),
         ("workload", Json::str(&p.workload)),
@@ -439,12 +511,19 @@ pub fn point_line(id: u64, p: &crate::engine::SweepPoint) -> String {
         ("ifmap_sram_kb", Json::u64(p.ifmap_sram_kb)),
         ("nodes", Json::u64(p.nodes)),
         ("partition", Json::str(p.partition.name())),
+    ];
+    if p.fabric != FabricKind::Flat {
+        fields.push(("fabric", Json::str(p.fabric.name())));
+        fields.push(("link_bw", Json::f64(p.link_bw)));
+        fields.push(("stall_cycles", Json::u64(p.stall_cycles)));
+    }
+    fields.extend([
         ("cycles", Json::u64(p.report.total_cycles())),
         ("utilization", Json::f64(p.report.overall_utilization(p.total_pes()))),
         ("dram_bytes", Json::u64(p.report.total_dram().total())),
         ("energy_mj", Json::f64(p.report.total_energy().total_mj())),
-    ])
-    .to_string()
+    ]);
+    Json::obj(fields).to_string()
 }
 
 /// One streamed dse campaign point (coordinates + extracted objectives).
@@ -687,7 +766,13 @@ mod tests {
             Request::Run { multi, .. } => {
                 assert_eq!(
                     multi,
-                    Some(MultiReq { nodes: 16, partition: Partition::OutputChannels })
+                    Some(MultiReq {
+                        nodes: 16,
+                        partition: Partition::OutputChannels,
+                        dram_bw: None,
+                        fabric: None,
+                        link_bw: None,
+                    })
                 );
             }
             other => panic!("wrong request {other:?}"),
@@ -698,7 +783,16 @@ mod tests {
         .unwrap()
         {
             Request::Sweep { multi, .. } => {
-                assert_eq!(multi, Some(MultiReq { nodes: 4, partition: Partition::Auto }));
+                assert_eq!(
+                    multi,
+                    Some(MultiReq {
+                        nodes: 4,
+                        partition: Partition::Auto,
+                        dram_bw: None,
+                        fabric: None,
+                        link_bw: None,
+                    })
+                );
             }
             other => panic!("wrong request {other:?}"),
         }
@@ -710,6 +804,70 @@ mod tests {
             parse_request(r#"{"req":"run","workload":"ncf","nodes":4,"partition":"diag"}"#)
                 .is_err()
         );
+    }
+
+    #[test]
+    fn fabric_and_bandwidth_fields_parse_and_validate() {
+        let line = r#"{"req":"run","workload":"ncf","nodes":16,"dram_bw":16,"fabric":"mesh","link_bw":8}"#;
+        match parse_request(line).unwrap() {
+            Request::Run { multi, .. } => {
+                let m = multi.unwrap();
+                assert_eq!(
+                    (m.dram_bw, m.fabric, m.link_bw),
+                    (Some(16.0), Some(FabricKind::Mesh), Some(8.0))
+                );
+                let opts = m.opts();
+                assert_eq!(opts.shared_dram_bw, Some(16.0));
+                assert_eq!(opts.fabric, Some(FabricConfig::new(FabricKind::Mesh, 8.0)));
+                assert_eq!(opts.dram, None);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // an omitted link_bw falls back to the default at opts() time
+        match parse_request(r#"{"req":"run","workload":"ncf","nodes":4,"fabric":"line"}"#)
+            .unwrap()
+        {
+            Request::Run { multi, .. } => {
+                let opts = multi.unwrap().opts();
+                assert_eq!(
+                    opts.fabric,
+                    Some(FabricConfig::new(FabricKind::Line, DEFAULT_LINK_BW))
+                );
+                assert_eq!(opts.shared_dram_bw, None);
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // non-positive or non-finite bandwidths are admission errors —
+        // they must never reach the stall replay's assert
+        for bad in [
+            r#"{"req":"run","workload":"ncf","nodes":4,"dram_bw":0}"#,
+            r#"{"req":"run","workload":"ncf","nodes":4,"dram_bw":-2}"#,
+            r#"{"req":"run","workload":"ncf","nodes":4,"dram_bw":"wide"}"#,
+            r#"{"req":"run","workload":"ncf","nodes":4,"fabric":"line","link_bw":0}"#,
+            r#"{"req":"run","workload":"ncf","nodes":4,"fabric":"torus"}"#,
+            // link_bw without a fabric, and multi fields without nodes
+            r#"{"req":"run","workload":"ncf","nodes":4,"link_bw":8}"#,
+            r#"{"req":"run","workload":"ncf","dram_bw":16}"#,
+            r#"{"req":"run","workload":"ncf","fabric":"mesh"}"#,
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad}");
+        }
+        // sweeps accept the fabric fields but reject dram_bw (the grid
+        // models no shared DRAM bandwidth — reject, don't drop)
+        match parse_request(
+            r#"{"req":"sweep","kind":"memory","workload":"ncf","nodes":4,"fabric":"ring","link_bw":2}"#,
+        )
+        .unwrap()
+        {
+            Request::Sweep { multi, .. } => {
+                assert_eq!(multi.unwrap().fabric, Some(FabricKind::Ring));
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        let e = parse_request(
+            r#"{"req":"sweep","kind":"memory","workload":"ncf","nodes":4,"dram_bw":8}"#,
+        );
+        assert!(e.unwrap_err().contains("dram_bw"));
     }
 
     #[test]
@@ -806,6 +964,8 @@ mod tests {
             partitions: vec![Partition::default()],
             sram_kb: vec![64],
             dram_bw: vec![8.0],
+            topologies: vec![crate::engine::FabricKind::Flat],
+            link_bw: vec![crate::engine::DEFAULT_LINK_BW],
             energy: "28nm".into(),
         };
         let topos = campaign.resolve_workloads(true).unwrap();

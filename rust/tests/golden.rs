@@ -11,6 +11,10 @@
 //!   slowest-node cycles, shared-DRAM stall cycles and the required
 //!   interconnect bandwidth for the same layers at 4/16/64 nodes of
 //!   8x8 under all three partition strategies.
+//! * `fabric.json` — the route-aware fabric + banked-DRAM substrate:
+//!   stall cycles, per-link peak/average bandwidth, hop bytes and the
+//!   banked-DRAM latency/hit accounting for resnet50 + alexnet across
+//!   Line/Ring/Mesh at 4 and 16 nodes.
 //!
 //! Regenerating after an *intentional* model change:
 //!
@@ -29,8 +33,9 @@
 use std::path::PathBuf;
 
 use scale_sim::config::{workloads, Topology};
-use scale_sim::engine::multi::{MultiArrayConfig, Partition, NODE_DIM};
-use scale_sim::engine::{BackendKind, Engine};
+use scale_sim::dram::DramConfig;
+use scale_sim::engine::multi::{MultiArrayConfig, MultiOpts, Partition, NODE_DIM};
+use scale_sim::engine::{BackendKind, Engine, FabricConfig, FabricKind, DEFAULT_LINK_BW};
 use scale_sim::memory::stall::stalled_runtime;
 use scale_sim::util::json::Json;
 use scale_sim::Dataflow;
@@ -345,6 +350,119 @@ fn scaleout_blessing_is_idempotent_in_memory() {
     assert_eq!(compute_scaleout_entries(), compute_scaleout_entries());
 }
 
+// ----------------------------------------------------------- fabric fixture
+
+/// Node counts the fabric fixture pins.
+const FABRIC_NODES: [u64; 2] = [4, 16];
+
+/// Topologies the fabric fixture pins (`Flat` is the legacy path and
+/// carries no per-link data).
+const FABRIC_KINDS: [FabricKind; 3] = [FabricKind::Line, FabricKind::Ring, FabricKind::Mesh];
+
+const FABRIC_SPEC: FixtureSpec = FixtureSpec {
+    str_keys: &["workload", "fabric"],
+    u64_keys: &[
+        "nodes",
+        "stall_cycles",
+        "hop_bytes",
+        "dram_requests",
+        "dram_row_hits",
+        "dram_row_conflicts",
+        "dram_cold_misses",
+        "dram_total_latency_cycles",
+        "dram_queue_wait_cycles",
+        "dram_max_latency_cycles",
+    ],
+    f64_keys: &["max_link_peak_bw", "max_link_avg_bw"],
+};
+
+/// Compute every fabric entry: the route-aware contention model plus
+/// the banked tick-driven DRAM replay, aggregated over the first
+/// [`LAYERS`] layers of the two conv suites (channels partitioning, 8x8
+/// nodes, OS dataflow, shared DRAM at [`STALL_BW`], links at
+/// [`DEFAULT_LINK_BW`]).
+fn compute_fabric_entries() -> Vec<Json> {
+    let engine = Engine::builder().dataflow(Dataflow::Os).build().unwrap();
+    let mut out = Vec::new();
+    for (wname, topo) in cases().into_iter().take(2) {
+        for kind in FABRIC_KINDS {
+            for &nodes in &FABRIC_NODES {
+                let multi =
+                    MultiArrayConfig::new(nodes, NODE_DIM, NODE_DIM, Partition::OutputChannels);
+                let opts = MultiOpts {
+                    shared_dram_bw: Some(STALL_BW),
+                    fabric: Some(FabricConfig::new(kind, DEFAULT_LINK_BW)),
+                    dram: Some(DramConfig::default()),
+                };
+                let mut stall = 0u64;
+                let mut hop = 0u64;
+                let (mut peak, mut avg) = (0.0f64, 0.0f64);
+                let (mut requests, mut hits, mut conflicts, mut cold) = (0u64, 0u64, 0u64, 0u64);
+                let (mut latency, mut queue_wait, mut max_latency) = (0u64, 0u64, 0u64);
+                for layer in topo.layers.iter().take(LAYERS) {
+                    let m = engine.run_multi_layer_opts(engine.cfg(), layer, &multi, &opts);
+                    let f = m.fabric.as_ref().expect("fabric enabled");
+                    stall += m.stall_cycles;
+                    hop += f.hop_bytes;
+                    peak = peak.max(f.max_link_peak_bw());
+                    avg = avg.max(f.max_link_avg_bw());
+                    let d = f.dram.expect("banked dram enabled");
+                    requests += d.requests;
+                    hits += d.row_hits;
+                    conflicts += d.row_conflicts;
+                    cold += d.cold_misses;
+                    latency += d.total_latency_cycles;
+                    queue_wait += d.queue_wait_cycles;
+                    max_latency = max_latency.max(d.max_latency_cycles);
+                }
+                out.push(Json::obj(vec![
+                    ("workload", Json::str(wname)),
+                    ("fabric", Json::str(kind.name())),
+                    ("nodes", Json::u64(nodes)),
+                    ("stall_cycles", Json::u64(stall)),
+                    ("hop_bytes", Json::u64(hop)),
+                    ("max_link_peak_bw", Json::f64(peak)),
+                    ("max_link_avg_bw", Json::f64(avg)),
+                    ("dram_requests", Json::u64(requests)),
+                    ("dram_row_hits", Json::u64(hits)),
+                    ("dram_row_conflicts", Json::u64(conflicts)),
+                    ("dram_cold_misses", Json::u64(cold)),
+                    ("dram_total_latency_cycles", Json::u64(latency)),
+                    ("dram_queue_wait_cycles", Json::u64(queue_wait)),
+                    ("dram_max_latency_cycles", Json::u64(max_latency)),
+                ]));
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn fabric_matches_the_golden_fixture() {
+    let entries = compute_fabric_entries();
+    assert_eq!(
+        entries.len(),
+        2 * FABRIC_KINDS.len() * FABRIC_NODES.len(),
+        "2 workloads x 3 fabrics x 2 node counts"
+    );
+
+    if blessing() {
+        write_fixture("fabric.json", &entries);
+        eprintln!("golden: blessed {} fabric entries", entries.len());
+        return;
+    }
+
+    let pinned = read_fixture("fabric.json");
+    if let Err(e) = check_entries(&entries, &pinned, &FABRIC_SPEC) {
+        panic!("fabric.json: {e}");
+    }
+}
+
+#[test]
+fn fabric_blessing_is_idempotent_in_memory() {
+    assert_eq!(compute_fabric_entries(), compute_fabric_entries());
+}
+
 // ------------------------------------------------- corrupted-fixture guards
 
 /// Build a tiny synthetic entry carrying the full timing schema.
@@ -443,6 +561,7 @@ fn checked_in_fixtures_have_no_schema_drift() {
     for (name, spec, len) in [
         ("timings.json", &TIMINGS_SPEC, 3 * LAYERS * 3 * 3),
         ("scaleout.json", &SCALEOUT_SPEC, 3 * LAYERS * SCALEOUT_NODES.len() * 3),
+        ("fabric.json", &FABRIC_SPEC, 2 * FABRIC_KINDS.len() * FABRIC_NODES.len()),
     ] {
         if blessing() {
             continue; // fixtures may be mid-regeneration

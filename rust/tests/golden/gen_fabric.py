@@ -1,0 +1,404 @@
+#!/usr/bin/env python3
+"""Generate rust/tests/golden/fabric.json by porting the route-aware
+fabric + banked-DRAM substrate (rust/src/engine/fabric.rs,
+rust/src/dram/banked.rs, Engine::fabric_stalls in
+rust/src/engine/multi.rs) on top of the verified timing/memory port in
+gen_golden.py.
+
+Ports, 1:1 from the Rust sources (all float expressions mirror the Rust
+order of operations so pinned f64 values compare bit-exactly):
+  - Line / Ring / Mesh XY routing, link indexing, link loads
+  - contention(): store-and-forward path time vs demand-proportional
+    DRAM share, whichever is slower binds
+  - per-node stall replay at the effective bandwidth, slowest node
+    completes the layer
+  - per-link average (over stalled runtime) and offered-peak bandwidth
+  - banked tick-driven DRAM replay (bounded per-bank queues, hit /
+    conflict / cold classification) of the slowest share's stream
+
+Self-checks mirror the property assertions in the Rust suites; any
+mismatch aborts without writing. Also searches and verifies the
+wrong-share stall regression case (a partition where the REMAINDER node
+is the slowest under fabric contention) used by rust/tests/fabric.rs.
+"""
+import json
+import math
+import os
+import sys
+from collections import deque
+
+REPO = os.path.normpath(os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..", ".."))
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from gen_golden import (  # noqa: E402
+    Cfg, Layer, ceil_div, check, fmt_num, load_conv_csv, self_checks,
+    simulate_with, timing,
+)
+from gen_scaleout import split_layer, bandwidth_report  # noqa: E402
+
+NODE_DIM = 8
+STALL_BW = 16.0
+LINK_BW = 16.0
+LAYERS = 3
+FABRIC_NODES = [4, 16]
+FABRIC_KINDS = ["line", "ring", "mesh"]
+
+DRAM = dict(banks=16, row_bytes=2048, t_rcd=18, t_cas=18, t_rp=18,
+            burst_bytes=64, t_burst=4)
+QUEUE_CAP = 8
+
+
+# ------------------------------------------------------------ fabric routing
+
+def mesh_side(nodes):
+    s = math.isqrt(nodes)
+    side = s if s * s == nodes else s + 1
+    return max(side, 1)
+
+
+def route(kind, nodes, j):
+    """Port of the Topology::route impls (link ids in traversal order)."""
+    if j == 0 or nodes < 2:
+        return []
+    if kind == "line":
+        return list(range(j))[::-1]
+    if kind == "ring":
+        down, up = j, nodes - j
+        if down <= up:
+            return list(range(j))[::-1]
+        return list(range(j, nodes))
+    if kind == "mesh":
+        side = mesh_side(nodes)
+        row, col = j // side, j % side
+        links = []
+        for c in range(col, 0, -1):
+            links.append(row * (side - 1) + (c - 1))
+        for r in range(row, 0, -1):
+            links.append(side * (side - 1) + (r - 1))
+        return links
+    raise ValueError(kind)
+
+
+def link_count(kind, nodes):
+    if kind == "line":
+        return max(nodes - 1, 0)
+    if nodes < 2:
+        return 0
+    if kind == "ring":
+        return nodes
+    side = mesh_side(nodes)
+    return 2 * side * (side - 1)
+
+
+def contention(kind, link_bw, dram_bw, demands):
+    """Port of fabric::contention — float ops in the exact Rust order."""
+    n = len(demands)
+    routes = [route(kind, n, j) for j in range(n)]
+    link_bytes = [0] * link_count(kind, n)
+    hop_bytes = 0
+    for j, r in enumerate(routes):
+        for l in r:
+            link_bytes[l] += demands[j]
+        hop_bytes += demands[j] * len(r)
+    total = sum(demands)
+    dram_time = total / dram_bw if dram_bw is not None else 0.0
+    eff = []
+    for d, r in zip(demands, routes):
+        if d == 0:
+            eff.append(None)
+            continue
+        path_time = 0.0
+        for l in r:
+            path_time += link_bytes[l] / link_bw
+        if path_time > dram_time:
+            eff.append(d / path_time)
+        else:
+            eff.append(dram_bw * (d / total) if dram_bw is not None else None)
+    return eff, link_bytes, routes, hop_bytes
+
+
+# -------------------------------------------------------- banked DRAM model
+
+def layer_request_stream(df, layer, cfg):
+    """Port of dram::layer_request_stream (read (cycle, addr) pairs)."""
+    _, fetches = simulate_with(df, layer, cfg)
+    reqs = []
+    window_start = 0
+    addr = 0
+    for i, (cycles, nbytes) in enumerate(fetches):
+        if i == 0:
+            window = (0, max(cycles, 1))
+        else:
+            window = (window_start, window_start + fetches[i - 1][0])
+        if nbytes > 0:
+            n = ceil_div(nbytes, DRAM["burst_bytes"])
+            start, end = window
+            span = max(end - start, 1)
+            for k in range(n):
+                reqs.append((start + k * span // n, addr + k * DRAM["burst_bytes"]))
+        addr += nbytes
+        if i > 0:
+            window_start += fetches[i - 1][0]
+    return reqs
+
+
+def banked_replay(reqs, queue_cap=QUEUE_CAP):
+    """Port of dram::banked::BankedDram::issue over a whole stream."""
+    banks = [dict(open_row=None, ready_at=0, occ=deque())
+             for _ in range(DRAM["banks"])]
+    s = dict(requests=0, row_hits=0, row_conflicts=0, cold_misses=0,
+             total_latency_cycles=0, max_latency_cycles=0,
+             queue_wait_cycles=0, max_queue_depth=0, finish_cycle=0, bytes=0)
+    cap = max(queue_cap, 1)
+    for cycle, addr in reqs:
+        row_global = addr // DRAM["row_bytes"]
+        bank = banks[row_global % DRAM["banks"]]
+        row = row_global // DRAM["banks"]
+        occ = bank["occ"]
+        while occ and occ[0] <= cycle:
+            occ.popleft()
+        admitted = cycle
+        while len(occ) >= cap:
+            admitted = max(admitted, occ.popleft())
+        s["queue_wait_cycles"] += admitted - cycle
+        start = max(admitted, bank["ready_at"])
+        if bank["open_row"] is not None and bank["open_row"] == row:
+            s["row_hits"] += 1
+            access = DRAM["t_cas"]
+        elif bank["open_row"] is None:
+            s["cold_misses"] += 1
+            access = DRAM["t_rcd"] + DRAM["t_cas"]
+        else:
+            s["row_conflicts"] += 1
+            access = DRAM["t_rp"] + DRAM["t_rcd"] + DRAM["t_cas"]
+        bank["open_row"] = row
+        done = start + access + DRAM["t_burst"]
+        bank["ready_at"] = done
+        occ.append(done)
+        s["max_queue_depth"] = max(s["max_queue_depth"], len(occ))
+        s["requests"] += 1
+        s["total_latency_cycles"] += done - cycle
+        s["max_latency_cycles"] = max(s["max_latency_cycles"], done - cycle)
+        s["finish_cycle"] = max(s["finish_cycle"], done)
+        s["bytes"] += DRAM["burst_bytes"]
+    return s
+
+
+# ------------------------------------------------------- fabric layer model
+
+def stall_from_fetches(fetches, bw):
+    """stall.rs replay on a precomputed fold/fetch schedule."""
+    ideal = stall = 0
+    for i, (cycles, nbytes) in enumerate(fetches):
+        ideal += cycles
+        fetch_cycles = math.ceil(nbytes / bw)
+        if i == 0:
+            stall += fetch_cycles
+        else:
+            stall += max(fetch_cycles - fetches[i - 1][0], 0)
+    return ideal + stall
+
+
+def fabric_multi(df, layer, nodes, kind, cfg, link_bw, dram_bw, with_dram):
+    """Port of Engine::multi_fixed's fabric path (channels partition)."""
+    shares = split_layer(layer, nodes, "channels")
+    share_info = []
+    for sub, _count in shares:
+        traffic, peak = bandwidth_report(df, sub, cfg)
+        _, fetches = simulate_with(df, sub, cfg)
+        share_info.append(dict(
+            layer=sub,
+            cycles=timing(df, sub, cfg.array_h, cfg.array_w)["cycles"],
+            read_bytes=traffic["ifmap_bytes"] + traffic["filter_bytes"],
+            peak=peak,
+            fetches=fetches,
+        ))
+    main = share_info[0]
+    main_count = shares[0][1]
+    rem = share_info[1] if len(shares) > 1 else None
+    demands = [main["read_bytes"]] * main_count
+    ideals = [main["cycles"]] * main_count
+    peaks = [main["peak"]] * main_count
+    if rem is not None:
+        demands.append(rem["read_bytes"])
+        ideals.append(rem["cycles"])
+        peaks.append(rem["peak"])
+    cycles = max(ideals)
+    eff, link_bytes, routes, hop_bytes = contention(kind, link_bw, dram_bw, demands)
+    node_totals = []
+    completion, slowest = 0, 0
+    for j, e in enumerate(eff):
+        is_rem = j >= main_count
+        if e is None:
+            total = ideals[j]
+        else:
+            info = rem if is_rem else main
+            total = stall_from_fetches(info["fetches"], e)
+        node_totals.append(total)
+        if total > completion:
+            completion, slowest = total, j
+    stall_cycles = max(completion - cycles, 0)
+    total_cycles = cycles + stall_cycles
+    link_avg = [0.0 if total_cycles == 0 else b / total_cycles for b in link_bytes]
+    link_peak = [0.0] * len(link_bytes)
+    for j, r in enumerate(routes):
+        for l in r:
+            link_peak[l] += peaks[j]
+    dram = None
+    if with_dram:
+        info = rem if (rem is not None and slowest >= main_count) else main
+        dram = banked_replay(layer_request_stream(df, info["layer"], cfg))
+    return dict(
+        cycles=cycles,
+        stall_cycles=stall_cycles,
+        node_totals=node_totals,
+        main_count=main_count,
+        hop_bytes=hop_bytes,
+        link_bytes=link_bytes,
+        max_link_avg_bw=max(link_avg, default=0.0),
+        max_link_peak_bw=max(link_peak, default=0.0),
+        dram=dram,
+    )
+
+
+# ------------------------------------------------------------- self-checks
+
+def fabric_self_checks():
+    cfg8 = Cfg(NODE_DIM, NODE_DIM)
+
+    # fabric.rs: pinned route shapes
+    check(route("line", 4, 3) == [2, 1, 0], "line route")
+    check(route("ring", 6, 3) == [2, 1, 0], "ring tie clockwise")
+    check(route("ring", 6, 4) == [4, 5], "ring short way up")
+    check(route("mesh", 16, 5) == [3, 12], "mesh (1,1) route")
+    check(link_count("mesh", 16) == 24, "mesh 4x4 link count")
+
+    # flow conservation across kinds
+    demands = [5, 11, 0, 3, 9, 2, 7]
+    for kind in FABRIC_KINDS:
+        _, link_bytes, routes, hop = contention(kind, 4.0, 16.0, demands)
+        check(sum(link_bytes) == hop, f"flow conservation {kind}")
+        check(hop == sum(d * len(r) for d, r in zip(demands, routes)),
+              f"hop accounting {kind}")
+
+    # single node: exactly the configured DRAM bandwidth (bit-for-bit)
+    eff, _, _, hop = contention("mesh", 4.0, 16.0, [1234])
+    check(eff == [16.0] and hop == 0, "single-node exact bw")
+    eff, _, _, _ = contention("mesh", 4.0, None, [1234])
+    check(eff == [None], "single-node unconstrained")
+
+    # mesh effective bandwidth dominates line per node
+    demands = [7, 13, 5, 11, 3, 9, 6, 2, 8]
+    el, _, _, _ = contention("line", 2.0, 16.0, demands)
+    em, _, _, _ = contention("mesh", 2.0, 16.0, demands)
+    for j in range(len(demands)):
+        l = el[j] if el[j] is not None else math.inf
+        m = em[j] if em[j] is not None else math.inf
+        check(m >= l, f"mesh >= line node {j}")
+
+    # multi.rs fabric path: mesh never stalls more than line, and the
+    # 16-node mesh vs line acceptance criterion holds on resnet50
+    layers = load_conv_csv(os.path.join(REPO, "topologies/resnet50.csv"))[:LAYERS]
+    saw_diff_stall = saw_diff_peak = False
+    for layer in layers:
+        ml = fabric_multi("os", layer, 16, "line", cfg8, LINK_BW, STALL_BW, False)
+        mm = fabric_multi("os", layer, 16, "mesh", cfg8, LINK_BW, STALL_BW, False)
+        check(mm["stall_cycles"] <= ml["stall_cycles"], f"mesh<=line {layer.name}")
+        saw_diff_stall |= mm["stall_cycles"] != ml["stall_cycles"]
+        saw_diff_peak |= mm["max_link_peak_bw"] != ml["max_link_peak_bw"]
+    check(saw_diff_stall, "16-node mesh vs line: stalls must differ")
+    check(saw_diff_peak, "16-node mesh vs line: per-link peak must differ")
+
+    # banked model sanity: every request classified exactly once
+    reqs = layer_request_stream("os", layers[0], cfg8)
+    s = banked_replay(reqs)
+    check(s["requests"] == len(reqs), "banked request count")
+    check(s["row_hits"] + s["row_conflicts"] + s["cold_misses"] == s["requests"],
+          "banked classification total")
+    check(s["max_queue_depth"] <= QUEUE_CAP, "queue cap respected")
+
+    print("fabric self-checks passed", file=sys.stderr)
+
+
+def regression_case():
+    """Verify the wrong-share stall case pinned by rust/tests/fabric.rs:
+    channels-partitioning 100 filters over 16 Line nodes puts the small
+    remainder share on the farthest node, whose store-and-forward path
+    time makes it the SLOWEST — stall selection must follow it, not the
+    maximal share."""
+    cfg8 = Cfg(NODE_DIM, NODE_DIM)
+    layer = Layer("c", 16, 16, 3, 3, 8, 100, 1)
+    m = fabric_multi("os", layer, 16, "line", cfg8, 0.5, None, False)
+    totals = m["node_totals"]
+    main_max = max(totals[:m["main_count"]])
+    rem_total = totals[-1]
+    check(len(totals) == 15, "15 placed nodes")
+    check(rem_total > main_max, "remainder node must be the slowest "
+          f"(rem {rem_total} vs main {main_max})")
+    check(m["stall_cycles"] == rem_total - m["cycles"], "stall follows remainder")
+    check(main_max - m["cycles"] != m["stall_cycles"], "main-only selection differs")
+    print(f"regression case verified: rem_total={rem_total} main_max={main_max} "
+          f"cycles={m['cycles']} stall={m['stall_cycles']}", file=sys.stderr)
+
+
+# ----------------------------------------------------------------- fixture
+
+def main():
+    self_checks()
+    fabric_self_checks()
+    regression_case()
+    cases = [
+        ("resnet50", load_conv_csv(os.path.join(REPO, "topologies/resnet50.csv"))),
+        ("alexnet", load_conv_csv(os.path.join(REPO, "topologies/alexnet.csv"))),
+    ]
+    cfg = Cfg(NODE_DIM, NODE_DIM)
+    entries = []
+    for wname, layers in cases:
+        assert len(layers) >= LAYERS, wname
+        for kind in FABRIC_KINDS:
+            for nodes in FABRIC_NODES:
+                stall = hop = 0
+                peak = avg = 0.0
+                d = dict(requests=0, row_hits=0, row_conflicts=0, cold_misses=0,
+                         total_latency_cycles=0, queue_wait_cycles=0,
+                         max_latency_cycles=0)
+                for layer in layers[:LAYERS]:
+                    m = fabric_multi("os", layer, nodes, kind, cfg,
+                                     LINK_BW, STALL_BW, True)
+                    stall += m["stall_cycles"]
+                    hop += m["hop_bytes"]
+                    peak = max(peak, m["max_link_peak_bw"])
+                    avg = max(avg, m["max_link_avg_bw"])
+                    for k in ("requests", "row_hits", "row_conflicts",
+                              "cold_misses", "total_latency_cycles",
+                              "queue_wait_cycles"):
+                        d[k] += m["dram"][k]
+                    d["max_latency_cycles"] = max(d["max_latency_cycles"],
+                                                  m["dram"]["max_latency_cycles"])
+                e = [
+                    ("workload", json.dumps(wname)),
+                    ("fabric", json.dumps(kind)),
+                    ("nodes", fmt_num(nodes)),
+                    ("stall_cycles", fmt_num(stall)),
+                    ("hop_bytes", fmt_num(hop)),
+                    ("max_link_peak_bw", fmt_num(peak)),
+                    ("max_link_avg_bw", fmt_num(avg)),
+                    ("dram_requests", fmt_num(d["requests"])),
+                    ("dram_row_hits", fmt_num(d["row_hits"])),
+                    ("dram_row_conflicts", fmt_num(d["row_conflicts"])),
+                    ("dram_cold_misses", fmt_num(d["cold_misses"])),
+                    ("dram_total_latency_cycles", fmt_num(d["total_latency_cycles"])),
+                    ("dram_queue_wait_cycles", fmt_num(d["queue_wait_cycles"])),
+                    ("dram_max_latency_cycles", fmt_num(d["max_latency_cycles"])),
+                ]
+                entries.append("{" + ",".join(f'"{k}":{v}' for k, v in e) + "}")
+    assert len(entries) == 2 * len(FABRIC_KINDS) * len(FABRIC_NODES), len(entries)
+    out = "{\"entries\":[\n" + ",\n".join(entries) + "\n]}\n"
+    path = os.path.join(REPO, "rust/tests/golden/fabric.json")
+    with open(path, "w") as f:
+        f.write(out)
+    print(f"wrote {len(entries)} entries to {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -100,8 +100,20 @@ def multi_fixed(df, layer, nodes, partition, cfg, bw):
         used += 1
         cycles = max(main_cycles, rem_cycles)
         rem = dict(layer=rem_layer, cycles=rem_cycles, traffic=rem_traffic, peak=rem_peak)
-    stall = (stalled_runtime(df, main_layer, cfg, bw / used)["stall_cycles"]
-             if bw is not None else 0)
+    # every share replays against its equal split and the layer stalls
+    # with whichever node finishes LAST (the maximal share provably
+    # dominates under an equal split, so this matches the historical
+    # main-share-only numbers bit-for-bit — but the selection must not
+    # bake that assumption in; mirrors Engine::multi_fixed)
+    stall = 0
+    if bw is not None:
+        share_bw = bw / used
+        sr = stalled_runtime(df, main_layer, cfg, share_bw)
+        completion = sr["ideal_cycles"] + sr["stall_cycles"]
+        if rem is not None:
+            rr = stalled_runtime(df, rem["layer"], cfg, share_bw)
+            completion = max(completion, rr["ideal_cycles"] + rr["stall_cycles"])
+        stall = max(completion - cycles, 0)
     dram = dict(
         ifmap_bytes=main_traffic["ifmap_bytes"] * main_count,
         filter_bytes=main_traffic["filter_bytes"] * main_count,

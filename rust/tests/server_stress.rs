@@ -42,6 +42,8 @@ fn tiny_campaign() -> Campaign {
         partitions: vec![Partition::default()],
         sram_kb: vec![64],
         dram_bw: vec![4.0, 16.0],
+        topologies: vec![scale_sim::engine::FabricKind::Flat],
+        link_bw: vec![scale_sim::engine::DEFAULT_LINK_BW],
         energy: "28nm".into(),
     }
 }
@@ -210,6 +212,8 @@ fn multi_campaign() -> Campaign {
         partitions: Partition::ALL.to_vec(),
         sram_kb: vec![64],
         dram_bw: vec![4.0, 16.0],
+        topologies: vec![scale_sim::engine::FabricKind::Flat],
+        link_bw: vec![scale_sim::engine::DEFAULT_LINK_BW],
         energy: "28nm".into(),
     }
 }
@@ -327,6 +331,57 @@ fn garbage_bytes_on_the_wire_get_error_lines_and_the_connection_survives() {
 
     // the server as a whole is unharmed: fresh clients round-trip and
     // no worker died digesting the garbage
+    let stats = handle.stats();
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.completed, 1);
+    handle.shutdown();
+}
+
+#[test]
+fn non_positive_dram_bandwidth_is_rejected_without_killing_the_worker() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let handle = start(ServeOpts::default()).unwrap();
+    let addr = handle.addr();
+
+    let mut raw = std::net::TcpStream::connect(addr).unwrap();
+    let mut lines = BufReader::new(raw.try_clone().unwrap());
+    let next_event = |lines: &mut BufReader<std::net::TcpStream>| {
+        let mut line = String::new();
+        lines.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    };
+
+    // a zero shared-DRAM bandwidth used to reach the stall replay's
+    // positive-bandwidth assert inside a worker; it must be refused at
+    // admission with a structured error event instead
+    for req in [
+        r#"{"req":"run","id":1,"workload":"ncf","nodes":4,"dram_bw":0}"#,
+        r#"{"req":"run","id":2,"workload":"ncf","nodes":4,"dram_bw":-3.5}"#,
+        r#"{"req":"run","id":3,"workload":"ncf","nodes":4,"fabric":"line","link_bw":0}"#,
+    ] {
+        raw.write_all(req.as_bytes()).unwrap();
+        raw.write_all(b"\n").unwrap();
+        let ev = next_event(&mut lines);
+        assert_eq!(ev.str_field("event"), Some("error"), "{req} -> {ev}");
+    }
+
+    // the SAME connection then runs a real fabric job to completion
+    let good =
+        r#"{"req":"run","id":9,"workload":"ncf","nodes":4,"dram_bw":16,"fabric":"mesh","link_bw":8}"#;
+    raw.write_all(good.as_bytes()).unwrap();
+    raw.write_all(b"\n").unwrap();
+    loop {
+        let ev = next_event(&mut lines);
+        if scale_sim::server::proto::is_terminal_event(&ev) {
+            assert_eq!(ev.str_field("event"), Some("done"), "{ev}");
+            assert_eq!(ev.u64_field("id"), Some(9));
+            break;
+        }
+    }
+    drop(raw);
+
+    // no worker died digesting the bad bandwidths
     let stats = handle.stats();
     assert_eq!(stats.failed, 0);
     assert_eq!(stats.completed, 1);
