@@ -71,7 +71,7 @@ echo "== test-inventory floor =="
 # binaries must not drop below the checked-in floor — a suite falling
 # out of Cargo.toml (or a mass #[ignore]) fails here even though every
 # remaining test is green. Raise the floor as suites grow.
-TEST_FLOOR=493
+TEST_FLOOR=520
 TOTAL_PASSED=$(grep -o '[0-9]\+ passed' "$TEST_LOG" | awk '{s+=$1} END {print s+0}')
 rm -f "$TEST_LOG"
 echo "total tests passed: $TOTAL_PASSED (floor $TEST_FLOOR)"
@@ -205,9 +205,9 @@ echo "ok (resumed-half hit rate $HIT)"
 echo "== smoke: serve round trip (server + client + /stats + shutdown) =="
 SERVE_STATE=$(mktemp -d)
 SERVE_LOG=$(mktemp)
-"$BIN" serve --addr 127.0.0.1:0 --state-dir "$SERVE_STATE" > "$SERVE_LOG" &
+"$BIN" serve --addr 127.0.0.1:0 --state-dir "$SERVE_STATE" --cache-stripes 8 > "$SERVE_LOG" &
 SERVE_PID=$!
-trap 'kill $SERVE_PID 2>/dev/null || true; rm -rf "$SERVE_STATE" "$SERVE_LOG"' EXIT
+trap 'kill ${SERVE_PID:-} ${FED_A_PID:-} ${FED_B_PID:-} 2>/dev/null || true; rm -rf "$SERVE_STATE" "$SERVE_LOG" "${FED_LOG_A:-}" "${FED_LOG_B:-}"' EXIT
 for _ in $(seq 1 100); do
   grep -q "^listening on " "$SERVE_LOG" && break
   sleep 0.1
@@ -229,6 +229,14 @@ grep -q 'scale_sim_workers_busy' metrics_smoke.prom || { echo "scrape lacks work
 grep -q '# TYPE scale_sim_cache_hits_total counter' metrics_smoke.prom \
   || { echo "scrape lacks cache series"; exit 1; }
 rm -f metrics_smoke.prom
+# batch envelope: two workloads in one request; the interleaved stream
+# must end with the envelope's batch_done tally
+"$BIN" client batch --addr "$ADDR" -t ncf -t topologies/gemm/mlp.csv > batch_smoke.txt
+tail -1 batch_smoke.txt | grep -q '"event":"batch_done"' || { echo "batch_done missing"; cat batch_smoke.txt; exit 1; }
+tail -1 batch_smoke.txt | grep -q '"jobs":2' || { echo "batch_done lacks jobs tally"; exit 1; }
+grep -q '"id":1,"event":"done"' batch_smoke.txt || { echo "batch sub-job 1 never finished"; exit 1; }
+grep -q '"id":2,"event":"done"' batch_smoke.txt || { echo "batch sub-job 2 never finished"; exit 1; }
+rm -f batch_smoke.txt
 "$BIN" client shutdown --addr "$ADDR" | grep -q '"event":"shutting_down"'
 wait "$SERVE_PID"
 test -f "$SERVE_STATE/results.jsonl" || { echo "store was not flushed on shutdown"; exit 1; }
@@ -248,6 +256,54 @@ test -n "$ADDR" || { echo "restarted server never reported its address"; cat "$S
   || { echo "warm restart served no warm hits"; exit 1; }
 "$BIN" client shutdown --addr "$ADDR" > /dev/null
 wait "$SERVE_PID"
+echo "ok"
+
+echo "== smoke: federation (2 instances, --peers, cross-instance cache sharing) =="
+# a mutual two-member fleet needs both addresses up front (ring
+# agreement is by construction from the listed strings), so these use
+# fixed loopback ports instead of :0
+FED_A=127.0.0.1:7471
+FED_B=127.0.0.1:7472
+FED_LOG_A=$(mktemp)
+FED_LOG_B=$(mktemp)
+"$BIN" serve --addr "$FED_A" --peers "$FED_B" > "$FED_LOG_A" &
+FED_A_PID=$!
+"$BIN" serve --addr "$FED_B" --peers "$FED_A" > "$FED_LOG_B" &
+FED_B_PID=$!
+for log in "$FED_LOG_A" "$FED_LOG_B"; do
+  for _ in $(seq 1 100); do
+    grep -q "^listening on " "$log" && break
+    sleep 0.1
+  done
+  grep -q "^listening on " "$log" || { echo "federated server never came up"; cat "$log"; exit 1; }
+  grep -q "^federated: 1 peer" "$log" || { echo "server did not report its ring"; cat "$log"; exit 1; }
+done
+# run on A: A computes its self-owned keys and fetches B-owned keys
+# from B, so B's memo cache fills with its share of the workload
+"$BIN" client run --addr "$FED_A" -t resnet50 | tail -1 | grep -q '"event":"done"'
+"$BIN" client stats --addr "$FED_B" | grep -q '"layer_sims":[1-9]' \
+  || { echo "no keys routed to the peer"; exit 1; }
+# replay on B: B's share is now warm locally and A's share is warm on
+# A, so the fleet re-serves the workload from its ONE logical cache
+"$BIN" client run --addr "$FED_B" -t resnet50 | tail -1 | grep -q '"event":"done"'
+"$BIN" client stats --addr "$FED_B" | grep -q '"cache_hits":[1-9]' \
+  || { echo "cross-instance warm replay missed the shared cache"; exit 1; }
+"$BIN" client shutdown --addr "$FED_A" > /dev/null
+"$BIN" client shutdown --addr "$FED_B" > /dev/null
+wait "$FED_A_PID" "$FED_B_PID"
+rm -f "$FED_LOG_A" "$FED_LOG_B"
+echo "ok"
+
+echo "== bench-serve (closed-loop load, gated against BENCH_serve.baseline.json) =="
+# a pinned mixed run+sweep load; the binary itself enforces the gate:
+# fail if throughput < 0.8x baseline or p99 > 2x baseline. A missing
+# baseline (first run) is blessed; refresh deliberately with --bless.
+"$BIN" bench-serve --clients 8 --rounds 1 --workers 4 \
+  --baseline BENCH_serve.baseline.json
+test -f BENCH_serve.json
+grep -q '"busy_retries"' BENCH_serve.json || { echo "BENCH_serve.json lacks shed accounting"; exit 1; }
+test -f BENCH_serve.baseline.json
+cat BENCH_serve.json
 echo "ok"
 
 echo "CI OK"

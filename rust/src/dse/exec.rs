@@ -324,6 +324,10 @@ fn serve_exec(
     Ok(results.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner))
 }
 
+/// Submissions a shard makes before giving up on a server that answers
+/// `busy` every time.
+const BUSY_RETRIES: usize = 32;
+
 fn run_shard(
     spec: &Json,
     shard: usize,
@@ -340,27 +344,38 @@ fn run_shard(
         ("indices", Json::Arr(indices.iter().map(|&i| Json::u64(i as u64)).collect())),
     ])
     .to_string();
-    client.send(&req).map_err(|e| e.to_string())?;
-    let mut out = Vec::with_capacity(indices.len());
-    loop {
-        let ev = client.recv().map_err(|e| e.to_string())?;
-        match ev.str_field("event") {
-            Some("dse_point") => {
-                let cp = CompletedPoint::from_json(&ev)?;
-                if let Some(j) = journal {
-                    if let Err(e) = j.append(&cp) {
-                        eprintln!("dse: journal append failed: {e}");
+    // a full queue sheds the job with a `busy` event (nothing admitted,
+    // no partial stream) — back off and resubmit on the same connection
+    let mut backoff = std::time::Duration::from_millis(20);
+    'attempts: for _ in 0..BUSY_RETRIES {
+        client.send(&req).map_err(|e| e.to_string())?;
+        let mut out = Vec::with_capacity(indices.len());
+        loop {
+            let ev = client.recv().map_err(|e| e.to_string())?;
+            match ev.str_field("event") {
+                Some("dse_point") => {
+                    let cp = CompletedPoint::from_json(&ev)?;
+                    if let Some(j) = journal {
+                        if let Err(e) = j.append(&cp) {
+                            eprintln!("dse: journal append failed: {e}");
+                        }
                     }
+                    out.push(cp);
                 }
-                out.push(cp);
+                Some("done") => return Ok(out),
+                Some("busy") => {
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(std::time::Duration::from_millis(500));
+                    continue 'attempts;
+                }
+                Some("error") => {
+                    return Err(ev.str_field("error").unwrap_or("server error").to_string())
+                }
+                _ => return Err(format!("unexpected server event: {ev}")),
             }
-            Some("done") => return Ok(out),
-            Some("error") => {
-                return Err(ev.str_field("error").unwrap_or("server error").to_string())
-            }
-            _ => return Err(format!("unexpected server event: {ev}")),
         }
     }
+    Err(format!("server stayed busy through {BUSY_RETRIES} submissions"))
 }
 
 #[cfg(test)]

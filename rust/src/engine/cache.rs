@@ -25,18 +25,30 @@
 //! addresses but do not affect any reported metric. The energy model is
 //! engine-fixed (one cache per engine), so it is not part of the key.
 //!
-//! ## Concurrency: in-flight deduplication
+//! ## Concurrency: lock striping + in-flight deduplication
 //!
-//! The table is thread-safe *and* duplicate-compute free: a miss claims
+//! The table is split into N **stripes**, each its own mutex + condvar
+//! over a disjoint key range selected by [`memo_hash`] — a deterministic
+//! FNV-1a over the key's canonical field encoding (NOT the std
+//! `DefaultHasher`, whose per-process random seed would make stripe
+//! placement — and therefore contention behaviour — unreproducible).
+//! Concurrent misses on *different* keys land on different stripes with
+//! high probability and never contend; the stripe count can only change
+//! which lock a key hashes to, never what is stored under the key, so
+//! results are bit-identical at any stripe count (docs/INVARIANTS.md
+//! §11). Stripe-lock contention is tallied (wall-class — it depends on
+//! scheduling, not on the workload) for `scale-sim serve` metrics.
+//!
+//! Within a stripe the table is duplicate-compute free: a miss claims
 //! the key with an [`Slot::InFlight`] marker before computing outside
-//! the lock, so a second thread that misses on the same key **waits on a
-//! condvar and reuses the first thread's result** instead of running the
-//! backend again (counted as a cache hit — the work was shared). This is
-//! load-bearing for the serve subsystem, where many concurrent clients
-//! submit overlapping workloads, and a straight win for wide sweeps that
-//! previously burned duplicate simulations in the insert race. If a
-//! compute panics, its claim is withdrawn and waiters retry, so a
-//! poisoned job cannot wedge the table.
+//! the lock, so a second thread that misses on the same key **waits on
+//! the stripe's condvar and reuses the first thread's result** instead
+//! of running the backend again (counted as a cache hit — the work was
+//! shared). This is load-bearing for the serve subsystem, where many
+//! concurrent clients submit overlapping workloads, and a straight win
+//! for wide sweeps that previously burned duplicate simulations in the
+//! insert race. If a compute panics, its claim is withdrawn and waiters
+//! retry, so a poisoned job cannot wedge the table.
 //!
 //! Entries loaded from a persistent store ([`LayerCache::insert_prewarmed`])
 //! are tagged *warm*; hits on them are tallied separately ([`WarmStats`])
@@ -45,7 +57,7 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, TryLockError};
 
 use crate::arch::LayerShape;
 use crate::config::ArchConfig;
@@ -53,6 +65,10 @@ use crate::dataflow::Dataflow;
 use crate::sim::LayerReport;
 
 use super::backend::BackendKind;
+
+/// Default stripe count: enough to make cross-key contention rare on
+/// any realistic core count without bloating tiny caches.
+pub(crate) const DEFAULT_STRIPES: usize = 16;
 
 /// Cache key: see the module docs for what is (and is not) included.
 /// Fields are crate-visible so the server's result store can persist and
@@ -106,6 +122,46 @@ impl CacheKey {
             },
         }
     }
+}
+
+/// Deterministic FNV-1a hash of a [`CacheKey`]'s canonical encoding.
+///
+/// Used for stripe selection *and* for routing keys across federated
+/// serve peers (`server::peers`): every process — any build, any run —
+/// must map a given key to the same u64, so the enum fields go in via
+/// their stable `name()` tags and the numeric fields in a fixed order.
+pub(crate) fn memo_hash(key: &CacheKey) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    };
+    eat(key.backend.name().as_bytes());
+    eat(&[0]); // field separator: tags must not concatenate ambiguously
+    eat(key.dataflow.name().as_bytes());
+    eat(&[0]);
+    for v in [
+        key.array_h,
+        key.array_w,
+        key.ifmap_sram_kb,
+        key.filter_sram_kb,
+        key.ofmap_sram_kb,
+        key.word_bytes,
+        key.layer.ifmap_h,
+        key.layer.ifmap_w,
+        key.layer.filt_h,
+        key.layer.filt_w,
+        key.layer.channels,
+        key.layer.num_filters,
+        key.layer.stride,
+    ] {
+        eat(&v.to_le_bytes());
+    }
+    h
 }
 
 /// Cumulative memoization counters (monotone over an engine's lifetime).
@@ -166,39 +222,87 @@ enum Slot {
     Ready { report: Arc<LayerReport>, warm: bool },
 }
 
-/// Thread-safe memo table with in-flight deduplication (module docs).
-/// Ready entries are `Arc`ed so a hit only clones a pointer while the
-/// lock is held; the (deep) per-caller copy happens outside the critical
-/// section, keeping warm sweeps parallel.
-pub(crate) struct LayerCache {
+/// One lock-striped shard of the memo table: a disjoint key range with
+/// its own mutex and wake-up channel for in-flight waiters.
+struct Stripe {
     map: Mutex<HashMap<CacheKey, Slot>>,
     ready: Condvar,
+}
+
+impl Stripe {
+    fn new() -> Self {
+        Stripe { map: Mutex::new(HashMap::new()), ready: Condvar::new() }
+    }
+
+    /// Lock this stripe's table, recovering from poisoning: entries are
+    /// only ever inserted whole (`Slot` values are moved in, never
+    /// mutated in place), so a panicking computer cannot leave a torn
+    /// entry — and the `InFlightGuard` below already withdraws its claim
+    /// on panic. A failed opportunistic `try_lock` bumps the shared
+    /// contention counter before falling back to a blocking lock.
+    fn table(&self, contended: &AtomicU64) -> MutexGuard<'_, HashMap<CacheKey, Slot>> {
+        match self.map.try_lock() {
+            Ok(guard) => guard,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                contended.fetch_add(1, Ordering::Relaxed);
+                self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+            }
+        }
+    }
+}
+
+/// Thread-safe, lock-striped memo table with per-stripe in-flight
+/// deduplication (module docs). Ready entries are `Arc`ed so a hit only
+/// clones a pointer while the stripe lock is held; the (deep) per-caller
+/// copy happens outside the critical section, keeping warm sweeps
+/// parallel. The cumulative counters are global atomics — they are
+/// stripe-agnostic by construction, so sharded totals equal what the
+/// old single-mutex table would have counted.
+pub(crate) struct LayerCache {
+    stripes: Vec<Stripe>,
     sims: AtomicU64,
     hits: AtomicU64,
     inflight_waits: AtomicU64,
     warm_entries: AtomicU64,
     warm_hits: AtomicU64,
+    contended: AtomicU64,
 }
 
 impl LayerCache {
-    /// Lock the memo table, recovering from poisoning: entries are only
-    /// ever inserted whole (`Slot` values are moved in, never mutated in
-    /// place), so a panicking computer cannot leave a torn entry — and
-    /// the `InFlightGuard` below already withdraws its claim on panic.
-    fn table(&self) -> std::sync::MutexGuard<'_, HashMap<CacheKey, Slot>> {
-        self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    pub(crate) fn new() -> Self {
+        Self::with_stripes(DEFAULT_STRIPES)
     }
 
-    pub(crate) fn new() -> Self {
+    /// Build a cache with an explicit stripe count (clamped to >= 1).
+    /// `with_stripes(1)` reproduces the historical single-mutex table
+    /// exactly; larger counts only spread keys across locks.
+    pub(crate) fn with_stripes(n: usize) -> Self {
+        let n = n.max(1);
         LayerCache {
-            map: Mutex::new(HashMap::new()),
-            ready: Condvar::new(),
+            stripes: (0..n).map(|_| Stripe::new()).collect(),
             sims: AtomicU64::new(0),
             hits: AtomicU64::new(0),
             inflight_waits: AtomicU64::new(0),
             warm_entries: AtomicU64::new(0),
             warm_hits: AtomicU64::new(0),
+            contended: AtomicU64::new(0),
         }
+    }
+
+    pub(crate) fn stripe_count(&self) -> usize {
+        self.stripes.len()
+    }
+
+    /// Times a stripe lock was found held by another thread (wall-class:
+    /// a scheduling artifact, never part of deterministic output).
+    pub(crate) fn contention(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
+    }
+
+    fn stripe_for(&self, key: &CacheKey) -> &Stripe {
+        let idx = (memo_hash(key) % self.stripes.len() as u64) as usize;
+        &self.stripes[idx]
     }
 
     /// Fetch the report for `key`, computing (outside the lock) on miss.
@@ -217,8 +321,9 @@ impl LayerCache {
             InFlight,
             Absent,
         }
+        let stripe = self.stripe_for(&key);
         {
-            let mut map = self.table();
+            let mut map = stripe.table(&self.contended);
             let mut waited = false;
             loop {
                 // resolve the slot to an owned view first, so no borrow
@@ -242,7 +347,7 @@ impl LayerCache {
                             waited = true;
                             self.inflight_waits.fetch_add(1, Ordering::Relaxed);
                         }
-                        map = self
+                        map = stripe
                             .ready
                             .wait(map)
                             .unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -263,11 +368,11 @@ impl LayerCache {
         // disarm: with the key taken, the guard's Drop is a no-op
         // (`key` is Some by construction — the claim is taken exactly here)
         if let Some(key) = guard.key.take() {
-            let mut map = self.table();
+            let mut map = stripe.table(&self.contended);
             map.insert(key, Slot::Ready { report: Arc::new(report.clone()), warm: false });
         }
         self.sims.fetch_add(1, Ordering::Relaxed);
-        self.ready.notify_all();
+        stripe.ready.notify_all();
         report
     }
 
@@ -275,7 +380,8 @@ impl LayerCache {
     /// No-op (returns `false`) when the key is already present; never
     /// counts as a layer sim.
     pub(crate) fn insert_prewarmed(&self, key: CacheKey, report: LayerReport) -> bool {
-        let mut map = self.table();
+        let stripe = self.stripe_for(&key);
+        let mut map = stripe.table(&self.contended);
         if map.contains_key(&key) {
             return false;
         }
@@ -285,15 +391,18 @@ impl LayerCache {
     }
 
     /// Snapshot every ready entry (in-flight computations are skipped) —
-    /// the server's shutdown flush.
+    /// the server's shutdown flush. Stripes are visited in index order;
+    /// within a stripe the iteration order is the map's.
     pub(crate) fn export(&self) -> Vec<(CacheKey, Arc<LayerReport>)> {
-        self.table()
-            .iter()
-            .filter_map(|(k, slot)| match slot {
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            let map = stripe.table(&self.contended);
+            out.extend(map.iter().filter_map(|(k, slot)| match slot {
                 Slot::Ready { report, .. } => Some((k.clone(), Arc::clone(report))),
                 Slot::InFlight => None,
-            })
-            .collect()
+            }));
+        }
+        out
     }
 
     pub(crate) fn stats(&self) -> MemoStats {
@@ -312,10 +421,15 @@ impl LayerCache {
     }
 
     pub(crate) fn entries(&self) -> usize {
-        self.table()
-            .values()
-            .filter(|s| matches!(s, Slot::Ready { .. }))
-            .count()
+        self.stripes
+            .iter()
+            .map(|s| {
+                s.table(&self.contended)
+                    .values()
+                    .filter(|slot| matches!(slot, Slot::Ready { .. }))
+                    .count()
+            })
+            .sum()
     }
 }
 
@@ -336,8 +450,9 @@ struct InFlightGuard<'a> {
 impl Drop for InFlightGuard<'_> {
     fn drop(&mut self) {
         if let Some(key) = self.key.take() {
-            self.cache.table().remove(&key);
-            self.cache.ready.notify_all();
+            let stripe = self.cache.stripe_for(&key);
+            stripe.table(&self.cache.contended).remove(&key);
+            stripe.ready.notify_all();
         }
     }
 }
@@ -430,6 +545,34 @@ mod tests {
         let d = a.since(&b);
         assert_eq!((d.layer_sims, d.cache_hits, d.inflight_waits), (6, 20, 3));
         assert_eq!(MemoStats::default().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn memo_hash_is_stable_and_field_sensitive() {
+        let cfg = config::paper_default();
+        let l = LayerShape::conv("h", 12, 12, 3, 3, 4, 8, 1);
+        let k = CacheKey::new(BackendKind::Analytical, &cfg, &l);
+        // same key hashes identically (the whole point: cross-process
+        // stripe/peer routing must agree without a shared seed)
+        assert_eq!(memo_hash(&k), memo_hash(&k.clone()));
+        // every field class perturbs the hash
+        let mut cfg2 = cfg.clone();
+        cfg2.array_w = 64;
+        assert_ne!(
+            memo_hash(&k),
+            memo_hash(&CacheKey::new(BackendKind::Analytical, &cfg2, &l))
+        );
+        assert_ne!(memo_hash(&k), memo_hash(&CacheKey::new(BackendKind::Rtl, &cfg, &l)));
+        let l2 = LayerShape::conv("h", 12, 12, 3, 3, 4, 9, 1);
+        assert_ne!(memo_hash(&k), memo_hash(&CacheKey::new(BackendKind::Analytical, &cfg, &l2)));
+    }
+
+    #[test]
+    fn stripe_count_clamps_and_reports() {
+        assert_eq!(LayerCache::with_stripes(0).stripe_count(), 1);
+        assert_eq!(LayerCache::with_stripes(1).stripe_count(), 1);
+        assert_eq!(LayerCache::with_stripes(8).stripe_count(), 8);
+        assert_eq!(LayerCache::new().stripe_count(), DEFAULT_STRIPES);
     }
 
     #[test]
@@ -527,6 +670,34 @@ mod tests {
         assert_eq!(dump.len(), 1);
         assert_eq!(dump[0].0, key);
         assert_eq!(*dump[0].1, r);
+    }
+
+    #[test]
+    fn striped_and_single_stripe_agree_on_a_key_spread() {
+        // the same lookup schedule against 1 stripe and 16 stripes must
+        // produce identical reports and identical counter totals —
+        // stripe count is a lock-layout choice, never a semantic one
+        let single = LayerCache::with_stripes(1);
+        let striped = LayerCache::with_stripes(16);
+        let cfg = config::paper_default();
+        let shapes: Vec<LayerShape> = (0..12)
+            .map(|i| LayerShape::conv(&format!("k{i}"), 8 + i, 8 + i, 3, 3, 4, 8, 1))
+            .collect();
+        for pass in 0..2 {
+            for (i, l) in shapes.iter().enumerate() {
+                let name = format!("p{pass}_k{i}");
+                let key = CacheKey::new(BackendKind::Analytical, &cfg, l);
+                let a = single.get_or_compute(key.clone(), &name, || {
+                    Simulator::new(cfg.clone()).run_layer(l)
+                });
+                let b = striped.get_or_compute(key, &name, || {
+                    Simulator::new(cfg.clone()).run_layer(l)
+                });
+                assert_eq!(a, b, "stripe count changed a report for {name}");
+            }
+        }
+        assert_eq!(single.stats(), striped.stats());
+        assert_eq!(single.entries(), striped.entries());
     }
 
     #[test]

@@ -112,6 +112,21 @@ impl CacheHandle {
     }
 }
 
+/// Federation hook: consulted **before** the local memo path on every
+/// layer lookup. A router may serve the report from somewhere else (a
+/// peer serve instance that owns the key's hash range); returning `None`
+/// falls through to the normal local cache/compute path, which is also
+/// the failover when a peer is unreachable. Implementations receive the
+/// key's deterministic [`cache::memo_hash`] so every process in a fleet
+/// agrees on ownership without coordination.
+///
+/// Routed reports are **never inserted into the local cache** — the
+/// router routes keys, not values (docs/INVARIANTS.md §11) — so local
+/// memo statistics count only local work.
+pub trait LayerRouter: Send + Sync {
+    fn route(&self, key_hash: u64, cfg: &ArchConfig, layer: &LayerShape) -> Option<LayerReport>;
+}
+
 /// The simulation engine: one base architecture + energy model + fidelity
 /// backend + memo cache, shared across runs and sweeps.
 pub struct Engine {
@@ -125,6 +140,7 @@ pub struct Engine {
     trace_limit: u64,
     functional_tile: Option<usize>,
     cache: Arc<LayerCache>,
+    router: Option<Arc<dyn LayerRouter>>,
 }
 
 impl Engine {
@@ -194,10 +210,30 @@ impl Engine {
         &self.cache
     }
 
+    /// Stripe count of the memo table (a lock-layout detail; it can
+    /// never change results — docs/INVARIANTS.md §11).
+    pub fn cache_stripe_count(&self) -> usize {
+        self.cache.stripe_count()
+    }
+
+    /// Times a memo-table stripe lock was contended (wall-class).
+    pub fn cache_contention(&self) -> u64 {
+        self.cache.contention()
+    }
+
     /// Simulate one layer under an arbitrary configuration (the grid's
-    /// inner loop). Memoized; see [`cache`] for the key semantics.
+    /// inner loop). Memoized; see [`cache`] for the key semantics. When
+    /// a [`LayerRouter`] is installed it is consulted first — a routed
+    /// report bypasses the local table entirely (keys a peer owns are
+    /// never cached locally), and a `None` answer (self-owned key, or
+    /// peer failover) takes the normal memoized path.
     pub fn run_layer_with(&self, cfg: &ArchConfig, layer: &LayerShape) -> LayerReport {
         let key = CacheKey::new(self.kind, cfg, layer);
+        if let Some(router) = &self.router {
+            if let Some(report) = router.route(cache::memo_hash(&key), cfg, layer) {
+                return report;
+            }
+        }
         self.cache.get_or_compute(key, &layer.name, || {
             // wall-clock the miss path only (through the sanctioned
             // bench clock) and feed the per-backend latency histogram
@@ -410,6 +446,8 @@ pub struct EngineBuilder {
     trace_limit: u64,
     functional_tile: Option<usize>,
     cache: Option<CacheHandle>,
+    cache_stripes: Option<usize>,
+    router: Option<Arc<dyn LayerRouter>>,
 }
 
 impl Default for EngineBuilder {
@@ -425,6 +463,8 @@ impl Default for EngineBuilder {
             trace_limit: 2_000_000,
             functional_tile: None,
             cache: None,
+            cache_stripes: None,
+            router: None,
         }
     }
 }
@@ -527,6 +567,25 @@ impl EngineBuilder {
         self
     }
 
+    /// Lock-stripe count for a freshly built memo table (clamped to
+    /// >= 1; default [`cache::DEFAULT_STRIPES`]). Purely a contention
+    /// knob: any stripe count yields bit-identical results
+    /// (docs/INVARIANTS.md §11). Ignored when [`shared_cache`] installs
+    /// an existing table — the owning engine fixed its layout.
+    ///
+    /// [`shared_cache`]: EngineBuilder::shared_cache
+    pub fn cache_stripes(mut self, n: usize) -> Self {
+        self.cache_stripes = Some(n);
+        self
+    }
+
+    /// Install a [`LayerRouter`] consulted before the local memo path —
+    /// the serve subsystem's federation seam.
+    pub fn layer_router(mut self, router: Arc<dyn LayerRouter>) -> Self {
+        self.router = Some(router);
+        self
+    }
+
     /// Validate the configuration and construct the engine.
     pub fn build(self) -> Result<Engine> {
         self.cfg.validate()?;
@@ -577,8 +636,12 @@ impl EngineBuilder {
             functional_tile: self.functional_tile,
             cache: match self.cache {
                 Some(h) => h.cache,
-                None => Arc::new(LayerCache::new()),
+                None => Arc::new(match self.cache_stripes {
+                    Some(n) => LayerCache::with_stripes(n),
+                    None => LayerCache::new(),
+                }),
             },
+            router: self.router,
         }
     }
 }
@@ -810,6 +873,71 @@ mod tests {
         }
         // Custom kind without an implementation is rejected
         assert!(Engine::builder().backend(BackendKind::Custom).build().is_err());
+    }
+
+    #[test]
+    fn cache_stripes_never_change_results() {
+        // §11: the stripe count is a lock-layout knob, results are
+        // bit-identical at any setting (including the historical
+        // single-mutex layout, stripes = 1)
+        let t = topo();
+        let base = Engine::builder().array(16, 16).build().unwrap().run_topology(&t);
+        for stripes in [1usize, 2, 16, 64] {
+            let e = Engine::builder().array(16, 16).cache_stripes(stripes).build().unwrap();
+            assert_eq!(e.cache_stripe_count(), stripes.max(1));
+            assert_eq!(e.run_topology(&t), base, "stripes={stripes} changed a report");
+            // a second pass is served from the cache, still identical
+            assert_eq!(e.run_topology(&t), base);
+            assert_eq!(e.cache_stats().layer_sims, t.layers.len() as u64);
+        }
+    }
+
+    #[test]
+    fn layer_router_intercepts_and_falls_back() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+
+        /// Routes every odd hash to a canned "remote" result; even
+        /// hashes fall through to the local path (peer failover shape).
+        struct OddRouter {
+            asked: AtomicUsize,
+            served: AtomicUsize,
+        }
+        impl LayerRouter for OddRouter {
+            fn route(
+                &self,
+                key_hash: u64,
+                cfg: &ArchConfig,
+                layer: &LayerShape,
+            ) -> Option<LayerReport> {
+                self.asked.fetch_add(1, Ordering::SeqCst);
+                if key_hash % 2 == 1 {
+                    self.served.fetch_add(1, Ordering::SeqCst);
+                    // a "peer" computes the same deterministic result
+                    Some(Simulator::new(cfg.clone()).run_layer(layer))
+                } else {
+                    None
+                }
+            }
+        }
+
+        let router = Arc::new(OddRouter { asked: AtomicUsize::new(0), served: AtomicUsize::new(0) });
+        let e = Engine::builder()
+            .array(16, 16)
+            .layer_router(Arc::clone(&router) as Arc<dyn LayerRouter>)
+            .build()
+            .unwrap();
+        let plain = Engine::builder().array(16, 16).build().unwrap();
+        let t = topo();
+        assert_eq!(e.run_topology(&t), plain.run_topology(&t), "routing must not change results");
+        let asked = router.asked.load(Ordering::SeqCst);
+        let served = router.served.load(Ordering::SeqCst);
+        assert_eq!(asked, t.layers.len(), "router consulted once per layer");
+        // routed layers bypass the local table; fall-throughs hit it
+        assert_eq!(
+            e.cache_stats().layer_sims,
+            (asked - served) as u64,
+            "peer-served keys must never enter the local table"
+        );
     }
 
     #[test]

@@ -7,7 +7,7 @@
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use scale_sim::config::{workloads, ArchConfig, Topology};
 use scale_sim::engine::{BackendKind, Engine};
@@ -149,32 +149,48 @@ USAGE:
       only).
 
   scale-sim serve [--addr H:P] [--workers N] [--queue-cap N]
-                  [--state-dir DIR] [-c cfg] [--dataflow os|ws|is]
+                  [--state-dir DIR] [--peers H:P,H:P,...]
+                  [--cache-stripes N] [-c cfg] [--dataflow os|ws|is]
                   [--array RxC] [--backend analytical|trace|rtl]
       Run the simulation service: a TCP JSON-lines job server with a
-      bounded queue, a worker pool, and ONE shared memo cache, so
-      repeated layers from different clients never re-simulate.
+      bounded queue, a work-shedding worker pool, and ONE shared
+      lock-striped memo cache, so repeated layers from different
+      clients never re-simulate. A full queue answers new jobs with a
+      terminal `busy` event instead of blocking the connection.
       --state-dir persists results across restarts (pre-warm on start,
-      flush on shutdown). Prints `listening on ADDR`; stop it with
-      `scale-sim client shutdown`.
+      flush on shutdown). --peers federates a fleet: every instance
+      lists the others (and is started with the same base config), memo
+      keys route to their consistent-hash owner, and the fleet shares
+      one logical cache — a down peer just means local compute; results
+      never change (docs/INVARIANTS.md §11). --cache-stripes tunes memo
+      lock striping (concurrency only; never changes results). Prints
+      `listening on ADDR`; stop it with `scale-sim client shutdown`.
 
-  scale-sim client <run|sweep|stats|metrics|shutdown> [--addr H:P]
-                   [-t topology] [--dataflow os|ws|is] [--array RxC]
+  scale-sim client <run|sweep|batch|stats|metrics|shutdown> [--addr H:P]
+                   [-t topology]... [--dataflow os|ws|is] [--array RxC]
                    [--kind dataflow|memory|shape]
                    [--nodes N] [--partition channels|pixels|auto]
       Submit a job to a running server and stream its JSON response
       lines (protocol: rust/src/server/proto.rs). `-t` takes a
       built-in name or a conv/GEMM csv path (lowered locally and sent
       inline); the protocol also accepts typed operator specs ("ops").
-      `metrics` prints the server's Prometheus text exposition (cache,
-      queue, and worker series) raw — scrape-ready.
+      `batch` packs every repeated -t/--workload into one envelope:
+      sub-jobs run concurrently, their event streams interleave (demux
+      by id), and a final `batch_done` closes the envelope. `metrics`
+      prints the server's Prometheus text exposition (cache, queue, and
+      worker series) raw — scrape-ready.
 
   scale-sim bench-serve [--clients N] [--rounds N] [--workers N]
-                        [--state-dir DIR]
+                        [--state-dir DIR] [--baseline FILE] [--bless]
       Closed-loop load generator: N concurrent clients (default 8)
-      replay the MLPerf suite against an in-process server, then the
-      server restarts from the state dir to prove warm start. Writes
-      BENCH_serve.json (throughput, p50/p99 latency, hit rate).
+      replay a mixed run+sweep MLPerf load against an in-process
+      server (retrying shed `busy` jobs), then the server restarts from
+      the state dir to prove warm start. Writes BENCH_serve.json
+      (throughput, p50/p99 latency, hit rate) and gates it against
+      --baseline (default BENCH_serve.baseline.json): the run fails if
+      throughput drops below 0.8x the baseline or p99 exceeds 2x. A
+      missing baseline or --bless records the current numbers as the
+      new floor.
 ";
 
 type CliResult<T> = std::result::Result<T, Box<dyn std::error::Error>>;
@@ -1276,15 +1292,25 @@ fn cmd_serve(rest: &[String]) -> CliResult<()> {
     if let Some(b) = a.value("--backend", None) {
         opts.backend = BackendKind::parse(b)?;
     }
+    if let Some(p) = a.value("--peers", None) {
+        opts.peers = p.split(',').map(str::to_string).collect();
+    }
+    if let Some(n) = a.value("--cache-stripes", None) {
+        opts.cache_stripes = Some(n.parse()?);
+    }
 
     let workers = opts.workers;
     let persistent = opts.state_dir.is_some();
+    let peer_count = opts.peers.len();
     let handle = server::start(opts)?;
     let warm = handle.stats().warm.entries;
     println!(
         "scale-sim serve: {workers} workers, {} state, {warm} warm entries",
         if persistent { "persistent" } else { "in-memory" }
     );
+    if peer_count > 0 {
+        println!("federated: {peer_count} peer(s) on the consistent-hash ring");
+    }
     println!("listening on {}", handle.addr());
     handle.join(); // until a client sends {"req":"shutdown"}
     println!("server stopped (queue drained, store flushed)");
@@ -1295,7 +1321,7 @@ fn cmd_client(rest: &[String]) -> CliResult<()> {
     let action = rest
         .first()
         .map(String::as_str)
-        .ok_or("client needs an action: run|sweep|stats|metrics|shutdown")?;
+        .ok_or("client needs an action: run|sweep|batch|stats|metrics|shutdown")?;
     let a = Args(&rest[1..]);
     let addr = a.value("--addr", None).unwrap_or(DEFAULT_SERVE_ADDR);
 
@@ -1341,23 +1367,65 @@ fn cmd_client(rest: &[String]) -> CliResult<()> {
             }
             Json::obj(fields).to_string()
         }
+        "batch" => {
+            let specs = a.values("--workload", Some("-t"))?;
+            if specs.is_empty() {
+                return fail("client batch needs at least one -t/--workload".to_string());
+            }
+            let mut jobs = Vec::with_capacity(specs.len());
+            for (i, spec) in specs.iter().enumerate() {
+                let topo = load_topology(spec)?;
+                let mut fields = vec![
+                    ("req", Json::str("run")),
+                    ("id", Json::u64(i as u64 + 1)),
+                    ("workload", Json::str(&topo.name)),
+                    (
+                        "layers",
+                        Json::Arr(topo.layers.iter().map(proto::layer_shape_to_json).collect()),
+                    ),
+                ];
+                if let Some(df) = a.value("--dataflow", None) {
+                    fields.push(("dataflow", Json::str(df)));
+                }
+                if let Some(arr) = a.value("--array", None) {
+                    fields.push(("array", Json::str(arr)));
+                }
+                jobs.push(Json::obj(fields));
+            }
+            Json::obj(vec![
+                ("req", Json::str("batch")),
+                ("id", Json::u64(0)),
+                ("jobs", Json::Arr(jobs)),
+            ])
+            .to_string()
+        }
         other => {
             return fail(format!(
-                "unknown client action {other:?} (run|sweep|stats|metrics|shutdown)"
+                "unknown client action {other:?} (run|sweep|batch|stats|metrics|shutdown)"
             ))
         }
     };
 
     let mut client = server::Client::connect(addr)
         .map_err(|e| format!("cannot reach server at {addr}: {e}"))?;
-    let events = client.request(&req)?;
+    // a batch envelope interleaves sub-job streams and only ends at
+    // batch_done, so it needs the envelope-aware collector
+    let events =
+        if action == "batch" { client.request_batch(&req)? } else { client.request(&req)? };
     for e in &events {
         println!("{e}");
     }
-    if events.last().is_some_and(|e| e.str_field("event") == Some("error")) {
+    // for single jobs only the last event can be an error; in a batch
+    // any sub-job error (or a whole-envelope rejection) fails the call
+    let err_ev = if action == "batch" {
+        events.iter().find(|e| e.str_field("event") == Some("error"))
+    } else {
+        events.last().filter(|e| e.str_field("event") == Some("error"))
+    };
+    if let Some(e) = err_ev {
         return fail(format!(
             "server rejected the job: {}",
-            events.last().unwrap().str_field("error").unwrap_or("?")
+            e.str_field("error").unwrap_or("?")
         ));
     }
     Ok(())
@@ -1395,9 +1463,12 @@ fn cmd_bench_serve(rest: &[String]) -> CliResult<()> {
         ..ServeOpts::default()
     };
     let suite: Vec<&str> = workloads::TAGS.iter().map(|(_, name)| *name).collect();
-    let jobs_expected = clients * rounds * suite.len();
+    // mixed load: every client replays the run suite and adds one
+    // dataflow sweep per round (a different workload per client), so
+    // the server sees heavy grid jobs interleaved with short runs
+    let jobs_expected = clients * rounds * (suite.len() + 1);
     println!(
-        "bench-serve phase 1 (cold): {clients} clients x {rounds} rounds x {} workloads on {workers} workers",
+        "bench-serve phase 1 (cold): {clients} clients x {rounds} rounds x {} runs + 1 sweep on {workers} workers",
         suite.len()
     );
 
@@ -1407,44 +1478,79 @@ fn cmd_bench_serve(rest: &[String]) -> CliResult<()> {
     let t0 = Instant::now();
     let mut latencies_ms: Vec<f64> = Vec::with_capacity(jobs_expected);
     let mut dropped = 0u64;
+    let mut shed = 0u64;
     std::thread::scope(|s| {
         let suite = &suite;
         let handles: Vec<_> = (0..clients)
             .map(|ci| {
-                s.spawn(move || -> (Vec<f64>, u64) {
+                s.spawn(move || -> (Vec<f64>, u64, u64) {
                     let mut lat = Vec::new();
                     let mut bad = 0u64;
+                    let mut retries = 0u64;
                     let mut c = server::Client::connect(addr).expect("bench client connect");
                     for round in 0..rounds {
+                        let sweep_wl = suite[ci % suite.len()];
+                        let mut reqs: Vec<String> = Vec::with_capacity(suite.len() + 1);
                         for (wi, name) in suite.iter().enumerate() {
                             let id = (ci * 10_000 + round * 100 + wi) as u64;
-                            let req = Json::obj(vec![
-                                ("req", Json::str("run")),
-                                ("id", Json::u64(id)),
-                                ("workload", Json::str(*name)),
+                            reqs.push(
+                                Json::obj(vec![
+                                    ("req", Json::str("run")),
+                                    ("id", Json::u64(id)),
+                                    ("workload", Json::str(*name)),
+                                ])
+                                .to_string(),
+                            );
+                        }
+                        reqs.push(
+                            Json::obj(vec![
+                                ("req", Json::str("sweep")),
+                                ("id", Json::u64((ci * 10_000 + round * 100 + 99) as u64)),
+                                ("kind", Json::str("dataflow")),
+                                ("workload", Json::str(sweep_wl)),
                             ])
-                            .to_string();
+                            .to_string(),
+                        );
+                        for req in &reqs {
                             let t = Instant::now();
-                            match c.request(&req) {
-                                Ok(events)
-                                    if events.last().is_some_and(|e| {
-                                        e.str_field("event") == Some("done")
-                                    }) =>
-                                {
-                                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                            // the bounded queue sheds with a terminal
+                            // `busy` under overload — a closed-loop
+                            // client backs off and resubmits
+                            loop {
+                                match c.request(req) {
+                                    Ok(events)
+                                        if events.last().is_some_and(|e| {
+                                            e.str_field("event") == Some("busy")
+                                        }) =>
+                                    {
+                                        retries += 1;
+                                        std::thread::sleep(Duration::from_millis(5));
+                                    }
+                                    Ok(events)
+                                        if events.last().is_some_and(|e| {
+                                            e.str_field("event") == Some("done")
+                                        }) =>
+                                    {
+                                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                                        break;
+                                    }
+                                    _ => {
+                                        bad += 1;
+                                        break;
+                                    }
                                 }
-                                _ => bad += 1,
                             }
                         }
                     }
-                    (lat, bad)
+                    (lat, bad, retries)
                 })
             })
             .collect();
         for h in handles {
-            let (lat, bad) = h.join().expect("bench client thread");
+            let (lat, bad, retries) = h.join().expect("bench client thread");
             latencies_ms.extend(lat);
             dropped += bad;
+            shed += retries;
         }
     });
     let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -1474,7 +1580,7 @@ fn cmd_bench_serve(rest: &[String]) -> CliResult<()> {
     let p99 = percentile(&latencies_ms, 99.0);
     let throughput = latencies_ms.len() as f64 / (wall_ms / 1e3);
     println!(
-        "phase 1: {}/{jobs_expected} jobs ok ({dropped} dropped) in {wall_ms:.1} ms — {throughput:.1} jobs/s, p50 {p50:.2} ms, p99 {p99:.2} ms",
+        "phase 1: {}/{jobs_expected} jobs ok ({dropped} dropped, {shed} busy retries) in {wall_ms:.1} ms — {throughput:.1} jobs/s, p50 {p50:.2} ms, p99 {p99:.2} ms",
         latencies_ms.len()
     );
     println!(
@@ -1496,6 +1602,7 @@ fn cmd_bench_serve(rest: &[String]) -> CliResult<()> {
             ("workers", workers as f64),
             ("jobs", latencies_ms.len() as f64),
             ("dropped", dropped as f64),
+            ("busy_retries", shed as f64),
             ("wall_ms", wall_ms),
             ("throughput_jobs_per_s", throughput),
             ("p50_ms", p50),
@@ -1514,5 +1621,48 @@ fn cmd_bench_serve(rest: &[String]) -> CliResult<()> {
     if dropped > 0 {
         return fail(format!("{dropped} jobs dropped"));
     }
+    check_serve_baseline(&a, throughput, p99)
+}
+
+/// Gate BENCH_serve numbers against the checked-in baseline: fail on a
+/// >20% throughput drop or a >2x p99 regression; bless (or a missing
+/// baseline on the first run) records the current numbers as the floor.
+fn check_serve_baseline(a: &Args, throughput: f64, p99: f64) -> CliResult<()> {
+    let baseline_path =
+        PathBuf::from(a.value("--baseline", None).unwrap_or("BENCH_serve.baseline.json"));
+    if a.flag("--bless") || !baseline_path.exists() {
+        write_json(&baseline_path, &[("throughput_jobs_per_s", throughput), ("p99_ms", p99)])?;
+        println!(
+            "blessed {} (throughput {throughput:.1} jobs/s, p99 {p99:.2} ms)",
+            baseline_path.display()
+        );
+        return Ok(());
+    }
+    let text = std::fs::read_to_string(&baseline_path)?;
+    let j = Json::parse(&text)
+        .map_err(|e| format!("{}: {e}", baseline_path.display()))?;
+    let base_tp = j
+        .f64_field("throughput_jobs_per_s")
+        .ok_or_else(|| format!("{}: missing throughput_jobs_per_s", baseline_path.display()))?;
+    let base_p99 = j
+        .f64_field("p99_ms")
+        .ok_or_else(|| format!("{}: missing p99_ms", baseline_path.display()))?;
+    println!(
+        "baseline {}: throughput {base_tp:.1} jobs/s, p99 {base_p99:.2} ms",
+        baseline_path.display()
+    );
+    if throughput < 0.8 * base_tp {
+        return fail(format!(
+            "bench-serve regression: throughput {throughput:.1} jobs/s < 80% of baseline {base_tp:.1} \
+             (re-bless deliberately with --bless)"
+        ));
+    }
+    if base_p99 > 0.0 && p99 > 2.0 * base_p99 {
+        return fail(format!(
+            "bench-serve regression: p99 {p99:.2} ms > 2x baseline {base_p99:.2} ms \
+             (re-bless deliberately with --bless)"
+        ));
+    }
+    println!("baseline gate ok");
     Ok(())
 }

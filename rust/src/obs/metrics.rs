@@ -34,6 +34,11 @@ pub const LATENCY_BUCKETS: [f64; 8] =
 enum Metric {
     Counter { help: &'static str, value: u64 },
     Gauge { help: &'static str, value: f64 },
+    /// Wall-clock class counter: tallies scheduling artifacts — work
+    /// steals, stripe-lock contention, peer failovers — that legitimately
+    /// vary run to run. Rendered (as a plain Prometheus counter) only
+    /// with `include_wall`, so `render(false)` stays byte-stable.
+    WallCounter { help: &'static str, value: u64 },
     /// Wall-clock class: one cumulative count per [`LATENCY_BUCKETS`]
     /// bound plus the implicit `+Inf`.
     Histogram { help: &'static str, buckets: [u64; LATENCY_BUCKETS.len()], sum: f64, count: u64 },
@@ -42,7 +47,7 @@ enum Metric {
 impl Metric {
     fn type_name(&self) -> &'static str {
         match self {
-            Metric::Counter { .. } => "counter",
+            Metric::Counter { .. } | Metric::WallCounter { .. } => "counter",
             Metric::Gauge { .. } => "gauge",
             Metric::Histogram { .. } => "histogram",
         }
@@ -52,8 +57,14 @@ impl Metric {
         match self {
             Metric::Counter { help, .. }
             | Metric::Gauge { help, .. }
+            | Metric::WallCounter { help, .. }
             | Metric::Histogram { help, .. } => help,
         }
+    }
+
+    /// True for series excluded from the deterministic exposition.
+    fn is_wall(&self) -> bool {
+        matches!(self, Metric::WallCounter { .. } | Metric::Histogram { .. })
     }
 }
 
@@ -102,6 +113,24 @@ impl Registry {
         self.table().insert(name.to_string(), Metric::Gauge { help, value });
     }
 
+    /// Monotonically increase a wall-class counter (scheduling
+    /// artifacts; excluded from `render(false)`).
+    pub fn add_wall_counter(&self, name: &str, help: &'static str, delta: u64) {
+        let mut t = self.table();
+        match t.get_mut(name) {
+            Some(Metric::WallCounter { value, .. }) => *value += delta,
+            _ => {
+                t.insert(name.to_string(), Metric::WallCounter { help, value: delta });
+            }
+        }
+    }
+
+    /// Set a wall-class counter to an absolute value (mirror of a
+    /// source atomic, e.g. the memo cache's stripe-contention tally).
+    pub fn set_wall_counter(&self, name: &str, help: &'static str, value: u64) {
+        self.table().insert(name.to_string(), Metric::WallCounter { help, value });
+    }
+
     /// Record one wall-clock observation into a latency histogram.
     pub fn observe_seconds(&self, name: &str, help: &'static str, secs: f64) {
         let mut t = self.table();
@@ -132,11 +161,23 @@ impl Registry {
     /// wall-clock histograms. Output ends with a newline; families are
     /// in lexicographic key order with one `# HELP`/`# TYPE` pair each.
     pub fn render(&self, include_wall: bool) -> String {
+        self.render_filtered(|m| include_wall || !m.is_wall())
+    }
+
+    /// The complement of `render(false)`: wall-class series only. The
+    /// serve `metrics` event appends this section after the
+    /// deterministic snapshot, so family names never repeat within one
+    /// exposition.
+    pub fn render_wall_only(&self) -> String {
+        self.render_filtered(Metric::is_wall)
+    }
+
+    fn render_filtered(&self, keep: impl Fn(&Metric) -> bool) -> String {
         let t = self.table();
         let mut out = String::new();
         let mut last_family = String::new();
         for (key, m) in t.iter() {
-            if matches!(m, Metric::Histogram { .. }) && !include_wall {
+            if !keep(m) {
                 continue;
             }
             let (family, labels) = split_labels(key);
@@ -146,7 +187,9 @@ impl Registry {
                 last_family = family.to_string();
             }
             match m {
-                Metric::Counter { value, .. } => out.push_str(&format!("{key} {value}\n")),
+                Metric::Counter { value, .. } | Metric::WallCounter { value, .. } => {
+                    out.push_str(&format!("{key} {value}\n"))
+                }
                 Metric::Gauge { value, .. } => out.push_str(&format!("{key} {value}\n")),
                 Metric::Histogram { buckets, sum, count, .. } => {
                     for (i, bound) in LATENCY_BUCKETS.iter().enumerate() {
@@ -313,6 +356,46 @@ pub fn count_fabric_layer() {
     );
 }
 
+/// Count work-stealing pool steals (wall class: which worker steals
+/// what is a scheduling artifact). Flushed once per `parallel_map`
+/// invocation rather than per steal to keep the registry off the hot
+/// path.
+pub fn count_steals(n: u64) {
+    global().add_wall_counter(
+        "scale_sim_steals_total",
+        "Tasks taken from another worker's deque by the work-stealing pool",
+        n,
+    );
+}
+
+/// Mirror the memo cache's cumulative stripe-lock contention tally
+/// (wall class — it depends on thread interleaving, never on inputs).
+pub fn record_stripe_contention(total: u64) {
+    global().set_wall_counter(
+        "scale_sim_cache_stripe_contention_total",
+        "Memo-cache stripe locks found held by another thread",
+        total,
+    );
+}
+
+/// Count one layer report fetched from a federated serve peer.
+pub fn count_peer_fetch() {
+    global().add_wall_counter(
+        "scale_sim_peer_fetches_total",
+        "Layer reports served by a federated peer instance",
+        1,
+    );
+}
+
+/// Count one failover to local compute after a peer fetch failed.
+pub fn count_peer_failover() {
+    global().add_wall_counter(
+        "scale_sim_peer_failovers_total",
+        "Peer fetches that failed and fell back to local compute",
+        1,
+    );
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -386,6 +469,30 @@ mod tests {
         ] {
             assert!(text.contains(needle), "missing {needle} in {text}");
         }
+    }
+
+    #[test]
+    fn wall_counters_are_excluded_from_deterministic_render() {
+        let reg = Registry::new();
+        reg.set_counter("det_total", "deterministic", 4);
+        reg.add_wall_counter("steals_total", "wall", 2);
+        reg.add_wall_counter("steals_total", "wall", 3);
+        let det = reg.render(false);
+        assert!(!det.contains("steals_total"), "{det}");
+        assert!(det.contains("det_total 4"), "{det}");
+        let wall = reg.render(true);
+        assert!(wall.contains("steals_total 5"), "{wall}");
+        // still advertised as a plain Prometheus counter
+        assert!(wall.contains("# TYPE steals_total counter"), "{wall}");
+    }
+
+    #[test]
+    fn wall_counter_set_mirrors_an_absolute_total() {
+        let reg = Registry::new();
+        reg.set_wall_counter("contention_total", "wall mirror", 7);
+        reg.set_wall_counter("contention_total", "wall mirror", 9);
+        assert!(reg.render(true).contains("contention_total 9"));
+        assert_eq!(reg.render(false), "");
     }
 
     #[test]

@@ -10,20 +10,34 @@
 //!            conn thread per client            worker pool (N threads)
 //! client A ──> parse JSON line ──┐   bounded    ┌─> Engine::run_topology_with
 //! client B ──> parse JSON line ──┼─> JobQueue ──┼─> Engine::sweep().run()
-//! client C ──> parse JSON line ──┘  (blocking   └─> ...
-//!                                    push =                │
-//!                                    backpressure)  one shared Arc<Engine>
+//! client C ──> parse JSON line ──┘  (full queue └─> ...
+//!                                    sheds with            │
+//!                                    a `busy` event) one shared Arc<Engine>
 //!                                                   => one process-wide memo
 //!                                                      cache + in-flight dedup
 //! ```
 //!
 //! * **One engine, one cache**: every worker simulates through the same
 //!   [`Engine`], so repeated layer shapes from *different* clients hit
-//!   the memo table ([`crate::engine::cache`]) — and two clients racing
-//!   on the same cold key compute it once (in-flight deduplication).
-//! * **Bounded queue, zero drops**: [`queue::JobQueue`] blocks producers
-//!   when full (TCP flow control carries the backpressure to clients)
-//!   and drains every admitted job on shutdown.
+//!   the lock-striped memo table ([`crate::engine::cache`]) — and two
+//!   clients racing on the same cold key compute it once (per-stripe
+//!   in-flight deduplication).
+//! * **Bounded queue, shed don't wedge**: admission uses
+//!   [`queue::JobQueue::try_push`]; a full queue answers a structured
+//!   `busy` event instead of blocking the accepting thread forever, so
+//!   the connection keeps reading and clients retry with backoff.
+//!   Every *admitted* job still runs — zero drops after admission,
+//!   including through shutdown draining.
+//! * **Batch envelopes**: a `{"req":"batch"}` request carries several
+//!   run/sweep jobs; each sub-job is admitted as an independent queue
+//!   entry, so the pool executes them concurrently and one slow job
+//!   never delays the others' events. The last finisher emits
+//!   `batch_done` (see [`proto`]).
+//! * **Federation**: with `--peers`, memo keys are routed across a
+//!   fleet of instances by consistent hashing ([`peers`]) — each key
+//!   has one owner, so the fleet shares one logical cache. A down peer
+//!   fails over to local compute; federation routes *keys*, never
+//!   cached values (`docs/INVARIANTS.md` §11).
 //! * **Persistent warmth**: with a `--state-dir`, [`store::ResultStore`]
 //!   pre-warms the cache on startup and snapshots it on shutdown, so a
 //!   restarted server answers from disk-warmed entries (`warm_hits` in
@@ -33,6 +47,7 @@
 //! [`ServerHandle`]), [`Client`] (blocking JSON-lines client used by
 //! `scale-sim client`, `scale-sim bench-serve`, and the loopback tests).
 
+pub mod peers;
 pub mod proto;
 pub mod queue;
 pub mod store;
@@ -73,6 +88,17 @@ pub struct ServeOpts {
     pub cfg: ArchConfig,
     /// Fidelity backend every job runs under.
     pub backend: BackendKind,
+    /// Peer instances (`host:port`) forming a federated fleet: memo
+    /// keys are routed across members by consistent hashing (see
+    /// [`peers`]). Every member must be started with the same fleet —
+    /// its own advertised address spelled exactly as the others name it
+    /// in their peer lists — and the same base config/backend. Empty =
+    /// standalone.
+    pub peers: Vec<String>,
+    /// Memo-cache stripe count override; `None` uses the engine
+    /// default. Stripe count never changes results (`docs/INVARIANTS.md`
+    /// §11), only contention.
+    pub cache_stripes: Option<usize>,
 }
 
 impl Default for ServeOpts {
@@ -85,16 +111,48 @@ impl Default for ServeOpts {
             state_dir: None,
             cfg: ArchConfig::default(),
             backend: BackendKind::Analytical,
+            peers: Vec::new(),
+            cache_stripes: None,
         }
     }
 }
 
 /// One admitted job: the parsed work plus the connection to stream
-/// responses to.
+/// responses to. Batch sub-jobs additionally carry their envelope's
+/// countdown tracker.
 struct Job {
     id: u64,
     kind: JobKind,
     writer: ConnWriter,
+    batch: Option<Arc<BatchTracker>>,
+}
+
+/// Countdown for a batch envelope: whoever performs the final decrement
+/// — the worker finishing the last admitted sub-job, or the admitting
+/// connection thread when everything was shed — emits `batch_done`.
+///
+/// `remaining` starts at sub-job count + 1: the extra claim is held by
+/// the admitting thread until the `jobs`/`shed` tallies are final, so
+/// an early-finishing worker can never emit `batch_done` with counts
+/// still being accumulated.
+struct BatchTracker {
+    id: u64,
+    jobs: AtomicUsize,
+    shed: AtomicUsize,
+    remaining: AtomicUsize,
+    writer: ConnWriter,
+}
+
+impl BatchTracker {
+    fn finish_one(&self) {
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            self.writer.send_line(&proto::batch_done_line(
+                self.id,
+                self.jobs.load(Ordering::Acquire),
+                self.shed.load(Ordering::Acquire),
+            ));
+        }
+    }
 }
 
 enum JobKind {
@@ -216,13 +274,26 @@ impl Drop for ServerHandle {
 /// Start the service: bind, warm-start from the result store (if any),
 /// spawn the worker pool and accept loop, return immediately.
 pub fn start(opts: ServeOpts) -> Result<ServerHandle> {
+    // bind before building the engine: a federated ring needs the
+    // resolved address as this instance's identity (ephemeral ports)
+    let listener = TcpListener::bind(opts.addr.as_str())?;
+    let addr = listener.local_addr()?;
+
     // workers parallelize across jobs; each job simulates single-threaded
-    let engine = Engine::builder()
+    let mut builder = Engine::builder()
         .config(opts.cfg)
         .backend(opts.backend)
-        .threads(1)
-        .build()?
-        .shared();
+        .threads(1);
+    if let Some(n) = opts.cache_stripes {
+        builder = builder.cache_stripes(n);
+    }
+    if !opts.peers.is_empty() {
+        let self_addr =
+            if opts.addr.ends_with(":0") { addr.to_string() } else { opts.addr.clone() };
+        let ring = peers::PeerRing::new(&self_addr, &opts.peers)?;
+        builder = builder.layer_router(Arc::new(peers::PeerRouter::new(ring)));
+    }
+    let engine = builder.build()?.shared();
 
     let store = match &opts.state_dir {
         Some(dir) => {
@@ -232,9 +303,6 @@ pub fn start(opts: ServeOpts) -> Result<ServerHandle> {
         }
         None => None,
     };
-
-    let listener = TcpListener::bind(opts.addr.as_str())?;
-    let addr = listener.local_addr()?;
     let shared = Arc::new(Shared {
         engine,
         queue: JobQueue::bounded(opts.queue_cap),
@@ -348,9 +416,15 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
                 writer.send_line(&shared.stats().to_json().to_string());
             }
             // metrics is the same snapshot in Prometheus text clothing,
-            // likewise answered inline from the connection thread
+            // likewise answered inline from the connection thread. The
+            // deterministic section comes first; wall-class series
+            // (stripe contention, steals, peer fetch/failover tallies)
+            // are appended after, so two idle scrapes still agree on
+            // everything above the wall section.
             Ok(Request::Metrics) => {
-                let text = crate::obs::metrics::server_exposition(&shared.stats());
+                crate::obs::metrics::record_stripe_contention(shared.engine.cache_contention());
+                let mut text = crate::obs::metrics::server_exposition(&shared.stats());
+                text.push_str(&crate::obs::metrics::global().render_wall_only());
                 writer.send_line(&proto::metrics_line(&text));
             }
             Ok(Request::Shutdown) => {
@@ -397,22 +471,102 @@ fn handle_conn(shared: &Shared, stream: TcpStream) {
                 };
                 submit(shared, &writer, id, job);
             }
+            Ok(Request::Batch { id, jobs }) => submit_batch(shared, &writer, id, jobs),
         }
     }
 }
 
-/// Queue a validated job (blocking on a full queue = backpressure), or
-/// report why it cannot run.
+/// Queue a validated job, or report why it cannot run: a full queue
+/// sheds with a `busy` event (transient — retry), a closed queue
+/// answers a shutdown error (terminal).
 fn submit(shared: &Shared, writer: &ConnWriter, id: u64, kind: Result<JobKind>) {
     match kind {
         Err(e) => writer.send_line(&proto::error_line(id, &e.to_string())),
         Ok(kind) => {
-            let job = Job { id, kind, writer: writer.clone() };
-            if !shared.queue.push(job) {
-                writer.send_line(&proto::error_line(id, "server is shutting down"));
+            let job = Job { id, kind, writer: writer.clone(), batch: None };
+            match shared.queue.try_push(job) {
+                queue::PushOutcome::Admitted => {}
+                queue::PushOutcome::Busy => writer.send_line(&proto::busy_line(id)),
+                queue::PushOutcome::Closed => {
+                    writer.send_line(&proto::error_line(id, "server is shutting down"));
+                }
             }
         }
     }
+}
+
+/// Admit a batch envelope: every sub-job becomes an independent queue
+/// entry (the pool executes them concurrently — one slow job never
+/// delays the others' events), shed sub-jobs answer per-id `busy`
+/// events, and the envelope's `batch_done` follows the last admitted
+/// sub-job's terminal event.
+fn submit_batch(shared: &Shared, writer: &ConnWriter, id: u64, jobs: Vec<Request>) {
+    // build (= validate) every sub-job before admitting any: an
+    // envelope with an invalid member is rejected wholly, mirroring the
+    // all-or-nothing parse-time checks
+    let mut built: Vec<(u64, JobKind)> = Vec::with_capacity(jobs.len());
+    for (n, sub) in jobs.into_iter().enumerate() {
+        let job = match sub {
+            Request::Run { id: sid, topo, overrides, multi } => {
+                let cfg = overrides.apply(shared.engine.cfg());
+                cfg.validate().map(|()| (sid, JobKind::Run { topo, cfg, multi }))
+            }
+            Request::Sweep { id: sid, kind, topos, overrides, multi } => {
+                let cfg = overrides.apply(shared.engine.cfg());
+                cfg.validate().map(|()| (sid, JobKind::Sweep { kind, topos, cfg, multi }))
+            }
+            // parse_request admits only run/sweep into an envelope
+            _ => {
+                writer.send_line(&proto::error_line(
+                    id,
+                    &format!("batch job {n}: only run/sweep jobs can ride in a batch"),
+                ));
+                return;
+            }
+        };
+        match job {
+            Ok(v) => built.push(v),
+            Err(e) => {
+                writer.send_line(&proto::error_line(id, &format!("batch job {n}: {e}")));
+                return;
+            }
+        }
+    }
+
+    let tracker = Arc::new(BatchTracker {
+        id,
+        jobs: AtomicUsize::new(0),
+        shed: AtomicUsize::new(0),
+        // +1: the admission claim, released below once tallies are final
+        remaining: AtomicUsize::new(built.len() + 1),
+        writer: writer.clone(),
+    });
+    let (mut admitted, mut shed) = (0usize, 0usize);
+    let mut closed = false;
+    for (sid, kind) in built {
+        if closed {
+            writer.send_line(&proto::error_line(sid, "server is shutting down"));
+            tracker.finish_one();
+            continue;
+        }
+        let job = Job { id: sid, kind, writer: writer.clone(), batch: Some(Arc::clone(&tracker)) };
+        match shared.queue.try_push(job) {
+            queue::PushOutcome::Admitted => admitted += 1,
+            queue::PushOutcome::Busy => {
+                shed += 1;
+                writer.send_line(&proto::busy_line(sid));
+                tracker.finish_one();
+            }
+            queue::PushOutcome::Closed => {
+                closed = true;
+                writer.send_line(&proto::error_line(sid, "server is shutting down"));
+                tracker.finish_one();
+            }
+        }
+    }
+    tracker.jobs.store(admitted, Ordering::Release);
+    tracker.shed.store(shed, Ordering::Release);
+    tracker.finish_one(); // release the admission claim
 }
 
 fn worker_loop(shared: &Shared) {
@@ -435,6 +589,11 @@ fn worker_loop(shared: &Shared) {
             Err(_) => {
                 job.writer.send_line(&proto::error_line(job.id, "internal error: job panicked"));
             }
+        }
+        // after the sub-job's own terminal event, so `batch_done` is
+        // always the envelope's last line on the wire
+        if let Some(tracker) = &job.batch {
+            tracker.finish_one();
         }
     }
 }
@@ -623,6 +782,30 @@ impl Client {
         }
     }
 
+    /// Send a batch envelope and collect every interleaved event until
+    /// the *envelope's* terminal: `batch_done`, or an `error`/`busy`
+    /// carrying the envelope id. Sub-job terminal events (`done`,
+    /// per-sub-id `busy`/`error`) are collected, not terminal — demux
+    /// them by their `id` field.
+    pub fn request_batch(&mut self, line: &str) -> std::io::Result<Vec<Json>> {
+        let envelope_id =
+            Json::parse(line).ok().and_then(|j| j.u64_field("id")).unwrap_or(0);
+        self.send(line)?;
+        let mut out = Vec::new();
+        loop {
+            let j = self.recv()?;
+            let terminal = match j.str_field("event") {
+                Some("batch_done") | Some("shutting_down") => true,
+                Some("error") | Some("busy") => j.u64_field("id") == Some(envelope_id),
+                _ => false,
+            };
+            out.push(j);
+            if terminal {
+                return Ok(out);
+            }
+        }
+    }
+
     /// Convenience: fetch and parse the server statistics.
     pub fn stats(&mut self) -> std::io::Result<ServerStats> {
         let events = self.request(r#"{"req":"stats"}"#)?;
@@ -765,6 +948,39 @@ mod tests {
         // partition without nodes is rejected at parse time
         let bad = c
             .request(r#"{"req":"run","workload":"ncf","partition":"pixels"}"#)
+            .unwrap();
+        assert_eq!(bad[0].str_field("event"), Some("error"));
+        handle.shutdown();
+    }
+
+    #[test]
+    fn batch_envelope_interleaves_jobs_and_ends_with_batch_done() {
+        let handle = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+        let mut c = Client::connect(handle.addr()).unwrap();
+        let req = format!(
+            r#"{{"req":"batch","id":99,"jobs":[{},{}]}}"#,
+            inline_run_request(1),
+            inline_run_request(2)
+        );
+        let events = c.request_batch(&req).unwrap();
+        let last = events.last().unwrap();
+        assert_eq!(last.str_field("event"), Some("batch_done"));
+        assert_eq!(last.u64_field("id"), Some(99));
+        assert_eq!(last.u64_field("jobs"), Some(2));
+        assert_eq!(last.u64_field("shed"), Some(0));
+        // each sub-job produced its own result + done, demuxable by id
+        for sid in [1u64, 2] {
+            for ev in ["result", "done"] {
+                assert!(
+                    events.iter().any(|j| j.u64_field("id") == Some(sid)
+                        && j.str_field("event") == Some(ev)),
+                    "missing {ev} for sub-job {sid}"
+                );
+            }
+        }
+        // an envelope with a bad sub-job is rejected wholly
+        let bad = c
+            .request(r#"{"req":"batch","id":5,"jobs":[{"req":"run","id":1,"workload":"nope"}]}"#)
             .unwrap();
         assert_eq!(bad[0].str_field("event"), Some("error"));
         handle.shutdown();

@@ -1,0 +1,277 @@
+//! Peer federation: one logical memo cache across a fleet of serve
+//! instances.
+//!
+//! `scale-sim serve --peers a:p,b:p` places every fleet member (self
+//! included) on a consistent-hash ring of [`VNODES`] virtual nodes per
+//! member. Each memo key hash has exactly one owner; a non-self owner
+//! is asked for the layer report over the ordinary wire protocol (a
+//! one-layer `run` request pinning the full override set), so the
+//! owner's memo cache — not ours — fills and serves that key. The
+//! fleet therefore shares one logical cache without any replication
+//! protocol: **federation routes keys, never values**
+//! (`docs/INVARIANTS.md` §11) — a routed report is returned to the
+//! caller but never inserted into the local table, and a failed fetch
+//! (peer down, timeout, refusal, `busy`) silently fails over to local
+//! compute, changing only *where* the simulation runs, never its
+//! result.
+//!
+//! Ring agreement is by construction: every member sorts the same
+//! member-address strings, so owners match fleet-wide as long as each
+//! instance is started with the same addresses (its own spelled exactly
+//! as peers name it) and the same base config/backend. Peer fetch and
+//! failover tallies are wall-class metrics
+//! ([`crate::obs::metrics::count_peer_fetch`]).
+
+use std::io::BufReader;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::arch::LayerShape;
+use crate::config::ArchConfig;
+use crate::engine::LayerRouter;
+use crate::sim::LayerReport;
+use crate::util::json::Json;
+use crate::{Error, Result};
+
+use super::proto;
+
+/// Virtual nodes per member: enough that two-member fleets split keys
+/// close to evenly, few enough that ring construction stays trivial.
+const VNODES: usize = 64;
+
+/// Establishing a connection to a peer; short, so a down peer costs one
+/// quick failure per routed key rather than a stall.
+const CONNECT_TIMEOUT: Duration = Duration::from_millis(1000);
+
+/// Per-fetch socket read/write budget; a peer that exceeds it is
+/// treated as down (failover to local compute).
+const IO_TIMEOUT: Duration = Duration::from_secs(15);
+
+/// FNV-1a over raw bytes — the same deterministic hash family the memo
+/// cache uses for stripe selection ([`crate::engine::cache`]); std's
+/// `DefaultHasher` is per-process seeded and would break fleet-wide
+/// ring agreement.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// The fleet's consistent-hash ring (module docs). Construction is a
+/// pure function of the sorted member-address set, so every member
+/// that was given the same fleet computes identical ownership.
+pub struct PeerRing {
+    /// Sorted, deduplicated member addresses.
+    members: Vec<String>,
+    /// Index into `members` of this instance.
+    self_idx: usize,
+    /// `(vnode hash, member index)` sorted by hash then index.
+    ring: Vec<(u64, usize)>,
+}
+
+impl PeerRing {
+    /// Build the ring from this instance's advertised address plus its
+    /// peer list. Rejects empty addresses; duplicates collapse.
+    pub fn new(self_addr: &str, peers: &[String]) -> Result<PeerRing> {
+        let self_addr = self_addr.trim();
+        if self_addr.is_empty() {
+            return Err(Error::Config("federation: empty self address".into()));
+        }
+        let mut members: Vec<String> = vec![self_addr.to_string()];
+        for p in peers {
+            let p = p.trim();
+            if p.is_empty() {
+                return Err(Error::Config("federation: empty peer address".into()));
+            }
+            members.push(p.to_string());
+        }
+        members.sort();
+        members.dedup();
+        let self_idx = members
+            .iter()
+            .position(|m| m == self_addr)
+            .unwrap_or_default(); // unreachable: self_addr was inserted
+        let mut ring = Vec::with_capacity(members.len() * VNODES);
+        for (i, m) in members.iter().enumerate() {
+            for v in 0..VNODES {
+                let mut bytes = m.as_bytes().to_vec();
+                bytes.push(0);
+                bytes.extend_from_slice(&(v as u64).to_le_bytes());
+                ring.push((fnv1a(&bytes), i));
+            }
+        }
+        ring.sort();
+        Ok(PeerRing { members, self_idx, ring })
+    }
+
+    pub fn members(&self) -> &[String] {
+        &self.members
+    }
+
+    /// The member index owning `key_hash`: the first vnode at or after
+    /// the hash, wrapping to the ring's start.
+    pub fn owner(&self, key_hash: u64) -> usize {
+        let i = self.ring.partition_point(|&(h, _)| h < key_hash);
+        let (_, member) = self.ring[i % self.ring.len()];
+        member
+    }
+
+    pub fn is_self(&self, member: usize) -> bool {
+        member == self.self_idx
+    }
+
+    pub fn member(&self, i: usize) -> &str {
+        &self.members[i]
+    }
+}
+
+/// [`LayerRouter`] over a [`PeerRing`]: self-owned keys take the local
+/// memoized path (`None`); peer-owned keys are fetched from their
+/// owner, failing over to local compute on any error.
+pub struct PeerRouter {
+    ring: PeerRing,
+}
+
+impl PeerRouter {
+    pub fn new(ring: PeerRing) -> PeerRouter {
+        PeerRouter { ring }
+    }
+}
+
+impl LayerRouter for PeerRouter {
+    fn route(&self, key_hash: u64, cfg: &ArchConfig, layer: &LayerShape) -> Option<LayerReport> {
+        let owner = self.ring.owner(key_hash);
+        if self.ring.is_self(owner) {
+            return None;
+        }
+        match fetch_layer(self.ring.member(owner), cfg, layer) {
+            Ok(report) => {
+                crate::obs::metrics::count_peer_fetch();
+                Some(report)
+            }
+            Err(_) => {
+                crate::obs::metrics::count_peer_failover();
+                None
+            }
+        }
+    }
+}
+
+/// One peer fetch: a single-layer `run` request pinning every
+/// cache-key-relevant override, answered by the owner's memoized
+/// engine. Any failure — connect, timeout, protocol, `busy`, `error` —
+/// is returned for the caller to fail over on.
+fn fetch_layer(addr: &str, cfg: &ArchConfig, layer: &LayerShape) -> std::result::Result<LayerReport, String> {
+    let sa = addr
+        .to_socket_addrs()
+        .map_err(|e| e.to_string())?
+        .next()
+        .ok_or_else(|| format!("unresolvable peer address {addr:?}"))?;
+    let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT).map_err(|e| e.to_string())?;
+    stream.set_read_timeout(Some(IO_TIMEOUT)).map_err(|e| e.to_string())?;
+    stream.set_write_timeout(Some(IO_TIMEOUT)).map_err(|e| e.to_string())?;
+    let writer = stream.try_clone().map_err(|e| e.to_string())?;
+    let mut client = super::Client { reader: BufReader::new(stream), writer };
+
+    let req = Json::obj(vec![
+        ("req", Json::str("run")),
+        ("id", Json::u64(0)),
+        ("workload", Json::str("peer-fetch")),
+        ("layers", Json::Arr(vec![proto::layer_shape_to_json(layer)])),
+        ("dataflow", Json::str(cfg.dataflow.name())),
+        ("array", Json::str(format!("{}x{}", cfg.array_h, cfg.array_w))),
+        (
+            "sram_kb",
+            Json::Arr(vec![
+                Json::u64(cfg.ifmap_sram_kb),
+                Json::u64(cfg.filter_sram_kb),
+                Json::u64(cfg.ofmap_sram_kb),
+            ]),
+        ),
+        ("word_bytes", Json::u64(cfg.word_bytes)),
+    ])
+    .to_string();
+
+    let events = client.request(&req).map_err(|e| e.to_string())?;
+    let last = events.last().ok_or_else(|| "peer sent no events".to_string())?;
+    if last.str_field("event") != Some("done") {
+        return Err(format!("peer answered {:?}", last.str_field("event")));
+    }
+    let result = events
+        .iter()
+        .find(|j| j.str_field("event") == Some("result"))
+        .ok_or_else(|| "peer sent no result event".to_string())?;
+    let report = proto::workload_report_from_json(
+        result.get("report").ok_or_else(|| "result event missing report".to_string())?,
+    )?;
+    report.layers.into_iter().next().ok_or_else(|| "peer report has no layers".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_agreement_is_independent_of_listing_order() {
+        // the same fleet, seen from two different members with peers
+        // listed in different orders, must agree on every owner
+        let a = PeerRing::new("10.0.0.1:7433", &["10.0.0.2:7433".into(), "10.0.0.3:7433".into()])
+            .unwrap();
+        let b = PeerRing::new("10.0.0.3:7433", &["10.0.0.1:7433".into(), "10.0.0.2:7433".into()])
+            .unwrap();
+        assert_eq!(a.members(), b.members());
+        for h in (0..10_000u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) {
+            assert_eq!(a.member(a.owner(h)), b.member(b.owner(h)), "owner disagrees at {h:#x}");
+        }
+    }
+
+    #[test]
+    fn single_member_ring_owns_every_key() {
+        let r = PeerRing::new("127.0.0.1:7433", &[]).unwrap();
+        for h in [0u64, 1, u64::MAX, 0xdead_beef] {
+            assert!(r.is_self(r.owner(h)));
+        }
+    }
+
+    #[test]
+    fn two_member_ring_splits_keys_between_both() {
+        let r = PeerRing::new("127.0.0.1:7001", &["127.0.0.1:7002".into()]).unwrap();
+        let mut counts = [0usize; 2];
+        for h in (0..4096u64).map(|i| i.wrapping_mul(0x9e37_79b9_7f4a_7c15)) {
+            counts[r.owner(h)] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0, "both members must own keys: {counts:?}");
+        // vnodes keep the split from degenerating
+        assert!(counts[0] > 512 && counts[1] > 512, "split too skewed: {counts:?}");
+    }
+
+    #[test]
+    fn duplicate_and_self_listing_peers_collapse() {
+        let r = PeerRing::new(
+            "127.0.0.1:7001",
+            &["127.0.0.1:7002".into(), "127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+        )
+        .unwrap();
+        assert_eq!(r.members().len(), 2);
+        assert!(PeerRing::new("", &[]).is_err());
+        assert!(PeerRing::new("127.0.0.1:7001", &["  ".into()]).is_err());
+    }
+
+    #[test]
+    fn fnv_vnode_placement_is_stable() {
+        // pin a few hashes so an accidental constant change cannot
+        // silently re-shard a deployed fleet
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        let r1 = PeerRing::new("a:1", &["b:2".into()]).unwrap();
+        let r2 = PeerRing::new("a:1", &["b:2".into()]).unwrap();
+        for h in [7u64, 1 << 40, u64::MAX / 3] {
+            assert_eq!(r1.owner(h), r2.owner(h));
+        }
+    }
+}

@@ -11,6 +11,7 @@
 //! | `{"req":"run","id":3,"workload":"mine","ops":[{...op...},..]}` | simulate an inline **typed workload** (operator IR, lowered server-side; op shape below) |
 //! | `{"req":"sweep","id":4,"kind":"dataflow","workload":"ncf"}` | run a paper sweep (`dataflow`\|`memory`\|`shape`); omit `workload` for the full MLPerf suite; `layers`/`ops` are accepted here too |
 //! | `{"req":"dse","id":5,"campaign":{...},"indices":[0,4,8]}` | evaluate one shard of a dse campaign ([`crate::dse::Campaign`] JSON spec; built-in workload names only). `indices` selects the campaign points to evaluate (omitted = all). Shards from concurrent clients share the server's ONE memo cache. The campaign's `energy` preset must match the server engine's model, and non-axis config fields (ofmap SRAM, word size) come from the server's base config — run the server on defaults for bit-identity with local execution |
+//! | `{"req":"batch","id":6,"jobs":[{...run...},{...sweep...},..]}` | submit several run/sweep jobs in one envelope. Each entry is a complete run/sweep request object with its **own distinct `id`**; the jobs execute concurrently on the worker pool (batch sub-jobs are split across workers via the work-stealing deques), so their event streams interleave — demultiplex by `id`. The envelope's own `id` tags the final `batch_done` |
 //! | `{"req":"stats"}` | server/queue/cache statistics (answered inline, never queued) |
 //! | `{"req":"metrics"}` | Prometheus text exposition of the same statistics (answered inline; see [`crate::obs::metrics`]) |
 //! | `{"req":"shutdown"}` | drain the queue, flush the result store, stop |
@@ -68,9 +69,17 @@
 //! | `dse_point` | one campaign point: `"point"` coordinates + `"metrics"` objectives ([`crate::dse::CompletedPoint`] shape) — `dse` jobs |
 //! | `done` | **terminal**; `"ms"` wall-clock, plus `"points"` for sweeps |
 //! | `error` | **terminal**; `"error"` message (bad request, queue closed, …) |
+//! | `busy` | **terminal**; the bounded queue was full at admission, so the job was **shed** — nothing was queued, nothing will arrive later. Back off and retry. (The blocking alternative would wedge the connection thread behind a saturated pool; shedding keeps admission responsive and lets the client decide.) |
+//! | `batch_done` | **terminal** for a `batch` envelope; carries the envelope `id`, `"jobs"` (sub-jobs admitted) and `"shed"` (sub-jobs answered `busy`). Emitted after every admitted sub-job has ended; the sub-jobs' own `result`/`point`/`done`/`error`/`busy` lines stream before it, interleaved |
 //! | `stats` | **terminal**; see [`ServerStats`] field list |
 //! | `metrics` | **terminal**; `"text"`: Prometheus text exposition (cache/queue/worker series) |
 //! | `shutting_down` | **terminal**; acknowledges a shutdown request |
+//!
+//! `done`/`error`/`busy` are terminal **per job id**: a batch envelope's
+//! sub-jobs each end with one of them, and the envelope itself ends with
+//! `batch_done` — clients reading a batch response must collect until
+//! `batch_done` (or an envelope-`id` `error`), not until the first
+//! sub-job terminal (see [`crate::server::Client::request_batch`]).
 //!
 //! The workload report is
 //! `{"workload":"...","layers":[{"layer":{...},"timing":{...},
@@ -138,6 +147,11 @@ pub enum Request {
     /// One shard of a dse campaign: the indices of the campaign points
     /// this job evaluates (see [`crate::dse::Campaign::point`]).
     Dse { id: u64, campaign: crate::dse::Campaign, indices: Vec<usize> },
+    /// A batch envelope: several run/sweep jobs admitted together and
+    /// executed concurrently (module docs). `jobs` holds only
+    /// [`Request::Run`] / [`Request::Sweep`] variants — enforced at
+    /// parse time — each with a distinct non-envelope id.
+    Batch { id: u64, jobs: Vec<Request> },
     Stats,
     /// Prometheus text exposition of the server statistics (answered
     /// inline, never queued — same data as `Stats`, different surface).
@@ -354,11 +368,48 @@ pub fn parse_request(line: &str) -> Result<Request, String> {
             }
             Ok(Request::Dse { id, campaign, indices })
         }
+        Some("batch") => {
+            let jobs_json = j.get("jobs").ok_or("batch request needs a \"jobs\" array")?;
+            let entries = jobs_json.as_arr().ok_or("\"jobs\" must be an array")?;
+            if entries.is_empty() {
+                return Err("\"jobs\" must not be empty".into());
+            }
+            let mut jobs = Vec::with_capacity(entries.len());
+            let mut seen_ids = Vec::with_capacity(entries.len());
+            for (n, entry) in entries.iter().enumerate() {
+                // each entry is a complete request object; reuse the
+                // top-level parser so sub-jobs get full validation
+                let sub = parse_request(&entry.to_string())
+                    .map_err(|e| format!("batch job {n}: {e}"))?;
+                let sub_id = match &sub {
+                    Request::Run { id: sid, .. } | Request::Sweep { id: sid, .. } => *sid,
+                    _ => {
+                        return Err(format!(
+                            "batch job {n}: only run/sweep jobs can ride in a batch"
+                        ))
+                    }
+                };
+                if sub_id == id {
+                    return Err(format!(
+                        "batch job {n}: sub-job id {sub_id} collides with the envelope id"
+                    ));
+                }
+                if seen_ids.contains(&sub_id) {
+                    return Err(format!(
+                        "batch job {n}: duplicate sub-job id {sub_id} (event streams \
+                         interleave; ids must be distinct to demultiplex)"
+                    ));
+                }
+                seen_ids.push(sub_id);
+                jobs.push(sub);
+            }
+            Ok(Request::Batch { id, jobs })
+        }
         Some("stats") => Ok(Request::Stats),
         Some("metrics") => Ok(Request::Metrics),
         Some("shutdown") => Ok(Request::Shutdown),
         Some(other) => {
-            Err(format!("unknown req {other:?} (run|sweep|dse|stats|metrics|shutdown)"))
+            Err(format!("unknown req {other:?} (run|sweep|dse|batch|stats|metrics|shutdown)"))
         }
         None => Err("request needs a \"req\" field".into()),
     }
@@ -562,6 +613,26 @@ pub fn shutting_down_line() -> String {
     Json::obj(vec![("event", Json::str("shutting_down"))]).to_string()
 }
 
+/// The `busy` event: admission shed the job because the bounded queue
+/// was full. Terminal for the shed id; nothing was queued, the client
+/// should back off and retry.
+pub fn busy_line(id: u64) -> String {
+    Json::obj(vec![("id", Json::u64(id)), ("event", Json::str("busy"))]).to_string()
+}
+
+/// The `batch_done` event: every admitted sub-job of the envelope has
+/// emitted its own terminal event. `jobs` counts admitted sub-jobs,
+/// `shed` counts sub-jobs that answered `busy` at admission.
+pub fn batch_done_line(id: u64, jobs: usize, shed: usize) -> String {
+    Json::obj(vec![
+        ("id", Json::u64(id)),
+        ("event", Json::str("batch_done")),
+        ("jobs", Json::u64(jobs as u64)),
+        ("shed", Json::u64(shed as u64)),
+    ])
+    .to_string()
+}
+
 /// The `metrics` event: Prometheus text exposition as one JSON string
 /// field (the newline-heavy body rides safely inside the JSON-lines
 /// framing).
@@ -569,11 +640,20 @@ pub fn metrics_line(text: &str) -> String {
     Json::obj(vec![("event", Json::str("metrics")), ("text", Json::str(text))]).to_string()
 }
 
-/// True for the events that end a request's response stream.
+/// True for the events that end a request's response stream. For a
+/// batch envelope only `batch_done` (or an `error`/`busy` carrying the
+/// envelope id) is terminal — sub-job `done` lines are not; see
+/// [`crate::server::Client::request_batch`].
 pub fn is_terminal_event(j: &Json) -> bool {
     matches!(
         j.str_field("event"),
-        Some("done") | Some("error") | Some("stats") | Some("metrics") | Some("shutting_down")
+        Some("done")
+            | Some("error")
+            | Some("busy")
+            | Some("batch_done")
+            | Some("stats")
+            | Some("metrics")
+            | Some("shutting_down")
     )
 }
 
@@ -1014,6 +1094,59 @@ mod tests {
     }
 
     #[test]
+    fn batch_request_parses_and_validates() {
+        let line = r#"{"req":"batch","id":6,"jobs":[
+            {"req":"run","id":1,"workload":"ncf"},
+            {"req":"sweep","id":2,"kind":"memory","workloads":["ncf"]}
+        ]}"#
+        .replace('\n', " ");
+        match parse_request(&line).unwrap() {
+            Request::Batch { id, jobs } => {
+                assert_eq!(id, 6);
+                assert_eq!(jobs.len(), 2);
+                assert!(matches!(jobs[0], Request::Run { id: 1, .. }));
+                assert!(matches!(jobs[1], Request::Sweep { id: 2, .. }));
+            }
+            other => panic!("wrong request {other:?}"),
+        }
+        // envelope-level shape errors
+        assert!(parse_request(r#"{"req":"batch","id":6}"#).unwrap_err().contains("jobs"));
+        assert!(parse_request(r#"{"req":"batch","id":6,"jobs":[]}"#)
+            .unwrap_err()
+            .contains("empty"));
+        // only run/sweep jobs can ride in a batch (rejects dse and
+        // nested batches alike)
+        let dse = r#"{"req":"batch","id":6,"jobs":[{"req":"dse","id":1,"campaign":{"workloads":["ncf"]}}]}"#;
+        assert!(parse_request(dse).unwrap_err().contains("only run/sweep"));
+        let nested = r#"{"req":"batch","id":6,"jobs":[{"req":"batch","id":1,"jobs":[{"req":"run","id":2,"workload":"ncf"}]}]}"#;
+        assert!(parse_request(nested).unwrap_err().contains("only run/sweep"));
+        // ids must be distinct from each other and from the envelope
+        let dup = r#"{"req":"batch","id":6,"jobs":[{"req":"run","id":1,"workload":"ncf"},{"req":"run","id":1,"workload":"ncf"}]}"#;
+        assert!(parse_request(dup).unwrap_err().contains("duplicate"));
+        let clash = r#"{"req":"batch","id":6,"jobs":[{"req":"run","id":6,"workload":"ncf"}]}"#;
+        assert!(parse_request(clash).unwrap_err().contains("envelope id"));
+        // a bad sub-job surfaces with its position in the envelope
+        let bad = r#"{"req":"batch","id":6,"jobs":[{"req":"run","id":1,"workload":"nope9"}]}"#;
+        let err = parse_request(bad).unwrap_err();
+        assert!(err.contains("batch job 0") && err.contains("nope9"), "{err}");
+    }
+
+    #[test]
+    fn busy_and_batch_done_lines_parse_and_terminate() {
+        let busy = Json::parse(&busy_line(4)).unwrap();
+        assert_eq!(busy.u64_field("id"), Some(4));
+        assert_eq!(busy.str_field("event"), Some("busy"));
+        assert!(is_terminal_event(&busy));
+
+        let bd = Json::parse(&batch_done_line(6, 3, 1)).unwrap();
+        assert_eq!(bd.u64_field("id"), Some(6));
+        assert_eq!(bd.str_field("event"), Some("batch_done"));
+        assert_eq!(bd.u64_field("jobs"), Some(3));
+        assert_eq!(bd.u64_field("shed"), Some(1));
+        assert!(is_terminal_event(&bd));
+    }
+
+    #[test]
     fn response_lines_parse_and_terminate() {
         let r = sample_report();
         let result = Json::parse(&result_line(3, &r)).unwrap();
@@ -1026,6 +1159,8 @@ mod tests {
             done_line(3, 1.5, None),
             done_line(3, 1.5, Some(12)),
             error_line(9, "boom"),
+            busy_line(9),
+            batch_done_line(9, 2, 0),
             shutting_down_line(),
             metrics_line("# HELP x\n"),
             ServerStats::default().to_json().to_string(),

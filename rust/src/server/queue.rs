@@ -6,6 +6,11 @@
 //!   thread that blocks here stops reading its socket, so TCP flow
 //!   control propagates the pressure all the way back to the client —
 //!   jobs are never dropped, they are admitted late.
+//! * [`JobQueue::try_push`] is the non-blocking variant the serve
+//!   admission path uses: a full queue **sheds** the job immediately
+//!   ([`PushOutcome::Busy`]) so the connection thread can answer with a
+//!   structured `busy` event and keep reading its socket instead of
+//!   wedging behind a saturated worker pool.
 //! * [`JobQueue::pop`] blocks while empty. After [`JobQueue::close`] it
 //!   keeps draining whatever was admitted (accepted jobs always run;
 //!   zero dropped jobs on shutdown) and returns `None` only once the
@@ -39,6 +44,17 @@ struct Inner<T> {
     completed: u64,
     failed: u64,
     submitted: u64,
+}
+
+/// Result of a non-blocking admission attempt ([`JobQueue::try_push`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// The job is in the queue.
+    Admitted,
+    /// The queue is at capacity; the job was shed (transient).
+    Busy,
+    /// The queue is closed; the job was shed (terminal).
+    Closed,
 }
 
 /// Bounded blocking queue (module docs). `T` is the job payload.
@@ -96,6 +112,25 @@ impl<T> JobQueue<T> {
         drop(inner);
         self.not_empty.notify_one();
         true
+    }
+
+    /// Admit a job without blocking. Distinguishes the two rejection
+    /// causes so the caller can answer with the right protocol event:
+    /// a full queue is transient (`Busy` — retry later), a closed queue
+    /// is terminal (`Closed` — the server is shutting down).
+    pub fn try_push(&self, job: T) -> PushOutcome {
+        let mut inner = self.state();
+        if inner.closed {
+            return PushOutcome::Closed;
+        }
+        if inner.q.len() >= self.cap {
+            return PushOutcome::Busy;
+        }
+        inner.q.push_back(job);
+        inner.submitted += 1;
+        drop(inner);
+        self.not_empty.notify_one();
+        PushOutcome::Admitted
     }
 
     /// Claim the next job, blocking while the queue is empty. Returns
@@ -202,6 +237,26 @@ mod tests {
             assert!(unblocked.load(Ordering::SeqCst));
             assert_eq!(q.pop(), Some(11));
         });
+    }
+
+    #[test]
+    fn try_push_sheds_on_full_and_distinguishes_closed() {
+        let q = JobQueue::bounded(2);
+        assert_eq!(q.try_push(1), PushOutcome::Admitted);
+        assert_eq!(q.try_push(2), PushOutcome::Admitted);
+        // at capacity: shed, counters untouched by the rejected job
+        assert_eq!(q.try_push(3), PushOutcome::Busy);
+        assert_eq!(q.stats().submitted, 2);
+        assert_eq!(q.stats().depth, 2);
+        // a pop frees a slot and admission resumes
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.try_push(4), PushOutcome::Admitted);
+        q.close();
+        assert_eq!(q.try_push(5), PushOutcome::Closed, "closed beats busy");
+        // admitted jobs still drain in order
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(4));
+        assert_eq!(q.pop(), None);
     }
 
     #[test]

@@ -1,9 +1,16 @@
 //! Thread pool + legacy design-space sweep shims (§IV methodology).
 //!
-//! [`parallel_map`] is a small work-stealing-by-atomic-index scheduler
-//! over `std::thread::scope` (tokio/rayon are unavailable offline); it
-//! is the execution substrate for both the legacy functions here and the
-//! engine's [`crate::engine::SweepGrid`].
+//! [`parallel_map`] is a work-stealing scheduler over
+//! `std::thread::scope` (tokio/rayon are unavailable offline): tasks are
+//! distributed round-robin onto per-worker deques ([`steal::Deques`]),
+//! each worker drains its own lane LIFO and steals the oldest task from
+//! a loaded peer when idle, so a skewed load (one huge layer next to
+//! many small ones) keeps every core busy. It is the execution substrate
+//! for the legacy functions here, the engine's
+//! [`crate::engine::SweepGrid`], [`crate::engine::Engine::run`], and dse
+//! local execution. (The serve pool gets its concurrency from the
+//! shared job queue instead: batch envelopes are split into
+//! independently-admitted queue entries, [`crate::server`].)
 //!
 //! The typed sweep functions (`dataflow_sweep` / `memory_sweep` /
 //! `shape_sweep`) are retained as **deprecated shims** over the engine's
@@ -19,13 +26,22 @@
 //!     .run()
 //! ```
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+pub mod steal;
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::config::{ArchConfig, Topology};
 use crate::dataflow::Dataflow;
 use crate::engine::Engine;
 
 /// Map `f` over `items` on `threads` OS threads, preserving order.
+///
+/// Tasks start round-robin on per-worker deques; a worker that drains
+/// its own lane steals the oldest task from a peer (module docs), so a
+/// skewed cost distribution cannot strand work behind one slow lane.
+/// The result order — and therefore every downstream report — is
+/// independent of the steal schedule: results are keyed by input index
+/// and reassembled in order. Steal counts feed a wall-class metric.
 pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -40,21 +56,36 @@ where
     if threads == 1 {
         return items.iter().map(|t| f(t)).collect();
     }
-    let next = AtomicUsize::new(0);
+    let deques: steal::Deques<usize> = steal::Deques::new(threads);
+    for i in 0..n {
+        deques.push(i % threads, i);
+    }
     let collected = std::sync::Mutex::new(Vec::with_capacity(n));
+    let steals = AtomicU64::new(0);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            let next = &next;
+        for w in 0..threads {
+            let deques = &deques;
             let f = &f;
             let collected = &collected;
+            let steals = &steals;
             s.spawn(move || {
                 let mut local = Vec::new();
+                let mut local_steals = 0u64;
                 loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
+                    let task = deques.pop(w).or_else(|| {
+                        let t = deques.steal(w);
+                        if t.is_some() {
+                            local_steals += 1;
+                        }
+                        t
+                    });
+                    match task {
+                        Some(i) => local.push((i, f(&items[i]))),
+                        None => break,
                     }
-                    local.push((i, f(&items[i])));
+                }
+                if local_steals > 0 {
+                    steals.fetch_add(local_steals, Ordering::Relaxed);
                 }
                 collected
                     .lock()
@@ -63,6 +94,10 @@ where
             });
         }
     });
+    let stolen = steals.load(Ordering::Relaxed);
+    if stolen > 0 {
+        crate::obs::metrics::count_steals(stolen);
+    }
     let mut pairs = collected.into_inner().unwrap_or_else(std::sync::PoisonError::into_inner);
     pairs.sort_by_key(|(i, _)| *i);
     debug_assert_eq!(pairs.len(), n);
@@ -236,6 +271,20 @@ mod tests {
     fn parallel_map_handles_empty_and_single() {
         assert!(parallel_map::<u64, u64, _>(&[], 4, |&x| x).is_empty());
         assert_eq!(parallel_map(&[7u64], 4, |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn parallel_map_survives_a_skewed_load() {
+        // one expensive item among many cheap ones: stealing must not
+        // lose, duplicate, or reorder results
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map(&items, 4, |&x| {
+            if x == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(30));
+            }
+            x * 3
+        });
+        assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
     }
 
     #[test]

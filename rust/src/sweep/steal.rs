@@ -1,0 +1,199 @@
+//! Work-stealing deques: the crate's scheduling primitive.
+//!
+//! Each worker owns one double-ended lane. The owner pushes and pops at
+//! the **back** (LIFO — the hot end: freshly spawned work is cache-warm
+//! and, for batch envelopes, the most recently split task), while idle
+//! workers **steal from the front** of other lanes (FIFO — the oldest,
+//! coarsest work migrates, which keeps steal traffic low). This is the
+//! classic Cilk/Arora-Blumofe-Plaxton discipline, implemented std-only:
+//! one `Mutex<VecDeque>` per lane instead of a lock-free Chase-Lev
+//! array, because every task in this crate is a whole layer/job
+//! simulation — microseconds to milliseconds — so the scheduler's job
+//! is load balance, not nanosecond push/pop latency.
+//!
+//! Used by [`super::parallel_map`] (sweeps, dse local exec, engine
+//! runs). Steal counts are wall-class observability (scheduling
+//! artifacts, never part of deterministic output).
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, MutexGuard};
+
+/// A set of per-worker double-ended task lanes (see module docs).
+pub struct Deques<T> {
+    lanes: Vec<Mutex<VecDeque<T>>>,
+}
+
+impl<T> Deques<T> {
+    /// Build `lanes` empty lanes (clamped to >= 1).
+    pub fn new(lanes: usize) -> Self {
+        Deques { lanes: (0..lanes.max(1)).map(|_| Mutex::new(VecDeque::new())).collect() }
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    fn lane(&self, i: usize) -> MutexGuard<'_, VecDeque<T>> {
+        self.lanes[i].lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Owner push: append to the back of `lane`'s deque.
+    pub fn push(&self, lane: usize, item: T) {
+        self.lane(lane % self.lanes.len()).push_back(item);
+    }
+
+    /// Owner pop: take the newest item from own lane (LIFO).
+    pub fn pop(&self, lane: usize) -> Option<T> {
+        self.lane(lane % self.lanes.len()).pop_back()
+    }
+
+    /// Thief pop: scan the other lanes round-robin starting after
+    /// `thief`, taking the **oldest** item of the first non-empty one
+    /// (FIFO). Returns `None` only when every other lane was observed
+    /// empty during the scan.
+    pub fn steal(&self, thief: usize) -> Option<T> {
+        let n = self.lanes.len();
+        let thief = thief % n;
+        for step in 1..n {
+            let victim = (thief + step) % n;
+            if let Some(item) = self.lane(victim).pop_front() {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// True when every lane was observed empty (racy by nature: only
+    /// meaningful once producers have stopped pushing).
+    pub fn is_empty(&self) -> bool {
+        (0..self.lanes.len()).all(|i| self.lane(i).is_empty())
+    }
+
+    /// Total queued items across lanes (racy snapshot, same caveat).
+    pub fn len(&self) -> usize {
+        (0..self.lanes.len()).map(|i| self.lane(i).len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Barrier;
+
+    #[test]
+    fn owner_is_lifo_thief_is_fifo() {
+        let d: Deques<u32> = Deques::new(2);
+        for v in [1, 2, 3] {
+            d.push(0, v);
+        }
+        // thief (lane 1) sees the oldest first
+        assert_eq!(d.steal(1), Some(1));
+        // owner sees the newest first
+        assert_eq!(d.pop(0), Some(3));
+        assert_eq!(d.pop(0), Some(2));
+        assert_eq!(d.pop(0), None);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn steal_scans_round_robin_and_skips_own_lane() {
+        let d: Deques<u32> = Deques::new(3);
+        d.push(2, 42);
+        // lane 0's thief must reach lane 2 even with lane 1 empty
+        assert_eq!(d.steal(0), Some(42));
+        // a thief never steals from itself: only lane 1 has work now
+        d.push(1, 7);
+        assert_eq!(d.steal(1), None);
+        assert_eq!(d.pop(1), Some(7));
+    }
+
+    #[test]
+    fn lane_count_clamps_and_indices_wrap() {
+        let d: Deques<u8> = Deques::new(0);
+        assert_eq!(d.lanes(), 1);
+        d.push(5, 9); // wraps onto lane 0
+        assert_eq!(d.pop(0), Some(9));
+        // single lane: nothing to steal, ever
+        d.push(0, 1);
+        assert_eq!(d.steal(0), None);
+        assert_eq!(d.len(), 1);
+    }
+
+    #[test]
+    fn no_task_lost_none_run_twice_under_contention() {
+        const TASKS: usize = 2000;
+        const WORKERS: usize = 8;
+        let d: Deques<usize> = Deques::new(WORKERS);
+        for i in 0..TASKS {
+            d.push(i % WORKERS, i);
+        }
+        let runs: Vec<AtomicUsize> = (0..TASKS).map(|_| AtomicUsize::new(0)).collect();
+        let barrier = Barrier::new(WORKERS);
+        std::thread::scope(|s| {
+            for w in 0..WORKERS {
+                let (d, runs, barrier) = (&d, &runs, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    while let Some(i) = d.pop(w).or_else(|| d.steal(w)) {
+                        runs[i].fetch_add(1, Ordering::SeqCst);
+                    }
+                });
+            }
+        });
+        for (i, r) in runs.iter().enumerate() {
+            assert_eq!(r.load(Ordering::SeqCst), 1, "task {i} ran a wrong number of times");
+        }
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn starved_workers_drain_a_loaded_lane_by_stealing() {
+        // every task lands on lane 0; the other workers have nothing
+        // and must steal to contribute
+        const TASKS: usize = 400;
+        const WORKERS: usize = 4;
+        let d: Deques<usize> = Deques::new(WORKERS);
+        for i in 0..TASKS {
+            d.push(0, i);
+        }
+        let done = AtomicUsize::new(0);
+        let stolen = AtomicUsize::new(0);
+        let barrier = Barrier::new(WORKERS);
+        std::thread::scope(|s| {
+            for w in 0..WORKERS {
+                let (d, done, stolen, barrier) = (&d, &done, &stolen, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    loop {
+                        let own = d.pop(w);
+                        let task = match own {
+                            Some(t) => Some(t),
+                            None => {
+                                let t = d.steal(w);
+                                if t.is_some() {
+                                    stolen.fetch_add(1, Ordering::SeqCst);
+                                }
+                                t
+                            }
+                        };
+                        match task {
+                            Some(_) => {
+                                // simulate real work so thieves overlap
+                                std::thread::sleep(std::time::Duration::from_micros(100));
+                                done.fetch_add(1, Ordering::SeqCst);
+                            }
+                            None => break,
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), TASKS, "every task must complete");
+        assert!(
+            stolen.load(Ordering::SeqCst) > 0,
+            "starved workers must have stolen from the loaded lane"
+        );
+        assert!(d.is_empty());
+    }
+}

@@ -1,0 +1,270 @@
+//! Concurrency property/stress suite for the lock-striped memo cache,
+//! driven entirely through the public [`Engine`] facade (the cache type
+//! itself is crate-private; if these properties hold at the facade they
+//! hold for every caller).
+//!
+//! Pinned properties (docs/INVARIANTS.md §11):
+//! * hit/miss/in-flight accounting conserves exactly under N-thread
+//!   hammering — every lookup is a sim or a hit, never both or neither;
+//! * concurrent cold misses on one key compute once per key (per-stripe
+//!   in-flight dedup), proven by a call-counting custom backend;
+//! * a panicking compute releases its claim — the key stays computable
+//!   and concurrent waiters recover;
+//! * a replayed deterministic schedule produces bit-identical reports
+//!   and identical counter totals at 1 stripe (the historical
+//!   single-mutex table) and at 16 stripes;
+//! * a shared [`Engine::cache_handle`] spans engines without splitting
+//!   the striped table or its counters.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use scale_sim::config;
+use scale_sim::dataflow::Timing;
+use scale_sim::engine::{Analytical, Backend, BackendKind};
+use scale_sim::{ArchConfig, Engine, LayerShape};
+
+fn shape(i: usize) -> LayerShape {
+    let i = i as u64;
+    LayerShape::conv(&format!("k{i}"), 8 + i, 8 + i, 3, 3, 4, 8, 1)
+}
+
+#[test]
+fn hammering_striped_keys_conserves_accounting_exactly() {
+    const THREADS: usize = 8;
+    const KEYS: usize = 24;
+    const REPS: usize = 30; // >= KEYS so every thread's walk covers all keys
+    let engine = Engine::builder()
+        .config(config::paper_default())
+        .cache_stripes(16)
+        .build()
+        .unwrap();
+    let shapes: Vec<LayerShape> = (0..KEYS).map(shape).collect();
+    let barrier = Barrier::new(THREADS);
+
+    std::thread::scope(|s| {
+        for t in 0..THREADS {
+            let (engine, shapes, barrier) = (&engine, &shapes, &barrier);
+            s.spawn(move || {
+                barrier.wait();
+                for r in 0..REPS {
+                    // gcd(11, KEYS) == 1: each thread visits every key,
+                    // offset so threads collide on different keys at
+                    // different times
+                    let l = &shapes[(t * 7 + r * 11) % KEYS];
+                    engine.run_layer(l);
+                }
+            });
+        }
+    });
+
+    let s = engine.cache_stats();
+    assert_eq!(
+        s.lookups(),
+        (THREADS * REPS) as u64,
+        "every lookup must be counted exactly once (sim xor hit): {s:?}"
+    );
+    assert_eq!(
+        s.layer_sims, KEYS as u64,
+        "each distinct key must be simulated exactly once: {s:?}"
+    );
+    assert_eq!(s.cache_hits, (THREADS * REPS - KEYS) as u64);
+    assert_eq!(engine.cache_entries(), KEYS);
+    assert!(
+        s.inflight_waits <= s.cache_hits,
+        "in-flight waits are a subset of hits: {s:?}"
+    );
+}
+
+/// Backend that counts how many times the timing model actually runs —
+/// the dedup oracle: with in-flight claims working, concurrent misses
+/// on one key reach the backend exactly once.
+struct Counting {
+    calls: Arc<AtomicUsize>,
+}
+
+impl Backend for Counting {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Custom
+    }
+
+    fn timing(&self, cfg: &ArchConfig, layer: &LayerShape) -> Timing {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        // widen the window so racing threads genuinely overlap the
+        // in-flight claim instead of serializing by accident
+        std::thread::sleep(Duration::from_millis(15));
+        Analytical.timing(cfg, layer)
+    }
+}
+
+#[test]
+fn concurrent_cold_misses_compute_once_per_key() {
+    const THREADS: usize = 8;
+    let calls = Arc::new(AtomicUsize::new(0));
+    let engine = Engine::builder()
+        .config(config::paper_default())
+        .custom_backend(Box::new(Counting { calls: Arc::clone(&calls) }))
+        .cache_stripes(8)
+        .build()
+        .unwrap();
+
+    for (round, l) in [shape(0), shape(1)].iter().enumerate() {
+        let barrier = Barrier::new(THREADS);
+        std::thread::scope(|s| {
+            let reports: Vec<_> = (0..THREADS)
+                .map(|_| {
+                    let (engine, barrier) = (&engine, &barrier);
+                    s.spawn(move || {
+                        barrier.wait(); // everyone races the same cold key
+                        engine.run_layer(l)
+                    })
+                })
+                .collect();
+            let reports: Vec<_> = reports.into_iter().map(|h| h.join().unwrap()).collect();
+            for r in &reports[1..] {
+                assert_eq!(r.timing, reports[0].timing, "waiters must reuse the one result");
+            }
+        });
+        assert_eq!(
+            calls.load(Ordering::SeqCst),
+            round + 1,
+            "backend must have run exactly once per distinct key"
+        );
+    }
+
+    let s = engine.cache_stats();
+    assert_eq!(s.layer_sims, 2);
+    assert_eq!(s.cache_hits, (2 * (THREADS - 1)) as u64);
+}
+
+/// Backend with an injected-failure budget: the first `failures` timing
+/// calls panic, later ones delegate to the analytical model.
+struct FailFirst {
+    failures: Arc<AtomicUsize>,
+}
+
+impl Backend for FailFirst {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Custom
+    }
+
+    fn timing(&self, cfg: &ArchConfig, layer: &LayerShape) -> Timing {
+        if self
+            .failures
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |n| n.checked_sub(1))
+            .is_ok()
+        {
+            panic!("injected backend failure");
+        }
+        Analytical.timing(cfg, layer)
+    }
+}
+
+#[test]
+fn panicking_compute_releases_its_claim() {
+    let failures = Arc::new(AtomicUsize::new(1));
+    let engine = Engine::builder()
+        .config(config::paper_default())
+        .custom_backend(Box::new(FailFirst { failures }))
+        .cache_stripes(8)
+        .build()
+        .unwrap();
+    let l = shape(3);
+
+    let first = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| engine.run_layer(&l)));
+    assert!(first.is_err(), "the injected failure must propagate");
+    assert_eq!(engine.cache_entries(), 0, "the failed claim must be withdrawn");
+    assert_eq!(engine.cache_stats().layer_sims, 0, "a panicked compute is not a sim");
+
+    // the key is computable again afterwards
+    let r = engine.run_layer(&l);
+    assert_eq!(r.layer.name, "k3");
+    assert_eq!(engine.cache_stats().layer_sims, 1);
+    assert_eq!(engine.cache_entries(), 1);
+}
+
+#[test]
+fn waiter_on_a_panicking_compute_recovers() {
+    const THREADS: usize = 4;
+    let failures = Arc::new(AtomicUsize::new(1));
+    let engine = Engine::builder()
+        .config(config::paper_default())
+        .custom_backend(Box::new(FailFirst { failures }))
+        .cache_stripes(8)
+        .build()
+        .unwrap();
+    let l = shape(4);
+    let barrier = Barrier::new(THREADS);
+
+    let outcomes: Vec<bool> = std::thread::scope(|s| {
+        (0..THREADS)
+            .map(|_| {
+                let (engine, l, barrier) = (&engine, &l, &barrier);
+                s.spawn(move || {
+                    barrier.wait();
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        engine.run_layer(l)
+                    }))
+                    .is_ok()
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect()
+    });
+
+    // exactly the thread that drew the injected failure panics; every
+    // other thread — including any that was blocked on the doomed
+    // claim — must retry and come back with a real report
+    assert_eq!(outcomes.iter().filter(|ok| !**ok).count(), 1, "{outcomes:?}");
+    assert_eq!(outcomes.iter().filter(|ok| **ok).count(), THREADS - 1);
+    assert_eq!(engine.cache_entries(), 1);
+    assert_eq!(engine.cache_stats().layer_sims, 1);
+}
+
+#[test]
+fn sharded_totals_match_single_stripe_on_a_replayed_schedule() {
+    // the historical single-mutex table is exactly `with 1 stripe`; a
+    // fixed lookup schedule replayed against both layouts must agree on
+    // every report byte and every counter
+    const KEYS: usize = 10;
+    let single = Engine::builder().config(config::paper_default()).cache_stripes(1).build().unwrap();
+    let striped =
+        Engine::builder().config(config::paper_default()).cache_stripes(16).build().unwrap();
+    assert_eq!(single.cache_stripe_count(), 1);
+    assert_eq!(striped.cache_stripe_count(), 16);
+
+    let schedule: Vec<usize> = (0..200).map(|i| (i * 13 + i / 7) % KEYS).collect();
+    for &i in &schedule {
+        let l = shape(i);
+        let a = single.run_layer(&l);
+        let b = striped.run_layer(&l);
+        assert_eq!(a, b, "stripe count changed the report for key {i}");
+    }
+    assert_eq!(single.cache_stats(), striped.cache_stats());
+    assert_eq!(single.cache_entries(), striped.cache_entries());
+    assert_eq!(single.cache_stats().lookups(), schedule.len() as u64);
+}
+
+#[test]
+fn shared_cache_handle_spans_engines_without_splitting_the_table() {
+    let a = Engine::builder().config(config::paper_default()).cache_stripes(4).build().unwrap();
+    let b = Engine::builder()
+        .config(config::paper_default())
+        .shared_cache(a.cache_handle())
+        .build()
+        .unwrap();
+    assert_eq!(b.cache_stripe_count(), 4, "the handle must carry the striped table whole");
+
+    let l = shape(5);
+    let ra = a.run_layer(&l);
+    let rb = b.run_layer(&l); // must hit a's entry through the shared table
+    assert_eq!(ra, rb);
+    let (sa, sb) = (a.cache_stats(), b.cache_stats());
+    assert_eq!(sa, sb, "counters are a property of the shared table, not the engine");
+    assert_eq!((sa.layer_sims, sa.cache_hits), (1, 1));
+    assert_eq!(a.cache_entries(), 1);
+    assert_eq!(b.cache_entries(), 1);
+}

@@ -7,6 +7,11 @@
 //! while looking fine within one (std's SipHash keys are per-process).
 //! So: run the same campaign in two separate child processes and demand
 //! byte-identical journals and reports.
+//!
+//! Both children run multi-threaded through the engine's default
+//! 16-stripe memo cache, so this suite is also the cross-process
+//! witness for docs/INVARIANTS.md §11: lock striping (stripes > 1)
+//! never perturbs a single output byte.
 
 use std::path::{Path, PathBuf};
 use std::process::Command;

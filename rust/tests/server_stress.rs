@@ -1,13 +1,18 @@
 //! Server stress + dse-over-serve suite: concurrent clients against a
-//! bounded queue must never deadlock, a mid-flight shutdown must drain
-//! every admitted job, and a dse campaign must produce bit-identical
-//! frontiers whether it runs locally, sharded over a server, or is
-//! killed and resumed across executors.
+//! bounded queue must never deadlock (a full queue sheds with a
+//! structured `busy` event and closed-loop clients retry), a mid-flight
+//! shutdown must drain every admitted job, batch envelopes must
+//! interleave sub-job streams (one slow job never blocks its siblings),
+//! a federated instance must fail over to local compute when its peer
+//! dies, and a dse campaign must produce bit-identical frontiers
+//! whether it runs locally, sharded over a server, over a federated
+//! fleet, or is killed and resumed across executors.
 
 use std::path::PathBuf;
+use std::time::Duration;
 
 use scale_sim::dse::{self, Campaign, Exec, RunOpts};
-use scale_sim::engine::Partition;
+use scale_sim::engine::{BackendKind, Partition};
 use scale_sim::server::{start, Client, ServeOpts};
 use scale_sim::util::json::Json;
 use scale_sim::{Dataflow, LayerShape};
@@ -54,8 +59,9 @@ fn local(threads: usize) -> RunOpts {
 
 #[test]
 fn eight_clients_against_a_tiny_queue_never_deadlock() {
-    // queue_cap 2 << clients 8: admission must backpressure, not drop,
-    // and every job must complete
+    // queue_cap 2 << clients 8: a full queue sheds with a terminal
+    // `busy` event (never blocks the accepting thread); a closed-loop
+    // client retries until admitted, and every job must complete
     let handle = start(ServeOpts { workers: 2, queue_cap: 2, ..ServeOpts::default() }).unwrap();
     let addr = handle.addr();
     const CLIENTS: usize = 8;
@@ -69,8 +75,16 @@ fn eight_clients_against_a_tiny_queue_never_deadlock() {
                     let mut done = 0usize;
                     for r in 0..ROUNDS {
                         let id = (ci * 100 + r) as u64;
-                        let events = c.request(&run_request(id)).expect("request");
-                        let last = events.last().unwrap();
+                        let last = loop {
+                            let events = c.request(&run_request(id)).expect("request");
+                            let last = events.last().unwrap().clone();
+                            if last.str_field("event") == Some("busy") {
+                                assert_eq!(last.u64_field("id"), Some(id), "{last}");
+                                std::thread::sleep(Duration::from_millis(2));
+                                continue;
+                            }
+                            break last;
+                        };
                         assert_eq!(last.str_field("event"), Some("done"), "{last}");
                         assert_eq!(last.u64_field("id"), Some(id));
                         done += 1;
@@ -129,6 +143,227 @@ fn midflight_shutdown_drains_admitted_jobs_cleanly() {
     }
     handle.join();
     assert!(dones >= 1, "at least the in-flight job must have drained");
+}
+
+/// A run request whose single layer's shape depends on `id`, so every
+/// job is a distinct memo key (no cache hit or in-flight dedup can make
+/// the worker artificially fast).
+fn sized_run_request(id: u64) -> String {
+    let layers = Json::Arr(vec![scale_sim::server::proto::layer_shape_to_json(
+        &LayerShape::conv("c1", 12 + id, 12 + id, 3, 3, 4, 8, 1),
+    )]);
+    Json::obj(vec![
+        ("req", Json::str("run")),
+        ("id", Json::u64(id)),
+        ("workload", Json::str("stress")),
+        ("layers", layers),
+        ("array", Json::str("16x16")),
+    ])
+    .to_string()
+}
+
+#[test]
+fn full_queue_sheds_with_a_pinned_busy_event() {
+    // the rtl backend makes every distinct job slow relative to the
+    // admission loop, so pipelining 8 jobs into a 1-worker/1-slot
+    // server must shed some of them — with a structured `busy` event,
+    // never by blocking the accepting thread (the old wedge)
+    const JOBS: u64 = 8;
+    let handle = start(ServeOpts {
+        workers: 1,
+        queue_cap: 1,
+        backend: BackendKind::Rtl,
+        ..ServeOpts::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+    for id in 1..=JOBS {
+        c.send(&sized_run_request(id)).unwrap();
+    }
+
+    let mut terminals = std::collections::BTreeMap::new();
+    while terminals.len() < JOBS as usize {
+        let ev = c.recv().unwrap();
+        if scale_sim::server::proto::is_terminal_event(&ev) {
+            terminals.insert(ev.u64_field("id").unwrap(), ev);
+        }
+    }
+    let shed: Vec<u64> = terminals
+        .iter()
+        .filter(|(_, ev)| ev.str_field("event") == Some("busy"))
+        .map(|(id, _)| *id)
+        .collect();
+    let dones =
+        terminals.values().filter(|ev| ev.str_field("event") == Some("done")).count();
+    assert_eq!(dones + shed.len(), JOBS as usize, "every job gets exactly one terminal");
+    assert!(dones >= 1, "the first job lands in an empty queue and must run");
+    assert!(!shed.is_empty(), "an overfull queue must shed");
+    // the wire shape is pinned: the event is exactly what proto builds
+    assert_eq!(terminals[&shed[0]].to_string(), scale_sim::server::proto::busy_line(shed[0]));
+
+    // busy is transient, not an error: every shed job resubmits to done
+    for id in shed {
+        loop {
+            let events = c.request(&sized_run_request(id)).unwrap();
+            match events.last().unwrap().str_field("event") {
+                Some("busy") => std::thread::sleep(Duration::from_millis(2)),
+                Some("done") => break,
+                other => panic!("job {id}: unexpected terminal {other:?}"),
+            }
+        }
+    }
+    let stats = handle.stats();
+    assert_eq!(stats.completed, JOBS);
+    assert_eq!(stats.failed, 0);
+    handle.shutdown();
+}
+
+#[test]
+fn one_slow_batch_job_never_blocks_its_siblings() {
+    // workers >= 2 is what makes this a regression test: batch sub-jobs
+    // are admitted as independent pool entries, so a slow sweep in slot
+    // one must not delay the fast run's events (an envelope executed as
+    // one serialized job would emit them in submission order)
+    let handle = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+
+    // pre-warm the fast job's key so its latency is a cache hit
+    let warm = c.request(&run_request(90)).unwrap();
+    assert_eq!(warm.last().unwrap().str_field("event"), Some("done"));
+
+    let slow_sweep = Json::obj(vec![
+        ("req", Json::str("sweep")),
+        ("id", Json::u64(1)),
+        ("kind", Json::str("memory")),
+        ("workload", Json::str("resnet50")),
+    ]);
+    let fast_run = Json::parse(&run_request(2)).unwrap();
+    let batch = Json::obj(vec![
+        ("req", Json::str("batch")),
+        ("id", Json::u64(7)),
+        ("jobs", Json::Arr(vec![slow_sweep, fast_run])),
+    ])
+    .to_string();
+
+    let events = c.request_batch(&batch).unwrap();
+    let pos = |pred: &dyn Fn(&Json) -> bool| events.iter().position(|e| pred(e));
+    let fast_done = pos(&|e| e.str_field("event") == Some("done") && e.u64_field("id") == Some(2))
+        .expect("fast sub-job must complete");
+    let slow_done = pos(&|e| e.str_field("event") == Some("done") && e.u64_field("id") == Some(1))
+        .expect("slow sub-job must complete");
+    assert!(
+        fast_done < slow_done,
+        "the fast job's done (index {fast_done}) must not wait for the slow sweep (index {slow_done})"
+    );
+
+    let last = events.last().unwrap();
+    assert_eq!(last.str_field("event"), Some("batch_done"), "{last}");
+    assert_eq!(last.u64_field("id"), Some(7));
+    assert_eq!(last.u64_field("jobs"), Some(2));
+    assert_eq!(last.u64_field("shed"), Some(0));
+    assert_eq!(handle.stats().failed, 0);
+    handle.shutdown();
+}
+
+#[test]
+fn overfull_batch_sheds_per_sub_job_and_tallies_in_batch_done() {
+    // 6 distinct slow sub-jobs against 1 worker and 1 queue slot: the
+    // overflow sheds per sub-id, and the batch_done tallies conserve
+    let handle = start(ServeOpts {
+        workers: 1,
+        queue_cap: 1,
+        backend: BackendKind::Rtl,
+        ..ServeOpts::default()
+    })
+    .unwrap();
+    let mut c = Client::connect(handle.addr()).unwrap();
+
+    const SUBS: u64 = 6;
+    let jobs: Vec<Json> =
+        (1..=SUBS).map(|id| Json::parse(&sized_run_request(id)).unwrap()).collect();
+    let batch = Json::obj(vec![
+        ("req", Json::str("batch")),
+        ("id", Json::u64(99)),
+        ("jobs", Json::Arr(jobs)),
+    ])
+    .to_string();
+
+    let events = c.request_batch(&batch).unwrap();
+    let last = events.last().unwrap();
+    assert_eq!(last.str_field("event"), Some("batch_done"), "{last}");
+    let (jobs_ran, jobs_shed) =
+        (last.u64_field("jobs").unwrap(), last.u64_field("shed").unwrap());
+    assert_eq!(jobs_ran + jobs_shed, SUBS, "tallies must conserve: {last}");
+    assert!(jobs_ran >= 1, "an empty queue must admit the first sub-job");
+    assert!(jobs_shed >= 1, "1 worker + 1 slot cannot hold 6 slow sub-jobs");
+
+    // per-sub-id terminals match the tallies exactly
+    let busy = events.iter().filter(|e| e.str_field("event") == Some("busy")).count() as u64;
+    let done = events.iter().filter(|e| e.str_field("event") == Some("done")).count() as u64;
+    assert_eq!((done, busy), (jobs_ran, jobs_shed));
+    assert_eq!(handle.stats().failed, 0);
+    handle.shutdown();
+}
+
+#[test]
+fn peer_death_mid_campaign_fails_over_to_local_compute() {
+    let reference = dse::run_campaign(tiny_campaign(), &local(2)).unwrap();
+    assert!(reference.is_complete());
+
+    // a fleet of two: A answers only, B routes its peer-owned memo
+    // keys to A over the wire
+    let a = start(ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+    let b = start(ServeOpts {
+        workers: 2,
+        peers: vec![a.addr().to_string()],
+        ..ServeOpts::default()
+    })
+    .unwrap();
+
+    // a 26-layer workload spreads keys across the ring: some must
+    // reach A as peer-fetch jobs (all-local odds are ~2^-26)
+    let mut probe = Client::connect(b.addr()).unwrap();
+    let events = probe
+        .request(r#"{"req":"run","id":1,"workload":"resnet50"}"#)
+        .unwrap();
+    assert_eq!(events.last().unwrap().str_field("event"), Some("done"));
+    assert!(a.stats().completed >= 1, "no keys routed to the peer");
+
+    // half the campaign with the peer alive...
+    let dir = tmp_dir("peer_down");
+    let cut = dse::run_campaign(
+        tiny_campaign(),
+        &RunOpts {
+            exec: Exec::Serve { addr: b.addr().to_string(), shards: 2 },
+            state_dir: Some(dir.clone()),
+            max_points: Some(4),
+            ..RunOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(!cut.is_complete());
+
+    // ...then the peer dies mid-campaign
+    a.shutdown();
+
+    // the rest fails over to B-local compute: zero failed jobs, and
+    // the frontier is bit-identical to the unfederated local reference
+    // (federation routes keys, never values — docs/INVARIANTS.md §11)
+    let resumed = dse::resume_campaign(
+        &dir,
+        &RunOpts {
+            exec: Exec::Serve { addr: b.addr().to_string(), shards: 2 },
+            ..RunOpts::default()
+        },
+    )
+    .unwrap();
+    assert!(resumed.is_complete());
+    assert_eq!(resumed.completed, reference.completed, "federation must never change results");
+    assert_eq!(resumed.frontier_runtime_energy, reference.frontier_runtime_energy);
+    assert_eq!(resumed.frontier_runtime_bw, reference.frontier_runtime_bw);
+    assert_eq!(b.stats().failed, 0, "peer death must fail over, not fail jobs");
+    b.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
